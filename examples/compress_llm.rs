@@ -1,0 +1,57 @@
+//! Full LLM compression pipeline (the Table 3 workflow end to end):
+//! train dense TinyLM → compress at 50 % with BLAST (Algorithm 2) and
+//! every baseline → evaluate perplexity + zero-shot → re-train → re-eval.
+//!
+//! Run: `cargo run --release --example compress_llm`
+
+use blast_repro::data::corpus::SyntheticCorpus;
+use blast_repro::data::zeroshot::build_suites;
+use blast_repro::eval::{eval_suites, perplexity};
+use blast_repro::factorize::{Compressor, Structure};
+use blast_repro::nn::attention::StructureKind;
+use blast_repro::nn::gpt::{LmConfig, TinyLM};
+use blast_repro::tensor::Rng;
+use blast_repro::train::{compress_lm, retrain_lm, train_lm, LmTrainConfig};
+
+fn main() {
+    let corpus = SyntheticCorpus::generate(64, 30_000, 2048);
+    let suites = build_suites(&corpus, 25);
+
+    println!("== stage 1: train the dense reference ==");
+    let mut rng = Rng::new(0);
+    let mut dense = TinyLM::new(LmConfig::tiny(StructureKind::Dense), &mut rng);
+    train_lm(
+        &mut dense,
+        &corpus.train_dataset(),
+        &LmTrainConfig { steps: 400, log_every: 100, ..Default::default() },
+    );
+    let ppl0 = perplexity(&dense, &corpus.valid_dataset(), 32, 12);
+    let (_, acc0) = eval_suites(&dense, &suites);
+    println!("dense: ppl {ppl0:.2}, avg 0-shot {acc0:.1}%  ({} params)", dense.num_params());
+
+    println!("\n== stage 2: compress at 50% + re-train (0.49B-token analogue) ==");
+    let comp = Compressor { blast_iters: 120, ..Default::default() };
+    println!(
+        "{:<24} {:>10} {:>10} {:>10} {:>12} {:>12}",
+        "structure", "params", "ppl", "0-shot", "ppl(retr)", "0-shot(retr)"
+    );
+    for s in [
+        Structure::LowRank,
+        Structure::Monarch { b: 4 },
+        Structure::BlockDiag { b: 4 },
+        Structure::Blast { b: 4 },
+    ] {
+        let mut m = dense.clone();
+        let report = compress_lm(&mut m, s, 0.5, &comp);
+        let ppl = perplexity(&m, &corpus.valid_dataset(), 32, 12);
+        let (_, acc) = eval_suites(&m, &suites);
+        retrain_lm(&mut m, &corpus.train_dataset(), 150);
+        let ppl_r = perplexity(&m, &corpus.valid_dataset(), 32, 12);
+        let (_, acc_r) = eval_suites(&m, &suites);
+        println!(
+            "{:<24} {:>10} {:>10.2} {:>9.1}% {:>12.2} {:>11.1}%",
+            report.structure, report.params_after, ppl, acc, ppl_r, acc_r
+        );
+    }
+    println!("\npaper shape: BLAST keeps the lowest degradation; Monarch/Block-Diagonal collapse.");
+}

@@ -1,0 +1,67 @@
+//! Quickstart: the BLAST matrix in five minutes.
+//!
+//! 1. Build a BLAST matrix and multiply with Algorithm 1.
+//! 2. Show the special cases (low-rank / block-diagonal embeddings).
+//! 3. Compress a synthetic weight with Algorithm 2 (PrecGD) and compare
+//!    against the SVD low-rank baseline at the same parameter budget.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use blast_repro::blast::{blast_rank_for_ratio, BlastMatrix};
+use blast_repro::factorize::baselines::LowRankWeight;
+use blast_repro::factorize::{factorize_precgd, PrecGdOptions};
+use blast_repro::tensor::{matmul_nt, Rng};
+
+fn main() {
+    let mut rng = Rng::new(0);
+
+    // --- 1. A BLAST matrix and Algorithm 1 ---------------------------
+    let (m, n, b, r) = (64, 64, 4, 8);
+    let a = BlastMatrix::random_init(m, n, b, r, 0.2, &mut rng);
+    println!(
+        "BLAST {m}x{n} (b={b}, r={r}): {} params vs {} dense ({:.1}% compression), \
+         {} mults/matvec vs {}",
+        a.num_params(),
+        a.dense_params(),
+        a.compression_ratio() * 100.0,
+        a.matvec_flops(),
+        m * n
+    );
+    let x: Vec<f32> = (0..n).map(|i| (i as f32 * 0.37).sin()).collect();
+    let y = a.matvec(&x); // Algorithm 1: 3 stages, z shared across rows
+    let y_dense = blast_repro::tensor::gemv(&a.to_dense(), &x);
+    let err: f32 = y.iter().zip(&y_dense).map(|(p, q)| (p - q).abs()).sum();
+    println!("Algorithm 1 vs dense reconstruction: total |err| = {err:.2e}");
+
+    // --- 2. Special cases (paper §2 / §A.1) --------------------------
+    let u = rng.gaussian_matrix(m, 4, 1.0);
+    let v = rng.gaussian_matrix(n, 4, 1.0);
+    let low_rank = matmul_nt(&u, &v);
+    let embedded = BlastMatrix::from_low_rank(&u, &v, b);
+    println!(
+        "low-rank embedding exact? rel err = {:.2e}",
+        embedded.to_dense().sub(&low_rank).fro_norm() / low_rank.fro_norm()
+    );
+
+    // --- 3. Compression: Algorithm 2 vs SVD --------------------------
+    // A weight whose true structure is BLAST-like (heterogeneous block
+    // ranks) — the setting where the paper's flexibility claim bites.
+    let truth = BlastMatrix::random_init(m, n, b, 6, 0.3, &mut rng);
+    let target = truth.to_dense();
+    let ratio = 0.5;
+    let r_fit = blast_rank_for_ratio(m, n, b, ratio).unwrap();
+    let fit = factorize_precgd(
+        &target,
+        &PrecGdOptions { b, r: r_fit, iters: 120, ..Default::default() },
+    );
+    let r_lr = blast_repro::blast::lowrank_rank_for_ratio(m, n, ratio).unwrap();
+    let lr = LowRankWeight::compress(&target, r_lr);
+    let lr_err = lr.to_dense().sub(&target).fro_norm() as f64 / target.fro_norm() as f64;
+    println!(
+        "compress at {:.0}% budget: BLAST (Algorithm 2) rel err {:.4} vs SVD low-rank {:.4}",
+        ratio * 100.0,
+        fit.rel_error,
+        lr_err
+    );
+    println!("=> BLAST adapts to the heterogeneous block structure; a global low-rank cannot.");
+}

@@ -1,0 +1,68 @@
+//! Serving demo: start the L3 coordinator with dense + BLAST-compressed
+//! variants, fire a batched request load from client threads, and report
+//! latency/throughput per variant — the serving-system view of Table 4.
+//!
+//! Run: `cargo run --release --example serve`
+
+use blast_repro::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig};
+use blast_repro::nn::attention::StructureKind;
+use blast_repro::nn::gpt::{LmConfig, TinyLM};
+use blast_repro::tensor::Rng;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn main() {
+    let mut rng = Rng::new(7);
+    let mut cfg = LmConfig::tiny(StructureKind::Dense);
+    cfg.max_seq = 96;
+    let dense = TinyLM::new(cfg, &mut rng);
+    let mut cfg_b = LmConfig::tiny(StructureKind::Blast { b: 4, r: 10 });
+    cfg_b.max_seq = 96;
+    let blast = TinyLM::new(cfg_b, &mut rng);
+    println!(
+        "dense params: {}, blast params: {} ({:.0}% fewer)",
+        dense.num_params(),
+        blast.num_params(),
+        100.0 * (1.0 - blast.num_params() as f64 / dense.num_params() as f64)
+    );
+
+    let coord = Arc::new(Coordinator::new(
+        vec![("dense".into(), dense), ("blast".into(), blast)],
+        CoordinatorConfig {
+            batcher: BatcherConfig { max_batch: 8, ..Default::default() },
+        },
+    ));
+
+    for variant in ["dense", "blast"] {
+        let t0 = Instant::now();
+        let n_clients = 4;
+        let per_client = 8;
+        let new_tokens = 48;
+        let mut handles = Vec::new();
+        for c in 0..n_clients {
+            let coord = Arc::clone(&coord);
+            let variant = variant.to_string();
+            handles.push(std::thread::spawn(move || {
+                let mut total_compute = std::time::Duration::ZERO;
+                for i in 0..per_client {
+                    let resp = coord
+                        .generate(&variant, vec![1 + (c + i) % 8, 2, 3], new_tokens)
+                        .expect("request");
+                    total_compute += resp.compute_time;
+                }
+                total_compute
+            }));
+        }
+        let mut compute = std::time::Duration::ZERO;
+        for h in handles {
+            compute += h.join().unwrap();
+        }
+        let wall = t0.elapsed();
+        let tokens = n_clients * per_client * new_tokens;
+        println!(
+            "{variant:<6}: {tokens} tokens in {wall:?} wall ({:.0} tok/s), compute sum {compute:?}",
+            tokens as f64 / wall.as_secs_f64()
+        );
+    }
+    println!("\nmetrics: {}", coord.metrics.report());
+}

@@ -1,0 +1,157 @@
+"""AOT export: lower the L2 model (with the L1 Pallas kernel inlined) to
+HLO **text** artifacts the Rust PJRT runtime loads.
+
+HLO text — NOT ``.serialize()`` — is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension
+0.5.1 rejects; the text parser reassigns ids and round-trips cleanly.
+
+Outputs (per configured variant) under ``--out-dir``:
+  <name>.hlo.txt          the lowered module
+  <name>.params.bmx       initial parameters in the shared BMX1 format
+  manifest.json           shapes + flattened-argument order for Rust
+
+Run once at build time: ``make artifacts``. Python never runs on the
+request path.
+"""
+
+import argparse
+import json
+import os
+import struct
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model, structures
+from .kernels.blast_matmul import (mxu_utilization_estimate,
+                                   vmem_footprint_bytes)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def write_bmx(path, named_arrays):
+    """Write the Rust `TensorBundle` BMX1 format (name -> 2D f32)."""
+    with open(path, "wb") as f:
+        f.write(b"BMX1")
+        f.write(struct.pack("<I", len(named_arrays)))
+        for name, arr in named_arrays.items():
+            a = np.asarray(arr, dtype=np.float32)
+            if a.ndim == 1:
+                a = a.reshape(1, -1)
+            elif a.ndim != 2:
+                a = a.reshape(a.shape[0], -1)
+            nb = name.encode()
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<II", a.shape[0], a.shape[1]))
+            f.write(a.tobytes())
+
+
+# The artifact catalogue: one TinyLM per structure, matched roughly in
+# parameter budget (see DESIGN.md §5). Keep shapes small — every variant
+# lowers 3 entrypoints.
+VARIANTS = {
+    "tinylm_dense": model.make_config(structure=("dense",)),
+    "tinylm_blast": model.make_config(structure=("blast", 4, 8)),
+    "tinylm_lowrank": model.make_config(structure=("lowrank", 12)),
+    "tinylm_monarch": model.make_config(structure=("monarch", 4, 3)),
+    "tinylm_blockdiag": model.make_config(structure=("blockdiag", 4, 12)),
+}
+
+
+def flatten_name(path):
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return ".".join(parts)
+
+
+def export_variant(name, cfg, out_dir, entries):
+    eps, params, _tree = model.make_entrypoints(cfg)
+    flat_with_paths, _ = jax.tree_util.tree_flatten_with_path(params)
+    param_names = [flatten_name(path) for path, _ in flat_with_paths]
+
+    # Parameters bundle (shared across entrypoints).
+    named = {n: v for n, v in zip(param_names, [v for _, v in flat_with_paths])}
+    write_bmx(os.path.join(out_dir, f"{name}.params.bmx"), named)
+
+    for ep_name, (fn, example_args) in eps.items():
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.{ep_name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        entries.append({
+            "name": f"{name}.{ep_name}",
+            "variant": name,
+            "entrypoint": ep_name,
+            "file": fname,
+            "params_file": f"{name}.params.bmx",
+            "param_names": param_names,
+            "arg_shapes": [list(np.shape(a)) for a in example_args],
+            "arg_dtypes": [str(np.asarray(a).dtype) for a in example_args],
+            "num_outputs": len(fn(*example_args)),
+            "config": {k: (list(v) if isinstance(v, tuple) else v)
+                       for k, v in cfg.items()},
+        })
+        print(f"  wrote {fname} ({len(text)} chars)")
+
+
+def kernel_analysis():
+    """§Perf L1 structural analysis (DESIGN.md §8): VMEM footprint and
+    MXU-share estimates for representative shapes."""
+    rows = []
+    for (batch, b, p, q, r) in [(32, 4, 16, 16, 8), (8, 16, 256, 256, 992),
+                                (1, 16, 256, 256, 992), (8, 2, 2048, 2048, 1024)]:
+        rows.append({
+            "batch": batch, "b": b, "p": p, "q": q, "r": r,
+            "vmem_bytes": vmem_footprint_bytes(batch, b, p, q, r),
+            "mxu_share": round(mxu_utilization_estimate(batch, b, p, q, r), 6),
+        })
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--variants", default="tinylm_dense,tinylm_blast")
+    ap.add_argument("--analyze", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    entries = []
+    wanted = [v for v in args.variants.split(",") if v]
+    for name in wanted:
+        if name not in VARIANTS:
+            print(f"unknown variant {name}; have {list(VARIANTS)}", file=sys.stderr)
+            sys.exit(1)
+        print(f"lowering {name} ...")
+        export_variant(name, VARIANTS[name], args.out_dir, entries)
+
+    manifest = {
+        "format": 1,
+        "interchange": "hlo-text",
+        "artifacts": entries,
+        "kernel_analysis": kernel_analysis(),
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"manifest: {len(entries)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+"""JAX mirror of Algorithm 2 (preconditioned BLAST factorization).
+
+Cross-validates the Rust implementation: same update equations (Eqs. 5-9),
+same delta schedule (Eq. 19), same linearly-decaying step size. Used only
+by tests — the production compression path is the Rust `factorize` module.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+
+
+def blast_loss(a, u, v, s):
+    """Eq. 4: 0.5 * ||A - BLAST(u, v, s)||_F^2."""
+    return 0.5 * jnp.sum((a - ref.blast_dense(u, v, s)) ** 2)
+
+
+def _init(key, m, n, b, r, eps=1e-2):
+    k1, k2, k3 = jax.random.split(key, 3)
+    u = jax.random.normal(k1, (b, m // b, r)) * eps
+    v = jax.random.normal(k2, (b, n // b, r)) * eps
+    s = jax.random.uniform(k3, (b, b, r))
+    return u, v, s
+
+
+def _v_bar(v, s, i):
+    """V̄_i: (n, r) concatenation of S_{i,j} V_j^T blocks."""
+    b, q, r = v.shape
+    return (v * s[i][:, None, :]).reshape(b * q, r)
+
+
+def _u_bar(u, s, j):
+    b, p, r = u.shape
+    return (u * s[:, j][:, None, :]).reshape(b * p, r)
+
+
+def factorize_gd(a, b, r, iters, seed=0):
+    """Plain alternating GD (Eqs. 5-7) with sigma_max step sizes."""
+    m, n = a.shape
+    u, v, s = _init(jax.random.PRNGKey(seed), m, n, b, r)
+    p, q = m // b, n // b
+    trace = []
+    for k in range(iters):
+        eta = 1.0 - k / iters
+        # U sweep.
+        for i in range(b):
+            vb = _v_bar(v, s, i)
+            lip = jnp.linalg.norm(vb.T @ vb, 2)
+            resid = u[i] @ vb.T - a[i * p:(i + 1) * p]
+            u = u.at[i].add(-(eta / jnp.maximum(lip, 1e-12)) * (resid @ vb))
+        # V sweep.
+        for j in range(b):
+            ub = _u_bar(u, s, j)
+            lip = jnp.linalg.norm(ub.T @ ub, 2)
+            resid = ub @ v[j].T - a[:, j * q:(j + 1) * q]
+            v = v.at[j].add(-(eta / jnp.maximum(lip, 1e-12)) * (resid.T @ ub))
+        # s sweep.
+        for i in range(b):
+            for j in range(b):
+                w = (u[i].T @ u[i]) * (v[j].T @ v[j])
+                lip = jnp.linalg.norm(w, 2)
+                rhs = jnp.diag(u[i].T @ a[i * p:(i + 1) * p, j * q:(j + 1) * q] @ v[j])
+                g = w @ s[i, j] - rhs
+                s = s.at[i, j].add(-(eta / jnp.maximum(lip, 1e-12)) * g)
+        trace.append(float(blast_loss(a, u, v, s)))
+    return u, v, s, trace
+
+
+def factorize_precgd(a, b, r, iters, seed=0, delta0=0.1):
+    """Algorithm 2: preconditioned updates (Eqs. 8-9, delta per Eq. 19)."""
+    m, n = a.shape
+    u, v, s = _init(jax.random.PRNGKey(seed), m, n, b, r)
+    p, q = m // b, n // b
+    eye = jnp.eye(r)
+    trace = []
+    for k in range(iters):
+        eta = 1.0 - k / iters
+        delta = delta0 * jnp.sqrt(blast_loss(a, u, v, s)) + 1e-10
+        for i in range(b):
+            vb = _v_bar(v, s, i)
+            grad = (u[i] @ vb.T - a[i * p:(i + 1) * p]) @ vb
+            pre = jnp.linalg.solve(vb.T @ vb + delta * eye, grad.T).T
+            u = u.at[i].add(-eta * pre)
+        for j in range(b):
+            ub = _u_bar(u, s, j)
+            grad = (ub @ v[j].T - a[:, j * q:(j + 1) * q]).T @ ub
+            pre = jnp.linalg.solve(ub.T @ ub + delta * eye, grad.T).T
+            v = v.at[j].add(-eta * pre)
+        for i in range(b):
+            for j in range(b):
+                w = (u[i].T @ u[i]) * (v[j].T @ v[j])
+                rhs = jnp.diag(u[i].T @ a[i * p:(i + 1) * p, j * q:(j + 1) * q] @ v[j])
+                g = w @ s[i, j] - rhs
+                s = s.at[i, j].add(-eta * jnp.linalg.solve(w + delta * eye, g))
+        trace.append(float(blast_loss(a, u, v, s)))
+    return u, v, s, trace

@@ -1,0 +1,54 @@
+"""Pure-jnp correctness oracle for the BLAST matmul (Algorithm 1).
+
+Two reference implementations:
+* ``blast_dense``: materialize the dense matrix from the factors
+  (Eq. 2 block assembly) and multiply — the ground truth.
+* ``blast_matmul_ref``: the einsum form of Algorithm 1 (stage 1 batched
+  right-factor product, stage 2 diagonal coupling + aggregation, stage 3
+  batched left-factor product), used to check the Pallas kernel stage by
+  stage.
+
+Conventions (matching the Rust side and Appendix A's ``blast_matmul``):
+  U: (b, p, r)   left factors, block row i
+  V: (b, q, r)   right factors, block column j
+  S: (b, b, r)   couplings, S[i, j] = s_{i,j}
+  X: (B, n)      activations, n = b*q; output Y: (B, m), m = b*p
+and the layer computes ``Y = X @ A.T`` (PyTorch Linear convention).
+"""
+
+import jax.numpy as jnp
+
+
+def blast_dense(u, v, s):
+    """Assemble the dense (m, n) matrix: A[i,j] = U_i diag(s_ij) V_j^T."""
+    b, p, r = u.shape
+    _, q, _ = v.shape
+    # blocks[i, j] = U_i @ diag(S[i,j]) @ V_j^T  -> (b, b, p, q)
+    blocks = jnp.einsum("ipr,ijr,jqr->ijpq", u, s, v)
+    # Stitch into (m, n).
+    return blocks.transpose(0, 2, 1, 3).reshape(b * p, b * q)
+
+
+def blast_matmul_ref(x, u, v, s):
+    """Algorithm 1 as einsums: Y = X @ A^T for X of shape (B, n)."""
+    b, p, r = u.shape
+    _, q, _ = v.shape
+    batch = x.shape[0]
+    xb = x.reshape(batch, b, q)  # split columns into block chunks
+    # Stage 1: z[j] = X_j @ V_j  -> (B, b, r); shared across block rows.
+    z = jnp.einsum("Bjq,jqr->Bjr", xb, v)
+    # Stage 2: w[i] = sum_j s_{i,j} * z[j]  -> (B, b, r).
+    w = jnp.einsum("Bjr,ijr->Bir", z, s)
+    # Stage 3: y[i] = w[i] @ U_i^T -> (B, b, p) -> (B, m).
+    y = jnp.einsum("Bir,ipr->Bip", w, u)
+    return y.reshape(batch, b * p)
+
+
+def blast_matvec_flops(m, n, b, r):
+    """Multiplication count of Algorithm 1 (paper §2): (m + n + b²)·r."""
+    return (m + n + b * b) * r
+
+
+def blast_num_params(m, n, b, r):
+    """Parameter count (paper §2): r(m+n) + r·b²."""
+    return r * (m + n) + r * b * b

@@ -1,0 +1,230 @@
+"""L2 — JAX transformer LM with pluggable structured linears.
+
+The same TinyLM architecture as the Rust side (token + positional
+embeddings, pre-LN blocks with stacked-QKV attention, GELU MLP, dense
+head), expressed functionally so it lowers to a single HLO module. Three
+entrypoints get AOT-exported per structure:
+
+* ``forward``       — full-sequence logits (prefill / scoring);
+* ``train_step``    — fused fwd + bwd + AdamW update (the E2E example's
+  hot loop; Rust feeds batches, all math is inside the artifact);
+* ``loss_only``     — mean next-token loss (perplexity eval).
+
+BLAST layers route through the Pallas kernel (interpret=True), so the
+exported HLO contains the Algorithm-1 dataflow.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import structures
+
+
+# ---------------------------------------------------------------------
+# Config / init
+# ---------------------------------------------------------------------
+
+def make_config(vocab=64, d_model=64, n_layers=2, n_heads=4, d_ff=128,
+                max_seq=32, structure=("dense",)):
+    return dict(vocab=vocab, d_model=d_model, n_layers=n_layers,
+                n_heads=n_heads, d_ff=d_ff, max_seq=max_seq,
+                structure=tuple(structure))
+
+
+def _init_structured(key, out_dim, in_dim, structure):
+    kind = structure[0]
+    if kind == "dense":
+        return structures.init_dense(key, out_dim, in_dim)
+    if kind == "lowrank":
+        return structures.init_low_rank(key, out_dim, in_dim, structure[1])
+    if kind == "blast":
+        return structures.init_blast(key, out_dim, in_dim, structure[1], structure[2])
+    if kind == "monarch":
+        return structures.init_monarch(key, out_dim, in_dim, structure[1], structure[2])
+    if kind == "blockdiag":
+        return structures.init_block_diag(key, out_dim, in_dim, structure[1], structure[2])
+    raise ValueError(kind)
+
+
+def init_params(key, cfg):
+    """Initialize all model parameters as a pytree."""
+    keys = jax.random.split(key, 4 + 4 * cfg["n_layers"])
+    d, v, ff = cfg["d_model"], cfg["vocab"], cfg["d_ff"]
+    s = cfg["structure"]
+    params = {
+        "tok_embed": jax.random.normal(keys[0], (v, d)) * 0.02,
+        "pos_embed": jax.random.normal(keys[1], (cfg["max_seq"], d)) * 0.02,
+        "head": structures.init_dense(keys[2], v, d),
+        "ln_f": {"g": jnp.ones(d), "b": jnp.zeros(d)},
+        "blocks": [],
+    }
+    for i in range(cfg["n_layers"]):
+        k = keys[4 + 4 * i: 8 + 4 * i]
+        params["blocks"].append({
+            "ln1": {"g": jnp.ones(d), "b": jnp.zeros(d)},
+            "wqkv": _init_structured(k[0], 3 * d, d, s),
+            "wo": _init_structured(k[1], d, d, s),
+            "ln2": {"g": jnp.ones(d), "b": jnp.zeros(d)},
+            "fc1": _init_structured(k[2], ff, d, s),
+            "fc2": _init_structured(k[3], d, ff, s),
+        })
+    return params
+
+
+# ---------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------
+
+def _layernorm(p, x):
+    mean = x.mean(-1, keepdims=True)
+    var = ((x - mean) ** 2).mean(-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + 1e-5) * p["g"] + p["b"]
+
+
+def _attention(blk, x, n_heads, causal=True):
+    seq, d = x.shape
+    hd = d // n_heads
+    qkv = structures.apply_linear(blk["wqkv"], x)  # (seq, 3d)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(seq, n_heads, hd).transpose(1, 0, 2)
+    k = k.reshape(seq, n_heads, hd).transpose(1, 0, 2)
+    v = v.reshape(seq, n_heads, hd).transpose(1, 0, 2)
+    scores = jnp.einsum("hsd,htd->hst", q, k) / jnp.sqrt(hd)
+    if causal:
+        mask = jnp.tril(jnp.ones((seq, seq), dtype=bool))
+        scores = jnp.where(mask[None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("hst,htd->hsd", probs, v)
+    ctx = ctx.transpose(1, 0, 2).reshape(seq, d)
+    return structures.apply_linear(blk["wo"], ctx)
+
+
+def _block(blk, x, n_heads):
+    x = x + _attention(blk, _layernorm(blk["ln1"], x), n_heads)
+    h = structures.apply_linear(blk["fc1"], _layernorm(blk["ln2"], x))
+    h = jax.nn.gelu(h, approximate=True)
+    return x + structures.apply_linear(blk["fc2"], h)
+
+
+def forward(params, tokens, cfg):
+    """Full-sequence logits: tokens (seq,) int32 -> (seq, vocab)."""
+    seq = tokens.shape[0]
+    x = params["tok_embed"][tokens] + params["pos_embed"][:seq]
+    for blk in params["blocks"]:
+        x = _block(blk, x, cfg["n_heads"])
+    x = _layernorm(params["ln_f"], x)
+    return structures.apply_linear(params["head"], x)
+
+
+def loss_fn(params, tokens, cfg):
+    """Mean next-token cross-entropy over one sequence."""
+    logits = forward(params, tokens, cfg)
+    targets = tokens[1:]
+    lp = jax.nn.log_softmax(logits[:-1], axis=-1)
+    return -jnp.take_along_axis(lp, targets[:, None], axis=-1).mean()
+
+
+def batch_loss(params, batch, cfg):
+    """Mean loss over a (B, seq) batch of token sequences."""
+    return jax.vmap(lambda t: loss_fn(params, t, cfg))(batch).mean()
+
+
+# ---------------------------------------------------------------------
+# Fused AdamW train step (AOT entrypoint)
+# ---------------------------------------------------------------------
+
+def init_opt_state(params):
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree.map(jnp.zeros_like, params),
+            "t": jnp.zeros((), jnp.float32)}
+
+
+def train_step(params, opt_state, batch, lr, cfg,
+               beta1=0.9, beta2=0.999, eps=1e-8, weight_decay=0.01):
+    """One fused AdamW step on a (B, seq) batch; returns
+    (new_params, new_opt_state, loss). This whole function is one HLO
+    artifact — Python never runs at training time."""
+    loss, grads = jax.value_and_grad(batch_loss)(params, batch, cfg)
+    t = opt_state["t"] + 1.0
+    b1t = 1.0 - beta1 ** t
+    b2t = 1.0 - beta2 ** t
+
+    def upd(p, g, m, v):
+        m2 = beta1 * m + (1 - beta1) * g
+        v2 = beta2 * v + (1 - beta2) * g * g
+        step = lr * ((m2 / b1t) / (jnp.sqrt(v2 / b2t) + eps) + weight_decay * p)
+        return p - step, m2, v2
+
+    flat_p, tree = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(opt_state["m"])
+    flat_v = jax.tree.leaves(opt_state["v"])
+    new_p, new_m, new_v = [], [], []
+    for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v):
+        if jnp.issubdtype(p.dtype, jnp.floating):
+            p2, m2, v2 = upd(p, g, m, v)
+        else:
+            p2, m2, v2 = p, m, v
+        new_p.append(p2)
+        new_m.append(m2)
+        new_v.append(v2)
+    params2 = jax.tree.unflatten(tree, new_p)
+    opt2 = {"m": jax.tree.unflatten(tree, new_m),
+            "v": jax.tree.unflatten(tree, new_v), "t": t}
+    return params2, opt2, loss
+
+
+# ---------------------------------------------------------------------
+# AOT-friendly flattened entrypoints
+# ---------------------------------------------------------------------
+
+def make_entrypoints(cfg):
+    """Build (fn, example_args) pairs for AOT lowering. Parameters are
+    flattened into a positional list so the Rust side can feed plain
+    buffers in a documented order."""
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, cfg)
+    flat, tree = jax.tree.flatten(params)
+    opt = init_opt_state(params)
+    opt_flat, opt_tree = jax.tree.flatten(opt)
+
+    seq = cfg["max_seq"]
+    tokens = jnp.zeros((seq,), jnp.int32)
+    batch = jnp.zeros((4, seq), jnp.int32)
+    lr = jnp.float32(1e-3)
+
+    def fwd_flat(*args):
+        p = jax.tree.unflatten(tree, args[:-1])
+        return (forward(p, args[-1], cfg),)
+
+    def loss_flat(*args):
+        p = jax.tree.unflatten(tree, args[:-1])
+        return (loss_fn(p, args[-1], cfg),)
+
+    n_p = len(flat)
+    n_o = len(opt_flat)
+
+    def train_flat(*args):
+        p = jax.tree.unflatten(tree, args[:n_p])
+        o = jax.tree.unflatten(opt_tree, args[n_p:n_p + n_o])
+        b = args[n_p + n_o]
+        lr_ = args[n_p + n_o + 1]
+        p2, o2, loss = train_step(p, o, b, lr_, cfg)
+        return tuple(jax.tree.leaves(p2)) + tuple(jax.tree.leaves(o2)) + (loss,)
+
+    return {
+        "forward": (fwd_flat, tuple(flat) + (tokens,)),
+        "loss": (loss_flat, tuple(flat) + (tokens,)),
+        "train_step": (train_flat, tuple(flat) + tuple(opt_flat) + (batch, lr)),
+    }, params, tree
+
+
+@functools.lru_cache(maxsize=None)
+def param_order_doc():
+    """Human-readable note on the flattened parameter order (jax tree
+    order: dict keys sorted alphabetically, lists in order)."""
+    return ("jax.tree.flatten order: blocks[0..L-1] "
+            "(fc1, fc2, ln1, ln2, wo, wqkv — each dict alphabetical), "
+            "then head, ln_f, pos_embed, tok_embed")

@@ -1,0 +1,131 @@
+"""Structured linear layers in JAX: init + apply for the five weight
+families the paper evaluates (dense, low-rank, Monarch, block-diagonal,
+BLAST). Mirrors the Rust `nn::linear` module; the BLAST apply routes
+through the Pallas kernel so the whole model lowers into one HLO.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.blast_matmul import blast_matmul
+from .kernels import ref
+
+
+def init_dense(key, out_dim, in_dim, std=0.02):
+    return {"w": jax.random.normal(key, (out_dim, in_dim)) * std}
+
+
+def init_low_rank(key, out_dim, in_dim, r, std=0.02):
+    k1, k2 = jax.random.split(key)
+    return {
+        "p": jax.random.normal(k1, (out_dim, r)) * std,
+        "q": jax.random.normal(k2, (in_dim, r)) * std,
+    }
+
+
+def init_blast(key, out_dim, in_dim, b, r, std=0.02):
+    """Appendix C.2 init: U,V ~ N(0, std), s ~ Unif(0, 2)."""
+    assert out_dim % b == 0 and in_dim % b == 0
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "u": jax.random.normal(k1, (b, out_dim // b, r)) * std,
+        "v": jax.random.normal(k2, (b, in_dim // b, r)) * std,
+        "s": jax.random.uniform(k3, (b, b, r), minval=0.0, maxval=2.0),
+    }
+
+
+def init_monarch(key, out_dim, in_dim, b, t, std=0.02):
+    assert out_dim % b == 0 and in_dim % b == 0
+    k1, k2 = jax.random.split(key)
+    return {
+        # Shared right bases per block column: (b, t, q).
+        "rb": jax.random.normal(k1, (b, t, in_dim // b)) * std,
+        # Couplings: (b, b, p, t) indexed [i, j].
+        "l": jax.random.normal(k2, (b, b, out_dim // b, t)) * std,
+    }
+
+
+def init_block_diag(key, out_dim, in_dim, b, t, std=0.02):
+    assert out_dim % b == 0 and in_dim % b == 0
+    k1, k2 = jax.random.split(key)
+    return {
+        "pd": jax.random.normal(k1, (b, out_dim // b, t)) * std,
+        "qd": jax.random.normal(k2, (b, in_dim // b, t)) * std,
+    }
+
+
+def apply_linear(params, x, use_pallas=True):
+    """y = x @ W^T for any structure. x: (tokens, in_dim)."""
+    kind = structure_kind(params)
+    if kind == "dense":
+        return x @ params["w"].T
+    if kind == "lowrank":
+        return (x @ params["q"]) @ params["p"].T
+    if kind == "blast":
+        if use_pallas:
+            return blast_matmul(x, params["u"], params["v"], params["s"])
+        return ref.blast_matmul_ref(x, params["u"], params["v"], params["s"])
+    if kind == "monarch":
+        b, t, q = params["rb"].shape
+        batch = x.shape[0]
+        xb = x.reshape(batch, b, q)
+        # z[j] = X_j @ R_j^T -> (B, b, t)
+        z = jnp.einsum("Bjq,jtq->Bjt", xb, params["rb"])
+        # y[i] = sum_j z[j] @ L_ij^T -> (B, b, p)
+        y = jnp.einsum("Bjt,ijpt->Bip", z, params["l"])
+        return y.reshape(batch, -1)
+    if kind == "blockdiag":
+        b, p, t = params["pd"].shape
+        q = params["qd"].shape[1]
+        batch = x.shape[0]
+        xb = x.reshape(batch, b, q)
+        z = jnp.einsum("Biq,iqt->Bit", xb, params["qd"])
+        y = jnp.einsum("Bit,ipt->Bip", z, params["pd"])
+        return y.reshape(batch, -1)
+    raise ValueError(f"unknown structure kind {kind}")
+
+
+def structure_kind(params):
+    """Infer the structure family from the parameter keys (the pytree
+    holds only arrays, so AOT flattening and optimizers stay clean)."""
+    keys = set(params)
+    if "w" in keys:
+        return "dense"
+    if {"p", "q"} <= keys:
+        return "lowrank"
+    if {"u", "v", "s"} <= keys:
+        return "blast"
+    if {"rb", "l"} <= keys:
+        return "monarch"
+    if {"pd", "qd"} <= keys:
+        return "blockdiag"
+    raise ValueError(f"unrecognized structure keys {sorted(keys)}")
+
+
+def num_params(params):
+    return sum(int(v.size) for v in params.values())
+
+
+def to_dense(params):
+    """Dense (out, in) reconstruction of any structure."""
+    kind = structure_kind(params)
+    if kind == "dense":
+        return params["w"]
+    if kind == "lowrank":
+        return params["p"] @ params["q"].T
+    if kind == "blast":
+        return ref.blast_dense(params["u"], params["v"], params["s"])
+    if kind == "monarch":
+        b, _, q = params["rb"].shape
+        p = params["l"].shape[2]
+        blocks = jnp.einsum("ijpt,jtq->ijpq", params["l"], params["rb"])
+        return blocks.transpose(0, 2, 1, 3).reshape(b * p, b * q)
+    if kind == "blockdiag":
+        b, p, _ = params["pd"].shape
+        q = params["qd"].shape[1]
+        blocks = jnp.einsum("ipt,iqt->ipq", params["pd"], params["qd"])
+        out = jnp.zeros((b * p, b * q))
+        for i in range(b):
+            out = out.at[i * p:(i + 1) * p, i * q:(i + 1) * q].set(blocks[i])
+        return out
+    raise ValueError(kind)

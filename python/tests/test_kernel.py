@@ -1,0 +1,143 @@
+"""L1 correctness: Pallas BLAST kernel vs pure-jnp oracle.
+
+Hypothesis sweeps shapes/b/r/dtype; every case asserts allclose against
+both the einsum form of Algorithm 1 and the dense reconstruction.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.blast_matmul import (blast_matmul,
+                                          mxu_utilization_estimate,
+                                          vmem_footprint_bytes)
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def random_factors(key, b, p, q, r):
+    k1, k2, k3 = jax.random.split(key, 3)
+    u = jax.random.normal(k1, (b, p, r))
+    v = jax.random.normal(k2, (b, q, r))
+    s = jax.random.uniform(k3, (b, b, r), minval=-1.0, maxval=1.0)
+    return u, v, s
+
+
+def test_kernel_matches_ref_basic():
+    key = jax.random.PRNGKey(0)
+    u, v, s = random_factors(key, 4, 8, 8, 3)
+    x = jax.random.normal(jax.random.PRNGKey(1), (5, 32))
+    y_kernel = blast_matmul(x, u, v, s)
+    y_ref = ref.blast_matmul_ref(x, u, v, s)
+    np.testing.assert_allclose(y_kernel, y_ref, rtol=1e-4, atol=1e-4)
+
+
+def test_kernel_matches_dense():
+    key = jax.random.PRNGKey(2)
+    u, v, s = random_factors(key, 2, 6, 4, 5)
+    x = jax.random.normal(jax.random.PRNGKey(3), (7, 8))
+    dense = ref.blast_dense(u, v, s)
+    y_kernel = blast_matmul(x, u, v, s)
+    np.testing.assert_allclose(y_kernel, x @ dense.T, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.sampled_from([1, 2, 4]),
+    p=st.integers(1, 12),
+    q=st.integers(1, 12),
+    r=st.integers(1, 16),
+    batch=st.integers(1, 9),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_ref_sweep(b, p, q, r, batch, seed):
+    key = jax.random.PRNGKey(seed)
+    u, v, s = random_factors(key, b, p, q, r)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (batch, b * q))
+    y_kernel = blast_matmul(x, u, v, s)
+    y_ref = ref.blast_matmul_ref(x, u, v, s)
+    np.testing.assert_allclose(y_kernel, y_ref, rtol=2e-4, atol=2e-4)
+
+
+def test_low_rank_special_case():
+    """All-ones couplings make BLAST a global low-rank product (§2)."""
+    key = jax.random.PRNGKey(4)
+    b, p, q, r = 3, 4, 5, 2
+    u, v, _ = random_factors(key, b, p, q, r)
+    s = jnp.ones((b, b, r))
+    big_u = u.reshape(b * p, r)
+    big_v = v.reshape(b * q, r)
+    dense = ref.blast_dense(u, v, s)
+    np.testing.assert_allclose(dense, big_u @ big_v.T, rtol=1e-4, atol=1e-5)
+
+
+def test_block_diag_special_case():
+    """One-hot diagonal couplings zero the off-diagonal blocks (§A.1)."""
+    key = jax.random.PRNGKey(5)
+    b, p, q, r = 3, 4, 4, 4
+    u, v, _ = random_factors(key, b, p, q, r)
+    s = jnp.zeros((b, b, r))
+    for i in range(b):
+        s = s.at[i, i].set(1.0)
+    dense = np.asarray(ref.blast_dense(u, v, s))
+    for i in range(b):
+        for j in range(b):
+            blk = dense[i * p:(i + 1) * p, j * q:(j + 1) * q]
+            if i != j:
+                assert np.abs(blk).max() < 1e-5, f"block {i},{j} nonzero"
+            else:
+                expected = np.asarray(u[i]) @ np.asarray(v[i]).T
+                np.testing.assert_allclose(blk, expected, rtol=1e-4, atol=1e-5)
+
+
+def test_flop_and_param_formulas():
+    assert ref.blast_matvec_flops(256, 256, 16, 8) == (256 + 256 + 256) * 8
+    assert ref.blast_num_params(256, 256, 16, 8) == 8 * 512 + 8 * 256
+
+
+def test_kernel_grad_flows():
+    """The kernel must be differentiable (paper §3.1: trainable by SGD)."""
+    key = jax.random.PRNGKey(6)
+    u, v, s = random_factors(key, 2, 4, 4, 3)
+    x = jax.random.normal(jax.random.PRNGKey(7), (3, 8))
+
+    def loss(u, v, s):
+        return (blast_matmul(x, u, v, s) ** 2).sum()
+
+    gu, gv, gs = jax.grad(loss, argnums=(0, 1, 2))(u, v, s)
+    # Compare against grads through the einsum reference.
+    def loss_ref(u, v, s):
+        return (ref.blast_matmul_ref(x, u, v, s) ** 2).sum()
+
+    ru, rv, rs = jax.grad(loss_ref, argnums=(0, 1, 2))(u, v, s)
+    np.testing.assert_allclose(gu, ru, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(gv, rv, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(gs, rs, rtol=1e-3, atol=1e-3)
+
+
+def test_vmem_footprint_within_budget():
+    """DESIGN.md §8: per-grid-step VMEM stays under 16 MB at Llama-like
+    shapes (b=16, p=q=256, r=992, decode batch 8)."""
+    assert vmem_footprint_bytes(8, 16, 256, 256, 992) <= 16 * 1024 * 1024
+
+
+def test_mxu_share_dominates():
+    share = mxu_utilization_estimate(8, 16, 256, 256, 992)
+    assert share > 0.9, share
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dtypes(dtype):
+    key = jax.random.PRNGKey(8)
+    u, v, s = random_factors(key, 2, 4, 4, 3)
+    u, v, s = u.astype(dtype), v.astype(dtype), s.astype(dtype)
+    x = jax.random.normal(jax.random.PRNGKey(9), (4, 8)).astype(dtype)
+    y = blast_matmul(x, u, v, s)
+    y_ref = ref.blast_matmul_ref(x, u, v, s)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(
+        np.asarray(y, np.float32), np.asarray(y_ref, np.float32),
+        rtol=tol, atol=tol)

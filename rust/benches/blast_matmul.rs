@@ -1,0 +1,53 @@
+//! Bench: Algorithm 1 vs dense matmul across (n, b, r) — the kernel-level
+//! basis of every FLOPs column in the paper and of Table 4's speedups.
+
+use blast_repro::blast::{blast_rank_for_ratio, BlastMatrix};
+use blast_repro::tensor::{gemv, Matrix, Rng};
+use blast_repro::util::bench::BenchSuite;
+
+fn main() {
+    let mut suite = BenchSuite::new("blast_matmul — Algorithm 1 vs dense");
+    let mut rng = Rng::new(0);
+
+    // Matvec sweep over sizes at 50% compression.
+    for &n in &[512usize, 1024, 2048, 4096] {
+        let dense = rng.gaussian_matrix(n, n, 0.02);
+        let x: Vec<f32> = (0..n).map(|i| (i as f32 * 0.01).sin()).collect();
+        let dense_name = format!("dense matvec {n}x{n}");
+        suite.bench_throughput(&dense_name, (n * n) as f64, "mult", || {
+            std::hint::black_box(gemv(&dense, &x));
+        });
+        for &b in &[2usize, 16] {
+            if let Some(r) = blast_rank_for_ratio(n, n, b, 0.5) {
+                let a = BlastMatrix::random_init(n, n, b, r, 0.02, &mut rng);
+                let name = format!("blast matvec {n}x{n} b={b} r={r}");
+                suite.bench_throughput(&name, a.matvec_flops() as f64, "mult", || {
+                    std::hint::black_box(a.matvec(&x));
+                });
+                suite.report_speedup(&dense_name, &name);
+            }
+        }
+    }
+
+    // Activation-batch matmul (the transformer layer shape).
+    let n = 1024;
+    let batch = 8;
+    let dense = rng.gaussian_matrix(n, n, 0.02);
+    let x = rng.gaussian_matrix(batch, n, 1.0);
+    suite.bench("dense matmul_act 8x1024", || {
+        std::hint::black_box(blast_repro::tensor::matmul_nt(&x, &dense));
+    });
+    let r = blast_rank_for_ratio(n, n, 16, 0.5).unwrap();
+    let a = BlastMatrix::random_init(n, n, 16, r, 0.02, &mut rng);
+    suite.bench("blast matmul_act 8x1024 b=16", || {
+        std::hint::black_box(a.matmul_act(&x));
+    });
+    suite.report_speedup("dense matmul_act 8x1024", "blast matmul_act 8x1024 b=16");
+
+    // Correctness spot check under bench conditions.
+    let y_ref = blast_repro::tensor::matmul_nt(&x, &a.to_dense());
+    let y = a.matmul_act(&x);
+    let err = y.sub(&y_ref).fro_norm() / (1.0 + y_ref.fro_norm());
+    assert!(err < 1e-3, "bench-path numerics drifted: {err}");
+    let _ = Matrix::zeros(1, 1);
+}

@@ -1,0 +1,46 @@
+//! Bench: coordinator overhead — batcher formation cost and end-to-end
+//! request latency vs direct model calls (DESIGN.md §8 L3 target:
+//! coordinator adds < 5 % at batch 8).
+
+use blast_repro::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig};
+use blast_repro::nn::attention::StructureKind;
+use blast_repro::nn::gpt::{LmConfig, TinyLM};
+use blast_repro::tensor::Rng;
+use blast_repro::util::bench::BenchSuite;
+
+fn main() {
+    let mut suite = BenchSuite::new("coordinator — dispatch overhead");
+    let mut rng = Rng::new(2);
+    let model = TinyLM::new(LmConfig::tiny(StructureKind::Blast { b: 4, r: 8 }), &mut rng);
+    let direct_model = model.clone();
+
+    // Direct generation (no coordinator).
+    let l = 16;
+    suite.bench_throughput("direct generate L=16", l as f64, "tok", || {
+        std::hint::black_box(direct_model.generate(&[1, 2, 3], l));
+    });
+
+    // Through the coordinator, single request at a time.
+    let coord = Coordinator::new(
+        vec![("m".into(), model)],
+        CoordinatorConfig {
+            batcher: BatcherConfig { max_batch: 8, max_wait: std::time::Duration::from_micros(200) },
+        },
+    );
+    suite.bench_throughput("coordinator generate L=16", l as f64, "tok", || {
+        std::hint::black_box(coord.generate("m", vec![1, 2, 3], l).unwrap());
+    });
+    suite.report_speedup("direct generate L=16", "coordinator generate L=16");
+
+    // Batch of 8 submitted concurrently.
+    suite.bench_throughput("coordinator 8-way batch L=16", (8 * l) as f64, "tok", || {
+        let rxs: Vec<_> = (0..8)
+            .map(|i| coord.submit("m", vec![1 + i % 4, 2, 3], l).unwrap().1)
+            .collect();
+        for rx in rxs {
+            std::hint::black_box(rx.recv().unwrap());
+        }
+    });
+    println!("metrics: {}", coord.metrics.report());
+    coord.shutdown();
+}

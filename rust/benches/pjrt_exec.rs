@@ -1,0 +1,64 @@
+//! Bench: PJRT artifact execution — compile-once cost and per-call
+//! latency of the forward / loss / train_step artifacts (the L2 hot path
+//! of the E2E example). Skips when artifacts are missing.
+
+use blast_repro::runtime::executor::{load_params_ordered, TensorValue};
+use blast_repro::runtime::{Manifest, PjrtEngine};
+use blast_repro::util::bench::BenchSuite;
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("pjrt_exec bench skipped: run `make artifacts` first");
+        return;
+    }
+    let manifest = Manifest::load("artifacts").expect("manifest");
+    let mut engine = PjrtEngine::cpu().expect("client");
+    let mut suite = BenchSuite::new("pjrt_exec — artifact execution");
+
+    for variant in ["tinylm_dense", "tinylm_blast"] {
+        let Ok(entry) = manifest.find(&format!("{variant}.forward")) else {
+            continue;
+        };
+        // Compile time (one-shot, reported not benched).
+        let t0 = std::time::Instant::now();
+        let exe = engine.load(entry).expect("compile");
+        println!("compile {}: {:?}", entry.name, t0.elapsed());
+        let mut args = load_params_ordered(entry).expect("params");
+        let seq = entry.arg_shapes.last().unwrap()[0];
+        args.push(TensorValue::I32 {
+            shape: vec![seq],
+            data: (0..seq as i32).map(|i| i % 9).collect(),
+        });
+        suite.bench_throughput(
+            &format!("{variant}.forward seq={seq}"),
+            seq as f64,
+            "tok",
+            || {
+                std::hint::black_box(exe.run(&args).unwrap());
+            },
+        );
+    }
+
+    // train_step per-call cost.
+    if let Ok(entry) = manifest.find("tinylm_blast.train_step") {
+        let exe = engine.load(entry).expect("compile train");
+        let n = entry.param_names.len();
+        let mut args = load_params_ordered(entry).expect("params");
+        for i in 0..2 * n + 1 {
+            let shape = entry.arg_shapes[n + i].clone();
+            let numel: usize = shape.iter().product::<usize>().max(1);
+            args.push(TensorValue::F32 { shape, data: vec![0.0; numel] });
+        }
+        let bshape = entry.arg_shapes[3 * n + 1].clone();
+        let count: usize = bshape.iter().product();
+        args.push(TensorValue::I32 {
+            shape: bshape,
+            data: (0..count as i32).map(|i| i % 11).collect(),
+        });
+        args.push(TensorValue::scalar_f32(1e-3));
+        suite.bench("tinylm_blast.train_step", || {
+            std::hint::black_box(exe.run(&args).unwrap());
+        });
+    }
+    println!("pjrt platform: {}", engine.platform());
+}

@@ -1,0 +1,43 @@
+//! Bench: Table 4 — decode runtime vs compression ratio and block count,
+//! both at real Llama-7B layer shapes (matvec) and end-to-end TinyLM
+//! generation (L ∈ {10, 100}).
+
+use blast_repro::blast::blast_rank_for_ratio;
+use blast_repro::nn::attention::StructureKind;
+use blast_repro::nn::gpt::{LmConfig, TinyLM};
+use blast_repro::tensor::Rng;
+use blast_repro::util::bench::BenchSuite;
+
+fn main() {
+    let mut suite = BenchSuite::new("runtime — Table 4 decode");
+
+    // End-to-end generation at TinyLM scale.
+    let make = |s: StructureKind| {
+        let mut rng = Rng::new(1);
+        let mut cfg = LmConfig::tiny(s);
+        cfg.max_seq = 128;
+        TinyLM::new(cfg, &mut rng)
+    };
+    let rows: Vec<(String, TinyLM)> = vec![
+        ("CR0 dense".into(), make(StructureKind::Dense)),
+        ("CR20 b=2".into(), make(StructureKind::Blast { b: 2, r: blast_rank_for_ratio(128, 64, 2, 0.2).unwrap() })),
+        ("CR20 b=4".into(), make(StructureKind::Blast { b: 4, r: blast_rank_for_ratio(128, 64, 4, 0.2).unwrap() })),
+        ("CR50 b=4".into(), make(StructureKind::Blast { b: 4, r: blast_rank_for_ratio(128, 64, 4, 0.5).unwrap() })),
+    ];
+    for &l in &[10usize, 100] {
+        let dense_name = format!("generate L={l} CR0 dense");
+        for (label, model) in &rows {
+            let name = format!("generate L={l} {label}");
+            suite.bench_throughput(&name, l as f64, "tok", || {
+                std::hint::black_box(model.generate(&[1, 2, 3], l));
+            });
+        }
+        for (label, _) in &rows[1..] {
+            suite.report_speedup(&dense_name, &format!("generate L={l} {label}"));
+        }
+    }
+
+    // Matvec at true Llama shapes (the Table 4 mechanism).
+    println!("\n-- raw matvec at Llama-7B shapes --");
+    blast_repro::experiments::runtime_exp::print_matvec_sweep(3);
+}

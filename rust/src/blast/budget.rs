@@ -1,0 +1,131 @@
+//! Rank-budget solvers: pick the structure hyperparameter (BLAST `r`,
+//! low-rank rank, Monarch block rank, …) that hits a target compression
+//! ratio, mirroring the paper's "we used the same hyperparameter r for
+//! every target weight matrix by setting it to meet the computational
+//! budget of the DNN" (§4) and the per-layer tables of Appendix C.
+
+/// A compression target for one `m×n` weight matrix.
+#[derive(Clone, Copy, Debug)]
+pub struct CompressionBudget {
+    pub m: usize,
+    pub n: usize,
+    /// Target compression ratio in (0, 1): fraction of parameters removed.
+    pub ratio: f64,
+}
+
+impl CompressionBudget {
+    pub fn new(m: usize, n: usize, ratio: f64) -> Self {
+        assert!((0.0..1.0).contains(&ratio), "ratio must be in [0,1)");
+        CompressionBudget { m, n, ratio }
+    }
+
+    /// Parameter budget: `(1 - ratio) * m * n`.
+    pub fn param_budget(&self) -> usize {
+        ((1.0 - self.ratio) * (self.m as f64) * (self.n as f64)).floor() as usize
+    }
+}
+
+/// Largest BLAST rank `r` such that `r(m+n) + r b² ≤ budget` and `r ≥ 1`.
+/// Returns `None` if even `r = 1` exceeds the budget.
+pub fn blast_rank_for_ratio(m: usize, n: usize, b: usize, ratio: f64) -> Option<usize> {
+    let budget = CompressionBudget::new(m, n, ratio).param_budget();
+    let per_rank = m + n + b * b;
+    let r = budget / per_rank;
+    if r == 0 {
+        None
+    } else {
+        Some(r)
+    }
+}
+
+/// Largest low-rank rank such that `r(m+n) ≤ budget`.
+pub fn lowrank_rank_for_ratio(m: usize, n: usize, ratio: f64) -> Option<usize> {
+    let budget = CompressionBudget::new(m, n, ratio).param_budget();
+    let r = budget / (m + n);
+    if r == 0 {
+        None
+    } else {
+        Some(r)
+    }
+}
+
+/// Largest Monarch per-block rank `t` such that block factors fit:
+/// params = b² · (p + q) · t = (m + n)·b·t ≤ budget.
+pub fn monarch_rank_for_ratio(m: usize, n: usize, b: usize, ratio: f64) -> Option<usize> {
+    let budget = CompressionBudget::new(m, n, ratio).param_budget();
+    let per_t = (m + n) * b;
+    let t = budget / per_t;
+    if t == 0 {
+        None
+    } else {
+        Some(t)
+    }
+}
+
+/// Largest block-diagonal per-block rank `t` such that
+/// params = b · (p + q) · t = (m + n)·t ≤ budget, capped at min(p, q)
+/// (t = min(p,q) stores the diagonal blocks densely-equivalent).
+pub fn blockdiag_rank_for_ratio(m: usize, n: usize, b: usize, ratio: f64) -> Option<usize> {
+    let budget = CompressionBudget::new(m, n, ratio).param_budget();
+    let per_t = m + n;
+    let t = (budget / per_t).min((m / b).min(n / b));
+    if t == 0 {
+        None
+    } else {
+        Some(t)
+    }
+}
+
+/// Achieved ratio for a BLAST configuration.
+pub fn blast_achieved_ratio(m: usize, n: usize, b: usize, r: usize) -> f64 {
+    1.0 - ((r * (m + n) + r * b * b) as f64) / ((m * n) as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blast_rank_meets_budget() {
+        // Llama Q_proj-like: 4096x4096, b=16, 50% CR.
+        let r = blast_rank_for_ratio(4096, 4096, 16, 0.5).unwrap();
+        let params = r * (4096 + 4096) + r * 256;
+        assert!(params <= 4096 * 4096 / 2);
+        // One more rank unit would bust the budget.
+        let params_next = (r + 1) * (4096 + 4096) + (r + 1) * 256;
+        assert!(params_next > 4096 * 4096 / 2);
+        // Paper's Table 9 uses r=1024 for attention at 50% *model-wide*
+        // CR (their ratio is computed over all parameters including the
+        // uncompressed embedding/head); the strict per-matrix solver
+        // lands just below: 992.
+        assert_eq!(r, 992);
+    }
+
+    #[test]
+    fn lowrank_rank_meets_budget() {
+        let r = lowrank_rank_for_ratio(4096, 4096, 0.5).unwrap();
+        assert!(r * 8192 <= 8_388_608);
+        assert!((r + 1) * 8192 > 8_388_608);
+        assert_eq!(r, 1024);
+    }
+
+    #[test]
+    fn monarch_and_blockdiag() {
+        let t = monarch_rank_for_ratio(256, 256, 4, 0.5).unwrap();
+        assert!(t * 512 * 4 <= 32768);
+        let t = blockdiag_rank_for_ratio(256, 256, 4, 0.5).unwrap();
+        assert!(t <= 64);
+    }
+
+    #[test]
+    fn infeasible_returns_none() {
+        assert!(blast_rank_for_ratio(8, 8, 2, 0.95).is_none());
+    }
+
+    #[test]
+    fn achieved_ratio_consistent() {
+        let r = blast_rank_for_ratio(512, 512, 8, 0.7).unwrap();
+        let achieved = blast_achieved_ratio(512, 512, 8, r);
+        assert!(achieved >= 0.7 - 0.01, "achieved {achieved}");
+    }
+}

@@ -1,0 +1,376 @@
+//! `BlastMatrix` — storage and basic algebra for the BLAST parameterization.
+
+use crate::tensor::{Matrix, Rng};
+
+/// A BLAST matrix of logical shape `m×n` with `b×b` blocks and rank
+/// parameter `r` (paper Eq. 1–2).
+///
+/// Storage:
+/// * `u[i]` — left factor `U_i ∈ R^{p×r}` shared across block row `i`;
+/// * `v[j]` — right factor `V_j ∈ R^{q×r}` shared across block column `j`;
+/// * `s[i][j]` — diagonal coupling `s_{i,j} ∈ R^r` specific to block
+///   `(i, j)` — the source of BLAST's adaptivity.
+#[derive(Clone, Debug)]
+pub struct BlastMatrix {
+    pub m: usize,
+    pub n: usize,
+    pub b: usize,
+    pub r: usize,
+    pub u: Vec<Matrix>,      // b entries, each p×r
+    pub v: Vec<Matrix>,      // b entries, each q×r
+    pub s: Vec<Vec<Vec<f32>>>, // [b][b][r]
+}
+
+impl BlastMatrix {
+    /// Block height `p = m/b`.
+    #[inline]
+    pub fn p(&self) -> usize {
+        self.m / self.b
+    }
+
+    /// Block width `q = n/b`.
+    #[inline]
+    pub fn q(&self) -> usize {
+        self.n / self.b
+    }
+
+    /// All-zeros BLAST matrix.
+    pub fn zeros(m: usize, n: usize, b: usize, r: usize) -> Self {
+        assert!(b > 0 && m % b == 0 && n % b == 0, "b must divide both m={m} and n={n}");
+        assert!(r > 0, "rank must be positive");
+        let p = m / b;
+        let q = n / b;
+        BlastMatrix {
+            m,
+            n,
+            b,
+            r,
+            u: (0..b).map(|_| Matrix::zeros(p, r)).collect(),
+            v: (0..b).map(|_| Matrix::zeros(q, r)).collect(),
+            s: vec![vec![vec![0.0; r]; b]; b],
+        }
+    }
+
+    /// Random init for training from scratch (Appendix C.2):
+    /// `U, V ~ N(0, std)`, `s ~ Unif(0, 2)`.
+    pub fn random_init(m: usize, n: usize, b: usize, r: usize, std: f32, rng: &mut Rng) -> Self {
+        let mut a = Self::zeros(m, n, b, r);
+        let p = a.p();
+        let q = a.q();
+        for i in 0..b {
+            a.u[i] = rng.gaussian_matrix(p, r, std);
+            a.v[i] = rng.gaussian_matrix(q, r, std);
+        }
+        for i in 0..b {
+            for j in 0..b {
+                a.s[i][j] = rng.uniform_vec(r, 0.0, 2.0);
+            }
+        }
+        a
+    }
+
+    /// Small random init for factorization (Algorithm 2 line 1):
+    /// `U, V ~ N(0, eps²)`, `s ~ Unif(0, 1)`.
+    pub fn factorization_init(
+        m: usize,
+        n: usize,
+        b: usize,
+        r: usize,
+        eps: f32,
+        rng: &mut Rng,
+    ) -> Self {
+        let mut a = Self::zeros(m, n, b, r);
+        let p = a.p();
+        let q = a.q();
+        for i in 0..b {
+            a.u[i] = rng.gaussian_matrix(p, r, eps);
+            a.v[i] = rng.gaussian_matrix(q, r, eps);
+        }
+        for i in 0..b {
+            for j in 0..b {
+                a.s[i][j] = rng.uniform_vec(r, 0.0, 1.0);
+            }
+        }
+        a
+    }
+
+    /// Number of stored parameters: `r(m+n) + r b²` (paper §2).
+    pub fn num_params(&self) -> usize {
+        self.r * (self.m + self.n) + self.r * self.b * self.b
+    }
+
+    /// Multiplications per matrix-vector product: `(m + n + b²)·r`
+    /// (paper §2, Algorithm 1 analysis).
+    pub fn matvec_flops(&self) -> usize {
+        (self.m + self.n + self.b * self.b) * self.r
+    }
+
+    /// Dense parameter count of the equivalent `m×n` matrix.
+    pub fn dense_params(&self) -> usize {
+        self.m * self.n
+    }
+
+    /// Compression ratio = 1 - params(blast)/params(dense).
+    pub fn compression_ratio(&self) -> f64 {
+        1.0 - self.num_params() as f64 / self.dense_params() as f64
+    }
+
+    /// Reconstruct block `(i, j)` densely: `U_i diag(s_{i,j}) V_j^T`.
+    pub fn block_dense(&self, i: usize, j: usize) -> Matrix {
+        let p = self.p();
+        let q = self.q();
+        let u = &self.u[i];
+        let v = &self.v[j];
+        let s = &self.s[i][j];
+        let mut out = Matrix::zeros(p, q);
+        // out[a, c] = sum_k u[a,k] * s[k] * v[c,k]
+        for a in 0..p {
+            let urow = u.row(a);
+            let orow = out.row_mut(a);
+            for k in 0..self.r {
+                let us = urow[k] * s[k];
+                if us == 0.0 {
+                    continue;
+                }
+                let vcol = v.data[..].chunks_exact(self.r);
+                // iterate rows of v (each row is length r)
+                for (c, vrow) in vcol.enumerate() {
+                    orow[c] += us * vrow[k];
+                }
+            }
+        }
+        out
+    }
+
+    /// Full dense reconstruction (test/debug; O(m·n·r)).
+    pub fn to_dense(&self) -> Matrix {
+        let p = self.p();
+        let q = self.q();
+        let mut out = Matrix::zeros(self.m, self.n);
+        for i in 0..self.b {
+            for j in 0..self.b {
+                let blk = self.block_dense(i, j);
+                out.set_submatrix(i * p, j * q, &blk);
+            }
+        }
+        out
+    }
+
+    /// The concatenated scaled right factor
+    /// `V̄_i = [S_{i,1} V_1^T ... S_{i,b} V_b^T]^T ∈ R^{n×r}` used in the
+    /// `U_i` update (Eq. 5 / Algorithm 2 line 3).
+    pub fn v_bar(&self, i: usize) -> Matrix {
+        let q = self.q();
+        let mut out = Matrix::zeros(self.n, self.r);
+        for j in 0..self.b {
+            let s = &self.s[i][j];
+            let v = &self.v[j];
+            for a in 0..q {
+                let vrow = v.row(a);
+                let orow = out.row_mut(j * q + a);
+                for k in 0..self.r {
+                    orow[k] = vrow[k] * s[k];
+                }
+            }
+        }
+        out
+    }
+
+    /// The concatenated scaled left factor
+    /// `Ū_j = [(U_1 S_{1,j})^T ... (U_b S_{b,j})^T]^T ∈ R^{m×r}` used in
+    /// the `V_j` update (Eq. 6 / Algorithm 2 line 4).
+    pub fn u_bar(&self, j: usize) -> Matrix {
+        let p = self.p();
+        let mut out = Matrix::zeros(self.m, self.r);
+        for i in 0..self.b {
+            let s = &self.s[i][j];
+            let u = &self.u[i];
+            for a in 0..p {
+                let urow = u.row(a);
+                let orow = out.row_mut(i * p + a);
+                for k in 0..self.r {
+                    orow[k] = urow[k] * s[k];
+                }
+            }
+        }
+        out
+    }
+
+    /// Flatten all parameters into a named bundle (for checkpointing).
+    pub fn to_bundle(&self, prefix: &str) -> crate::tensor::io::TensorBundle {
+        let mut bundle = crate::tensor::io::TensorBundle::new();
+        for i in 0..self.b {
+            bundle.insert(format!("{prefix}.u.{i}"), self.u[i].clone());
+            bundle.insert(format!("{prefix}.v.{i}"), self.v[i].clone());
+        }
+        // Pack s as a (b*b) × r matrix.
+        let mut s = Matrix::zeros(self.b * self.b, self.r);
+        for i in 0..self.b {
+            for j in 0..self.b {
+                s.row_mut(i * self.b + j).copy_from_slice(&self.s[i][j]);
+            }
+        }
+        bundle.insert(format!("{prefix}.s"), s);
+        bundle
+    }
+
+    /// Inverse of `to_bundle`.
+    pub fn from_bundle(
+        bundle: &crate::tensor::io::TensorBundle,
+        prefix: &str,
+        m: usize,
+        n: usize,
+        b: usize,
+        r: usize,
+    ) -> anyhow::Result<Self> {
+        let mut a = Self::zeros(m, n, b, r);
+        for i in 0..b {
+            a.u[i] = bundle.get(&format!("{prefix}.u.{i}"))?.clone();
+            a.v[i] = bundle.get(&format!("{prefix}.v.{i}"))?.clone();
+        }
+        let s = bundle.get(&format!("{prefix}.s"))?;
+        anyhow::ensure!(s.shape() == (b * b, r), "bad s shape");
+        for i in 0..b {
+            for j in 0..b {
+                a.s[i][j].copy_from_slice(s.row(i * b + j));
+            }
+        }
+        Ok(a)
+    }
+
+    /// Frobenius norm of the represented dense matrix (via reconstruction).
+    pub fn fro_norm(&self) -> f32 {
+        self.to_dense().fro_norm()
+    }
+
+    /// True if any factor entry is NaN/inf.
+    pub fn has_nonfinite(&self) -> bool {
+        self.u.iter().any(|m| m.has_nonfinite())
+            || self.v.iter().any(|m| m.has_nonfinite())
+            || self
+                .s
+                .iter()
+                .flatten()
+                .flatten()
+                .any(|x| !x.is_finite())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_params() {
+        let a = BlastMatrix::zeros(12, 8, 4, 3);
+        assert_eq!(a.p(), 3);
+        assert_eq!(a.q(), 2);
+        assert_eq!(a.u.len(), 4);
+        assert_eq!(a.v.len(), 4);
+        assert_eq!(a.u[0].shape(), (3, 3));
+        assert_eq!(a.v[0].shape(), (2, 3));
+        // r(m+n) + r b^2 = 3*20 + 3*16 = 108
+        assert_eq!(a.num_params(), 108);
+        // (m+n+b^2) r = (12+8+16)*3 = 108
+        assert_eq!(a.matvec_flops(), 108);
+    }
+
+    #[test]
+    #[should_panic]
+    fn indivisible_blocks_panic() {
+        BlastMatrix::zeros(10, 8, 3, 2);
+    }
+
+    #[test]
+    fn block_dense_matches_manual() {
+        let mut rng = Rng::new(50);
+        let a = BlastMatrix::random_init(6, 6, 2, 2, 1.0, &mut rng);
+        let blk = a.block_dense(0, 1);
+        // Manual: U_0 diag(s_{0,1}) V_1^T
+        let u = &a.u[0];
+        let v = &a.v[1];
+        let s = &a.s[0][1];
+        for i in 0..3 {
+            for j in 0..3 {
+                let mut acc = 0.0f32;
+                for k in 0..2 {
+                    acc += u.at(i, k) * s[k] * v.at(j, k);
+                }
+                assert!((blk.at(i, j) - acc).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn to_dense_assembles_blocks() {
+        let mut rng = Rng::new(51);
+        let a = BlastMatrix::random_init(8, 12, 4, 3, 1.0, &mut rng);
+        let dense = a.to_dense();
+        assert_eq!(dense.shape(), (8, 12));
+        for i in 0..4 {
+            for j in 0..4 {
+                let blk = dense.block(i, j, 4, 4);
+                let expect = a.block_dense(i, j);
+                assert!(blk.sub(&expect).fro_norm() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn v_bar_u_bar_shapes_and_values() {
+        let mut rng = Rng::new(52);
+        let a = BlastMatrix::random_init(4, 6, 2, 3, 1.0, &mut rng);
+        let vb = a.v_bar(0);
+        assert_eq!(vb.shape(), (6, 3));
+        // Row 0 of v_bar(0) is V_0 row 0 scaled by s_{0,0}.
+        for k in 0..3 {
+            assert!((vb.at(0, k) - a.v[0].at(0, k) * a.s[0][0][k]).abs() < 1e-6);
+        }
+        // Row q (=3) is V_1 row 0 scaled by s_{0,1}.
+        for k in 0..3 {
+            assert!((vb.at(3, k) - a.v[1].at(0, k) * a.s[0][1][k]).abs() < 1e-6);
+        }
+        let ub = a.u_bar(1);
+        assert_eq!(ub.shape(), (4, 3));
+        for k in 0..3 {
+            assert!((ub.at(0, k) - a.u[0].at(0, k) * a.s[0][1][k]).abs() < 1e-6);
+            assert!((ub.at(2, k) - a.u[1].at(0, k) * a.s[1][1][k]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn v_bar_identity_reconstruction() {
+        // A_{i,*} = U_i V̄_i^T must equal the dense block row.
+        let mut rng = Rng::new(53);
+        let a = BlastMatrix::random_init(6, 9, 3, 2, 1.0, &mut rng);
+        let dense = a.to_dense();
+        for i in 0..3 {
+            let row = crate::tensor::matmul_nt(&a.u[i], &a.v_bar(i));
+            let expect = dense.block_row(i, 3);
+            assert!(row.sub(&expect).fro_norm() < 1e-4);
+        }
+        // And A_{*,j} = Ū_j V_j^T equals dense block columns.
+        for j in 0..3 {
+            let col = crate::tensor::matmul_nt(&a.u_bar(j), &a.v[j]);
+            let expect = dense.block_col(j, 3);
+            assert!(col.sub(&expect).fro_norm() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn bundle_round_trip() {
+        let mut rng = Rng::new(54);
+        let a = BlastMatrix::random_init(8, 8, 2, 4, 0.5, &mut rng);
+        let bundle = a.to_bundle("layer0");
+        let b = BlastMatrix::from_bundle(&bundle, "layer0", 8, 8, 2, 4).unwrap();
+        assert!(a.to_dense().sub(&b.to_dense()).fro_norm() < 1e-6);
+    }
+
+    #[test]
+    fn compression_ratio_sane() {
+        // 256x256, b=16, r=8: params = 8*512 + 8*256 = 6144; dense = 65536.
+        let a = BlastMatrix::zeros(256, 256, 16, 8);
+        assert_eq!(a.num_params(), 6144);
+        assert!((a.compression_ratio() - (1.0 - 6144.0 / 65536.0)).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,16 @@
+//! The BLAST matrix (paper §2).
+//!
+//! An `m×n` matrix is partitioned into `b×b` blocks of size `p×q`
+//! (`p = m/b`, `q = n/b`, Eq. 1); each block is parameterized as
+//! `A_{i,j} = U_i · diag(s_{i,j}) · V_j^T` (Eq. 2) with the left factor
+//! shared across a block row, the right factor shared across a block
+//! column, and a per-block diagonal coupling vector. Parameter count:
+//! `r·(m+n) + r·b²`.
+
+pub mod matrix;
+pub mod matmul;
+pub mod special;
+pub mod budget;
+
+pub use matrix::BlastMatrix;
+pub use budget::{blast_achieved_ratio, blast_rank_for_ratio, lowrank_rank_for_ratio, CompressionBudget};

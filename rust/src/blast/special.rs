@@ -1,0 +1,259 @@
+//! Special-case constructors (paper §2 and Appendix A.1).
+//!
+//! BLAST encompasses low-rank, block-diagonal, and block-low-rank (BLR /
+//! Monarch-style) matrices through particular diagonal couplings:
+//! * low-rank: all `s_{i,j} = 1` (the blocks tile `U V^T`);
+//! * block-diagonal: `s_{i,j} = 1[i==j]` with `r = p`;
+//! * BLR with per-block rank `t`: `r = b·t` and `s_{i,j}` one-hot on the
+//!   `j`-th width-`t` band.
+
+use super::matrix::BlastMatrix;
+use crate::tensor::Matrix;
+
+impl BlastMatrix {
+    /// Embed a global low-rank factorization `A ≈ U V^T`
+    /// (`U: m×r`, `V: n×r`) as a BLAST matrix with `b×b` blocks: slice the
+    /// factors by block and set every coupling to ones (§2 "Low-Rank
+    /// Matrices as Special Cases").
+    pub fn from_low_rank(u: &Matrix, v: &Matrix, b: usize) -> Self {
+        assert_eq!(u.cols, v.cols, "factor rank mismatch");
+        let m = u.rows;
+        let n = v.rows;
+        let r = u.cols;
+        let mut a = Self::zeros(m, n, b, r);
+        let p = a.p();
+        let q = a.q();
+        for i in 0..b {
+            a.u[i] = u.submatrix(i * p, (i + 1) * p, 0, r);
+        }
+        for j in 0..b {
+            a.v[j] = v.submatrix(j * q, (j + 1) * q, 0, r);
+        }
+        for i in 0..b {
+            for j in 0..b {
+                a.s[i][j] = vec![1.0; r];
+            }
+        }
+        a
+    }
+
+    /// Build a BLAST matrix representing a block-diagonal matrix with the
+    /// given diagonal blocks (each `p×q`), factored at rank `r ≤ min(p,q)`
+    /// via SVD when needed (Appendix A.1 "Block diagonal matrix").
+    pub fn from_block_diagonal(blocks: &[Matrix], r: usize) -> Self {
+        let b = blocks.len();
+        assert!(b > 0);
+        let p = blocks[0].rows;
+        let q = blocks[0].cols;
+        assert!(blocks.iter().all(|blk| blk.shape() == (p, q)));
+        let mut a = Self::zeros(p * b, q * b, b, r);
+        for (i, blk) in blocks.iter().enumerate() {
+            let svd = crate::linalg::truncated_svd(blk, r);
+            // U_i = left singular vectors, V_i = right, s_{i,i} = σ.
+            let mut u = Matrix::zeros(p, r);
+            let mut v = Matrix::zeros(q, r);
+            let mut s = vec![0.0f32; r];
+            for k in 0..r.min(svd.s.len()) {
+                s[k] = svd.s[k];
+                for t in 0..p {
+                    u.set(t, k, svd.u.at(t, k));
+                }
+                for t in 0..q {
+                    v.set(t, k, svd.v.at(t, k));
+                }
+            }
+            a.u[i] = u;
+            a.v[i] = v;
+            a.s[i][i] = s;
+            // Off-diagonal couplings stay zero.
+        }
+        a
+    }
+
+    /// Build a BLAST matrix representing a block-low-rank (BLR) matrix:
+    /// every block `(i,j)` has its own rank-`t` factorization
+    /// `A_{i,j} ≈ P_{i,j} Q_{i,j}^T`. Realized with `r = b·t` and one-hot
+    /// band couplings (Appendix A.1 "Block low-rank matrix").
+    ///
+    /// `block_factors[i][j] = (P, Q)` with `P: p×t`, `Q: q×t`.
+    pub fn from_blr(block_factors: &[Vec<(Matrix, Matrix)>]) -> Self {
+        let b = block_factors.len();
+        assert!(b > 0 && block_factors.iter().all(|row| row.len() == b));
+        let (p, t) = block_factors[0][0].0.shape();
+        let q = block_factors[0][0].1.rows;
+        let r = b * t;
+        let mut a = Self::zeros(p * b, q * b, b, r);
+
+        // U_i = [P_{i,1} | P_{i,2} | ... | P_{i,b}]  (p × bt)
+        // V_j's band j holds Q_{i,j}... but Q depends on i, which shared
+        // bases cannot express in general. The BLR → BLAST embedding of
+        // Appendix A.1 assumes the *Monarch* convention where the right
+        // factor of block (i,j) depends only on j and the left only on i
+        // after permutation; concretely we place P_{i,j} in U_i's band j
+        // and Q_{i,j} in V_j's band... which again collides across i.
+        //
+        // The paper's §A.1 BLR example uses rank-1 blocks with bases
+        // u_{i,j}, v_{i,j} and sets U_i = [u_{i,1} ... u_{i,b}],
+        // V_j = [v_{1,j} ... v_{b,j}]: U_i's band j holds the left basis
+        // of block (i,j) and V_j's band *i* holds the right basis of
+        // block (i,j). The coupling s_{i,j} must then select column band
+        // j from U_i and band i from V_j simultaneously — which works
+        // only when the selected bands coincide (band index k belongs to
+        // both U_i band j and V_j band i iff the coupling is supported on
+        // the intersection). With one-hot s_{i,j} on band j, V_j band j
+        // must hold v_{j-th}: this reproduces Monarch, where right bases
+        // depend only on their own block column. We implement exactly
+        // that (t ≥ 1 generalization of §A.1's rank-1 example with the
+        // Monarch sharing pattern): Q must satisfy Q_{i,j} = Q_j.
+        for i in 0..b {
+            let mut u = Matrix::zeros(p, r);
+            for j in 0..b {
+                let pij = &block_factors[i][j].0;
+                assert_eq!(pij.shape(), (p, t));
+                for a_ in 0..p {
+                    for k in 0..t {
+                        u.set(a_, j * t + k, pij.at(a_, k));
+                    }
+                }
+            }
+            a.u[i] = u;
+        }
+        for j in 0..b {
+            let mut v = Matrix::zeros(q, r);
+            // Monarch sharing: use block (0, j)'s right factor for the
+            // whole block column (caller must pass Q_{i,j} = Q_j).
+            let qj = &block_factors[0][j].1;
+            assert_eq!(qj.shape(), (q, t));
+            for a_ in 0..q {
+                for k in 0..t {
+                    v.set(a_, j * t + k, qj.at(a_, k));
+                }
+            }
+            a.v[j] = v;
+        }
+        for i in 0..b {
+            for j in 0..b {
+                let mut s = vec![0.0f32; r];
+                for k in 0..t {
+                    s[j * t + k] = 1.0;
+                }
+                a.s[i][j] = s;
+            }
+        }
+        a
+    }
+
+    /// Embed a Monarch-style matrix: block `(i,j) = L_{i,j} R_j` where the
+    /// right basis is shared per block column. This is the `from_blr`
+    /// sharing pattern; provided as a named constructor for clarity.
+    pub fn from_monarch(l: &[Vec<Matrix>], r_bases: &[Matrix]) -> Self {
+        let b = l.len();
+        assert_eq!(r_bases.len(), b);
+        let factors: Vec<Vec<(Matrix, Matrix)>> = (0..b)
+            .map(|i| {
+                (0..b)
+                    .map(|j| (l[i][j].clone(), r_bases[j].transpose()))
+                    .collect()
+            })
+            .collect();
+        Self::from_blr(&factors)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{matmul, matmul_nt, Rng};
+
+    #[test]
+    fn low_rank_embedding_exact() {
+        let mut rng = Rng::new(70);
+        let u = rng.gaussian_matrix(12, 3, 1.0);
+        let v = rng.gaussian_matrix(12, 3, 1.0);
+        let dense = matmul_nt(&u, &v);
+        for b in [1, 2, 3, 4, 6] {
+            let a = BlastMatrix::from_low_rank(&u, &v, b);
+            let rec = a.to_dense();
+            assert!(
+                rec.sub(&dense).fro_norm() < 1e-4 * dense.fro_norm(),
+                "b={b}"
+            );
+        }
+    }
+
+    #[test]
+    fn block_diagonal_embedding_exact_full_rank() {
+        let mut rng = Rng::new(71);
+        let blocks: Vec<Matrix> = (0..3).map(|_| rng.gaussian_matrix(4, 4, 1.0)).collect();
+        let a = BlastMatrix::from_block_diagonal(&blocks, 4);
+        let rec = a.to_dense();
+        for i in 0..3 {
+            for j in 0..3 {
+                let blk = rec.block(i, j, 3, 3);
+                if i == j {
+                    assert!(blk.sub(&blocks[i]).fro_norm() < 1e-2 * blocks[i].fro_norm());
+                } else {
+                    assert!(blk.fro_norm() < 1e-4);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn block_diagonal_low_rank_blocks() {
+        // r < p: diagonal blocks are the best rank-r approximations.
+        let mut rng = Rng::new(72);
+        let blocks: Vec<Matrix> = (0..2).map(|_| rng.gaussian_matrix(6, 6, 1.0)).collect();
+        let a = BlastMatrix::from_block_diagonal(&blocks, 2);
+        let rec = a.to_dense();
+        for i in 0..2 {
+            let blk = rec.block(i, i, 2, 2);
+            let best = crate::linalg::truncated_svd(&blocks[i], 2).reconstruct(2);
+            assert!(blk.sub(&best).fro_norm() < 1e-2 * best.fro_norm());
+        }
+    }
+
+    #[test]
+    fn monarch_embedding_exact() {
+        // Monarch block (i,j) = L_{i,j} R_j with t=2 shared right bases.
+        let mut rng = Rng::new(73);
+        let b = 3;
+        let (p, q, t) = (4, 5, 2);
+        let l: Vec<Vec<Matrix>> = (0..b)
+            .map(|_| (0..b).map(|_| rng.gaussian_matrix(p, t, 1.0)).collect())
+            .collect();
+        let r_bases: Vec<Matrix> = (0..b).map(|_| rng.gaussian_matrix(t, q, 1.0)).collect();
+        let a = BlastMatrix::from_monarch(&l, &r_bases);
+        assert_eq!(a.r, b * t);
+        let rec = a.to_dense();
+        for i in 0..b {
+            for j in 0..b {
+                let expect = matmul(&l[i][j], &r_bases[j]);
+                let got = rec.block(i, j, b, b);
+                assert!(
+                    got.sub(&expect).fro_norm() < 1e-3 * (1.0 + expect.fro_norm()),
+                    "block ({i},{j})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn param_count_overhead_vs_blr() {
+        // §A.1: BLAST costs r·b² more than raw BLR at the same expressivity.
+        let b = 4;
+        let t = 2;
+        let (p, q) = (8, 8);
+        let r = b * t;
+        let a = BlastMatrix::zeros(p * b, q * b, b, r);
+        let blr_params = b * b * (p + q) * t;
+        assert_eq!(a.num_params(), r * (p * b + q * b) + r * b * b);
+        // For the Monarch sharing pattern, BLAST stores (m+n)r + rb² vs
+        // Monarch's (m + n·b... ) — just assert the documented delta:
+        assert_eq!(
+            a.num_params() as i64 - (2 * p * b * r) as i64,
+            (r * b * b) as i64
+        );
+        assert!(blr_params > 0);
+    }
+}

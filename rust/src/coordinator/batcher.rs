@@ -1,0 +1,137 @@
+//! Dynamic batcher: greedily form decode batches up to `max_batch`
+//! requests, waiting at most `max_wait` for stragglers — the standard
+//! continuous-batching admission policy (vLLM-style, simplified to
+//! request granularity).
+
+use super::request::GenerateRequest;
+use std::sync::mpsc::Receiver;
+use std::time::{Duration, Instant};
+
+/// Batching policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// Pulls requests off a channel and forms batches.
+pub struct DynamicBatcher {
+    pub cfg: BatcherConfig,
+    rx: Receiver<GenerateRequest>,
+    /// Request pulled while closing out the previous batch.
+    pending: Option<GenerateRequest>,
+}
+
+impl DynamicBatcher {
+    pub fn new(rx: Receiver<GenerateRequest>, cfg: BatcherConfig) -> Self {
+        DynamicBatcher { cfg, rx, pending: None }
+    }
+
+    /// Block for the next batch. Returns `None` when the channel is
+    /// closed and drained.
+    pub fn next_batch(&mut self) -> Option<Vec<GenerateRequest>> {
+        let mut batch = Vec::with_capacity(self.cfg.max_batch);
+        if let Some(p) = self.pending.take() {
+            batch.push(p);
+        }
+        if batch.is_empty() {
+            // Block for the first request.
+            match self.rx.recv() {
+                Ok(req) => batch.push(req),
+                Err(_) => return None,
+            }
+        }
+        // Fill up to max_batch within the deadline.
+        let deadline = Instant::now() + self.cfg.max_wait;
+        while batch.len() < self.cfg.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match self.rx.recv_timeout(deadline - now) {
+                Ok(req) => batch.push(req),
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => break,
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        Some(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    fn req(id: u64, tx: &std::sync::mpsc::Sender<super::super::request::GenerateResponse>) -> GenerateRequest {
+        GenerateRequest {
+            id,
+            variant: "v".into(),
+            prompt: vec![1],
+            max_new_tokens: 1,
+            respond_to: tx.clone(),
+            enqueued_at: Instant::now(),
+        }
+    }
+
+    #[test]
+    fn batches_respect_max_batch() {
+        let (tx, rx) = channel();
+        let (rtx, _rrx) = channel();
+        for i in 0..10 {
+            tx.send(req(i, &rtx)).unwrap();
+        }
+        drop(tx);
+        let mut b = DynamicBatcher::new(
+            rx,
+            BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(5) },
+        );
+        let b1 = b.next_batch().unwrap();
+        assert_eq!(b1.len(), 4);
+        let b2 = b.next_batch().unwrap();
+        assert_eq!(b2.len(), 4);
+        let b3 = b.next_batch().unwrap();
+        assert_eq!(b3.len(), 2);
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn preserves_fifo_order() {
+        let (tx, rx) = channel();
+        let (rtx, _rrx) = channel();
+        for i in 0..6 {
+            tx.send(req(i, &rtx)).unwrap();
+        }
+        drop(tx);
+        let mut b = DynamicBatcher::new(
+            rx,
+            BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(1) },
+        );
+        let batch = b.next_batch().unwrap();
+        let ids: Vec<u64> = batch.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn deadline_bounds_wait() {
+        let (tx, rx) = channel();
+        let (rtx, _rrx) = channel();
+        tx.send(req(0, &rtx)).unwrap();
+        let mut b = DynamicBatcher::new(
+            rx,
+            BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(10) },
+        );
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(t0.elapsed() < Duration::from_millis(500), "waited too long");
+        drop(tx);
+        assert!(b.next_batch().is_none());
+    }
+}

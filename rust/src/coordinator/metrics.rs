@@ -1,0 +1,163 @@
+//! Serving metrics: counters + latency histogram, lock-protected and
+//! cheap to clone snapshots out of.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Exponential-bucket latency histogram (microseconds).
+#[derive(Clone, Debug, Default)]
+pub struct Histogram {
+    /// Bucket i counts samples in [2^i, 2^{i+1}) µs; 40 buckets ≈ 12 days.
+    buckets: Vec<u64>,
+    count: u64,
+    sum_us: u64,
+    max_us: u64,
+}
+
+impl Histogram {
+    pub fn record(&mut self, d: Duration) {
+        let us = d.as_micros().min(u128::from(u64::MAX)) as u64;
+        let idx = (64 - us.max(1).leading_zeros()) as usize;
+        if self.buckets.len() <= idx {
+            self.buckets.resize(idx + 1, 0);
+        }
+        self.buckets[idx] += 1;
+        self.count += 1;
+        self.sum_us += us;
+        self.max_us = self.max_us.max(us);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> Duration {
+        if self.count == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_micros(self.sum_us / self.count)
+    }
+
+    pub fn max(&self) -> Duration {
+        Duration::from_micros(self.max_us)
+    }
+
+    /// Upper bound of the bucket containing the p-th percentile.
+    pub fn percentile(&self, p: f64) -> Duration {
+        if self.count == 0 {
+            return Duration::ZERO;
+        }
+        let target = ((self.count as f64) * p / 100.0).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return Duration::from_micros(1u64 << i);
+            }
+        }
+        self.max()
+    }
+}
+
+/// Aggregate serving metrics.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    inner: Mutex<MetricsInner>,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct MetricsInner {
+    pub requests: u64,
+    pub tokens_generated: u64,
+    pub batches: u64,
+    pub batch_size_sum: u64,
+    pub queue_latency: Histogram,
+    pub e2e_latency: Histogram,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_batch(&self, batch_size: usize) {
+        let mut m = self.inner.lock().unwrap();
+        m.batches += 1;
+        m.batch_size_sum += batch_size as u64;
+    }
+
+    pub fn record_request(&self, tokens: usize, queue: Duration, e2e: Duration) {
+        let mut m = self.inner.lock().unwrap();
+        m.requests += 1;
+        m.tokens_generated += tokens as u64;
+        m.queue_latency.record(queue);
+        m.e2e_latency.record(e2e);
+    }
+
+    pub fn snapshot(&self) -> MetricsInner {
+        self.inner.lock().unwrap().clone()
+    }
+
+    pub fn report(&self) -> String {
+        let m = self.snapshot();
+        let mean_batch = if m.batches > 0 {
+            m.batch_size_sum as f64 / m.batches as f64
+        } else {
+            0.0
+        };
+        format!(
+            "requests={} tokens={} batches={} mean_batch={:.2} \
+             queue(mean={:?} p95={:?}) e2e(mean={:?} p95={:?} max={:?})",
+            m.requests,
+            m.tokens_generated,
+            m.batches,
+            mean_batch,
+            m.queue_latency.mean(),
+            m.queue_latency.percentile(95.0),
+            m.e2e_latency.mean(),
+            m.e2e_latency.percentile(95.0),
+            m.e2e_latency.max(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_percentiles_ordered() {
+        let mut h = Histogram::default();
+        for us in [10u64, 20, 40, 80, 160, 320, 640, 1280, 2560, 100_000] {
+            h.record(Duration::from_micros(us));
+        }
+        assert_eq!(h.count(), 10);
+        assert!(h.percentile(50.0) <= h.percentile(95.0));
+        assert!(h.percentile(95.0) <= h.max() * 2);
+        assert!(h.mean() > Duration::from_micros(100));
+    }
+
+    #[test]
+    fn metrics_aggregate() {
+        let m = Metrics::new();
+        m.record_batch(4);
+        m.record_batch(2);
+        for _ in 0..6 {
+            m.record_request(5, Duration::from_micros(50), Duration::from_millis(1));
+        }
+        let s = m.snapshot();
+        assert_eq!(s.requests, 6);
+        assert_eq!(s.tokens_generated, 30);
+        assert_eq!(s.batches, 2);
+        assert!(m.report().contains("requests=6"));
+    }
+
+    #[test]
+    fn empty_metrics_safe() {
+        let m = Metrics::new();
+        let s = m.snapshot();
+        assert_eq!(s.requests, 0);
+        assert_eq!(s.e2e_latency.mean(), Duration::ZERO);
+        assert!(!m.report().is_empty());
+    }
+}

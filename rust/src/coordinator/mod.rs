@@ -1,0 +1,30 @@
+//! L3 coordinator: the serving system around the compressed models.
+//!
+//! Architecture (vllm-router-like; std::thread + mpsc — the build is
+//! offline so no tokio, and the request path is synchronous channel
+//! passing):
+//!
+//! ```text
+//!   clients ──> Router ──> per-variant queue ──> DynamicBatcher
+//!                                                    │ (max batch / deadline)
+//!                                                    v
+//!                                              Worker thread
+//!                                         (prefill + decode loop,
+//!                                          KV-cache slots, metrics)
+//!                                                    │
+//!   clients <── response channels <──────────────────┘
+//! ```
+//!
+//! The paper's contribution lives in the *weights* (L1/L2); the
+//! coordinator is the production harness that turns the compressed model
+//! into a service and measures the Table-4 runtime story end to end.
+
+pub mod request;
+pub mod batcher;
+pub mod metrics;
+pub mod server;
+
+pub use batcher::{BatcherConfig, DynamicBatcher};
+pub use metrics::Metrics;
+pub use request::{GenerateRequest, GenerateResponse, RequestId};
+pub use server::{Coordinator, CoordinatorConfig};

@@ -1,0 +1,62 @@
+//! Request/response types crossing the coordinator boundary.
+
+use std::sync::mpsc::Sender;
+
+/// Monotonically increasing request identifier.
+pub type RequestId = u64;
+
+/// A text-generation request.
+#[derive(Debug)]
+pub struct GenerateRequest {
+    pub id: RequestId,
+    /// Which model variant serves this request ("dense", "blast_50", …).
+    pub variant: String,
+    pub prompt: Vec<usize>,
+    pub max_new_tokens: usize,
+    /// Channel the worker answers on.
+    pub respond_to: Sender<GenerateResponse>,
+    /// Enqueue timestamp (for latency accounting).
+    pub enqueued_at: std::time::Instant,
+}
+
+/// The completed generation.
+#[derive(Clone, Debug)]
+pub struct GenerateResponse {
+    pub id: RequestId,
+    pub tokens: Vec<usize>,
+    /// Tokens actually generated (≤ max_new_tokens).
+    pub generated: usize,
+    pub queue_time: std::time::Duration,
+    pub compute_time: std::time::Duration,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn request_response_round_trip() {
+        let (tx, rx) = channel();
+        let req = GenerateRequest {
+            id: 7,
+            variant: "blast".into(),
+            prompt: vec![1, 2, 3],
+            max_new_tokens: 4,
+            respond_to: tx,
+            enqueued_at: std::time::Instant::now(),
+        };
+        req.respond_to
+            .send(GenerateResponse {
+                id: req.id,
+                tokens: vec![1, 2, 3, 9],
+                generated: 1,
+                queue_time: Default::default(),
+                compute_time: Default::default(),
+            })
+            .unwrap();
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.id, 7);
+        assert_eq!(resp.tokens.len(), 4);
+    }
+}

@@ -1,0 +1,15 @@
+//! Synthetic workloads standing in for the paper's datasets (see
+//! DESIGN.md §3 for the substitution rationale):
+//!
+//! * [`corpus`] — Markov-grammar + sequence-task corpus ↔ WikiText /
+//!   SlimPajama;
+//! * [`images`] — procedurally generated class-conditional textures ↔
+//!   CIFAR / ImageNet classification;
+//! * [`diffusion`] — class-conditional structured 8×8 images ↔ the
+//!   ImageNet-256 generation task of Table 2;
+//! * [`zeroshot`] — choice-scoring task suites ↔ PIQA/HellaSwag/etc.
+
+pub mod corpus;
+pub mod images;
+pub mod diffusion;
+pub mod zeroshot;

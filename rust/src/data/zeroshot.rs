@@ -1,0 +1,233 @@
+//! Zero-shot choice-scoring task suites (standing in for PIQA, HellaSwag,
+//! WinoGrande, BoolQ, OBQA, ARC-e, ARC-c in Tables 3/12/13).
+//!
+//! Each task instance is a prompt plus K continuation choices; the model
+//! scores each choice by length-normalized log-likelihood and picks the
+//! argmax — the exact scoring protocol of lm-eval-harness. Tasks are
+//! built from the same Markov/skill statistics as the training corpus so
+//! a well-trained LM materially beats chance, and compression-induced
+//! damage shows up as accuracy loss.
+
+use crate::data::corpus::SyntheticCorpus;
+use crate::tensor::Rng;
+
+/// One multiple-choice instance.
+#[derive(Clone, Debug)]
+pub struct ChoiceTask {
+    pub prompt: Vec<usize>,
+    pub choices: Vec<Vec<usize>>,
+    pub answer: usize,
+}
+
+/// A named suite of instances.
+#[derive(Clone, Debug)]
+pub struct TaskSuite {
+    pub name: String,
+    pub tasks: Vec<ChoiceTask>,
+}
+
+/// Build the 7 task suites over a corpus's statistics.
+pub fn build_suites(corpus: &SyntheticCorpus, per_suite: usize) -> Vec<TaskSuite> {
+    let vocab = corpus.vocab;
+    let mut rng = Rng::new(0x5EED);
+
+    // Empirical bigram table from the training split (the "world
+    // knowledge" the tasks probe).
+    let mut bigram = vec![vec![0u32; vocab]; vocab];
+    for w in corpus.train.windows(2) {
+        bigram[w[0]][w[1]] += 1;
+    }
+    let top_next = |s: usize| -> usize {
+        let row = &bigram[s];
+        let mut best = 0;
+        for (i, &c) in row.iter().enumerate() {
+            if c > row[best] {
+                best = i;
+            }
+        }
+        best
+    };
+
+    let mut suites = Vec::new();
+
+    // Suite 1 "continuation" (PIQA-like): pick the likely continuation of
+    // a corpus fragment.
+    suites.push(TaskSuite {
+        name: "continuation".into(),
+        tasks: (0..per_suite)
+            .map(|_| {
+                let start = rng.below(corpus.train.len().saturating_sub(8));
+                let prompt = corpus.train[start..start + 4].to_vec();
+                let state = prompt[3];
+                let good = vec![top_next(state)];
+                let mut bad = vec![(top_next(state) + vocab / 2) % vocab];
+                if bad == good {
+                    bad[0] = (bad[0] + 1) % vocab;
+                }
+                shuffled_choice(prompt, vec![good, bad], &mut rng)
+            })
+            .collect(),
+    });
+
+    // Suite 2 "counting" (ARC-easy-like): continue an ascending run.
+    suites.push(TaskSuite {
+        name: "counting".into(),
+        tasks: (0..per_suite)
+            .map(|_| {
+                let start = 1 + rng.below(vocab - 8);
+                let prompt = vec![start, start + 1, start + 2];
+                let good = vec![start + 3];
+                let bad = vec![(start + 5) % vocab];
+                shuffled_choice(prompt, vec![good, bad], &mut rng)
+            })
+            .collect(),
+    });
+
+    // Suite 3 "descending" (ARC-challenge-like).
+    suites.push(TaskSuite {
+        name: "descending".into(),
+        tasks: (0..per_suite)
+            .map(|_| {
+                let start = 9 + rng.below(vocab - 10);
+                let prompt = vec![start, start - 1, start - 2];
+                let good = vec![start - 3];
+                let bad = vec![start.saturating_sub(6).max(1)];
+                shuffled_choice(prompt, vec![good, bad], &mut rng)
+            })
+            .collect(),
+    });
+
+    // Suite 4 "copy" (WinoGrande-like pattern completion): a b a -> b.
+    suites.push(TaskSuite {
+        name: "copy".into(),
+        tasks: (0..per_suite)
+            .map(|_| {
+                let a = 1 + rng.below(vocab - 2);
+                let mut b = 1 + rng.below(vocab - 2);
+                if b == a {
+                    b = (b + 1) % vocab.max(2);
+                }
+                let prompt = vec![a, b, a];
+                let good = vec![b];
+                let bad = vec![(b + vocab / 3) % vocab];
+                shuffled_choice(prompt, vec![good, bad], &mut rng)
+            })
+            .collect(),
+    });
+
+    // Suite 5 "boolq": 2-way likely-vs-unlikely bigram judgment with a
+    // longer continuation (2 tokens).
+    suites.push(TaskSuite {
+        name: "bigram-judge".into(),
+        tasks: (0..per_suite)
+            .map(|_| {
+                let start = rng.below(corpus.train.len().saturating_sub(10));
+                let prompt = corpus.train[start..start + 3].to_vec();
+                let s = prompt[2];
+                let n1 = top_next(s);
+                let good = vec![n1, top_next(n1)];
+                let bad = vec![(n1 + vocab / 2) % vocab, rng.below(vocab)];
+                shuffled_choice(prompt, vec![good, bad], &mut rng)
+            })
+            .collect(),
+    });
+
+    // Suite 6 "obqa": 4-way continuation.
+    suites.push(TaskSuite {
+        name: "multi-choice".into(),
+        tasks: (0..per_suite)
+            .map(|_| {
+                let start = rng.below(corpus.train.len().saturating_sub(8));
+                let prompt = corpus.train[start..start + 4].to_vec();
+                let s = prompt[3];
+                let good = vec![top_next(s)];
+                let mut choices = vec![good];
+                for k in 1..4usize {
+                    let mut alt = (top_next(s) + k * vocab / 5 + 1) % vocab;
+                    if alt == top_next(s) {
+                        alt = (alt + 1) % vocab;
+                    }
+                    choices.push(vec![alt]);
+                }
+                shuffled_choice(prompt, choices, &mut rng)
+            })
+            .collect(),
+    });
+
+    // Suite 7 "hellaswag": longer prompt, 3-token continuations.
+    suites.push(TaskSuite {
+        name: "long-continuation".into(),
+        tasks: (0..per_suite)
+            .map(|_| {
+                let start = rng.below(corpus.train.len().saturating_sub(16));
+                let prompt = corpus.train[start..start + 6].to_vec();
+                let mut s = prompt[5];
+                let mut good = Vec::new();
+                for _ in 0..3 {
+                    s = top_next(s);
+                    good.push(s);
+                }
+                let bad: Vec<usize> = (0..3).map(|_| rng.below(vocab)).collect();
+                shuffled_choice(prompt, vec![good, bad], &mut rng)
+            })
+            .collect(),
+    });
+
+    suites.truncate(7);
+    suites
+}
+
+fn shuffled_choice(prompt: Vec<usize>, mut choices: Vec<Vec<usize>>, rng: &mut Rng) -> ChoiceTask {
+    // choices[0] is the gold answer pre-shuffle.
+    let gold = choices[0].clone();
+    rng.shuffle(&mut choices);
+    let answer = choices.iter().position(|c| *c == gold).unwrap();
+    ChoiceTask { prompt, choices, answer }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seven_suites_built() {
+        let c = SyntheticCorpus::generate(64, 10_000, 100);
+        let suites = build_suites(&c, 20);
+        assert_eq!(suites.len(), 7);
+        for s in &suites {
+            assert_eq!(s.tasks.len(), 20);
+            for t in &s.tasks {
+                assert!(t.answer < t.choices.len());
+                assert!(t.choices.len() >= 2);
+                assert!(!t.prompt.is_empty());
+                // Gold choice is unique.
+                let gold = &t.choices[t.answer];
+                assert_eq!(t.choices.iter().filter(|c| *c == gold).count(), 1);
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let c = SyntheticCorpus::generate(64, 5_000, 100);
+        let a = build_suites(&c, 5);
+        let b = build_suites(&c, 5);
+        assert_eq!(a[0].tasks[0].prompt, b[0].tasks[0].prompt);
+        assert_eq!(a[3].tasks[2].answer, b[3].tasks[2].answer);
+    }
+
+    #[test]
+    fn answers_not_constant() {
+        // Shuffling must distribute the gold index.
+        let c = SyntheticCorpus::generate(64, 5_000, 100);
+        let suites = build_suites(&c, 30);
+        for s in &suites {
+            let first = s.tasks[0].answer;
+            assert!(
+                s.tasks.iter().any(|t| t.answer != first),
+                "suite {} has constant answer position",
+                s.name
+            );
+        }
+    }
+}

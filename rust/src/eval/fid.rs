@@ -1,0 +1,254 @@
+//! Fréchet-distance metrics for the diffusion experiment (Table 2).
+//!
+//! The paper reports FID/sFID (Fréchet distance between Inception
+//! features of generated vs. reference images) and IS. Our substitution
+//! (DESIGN.md §3): fit Gaussians directly in pixel space (FID analogue)
+//! and on second-order feature maps (sFID analogue), computed *exactly*
+//! via the closed form
+//! `d² = ‖μ₁ − μ₂‖² + Tr(Σ₁ + Σ₂ − 2(Σ₁ Σ₂)^{1/2})`,
+//! with the matrix square root from the symmetric eigendecomposition of
+//! the (symmetrized) product. The IS analogue uses the TinyViT-style
+//! entropy formulation over a probe classifier's predictions.
+
+use crate::linalg::svd::svd;
+use crate::tensor::{matmul, matmul_tn, Matrix};
+
+/// Gaussian fit of a sample set (rows = samples).
+pub struct GaussianFit {
+    pub mean: Vec<f64>,
+    pub cov: Matrix,
+}
+
+/// Fit mean and covariance (with small ridge for stability).
+pub fn fit_gaussian(samples: &Matrix) -> GaussianFit {
+    let (n, d) = samples.shape();
+    assert!(n >= 2, "need at least 2 samples");
+    let mut mean = vec![0.0f64; d];
+    for i in 0..n {
+        for (m, v) in mean.iter_mut().zip(samples.row(i)) {
+            *m += *v as f64;
+        }
+    }
+    for m in mean.iter_mut() {
+        *m /= n as f64;
+    }
+    let mut centered = samples.clone();
+    for i in 0..n {
+        let row = centered.row_mut(i);
+        for (v, m) in row.iter_mut().zip(&mean) {
+            *v -= *m as f32;
+        }
+    }
+    let mut cov = matmul_tn(&centered, &centered);
+    cov.scale_inplace(1.0 / (n - 1) as f32);
+    for i in 0..d {
+        *cov.at_mut(i, i) += 1e-5;
+    }
+    GaussianFit { mean, cov }
+}
+
+/// Symmetric PSD matrix square root via SVD (for symmetric PSD input the
+/// SVD coincides with the eigendecomposition).
+fn sqrtm_psd(a: &Matrix) -> Matrix {
+    let d = svd(a);
+    // A = U diag(s) V^T with U ≈ V for symmetric PSD; sqrt = U diag(√s) U^T.
+    let n = a.rows;
+    let mut us = d.u.clone();
+    for i in 0..n {
+        let row = us.row_mut(i);
+        for (k, sv) in d.s.iter().enumerate() {
+            row[k] *= sv.max(0.0).sqrt();
+        }
+    }
+    crate::tensor::matmul_nt(&us, &d.u)
+}
+
+/// Exact Fréchet distance between two Gaussian fits.
+pub fn frechet_distance(a: &GaussianFit, b: &GaussianFit) -> f64 {
+    assert_eq!(a.mean.len(), b.mean.len());
+    let mean_term: f64 = a
+        .mean
+        .iter()
+        .zip(&b.mean)
+        .map(|(x, y)| (x - y) * (x - y))
+        .sum();
+    let tr_a: f64 = a.cov.diagonal().iter().map(|&v| v as f64).sum();
+    let tr_b: f64 = b.cov.diagonal().iter().map(|&v| v as f64).sum();
+    // (Σ₁ Σ₂)^{1/2}: symmetrize the product before the PSD sqrt — for
+    // commuting/near-commuting covariances this matches the exact value,
+    // and the symmetrization bounds numerical asymmetry.
+    let prod = matmul(&a.cov, &b.cov);
+    let sym = prod.add(&prod.transpose()).scale(0.5);
+    let sqrt = sqrtm_psd(&sym);
+    let tr_sqrt: f64 = sqrt.diagonal().iter().map(|&v| v as f64).sum();
+    (mean_term + tr_a + tr_b - 2.0 * tr_sqrt).max(0.0)
+}
+
+/// FID analogue between two pixel-sample sets.
+pub fn fid_between(generated: &Matrix, reference: &Matrix) -> f64 {
+    frechet_distance(&fit_gaussian(generated), &fit_gaussian(reference))
+}
+
+/// sFID analogue: Fréchet distance on second-order (spatial-gradient)
+/// features, which weights structure over raw intensity — mirroring
+/// sFID's use of intermediate spatial features.
+pub fn sfid_analogue(generated: &Matrix, reference: &Matrix, img: usize) -> f64 {
+    let feat = |m: &Matrix| -> Matrix {
+        let n = m.rows;
+        // Horizontal + vertical finite differences, downsampled 2x.
+        let half = img / 2;
+        let mut out = Matrix::zeros(n, 2 * half * half);
+        for s in 0..n {
+            let px = m.row(s);
+            let orow = out.row_mut(s);
+            for i in 0..half {
+                for j in 0..half {
+                    let (ii, jj) = (i * 2, j * 2);
+                    let v = px[ii * img + jj];
+                    let dh = if jj + 1 < img { px[ii * img + jj + 1] - v } else { 0.0 };
+                    let dv = if ii + 1 < img { px[(ii + 1) * img + jj] - v } else { 0.0 };
+                    orow[i * half + j] = dh;
+                    orow[half * half + i * half + j] = dv;
+                }
+            }
+        }
+        out
+    };
+    fid_between(&feat(generated), &feat(reference))
+}
+
+/// Inception-Score analogue: `exp(E_x KL(p(y|x) || p(y)))` using a probe
+/// classifier's class probabilities (rows of `probs`, one per sample).
+pub fn inception_score_analogue(probs: &Matrix) -> f64 {
+    let (n, k) = probs.shape();
+    assert!(n > 0 && k > 1);
+    // Marginal p(y).
+    let mut marginal = vec![0.0f64; k];
+    for i in 0..n {
+        for (m, v) in marginal.iter_mut().zip(probs.row(i)) {
+            *m += *v as f64;
+        }
+    }
+    for m in marginal.iter_mut() {
+        *m /= n as f64;
+    }
+    let mut kl_sum = 0.0f64;
+    for i in 0..n {
+        let row = probs.row(i);
+        for (j, &p) in row.iter().enumerate() {
+            let p = p as f64;
+            if p > 1e-12 {
+                kl_sum += p * (p / marginal[j].max(1e-12)).ln();
+            }
+        }
+    }
+    (kl_sum / n as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    fn gaussian_samples(n: usize, d: usize, mean: f32, std: f32, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let mut m = rng.gaussian_matrix(n, d, std);
+        m.map_inplace(|v| v + mean);
+        m
+    }
+
+    #[test]
+    fn identical_distributions_near_zero() {
+        let a = gaussian_samples(400, 8, 0.0, 1.0, 800);
+        let b = gaussian_samples(400, 8, 0.0, 1.0, 801);
+        let fid = fid_between(&a, &b);
+        assert!(fid < 0.5, "fid {fid}");
+    }
+
+    #[test]
+    fn mean_shift_detected_quadratically() {
+        let a = gaussian_samples(400, 8, 0.0, 1.0, 802);
+        let b1 = gaussian_samples(400, 8, 1.0, 1.0, 803);
+        let b2 = gaussian_samples(400, 8, 2.0, 1.0, 804);
+        let f1 = fid_between(&a, &b1);
+        let f2 = fid_between(&a, &b2);
+        // ‖Δμ‖² scales 4x: 8 vs 32 expected.
+        assert!((f1 - 8.0).abs() < 2.0, "f1 {f1}");
+        assert!((f2 - 32.0).abs() < 5.0, "f2 {f2}");
+    }
+
+    #[test]
+    fn variance_mismatch_detected() {
+        let a = gaussian_samples(500, 6, 0.0, 1.0, 805);
+        let b = gaussian_samples(500, 6, 0.0, 2.0, 806);
+        let fid = fid_between(&a, &b);
+        // Per dim: 1 + 4 − 2·2 = 1 → total ≈ 6.
+        assert!((fid - 6.0).abs() < 2.0, "fid {fid}");
+    }
+
+    #[test]
+    fn frechet_symmetric() {
+        let a = gaussian_samples(300, 5, 0.0, 1.0, 807);
+        let b = gaussian_samples(300, 5, 0.7, 1.5, 808);
+        let f1 = fid_between(&a, &b);
+        let f2 = fid_between(&b, &a);
+        assert!((f1 - f2).abs() < 0.05 * f1.max(1.0), "{f1} vs {f2}");
+    }
+
+    #[test]
+    fn sfid_sensitive_to_structure_not_mean() {
+        let mut rng = Rng::new(809);
+        // Same mean, different spatial structure: stripes vs noise.
+        let img = 8;
+        let mut stripes = Matrix::zeros(200, 64);
+        for s in 0..200 {
+            let phase = rng.uniform_range(0.0, 6.28);
+            let row = stripes.row_mut(s);
+            for i in 0..8 {
+                for j in 0..8 {
+                    row[i * 8 + j] = ((i as f32) + phase).sin();
+                }
+            }
+        }
+        let noise = rng.gaussian_matrix(200, 64, 0.6);
+        let s1 = sfid_analogue(&stripes, &noise, img);
+        let stripes2 = {
+            let mut m = Matrix::zeros(200, 64);
+            for s in 0..200 {
+                let phase = rng.uniform_range(0.0, 6.28);
+                let row = m.row_mut(s);
+                for i in 0..8 {
+                    for j in 0..8 {
+                        row[i * 8 + j] = ((i as f32) + phase).sin();
+                    }
+                }
+            }
+            m
+        };
+        let s2 = sfid_analogue(&stripes, &stripes2, img);
+        assert!(s1 > 5.0 * s2.max(1e-6), "sfid structure blind: {s1} vs {s2}");
+    }
+
+    #[test]
+    fn inception_score_bounds() {
+        // Confident + diverse -> high IS; uniform -> 1.0.
+        let k = 4;
+        let mut confident = Matrix::zeros(8, k);
+        for i in 0..8 {
+            confident.set(i, i % k, 1.0);
+        }
+        let is_conf = inception_score_analogue(&confident);
+        assert!((is_conf - k as f64).abs() < 0.1, "IS {is_conf}");
+
+        let uniform = Matrix::from_fn(8, k, |_, _| 1.0 / k as f32);
+        let is_unif = inception_score_analogue(&uniform);
+        assert!((is_unif - 1.0).abs() < 1e-6);
+
+        // Confident but mode-collapsed -> 1.0 as well.
+        let mut collapsed = Matrix::zeros(8, k);
+        for i in 0..8 {
+            collapsed.set(i, 0, 1.0);
+        }
+        assert!((inception_score_analogue(&collapsed) - 1.0).abs() < 1e-6);
+    }
+}

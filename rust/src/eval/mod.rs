@@ -1,0 +1,15 @@
+//! Evaluation metrics: the quantities the paper's tables report.
+//!
+//! * [`perplexity`] — WikiText-style token perplexity (Fig. 5, Table 3);
+//! * [`zeroshot`] — length-normalized choice scoring accuracy
+//!   (Tables 3/12/13, Fig. 7);
+//! * [`fid`] — exact Fréchet distance between Gaussian fits + sFID and
+//!   Inception-Score analogues (Table 2).
+
+pub mod perplexity;
+pub mod zeroshot;
+pub mod fid;
+
+pub use fid::{frechet_distance, inception_score_analogue, sfid_analogue};
+pub use perplexity::perplexity;
+pub use zeroshot::{eval_suite, eval_suites, SuiteResult};

@@ -1,0 +1,74 @@
+//! Mirror of the paper's hyperparameter tables (Tables 5–11), scaled to
+//! the synthetic substrates. Documented constants so every experiment
+//! reads its settings from one place.
+
+use crate::nn::attention::StructureKind;
+
+/// Paper Table 5 (training from scratch) — scaled.
+pub mod from_scratch {
+    /// Epoch-equivalent optimizer steps at scale 1.
+    pub const LM_STEPS: [usize; 3] = [60, 300, 900];
+    pub const VIT_STEPS: [usize; 3] = [40, 250, 800];
+    pub const LM_LR: f32 = 3e-3;
+    pub const VIT_LR: f32 = 2e-3;
+    pub const WEIGHT_DECAY: f32 = 0.01; // paper: 0.05 at ViT scale
+}
+
+/// Paper Table 6 (re-training) — scaled.
+pub mod retrain {
+    pub const LM_STEPS: [usize; 3] = [40, 200, 600];
+    pub const LM_LR: f32 = 1e-3; // paper: 2e-4 at Llama scale
+}
+
+/// Paper Table 9-analogue: the BLAST settings used for the LLM
+/// compression rows (b fixed, r solved from the budget).
+pub mod llm_compress {
+    /// Paper fixes b = 16 for Llama-7B; our TinyLM uses b = 4 (d=64).
+    pub const BLAST_B: usize = 4;
+    pub const PRECGD_ITERS: [usize; 3] = [30, 120, 300];
+    pub const DELTA0: f32 = 0.1;
+}
+
+/// Structure grids per experiment (matched-budget sweeps).
+///
+/// The paper uses BLAST₃ for ViT; our d_model=64 models require b to
+/// divide every layer dimension, so we use b = 4 throughout (the paper's
+/// own Fig. 6 shows b = 3 vs b = 12 barely differ).
+pub fn scratch_structures(budget: f64) -> Vec<StructureKind> {
+    let b = 4usize;
+    let r_lr = ((budget * 64.0 * 64.0) / (64.0 + 64.0)) as usize;
+    let r_blast = ((budget * 64.0 * 64.0) / (64.0 + 64.0 + (b * b) as f64)) as usize;
+    let t_mon = ((budget * 64.0 * 64.0) / ((64.0 + 64.0) * b as f64)) as usize;
+    let t_bd = (budget * 64.0) as usize;
+    vec![
+        StructureKind::LowRank { r: r_lr.max(1) },
+        StructureKind::Monarch { b, t: t_mon.max(1) },
+        StructureKind::BlockDiag { b, t: t_bd.max(1) },
+        StructureKind::Blast { b, r: r_blast.max(1) },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scratch_structures_budgeted() {
+        for budget in [0.3, 0.5, 0.7] {
+            let list = scratch_structures(budget);
+            assert_eq!(list.len(), 4);
+            // BLAST config exists and divides d_model=63? b=3 divides 63?
+            // d_model is 64 in LmConfig::tiny — b=3 does not divide 64;
+            // fig4/table1 use d_model that b divides (checked there).
+            for s in &list {
+                match s {
+                    StructureKind::LowRank { r } => assert!(*r >= 1),
+                    StructureKind::Blast { r, .. } => assert!(*r >= 1),
+                    StructureKind::Monarch { t, .. } => assert!(*t >= 1),
+                    StructureKind::BlockDiag { t, .. } => assert!(*t >= 1),
+                    _ => {}
+                }
+            }
+        }
+    }
+}

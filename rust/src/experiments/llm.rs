@@ -1,0 +1,221 @@
+//! LLM compression experiments: Table 3 (perplexity + avg 0-shot,
+//! ±re-training), Tables 12/13 (per-task accuracy), Fig. 7 (accuracy vs
+//! compression ratio before/after re-training).
+
+use super::configs;
+use crate::data::corpus::SyntheticCorpus;
+use crate::data::zeroshot::build_suites;
+use crate::eval::{eval_suites, perplexity};
+use crate::factorize::{Compressor, Structure};
+use crate::nn::attention::StructureKind;
+use crate::nn::gpt::{LmConfig, TinyLM};
+use crate::tensor::Rng;
+use crate::train::{compress_lm, retrain_lm, train_lm, LmTrainConfig};
+use anyhow::Result;
+
+struct LlmBench {
+    corpus: SyntheticCorpus,
+    suites: Vec<crate::data::zeroshot::TaskSuite>,
+    dense: TinyLM,
+    ppl_windows: usize,
+}
+
+fn setup(scale: usize) -> LlmBench {
+    let (corpus_len, train_steps, per_suite, ppl_windows) = match scale {
+        0 => (10_000, 120, 12, 4),
+        1 => (30_000, 500, 40, 12),
+        _ => (80_000, 1500, 100, 24),
+    };
+    let corpus = SyntheticCorpus::generate(64, corpus_len, 2048);
+    let suites = build_suites(&corpus, per_suite);
+    let mut rng = Rng::new(1600);
+    let mut dense = TinyLM::new(LmConfig::tiny(StructureKind::Dense), &mut rng);
+    train_lm(
+        &mut dense,
+        &corpus.train_dataset(),
+        &LmTrainConfig { steps: train_steps, ..Default::default() },
+    );
+    LlmBench { corpus, suites, dense, ppl_windows }
+}
+
+fn eval_row(b: &LlmBench, model: &TinyLM) -> (f64, f64) {
+    let ppl = perplexity(model, &b.corpus.valid_dataset(), 32, b.ppl_windows);
+    let (_, avg) = eval_suites(model, &b.suites);
+    (ppl, avg)
+}
+
+/// Table 3 — the headline LLM compression table.
+pub fn table3(scale: usize) -> Result<()> {
+    let b = setup(scale);
+    let blast_iters = configs::llm_compress::PRECGD_ITERS[scale.min(2)];
+    let retrain_steps = configs::retrain::LM_STEPS[scale.min(2)];
+    let comp = Compressor { blast_iters, ..Default::default() };
+    let bb = configs::llm_compress::BLAST_B;
+
+    let (ppl0, acc0) = eval_row(&b, &b.dense);
+    println!(
+        "{:<6} {:<26} {:>10} {:>10} {:>12} {:>16}",
+        "CR", "Method", "#Params", "Retrained?", "ppl (↓)", "avg 0-shot (↑)"
+    );
+    println!(
+        "{:<6} {:<26} {:>10} {:>10} {:>12.2} {:>16.2}",
+        "0%", "Original", b.dense.num_params(), "N/A", ppl0, acc0
+    );
+
+    // 20% compression-only rows (paper's upper Table 3 block).
+    for s in [Structure::LowRank, Structure::Monarch { b: bb }, Structure::Blast { b: bb }] {
+        let mut m = b.dense.clone();
+        let rep = compress_lm(&mut m, s, 0.2, &comp);
+        let (ppl, acc) = eval_row(&b, &m);
+        println!(
+            "{:<6} {:<26} {:>10} {:>10} {:>12.2} {:>16.2}",
+            "20%",
+            s.name(),
+            rep.params_after,
+            "No",
+            ppl,
+            acc
+        );
+    }
+
+    // 50% compression + retraining rows.
+    for s in [
+        Structure::LowRank,
+        Structure::Monarch { b: bb },
+        Structure::BlockDiag { b: bb },
+        Structure::Blast { b: bb },
+    ] {
+        let mut m = b.dense.clone();
+        let rep = compress_lm(&mut m, s, 0.5, &comp);
+        retrain_lm(&mut m, &b.corpus.train_dataset(), retrain_steps);
+        let (ppl, acc) = eval_row(&b, &m);
+        println!(
+            "{:<6} {:<26} {:>10} {:>10} {:>12.2} {:>16.2}",
+            "50%",
+            s.name(),
+            rep.params_after,
+            "Yes",
+            ppl,
+            acc
+        );
+    }
+    Ok(())
+}
+
+fn per_task_table(b: &LlmBench, rows: Vec<(String, TinyLM)>) {
+    print!("{:<26}", "Method");
+    for s in &b.suites {
+        print!(" {:>16}", s.name);
+    }
+    println!(" {:>9}", "Average");
+    for (label, model) in rows {
+        let (results, avg) = eval_suites(&model, &b.suites);
+        print!("{label:<26}");
+        for r in &results {
+            print!(" {:>16.2}", r.accuracy);
+        }
+        println!(" {avg:>9.2}");
+    }
+}
+
+/// Table 12 — per-task 0-shot accuracy, compression only (10 %, 20 %).
+pub fn table12(scale: usize) -> Result<()> {
+    let b = setup(scale);
+    let comp = Compressor {
+        blast_iters: configs::llm_compress::PRECGD_ITERS[scale.min(2)],
+        ..Default::default()
+    };
+    let bb = configs::llm_compress::BLAST_B;
+    let mut rows = vec![("Original".to_string(), b.dense.clone())];
+    for ratio in [0.1, 0.2] {
+        for s in [Structure::LowRank, Structure::Monarch { b: bb }, Structure::Blast { b: 2 }, Structure::Blast { b: bb }] {
+            let mut m = b.dense.clone();
+            compress_lm(&mut m, s, ratio, &comp);
+            rows.push((format!("{} @{:.0}%", s.name(), ratio * 100.0), m));
+        }
+    }
+    per_task_table(&b, rows);
+    Ok(())
+}
+
+/// Table 13 — per-task 0-shot after re-training (20 %, 50 %).
+pub fn table13(scale: usize) -> Result<()> {
+    let b = setup(scale);
+    let comp = Compressor {
+        blast_iters: configs::llm_compress::PRECGD_ITERS[scale.min(2)],
+        ..Default::default()
+    };
+    let retrain_steps = configs::retrain::LM_STEPS[scale.min(2)];
+    let bb = configs::llm_compress::BLAST_B;
+    let mut rows = vec![("Original".to_string(), b.dense.clone())];
+    for (ratio, structures) in [
+        (0.2, vec![Structure::Blast { b: bb }]),
+        (
+            0.5,
+            vec![
+                Structure::LowRank,
+                Structure::Monarch { b: bb },
+                Structure::BlockDiag { b: bb },
+                Structure::Blast { b: bb },
+            ],
+        ),
+    ] {
+        for s in structures {
+            let mut m = b.dense.clone();
+            compress_lm(&mut m, s, ratio, &comp);
+            retrain_lm(&mut m, &b.corpus.train_dataset(), retrain_steps);
+            rows.push((format!("{} @{:.0}%", s.name(), ratio * 100.0), m));
+        }
+    }
+    per_task_table(&b, rows);
+    Ok(())
+}
+
+/// Fig. 7 — avg 0-shot accuracy vs CR, before and after re-training.
+pub fn fig7(scale: usize) -> Result<()> {
+    let b = setup(scale);
+    let comp = Compressor {
+        blast_iters: configs::llm_compress::PRECGD_ITERS[scale.min(2)],
+        ..Default::default()
+    };
+    let retrain_steps = configs::retrain::LM_STEPS[scale.min(2)];
+    let bb = configs::llm_compress::BLAST_B;
+    let (_, acc0) = eval_row(&b, &b.dense);
+    println!("original avg 0-shot: {acc0:.2}%");
+    println!("{:>6} {:>18} {:>18}", "CR(%)", "before retrain", "after retrain");
+    for ratio in [0.1, 0.2, 0.3, 0.5, 0.7] {
+        let mut m = b.dense.clone();
+        if compress_lm(&mut m, Structure::Blast { b: bb }, ratio, &comp).layers_compressed == 0 {
+            println!("{:>6.0} {:>18} {:>18}", ratio * 100.0, "infeasible", "-");
+            continue;
+        }
+        let (_, acc_before) = eval_row(&b, &m);
+        retrain_lm(&mut m, &b.corpus.train_dataset(), retrain_steps);
+        let (_, acc_after) = eval_row(&b, &m);
+        println!("{:>6.0} {:>18.2} {:>18.2}", ratio * 100.0, acc_before, acc_after);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blast_beats_blockdiag_after_compression() {
+        // The Table 3 ordering at smoke scale: BLAST's post-compression
+        // perplexity is below Block-Diagonal's at the same CR.
+        let b = setup(0);
+        let comp = Compressor { blast_iters: 30, ..Default::default() };
+        let mut m_blast = b.dense.clone();
+        compress_lm(&mut m_blast, Structure::Blast { b: 4 }, 0.5, &comp);
+        let mut m_bd = b.dense.clone();
+        compress_lm(&mut m_bd, Structure::BlockDiag { b: 4 }, 0.5, &comp);
+        let (ppl_blast, _) = eval_row(&b, &m_blast);
+        let (ppl_bd, _) = eval_row(&b, &m_bd);
+        assert!(
+            ppl_blast < ppl_bd,
+            "BLAST ppl {ppl_blast} should beat Block-Diagonal {ppl_bd}"
+        );
+    }
+}

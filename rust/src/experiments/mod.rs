@@ -1,0 +1,100 @@
+//! Experiment harnesses — one per paper table/figure (see DESIGN.md §5).
+//!
+//! Each harness prints the same rows/series the paper reports; absolute
+//! numbers come from the synthetic substrates (DESIGN.md §3), the *shape*
+//! (who wins, by roughly what factor, where crossovers fall) is the
+//! reproduction target. `scale` trades runtime for fidelity: 0 = smoke,
+//! 1 = default, 2 = thorough.
+
+pub mod configs;
+pub mod convergence;
+pub mod scratch;
+pub mod compress;
+pub mod llm;
+pub mod runtime_exp;
+
+use anyhow::{bail, Result};
+
+/// Experiment registry entry.
+pub struct Experiment {
+    pub id: &'static str,
+    pub paper_ref: &'static str,
+    pub run: fn(scale: usize) -> Result<()>,
+}
+
+/// All registered experiments.
+pub fn registry() -> Vec<Experiment> {
+    vec![
+        Experiment { id: "fig3", paper_ref: "Fig. 3 — GD vs PrecGD on a low-rank target", run: convergence::fig3 },
+        Experiment { id: "fig9", paper_ref: "Fig. 9 — GD vs PrecGD on a BLAST target", run: convergence::fig9 },
+        Experiment { id: "fig4", paper_ref: "Fig. 4 — ViT-S from scratch, accuracy vs FLOPs", run: scratch::fig4 },
+        Experiment { id: "table1", paper_ref: "Table 1 — ViT-B from scratch, accuracy + relative FLOPs", run: scratch::table1 },
+        Experiment { id: "fig5", paper_ref: "Fig. 5 — GPT-2 perplexity–FLOPs trade-off", run: scratch::fig5 },
+        Experiment { id: "fig6", paper_ref: "Fig. 6 — ViT compress+retrain accuracy–FLOPs", run: compress::fig6 },
+        Experiment { id: "table2", paper_ref: "Table 2 — DiT 50% compression FID/sFID/IS", run: compress::table2 },
+        Experiment { id: "fig1", paper_ref: "Fig. 1 — DiT qualitative samples from shared noise", run: compress::fig1 },
+        Experiment { id: "table3", paper_ref: "Table 3 — LLM compression ± re-training", run: llm::table3 },
+        Experiment { id: "table12", paper_ref: "Table 12 — per-task 0-shot, compression only", run: llm::table12 },
+        Experiment { id: "table13", paper_ref: "Table 13 — per-task 0-shot after re-training", run: llm::table13 },
+        Experiment { id: "fig7", paper_ref: "Fig. 7 — accuracy vs CR, before/after re-training", run: llm::fig7 },
+        Experiment { id: "table4", paper_ref: "Table 4 — decode runtime vs CR and b", run: runtime_exp::table4 },
+    ]
+}
+
+/// Run one experiment by id.
+pub fn run(id: &str, scale: usize) -> Result<()> {
+    for e in registry() {
+        if e.id == id {
+            println!("=== {} ({}) ===", e.id, e.paper_ref);
+            return (e.run)(scale);
+        }
+    }
+    bail!(
+        "unknown experiment `{id}` (have: {})",
+        registry().iter().map(|e| e.id).collect::<Vec<_>>().join(", ")
+    )
+}
+
+/// Run everything.
+pub fn run_all(scale: usize) -> Result<()> {
+    for e in registry() {
+        println!("\n=== {} ({}) ===", e.id, e.paper_ref);
+        (e.run)(scale)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_ids_unique_and_complete() {
+        let ids: Vec<&str> = registry().iter().map(|e| e.id).collect();
+        let mut dedup = ids.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), ids.len(), "duplicate experiment ids");
+        for required in [
+            "fig3", "fig9", "fig4", "table1", "fig5", "fig6", "table2",
+            "fig1", "table3", "table12", "table13", "fig7", "table4",
+        ] {
+            assert!(ids.contains(&required), "missing {required}");
+        }
+    }
+
+    #[test]
+    fn unknown_id_is_error() {
+        assert!(run("bogus", 0).is_err());
+    }
+
+    #[test]
+    fn smoke_fig3() {
+        run("fig3", 0).unwrap();
+    }
+
+    #[test]
+    fn smoke_table4() {
+        run("table4", 0).unwrap();
+    }
+}

@@ -1,0 +1,209 @@
+//! Uniform compression interface over all structures.
+//!
+//! The experiment harnesses sweep `(structure, compression ratio)` pairs;
+//! this module hides the per-structure rank solving and factorization
+//! behind one call so the sweeps stay declarative.
+
+use super::baselines::{BlockDiagWeight, LowRankWeight, MonarchWeight};
+use super::precgd::{factorize_precgd, PrecGdOptions};
+use crate::blast::{budget, BlastMatrix};
+use crate::tensor::Matrix;
+
+/// The structured-matrix families evaluated in the paper (§4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Structure {
+    Dense,
+    LowRank,
+    Monarch { b: usize },
+    BlockDiag { b: usize },
+    Blast { b: usize },
+}
+
+impl Structure {
+    pub fn name(&self) -> String {
+        match self {
+            Structure::Dense => "Dense".into(),
+            Structure::LowRank => "Low-Rank".into(),
+            Structure::Monarch { b } => format!("Monarch(b={b})"),
+            Structure::BlockDiag { b } => format!("Block-Diagonal(b={b})"),
+            Structure::Blast { b } => format!("BLAST{b}"),
+        }
+    }
+}
+
+/// A compressed weight of any structure, plus bookkeeping.
+#[derive(Clone, Debug)]
+pub enum CompressedWeight {
+    Dense(Matrix),
+    LowRank(LowRankWeight),
+    Monarch(MonarchWeight),
+    BlockDiag(BlockDiagWeight),
+    Blast(BlastMatrix),
+}
+
+impl CompressedWeight {
+    pub fn to_dense(&self) -> Matrix {
+        match self {
+            CompressedWeight::Dense(m) => m.clone(),
+            CompressedWeight::LowRank(w) => w.to_dense(),
+            CompressedWeight::Monarch(w) => w.to_dense(),
+            CompressedWeight::BlockDiag(w) => w.to_dense(),
+            CompressedWeight::Blast(w) => w.to_dense(),
+        }
+    }
+
+    pub fn num_params(&self) -> usize {
+        match self {
+            CompressedWeight::Dense(m) => m.len(),
+            CompressedWeight::LowRank(w) => w.num_params(),
+            CompressedWeight::Monarch(w) => w.num_params(),
+            CompressedWeight::BlockDiag(w) => w.num_params(),
+            CompressedWeight::Blast(w) => w.num_params(),
+        }
+    }
+
+    /// `y = X A^T` — the linear-layer forward for any structure.
+    pub fn matmul_act(&self, x: &Matrix) -> Matrix {
+        match self {
+            CompressedWeight::Dense(m) => crate::tensor::matmul_nt(x, m),
+            CompressedWeight::LowRank(w) => w.matmul_act(x),
+            CompressedWeight::Monarch(w) => w.matmul_act(x),
+            CompressedWeight::BlockDiag(w) => w.matmul_act(x),
+            CompressedWeight::Blast(w) => w.matmul_act(x),
+        }
+    }
+
+    /// Relative reconstruction error vs. the original weight.
+    pub fn rel_error(&self, original: &Matrix) -> f64 {
+        let d = self.to_dense();
+        d.sub(original).fro_norm() as f64 / (original.fro_norm() as f64).max(1e-30)
+    }
+}
+
+/// Compression engine: given a dense weight and a target ratio, produce
+/// the compressed representation for a structure.
+#[derive(Clone, Debug)]
+pub struct Compressor {
+    /// PrecGD iterations for BLAST factorization (paper: K=300 for Llama,
+    /// K=500 for DiT; tests use fewer).
+    pub blast_iters: usize,
+    pub delta0: f32,
+    pub seed: u64,
+}
+
+impl Default for Compressor {
+    fn default() -> Self {
+        Compressor { blast_iters: 150, delta0: 0.1, seed: 0 }
+    }
+}
+
+impl Compressor {
+    /// Compress `a` with `structure` at compression `ratio` (fraction of
+    /// parameters removed). Returns `None` if the structure cannot meet
+    /// the budget (e.g. rank would be 0).
+    pub fn compress(
+        &self,
+        a: &Matrix,
+        structure: Structure,
+        ratio: f64,
+    ) -> Option<CompressedWeight> {
+        let (m, n) = a.shape();
+        match structure {
+            Structure::Dense => Some(CompressedWeight::Dense(a.clone())),
+            Structure::LowRank => {
+                let r = budget::lowrank_rank_for_ratio(m, n, ratio)?;
+                Some(CompressedWeight::LowRank(LowRankWeight::compress(a, r)))
+            }
+            Structure::Monarch { b } => {
+                let t = budget::monarch_rank_for_ratio(m, n, b, ratio)?;
+                Some(CompressedWeight::Monarch(MonarchWeight::compress(a, b, t)))
+            }
+            Structure::BlockDiag { b } => {
+                let t = budget::blockdiag_rank_for_ratio(m, n, b, ratio)?;
+                Some(CompressedWeight::BlockDiag(BlockDiagWeight::compress(a, b, t)))
+            }
+            Structure::Blast { b } => {
+                let r = budget::blast_rank_for_ratio(m, n, b, ratio)?;
+                let res = factorize_precgd(
+                    a,
+                    &PrecGdOptions {
+                        b,
+                        r,
+                        iters: self.blast_iters,
+                        delta0: self.delta0,
+                        seed: self.seed,
+                        ..Default::default()
+                    },
+                );
+                Some(CompressedWeight::Blast(res.blast))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn all_structures_meet_budget() {
+        let mut rng = Rng::new(120);
+        let a = rng.gaussian_matrix(32, 32, 1.0);
+        let c = Compressor { blast_iters: 30, ..Default::default() };
+        let dense_params = 32 * 32;
+        for s in [
+            Structure::LowRank,
+            Structure::Monarch { b: 4 },
+            Structure::BlockDiag { b: 4 },
+            Structure::Blast { b: 4 },
+        ] {
+            let w = c.compress(&a, s, 0.5).unwrap_or_else(|| panic!("{s:?} failed"));
+            assert!(
+                w.num_params() <= dense_params / 2 + 64,
+                "{s:?}: {} params",
+                w.num_params()
+            );
+        }
+    }
+
+    #[test]
+    fn matmul_act_consistent_with_dense_reconstruction() {
+        let mut rng = Rng::new(121);
+        let a = rng.gaussian_matrix(16, 16, 1.0);
+        let x = rng.gaussian_matrix(3, 16, 1.0);
+        let c = Compressor { blast_iters: 20, ..Default::default() };
+        for s in [
+            Structure::Dense,
+            Structure::LowRank,
+            Structure::Monarch { b: 2 },
+            Structure::BlockDiag { b: 2 },
+            Structure::Blast { b: 2 },
+        ] {
+            let w = c.compress(&a, s, 0.4).unwrap();
+            let y = w.matmul_act(&x);
+            let y_ref = crate::tensor::matmul_nt(&x, &w.to_dense());
+            assert!(
+                y.sub(&y_ref).fro_norm() < 1e-3 * (1.0 + y_ref.fro_norm()),
+                "{s:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn infeasible_budget_returns_none() {
+        let mut rng = Rng::new(122);
+        let a = rng.gaussian_matrix(8, 8, 1.0);
+        let c = Compressor::default();
+        assert!(c.compress(&a, Structure::LowRank, 0.99).is_none());
+    }
+
+    #[test]
+    fn dense_passthrough_exact() {
+        let mut rng = Rng::new(123);
+        let a = rng.gaussian_matrix(8, 8, 1.0);
+        let c = Compressor::default();
+        let w = c.compress(&a, Structure::Dense, 0.0).unwrap();
+        assert!(w.rel_error(&a) < 1e-9);
+    }
+}

@@ -1,0 +1,183 @@
+//! The factorization objective (Eq. 4) and its gradients (Appendix A.2.1).
+//!
+//! `ℓ(U, V, s) = Σ_{i,j} ½ ‖A_{i,j} − U_i diag(s_{i,j}) V_j^T‖_F²`
+//!
+//! Gradients (concatenated-factor form):
+//! * `∇U_i = (U_i V̄_i^T − A_{i,*}) V̄_i`                        (Eq. 10)
+//! * `∇V_j = (Ū_j V_j^T − A_{*,j})^T Ū_j`                       (Eq. 11)
+//! * `∇s_{i,j} = ((U_i^T U_i) ⊙ (V_j^T V_j)) s_{i,j}
+//!               − diag(U_i^T A_{i,j} V_j)`                     (Eq. 15)
+
+use crate::blast::BlastMatrix;
+use crate::tensor::{matmul, matmul_nt, matmul_tn, Matrix};
+
+/// Eq. 4 evaluated over the full matrix: `½ ‖A − BLAST‖_F²`.
+pub fn blast_loss(target: &Matrix, x: &BlastMatrix) -> f64 {
+    assert_eq!(target.shape(), (x.m, x.n));
+    let rec = x.to_dense();
+    0.5 * target.sub(&rec).fro_norm_sq()
+}
+
+/// Gradient of Eq. 4 w.r.t. `U_i` (Eq. 10): `(U_i V̄_i^T − A_{i,*}) V̄_i`.
+pub fn grad_u(target: &Matrix, x: &BlastMatrix, i: usize) -> Matrix {
+    let v_bar = x.v_bar(i); // n×r
+    let a_row = target.block_row(i, x.b); // p×n
+    let resid = matmul_nt(&x.u[i], &v_bar).sub(&a_row); // p×n
+    matmul(&resid, &v_bar) // p×r
+}
+
+/// Gradient w.r.t. `V_j` (Eq. 11): `(Ū_j V_j^T − A_{*,j})^T Ū_j`.
+pub fn grad_v(target: &Matrix, x: &BlastMatrix, j: usize) -> Matrix {
+    let u_bar = x.u_bar(j); // m×r
+    let a_col = target.block_col(j, x.b); // m×q
+    let resid = matmul_nt(&u_bar, &x.v[j]).sub(&a_col); // m×q
+    matmul_tn(&resid, &u_bar) // q×r
+}
+
+/// Gradient w.r.t. `s_{i,j}` (Eq. 15):
+/// `W_{i,j} s_{i,j} − diag(U_i^T A_{i,j} V_j)` with
+/// `W_{i,j} = (U_i^T U_i) ⊙ (V_j^T V_j)`.
+pub fn grad_s(target: &Matrix, x: &BlastMatrix, i: usize, j: usize) -> Vec<f32> {
+    let w = gram_hadamard(&x.u[i], &x.v[j]); // r×r
+    let rhs = diag_utav(&x.u[i], &target.block(i, j, x.b, x.b), &x.v[j]); // r
+    let ws = crate::tensor::gemv(&w, &x.s[i][j]);
+    ws.iter().zip(&rhs).map(|(a, b)| a - b).collect()
+}
+
+/// `W_{i,j} = (U^T U) ⊙ (V^T V)` — the Gram-Hadamard matrix of Eq. 9,
+/// also the Lipschitz operator for the `s` update in Theorem 1.
+pub fn gram_hadamard(u: &Matrix, v: &Matrix) -> Matrix {
+    let gu = matmul_tn(u, u);
+    let gv = matmul_tn(v, v);
+    gu.hadamard(&gv)
+}
+
+/// `diag(U^T A V)` computed without forming the full r×r product:
+/// entry `k` is `u_k^T A v_k`.
+pub fn diag_utav(u: &Matrix, a: &Matrix, v: &Matrix) -> Vec<f32> {
+    let av = matmul(a, v); // p×r
+    let r = u.cols;
+    let mut out = vec![0.0f32; r];
+    for k in 0..r {
+        let mut acc = 0.0f64;
+        for t in 0..u.rows {
+            acc += (u.at(t, k) as f64) * (av.at(t, k) as f64);
+        }
+        out[k] = acc as f32;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    /// Numerical gradient check via central differences.
+    fn numeric_grad(
+        target: &Matrix,
+        x: &BlastMatrix,
+        perturb: impl Fn(&mut BlastMatrix, f32),
+    ) -> f64 {
+        let h = 1e-3f32;
+        let mut xp = x.clone();
+        perturb(&mut xp, h);
+        let mut xm = x.clone();
+        perturb(&mut xm, -h);
+        (blast_loss(target, &xp) - blast_loss(target, &xm)) / (2.0 * h as f64)
+    }
+
+    #[test]
+    fn grad_u_matches_numeric() {
+        let mut rng = Rng::new(80);
+        let x = BlastMatrix::random_init(6, 6, 2, 2, 0.5, &mut rng);
+        let target = rng.gaussian_matrix(6, 6, 1.0);
+        let g = grad_u(&target, &x, 0);
+        for (a, c) in [(0, 0), (1, 1), (2, 0)] {
+            let num = numeric_grad(&target, &x, |xx, h| {
+                *xx.u[0].at_mut(a, c) += h;
+            });
+            let ana = g.at(a, c) as f64;
+            assert!(
+                (num - ana).abs() < 2e-2 * (1.0 + ana.abs()),
+                "U grad ({a},{c}): numeric {num} vs analytic {ana}"
+            );
+        }
+    }
+
+    #[test]
+    fn grad_v_matches_numeric() {
+        let mut rng = Rng::new(81);
+        let x = BlastMatrix::random_init(6, 6, 2, 2, 0.5, &mut rng);
+        let target = rng.gaussian_matrix(6, 6, 1.0);
+        let g = grad_v(&target, &x, 1);
+        for (a, c) in [(0, 0), (1, 1), (2, 0)] {
+            let num = numeric_grad(&target, &x, |xx, h| {
+                *xx.v[1].at_mut(a, c) += h;
+            });
+            let ana = g.at(a, c) as f64;
+            assert!(
+                (num - ana).abs() < 2e-2 * (1.0 + ana.abs()),
+                "V grad ({a},{c}): numeric {num} vs analytic {ana}"
+            );
+        }
+    }
+
+    #[test]
+    fn grad_s_matches_numeric() {
+        let mut rng = Rng::new(82);
+        let x = BlastMatrix::random_init(6, 6, 2, 3, 0.5, &mut rng);
+        let target = rng.gaussian_matrix(6, 6, 1.0);
+        let g = grad_s(&target, &x, 1, 0);
+        for k in 0..3 {
+            let num = numeric_grad(&target, &x, |xx, h| {
+                xx.s[1][0][k] += h;
+            });
+            let ana = g[k] as f64;
+            assert!(
+                (num - ana).abs() < 2e-2 * (1.0 + ana.abs()),
+                "s grad [{k}]: numeric {num} vs analytic {ana}"
+            );
+        }
+    }
+
+    #[test]
+    fn loss_zero_at_exact_representation() {
+        let mut rng = Rng::new(83);
+        let x = BlastMatrix::random_init(8, 8, 2, 2, 1.0, &mut rng);
+        let target = x.to_dense();
+        assert!(blast_loss(&target, &x) < 1e-8);
+        // Gradients vanish at the optimum.
+        assert!(grad_u(&target, &x, 0).fro_norm() < 1e-3);
+        assert!(grad_v(&target, &x, 1).fro_norm() < 1e-3);
+        assert!(grad_s(&target, &x, 0, 1).iter().all(|g| g.abs() < 1e-3));
+    }
+
+    #[test]
+    fn gram_hadamard_psd() {
+        let mut rng = Rng::new(84);
+        let u = rng.gaussian_matrix(10, 4, 1.0);
+        let v = rng.gaussian_matrix(10, 4, 1.0);
+        let w = gram_hadamard(&u, &v);
+        // Schur product theorem: W is PSD. Check x^T W x >= 0 for random x.
+        for _ in 0..20 {
+            let x = rng.gaussian_vec(4, 1.0);
+            let wx = crate::tensor::gemv(&w, &x);
+            let quad: f64 = x.iter().zip(&wx).map(|(a, b)| (*a as f64) * (*b as f64)).sum();
+            assert!(quad >= -1e-4, "quad form {quad}");
+        }
+    }
+
+    #[test]
+    fn diag_utav_matches_full_product() {
+        let mut rng = Rng::new(85);
+        let u = rng.gaussian_matrix(7, 3, 1.0);
+        let a = rng.gaussian_matrix(7, 5, 1.0);
+        let v = rng.gaussian_matrix(5, 3, 1.0);
+        let d = diag_utav(&u, &a, &v);
+        let full = matmul(&matmul_tn(&u, &a), &v);
+        for k in 0..3 {
+            assert!((d[k] - full.at(k, k)).abs() < 1e-4);
+        }
+    }
+}

@@ -1,0 +1,24 @@
+//! Weight compression via factorization (paper §3.2).
+//!
+//! * [`loss`] — the block-wise Frobenius objective of Eq. 4 and its
+//!   gradients (Appendix A.2.1).
+//! * [`gd`] — plain alternating gradient descent (Eqs. 5–7) with the
+//!   Theorem-1 step-size rule.
+//! * [`precgd`] — Algorithm 2: preconditioned GD with the regularized
+//!   Gram-inverse preconditioners of Eqs. 8–9.
+//! * [`baselines`] — Low-Rank (truncated SVD), Monarch (per-block-column
+//!   shared-basis SVD), and Block-Diagonal compressors the paper compares
+//!   against.
+//! * [`compressor`] — a uniform `Compressor` interface + registry used by
+//!   the experiment harnesses.
+
+pub mod loss;
+pub mod gd;
+pub mod precgd;
+pub mod baselines;
+pub mod compressor;
+
+pub use compressor::{CompressedWeight, Compressor, Structure};
+pub use gd::{factorize_gd, GdOptions};
+pub use precgd::{factorize_precgd, PrecGdOptions};
+pub use loss::blast_loss;

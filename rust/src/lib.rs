@@ -1,0 +1,29 @@
+//! # blast-repro
+//!
+//! Full-system reproduction of **BLAST: Block-Level Adaptive Structured
+//! Matrices for Efficient Deep Neural Network Inference** (Lee, Kwon, Qu,
+//! Kim — NeurIPS 2024) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! * [`tensor`] / [`linalg`] — dense numeric substrate (from scratch).
+//! * [`blast`] — the BLAST matrix type and Algorithm 1 products.
+//! * [`factorize`] — Algorithm 2 (preconditioned GD factorization) and
+//!   the Low-Rank / Monarch / Block-Diagonal baseline compressors.
+//! * [`nn`] / [`train`] — structured-linear transformer stack with
+//!   Rust-native inference and training (manual backprop).
+//! * [`data`] / [`eval`] — synthetic workloads and the paper's metrics.
+//! * [`runtime`] — PJRT executor for AOT-compiled JAX/Pallas artifacts.
+//! * [`coordinator`] — the L3 serving system (router, batcher, KV cache).
+//! * [`experiments`] — one harness per paper table/figure.
+
+pub mod util;
+pub mod tensor;
+pub mod linalg;
+pub mod blast;
+pub mod factorize;
+pub mod nn;
+pub mod train;
+pub mod data;
+pub mod eval;
+pub mod runtime;
+pub mod coordinator;
+pub mod experiments;

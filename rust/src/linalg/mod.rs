@@ -1,0 +1,18 @@
+//! Numerical linear algebra substrate.
+//!
+//! The factorization algorithms (Algorithm 2, baseline compressors) need:
+//! * truncated SVD — the low-rank / Monarch baselines compress via SVD;
+//! * SPD solves — the preconditioners of Eqs. 8–9 are
+//!   `(G^T G + δI)^{-1}`, computed via Cholesky;
+//! * largest-singular-value estimates — Theorem 1's step-size rule is
+//!   `η ≤ 1/σ₁(·)`, estimated by power iteration.
+//!
+//! Everything is implemented from scratch (no BLAS/LAPACK dependency).
+
+pub mod qr;
+pub mod svd;
+pub mod solve;
+
+pub use qr::qr_decompose;
+pub use solve::{cholesky, spd_inverse, spd_solve_matrix};
+pub use svd::{sigma_max, svd, truncated_svd, Svd};

@@ -1,0 +1,137 @@
+//! Householder QR decomposition.
+//!
+//! Used for orthonormalizing bases (sanity checks on SVD output) and by
+//! the Monarch baseline's per-block factorization.
+
+use crate::tensor::Matrix;
+
+/// Thin QR: for `A (m×n)` with `m >= n`, returns `(Q, R)` with
+/// `Q (m×n)` having orthonormal columns and `R (n×n)` upper triangular,
+/// so `A = Q · R`.
+pub fn qr_decompose(a: &Matrix) -> (Matrix, Matrix) {
+    let (m, n) = a.shape();
+    assert!(m >= n, "thin QR requires rows >= cols, got {m}x{n}");
+    // Work on a column-major copy of A stored as R (m×n), accumulating
+    // Householder reflectors.
+    let mut r = a.clone();
+    // Store reflector vectors; v[k] has length m-k.
+    let mut reflectors: Vec<Vec<f32>> = Vec::with_capacity(n);
+
+    for k in 0..n {
+        // Build the Householder vector for column k below the diagonal.
+        let mut norm_sq = 0.0f64;
+        for i in k..m {
+            let x = r.at(i, k) as f64;
+            norm_sq += x * x;
+        }
+        let norm = norm_sq.sqrt() as f32;
+        let x0 = r.at(k, k);
+        let alpha = if x0 >= 0.0 { -norm } else { norm };
+        let mut v: Vec<f32> = (k..m).map(|i| r.at(i, k)).collect();
+        v[0] -= alpha;
+        let vnorm_sq: f64 = v.iter().map(|&x| (x as f64) * (x as f64)).sum();
+        if vnorm_sq > 1e-30 {
+            // Apply H = I - 2 v v^T / (v^T v) to R[k.., k..].
+            for j in k..n {
+                let mut dot = 0.0f64;
+                for (vi, i) in v.iter().zip(k..m) {
+                    dot += (*vi as f64) * (r.at(i, j) as f64);
+                }
+                let scale = (2.0 * dot / vnorm_sq) as f32;
+                for (vi, i) in v.iter().zip(k..m) {
+                    *r.at_mut(i, j) -= scale * vi;
+                }
+            }
+        }
+        reflectors.push(v);
+    }
+
+    // Q = H_0 H_1 ... H_{n-1} applied to the first n columns of I.
+    let mut q = Matrix::zeros(m, n);
+    for j in 0..n {
+        q.set(j, j, 1.0);
+    }
+    for k in (0..n).rev() {
+        let v = &reflectors[k];
+        let vnorm_sq: f64 = v.iter().map(|&x| (x as f64) * (x as f64)).sum();
+        if vnorm_sq <= 1e-30 {
+            continue;
+        }
+        for j in 0..n {
+            let mut dot = 0.0f64;
+            for (vi, i) in v.iter().zip(k..m) {
+                dot += (*vi as f64) * (q.at(i, j) as f64);
+            }
+            let scale = (2.0 * dot / vnorm_sq) as f32;
+            for (vi, i) in v.iter().zip(k..m) {
+                *q.at_mut(i, j) -= scale * vi;
+            }
+        }
+    }
+
+    // Zero the strictly-lower part of R and truncate to n×n.
+    let mut r_out = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in i..n {
+            r_out.set(i, j, r.at(i, j));
+        }
+    }
+    (q, r_out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{matmul, matmul_tn, Rng};
+
+    fn assert_close(a: &Matrix, b: &Matrix, tol: f32) {
+        assert_eq!(a.shape(), b.shape());
+        let scale = 1.0f32.max(b.max_abs());
+        for (x, y) in a.data.iter().zip(&b.data) {
+            assert!((x - y).abs() <= tol * scale, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn reconstructs() {
+        let mut rng = Rng::new(10);
+        for &(m, n) in &[(4, 4), (10, 6), (33, 17), (64, 64)] {
+            let a = rng.gaussian_matrix(m, n, 1.0);
+            let (q, r) = qr_decompose(&a);
+            assert_close(&matmul(&q, &r), &a, 1e-4);
+        }
+    }
+
+    #[test]
+    fn q_orthonormal() {
+        let mut rng = Rng::new(11);
+        let a = rng.gaussian_matrix(20, 12, 1.0);
+        let (q, _) = qr_decompose(&a);
+        let qtq = matmul_tn(&q, &q);
+        assert_close(&qtq, &Matrix::eye(12), 1e-4);
+    }
+
+    #[test]
+    fn r_upper_triangular() {
+        let mut rng = Rng::new(12);
+        let a = rng.gaussian_matrix(9, 9, 1.0);
+        let (_, r) = qr_decompose(&a);
+        for i in 0..9 {
+            for j in 0..i {
+                assert_eq!(r.at(i, j), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn rank_deficient_ok() {
+        // Column 1 = 2 * column 0: QR must still reconstruct.
+        let a = Matrix::from_fn(6, 3, |i, j| match j {
+            0 => (i + 1) as f32,
+            1 => 2.0 * (i + 1) as f32,
+            _ => (i as f32).sin(),
+        });
+        let (q, r) = qr_decompose(&a);
+        assert_close(&matmul(&q, &r), &a, 1e-4);
+    }
+}

@@ -1,0 +1,162 @@
+//! Cholesky factorization and SPD solves.
+//!
+//! The PrecGD preconditioners of Eqs. 8–9 are inverses of regularized Gram
+//! matrices `G + δI` (always symmetric positive definite for δ > 0), so a
+//! Cholesky solve is the right tool — O(r³/3) and unconditionally stable
+//! here.
+
+use crate::tensor::Matrix;
+use anyhow::{bail, Result};
+
+/// Lower-triangular Cholesky factor `L` with `A = L · L^T`.
+/// Errors if `A` is not (numerically) positive definite.
+pub fn cholesky(a: &Matrix) -> Result<Matrix> {
+    assert_eq!(a.rows, a.cols, "cholesky needs a square matrix");
+    let n = a.rows;
+    let mut l = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a.at(i, j) as f64;
+            for k in 0..j {
+                sum -= (l.at(i, k) as f64) * (l.at(j, k) as f64);
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    bail!("matrix not positive definite at pivot {i} (value {sum})");
+                }
+                l.set(i, j, sum.sqrt() as f32);
+            } else {
+                l.set(i, j, (sum / l.at(j, j) as f64) as f32);
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Solve `A X = B` for SPD `A` via Cholesky (`X` returned, `B` is n×k).
+pub fn spd_solve_matrix(a: &Matrix, b: &Matrix) -> Result<Matrix> {
+    let l = cholesky(a)?;
+    let n = a.rows;
+    assert_eq!(b.rows, n);
+    let k = b.cols;
+    // Forward substitution: L Y = B.
+    let mut y = Matrix::zeros(n, k);
+    for i in 0..n {
+        for c in 0..k {
+            let mut sum = b.at(i, c) as f64;
+            for t in 0..i {
+                sum -= (l.at(i, t) as f64) * (y.at(t, c) as f64);
+            }
+            y.set(i, c, (sum / l.at(i, i) as f64) as f32);
+        }
+    }
+    // Back substitution: L^T X = Y.
+    let mut x = Matrix::zeros(n, k);
+    for i in (0..n).rev() {
+        for c in 0..k {
+            let mut sum = y.at(i, c) as f64;
+            for t in (i + 1)..n {
+                sum -= (l.at(t, i) as f64) * (x.at(t, c) as f64);
+            }
+            x.set(i, c, (sum / l.at(i, i) as f64) as f32);
+        }
+    }
+    Ok(x)
+}
+
+/// Inverse of an SPD matrix (used for the preconditioners `P = (G+δI)^{-1}`
+/// of Eqs. 8–9 when we want the explicit matrix; prefer `spd_solve_matrix`
+/// when only the product is needed).
+pub fn spd_inverse(a: &Matrix) -> Result<Matrix> {
+    spd_solve_matrix(a, &Matrix::eye(a.rows))
+}
+
+/// Solve `x A = b` from the right for SPD `A`, i.e. returns `B · A^{-1}`
+/// where `B` is k×n. Equivalent to solving `A X^T = B^T`.
+pub fn spd_solve_right(b: &Matrix, a: &Matrix) -> Result<Matrix> {
+    let xt = spd_solve_matrix(a, &b.transpose())?;
+    Ok(xt.transpose())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{matmul, matmul_nt, matmul_tn, Rng};
+
+    fn spd(n: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let g = rng.gaussian_matrix(n + 4, n, 1.0);
+        let mut a = matmul_tn(&g, &g);
+        for i in 0..n {
+            *a.at_mut(i, i) += 0.5; // keep well-conditioned
+        }
+        a
+    }
+
+    fn assert_close(a: &Matrix, b: &Matrix, tol: f32) {
+        assert_eq!(a.shape(), b.shape());
+        let scale = 1.0f32.max(b.max_abs());
+        for (x, y) in a.data.iter().zip(&b.data) {
+            assert!((x - y).abs() <= tol * scale, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let a = spd(8, 40);
+        let l = cholesky(&a).unwrap();
+        assert_close(&matmul_nt(&l, &l), &a, 1e-4);
+        // Strictly upper part must be zero.
+        for i in 0..8 {
+            for j in (i + 1)..8 {
+                assert_eq!(l.at(i, j), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn solve_matches_direct() {
+        let a = spd(10, 41);
+        let mut rng = Rng::new(42);
+        let b = rng.gaussian_matrix(10, 3, 1.0);
+        let x = spd_solve_matrix(&a, &b).unwrap();
+        assert_close(&matmul(&a, &x), &b, 1e-3);
+    }
+
+    #[test]
+    fn inverse_is_inverse() {
+        let a = spd(6, 43);
+        let inv = spd_inverse(&a).unwrap();
+        assert_close(&matmul(&a, &inv), &Matrix::eye(6), 1e-3);
+        assert_close(&matmul(&inv, &a), &Matrix::eye(6), 1e-3);
+    }
+
+    #[test]
+    fn right_solve() {
+        let a = spd(7, 44);
+        let mut rng = Rng::new(45);
+        let b = rng.gaussian_matrix(4, 7, 1.0);
+        let x = spd_solve_right(&b, &a).unwrap();
+        assert_close(&matmul(&x, &a), &b, 1e-3);
+    }
+
+    #[test]
+    fn non_pd_rejected() {
+        let mut a = Matrix::eye(3);
+        a.set(2, 2, -1.0);
+        assert!(cholesky(&a).is_err());
+    }
+
+    #[test]
+    fn regularization_rescues_singular() {
+        // Rank-1 Gram matrix is singular; + δI makes it solvable — exactly
+        // the Eq. 8/9 situation.
+        let v = Matrix::from_vec(3, 1, vec![1.0, 2.0, 3.0]);
+        let mut g = matmul_nt(&v, &v);
+        assert!(cholesky(&g).is_err() || g.at(0, 0) > 0.0); // singular case
+        for i in 0..3 {
+            *g.at_mut(i, i) += 0.1;
+        }
+        assert!(cholesky(&g).is_ok());
+    }
+}

@@ -1,0 +1,260 @@
+//! `blast` — CLI for the BLAST reproduction.
+//!
+//! Subcommands:
+//!   factorize        factorize a synthetic matrix (GD vs PrecGD demo)
+//!   compress         compress a trained TinyLM and report quality
+//!   train            train a TinyLM from scratch with a chosen structure
+//!   serve            start the coordinator and run a request load
+//!   generate         one-off generation through a trained model
+//!   experiment <id>  run a paper table/figure harness (or `all`)
+//!   bench-runtime    Table-4 matvec sweep at Llama shapes
+//!   info             artifact manifest + environment summary
+
+use anyhow::{bail, Result};
+use blast_repro::coordinator::{Coordinator, CoordinatorConfig};
+use blast_repro::data::corpus::SyntheticCorpus;
+use blast_repro::experiments;
+use blast_repro::factorize::{factorize_gd, factorize_precgd, GdOptions, PrecGdOptions};
+use blast_repro::nn::attention::StructureKind;
+use blast_repro::nn::gpt::{LmConfig, TinyLM};
+use blast_repro::tensor::{matmul_nt, Rng};
+use blast_repro::train::{train_lm, LmTrainConfig};
+use blast_repro::util::cli::Args;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() -> &'static str {
+    "usage: blast <factorize|compress|train|serve|generate|experiment|bench-runtime|info> [flags]\n\
+     flags are --name value; examples:\n\
+       blast experiment fig3 --scale 1\n\
+       blast experiment all --scale 0\n\
+       blast train --structure blast --b 4 --r 8 --steps 200\n\
+       blast compress --ratio 0.5 --structure blast\n\
+       blast serve --requests 32 --batch 8\n\
+       blast bench-runtime --reps 5"
+}
+
+fn parse_structure(args: &Args) -> Result<StructureKind> {
+    let b = args.get_usize("b", 4)?;
+    let r = args.get_usize("r", 8)?;
+    let t = args.get_usize("t", 4)?;
+    Ok(match args.get_or("structure", "dense") {
+        "dense" => StructureKind::Dense,
+        "lowrank" => StructureKind::LowRank { r },
+        "blast" => StructureKind::Blast { b, r },
+        "monarch" => StructureKind::Monarch { b, t },
+        "blockdiag" => StructureKind::BlockDiag { b, t },
+        other => bail!("unknown structure `{other}`"),
+    })
+}
+
+fn run() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else {
+        println!("{}", usage());
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..], &["verbose", "no-prec"])?;
+
+    match cmd.as_str() {
+        "factorize" => cmd_factorize(&args),
+        "compress" => cmd_compress(&args),
+        "train" => cmd_train(&args),
+        "serve" => cmd_serve(&args),
+        "generate" => cmd_generate(&args),
+        "experiment" => {
+            let id = args
+                .positional
+                .first()
+                .map(String::as_str)
+                .unwrap_or("all");
+            let scale = args.get_usize("scale", 1)?;
+            if id == "all" {
+                experiments::run_all(scale)
+            } else {
+                experiments::run(id, scale)
+            }
+        }
+        "bench-runtime" => {
+            let reps = args.get_usize("reps", 5)?;
+            experiments::runtime_exp::print_matvec_sweep(reps);
+            Ok(())
+        }
+        "info" => cmd_info(),
+        _ => {
+            println!("{}", usage());
+            bail!("unknown command `{cmd}`")
+        }
+    }
+}
+
+fn cmd_factorize(args: &Args) -> Result<()> {
+    let n = args.get_usize("n", 128)?;
+    let b = args.get_usize("b", 8)?;
+    let r = args.get_usize("r", 16)?;
+    let r_star = args.get_usize("r-star", 8)?;
+    let iters = args.get_usize("iters", 100)?;
+    let seed = args.get_u64("seed", 0)?;
+
+    let mut rng = Rng::new(seed);
+    let u = rng.gaussian_matrix(n, r_star, 1.0);
+    let v = rng.gaussian_matrix(n, r_star, 1.0);
+    let target = matmul_nt(&u, &v).scale(1.0 / (r_star as f32).sqrt());
+    println!("target: {n}x{n} rank-{r_star}; factorizing with b={b}, r={r}, {iters} iters");
+
+    if !args.has("no-prec") {
+        let res = factorize_precgd(
+            &target,
+            &PrecGdOptions { b, r, iters, seed, ..Default::default() },
+        );
+        println!("PrecGD (Algorithm 2): rel error {:.3e}", res.rel_error);
+        for (k, loss) in res.trace.iter().step_by((iters / 10).max(1)) {
+            println!("  iter {k:>4}: loss {loss:.3e}");
+        }
+    }
+    let res = factorize_gd(&target, &GdOptions { b, r, iters, seed, ..Default::default() });
+    println!("plain GD: rel error {:.3e}", res.rel_error);
+    Ok(())
+}
+
+fn cmd_compress(args: &Args) -> Result<()> {
+    use blast_repro::factorize::{Compressor, Structure};
+    let ratio = args.get_f64("ratio", 0.5)?;
+    let steps = args.get_usize("steps", 200)?;
+    let retrain_steps = args.get_usize("retrain-steps", 100)?;
+    let b = args.get_usize("b", 4)?;
+    let structure = match args.get_or("structure", "blast") {
+        "blast" => Structure::Blast { b },
+        "lowrank" => Structure::LowRank,
+        "monarch" => Structure::Monarch { b },
+        "blockdiag" => Structure::BlockDiag { b },
+        other => bail!("unknown structure `{other}`"),
+    };
+
+    println!("training dense TinyLM ({steps} steps)...");
+    let corpus = SyntheticCorpus::generate(64, 20_000, 2048);
+    let mut rng = Rng::new(args.get_u64("seed", 0)?);
+    let mut lm = TinyLM::new(LmConfig::tiny(StructureKind::Dense), &mut rng);
+    train_lm(&mut lm, &corpus.train_dataset(), &LmTrainConfig { steps, ..Default::default() });
+    let ppl0 = blast_repro::eval::perplexity(&lm, &corpus.valid_dataset(), 32, 8);
+    println!("dense valid perplexity: {ppl0:.2}");
+
+    let comp = Compressor { blast_iters: args.get_usize("iters", 120)?, ..Default::default() };
+    let report = blast_repro::train::compress_lm(&mut lm, structure, ratio, &comp);
+    println!(
+        "compressed {} layers: {} -> {} params ({:.1}% achieved), mean rel err {:.4}",
+        report.layers_compressed,
+        report.params_before,
+        report.params_after,
+        report.achieved_ratio() * 100.0,
+        report.mean_rel_error
+    );
+    let ppl1 = blast_repro::eval::perplexity(&lm, &corpus.valid_dataset(), 32, 8);
+    println!("compressed perplexity: {ppl1:.2}");
+    blast_repro::train::retrain_lm(&mut lm, &corpus.train_dataset(), retrain_steps);
+    let ppl2 = blast_repro::eval::perplexity(&lm, &corpus.valid_dataset(), 32, 8);
+    println!("re-trained perplexity: {ppl2:.2}");
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let structure = parse_structure(args)?;
+    let steps = args.get_usize("steps", 200)?;
+    let corpus = SyntheticCorpus::generate(64, 20_000, 2048);
+    let mut rng = Rng::new(args.get_u64("seed", 0)?);
+    let mut lm = TinyLM::new(LmConfig::tiny(structure), &mut rng);
+    println!(
+        "training {} ({} params, {} linear-FLOPs/token) for {steps} steps",
+        structure.name(),
+        lm.num_params(),
+        lm.flops_per_token()
+    );
+    let log = train_lm(
+        &mut lm,
+        &corpus.train_dataset(),
+        &LmTrainConfig { steps, log_every: (steps / 10).max(1), ..Default::default() },
+    );
+    let ppl = blast_repro::eval::perplexity(&lm, &corpus.valid_dataset(), 32, 8);
+    println!("final train loss {:.4}, valid perplexity {ppl:.2}", log.final_loss);
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let n_requests = args.get_usize("requests", 32)?;
+    let max_batch = args.get_usize("batch", 8)?;
+    let new_tokens = args.get_usize("tokens", 16)?;
+    let mut rng = Rng::new(args.get_u64("seed", 0)?);
+    let dense = TinyLM::new(LmConfig::tiny(StructureKind::Dense), &mut rng);
+    let blast = TinyLM::new(LmConfig::tiny(StructureKind::Blast { b: 4, r: 8 }), &mut rng);
+    let coord = Coordinator::new(
+        vec![("dense".into(), dense), ("blast".into(), blast)],
+        CoordinatorConfig {
+            batcher: blast_repro::coordinator::BatcherConfig {
+                max_batch,
+                ..Default::default()
+            },
+        },
+    );
+    println!("serving variants: {:?}", coord.variants());
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for i in 0..n_requests {
+        let variant = if i % 2 == 0 { "dense" } else { "blast" };
+        let (_, rx) = coord.submit(variant, vec![1 + i % 8, 2, 3], new_tokens)?;
+        handles.push(rx);
+    }
+    let mut tokens = 0usize;
+    for rx in handles {
+        let resp = rx.recv()?;
+        tokens += resp.generated;
+    }
+    let dt = t0.elapsed();
+    println!(
+        "{n_requests} requests, {tokens} tokens in {dt:?} ({:.1} tok/s)",
+        tokens as f64 / dt.as_secs_f64()
+    );
+    println!("metrics: {}", coord.metrics.report());
+    coord.shutdown();
+    Ok(())
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let structure = parse_structure(args)?;
+    let tokens = args.get_usize("tokens", 20)?;
+    let mut rng = Rng::new(args.get_u64("seed", 0)?);
+    let lm = TinyLM::new(LmConfig::tiny(structure), &mut rng);
+    let out = lm.generate(&[1, 2, 3], tokens);
+    println!("{out:?}");
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    println!("blast-repro — BLAST (NeurIPS 2024) reproduction");
+    println!("threads: {}", blast_repro::util::par::num_threads());
+    match blast_repro::runtime::Manifest::load("artifacts") {
+        Ok(m) => {
+            println!("artifacts ({}):", m.dir.display());
+            for a in &m.artifacts {
+                println!(
+                    "  {:<28} args={} outputs={} file={}",
+                    a.name,
+                    a.arg_shapes.len(),
+                    a.num_outputs,
+                    a.file.file_name().unwrap_or_default().to_string_lossy()
+                );
+            }
+        }
+        Err(e) => println!("artifacts: not built ({e}); run `make artifacts`"),
+    }
+    match blast_repro::runtime::PjrtEngine::cpu() {
+        Ok(engine) => println!("PJRT platform: {}", engine.platform()),
+        Err(e) => println!("PJRT unavailable: {e}"),
+    }
+    println!("experiments: {}", experiments::registry().iter().map(|e| e.id).collect::<Vec<_>>().join(", "));
+    Ok(())
+}

@@ -1,0 +1,221 @@
+//! Activations and the cross-entropy head, with backward passes.
+
+use crate::tensor::Matrix;
+
+/// GELU (tanh approximation, as used by GPT-2/ViT).
+pub fn gelu(x: &Matrix) -> Matrix {
+    x.map(gelu_scalar)
+}
+
+#[inline]
+pub fn gelu_scalar(x: f32) -> f32 {
+    const C: f32 = 0.7978845608; // sqrt(2/pi)
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+/// d/dx gelu(x).
+#[inline]
+pub fn gelu_grad_scalar(x: f32) -> f32 {
+    const C: f32 = 0.7978845608;
+    let x3 = 0.044715 * x * x * x;
+    let t = (C * (x + x3)).tanh();
+    let sech2 = 1.0 - t * t;
+    0.5 * (1.0 + t) + 0.5 * x * sech2 * C * (1.0 + 3.0 * 0.044715 * x * x)
+}
+
+/// Backward: `dx = dy ⊙ gelu'(x)`.
+pub fn gelu_backward(x: &Matrix, dy: &Matrix) -> Matrix {
+    assert_eq!(x.shape(), dy.shape());
+    let data = x
+        .data
+        .iter()
+        .zip(&dy.data)
+        .map(|(xv, dv)| gelu_grad_scalar(*xv) * dv)
+        .collect();
+    Matrix { rows: x.rows, cols: x.cols, data }
+}
+
+/// SiLU (used by Llama-style MLPs).
+pub fn silu(x: &Matrix) -> Matrix {
+    x.map(|v| v / (1.0 + (-v).exp()))
+}
+
+/// Row-wise softmax (numerically stable).
+pub fn softmax_rows(x: &Matrix) -> Matrix {
+    let mut out = x.clone();
+    for i in 0..out.rows {
+        let row = out.row_mut(i);
+        let max = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let mut sum = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - max).exp();
+            sum += *v;
+        }
+        let inv = 1.0 / sum.max(1e-30);
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+    }
+    out
+}
+
+/// Softmax backward given the softmax output `p` and upstream `dy`:
+/// `dx_i = p_i (dy_i − Σ_j p_j dy_j)` per row.
+pub fn softmax_backward(p: &Matrix, dy: &Matrix) -> Matrix {
+    assert_eq!(p.shape(), dy.shape());
+    let mut dx = Matrix::zeros(p.rows, p.cols);
+    for i in 0..p.rows {
+        let prow = p.row(i);
+        let drow = dy.row(i);
+        let dot: f32 = prow.iter().zip(drow).map(|(a, b)| a * b).sum();
+        let out = dx.row_mut(i);
+        for j in 0..prow.len() {
+            out[j] = prow[j] * (drow[j] - dot);
+        }
+    }
+    dx
+}
+
+/// Mean cross-entropy over rows of `logits` against integer `targets`.
+/// Returns `(loss, dlogits)` with `dlogits` already scaled by `1/rows`
+/// (the gradient of the mean loss). Rows with `target == ignore` are
+/// skipped (padding).
+pub fn cross_entropy(logits: &Matrix, targets: &[usize], ignore: usize) -> (f64, Matrix) {
+    assert_eq!(logits.rows, targets.len());
+    let p = softmax_rows(logits);
+    let mut dlogits = p.clone();
+    let mut loss = 0.0f64;
+    let mut count = 0usize;
+    for (i, &t) in targets.iter().enumerate() {
+        if t == ignore {
+            dlogits.row_mut(i).fill(0.0);
+            continue;
+        }
+        assert!(t < logits.cols, "target {t} out of vocab {}", logits.cols);
+        loss -= (p.at(i, t).max(1e-30) as f64).ln();
+        *dlogits.at_mut(i, t) -= 1.0;
+        count += 1;
+    }
+    let count = count.max(1);
+    loss /= count as f64;
+    dlogits.scale_inplace(1.0 / count as f32);
+    (loss, dlogits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn gelu_fixed_points() {
+        assert_eq!(gelu_scalar(0.0), 0.0);
+        assert!((gelu_scalar(10.0) - 10.0).abs() < 1e-3);
+        assert!(gelu_scalar(-10.0).abs() < 1e-3);
+        // gelu(1) ≈ 0.8412
+        assert!((gelu_scalar(1.0) - 0.8412).abs() < 1e-3);
+    }
+
+    #[test]
+    fn gelu_grad_matches_fd() {
+        for &x in &[-2.0f32, -0.5, 0.0, 0.3, 1.7] {
+            let h = 1e-3;
+            let num = (gelu_scalar(x + h) - gelu_scalar(x - h)) / (2.0 * h);
+            let ana = gelu_grad_scalar(x);
+            assert!((num - ana).abs() < 1e-3, "x={x}: {num} vs {ana}");
+        }
+    }
+
+    #[test]
+    fn softmax_rows_normalized() {
+        let mut rng = Rng::new(320);
+        let x = rng.gaussian_matrix(5, 7, 3.0);
+        let p = softmax_rows(&x);
+        for i in 0..5 {
+            let s: f32 = p.row(i).iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+            assert!(p.row(i).iter().all(|&v| v >= 0.0));
+        }
+    }
+
+    #[test]
+    fn softmax_stable_at_large_logits() {
+        let x = Matrix::from_vec(1, 3, vec![1000.0, 999.0, -1000.0]);
+        let p = softmax_rows(&x);
+        assert!(p.data.iter().all(|v| v.is_finite()));
+        assert!(p.at(0, 0) > p.at(0, 1));
+    }
+
+    #[test]
+    fn softmax_backward_matches_fd() {
+        let mut rng = Rng::new(321);
+        let x = rng.gaussian_matrix(2, 4, 1.0);
+        let dy = rng.gaussian_matrix(2, 4, 1.0);
+        let p = softmax_rows(&x);
+        let dx = softmax_backward(&p, &dy);
+        let h = 1e-3f32;
+        for (i, j) in [(0, 0), (1, 2)] {
+            let mut xp = x.clone();
+            *xp.at_mut(i, j) += h;
+            let mut xm = x.clone();
+            *xm.at_mut(i, j) -= h;
+            let f = |m: &Matrix| -> f32 {
+                softmax_rows(m)
+                    .data
+                    .iter()
+                    .zip(&dy.data)
+                    .map(|(a, b)| a * b)
+                    .sum()
+            };
+            let num = (f(&xp) - f(&xm)) / (2.0 * h);
+            assert!((num - dx.at(i, j)).abs() < 1e-2, "({i},{j})");
+        }
+    }
+
+    #[test]
+    fn cross_entropy_perfect_prediction() {
+        // Huge logit on the right class -> near-zero loss.
+        let mut logits = Matrix::zeros(2, 3);
+        logits.set(0, 1, 100.0);
+        logits.set(1, 2, 100.0);
+        let (loss, dl) = cross_entropy(&logits, &[1, 2], usize::MAX);
+        assert!(loss < 1e-6);
+        assert!(dl.max_abs() < 1e-3);
+    }
+
+    #[test]
+    fn cross_entropy_uniform_is_log_vocab() {
+        let logits = Matrix::zeros(4, 10);
+        let (loss, _) = cross_entropy(&logits, &[0, 3, 5, 9], usize::MAX);
+        assert!((loss - (10.0f64).ln()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn cross_entropy_grad_matches_fd() {
+        let mut rng = Rng::new(322);
+        let logits = rng.gaussian_matrix(3, 5, 1.0);
+        let targets = [2usize, 0, 4];
+        let (_, dl) = cross_entropy(&logits, &targets, usize::MAX);
+        let h = 1e-2f32;
+        for (i, j) in [(0, 2), (1, 1), (2, 4)] {
+            let mut lp = logits.clone();
+            *lp.at_mut(i, j) += h;
+            let mut lm = logits.clone();
+            *lm.at_mut(i, j) -= h;
+            let (fp, _) = cross_entropy(&lp, &targets, usize::MAX);
+            let (fm, _) = cross_entropy(&lm, &targets, usize::MAX);
+            let num = ((fp - fm) / (2.0 * h as f64)) as f32;
+            assert!((num - dl.at(i, j)).abs() < 1e-3, "({i},{j})");
+        }
+    }
+
+    #[test]
+    fn cross_entropy_ignores_padding() {
+        let mut logits = Matrix::zeros(2, 3);
+        logits.set(0, 0, 5.0);
+        let (loss_with_pad, dl) = cross_entropy(&logits, &[0, usize::MAX], usize::MAX);
+        let (loss_single, _) = cross_entropy(&logits.submatrix(0, 1, 0, 3), &[0], usize::MAX);
+        assert!((loss_with_pad - loss_single).abs() < 1e-9);
+        assert!(dl.row(1).iter().all(|&v| v == 0.0));
+    }
+}

@@ -1,0 +1,221 @@
+//! Pre-LN transformer block: `x + Attn(LN(x))`, `x + MLP(LN(x))`, with the
+//! MLP's two linears also structured.
+
+use super::activation::{gelu, gelu_backward};
+use super::attention::{AttnCache, Attention, StructureKind};
+use super::kvcache::LayerKv;
+use super::layernorm::{LayerNorm, LnCache};
+use super::linear::{Linear, LinearCache};
+use super::param::PTensor;
+use crate::tensor::{Matrix, Rng};
+
+/// One transformer block.
+#[derive(Clone, Debug)]
+pub struct Block {
+    pub ln1: LayerNorm,
+    pub attn: Attention,
+    pub ln2: LayerNorm,
+    pub fc1: Linear,
+    pub fc2: Linear,
+    pub d_model: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct BlockCache {
+    pub ln1: LnCache,
+    pub attn: AttnCache,
+    pub ln2: LnCache,
+    pub x_mid: Matrix,
+    pub fc1: LinearCache,
+    pub h_pre: Matrix,
+    pub fc2: LinearCache,
+}
+
+impl Block {
+    pub fn new(
+        d_model: usize,
+        n_heads: usize,
+        d_ff: usize,
+        structure: StructureKind,
+        rng: &mut Rng,
+    ) -> Self {
+        Self::new_with_masking(d_model, n_heads, d_ff, structure, true, rng)
+    }
+
+    /// Bidirectional variant for encoder models (ViT / DiT).
+    pub fn new_bidirectional(
+        d_model: usize,
+        n_heads: usize,
+        d_ff: usize,
+        structure: StructureKind,
+        rng: &mut Rng,
+    ) -> Self {
+        Self::new_with_masking(d_model, n_heads, d_ff, structure, false, rng)
+    }
+
+    pub fn new_with_masking(
+        d_model: usize,
+        n_heads: usize,
+        d_ff: usize,
+        structure: StructureKind,
+        causal: bool,
+        rng: &mut Rng,
+    ) -> Self {
+        let std = 0.02;
+        let mut attn = Attention::new(d_model, n_heads, structure, rng);
+        attn.causal = causal;
+        Block {
+            ln1: LayerNorm::new(d_model),
+            attn,
+            ln2: LayerNorm::new(d_model),
+            fc1: structure.make_linear(d_ff, d_model, std, rng),
+            fc2: structure.make_linear(d_model, d_ff, std, rng),
+            d_model,
+        }
+    }
+
+    pub fn forward(&self, x: &Matrix) -> Matrix {
+        let a = self.attn.forward(&self.ln1.forward(x));
+        let x_mid = x.add(&a);
+        let h = gelu(&self.fc1.forward(&self.ln2.forward(&x_mid)));
+        let m = self.fc2.forward(&h);
+        x_mid.add(&m)
+    }
+
+    pub fn forward_t(&self, x: &Matrix) -> (Matrix, BlockCache) {
+        let (ln1_out, ln1_c) = self.ln1.forward_t(x);
+        let (a, attn_c) = self.attn.forward_t(&ln1_out);
+        let x_mid = x.add(&a);
+        let (ln2_out, ln2_c) = self.ln2.forward_t(&x_mid);
+        let (h_pre, fc1_c) = self.fc1.forward_t(&ln2_out);
+        let h = gelu(&h_pre);
+        let (m, fc2_c) = self.fc2.forward_t(&h);
+        let y = x_mid.add(&m);
+        (
+            y,
+            BlockCache {
+                ln1: ln1_c,
+                attn: attn_c,
+                ln2: ln2_c,
+                x_mid,
+                fc1: fc1_c,
+                h_pre,
+                fc2: fc2_c,
+            },
+        )
+    }
+
+    pub fn backward(&mut self, cache: &BlockCache, dy: &Matrix) -> Matrix {
+        // y = x_mid + fc2(gelu(fc1(ln2(x_mid)))).
+        let dh = self.fc2.backward(&cache.fc2, dy);
+        let dh_pre = gelu_backward(&cache.h_pre, &dh);
+        let dln2 = self.fc1.backward(&cache.fc1, &dh_pre);
+        let mut dx_mid = self.ln2.backward(&cache.ln2, &dln2);
+        dx_mid.axpy(1.0, dy); // residual
+
+        // x_mid = x + attn(ln1(x)).
+        let dattn = self.attn.backward(&cache.attn, &dx_mid);
+        let mut dx = self.ln1.backward(&cache.ln1, &dattn);
+        dx.axpy(1.0, &dx_mid); // residual
+        dx
+    }
+
+    /// KV-cached single-token decode.
+    pub fn forward_decode(&self, x: &Matrix, kv: &mut LayerKv) -> Matrix {
+        let a = self.attn.forward_decode(&self.ln1.forward(x), kv);
+        let x_mid = x.add(&a);
+        let h = gelu(&self.fc1.forward(&self.ln2.forward(&x_mid)));
+        let m = self.fc2.forward(&h);
+        x_mid.add(&m)
+    }
+
+    pub fn params_mut(&mut self) -> Vec<&mut PTensor> {
+        let mut out = self.ln1.params_mut();
+        out.extend(self.attn.params_mut());
+        out.extend(self.ln2.params_mut());
+        out.extend(self.fc1.params_mut());
+        out.extend(self.fc2.params_mut());
+        out
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.attn.num_params()
+            + self.fc1.num_params()
+            + self.fc2.num_params()
+            + 4 * self.d_model
+    }
+
+    pub fn flops_per_token(&self) -> usize {
+        self.attn.flops_per_token() + self.fc1.flops_per_token() + self.fc2.flops_per_token()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forward_shapes() {
+        let mut rng = Rng::new(350);
+        let blk = Block::new(8, 2, 16, StructureKind::Dense, &mut rng);
+        let x = rng.gaussian_matrix(5, 8, 1.0);
+        let y = blk.forward(&x);
+        assert_eq!(y.shape(), (5, 8));
+        assert!(!y.has_nonfinite());
+    }
+
+    #[test]
+    fn decode_matches_full() {
+        let mut rng = Rng::new(351);
+        let blk = Block::new(8, 2, 16, StructureKind::Blast { b: 2, r: 3 }, &mut rng);
+        let x = rng.gaussian_matrix(4, 8, 1.0);
+        let y_full = blk.forward(&x);
+        let mut kv = LayerKv::with_capacity(8, 8);
+        for t in 0..4 {
+            let xt = x.submatrix(t, t + 1, 0, 8);
+            let yt = blk.forward_decode(&xt, &mut kv);
+            for c in 0..8 {
+                assert!((yt.at(0, c) - y_full.at(t, c)).abs() < 1e-4, "t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn backward_matches_fd() {
+        let mut rng = Rng::new(352);
+        let mut blk = Block::new(4, 2, 8, StructureKind::Dense, &mut rng);
+        let x = rng.gaussian_matrix(3, 4, 0.5);
+        let dy = rng.gaussian_matrix(3, 4, 1.0);
+        let (_, cache) = blk.forward_t(&x);
+        let dx = blk.backward(&cache, &dy);
+        let f = |m: &Matrix| -> f64 {
+            blk.forward(m)
+                .data
+                .iter()
+                .zip(&dy.data)
+                .map(|(a, b)| (*a as f64) * (*b as f64))
+                .sum()
+        };
+        let h = 1e-2f32;
+        for (i, j) in [(0, 0), (1, 3), (2, 1)] {
+            let mut xp = x.clone();
+            *xp.at_mut(i, j) += h;
+            let mut xm = x.clone();
+            *xm.at_mut(i, j) -= h;
+            let num = ((f(&xp) - f(&xm)) / (2.0 * h as f64)) as f32;
+            assert!(
+                (num - dx.at(i, j)).abs() < 6e-2 * (1.0 + num.abs()),
+                "dx({i},{j}): {num} vs {}",
+                dx.at(i, j)
+            );
+        }
+    }
+
+    #[test]
+    fn param_collection_nonempty() {
+        let mut rng = Rng::new(353);
+        let mut blk = Block::new(8, 2, 16, StructureKind::Monarch { b: 2, t: 2 }, &mut rng);
+        let n = blk.params_mut().len();
+        assert!(n > 10, "expected many params, got {n}");
+    }
+}

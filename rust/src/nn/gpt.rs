@@ -1,0 +1,364 @@
+//! `TinyLM` — GPT-style causal language model with structured linears.
+//!
+//! Stands in for GPT-2 (Fig. 5, trained from scratch) and Llama-7B
+//! (Tables 3/4/12/13, compression + re-training + runtime), scaled to the
+//! synthetic corpus. Token + learned positional embeddings, pre-LN
+//! blocks, weight-untied LM head.
+
+use super::attention::StructureKind;
+use super::block::{Block, BlockCache};
+use super::kvcache::KvCache;
+use super::layernorm::{LayerNorm, LnCache};
+use super::linear::{Linear, LinearCache};
+use super::param::PTensor;
+use crate::tensor::{Matrix, Rng};
+
+/// Model configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct LmConfig {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub structure: StructureKind,
+}
+
+impl LmConfig {
+    /// Small config used across the experiments.
+    pub fn tiny(structure: StructureKind) -> Self {
+        LmConfig {
+            vocab: 64,
+            d_model: 64,
+            n_layers: 2,
+            n_heads: 4,
+            d_ff: 128,
+            max_seq: 64,
+            structure,
+        }
+    }
+
+    /// ~medium config for the E2E demo.
+    pub fn small(structure: StructureKind) -> Self {
+        LmConfig {
+            vocab: 256,
+            d_model: 128,
+            n_layers: 4,
+            n_heads: 4,
+            d_ff: 256,
+            max_seq: 128,
+            structure,
+        }
+    }
+}
+
+/// GPT-style LM.
+#[derive(Clone, Debug)]
+pub struct TinyLM {
+    pub cfg: LmConfig,
+    pub tok_embed: PTensor,
+    pub pos_embed: PTensor,
+    pub blocks: Vec<Block>,
+    pub ln_f: LayerNorm,
+    pub head: Linear,
+}
+
+/// Forward cache for training.
+pub struct LmCache {
+    pub tokens: Vec<usize>,
+    pub block_caches: Vec<BlockCache>,
+    pub ln_f: LnCache,
+    pub head: LinearCache,
+}
+
+impl TinyLM {
+    pub fn new(cfg: LmConfig, rng: &mut Rng) -> Self {
+        let std = 0.02;
+        TinyLM {
+            cfg,
+            tok_embed: PTensor::new(rng.gaussian_matrix(cfg.vocab, cfg.d_model, std)),
+            pos_embed: PTensor::new(rng.gaussian_matrix(cfg.max_seq, cfg.d_model, std)),
+            blocks: (0..cfg.n_layers)
+                .map(|_| Block::new(cfg.d_model, cfg.n_heads, cfg.d_ff, cfg.structure, rng))
+                .collect(),
+            ln_f: LayerNorm::new(cfg.d_model),
+            // The head (and embeddings) stay dense, as in the paper: only
+            // the transformer linears are compressed.
+            head: Linear::dense(cfg.vocab, cfg.d_model, std, rng),
+        }
+    }
+
+    fn embed(&self, tokens: &[usize]) -> Matrix {
+        let d = self.cfg.d_model;
+        let mut x = Matrix::zeros(tokens.len(), d);
+        for (t, &tok) in tokens.iter().enumerate() {
+            assert!(tok < self.cfg.vocab, "token {tok} out of vocab");
+            assert!(t < self.cfg.max_seq, "sequence too long");
+            let e = self.tok_embed.v.row(tok);
+            let p = self.pos_embed.v.row(t);
+            let row = x.row_mut(t);
+            for c in 0..d {
+                row[c] = e[c] + p[c];
+            }
+        }
+        x
+    }
+
+    /// Full-sequence logits (seq × vocab).
+    pub fn forward(&self, tokens: &[usize]) -> Matrix {
+        let mut x = self.embed(tokens);
+        for blk in &self.blocks {
+            x = blk.forward(&x);
+        }
+        self.head.forward(&self.ln_f.forward(&x))
+    }
+
+    /// Training forward with cache.
+    pub fn forward_t(&self, tokens: &[usize]) -> (Matrix, LmCache) {
+        let mut x = self.embed(tokens);
+        let mut block_caches = Vec::with_capacity(self.blocks.len());
+        for blk in &self.blocks {
+            let (y, c) = blk.forward_t(&x);
+            x = y;
+            block_caches.push(c);
+        }
+        let (ln_out, ln_c) = self.ln_f.forward_t(&x);
+        let (logits, head_c) = self.head.forward_t(&ln_out);
+        (
+            logits,
+            LmCache { tokens: tokens.to_vec(), block_caches, ln_f: ln_c, head: head_c },
+        )
+    }
+
+    /// Backward from dlogits; accumulates all parameter grads.
+    pub fn backward(&mut self, cache: &LmCache, dlogits: &Matrix) {
+        let dln = self.head.backward(&cache.head, dlogits);
+        let mut dx = self.ln_f.backward(&cache.ln_f, &dln);
+        for (blk, c) in self.blocks.iter_mut().zip(&cache.block_caches).rev() {
+            dx = blk.backward(c, &dx);
+        }
+        // Embedding grads.
+        for (t, &tok) in cache.tokens.iter().enumerate() {
+            let drow = dx.row(t);
+            {
+                let erow = self.tok_embed.g.row_mut(tok);
+                for (g, d) in erow.iter_mut().zip(drow) {
+                    *g += d;
+                }
+            }
+            {
+                let prow = self.pos_embed.g.row_mut(t);
+                for (g, d) in prow.iter_mut().zip(drow) {
+                    *g += d;
+                }
+            }
+        }
+    }
+
+    /// Next-token loss over one sequence: predict `tokens[1..]`.
+    /// Returns (mean loss, cache, dlogits) ready for `backward`.
+    pub fn loss_t(&self, tokens: &[usize]) -> (f64, LmCache, Matrix) {
+        let (logits, cache) = self.forward_t(tokens);
+        let seq = tokens.len();
+        // Targets: shifted by one; last position ignored.
+        let mut targets = vec![usize::MAX; seq];
+        for t in 0..seq - 1 {
+            targets[t] = tokens[t + 1];
+        }
+        let (loss, dlogits) =
+            super::activation::cross_entropy(&logits, &targets, usize::MAX);
+        (loss, cache, dlogits)
+    }
+
+    /// Inference-only mean next-token loss (perplexity evaluation).
+    pub fn loss(&self, tokens: &[usize]) -> f64 {
+        let logits = self.forward(tokens);
+        let seq = tokens.len();
+        let mut targets = vec![usize::MAX; seq];
+        for t in 0..seq - 1 {
+            targets[t] = tokens[t + 1];
+        }
+        let (loss, _) = super::activation::cross_entropy(&logits, &targets, usize::MAX);
+        loss
+    }
+
+    /// KV-cached greedy generation from a prompt.
+    pub fn generate(&self, prompt: &[usize], new_tokens: usize) -> Vec<usize> {
+        let mut kv = self.new_kv_cache();
+        let mut out = prompt.to_vec();
+        let mut logits = Matrix::zeros(1, self.cfg.vocab);
+        for (t, &tok) in prompt.iter().enumerate() {
+            logits = self.decode_step(tok, t, &mut kv);
+        }
+        for _ in 0..new_tokens {
+            let next = argmax(logits.row(0));
+            out.push(next);
+            let pos = out.len() - 1;
+            if pos + 1 >= self.cfg.max_seq {
+                break;
+            }
+            logits = self.decode_step(next, pos, &mut kv);
+        }
+        out
+    }
+
+    /// One decode step: token at position `pos` → logits (1×vocab).
+    pub fn decode_step(&self, tok: usize, pos: usize, kv: &mut KvCache) -> Matrix {
+        let d = self.cfg.d_model;
+        let mut x = Matrix::zeros(1, d);
+        {
+            let e = self.tok_embed.v.row(tok);
+            let p = self.pos_embed.v.row(pos.min(self.cfg.max_seq - 1));
+            let row = x.row_mut(0);
+            for c in 0..d {
+                row[c] = e[c] + p[c];
+            }
+        }
+        for (blk, lkv) in self.blocks.iter().zip(&mut kv.layers) {
+            x = blk.forward_decode(&x, lkv);
+        }
+        self.head.forward(&self.ln_f.forward(&x))
+    }
+
+    pub fn new_kv_cache(&self) -> KvCache {
+        KvCache::new(self.cfg.n_layers, self.cfg.max_seq, self.cfg.d_model)
+    }
+
+    pub fn params_mut(&mut self) -> Vec<&mut PTensor> {
+        let mut out: Vec<&mut PTensor> = vec![&mut self.tok_embed, &mut self.pos_embed];
+        for blk in &mut self.blocks {
+            out.extend(blk.params_mut());
+        }
+        out.extend(self.ln_f.params_mut());
+        out.extend(self.head.params_mut());
+        out
+    }
+
+    pub fn zero_grads(&mut self) {
+        for p in self.params_mut() {
+            p.zero_grad();
+        }
+    }
+
+    pub fn num_params(&self) -> usize {
+        let embed = self.tok_embed.numel() + self.pos_embed.numel();
+        let blocks: usize = self.blocks.iter().map(|b| b.num_params()).sum();
+        embed + blocks + 2 * self.cfg.d_model + self.head.num_params()
+    }
+
+    /// Linear-layer FLOPs per token (the quantity the paper's
+    /// "Relative FLOPs" columns compare).
+    pub fn flops_per_token(&self) -> usize {
+        let blocks: usize = self.blocks.iter().map(|b| b.flops_per_token()).sum();
+        blocks + self.head.flops_per_token()
+    }
+}
+
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forward_shapes_and_loss() {
+        let mut rng = Rng::new(400);
+        let lm = TinyLM::new(LmConfig::tiny(StructureKind::Dense), &mut rng);
+        let tokens: Vec<usize> = (0..10).map(|i| i % 64).collect();
+        let logits = lm.forward(&tokens);
+        assert_eq!(logits.shape(), (10, 64));
+        let loss = lm.loss(&tokens);
+        // Random init → loss near ln(vocab).
+        assert!((loss - (64f64).ln()).abs() < 1.0, "loss {loss}");
+    }
+
+    #[test]
+    fn generation_deterministic_and_bounded() {
+        let mut rng = Rng::new(401);
+        let lm = TinyLM::new(LmConfig::tiny(StructureKind::Blast { b: 2, r: 4 }), &mut rng);
+        let out1 = lm.generate(&[1, 2, 3], 8);
+        let out2 = lm.generate(&[1, 2, 3], 8);
+        assert_eq!(out1, out2);
+        assert_eq!(out1.len(), 11);
+        assert!(out1.iter().all(|&t| t < 64));
+    }
+
+    #[test]
+    fn decode_matches_full_forward() {
+        let mut rng = Rng::new(402);
+        for s in [StructureKind::Dense, StructureKind::Blast { b: 2, r: 4 }] {
+            let lm = TinyLM::new(LmConfig::tiny(s), &mut rng);
+            let tokens: Vec<usize> = vec![5, 17, 3, 42, 8];
+            let full = lm.forward(&tokens);
+            let mut kv = lm.new_kv_cache();
+            for (t, &tok) in tokens.iter().enumerate() {
+                let logits = lm.decode_step(tok, t, &mut kv);
+                for c in 0..lm.cfg.vocab {
+                    assert!(
+                        (logits.at(0, c) - full.at(t, c)).abs() < 1e-3,
+                        "{s:?} t={t} c={c}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn grads_flow_to_all_params() {
+        let mut rng = Rng::new(403);
+        let mut lm = TinyLM::new(LmConfig::tiny(StructureKind::Blast { b: 2, r: 4 }), &mut rng);
+        let tokens: Vec<usize> = (0..12).map(|i| (i * 7) % 64).collect();
+        lm.zero_grads();
+        let (_, cache, dlogits) = lm.loss_t(&tokens);
+        lm.backward(&cache, &dlogits);
+        let n_nonzero = lm
+            .params_mut()
+            .iter()
+            .filter(|p| p.g.max_abs() > 0.0)
+            .count();
+        let n_total = lm.params_mut().len();
+        // Every parameter except unused token-embedding rows gets grads;
+        // count at the tensor granularity.
+        assert!(
+            n_nonzero >= n_total - 1,
+            "only {n_nonzero}/{n_total} params got gradients"
+        );
+    }
+
+    #[test]
+    fn one_train_step_reduces_loss() {
+        let mut rng = Rng::new(404);
+        let mut lm = TinyLM::new(LmConfig::tiny(StructureKind::Dense), &mut rng);
+        let tokens: Vec<usize> = (0..16).map(|i| (i * 3 + 1) % 64).collect();
+        let mut opt = crate::nn::param::AdamW::new(1e-2, 0.0);
+        let loss0 = lm.loss(&tokens);
+        for _ in 0..20 {
+            lm.zero_grads();
+            let (_, cache, dlogits) = lm.loss_t(&tokens);
+            lm.backward(&cache, &dlogits);
+            opt.step(&mut lm.params_mut(), 1e-2);
+        }
+        let loss1 = lm.loss(&tokens);
+        assert!(loss1 < loss0 * 0.7, "loss {loss0} -> {loss1}");
+    }
+
+    #[test]
+    fn structures_param_ordering() {
+        // At matched (b, r) settings, BLAST must be smaller than dense.
+        let mut rng = Rng::new(405);
+        let dense = TinyLM::new(LmConfig::tiny(StructureKind::Dense), &mut rng);
+        let blast =
+            TinyLM::new(LmConfig::tiny(StructureKind::Blast { b: 4, r: 8 }), &mut rng);
+        assert!(blast.num_params() < dense.num_params());
+        assert!(blast.flops_per_token() < dense.flops_per_token());
+    }
+}

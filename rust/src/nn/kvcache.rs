@@ -1,0 +1,124 @@
+//! KV cache for incremental decoding.
+//!
+//! One cache slot per sequence: per layer, per head, the accumulated key
+//! and value rows. The Table 4 runtime experiment decodes token-by-token,
+//! so cache appends must be O(head_dim) copies with no reallocation in the
+//! steady state.
+
+use crate::tensor::Matrix;
+
+/// Per-layer KV storage: keys/values are `(seq_len, n_heads*head_dim)`
+/// matrices grown in place.
+#[derive(Clone, Debug)]
+pub struct LayerKv {
+    pub k: Matrix,
+    pub v: Matrix,
+    pub len: usize,
+    capacity: usize,
+}
+
+impl LayerKv {
+    pub fn with_capacity(capacity: usize, width: usize) -> Self {
+        LayerKv {
+            k: Matrix::zeros(capacity, width),
+            v: Matrix::zeros(capacity, width),
+            len: 0,
+            capacity,
+        }
+    }
+
+    /// Append one position's K/V rows; grows by doubling when full.
+    pub fn append(&mut self, k_row: &[f32], v_row: &[f32]) {
+        assert_eq!(k_row.len(), self.k.cols);
+        if self.len == self.capacity {
+            let new_cap = (self.capacity * 2).max(16);
+            let mut k = Matrix::zeros(new_cap, self.k.cols);
+            let mut v = Matrix::zeros(new_cap, self.v.cols);
+            k.data[..self.len * self.k.cols].copy_from_slice(&self.k.data[..self.len * self.k.cols]);
+            v.data[..self.len * self.v.cols].copy_from_slice(&self.v.data[..self.len * self.v.cols]);
+            self.k = k;
+            self.v = v;
+            self.capacity = new_cap;
+        }
+        self.k.row_mut(self.len).copy_from_slice(k_row);
+        self.v.row_mut(self.len).copy_from_slice(v_row);
+        self.len += 1;
+    }
+
+    /// Valid prefix views.
+    pub fn keys(&self) -> Matrix {
+        self.k.submatrix(0, self.len, 0, self.k.cols)
+    }
+
+    pub fn values(&self) -> Matrix {
+        self.v.submatrix(0, self.len, 0, self.v.cols)
+    }
+
+    pub fn clear(&mut self) {
+        self.len = 0;
+    }
+}
+
+/// Whole-model cache: one `LayerKv` per transformer layer.
+#[derive(Clone, Debug)]
+pub struct KvCache {
+    pub layers: Vec<LayerKv>,
+}
+
+impl KvCache {
+    pub fn new(n_layers: usize, capacity: usize, width: usize) -> Self {
+        KvCache {
+            layers: (0..n_layers).map(|_| LayerKv::with_capacity(capacity, width)).collect(),
+        }
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.layers.first().map_or(0, |l| l.len)
+    }
+
+    pub fn clear(&mut self) {
+        for l in &mut self.layers {
+            l.clear();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn append_and_views() {
+        let mut kv = LayerKv::with_capacity(2, 3);
+        kv.append(&[1., 2., 3.], &[4., 5., 6.]);
+        kv.append(&[7., 8., 9.], &[1., 1., 1.]);
+        assert_eq!(kv.len, 2);
+        assert_eq!(kv.keys().row(1), &[7., 8., 9.]);
+        assert_eq!(kv.values().row(0), &[4., 5., 6.]);
+    }
+
+    #[test]
+    fn growth_preserves_contents() {
+        let mut kv = LayerKv::with_capacity(1, 2);
+        for i in 0..50 {
+            kv.append(&[i as f32, 0.0], &[0.0, i as f32]);
+        }
+        assert_eq!(kv.len, 50);
+        for i in 0..50 {
+            assert_eq!(kv.keys().at(i, 0), i as f32);
+            assert_eq!(kv.values().at(i, 1), i as f32);
+        }
+    }
+
+    #[test]
+    fn model_cache() {
+        let mut c = KvCache::new(3, 8, 4);
+        assert_eq!(c.seq_len(), 0);
+        for l in &mut c.layers {
+            l.append(&[0.0; 4], &[0.0; 4]);
+        }
+        assert_eq!(c.seq_len(), 1);
+        c.clear();
+        assert_eq!(c.seq_len(), 0);
+    }
+}

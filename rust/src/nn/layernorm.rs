@@ -1,0 +1,197 @@
+//! LayerNorm with manual backward.
+
+use super::param::PTensor;
+use crate::tensor::Matrix;
+
+/// Per-row layer normalization with learnable scale/shift.
+#[derive(Clone, Debug)]
+pub struct LayerNorm {
+    pub gamma: PTensor,
+    pub beta: PTensor,
+    pub eps: f32,
+    pub dim: usize,
+}
+
+/// Cache for backward.
+#[derive(Clone, Debug)]
+pub struct LnCache {
+    /// Normalized input (pre gamma/beta).
+    pub xhat: Matrix,
+    /// Per-row 1/std.
+    pub inv_std: Vec<f32>,
+}
+
+impl LayerNorm {
+    pub fn new(dim: usize) -> Self {
+        LayerNorm {
+            gamma: PTensor::new_nodecay(Matrix::ones(1, dim)),
+            beta: PTensor::new_nodecay(Matrix::zeros(1, dim)),
+            eps: 1e-5,
+            dim,
+        }
+    }
+
+    pub fn forward(&self, x: &Matrix) -> Matrix {
+        let (y, _) = self.forward_impl(x, false);
+        y
+    }
+
+    pub fn forward_t(&self, x: &Matrix) -> (Matrix, LnCache) {
+        let (y, c) = self.forward_impl(x, true);
+        (y, c.unwrap())
+    }
+
+    fn forward_impl(&self, x: &Matrix, keep: bool) -> (Matrix, Option<LnCache>) {
+        assert_eq!(x.cols, self.dim);
+        let mut y = Matrix::zeros(x.rows, x.cols);
+        let mut xhat = keep.then(|| Matrix::zeros(x.rows, x.cols));
+        let mut inv_stds = keep.then(|| Vec::with_capacity(x.rows));
+        let g = self.gamma.v.row(0);
+        let b = self.beta.v.row(0);
+        for i in 0..x.rows {
+            let row = x.row(i);
+            let mean = row.iter().sum::<f32>() / self.dim as f32;
+            let var =
+                row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / self.dim as f32;
+            let inv_std = 1.0 / (var + self.eps).sqrt();
+            let out = y.row_mut(i);
+            for j in 0..self.dim {
+                let xh = (row[j] - mean) * inv_std;
+                out[j] = xh * g[j] + b[j];
+                if let Some(xh_m) = xhat.as_mut() {
+                    xh_m.set(i, j, xh);
+                }
+            }
+            if let Some(s) = inv_stds.as_mut() {
+                s.push(inv_std);
+            }
+        }
+        let cache = keep.then(|| LnCache { xhat: xhat.unwrap(), inv_std: inv_stds.unwrap() });
+        (y, cache)
+    }
+
+    /// Backward: accumulates gamma/beta grads, returns dx.
+    pub fn backward(&mut self, cache: &LnCache, dy: &Matrix) -> Matrix {
+        let n = self.dim as f32;
+        let mut dx = Matrix::zeros(dy.rows, dy.cols);
+        let g = self.gamma.v.row(0).to_vec();
+        for i in 0..dy.rows {
+            let dyr = dy.row(i);
+            let xh = cache.xhat.row(i);
+            // Accumulate param grads.
+            {
+                let gg = self.gamma.g.row_mut(0);
+                for j in 0..self.dim {
+                    gg[j] += dyr[j] * xh[j];
+                }
+            }
+            {
+                let bg = self.beta.g.row_mut(0);
+                for j in 0..self.dim {
+                    bg[j] += dyr[j];
+                }
+            }
+            // dxhat = dy * gamma.
+            // dx = inv_std/N * (N*dxhat - sum(dxhat) - xhat * sum(dxhat*xhat))
+            let mut sum_dxh = 0.0f32;
+            let mut sum_dxh_xh = 0.0f32;
+            for j in 0..self.dim {
+                let dxh = dyr[j] * g[j];
+                sum_dxh += dxh;
+                sum_dxh_xh += dxh * xh[j];
+            }
+            let inv_std = cache.inv_std[i];
+            let out = dx.row_mut(i);
+            for j in 0..self.dim {
+                let dxh = dyr[j] * g[j];
+                out[j] = inv_std / n * (n * dxh - sum_dxh - xh[j] * sum_dxh_xh);
+            }
+        }
+        dx
+    }
+
+    pub fn params_mut(&mut self) -> Vec<&mut PTensor> {
+        vec![&mut self.gamma, &mut self.beta]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn normalizes_rows() {
+        let mut rng = Rng::new(330);
+        let x = rng.gaussian_matrix(4, 16, 3.0).map(|v| v + 5.0);
+        let ln = LayerNorm::new(16);
+        let y = ln.forward(&x);
+        for i in 0..4 {
+            let row = y.row(i);
+            let mean: f32 = row.iter().sum::<f32>() / 16.0;
+            let var: f32 = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 16.0;
+            assert!(mean.abs() < 1e-4, "mean {mean}");
+            assert!((var - 1.0).abs() < 1e-2, "var {var}");
+        }
+    }
+
+    #[test]
+    fn gamma_beta_applied() {
+        let x = Matrix::from_vec(1, 2, vec![1.0, -1.0]);
+        let mut ln = LayerNorm::new(2);
+        ln.gamma.v = Matrix::from_vec(1, 2, vec![2.0, 2.0]);
+        ln.beta.v = Matrix::from_vec(1, 2, vec![1.0, 1.0]);
+        let y = ln.forward(&x);
+        // xhat = [1, -1] (approximately), y = 2*xhat + 1 = [3, -1]
+        assert!((y.at(0, 0) - 3.0).abs() < 1e-2);
+        assert!((y.at(0, 1) + 1.0).abs() < 1e-2);
+    }
+
+    #[test]
+    fn backward_matches_fd() {
+        let mut rng = Rng::new(331);
+        let x = rng.gaussian_matrix(3, 8, 1.0);
+        let dy = rng.gaussian_matrix(3, 8, 1.0);
+        let mut ln = LayerNorm::new(8);
+        ln.gamma.v = rng.gaussian_matrix(1, 8, 0.3).map(|v| v + 1.0);
+        ln.beta.v = rng.gaussian_matrix(1, 8, 0.3);
+        let (_, cache) = ln.forward_t(&x);
+        let dx = ln.backward(&cache, &dy);
+        let f = |m: &Matrix| -> f64 {
+            ln.forward(m)
+                .data
+                .iter()
+                .zip(&dy.data)
+                .map(|(a, b)| (*a as f64) * (*b as f64))
+                .sum()
+        };
+        let h = 1e-2f32;
+        for (i, j) in [(0, 0), (1, 4), (2, 7)] {
+            let mut xp = x.clone();
+            *xp.at_mut(i, j) += h;
+            let mut xm = x.clone();
+            *xm.at_mut(i, j) -= h;
+            let num = ((f(&xp) - f(&xm)) / (2.0 * h as f64)) as f32;
+            assert!(
+                (num - dx.at(i, j)).abs() < 2e-2 * (1.0 + dx.at(i, j).abs()),
+                "({i},{j}): {num} vs {}",
+                dx.at(i, j)
+            );
+        }
+        // gamma grad check on entry 0.
+        let h64 = 1e-2f32;
+        let eval_with_gamma = |delta: f32| -> f64 {
+            let mut l2 = ln.clone();
+            l2.gamma.v.data[0] += delta;
+            l2.forward(&x)
+                .data
+                .iter()
+                .zip(&dy.data)
+                .map(|(a, b)| (*a as f64) * (*b as f64))
+                .sum()
+        };
+        let num_g =
+            ((eval_with_gamma(h64) - eval_with_gamma(-h64)) / (2.0 * h64 as f64)) as f32;
+        assert!((num_g - ln.gamma.g.data[0]).abs() < 2e-2 * (1.0 + num_g.abs()));
+    }
+}

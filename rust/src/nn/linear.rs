@@ -1,0 +1,694 @@
+//! Structured linear layers: Dense / Low-Rank / Monarch / Block-Diagonal /
+//! BLAST, all with manual forward + backward.
+//!
+//! Activation convention: `x` is `(tokens, in_features)` row-major and the
+//! layer computes `y = x · W^T + bias` (`W: out×in`), matching the paper's
+//! `y = A x` per token. For BLAST the forward is Algorithm 1; its backward
+//! propagates through the three stages (right factor, coupling, left
+//! factor), which is what makes BLAST trainable by SGD/AdamW (§3.1).
+
+use super::param::PTensor;
+use crate::blast::BlastMatrix;
+use crate::tensor::{matmul, matmul_nt, matmul_tn, Matrix, Rng};
+
+/// The trainable weight representation of a linear layer.
+#[derive(Clone, Debug)]
+pub enum LinearWeight {
+    /// Dense `W (out×in)`.
+    Dense { w: PTensor },
+    /// `W ≈ P Q^T`, `P: out×r`, `Q: in×r`.
+    LowRank { p: PTensor, q: PTensor },
+    /// BLAST factors; `u[i]: p×r`, `v[j]: q×r`, `s: (b·b)×r` packed row
+    /// `i·b+j`.
+    Blast {
+        b: usize,
+        r: usize,
+        out: usize,
+        inp: usize,
+        u: Vec<PTensor>,
+        v: Vec<PTensor>,
+        s: PTensor,
+    },
+    /// Monarch: shared right bases `rb[j]: t×q`, couplings `l[i][j]: p×t`
+    /// packed as `l[(i*b+j)]`.
+    Monarch {
+        b: usize,
+        t: usize,
+        out: usize,
+        inp: usize,
+        rb: Vec<PTensor>,
+        l: Vec<PTensor>,
+    },
+    /// Block-diagonal with rank-t diagonal blocks `p_i: p×t`, `q_i: q×t`.
+    BlockDiag {
+        b: usize,
+        out: usize,
+        inp: usize,
+        pd: Vec<PTensor>,
+        qd: Vec<PTensor>,
+    },
+}
+
+/// A linear layer (structured weight + optional bias).
+#[derive(Clone, Debug)]
+pub struct Linear {
+    pub weight: LinearWeight,
+    pub bias: Option<PTensor>,
+    pub out_features: usize,
+    pub in_features: usize,
+}
+
+/// Forward cache for backward.
+#[derive(Clone, Debug)]
+pub enum LinearCache {
+    Dense { x: Matrix },
+    LowRank { x: Matrix, z: Matrix },
+    Blast { x: Matrix, z: Vec<Matrix>, w: Vec<Matrix> },
+    Monarch { x: Matrix, z: Vec<Matrix> },
+    BlockDiag { x: Matrix, z: Vec<Matrix> },
+}
+
+impl Linear {
+    // ------------------------------------------------------------------
+    // Constructors
+    // ------------------------------------------------------------------
+
+    pub fn dense(out: usize, inp: usize, std: f32, rng: &mut Rng) -> Self {
+        Linear {
+            weight: LinearWeight::Dense { w: PTensor::new(rng.gaussian_matrix(out, inp, std)) },
+            bias: Some(PTensor::new_nodecay(Matrix::zeros(1, out))),
+            out_features: out,
+            in_features: inp,
+        }
+    }
+
+    pub fn low_rank(out: usize, inp: usize, r: usize, std: f32, rng: &mut Rng) -> Self {
+        Linear {
+            weight: LinearWeight::LowRank {
+                p: PTensor::new(rng.gaussian_matrix(out, r, std)),
+                q: PTensor::new(rng.gaussian_matrix(inp, r, std)),
+            },
+            bias: Some(PTensor::new_nodecay(Matrix::zeros(1, out))),
+            out_features: out,
+            in_features: inp,
+        }
+    }
+
+    /// BLAST from-scratch init (Appendix C.2: N(0, std) factors,
+    /// Unif(0,2) couplings).
+    pub fn blast(out: usize, inp: usize, b: usize, r: usize, std: f32, rng: &mut Rng) -> Self {
+        assert!(out % b == 0 && inp % b == 0, "b={b} must divide out={out} and inp={inp}");
+        let p = out / b;
+        let q = inp / b;
+        let u = (0..b).map(|_| PTensor::new(rng.gaussian_matrix(p, r, std))).collect();
+        let v = (0..b).map(|_| PTensor::new(rng.gaussian_matrix(q, r, std))).collect();
+        let s = PTensor::new(rng.uniform_matrix(b * b, r, 0.0, 2.0));
+        Linear {
+            weight: LinearWeight::Blast { b, r, out, inp, u, v, s },
+            bias: Some(PTensor::new_nodecay(Matrix::zeros(1, out))),
+            out_features: out,
+            in_features: inp,
+        }
+    }
+
+    pub fn monarch(out: usize, inp: usize, b: usize, t: usize, std: f32, rng: &mut Rng) -> Self {
+        assert!(out % b == 0 && inp % b == 0);
+        let p = out / b;
+        let q = inp / b;
+        let rb = (0..b).map(|_| PTensor::new(rng.gaussian_matrix(t, q, std))).collect();
+        let l = (0..b * b).map(|_| PTensor::new(rng.gaussian_matrix(p, t, std))).collect();
+        Linear {
+            weight: LinearWeight::Monarch { b, t, out, inp, rb, l },
+            bias: Some(PTensor::new_nodecay(Matrix::zeros(1, out))),
+            out_features: out,
+            in_features: inp,
+        }
+    }
+
+    pub fn block_diag(out: usize, inp: usize, b: usize, t: usize, std: f32, rng: &mut Rng) -> Self {
+        assert!(out % b == 0 && inp % b == 0);
+        let p = out / b;
+        let q = inp / b;
+        let pd = (0..b).map(|_| PTensor::new(rng.gaussian_matrix(p, t, std))).collect();
+        let qd = (0..b).map(|_| PTensor::new(rng.gaussian_matrix(q, t, std))).collect();
+        Linear {
+            weight: LinearWeight::BlockDiag { b, out, inp, pd, qd },
+            bias: Some(PTensor::new_nodecay(Matrix::zeros(1, out))),
+            out_features: out,
+            in_features: inp,
+        }
+    }
+
+    /// Wrap an existing dense matrix (compression pipelines).
+    pub fn from_dense_matrix(w: Matrix) -> Self {
+        let (out, inp) = w.shape();
+        Linear {
+            weight: LinearWeight::Dense { w: PTensor::new(w) },
+            bias: Some(PTensor::new_nodecay(Matrix::zeros(1, out))),
+            out_features: out,
+            in_features: inp,
+        }
+    }
+
+    /// Wrap BLAST factors produced by Algorithm 2 (compression + retrain).
+    pub fn from_blast_matrix(bm: &BlastMatrix) -> Self {
+        let (out, inp, b, r) = (bm.m, bm.n, bm.b, bm.r);
+        let u = bm.u.iter().map(|m| PTensor::new(m.clone())).collect();
+        let v = bm.v.iter().map(|m| PTensor::new(m.clone())).collect();
+        let mut s = Matrix::zeros(b * b, r);
+        for i in 0..b {
+            for j in 0..b {
+                s.row_mut(i * b + j).copy_from_slice(&bm.s[i][j]);
+            }
+        }
+        Linear {
+            weight: LinearWeight::Blast { b, r, out, inp, u, v, s: PTensor::new(s) },
+            bias: Some(PTensor::new_nodecay(Matrix::zeros(1, out))),
+            out_features: out,
+            in_features: inp,
+        }
+    }
+
+    /// Extract the BLAST weight back out (after re-training).
+    pub fn to_blast_matrix(&self) -> Option<BlastMatrix> {
+        if let LinearWeight::Blast { b, r, out, inp, u, v, s } = &self.weight {
+            let mut bm = BlastMatrix::zeros(*out, *inp, *b, *r);
+            for i in 0..*b {
+                bm.u[i] = u[i].v.clone();
+                bm.v[i] = v[i].v.clone();
+                for j in 0..*b {
+                    bm.s[i][j].copy_from_slice(s.v.row(i * b + j));
+                }
+            }
+            Some(bm)
+        } else {
+            None
+        }
+    }
+
+    /// Dense reconstruction of whatever structure we hold.
+    pub fn dense_weight(&self) -> Matrix {
+        match &self.weight {
+            LinearWeight::Dense { w } => w.v.clone(),
+            LinearWeight::LowRank { p, q } => matmul_nt(&p.v, &q.v),
+            LinearWeight::Blast { .. } => self.to_blast_matrix().unwrap().to_dense(),
+            LinearWeight::Monarch { b, out, inp, rb, l, .. } => {
+                let p = out / b;
+                let q = inp / b;
+                let mut w = Matrix::zeros(*out, *inp);
+                for i in 0..*b {
+                    for j in 0..*b {
+                        let blk = matmul(&l[i * b + j].v, &rb[j].v);
+                        w.set_submatrix(i * p, j * q, &blk);
+                    }
+                }
+                w
+            }
+            LinearWeight::BlockDiag { b, out, inp, pd, qd } => {
+                let p = out / b;
+                let q = inp / b;
+                let mut w = Matrix::zeros(*out, *inp);
+                for i in 0..*b {
+                    let blk = matmul_nt(&pd[i].v, &qd[i].v);
+                    w.set_submatrix(i * p, i * q, &blk);
+                }
+                w
+            }
+        }
+    }
+
+    /// Parameter count of the weight (+bias).
+    pub fn num_params(&self) -> usize {
+        let w = match &self.weight {
+            LinearWeight::Dense { w } => w.numel(),
+            LinearWeight::LowRank { p, q } => p.numel() + q.numel(),
+            LinearWeight::Blast { u, v, s, .. } => {
+                u.iter().map(|t| t.numel()).sum::<usize>()
+                    + v.iter().map(|t| t.numel()).sum::<usize>()
+                    + s.numel()
+            }
+            LinearWeight::Monarch { rb, l, .. } => {
+                rb.iter().map(|t| t.numel()).sum::<usize>()
+                    + l.iter().map(|t| t.numel()).sum::<usize>()
+            }
+            LinearWeight::BlockDiag { pd, qd, .. } => {
+                pd.iter().map(|t| t.numel()).sum::<usize>()
+                    + qd.iter().map(|t| t.numel()).sum::<usize>()
+            }
+        };
+        w + self.bias.as_ref().map_or(0, |b| b.numel())
+    }
+
+    /// Multiplications per token of forward (the FLOPs the paper counts).
+    pub fn flops_per_token(&self) -> usize {
+        match &self.weight {
+            LinearWeight::Dense { w } => w.numel(),
+            LinearWeight::LowRank { p, q } => p.numel() + q.numel(),
+            LinearWeight::Blast { b, r, out, inp, .. } => (out + inp + b * b) * r,
+            LinearWeight::Monarch { b, t, out, inp, .. } => inp * t + out * b * t,
+            LinearWeight::BlockDiag { pd, qd, .. } => {
+                pd.iter().map(|t| t.numel()).sum::<usize>()
+                    + qd.iter().map(|t| t.numel()).sum::<usize>()
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Forward
+    // ------------------------------------------------------------------
+
+    /// Inference forward: `y = x W^T + bias`.
+    pub fn forward(&self, x: &Matrix) -> Matrix {
+        let (y, _) = self.forward_impl(x, false);
+        y
+    }
+
+    /// Training forward: returns output and the cache for `backward`.
+    pub fn forward_t(&self, x: &Matrix) -> (Matrix, LinearCache) {
+        let (y, cache) = self.forward_impl(x, true);
+        (y, cache.unwrap())
+    }
+
+    fn forward_impl(&self, x: &Matrix, keep: bool) -> (Matrix, Option<LinearCache>) {
+        assert_eq!(x.cols, self.in_features, "linear input mismatch");
+        let tokens = x.rows;
+        let (mut y, cache) = match &self.weight {
+            LinearWeight::Dense { w } => {
+                let y = matmul_nt(x, &w.v);
+                (y, keep.then(|| LinearCache::Dense { x: x.clone() }))
+            }
+            LinearWeight::LowRank { p, q } => {
+                let z = matmul(x, &q.v); // tokens×r
+                let y = matmul_nt(&z, &p.v); // tokens×out
+                (y, keep.then(|| LinearCache::LowRank { x: x.clone(), z }))
+            }
+            LinearWeight::Blast { b, r, out, inp, u, v, s } => {
+                let p = out / b;
+                let q = inp / b;
+                // Stage 1: z_j = x_j V_j (tokens×r) — shared across i.
+                let z: Vec<Matrix> = (0..*b)
+                    .map(|j| {
+                        let xj = x.submatrix(0, tokens, j * q, (j + 1) * q);
+                        matmul(&xj, &v[j].v)
+                    })
+                    .collect();
+                // Stage 2+3 per output block row.
+                let mut y = Matrix::zeros(tokens, *out);
+                let mut ws = Vec::with_capacity(*b);
+                for i in 0..*b {
+                    let mut w = Matrix::zeros(tokens, *r);
+                    for j in 0..*b {
+                        let srow = s.v.row(i * b + j);
+                        let zj = &z[j];
+                        for t in 0..tokens {
+                            let zrow = zj.row(t);
+                            let wrow = w.row_mut(t);
+                            for k in 0..*r {
+                                wrow[k] += zrow[k] * srow[k];
+                            }
+                        }
+                    }
+                    let yi = matmul_nt(&w, &u[i].v); // tokens×p
+                    for t in 0..tokens {
+                        y.row_mut(t)[i * p..(i + 1) * p].copy_from_slice(yi.row(t));
+                    }
+                    if keep {
+                        ws.push(w);
+                    }
+                }
+                (y, keep.then(|| LinearCache::Blast { x: x.clone(), z, w: ws }))
+            }
+            LinearWeight::Monarch { b, out, inp, rb, l, .. } => {
+                let p = out / b;
+                let q = inp / b;
+                let z: Vec<Matrix> = (0..*b)
+                    .map(|j| {
+                        let xj = x.submatrix(0, tokens, j * q, (j + 1) * q);
+                        matmul_nt(&xj, &rb[j].v) // tokens×t
+                    })
+                    .collect();
+                let mut y = Matrix::zeros(tokens, *out);
+                for i in 0..*b {
+                    for j in 0..*b {
+                        let contrib = matmul_nt(&z[j], &l[i * b + j].v); // tokens×p
+                        for t in 0..tokens {
+                            let yrow = &mut y.row_mut(t)[i * p..(i + 1) * p];
+                            for (yv, cv) in yrow.iter_mut().zip(contrib.row(t)) {
+                                *yv += cv;
+                            }
+                        }
+                    }
+                }
+                (y, keep.then(|| LinearCache::Monarch { x: x.clone(), z }))
+            }
+            LinearWeight::BlockDiag { b, out, inp, pd, qd } => {
+                let p = out / b;
+                let q = inp / b;
+                let mut y = Matrix::zeros(tokens, *out);
+                let mut zs = Vec::with_capacity(*b);
+                for i in 0..*b {
+                    let xi = x.submatrix(0, tokens, i * q, (i + 1) * q);
+                    let z = matmul(&xi, &qd[i].v); // tokens×t
+                    let yi = matmul_nt(&z, &pd[i].v); // tokens×p
+                    for t in 0..tokens {
+                        y.row_mut(t)[i * p..(i + 1) * p].copy_from_slice(yi.row(t));
+                    }
+                    if keep {
+                        zs.push(z);
+                    }
+                }
+                (y, keep.then(|| LinearCache::BlockDiag { x: x.clone(), z: zs }))
+            }
+        };
+        if let Some(bias) = &self.bias {
+            for t in 0..tokens {
+                let row = y.row_mut(t);
+                for (yv, bv) in row.iter_mut().zip(bias.v.row(0)) {
+                    *yv += bv;
+                }
+            }
+        }
+        (y, cache)
+    }
+
+    // ------------------------------------------------------------------
+    // Backward
+    // ------------------------------------------------------------------
+
+    /// Accumulate parameter grads and return `dx` given upstream `dy`.
+    pub fn backward(&mut self, cache: &LinearCache, dy: &Matrix) -> Matrix {
+        let tokens = dy.rows;
+        assert_eq!(dy.cols, self.out_features);
+        if let Some(bias) = &mut self.bias {
+            for t in 0..tokens {
+                let drow = dy.row(t);
+                for (g, d) in bias.g.row_mut(0).iter_mut().zip(drow) {
+                    *g += d;
+                }
+            }
+        }
+        match (&mut self.weight, cache) {
+            (LinearWeight::Dense { w }, LinearCache::Dense { x }) => {
+                // y = x W^T: dW += dy^T x ; dx = dy W.
+                let dw = matmul_tn(dy, x);
+                w.g.axpy(1.0, &dw);
+                matmul(dy, &w.v)
+            }
+            (LinearWeight::LowRank { p, q }, LinearCache::LowRank { x, z }) => {
+                // y = z P^T, z = x Q.
+                let dp = matmul_tn(dy, z); // out×r
+                p.g.axpy(1.0, &dp);
+                let dz = matmul(dy, &p.v); // tokens×r
+                let dq = matmul_tn(x, &dz); // in×r
+                q.g.axpy(1.0, &dq);
+                matmul_nt(&dz, &q.v) // tokens×in
+            }
+            (
+                LinearWeight::Blast { b, r, out, inp, u, v, s },
+                LinearCache::Blast { x, z, w },
+            ) => {
+                let bb = *b;
+                let p = *out / bb;
+                let q = *inp / bb;
+                let mut dz: Vec<Matrix> =
+                    (0..bb).map(|_| Matrix::zeros(tokens, *r)).collect();
+                for i in 0..bb {
+                    // dy_i = columns i*p..(i+1)*p of dy.
+                    let dyi = dy.submatrix(0, tokens, i * p, (i + 1) * p);
+                    // y_i = w_i U_i^T → dU_i += dy_i^T w_i ; dw_i = dy_i U_i.
+                    let du = matmul_tn(&dyi, &w[i]); // p×r
+                    u[i].g.axpy(1.0, &du);
+                    let dw = matmul(&dyi, &u[i].v); // tokens×r
+                    // w_i = Σ_j z_j ⊙ s_{i,j}:
+                    //   ds_{i,j} += Σ_t dw[t] ⊙ z_j[t] ; dz_j += dw ⊙ s_{i,j}.
+                    for j in 0..bb {
+                        let srow_idx = i * bb + j;
+                        {
+                            let srow = s.v.row(srow_idx).to_vec();
+                            let dzj = &mut dz[j];
+                            let sg = s.g.row_mut(srow_idx);
+                            for t in 0..tokens {
+                                let dwrow = dw.row(t);
+                                let zrow = z[j].row(t);
+                                let dzrow = dzj.row_mut(t);
+                                for k in 0..*r {
+                                    sg[k] += dwrow[k] * zrow[k];
+                                    dzrow[k] += dwrow[k] * srow[k];
+                                }
+                            }
+                        }
+                    }
+                }
+                // z_j = x_j V_j → dV_j += x_j^T dz_j ; dx_j = dz_j V_j^T.
+                let mut dx = Matrix::zeros(tokens, *inp);
+                for j in 0..bb {
+                    let xj = x.submatrix(0, tokens, j * q, (j + 1) * q);
+                    let dv = matmul_tn(&xj, &dz[j]); // q×r
+                    v[j].g.axpy(1.0, &dv);
+                    let dxj = matmul_nt(&dz[j], &v[j].v); // tokens×q
+                    for t in 0..tokens {
+                        dx.row_mut(t)[j * q..(j + 1) * q].copy_from_slice(dxj.row(t));
+                    }
+                }
+                dx
+            }
+            (LinearWeight::Monarch { b, out, inp, rb, l, .. }, LinearCache::Monarch { x, z }) => {
+                let bb = *b;
+                let p = *out / bb;
+                let q = *inp / bb;
+                let mut dz: Vec<Matrix> =
+                    (0..bb).map(|j| Matrix::zeros(tokens, z[j].cols)).collect();
+                for i in 0..bb {
+                    let dyi = dy.submatrix(0, tokens, i * p, (i + 1) * p);
+                    for j in 0..bb {
+                        // y_i += z_j L_{i,j}^T.
+                        let dl = matmul_tn(&dyi, &z[j]); // p×t
+                        l[i * bb + j].g.axpy(1.0, &dl);
+                        let d = matmul(&dyi, &l[i * bb + j].v); // tokens×t
+                        dz[j].axpy(1.0, &d);
+                    }
+                }
+                let mut dx = Matrix::zeros(tokens, *inp);
+                for j in 0..bb {
+                    // z_j = x_j R_j^T → dR_j += dz_j^T x_j ; dx_j = dz_j R_j.
+                    let xj = x.submatrix(0, tokens, j * q, (j + 1) * q);
+                    let dr = matmul_tn(&dz[j], &xj); // t×q
+                    rb[j].g.axpy(1.0, &dr);
+                    let dxj = matmul(&dz[j], &rb[j].v); // tokens×q
+                    for t in 0..tokens {
+                        dx.row_mut(t)[j * q..(j + 1) * q].copy_from_slice(dxj.row(t));
+                    }
+                }
+                dx
+            }
+            (LinearWeight::BlockDiag { b, out, inp, pd, qd }, LinearCache::BlockDiag { x, z }) => {
+                let bb = *b;
+                let p = *out / bb;
+                let q = *inp / bb;
+                let mut dx = Matrix::zeros(tokens, *inp);
+                for i in 0..bb {
+                    let dyi = dy.submatrix(0, tokens, i * p, (i + 1) * p);
+                    let dp = matmul_tn(&dyi, &z[i]);
+                    pd[i].g.axpy(1.0, &dp);
+                    let dzi = matmul(&dyi, &pd[i].v); // tokens×t
+                    let xi = x.submatrix(0, tokens, i * q, (i + 1) * q);
+                    let dq = matmul_tn(&xi, &dzi);
+                    qd[i].g.axpy(1.0, &dq);
+                    let dxi = matmul_nt(&dzi, &qd[i].v);
+                    for t in 0..tokens {
+                        dx.row_mut(t)[i * q..(i + 1) * q].copy_from_slice(dxi.row(t));
+                    }
+                }
+                dx
+            }
+            _ => panic!("cache/weight variant mismatch"),
+        }
+    }
+
+    /// Collect all trainable parameters (for the optimizer).
+    pub fn params_mut(&mut self) -> Vec<&mut PTensor> {
+        let mut out: Vec<&mut PTensor> = Vec::new();
+        match &mut self.weight {
+            LinearWeight::Dense { w } => out.push(w),
+            LinearWeight::LowRank { p, q } => {
+                out.push(p);
+                out.push(q);
+            }
+            LinearWeight::Blast { u, v, s, .. } => {
+                out.extend(u.iter_mut());
+                out.extend(v.iter_mut());
+                out.push(s);
+            }
+            LinearWeight::Monarch { rb, l, .. } => {
+                out.extend(rb.iter_mut());
+                out.extend(l.iter_mut());
+            }
+            LinearWeight::BlockDiag { pd, qd, .. } => {
+                out.extend(pd.iter_mut());
+                out.extend(qd.iter_mut());
+            }
+        }
+        if let Some(b) = &mut self.bias {
+            out.push(b);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn finite_diff_dx(layer: &Linear, x: &Matrix, dy: &Matrix, i: usize, j: usize) -> f32 {
+        let h = 1e-2f32;
+        let mut xp = x.clone();
+        *xp.at_mut(i, j) += h;
+        let mut xm = x.clone();
+        *xm.at_mut(i, j) -= h;
+        let lp: f64 = layer
+            .forward(&xp)
+            .data
+            .iter()
+            .zip(&dy.data)
+            .map(|(y, d)| (*y as f64) * (*d as f64))
+            .sum();
+        let lm: f64 = layer
+            .forward(&xm)
+            .data
+            .iter()
+            .zip(&dy.data)
+            .map(|(y, d)| (*y as f64) * (*d as f64))
+            .sum();
+        ((lp - lm) / (2.0 * h as f64)) as f32
+    }
+
+    fn check_layer(mut layer: Linear, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let x = rng.gaussian_matrix(3, layer.in_features, 1.0);
+        let dy = rng.gaussian_matrix(3, layer.out_features, 1.0);
+
+        // Forward equals dense-reconstruction forward.
+        let y = layer.forward(&x);
+        let wd = layer.dense_weight();
+        let mut y_ref = matmul_nt(&x, &wd);
+        if let Some(b) = &layer.bias {
+            for t in 0..3 {
+                for (yv, bv) in y_ref.row_mut(t).iter_mut().zip(b.v.row(0)) {
+                    *yv += bv;
+                }
+            }
+        }
+        assert!(
+            y.sub(&y_ref).fro_norm() < 1e-3 * (1.0 + y_ref.fro_norm()),
+            "forward mismatch"
+        );
+
+        // dx matches finite differences of <y, dy>.
+        let (_, cache) = layer.forward_t(&x);
+        let dx = layer.backward(&cache, &dy);
+        for (i, j) in [(0, 0), (1, 2), (2, 1)] {
+            let num = finite_diff_dx(&layer, &x, &dy, i, j);
+            let ana = dx.at(i, j);
+            assert!(
+                (num - ana).abs() < 5e-2 * (1.0 + ana.abs()),
+                "dx({i},{j}): numeric {num} vs analytic {ana}"
+            );
+        }
+
+        // Param grads: perturb one param entry, compare.
+        let h = 1e-2f32;
+        let grads: Vec<Matrix> = {
+            let mut l2 = layer.clone();
+            for p in l2.params_mut() {
+                p.zero_grad();
+            }
+            let (_, c) = l2.forward_t(&x);
+            l2.backward(&c, &dy);
+            l2.params_mut().iter().map(|p| p.g.clone()).collect()
+        };
+        let n_params = grads.len();
+        for pi in 0..n_params {
+            // Perturb entry (0, 0) of param pi.
+            let mut lp = layer.clone();
+            lp.params_mut()[pi].v.data[0] += h;
+            let mut lm = layer.clone();
+            lm.params_mut()[pi].v.data[0] -= h;
+            let f = |l: &Linear| -> f64 {
+                l.forward(&x)
+                    .data
+                    .iter()
+                    .zip(&dy.data)
+                    .map(|(y, d)| (*y as f64) * (*d as f64))
+                    .sum()
+            };
+            let num = ((f(&lp) - f(&lm)) / (2.0 * h as f64)) as f32;
+            let ana = grads[pi].data[0];
+            assert!(
+                (num - ana).abs() < 5e-2 * (1.0 + ana.abs()),
+                "param {pi} grad: numeric {num} vs analytic {ana}"
+            );
+        }
+    }
+
+    #[test]
+    fn dense_grads() {
+        let mut rng = Rng::new(300);
+        check_layer(Linear::dense(6, 8, 0.3, &mut rng), 301);
+    }
+
+    #[test]
+    fn lowrank_grads() {
+        let mut rng = Rng::new(302);
+        check_layer(Linear::low_rank(6, 8, 3, 0.3, &mut rng), 303);
+    }
+
+    #[test]
+    fn blast_grads() {
+        let mut rng = Rng::new(304);
+        check_layer(Linear::blast(6, 8, 2, 3, 0.3, &mut rng), 305);
+    }
+
+    #[test]
+    fn monarch_grads() {
+        let mut rng = Rng::new(306);
+        check_layer(Linear::monarch(6, 8, 2, 2, 0.3, &mut rng), 307);
+    }
+
+    #[test]
+    fn blockdiag_grads() {
+        let mut rng = Rng::new(308);
+        check_layer(Linear::block_diag(6, 8, 2, 2, 0.3, &mut rng), 309);
+    }
+
+    #[test]
+    fn blast_round_trip_with_blast_matrix() {
+        let mut rng = Rng::new(310);
+        let bm = BlastMatrix::random_init(8, 8, 2, 3, 0.5, &mut rng);
+        let layer = Linear::from_blast_matrix(&bm);
+        let back = layer.to_blast_matrix().unwrap();
+        assert!(bm.to_dense().sub(&back.to_dense()).fro_norm() < 1e-6);
+        // Layer forward == Algorithm 1 product.
+        let x = rng.gaussian_matrix(4, 8, 1.0);
+        let y = layer.forward(&x);
+        let y_ref = bm.matmul_act(&x);
+        assert!(y.sub(&y_ref).fro_norm() < 1e-4);
+    }
+
+    #[test]
+    fn flops_accounting() {
+        let mut rng = Rng::new(311);
+        let dense = Linear::dense(64, 64, 0.1, &mut rng);
+        let blast = Linear::blast(64, 64, 4, 8, 0.1, &mut rng);
+        assert_eq!(dense.flops_per_token(), 64 * 64);
+        assert_eq!(blast.flops_per_token(), (64 + 64 + 16) * 8);
+        assert!(blast.flops_per_token() < dense.flops_per_token() / 3);
+    }
+
+    #[test]
+    fn params_mut_counts() {
+        let mut rng = Rng::new(312);
+        let mut l = Linear::blast(8, 8, 2, 2, 0.1, &mut rng);
+        // 2 U + 2 V + s + bias = 6.
+        assert_eq!(l.params_mut().len(), 6);
+    }
+}

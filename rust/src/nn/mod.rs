@@ -1,0 +1,26 @@
+//! Neural-network stack with structured linear layers.
+//!
+//! Every layer supports both a plain inference `forward` and a cached
+//! `forward_t` + `backward` pair (manual backprop), so the same stack
+//! drives the paper's from-scratch training experiments (§4.1), the
+//! compression + re-training experiments (§4.2), and the Rust-native
+//! decode-runtime benchmark (Table 4).
+//!
+//! Models:
+//! * [`gpt::TinyLM`] — GPT-style causal LM (Fig. 5, Table 3, Table 4);
+//! * [`vit::TinyViT`] — ViT-style classifier (Fig. 4/6, Table 1);
+//! * [`dit::TinyDiT`] — DiT-style conditional denoiser (Fig. 1, Table 2).
+
+pub mod param;
+pub mod linear;
+pub mod activation;
+pub mod layernorm;
+pub mod attention;
+pub mod block;
+pub mod gpt;
+pub mod vit;
+pub mod dit;
+pub mod kvcache;
+
+pub use linear::{Linear, LinearWeight};
+pub use param::PTensor;

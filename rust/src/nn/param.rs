@@ -1,0 +1,167 @@
+//! Trainable parameter tensors and AdamW optimizer state.
+//!
+//! Every trainable weight in the stack is a `PTensor` — a value matrix
+//! plus a gradient accumulator plus (lazily allocated) Adam moments. The
+//! optimizer walks a flat `Vec<&mut PTensor>` collected from the model,
+//! which keeps the update loop allocation-free and layer-agnostic.
+
+use crate::tensor::Matrix;
+
+/// A parameter with its gradient and optimizer state.
+#[derive(Clone, Debug)]
+pub struct PTensor {
+    pub v: Matrix,
+    pub g: Matrix,
+    /// Adam first/second moments (allocated on first optimizer step).
+    pub m: Option<Matrix>,
+    pub s: Option<Matrix>,
+    /// Whether weight decay applies (paper: no decay on biases/LN).
+    pub decay: bool,
+}
+
+impl PTensor {
+    pub fn new(v: Matrix) -> Self {
+        let g = Matrix::zeros(v.rows, v.cols);
+        PTensor { v, g, m: None, s: None, decay: true }
+    }
+
+    pub fn new_nodecay(v: Matrix) -> Self {
+        let mut p = Self::new(v);
+        p.decay = false;
+        p
+    }
+
+    pub fn zero_grad(&mut self) {
+        self.g.data.fill(0.0);
+    }
+
+    pub fn numel(&self) -> usize {
+        self.v.len()
+    }
+}
+
+/// AdamW with optional cosine learning-rate schedule (the training setup
+/// of Appendix C.2 / Table 5–6).
+#[derive(Clone, Debug)]
+pub struct AdamW {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+    /// Step counter for bias correction.
+    pub t: usize,
+}
+
+impl AdamW {
+    pub fn new(lr: f32, weight_decay: f32) -> Self {
+        AdamW { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8, weight_decay, t: 0 }
+    }
+
+    /// One optimizer step over the given parameters at learning rate
+    /// `lr_now` (callers apply their schedule).
+    pub fn step(&mut self, params: &mut [&mut PTensor], lr_now: f32) {
+        self.t += 1;
+        let b1t = 1.0 - self.beta1.powi(self.t as i32);
+        let b2t = 1.0 - self.beta2.powi(self.t as i32);
+        for p in params.iter_mut() {
+            if p.m.is_none() {
+                p.m = Some(Matrix::zeros(p.v.rows, p.v.cols));
+                p.s = Some(Matrix::zeros(p.v.rows, p.v.cols));
+            }
+            let m = p.m.as_mut().unwrap();
+            let s = p.s.as_mut().unwrap();
+            let decay = if p.decay { self.weight_decay } else { 0.0 };
+            for i in 0..p.v.data.len() {
+                let g = p.g.data[i];
+                m.data[i] = self.beta1 * m.data[i] + (1.0 - self.beta1) * g;
+                s.data[i] = self.beta2 * s.data[i] + (1.0 - self.beta2) * g * g;
+                let mhat = m.data[i] / b1t;
+                let shat = s.data[i] / b2t;
+                // Decoupled weight decay (AdamW).
+                p.v.data[i] -= lr_now * (mhat / (shat.sqrt() + self.eps) + decay * p.v.data[i]);
+            }
+        }
+    }
+}
+
+/// Cosine learning-rate schedule with linear warmup (Appendix C tables).
+#[derive(Clone, Copy, Debug)]
+pub struct CosineSchedule {
+    pub base_lr: f32,
+    pub min_lr: f32,
+    pub warmup_steps: usize,
+    pub total_steps: usize,
+    pub warmup_start: f32,
+}
+
+impl CosineSchedule {
+    pub fn lr_at(&self, step: usize) -> f32 {
+        if step < self.warmup_steps {
+            let frac = step as f32 / self.warmup_steps.max(1) as f32;
+            self.warmup_start + (self.base_lr - self.warmup_start) * frac
+        } else {
+            let prog = (step - self.warmup_steps) as f32
+                / (self.total_steps.saturating_sub(self.warmup_steps)).max(1) as f32;
+            let prog = prog.min(1.0);
+            self.min_lr
+                + 0.5 * (self.base_lr - self.min_lr) * (1.0 + (std::f32::consts::PI * prog).cos())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn adamw_minimizes_quadratic() {
+        // minimize ||x - target||^2 by gradient steps.
+        let mut rng = Rng::new(200);
+        let target = rng.gaussian_matrix(4, 4, 1.0);
+        let mut p = PTensor::new(Matrix::zeros(4, 4));
+        let mut opt = AdamW::new(0.05, 0.0);
+        for _ in 0..500 {
+            p.g = p.v.sub(&target); // grad of 1/2||x-t||^2
+            opt.step(&mut [&mut p], 0.05);
+        }
+        assert!(p.v.sub(&target).fro_norm() < 0.05);
+    }
+
+    #[test]
+    fn weight_decay_shrinks() {
+        let mut p = PTensor::new(Matrix::ones(2, 2));
+        let mut opt = AdamW::new(0.1, 0.5);
+        for _ in 0..100 {
+            p.zero_grad();
+            opt.step(&mut [&mut p], 0.1);
+        }
+        assert!(p.v.max_abs() < 0.5, "decay should shrink weights: {}", p.v.max_abs());
+
+        // nodecay param untouched by decay when grad is zero.
+        let mut p2 = PTensor::new_nodecay(Matrix::ones(2, 2));
+        let mut opt2 = AdamW::new(0.1, 0.5);
+        for _ in 0..100 {
+            p2.zero_grad();
+            opt2.step(&mut [&mut p2], 0.1);
+        }
+        assert!((p2.v.max_abs() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cosine_schedule_shape() {
+        let s = CosineSchedule {
+            base_lr: 1.0,
+            min_lr: 0.1,
+            warmup_steps: 10,
+            total_steps: 110,
+            warmup_start: 0.0,
+        };
+        assert!(s.lr_at(0) < 0.2);
+        assert!((s.lr_at(10) - 1.0).abs() < 1e-5);
+        assert!(s.lr_at(60) < 1.0 && s.lr_at(60) > 0.1);
+        assert!((s.lr_at(110) - 0.1).abs() < 1e-3);
+        assert!((s.lr_at(500) - 0.1).abs() < 1e-3); // clamped past end
+    }
+}

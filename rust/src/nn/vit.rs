@@ -1,0 +1,309 @@
+//! `TinyViT` — ViT-style image classifier with structured linears.
+//!
+//! Stands in for ViT-S/ViT-B (Fig. 4, Table 1, Fig. 6): patchify a small
+//! synthetic image, add a CLS token + learned positions, run pre-LN
+//! blocks, classify from the CLS representation. Bidirectional (non-
+//! causal) attention via the same `Attention` kernel with masking off —
+//! implemented here by a dedicated non-causal forward.
+
+use super::attention::StructureKind;
+use super::block::Block;
+use super::layernorm::LayerNorm;
+use super::linear::{Linear, LinearCache};
+use super::param::PTensor;
+use crate::tensor::{Matrix, Rng};
+
+/// ViT configuration over `img×img` single-channel images with `patch`
+/// sized patches.
+#[derive(Clone, Copy, Debug)]
+pub struct VitConfig {
+    pub img: usize,
+    pub patch: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub n_classes: usize,
+    pub structure: StructureKind,
+}
+
+impl VitConfig {
+    pub fn tiny(structure: StructureKind) -> Self {
+        VitConfig {
+            img: 16,
+            patch: 4,
+            d_model: 64,
+            n_layers: 2,
+            n_heads: 4,
+            d_ff: 128,
+            n_classes: 10,
+            structure,
+        }
+    }
+
+    pub fn n_patches(&self) -> usize {
+        (self.img / self.patch) * (self.img / self.patch)
+    }
+
+    pub fn patch_dim(&self) -> usize {
+        self.patch * self.patch
+    }
+}
+
+/// The classifier.
+#[derive(Clone, Debug)]
+pub struct TinyViT {
+    pub cfg: VitConfig,
+    pub patch_proj: Linear,
+    pub cls_token: PTensor,
+    pub pos_embed: PTensor,
+    pub blocks: Vec<Block>,
+    pub ln_f: LayerNorm,
+    pub head: Linear,
+}
+
+pub struct VitCache {
+    pub patches: Matrix,
+    pub patch_cache: LinearCache,
+    pub block_caches: Vec<super::block::BlockCache>,
+    pub ln_f: super::layernorm::LnCache,
+    pub head: LinearCache,
+    pub seq: usize,
+}
+
+impl TinyViT {
+    pub fn new(cfg: VitConfig, rng: &mut Rng) -> Self {
+        let std = 0.02;
+        let seq = cfg.n_patches() + 1;
+        TinyViT {
+            cfg,
+            patch_proj: Linear::dense(cfg.d_model, cfg.patch_dim(), std, rng),
+            cls_token: PTensor::new(rng.gaussian_matrix(1, cfg.d_model, std)),
+            pos_embed: PTensor::new(rng.gaussian_matrix(seq, cfg.d_model, std)),
+            blocks: (0..cfg.n_layers)
+                .map(|_| Block::new_bidirectional(cfg.d_model, cfg.n_heads, cfg.d_ff, cfg.structure, rng))
+                .collect(),
+            ln_f: LayerNorm::new(cfg.d_model),
+            head: Linear::dense(cfg.n_classes, cfg.d_model, std, rng),
+        }
+    }
+
+    /// Split a flat `img*img` image into a `(n_patches, patch_dim)`
+    /// matrix of flattened patches.
+    pub fn patchify(&self, image: &[f32]) -> Matrix {
+        let img = self.cfg.img;
+        let p = self.cfg.patch;
+        assert_eq!(image.len(), img * img);
+        let per_side = img / p;
+        let mut out = Matrix::zeros(per_side * per_side, p * p);
+        for pi in 0..per_side {
+            for pj in 0..per_side {
+                let row = out.row_mut(pi * per_side + pj);
+                for di in 0..p {
+                    for dj in 0..p {
+                        row[di * p + dj] = image[(pi * p + di) * img + (pj * p + dj)];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    fn tokens_from_image(&self, image: &[f32]) -> (Matrix, Matrix) {
+        let patches = self.patchify(image);
+        let proj = self.patch_proj.forward(&patches); // n_patches×d
+        let seq = proj.rows + 1;
+        let mut x = Matrix::zeros(seq, self.cfg.d_model);
+        x.row_mut(0).copy_from_slice(self.cls_token.v.row(0));
+        for t in 0..proj.rows {
+            x.row_mut(t + 1).copy_from_slice(proj.row(t));
+        }
+        for t in 0..seq {
+            let pe = self.pos_embed.v.row(t);
+            let row = x.row_mut(t);
+            for c in 0..self.cfg.d_model {
+                row[c] += pe[c];
+            }
+        }
+        (x, patches)
+    }
+
+    /// Class logits for one image.
+    pub fn forward(&self, image: &[f32]) -> Matrix {
+        let (mut x, _) = self.tokens_from_image(image);
+        for blk in &self.blocks {
+            x = blk.forward(&x);
+        }
+        let ln = self.ln_f.forward(&x);
+        self.head.forward(&ln.submatrix(0, 1, 0, self.cfg.d_model))
+    }
+
+    /// Training forward with caches (single image).
+    pub fn forward_t(&self, image: &[f32]) -> (Matrix, VitCache) {
+        let patches = self.patchify(image);
+        let (proj, patch_cache) = self.patch_proj.forward_t(&patches);
+        let seq = proj.rows + 1;
+        let mut x = Matrix::zeros(seq, self.cfg.d_model);
+        x.row_mut(0).copy_from_slice(self.cls_token.v.row(0));
+        for t in 0..proj.rows {
+            x.row_mut(t + 1).copy_from_slice(proj.row(t));
+        }
+        for t in 0..seq {
+            let pe = self.pos_embed.v.row(t);
+            let row = x.row_mut(t);
+            for c in 0..self.cfg.d_model {
+                row[c] += pe[c];
+            }
+        }
+        let mut block_caches = Vec::with_capacity(self.blocks.len());
+        for blk in &self.blocks {
+            let (y, c) = blk.forward_t(&x);
+            x = y;
+            block_caches.push(c);
+        }
+        let (ln, ln_c) = self.ln_f.forward_t(&x);
+        let (logits, head_c) =
+            self.head.forward_t(&ln.submatrix(0, 1, 0, self.cfg.d_model));
+        (
+            logits,
+            VitCache { patches, patch_cache, block_caches, ln_f: ln_c, head: head_c, seq },
+        )
+    }
+
+    /// Backward from dlogits (1×classes).
+    pub fn backward(&mut self, cache: &VitCache, dlogits: &Matrix) {
+        let d = self.cfg.d_model;
+        let dcls = self.head.backward(&cache.head, dlogits); // 1×d
+        // Expand to full-seq gradient for ln_f: only CLS row nonzero.
+        let mut dln = Matrix::zeros(cache.seq, d);
+        dln.row_mut(0).copy_from_slice(dcls.row(0));
+        let mut dx = self.ln_f.backward(&cache.ln_f, &dln);
+        for (blk, c) in self.blocks.iter_mut().zip(&cache.block_caches).rev() {
+            dx = blk.backward(c, &dx);
+        }
+        // Position embeddings.
+        for t in 0..cache.seq {
+            let drow = dx.row(t);
+            let prow = self.pos_embed.g.row_mut(t);
+            for (g, dv) in prow.iter_mut().zip(drow) {
+                *g += dv;
+            }
+        }
+        // CLS token.
+        {
+            let crow = self.cls_token.g.row_mut(0);
+            for (g, dv) in crow.iter_mut().zip(dx.row(0)) {
+                *g += dv;
+            }
+        }
+        // Patch projection.
+        let dproj = dx.submatrix(1, cache.seq, 0, d);
+        self.patch_proj.backward(&cache.patch_cache, &dproj);
+    }
+
+    /// Cross-entropy loss + grads for one labeled image.
+    pub fn train_example(&mut self, image: &[f32], label: usize) -> f64 {
+        let (logits, cache) = self.forward_t(image);
+        let (loss, dlogits) =
+            super::activation::cross_entropy(&logits, &[label], usize::MAX);
+        self.backward(&cache, &dlogits);
+        loss
+    }
+
+    /// Predicted class.
+    pub fn predict(&self, image: &[f32]) -> usize {
+        let logits = self.forward(image);
+        super::gpt::argmax(logits.row(0))
+    }
+
+    pub fn params_mut(&mut self) -> Vec<&mut PTensor> {
+        let mut out = self.patch_proj.params_mut();
+        out.push(&mut self.cls_token);
+        out.push(&mut self.pos_embed);
+        for blk in &mut self.blocks {
+            out.extend(blk.params_mut());
+        }
+        out.extend(self.ln_f.params_mut());
+        out.extend(self.head.params_mut());
+        out
+    }
+
+    pub fn zero_grads(&mut self) {
+        for p in self.params_mut() {
+            p.zero_grad();
+        }
+    }
+
+    pub fn num_params(&self) -> usize {
+        let blocks: usize = self.blocks.iter().map(|b| b.num_params()).sum();
+        self.patch_proj.num_params()
+            + self.cls_token.numel()
+            + self.pos_embed.numel()
+            + blocks
+            + 2 * self.cfg.d_model
+            + self.head.num_params()
+    }
+
+    pub fn flops_per_token(&self) -> usize {
+        self.blocks.iter().map(|b| b.flops_per_token()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn patchify_layout() {
+        let mut rng = Rng::new(410);
+        let vit = TinyViT::new(VitConfig::tiny(StructureKind::Dense), &mut rng);
+        let mut image = vec![0.0f32; 16 * 16];
+        // Mark pixel (4, 8): patch row 1, patch col 2 → patch index 1*4+2=6,
+        // within-patch (0,0) → col 0.
+        image[4 * 16 + 8] = 7.0;
+        let p = vit.patchify(&image);
+        assert_eq!(p.shape(), (16, 16));
+        assert_eq!(p.at(6, 0), 7.0);
+        assert_eq!(p.data.iter().filter(|&&v| v != 0.0).count(), 1);
+    }
+
+    #[test]
+    fn forward_shape() {
+        let mut rng = Rng::new(411);
+        let vit = TinyViT::new(VitConfig::tiny(StructureKind::Blast { b: 2, r: 4 }), &mut rng);
+        let image: Vec<f32> = (0..256).map(|i| (i as f32 / 256.0).sin()).collect();
+        let logits = vit.forward(&image);
+        assert_eq!(logits.shape(), (1, 10));
+        assert!(!logits.has_nonfinite());
+    }
+
+    #[test]
+    fn training_reduces_loss() {
+        let mut rng = Rng::new(412);
+        let mut vit = TinyViT::new(VitConfig::tiny(StructureKind::Dense), &mut rng);
+        let image: Vec<f32> = (0..256).map(|i| ((i * 13) % 17) as f32 / 17.0).collect();
+        let mut opt = crate::nn::param::AdamW::new(1e-2, 0.0);
+        let (logits0, _) = vit.forward_t(&image);
+        let (loss0, _) =
+            crate::nn::activation::cross_entropy(&logits0, &[3], usize::MAX);
+        for _ in 0..15 {
+            vit.zero_grads();
+            vit.train_example(&image, 3);
+            opt.step(&mut vit.params_mut(), 1e-2);
+        }
+        let (logits1, _) = vit.forward_t(&image);
+        let (loss1, _) =
+            crate::nn::activation::cross_entropy(&logits1, &[3], usize::MAX);
+        assert!(loss1 < loss0 * 0.5, "loss {loss0} -> {loss1}");
+        assert_eq!(vit.predict(&image), 3);
+    }
+
+    #[test]
+    fn structured_param_savings() {
+        let mut rng = Rng::new(413);
+        let dense = TinyViT::new(VitConfig::tiny(StructureKind::Dense), &mut rng);
+        let blast =
+            TinyViT::new(VitConfig::tiny(StructureKind::Blast { b: 4, r: 6 }), &mut rng);
+        assert!(blast.num_params() < dense.num_params());
+    }
+}

@@ -1,0 +1,225 @@
+//! PJRT executor: compile HLO-text artifacts once, execute many times.
+//!
+//! Wraps the `xla` crate (`PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`) behind
+//! a value-level `TensorValue` interface so the coordinator and the
+//! end-to-end training example can feed plain `f32`/`i32` buffers in
+//! manifest order without touching XLA types.
+
+use super::manifest::ArtifactEntry;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+
+/// A host-side tensor value (what crosses the executor boundary).
+#[derive(Clone, Debug)]
+pub enum TensorValue {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl TensorValue {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            TensorValue::F32 { shape, .. } | TensorValue::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        TensorValue::F32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            TensorValue::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            TensorValue::I32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    pub fn from_matrix(m: &crate::tensor::Matrix) -> Self {
+        TensorValue::F32 { shape: vec![m.rows, m.cols], data: m.data.clone() }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        match self {
+            TensorValue::F32 { shape, data } => {
+                let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
+                xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::F32,
+                    shape,
+                    &bytes,
+                )
+                .map_err(|e| anyhow::anyhow!("literal create failed: {e:?}"))
+            }
+            TensorValue::I32 { shape, data } => {
+                let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
+                xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::S32,
+                    shape,
+                    &bytes,
+                )
+                .map_err(|e| anyhow::anyhow!("literal create failed: {e:?}"))
+            }
+        }
+    }
+
+    fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = lit
+            .array_shape()
+            .map_err(|e| anyhow::anyhow!("shape query failed: {e:?}"))?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(TensorValue::F32 {
+                shape: dims,
+                data: lit
+                    .to_vec::<f32>()
+                    .map_err(|e| anyhow::anyhow!("to_vec failed: {e:?}"))?,
+            }),
+            xla::ElementType::S32 => Ok(TensorValue::I32 {
+                shape: dims,
+                data: lit
+                    .to_vec::<i32>()
+                    .map_err(|e| anyhow::anyhow!("to_vec failed: {e:?}"))?,
+            }),
+            other => bail!("unsupported output element type {other:?}"),
+        }
+    }
+}
+
+/// Shared PJRT client + executable cache.
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl PjrtEngine {
+    pub fn cpu() -> Result<Self> {
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(PjrtEngine { client, cache: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) an artifact's executable.
+    pub fn load(&mut self, entry: &ArtifactEntry) -> Result<Executor<'_>> {
+        if !self.cache.contains_key(&entry.name) {
+            let proto = xla::HloModuleProto::from_text_file(&entry.file)
+                .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", entry.file.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compiling {}: {e:?}", entry.name))?;
+            self.cache.insert(entry.name.clone(), exe);
+        }
+        Ok(Executor {
+            exe: &self.cache[&entry.name],
+            entry: entry.clone(),
+        })
+    }
+}
+
+/// A compiled artifact ready to run.
+pub struct Executor<'a> {
+    exe: &'a xla::PjRtLoadedExecutable,
+    pub entry: ArtifactEntry,
+}
+
+impl Executor<'_> {
+    /// Execute with arguments in manifest order; returns the flattened
+    /// tuple outputs.
+    pub fn run(&self, args: &[TensorValue]) -> Result<Vec<TensorValue>> {
+        if args.len() != self.entry.arg_shapes.len() {
+            bail!(
+                "artifact {} expects {} args, got {}",
+                self.entry.name,
+                self.entry.arg_shapes.len(),
+                args.len()
+            );
+        }
+        // Shape-check against the manifest (scalars may be [] vs [1]).
+        for (i, (arg, want)) in args.iter().zip(&self.entry.arg_shapes).enumerate() {
+            let got = arg.shape();
+            if got != want.as_slice() && !(got.is_empty() && want.is_empty()) {
+                bail!(
+                    "artifact {} arg {i}: shape {:?} != manifest {:?}",
+                    self.entry.name,
+                    got,
+                    want
+                );
+            }
+        }
+        let literals: Vec<xla::Literal> =
+            args.iter().map(|a| a.to_literal()).collect::<Result<_>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow::anyhow!("execute {}: {e:?}", self.entry.name))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal_sync: {e:?}"))?;
+        // aot.py lowers with return_tuple=True.
+        let parts = lit
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("to_tuple: {e:?}"))?;
+        parts.iter().map(TensorValue::from_literal).collect()
+    }
+}
+
+/// Load a params `.bmx` bundle into manifest-ordered TensorValues, using
+/// the artifact's `param_names` and `arg_shapes` (the bundle stores 2-D
+/// views; reshape to the manifest's true shapes).
+pub fn load_params_ordered(entry: &ArtifactEntry) -> Result<Vec<TensorValue>> {
+    let bundle = crate::tensor::io::TensorBundle::load(&entry.params_file)?;
+    let mut out = Vec::with_capacity(entry.param_names.len());
+    for (i, name) in entry.param_names.iter().enumerate() {
+        let m = bundle.get(name).with_context(|| format!("param {name}"))?;
+        let want = &entry.arg_shapes[i];
+        let numel: usize = want.iter().product::<usize>().max(1);
+        if m.len() != numel {
+            bail!(
+                "param {name}: bundle has {} elements, manifest wants {:?}",
+                m.len(),
+                want
+            );
+        }
+        out.push(TensorValue::F32 { shape: want.clone(), data: m.data.clone() });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_value_round_trip() {
+        let v = TensorValue::F32 { shape: vec![2, 2], data: vec![1., 2., 3., 4.] };
+        let lit = v.to_literal().unwrap();
+        let back = TensorValue::from_literal(&lit).unwrap();
+        assert_eq!(back.shape(), &[2, 2]);
+        assert_eq!(back.as_f32().unwrap(), &[1., 2., 3., 4.]);
+
+        let vi = TensorValue::I32 { shape: vec![3], data: vec![7, -1, 0] };
+        let lit = vi.to_literal().unwrap();
+        let back = TensorValue::from_literal(&lit).unwrap();
+        assert_eq!(back.as_i32().unwrap(), &[7, -1, 0]);
+    }
+
+    #[test]
+    fn scalar_value() {
+        let v = TensorValue::scalar_f32(2.5);
+        let lit = v.to_literal().unwrap();
+        let back = TensorValue::from_literal(&lit).unwrap();
+        assert_eq!(back.as_f32().unwrap(), &[2.5]);
+    }
+}

@@ -1,0 +1,158 @@
+//! Artifact manifest parsing (`artifacts/manifest.json`, written by
+//! `python/compile/aot.py`): per-artifact entrypoint names, file paths,
+//! argument shapes/dtypes, and flattened-parameter order.
+
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One AOT artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub variant: String,
+    pub entrypoint: String,
+    pub file: PathBuf,
+    pub params_file: PathBuf,
+    pub param_names: Vec<String>,
+    pub arg_shapes: Vec<Vec<usize>>,
+    pub arg_dtypes: Vec<String>,
+    pub num_outputs: usize,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let root = Json::parse(&text).context("parsing manifest.json")?;
+        let mut artifacts = Vec::new();
+        for a in root.get("artifacts")?.as_arr().context("artifacts not array")? {
+            let shapes = a
+                .get("arg_shapes")?
+                .as_arr()
+                .context("arg_shapes")?
+                .iter()
+                .map(|s| {
+                    s.as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .filter_map(|d| d.as_usize())
+                        .collect()
+                })
+                .collect();
+            let dtypes = a
+                .get("arg_dtypes")?
+                .as_arr()
+                .context("arg_dtypes")?
+                .iter()
+                .filter_map(|d| d.as_str().map(str::to_string))
+                .collect();
+            let param_names = a
+                .get("param_names")?
+                .as_arr()
+                .context("param_names")?
+                .iter()
+                .filter_map(|d| d.as_str().map(str::to_string))
+                .collect();
+            artifacts.push(ArtifactEntry {
+                name: a.get("name")?.as_str().context("name")?.to_string(),
+                variant: a.get("variant")?.as_str().context("variant")?.to_string(),
+                entrypoint: a.get("entrypoint")?.as_str().context("entrypoint")?.to_string(),
+                file: dir.join(a.get("file")?.as_str().context("file")?),
+                params_file: dir.join(a.get("params_file")?.as_str().context("params_file")?),
+                param_names,
+                arg_shapes: shapes,
+                arg_dtypes: dtypes,
+                num_outputs: a.get("num_outputs")?.as_usize().context("num_outputs")?,
+            });
+        }
+        Ok(Manifest { dir, artifacts })
+    }
+
+    /// Look up an artifact by `variant.entrypoint` name.
+    pub fn find(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .with_context(|| {
+                format!(
+                    "artifact `{name}` not in manifest (have: {:?})",
+                    self.artifacts.iter().map(|a| &a.name).collect::<Vec<_>>()
+                )
+            })
+    }
+
+    pub fn variants(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.artifacts.iter().map(|a| a.variant.as_str()).collect();
+        v.sort();
+        v.dedup();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_available() -> bool {
+        std::path::Path::new("artifacts/manifest.json").exists()
+    }
+
+    #[test]
+    fn parses_real_manifest_when_present() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load("artifacts").unwrap();
+        assert!(!m.artifacts.is_empty());
+        let fwd = m.find("tinylm_dense.forward").unwrap();
+        assert_eq!(fwd.entrypoint, "forward");
+        assert!(fwd.file.exists(), "hlo file missing");
+        assert!(fwd.params_file.exists(), "params file missing");
+        assert!(!fwd.param_names.is_empty());
+        // Last arg of forward is the token vector.
+        assert_eq!(fwd.arg_shapes.last().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn missing_artifact_error_lists_names() {
+        if !artifacts_available() {
+            return;
+        }
+        let m = Manifest::load("artifacts").unwrap();
+        let err = m.find("nope.forward").unwrap_err().to_string();
+        assert!(err.contains("nope.forward"));
+    }
+
+    #[test]
+    fn parses_synthetic_manifest() {
+        let dir = std::env::temp_dir().join("blast_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"format":1,"artifacts":[{"name":"m.fwd","variant":"m",
+                "entrypoint":"fwd","file":"m.fwd.hlo.txt",
+                "params_file":"m.params.bmx","param_names":["a","b"],
+                "arg_shapes":[[2,3],[4]],"arg_dtypes":["float32","int32"],
+                "num_outputs":1,"config":{}}]}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let e = m.find("m.fwd").unwrap();
+        assert_eq!(e.arg_shapes, vec![vec![2, 3], vec![4]]);
+        assert_eq!(e.arg_dtypes, vec!["float32", "int32"]);
+        assert_eq!(m.variants(), vec!["m"]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,5 @@
+pub mod manifest;
+pub mod executor;
+
+pub use executor::{Executor, PjrtEngine};
+pub use manifest::{ArtifactEntry, Manifest};

@@ -1,0 +1,181 @@
+//! Binary tensor I/O shared between the Rust runtime and the Python build
+//! path.
+//!
+//! Format (`.bmx`, little-endian): magic `b"BMX1"`, then `u32 count`, then
+//! per entry: `u32 name_len`, name bytes (utf-8), `u32 rows`, `u32 cols`,
+//! `rows*cols` f32 values. Simple enough that `python/compile/aot.py`
+//! reads/writes the same files with `struct` + `numpy`.
+
+use super::matrix::Matrix;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"BMX1";
+
+/// An ordered, named collection of matrices (a checkpoint shard).
+#[derive(Clone, Debug, Default)]
+pub struct TensorBundle {
+    pub entries: BTreeMap<String, Matrix>,
+}
+
+impl TensorBundle {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, name: impl Into<String>, m: Matrix) {
+        self.entries.insert(name.into(), m);
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Matrix> {
+        self.entries
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("tensor `{name}` not in bundle (have: {:?})",
+                self.entries.keys().collect::<Vec<_>>()))
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Total parameter count across all entries.
+    pub fn num_params(&self) -> usize {
+        self.entries.values().map(|m| m.len()).sum()
+    }
+
+    /// Serialize to a writer.
+    pub fn write_to(&self, w: &mut impl Write) -> Result<()> {
+        w.write_all(MAGIC)?;
+        w.write_all(&(self.entries.len() as u32).to_le_bytes())?;
+        for (name, m) in &self.entries {
+            let nb = name.as_bytes();
+            w.write_all(&(nb.len() as u32).to_le_bytes())?;
+            w.write_all(nb)?;
+            w.write_all(&(m.rows as u32).to_le_bytes())?;
+            w.write_all(&(m.cols as u32).to_le_bytes())?;
+            // Bulk-write the f32 payload.
+            let bytes: Vec<u8> = m.data.iter().flat_map(|x| x.to_le_bytes()).collect();
+            w.write_all(&bytes)?;
+        }
+        Ok(())
+    }
+
+    /// Deserialize from a reader.
+    pub fn read_from(r: &mut impl Read) -> Result<Self> {
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("bad magic: expected BMX1, got {:?}", magic);
+        }
+        let count = read_u32(r)? as usize;
+        let mut entries = BTreeMap::new();
+        for _ in 0..count {
+            let name_len = read_u32(r)? as usize;
+            if name_len > 1 << 20 {
+                bail!("unreasonable name length {name_len}");
+            }
+            let mut nb = vec![0u8; name_len];
+            r.read_exact(&mut nb)?;
+            let name = String::from_utf8(nb).context("tensor name not utf-8")?;
+            let rows = read_u32(r)? as usize;
+            let cols = read_u32(r)? as usize;
+            if rows.checked_mul(cols).map_or(true, |n| n > 1 << 31) {
+                bail!("unreasonable tensor shape {rows}x{cols}");
+            }
+            let mut bytes = vec![0u8; rows * cols * 4];
+            r.read_exact(&mut bytes)?;
+            let data: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            entries.insert(name, Matrix::from_vec(rows, cols, data));
+        }
+        Ok(TensorBundle { entries })
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut f = std::io::BufWriter::new(
+            std::fs::File::create(path.as_ref())
+                .with_context(|| format!("creating {}", path.as_ref().display()))?,
+        );
+        self.write_to(&mut f)
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path.as_ref())
+                .with_context(|| format!("opening {}", path.as_ref().display()))?,
+        );
+        Self::read_from(&mut f)
+    }
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::rng::Rng;
+
+    #[test]
+    fn round_trip_in_memory() {
+        let mut rng = Rng::new(1);
+        let mut b = TensorBundle::new();
+        b.insert("w1", rng.gaussian_matrix(3, 5, 1.0));
+        b.insert("w2", rng.gaussian_matrix(7, 2, 0.5));
+        b.insert("empty", Matrix::zeros(0, 4));
+        let mut buf = Vec::new();
+        b.write_to(&mut buf).unwrap();
+        let b2 = TensorBundle::read_from(&mut &buf[..]).unwrap();
+        assert_eq!(b2.len(), 3);
+        assert_eq!(b2.get("w1").unwrap(), b.get("w1").unwrap());
+        assert_eq!(b2.get("w2").unwrap(), b.get("w2").unwrap());
+        assert_eq!(b2.get("empty").unwrap().shape(), (0, 4));
+    }
+
+    #[test]
+    fn round_trip_file() {
+        let dir = std::env::temp_dir().join("blast_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bundle.bmx");
+        let mut rng = Rng::new(2);
+        let mut b = TensorBundle::new();
+        b.insert("layer.0.weight", rng.gaussian_matrix(16, 16, 1.0));
+        b.save(&path).unwrap();
+        let b2 = TensorBundle::load(&path).unwrap();
+        assert_eq!(b2.get("layer.0.weight").unwrap(), b.get("layer.0.weight").unwrap());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let buf = b"NOPE\x00\x00\x00\x00".to_vec();
+        assert!(TensorBundle::read_from(&mut &buf[..]).is_err());
+    }
+
+    #[test]
+    fn missing_tensor_error_lists_names() {
+        let mut b = TensorBundle::new();
+        b.insert("a", Matrix::zeros(1, 1));
+        let err = b.get("b").unwrap_err().to_string();
+        assert!(err.contains("`b`") && err.contains("a"));
+    }
+
+    #[test]
+    fn num_params() {
+        let mut b = TensorBundle::new();
+        b.insert("x", Matrix::zeros(3, 4));
+        b.insert("y", Matrix::zeros(2, 2));
+        assert_eq!(b.num_params(), 16);
+    }
+}

@@ -1,0 +1,437 @@
+//! Row-major `f32` matrix with block-view support.
+
+use std::fmt;
+
+/// A dense row-major `f32` matrix.
+///
+/// This is the workhorse container for the whole Rust layer: weights,
+/// activations, factor matrices (`U_i`, `V_j`), and gradients all live in
+/// `Matrix`. Storage is a flat `Vec<f32>` of length `rows * cols`.
+#[derive(Clone, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    /// All-zeros matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// All-ones matrix.
+    pub fn ones(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![1.0; rows * cols] }
+    }
+
+    /// Identity matrix of size `n`.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    /// Build from an existing flat row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "buffer length mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    /// Build from a function of (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Matrix { rows, cols, data }
+    }
+
+    /// Diagonal matrix from a vector.
+    pub fn diag(v: &[f32]) -> Self {
+        let n = v.len();
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = v[i];
+        }
+        m
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// Row `i` as a slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Column `j` copied out into a Vec.
+    pub fn col(&self, j: usize) -> Vec<f32> {
+        (0..self.rows).map(|i| self.at(i, j)).collect()
+    }
+
+    /// Shape as a tuple.
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// Number of elements.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        // Blocked transpose for cache friendliness on large matrices.
+        const B: usize = 32;
+        for i0 in (0..self.rows).step_by(B) {
+            for j0 in (0..self.cols).step_by(B) {
+                for i in i0..(i0 + B).min(self.rows) {
+                    for j in j0..(j0 + B).min(self.cols) {
+                        t.data[j * self.rows + i] = self.data[i * self.cols + j];
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    /// Copy of the sub-matrix `rows r0..r1`, `cols c0..c1` (exclusive ends).
+    pub fn submatrix(&self, r0: usize, r1: usize, c0: usize, c1: usize) -> Matrix {
+        assert!(r1 <= self.rows && c1 <= self.cols && r0 <= r1 && c0 <= c1);
+        let mut out = Matrix::zeros(r1 - r0, c1 - c0);
+        for (oi, i) in (r0..r1).enumerate() {
+            let src = &self.data[i * self.cols + c0..i * self.cols + c1];
+            out.row_mut(oi).copy_from_slice(src);
+        }
+        out
+    }
+
+    /// Write `block` into the sub-matrix starting at `(r0, c0)`.
+    pub fn set_submatrix(&mut self, r0: usize, c0: usize, block: &Matrix) {
+        assert!(r0 + block.rows <= self.rows && c0 + block.cols <= self.cols);
+        for i in 0..block.rows {
+            let dst_start = (r0 + i) * self.cols + c0;
+            self.data[dst_start..dst_start + block.cols].copy_from_slice(block.row(i));
+        }
+    }
+
+    /// The `(i, j)` block of an equally partitioned matrix (Eq. 1): the
+    /// matrix is split into `b_rows × b_cols` blocks; block sizes must
+    /// divide evenly.
+    pub fn block(&self, i: usize, j: usize, b_rows: usize, b_cols: usize) -> Matrix {
+        assert_eq!(self.rows % b_rows, 0, "rows must divide into b_rows blocks");
+        assert_eq!(self.cols % b_cols, 0, "cols must divide into b_cols blocks");
+        let p = self.rows / b_rows;
+        let q = self.cols / b_cols;
+        self.submatrix(i * p, (i + 1) * p, j * q, (j + 1) * q)
+    }
+
+    /// Block row `i` (all columns): an `p × n` slice of the partition.
+    pub fn block_row(&self, i: usize, b_rows: usize) -> Matrix {
+        assert_eq!(self.rows % b_rows, 0);
+        let p = self.rows / b_rows;
+        self.submatrix(i * p, (i + 1) * p, 0, self.cols)
+    }
+
+    /// Block column `j` (all rows): an `m × q` slice of the partition.
+    pub fn block_col(&self, j: usize, b_cols: usize) -> Matrix {
+        assert_eq!(self.cols % b_cols, 0);
+        let q = self.cols / b_cols;
+        self.submatrix(0, self.rows, j * q, (j + 1) * q)
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f32 {
+        self.data.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>().sqrt() as f32
+    }
+
+    /// Squared Frobenius norm (f64 accumulation).
+    pub fn fro_norm_sq(&self) -> f64 {
+        self.data.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>()
+    }
+
+    /// Max absolute entry.
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |a, &x| a.max(x.abs()))
+    }
+
+    /// Elementwise map into a new matrix.
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Matrix {
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    /// In-place elementwise map.
+    pub fn map_inplace(&mut self, f: impl Fn(f32) -> f32) {
+        for x in &mut self.data {
+            *x = f(*x);
+        }
+    }
+
+    /// `self + other`.
+    pub fn add(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.shape(), other.shape());
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// `self - other`.
+    pub fn sub(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.shape(), other.shape());
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// In-place `self += alpha * other` (axpy).
+    pub fn axpy(&mut self, alpha: f32, other: &Matrix) {
+        assert_eq!(self.shape(), other.shape());
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    /// `alpha * self`.
+    pub fn scale(&self, alpha: f32) -> Matrix {
+        self.map(|x| alpha * x)
+    }
+
+    /// In-place scaling.
+    pub fn scale_inplace(&mut self, alpha: f32) {
+        for x in &mut self.data {
+            *x *= alpha;
+        }
+    }
+
+    /// Hadamard (elementwise) product, the `⊙` of Eq. 9.
+    pub fn hadamard(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.shape(), other.shape());
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a * b).collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// Extract the main diagonal.
+    pub fn diagonal(&self) -> Vec<f32> {
+        let n = self.rows.min(self.cols);
+        (0..n).map(|i| self.at(i, i)).collect()
+    }
+
+    /// Sum of all entries.
+    pub fn sum(&self) -> f64 {
+        self.data.iter().map(|&x| x as f64).sum()
+    }
+
+    /// Mean of all entries.
+    pub fn mean(&self) -> f64 {
+        self.sum() / self.len() as f64
+    }
+
+    /// True if any entry is NaN or infinite.
+    pub fn has_nonfinite(&self) -> bool {
+        self.data.iter().any(|x| !x.is_finite())
+    }
+
+    /// Vertically stack matrices (all must share `cols`).
+    pub fn vstack(mats: &[&Matrix]) -> Matrix {
+        assert!(!mats.is_empty());
+        let cols = mats[0].cols;
+        assert!(mats.iter().all(|m| m.cols == cols));
+        let rows = mats.iter().map(|m| m.rows).sum();
+        let mut data = Vec::with_capacity(rows * cols);
+        for m in mats {
+            data.extend_from_slice(&m.data);
+        }
+        Matrix { rows, cols, data }
+    }
+
+    /// Horizontally stack matrices (all must share `rows`).
+    pub fn hstack(mats: &[&Matrix]) -> Matrix {
+        assert!(!mats.is_empty());
+        let rows = mats[0].rows;
+        assert!(mats.iter().all(|m| m.rows == rows));
+        let cols = mats.iter().map(|m| m.cols).sum();
+        let mut out = Matrix::zeros(rows, cols);
+        let mut c0 = 0;
+        for m in mats {
+            out.set_submatrix(0, c0, m);
+            c0 += m.cols;
+        }
+        out
+    }
+}
+
+impl fmt::Debug for Matrix {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Matrix({}x{})", self.rows, self.cols)?;
+        if self.rows <= 8 && self.cols <= 8 {
+            writeln!(f)?;
+            for i in 0..self.rows {
+                write!(f, "  [")?;
+                for j in 0..self.cols {
+                    write!(f, "{:>9.4}", self.at(i, j))?;
+                    if j + 1 < self.cols {
+                        write!(f, ", ")?;
+                    }
+                }
+                writeln!(f, "]")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_ones_eye() {
+        let z = Matrix::zeros(2, 3);
+        assert_eq!(z.shape(), (2, 3));
+        assert!(z.data.iter().all(|&x| x == 0.0));
+        let o = Matrix::ones(3, 2);
+        assert!(o.data.iter().all(|&x| x == 1.0));
+        let e = Matrix::eye(3);
+        assert_eq!(e.at(0, 0), 1.0);
+        assert_eq!(e.at(0, 1), 0.0);
+        assert_eq!(e.at(2, 2), 1.0);
+    }
+
+    #[test]
+    fn indexing_and_rows() {
+        let m = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(m.at(0, 2), 3.0);
+        assert_eq!(m.at(1, 0), 4.0);
+        assert_eq!(m.row(1), &[4., 5., 6.]);
+        assert_eq!(m.col(1), vec![2., 5.]);
+    }
+
+    #[test]
+    fn transpose_round_trip() {
+        let m = Matrix::from_fn(37, 53, |i, j| (i * 53 + j) as f32);
+        let t = m.transpose();
+        assert_eq!(t.shape(), (53, 37));
+        assert_eq!(t.at(5, 7), m.at(7, 5));
+        assert_eq!(t.transpose(), m);
+    }
+
+    #[test]
+    fn submatrix_and_blocks() {
+        let m = Matrix::from_fn(6, 6, |i, j| (i * 10 + j) as f32);
+        let s = m.submatrix(1, 3, 2, 5);
+        assert_eq!(s.shape(), (2, 3));
+        assert_eq!(s.at(0, 0), 12.0);
+        assert_eq!(s.at(1, 2), 24.0);
+
+        // 3x3 partition of a 6x6 matrix: blocks are 2x2.
+        let b = m.block(1, 2, 3, 3);
+        assert_eq!(b.shape(), (2, 2));
+        assert_eq!(b.at(0, 0), m.at(2, 4));
+
+        let br = m.block_row(2, 3);
+        assert_eq!(br.shape(), (2, 6));
+        assert_eq!(br.at(0, 0), m.at(4, 0));
+
+        let bc = m.block_col(0, 3);
+        assert_eq!(bc.shape(), (6, 2));
+        assert_eq!(bc.at(5, 1), m.at(5, 1));
+    }
+
+    #[test]
+    fn set_submatrix_round_trip() {
+        let mut m = Matrix::zeros(4, 4);
+        let b = Matrix::from_fn(2, 2, |i, j| (i + j) as f32 + 1.0);
+        m.set_submatrix(1, 2, &b);
+        assert_eq!(m.block(0, 1, 2, 2).submatrix(1, 2, 0, 2), b.submatrix(0, 1, 0, 2));
+        assert_eq!(m.at(1, 2), 1.0);
+        assert_eq!(m.at(2, 3), 3.0);
+        assert_eq!(m.at(0, 0), 0.0);
+    }
+
+    #[test]
+    fn arithmetic() {
+        let a = Matrix::from_vec(2, 2, vec![1., 2., 3., 4.]);
+        let b = Matrix::from_vec(2, 2, vec![5., 6., 7., 8.]);
+        assert_eq!(a.add(&b).data, vec![6., 8., 10., 12.]);
+        assert_eq!(b.sub(&a).data, vec![4., 4., 4., 4.]);
+        assert_eq!(a.hadamard(&b).data, vec![5., 12., 21., 32.]);
+        assert_eq!(a.scale(2.0).data, vec![2., 4., 6., 8.]);
+        let mut c = a.clone();
+        c.axpy(0.5, &b);
+        assert_eq!(c.data, vec![3.5, 5., 6.5, 8.]);
+    }
+
+    #[test]
+    fn norms() {
+        let a = Matrix::from_vec(1, 2, vec![3., 4.]);
+        assert!((a.fro_norm() - 5.0).abs() < 1e-6);
+        assert!((a.fro_norm_sq() - 25.0).abs() < 1e-9);
+        assert_eq!(a.max_abs(), 4.0);
+    }
+
+    #[test]
+    fn stack() {
+        let a = Matrix::ones(1, 2);
+        let b = Matrix::zeros(2, 2);
+        let v = Matrix::vstack(&[&a, &b]);
+        assert_eq!(v.shape(), (3, 2));
+        assert_eq!(v.at(0, 0), 1.0);
+        assert_eq!(v.at(1, 0), 0.0);
+
+        let c = Matrix::ones(2, 1);
+        let h = Matrix::hstack(&[&b, &c]);
+        assert_eq!(h.shape(), (2, 3));
+        assert_eq!(h.at(0, 2), 1.0);
+        assert_eq!(h.at(1, 0), 0.0);
+    }
+
+    #[test]
+    fn diag_and_diagonal() {
+        let d = Matrix::diag(&[1., 2., 3.]);
+        assert_eq!(d.at(1, 1), 2.0);
+        assert_eq!(d.at(0, 1), 0.0);
+        assert_eq!(d.diagonal(), vec![1., 2., 3.]);
+    }
+
+    #[test]
+    fn nonfinite_detection() {
+        let mut m = Matrix::zeros(2, 2);
+        assert!(!m.has_nonfinite());
+        m.set(0, 1, f32::NAN);
+        assert!(m.has_nonfinite());
+    }
+}

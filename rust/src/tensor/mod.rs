@@ -1,0 +1,17 @@
+//! Dense tensor substrate.
+//!
+//! The paper's algorithms (Algorithm 1 matmul, Algorithm 2 factorization,
+//! transformer inference/training) are expressed over row-major `f32`
+//! matrices. This module provides the `Matrix` type, cache-blocked and
+//! rayon-parallel GEMM/GEMV kernels, elementwise operations, block views
+//! (the `b×b` partitioning of Eq. 1), a deterministic RNG, and a binary
+//! serialization format shared with the Python build path.
+
+pub mod matrix;
+pub mod ops;
+pub mod rng;
+pub mod io;
+
+pub use matrix::Matrix;
+pub use ops::{gemm, gemm_bias, gemv, matmul, matmul_tn, matmul_nt};
+pub use rng::Rng;

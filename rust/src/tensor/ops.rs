@@ -1,0 +1,332 @@
+//! Matrix-multiply kernels: cache-blocked, thread-parallel GEMM plus the
+//! transposed variants the factorization algorithms need (`A^T B`, `A B^T`).
+//!
+//! These kernels are the Rust-native hot path for the experiments that do
+//! not go through PJRT (Algorithm 2 factorization, Rust-native training,
+//! and the Table 4 decode-runtime benchmark). Parallelism comes from the
+//! in-repo scoped-thread pool (`util::par`); the inner loops are written
+//! over contiguous rows so they auto-vectorize.
+
+use super::matrix::Matrix;
+use crate::util::par;
+
+/// Panel width along the shared (k) dimension. Chosen so one panel of the
+/// B operand stays L1-resident.
+const KC: usize = 256;
+/// Minimum work (rows*cols*k) before we bother spawning threads.
+const PAR_THRESHOLD: usize = 64 * 64 * 64;
+
+/// `C = A · B`.
+pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.rows, "matmul shape mismatch: {:?} x {:?}", a.shape(), b.shape());
+    let mut c = Matrix::zeros(a.rows, b.cols);
+    gemm(1.0, a, b, 0.0, &mut c);
+    c
+}
+
+/// `C = A^T · B` without materializing the transpose.
+pub fn matmul_tn(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.rows, b.rows, "matmul_tn shape mismatch");
+    let (k, m) = (a.rows, a.cols);
+    let n = b.cols;
+    let mut c = Matrix::zeros(m, n);
+    if m * n * k >= PAR_THRESHOLD && m >= 8 {
+        // Parallelize over output row chunks: each chunk re-scans A/B rows
+        // but owns a disjoint slice of C.
+        let threads = par::num_threads();
+        let chunk_rows = m.div_ceil(threads).max(1);
+        par::par_chunks_mut(&mut c.data, chunk_rows * n, |ci, c_chunk| {
+            let i0 = ci * chunk_rows;
+            let rows_here = c_chunk.len() / n;
+            for t in 0..k {
+                let arow = a.row(t);
+                let brow = b.row(t);
+                for ii in 0..rows_here {
+                    let aval = arow[i0 + ii];
+                    if aval == 0.0 {
+                        continue;
+                    }
+                    let crow = &mut c_chunk[ii * n..(ii + 1) * n];
+                    for j in 0..n {
+                        crow[j] += aval * brow[j];
+                    }
+                }
+            }
+        });
+    } else {
+        for t in 0..k {
+            let arow = a.row(t);
+            let brow = b.row(t);
+            for i in 0..m {
+                let aval = arow[i];
+                if aval == 0.0 {
+                    continue;
+                }
+                let crow = &mut c.data[i * n..(i + 1) * n];
+                for j in 0..n {
+                    crow[j] += aval * brow[j];
+                }
+            }
+        }
+    }
+    c
+}
+
+/// `C = A · B^T` without materializing the transpose.
+pub fn matmul_nt(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.cols, "matmul_nt shape mismatch");
+    let (m, k) = (a.rows, a.cols);
+    let n = b.rows;
+    let mut c = Matrix::zeros(m, n);
+    let body = |i: usize, crow: &mut [f32]| {
+        let arow = a.row(i);
+        for j in 0..n {
+            let brow = b.row(j);
+            let mut acc = 0.0f32;
+            // Dot product of two contiguous rows — auto-vectorizes well.
+            for t in 0..k {
+                acc += arow[t] * brow[t];
+            }
+            crow[j] = acc;
+        }
+    };
+    if m * n * k >= PAR_THRESHOLD && m >= 4 {
+        par::par_chunks_mut(&mut c.data, n, |i, crow| body(i, crow));
+    } else {
+        for i in 0..m {
+            let crow = &mut c.data[i * n..(i + 1) * n];
+            body(i, crow);
+        }
+    }
+    c
+}
+
+/// General `C = alpha * A · B + beta * C`.
+pub fn gemm(alpha: f32, a: &Matrix, b: &Matrix, beta: f32, c: &mut Matrix) {
+    assert_eq!(a.cols, b.rows, "gemm inner dim mismatch");
+    assert_eq!(c.rows, a.rows, "gemm output rows mismatch");
+    assert_eq!(c.cols, b.cols, "gemm output cols mismatch");
+    let (m, k) = (a.rows, a.cols);
+    let n = b.cols;
+
+    if beta != 1.0 {
+        if beta == 0.0 {
+            c.data.fill(0.0);
+        } else {
+            c.scale_inplace(beta);
+        }
+    }
+
+    let row_kernel = |i: usize, crow: &mut [f32]| {
+        let arow = a.row(i);
+        for k0 in (0..k).step_by(KC) {
+            let k1 = (k0 + KC).min(k);
+            for t in k0..k1 {
+                let aval = alpha * arow[t];
+                if aval == 0.0 {
+                    continue;
+                }
+                let brow = b.row(t);
+                // axpy: crow += aval * brow — contiguous, vectorizes.
+                for j in 0..n {
+                    crow[j] += aval * brow[j];
+                }
+            }
+        }
+    };
+
+    if m * n * k >= PAR_THRESHOLD && m >= 4 {
+        par::par_chunks_mut(&mut c.data, n, |i, crow| row_kernel(i, crow));
+    } else {
+        for i in 0..m {
+            let crow = &mut c.data[i * n..(i + 1) * n];
+            row_kernel(i, crow);
+        }
+    }
+}
+
+/// `C = A · B + bias` broadcast over rows (the linear-layer primitive).
+pub fn gemm_bias(a: &Matrix, b: &Matrix, bias: Option<&[f32]>) -> Matrix {
+    let mut c = matmul(a, b);
+    if let Some(bias) = bias {
+        assert_eq!(bias.len(), c.cols);
+        for i in 0..c.rows {
+            let row = c.row_mut(i);
+            for (x, bv) in row.iter_mut().zip(bias) {
+                *x += bv;
+            }
+        }
+    }
+    c
+}
+
+/// `y = A · x` for a single vector.
+pub fn gemv(a: &Matrix, x: &[f32]) -> Vec<f32> {
+    assert_eq!(a.cols, x.len(), "gemv shape mismatch");
+    let mut y = vec![0.0f32; a.rows];
+    let body = |i: usize, yi: &mut f32| {
+        let row = a.row(i);
+        let mut acc = 0.0f32;
+        for t in 0..a.cols {
+            acc += row[t] * x[t];
+        }
+        *yi = acc;
+    };
+    if a.rows * a.cols >= PAR_THRESHOLD {
+        // Thread-sized row chunks: one dispatch per worker, not per row.
+        let chunk = a.rows.div_ceil(par::num_threads()).max(1);
+        par::par_chunks_mut(&mut y, chunk, |ci, ychunk| {
+            let i0 = ci * chunk;
+            for (ii, yi) in ychunk.iter_mut().enumerate() {
+                body(i0 + ii, yi);
+            }
+        });
+    } else {
+        for (i, yi) in y.iter_mut().enumerate() {
+            body(i, yi);
+        }
+    }
+    y
+}
+
+/// `y = A^T · x` for a single vector, without materializing the transpose.
+pub fn gemv_t(a: &Matrix, x: &[f32]) -> Vec<f32> {
+    assert_eq!(a.rows, x.len(), "gemv_t shape mismatch");
+    let mut y = vec![0.0f32; a.cols];
+    for t in 0..a.rows {
+        let xv = x[t];
+        if xv == 0.0 {
+            continue;
+        }
+        let row = a.row(t);
+        for j in 0..a.cols {
+            y[j] += xv * row[j];
+        }
+    }
+    y
+}
+
+/// Dot product with f64 accumulation.
+pub fn dot(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (*x as f64) * (*y as f64)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::rng::Rng;
+
+    fn naive_matmul(a: &Matrix, b: &Matrix) -> Matrix {
+        let mut c = Matrix::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut acc = 0.0f64;
+                for t in 0..a.cols {
+                    acc += (a.at(i, t) as f64) * (b.at(t, j) as f64);
+                }
+                c.set(i, j, acc as f32);
+            }
+        }
+        c
+    }
+
+    fn assert_close(a: &Matrix, b: &Matrix, tol: f32) {
+        assert_eq!(a.shape(), b.shape());
+        let scale = 1.0f32.max(b.max_abs());
+        for (x, y) in a.data.iter().zip(&b.data) {
+            assert!(
+                (x - y).abs() <= tol * scale,
+                "mismatch: {x} vs {y} (tol {tol}, scale {scale})"
+            );
+        }
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Rng::new(42);
+        for &(m, k, n) in &[(1, 1, 1), (3, 4, 5), (17, 31, 13), (64, 128, 32), (100, 77, 201)] {
+            let a = rng.gaussian_matrix(m, k, 1.0);
+            let b = rng.gaussian_matrix(k, n, 1.0);
+            assert_close(&matmul(&a, &b), &naive_matmul(&a, &b), 1e-4);
+        }
+    }
+
+    #[test]
+    fn matmul_tn_matches_transpose() {
+        let mut rng = Rng::new(7);
+        for &(m, k, n) in &[(5, 9, 4), (32, 64, 16), (130, 70, 90)] {
+            let a = rng.gaussian_matrix(k, m, 1.0);
+            let b = rng.gaussian_matrix(k, n, 1.0);
+            assert_close(&matmul_tn(&a, &b), &matmul(&a.transpose(), &b), 1e-4);
+        }
+    }
+
+    #[test]
+    fn matmul_nt_matches_transpose() {
+        let mut rng = Rng::new(8);
+        for &(m, k, n) in &[(5, 9, 4), (32, 64, 16), (130, 70, 90)] {
+            let a = rng.gaussian_matrix(m, k, 1.0);
+            let b = rng.gaussian_matrix(n, k, 1.0);
+            assert_close(&matmul_nt(&a, &b), &matmul(&a, &b.transpose()), 1e-4);
+        }
+    }
+
+    #[test]
+    fn parallel_paths_match_naive() {
+        // Shapes above PAR_THRESHOLD exercise the threaded kernels.
+        let mut rng = Rng::new(9);
+        let a = rng.gaussian_matrix(96, 96, 1.0);
+        let b = rng.gaussian_matrix(96, 96, 1.0);
+        assert_close(&matmul(&a, &b), &naive_matmul(&a, &b), 1e-3);
+        assert_close(&matmul_tn(&a, &b), &naive_matmul(&a.transpose(), &b), 1e-3);
+        assert_close(&matmul_nt(&a, &b), &naive_matmul(&a, &b.transpose()), 1e-3);
+    }
+
+    #[test]
+    fn gemm_alpha_beta() {
+        let mut rng = Rng::new(3);
+        let a = rng.gaussian_matrix(6, 7, 1.0);
+        let b = rng.gaussian_matrix(7, 5, 1.0);
+        let c0 = rng.gaussian_matrix(6, 5, 1.0);
+        let mut c = c0.clone();
+        gemm(2.0, &a, &b, 0.5, &mut c);
+        let expected = naive_matmul(&a, &b).scale(2.0).add(&c0.scale(0.5));
+        assert_close(&c, &expected, 1e-4);
+    }
+
+    #[test]
+    fn gemv_matches_matmul() {
+        let mut rng = Rng::new(11);
+        let a = rng.gaussian_matrix(13, 29, 1.0);
+        let x: Vec<f32> = (0..29).map(|i| (i as f32).sin()).collect();
+        let xm = Matrix::from_vec(29, 1, x.clone());
+        let y = gemv(&a, &x);
+        let ym = matmul(&a, &xm);
+        for i in 0..13 {
+            assert!((y[i] - ym.at(i, 0)).abs() < 1e-4);
+        }
+        let yt = gemv_t(&a, &gemv(&a, &x));
+        let ytm = matmul(&a.transpose(), &ym);
+        for j in 0..29 {
+            assert!((yt[j] - ytm.at(j, 0)).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn gemm_bias_broadcast() {
+        let a = Matrix::ones(2, 3);
+        let b = Matrix::eye(3);
+        let out = gemm_bias(&a, &b, Some(&[1.0, 2.0, 3.0]));
+        assert_eq!(out.row(0), &[2.0, 3.0, 4.0]);
+        assert_eq!(out.row(1), &[2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn identity_is_noop() {
+        let mut rng = Rng::new(5);
+        let a = rng.gaussian_matrix(10, 10, 1.0);
+        assert_close(&matmul(&a, &Matrix::eye(10)), &a, 1e-6);
+        assert_close(&matmul(&Matrix::eye(10), &a), &a, 1e-6);
+    }
+}

@@ -1,0 +1,11 @@
+//! Training drivers: from-scratch training (§3.1 / §4.1) and the
+//! compression + re-training pipeline (§3.2 / §4.2), built on the manual
+//! backprop in [`crate::nn`].
+
+pub mod lm_trainer;
+pub mod vit_trainer;
+pub mod compress_model;
+
+pub use compress_model::{compress_lm, retrain_lm, CompressReport};
+pub use lm_trainer::{train_lm, LmTrainConfig, TrainLog};
+pub use vit_trainer::{train_vit, VitTrainConfig};

@@ -1,0 +1,210 @@
+//! Measurement harness for the `cargo bench` targets (criterion-lite).
+//!
+//! Each bench binary builds a `BenchSuite`, registers closures, and calls
+//! `run()`. For every case we warm up, then collect wall-clock samples
+//! until either `max_samples` runs or `max_time` elapses, and report
+//! mean / p50 / p95 / min plus derived throughput when the case declares
+//! work-per-iteration.
+
+use std::time::{Duration, Instant};
+
+/// One timing result.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: Vec<Duration>,
+    /// Optional work per iteration (elements, tokens, FLOPs…) for
+    /// throughput reporting.
+    pub work_per_iter: Option<(f64, &'static str)>,
+}
+
+impl BenchResult {
+    pub fn mean(&self) -> Duration {
+        let total: Duration = self.samples.iter().sum();
+        total / self.samples.len().max(1) as u32
+    }
+
+    pub fn percentile(&self, p: f64) -> Duration {
+        let mut s = self.samples.clone();
+        s.sort();
+        let idx = ((s.len() as f64 - 1.0) * p / 100.0).round() as usize;
+        s[idx.min(s.len() - 1)]
+    }
+
+    pub fn min(&self) -> Duration {
+        self.samples.iter().min().copied().unwrap_or_default()
+    }
+
+    pub fn report_line(&self) -> String {
+        let mean = self.mean();
+        let p50 = self.percentile(50.0);
+        let p95 = self.percentile(95.0);
+        let mut line = format!(
+            "{:<44} mean {:>11.3?}  p50 {:>11.3?}  p95 {:>11.3?}  min {:>11.3?}  (n={})",
+            self.name,
+            mean,
+            p50,
+            p95,
+            self.min(),
+            self.samples.len()
+        );
+        if let Some((work, unit)) = self.work_per_iter {
+            let per_sec = work / mean.as_secs_f64();
+            line.push_str(&format!("  [{per_sec:.3e} {unit}/s]"));
+        }
+        line
+    }
+}
+
+/// Bench runner configuration.
+#[derive(Clone, Debug)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub max_samples: usize,
+    pub max_time: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        // Honors BLAST_BENCH_FAST=1 for CI-speed runs.
+        let fast = std::env::var("BLAST_BENCH_FAST").is_ok_and(|v| v == "1");
+        if fast {
+            BenchConfig {
+                warmup_iters: 1,
+                max_samples: 5,
+                max_time: Duration::from_millis(500),
+            }
+        } else {
+            BenchConfig {
+                warmup_iters: 3,
+                max_samples: 30,
+                max_time: Duration::from_secs(3),
+            }
+        }
+    }
+}
+
+/// A collection of named benchmarks.
+pub struct BenchSuite {
+    pub title: String,
+    pub config: BenchConfig,
+    pub results: Vec<BenchResult>,
+}
+
+impl BenchSuite {
+    pub fn new(title: &str) -> Self {
+        println!("=== bench suite: {title} ===");
+        BenchSuite {
+            title: title.to_string(),
+            config: BenchConfig::default(),
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f`, discarding its output (use `std::hint::black_box` inside
+    /// the closure to defeat DCE on inputs).
+    pub fn bench(&mut self, name: &str, mut f: impl FnMut()) -> &BenchResult {
+        self.bench_with_work(name, None, &mut f)
+    }
+
+    /// Time `f` and report throughput as `work / sec`.
+    pub fn bench_throughput(
+        &mut self,
+        name: &str,
+        work: f64,
+        unit: &'static str,
+        mut f: impl FnMut(),
+    ) -> &BenchResult {
+        self.bench_with_work(name, Some((work, unit)), &mut f)
+    }
+
+    fn bench_with_work(
+        &mut self,
+        name: &str,
+        work: Option<(f64, &'static str)>,
+        f: &mut dyn FnMut(),
+    ) -> &BenchResult {
+        for _ in 0..self.config.warmup_iters {
+            f();
+        }
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while samples.len() < self.config.max_samples && start.elapsed() < self.config.max_time {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed());
+        }
+        if samples.is_empty() {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed());
+        }
+        let result = BenchResult {
+            name: name.to_string(),
+            samples,
+            work_per_iter: work,
+        };
+        println!("{}", result.report_line());
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    /// Mean runtime of a named result (for cross-case ratio reporting).
+    pub fn mean_of(&self, name: &str) -> Option<Duration> {
+        self.results.iter().find(|r| r.name == name).map(|r| r.mean())
+    }
+
+    /// Print a speedup line `a vs b`.
+    pub fn report_speedup(&self, baseline: &str, contender: &str) {
+        if let (Some(b), Some(c)) = (self.mean_of(baseline), self.mean_of(contender)) {
+            let speedup = b.as_secs_f64() / c.as_secs_f64();
+            println!(
+                "--> {contender} is {speedup:.2}x vs {baseline} ({:.1}% runtime reduction)",
+                (1.0 - 1.0 / speedup.max(1e-12)) * 100.0
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_samples_and_reports() {
+        let mut suite = BenchSuite::new("test");
+        suite.config = BenchConfig {
+            warmup_iters: 1,
+            max_samples: 4,
+            max_time: Duration::from_secs(1),
+        };
+        let r = suite.bench("noop", || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(!r.samples.is_empty());
+        assert!(r.mean() < Duration::from_millis(100));
+        let line = r.report_line();
+        assert!(line.contains("noop"));
+    }
+
+    #[test]
+    fn percentiles_ordered() {
+        let r = BenchResult {
+            name: "x".into(),
+            samples: (1..=100).map(Duration::from_micros).collect(),
+            work_per_iter: None,
+        };
+        assert!(r.percentile(50.0) <= r.percentile(95.0));
+        assert_eq!(r.min(), Duration::from_micros(1));
+    }
+
+    #[test]
+    fn throughput_line() {
+        let r = BenchResult {
+            name: "tp".into(),
+            samples: vec![Duration::from_millis(10)],
+            work_per_iter: Some((1000.0, "tok")),
+        };
+        assert!(r.report_line().contains("tok/s"));
+    }
+}

@@ -1,0 +1,113 @@
+//! Seeded random-input property testing (proptest-lite).
+//!
+//! `property(cases, |gen| { ... })` runs the closure against `cases`
+//! independently seeded generators; on failure it reports the seed so the
+//! case can be replayed deterministically with `PropGen::replay(seed)`.
+
+use crate::tensor::Rng;
+
+/// Random-input generator handed to property closures.
+pub struct PropGen {
+    pub rng: Rng,
+    pub seed: u64,
+}
+
+impl PropGen {
+    pub fn replay(seed: u64) -> Self {
+        PropGen { rng: Rng::new(seed), seed }
+    }
+
+    /// usize in [lo, hi] inclusive.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi >= lo);
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    /// f32 in [lo, hi).
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.uniform_range(lo, hi)
+    }
+
+    /// A divisor pair: returns (n, b) with b dividing n, n in [lo, hi].
+    pub fn divisible(&mut self, lo: usize, hi: usize, max_b: usize) -> (usize, usize) {
+        let b = self.usize_in(1, max_b);
+        let k = self.usize_in(lo.div_ceil(b).max(1), (hi / b).max(1));
+        (b * k, b)
+    }
+
+    /// Random matrix.
+    pub fn matrix(&mut self, rows: usize, cols: usize) -> crate::tensor::Matrix {
+        self.rng.gaussian_matrix(rows, cols, 1.0)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+}
+
+/// Run `f` against `cases` random generators; panics with the failing
+/// seed on the first property violation (any panic inside `f`).
+///
+/// Captured state is wrapped in `AssertUnwindSafe`: a failing property
+/// aborts the test anyway, so observing torn captures is not a concern.
+pub fn property(cases: usize, f: impl Fn(&mut PropGen)) {
+    let base = std::env::var("BLAST_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xB1A57u64);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut gen = PropGen::replay(seed);
+            f(&mut gen);
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property failed on case {case} (replay seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        property(25, |g| {
+            let n = g.usize_in(1, 10);
+            assert!((1..=10).contains(&n));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_reports_seed() {
+        property(10, |g| {
+            let n = g.usize_in(0, 100);
+            assert!(n < 5, "n too big: {n}");
+        });
+    }
+
+    #[test]
+    fn replay_is_deterministic() {
+        let mut a = PropGen::replay(42);
+        let mut b = PropGen::replay(42);
+        for _ in 0..20 {
+            assert_eq!(a.usize_in(0, 1000), b.usize_in(0, 1000));
+        }
+    }
+
+    #[test]
+    fn divisible_invariant() {
+        property(50, |g| {
+            let (n, b) = g.divisible(4, 64, 8);
+            assert_eq!(n % b, 0);
+            assert!(b <= 8);
+        });
+    }
+}

@@ -1,0 +1,141 @@
+//! Tiny CLI argument parser for the `blast` binary.
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, and
+//! positional arguments. Each subcommand declares the flags it accepts;
+//! unknown flags are an error with a hint.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+/// Parsed arguments: positionals in order, flags by name (without `--`).
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+    pub bools: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw argv entries (after the subcommand).
+    pub fn parse(raw: &[String], bool_flags: &[&str]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < raw.len() {
+            let a = &raw[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if bool_flags.contains(&name) {
+                    out.bools.push(name.to_string());
+                } else {
+                    i += 1;
+                    let v = raw
+                        .get(i)
+                        .ok_or_else(|| anyhow!("flag --{name} expects a value"))?;
+                    out.flags.insert(name.to_string(), v.clone());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name} expects an integer, got `{v}`")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name} expects a number, got `{v}`")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name} expects an integer, got `{v}`")),
+        }
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.bools.iter().any(|b| b == name) || self.flags.contains_key(name)
+    }
+
+    /// Error if any flag outside `allowed` was passed.
+    pub fn reject_unknown(&self, allowed: &[&str]) -> Result<()> {
+        for k in self.flags.keys().chain(self.bools.iter()) {
+            if !allowed.contains(&k.as_str()) {
+                bail!("unknown flag --{k} (allowed: {})", allowed.join(", "));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn raw(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_mixed() {
+        let a = Args::parse(
+            &raw(&["pos1", "--n", "32", "--ratio=0.5", "--verbose", "pos2"]),
+            &["verbose"],
+        )
+        .unwrap();
+        assert_eq!(a.positional, vec!["pos1", "pos2"]);
+        assert_eq!(a.get_usize("n", 0).unwrap(), 32);
+        assert_eq!(a.get_f64("ratio", 0.0).unwrap(), 0.5);
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(&raw(&[]), &[]).unwrap();
+        assert_eq!(a.get_usize("n", 7).unwrap(), 7);
+        assert_eq!(a.get_or("mode", "fast"), "fast");
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(&raw(&["--n"]), &[]).is_err());
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = Args::parse(&raw(&["--n", "abc"]), &[]).unwrap();
+        assert!(a.get_usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn reject_unknown_flags() {
+        let a = Args::parse(&raw(&["--bogus", "1"]), &[]).unwrap();
+        assert!(a.reject_unknown(&["n", "ratio"]).is_err());
+        assert!(a.reject_unknown(&["bogus"]).is_ok());
+    }
+}

@@ -1,0 +1,16 @@
+//! In-repo replacements for common ecosystem crates (the build is fully
+//! offline, so everything beyond `xla`/`anyhow` is implemented here).
+//!
+//! * [`par`] — scoped-thread data parallelism (rayon-lite).
+//! * [`json`] — minimal JSON value model + parser/serializer for the
+//!   artifact manifest and experiment reports.
+//! * [`cli`] — flag/positional argument parsing for the `blast` binary.
+//! * [`bench`] — measurement harness used by `cargo bench` targets
+//!   (criterion-lite: warmup, repeated timed runs, mean/p50/p95).
+//! * [`check`] — seeded random-input property testing (proptest-lite).
+
+pub mod par;
+pub mod json;
+pub mod cli;
+pub mod bench;
+pub mod check;

@@ -1,0 +1,150 @@
+//! Property-based tests on BLAST algebra invariants (proptest-lite via
+//! `util::check`): random shapes/blocks/ranks, seeded and replayable.
+
+use blast_repro::blast::{blast_achieved_ratio, blast_rank_for_ratio, BlastMatrix};
+use blast_repro::tensor::{gemv, matmul_nt, Matrix};
+use blast_repro::util::check::{property, PropGen};
+
+fn random_blast(g: &mut PropGen) -> BlastMatrix {
+    let b = [1usize, 2, 4][g.usize_in(0, 2)];
+    let p = g.usize_in(1, 6);
+    let q = g.usize_in(1, 6);
+    let r = g.usize_in(1, 8);
+    BlastMatrix::random_init(b * p, b * q, b, r, 0.5, &mut g.rng)
+}
+
+#[test]
+fn prop_algorithm1_matches_dense_reconstruction() {
+    property(40, |g| {
+        let a = random_blast(g);
+        let x = g.rng.gaussian_vec(a.n, 1.0);
+        let y = a.matvec(&x);
+        let y_ref = gemv(&a.to_dense(), &x);
+        let scale: f32 = 1.0 + y_ref.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        for (p, q) in y.iter().zip(&y_ref) {
+            assert!((p - q).abs() < 1e-3 * scale, "{p} vs {q}");
+        }
+    });
+}
+
+#[test]
+fn prop_matmul_act_matches_dense() {
+    property(30, |g| {
+        let a = random_blast(g);
+        let batch = g.usize_in(1, 5);
+        let x = g.rng.gaussian_matrix(batch, a.n, 1.0);
+        let y = a.matmul_act(&x);
+        let y_ref = matmul_nt(&x, &a.to_dense());
+        assert!(y.sub(&y_ref).fro_norm() < 1e-3 * (1.0 + y_ref.fro_norm()));
+    });
+}
+
+#[test]
+fn prop_param_count_formula() {
+    property(50, |g| {
+        let a = random_blast(g);
+        let stored: usize = a.u.iter().map(|m| m.len()).sum::<usize>()
+            + a.v.iter().map(|m| m.len()).sum::<usize>()
+            + a.s.iter().flatten().map(|v| v.len()).sum::<usize>();
+        assert_eq!(stored, a.num_params(), "formula vs actual storage");
+    });
+}
+
+#[test]
+fn prop_low_rank_embedding_exact() {
+    property(30, |g| {
+        let b = [1usize, 2, 3][g.usize_in(0, 2)];
+        let per = g.usize_in(1, 5);
+        let n = b * per;
+        let r = g.usize_in(1, 4);
+        let u = g.rng.gaussian_matrix(n, r, 1.0);
+        let v = g.rng.gaussian_matrix(n, r, 1.0);
+        let dense = matmul_nt(&u, &v);
+        let emb = BlastMatrix::from_low_rank(&u, &v, b);
+        assert!(
+            emb.to_dense().sub(&dense).fro_norm() < 1e-3 * (1.0 + dense.fro_norm()),
+            "b={b} n={n} r={r}"
+        );
+    });
+}
+
+#[test]
+fn prop_budget_solver_never_exceeds() {
+    property(60, |g| {
+        let m = g.usize_in(2, 64) * 4;
+        let n = g.usize_in(2, 64) * 4;
+        let b = [1usize, 2, 4][g.usize_in(0, 2)];
+        let ratio = g.f32_in(0.1, 0.9) as f64;
+        if let Some(r) = blast_rank_for_ratio(m, n, b, ratio) {
+            let params = r * (m + n) + r * b * b;
+            let budget = ((1.0 - ratio) * (m * n) as f64).floor() as usize;
+            assert!(params <= budget, "params {params} > budget {budget}");
+            let achieved = blast_achieved_ratio(m, n, b, r);
+            assert!(achieved + 1e-9 >= ratio, "achieved {achieved} < {ratio}");
+        }
+    });
+}
+
+#[test]
+fn prop_bundle_round_trip() {
+    property(20, |g| {
+        let a = random_blast(g);
+        let bundle = a.to_bundle("x");
+        let back = BlastMatrix::from_bundle(&bundle, "x", a.m, a.n, a.b, a.r).unwrap();
+        assert!(a.to_dense().sub(&back.to_dense()).fro_norm() < 1e-6);
+    });
+}
+
+#[test]
+fn prop_zero_coupling_zero_matrix() {
+    property(20, |g| {
+        let mut a = random_blast(g);
+        for i in 0..a.b {
+            for j in 0..a.b {
+                a.s[i][j].fill(0.0);
+            }
+        }
+        assert!(a.to_dense().fro_norm() < 1e-9);
+        let x = g.rng.gaussian_vec(a.n, 1.0);
+        assert!(a.matvec(&x).iter().all(|&v| v == 0.0));
+    });
+}
+
+#[test]
+fn prop_matvec_linear() {
+    // A(ax + by) = a·Ax + b·Ay — Algorithm 1 must be linear.
+    property(30, |g| {
+        let a = random_blast(g);
+        let x = g.rng.gaussian_vec(a.n, 1.0);
+        let y = g.rng.gaussian_vec(a.n, 1.0);
+        let (ca, cb) = (g.f32_in(-2.0, 2.0), g.f32_in(-2.0, 2.0));
+        let mixed: Vec<f32> = x.iter().zip(&y).map(|(p, q)| ca * p + cb * q).collect();
+        let lhs = a.matvec(&mixed);
+        let ax = a.matvec(&x);
+        let ay = a.matvec(&y);
+        let scale: f32 =
+            1.0 + lhs.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        for i in 0..lhs.len() {
+            let rhs = ca * ax[i] + cb * ay[i];
+            assert!((lhs[i] - rhs).abs() < 1e-3 * scale);
+        }
+    });
+}
+
+#[test]
+fn prop_rectangular_blocks() {
+    // p != q paths (m != n) across shapes.
+    property(25, |g| {
+        let b = g.usize_in(1, 4);
+        let p = g.usize_in(1, 5);
+        let q = g.usize_in(1, 5);
+        let r = g.usize_in(1, 6);
+        let a = BlastMatrix::random_init(b * p, b * q, b, r, 0.4, &mut g.rng);
+        let d = a.to_dense();
+        assert_eq!(d.shape(), (b * p, b * q));
+        // v_bar/u_bar shapes.
+        assert_eq!(a.v_bar(0).shape(), (b * q, r));
+        assert_eq!(a.u_bar(0).shape(), (b * p, r));
+        let _ = Matrix::zeros(1, 1);
+    });
+}

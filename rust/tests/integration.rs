@@ -1,0 +1,139 @@
+//! Cross-module integration tests: the full pipelines the experiments
+//! rely on, exercised end to end at smoke scale.
+
+use blast_repro::data::corpus::SyntheticCorpus;
+use blast_repro::data::zeroshot::build_suites;
+use blast_repro::eval::{eval_suites, perplexity};
+use blast_repro::factorize::{Compressor, Structure};
+use blast_repro::nn::attention::StructureKind;
+use blast_repro::nn::gpt::{LmConfig, TinyLM};
+use blast_repro::tensor::Rng;
+use blast_repro::train::{compress_lm, retrain_lm, train_lm, LmTrainConfig};
+
+/// The Table 3 pipeline: train → compress → eval → retrain → eval,
+/// asserting the paper's qualitative ordering at every stage.
+#[test]
+fn full_compression_pipeline_preserves_ordering() {
+    let corpus = SyntheticCorpus::generate(64, 12_000, 1024);
+    let suites = build_suites(&corpus, 10);
+    let mut rng = Rng::new(2024);
+    let mut dense = TinyLM::new(LmConfig::tiny(StructureKind::Dense), &mut rng);
+    train_lm(
+        &mut dense,
+        &corpus.train_dataset(),
+        &LmTrainConfig { steps: 150, ..Default::default() },
+    );
+    let ppl_dense = perplexity(&dense, &corpus.valid_dataset(), 32, 6);
+    let (_, acc_dense) = eval_suites(&dense, &suites);
+
+    let comp = Compressor { blast_iters: 40, ..Default::default() };
+
+    // 50% BLAST compression.
+    let mut blast = dense.clone();
+    let report = compress_lm(&mut blast, Structure::Blast { b: 4 }, 0.5, &comp);
+    assert!(report.achieved_ratio() > 0.3, "achieved {:.3}", report.achieved_ratio());
+    let ppl_comp = perplexity(&blast, &corpus.valid_dataset(), 32, 6);
+    assert!(ppl_comp.is_finite());
+    // Compression degrades; retraining recovers.
+    retrain_lm(&mut blast, &corpus.train_dataset(), 80);
+    let ppl_retr = perplexity(&blast, &corpus.valid_dataset(), 32, 6);
+    assert!(
+        ppl_retr <= ppl_comp,
+        "retraining must not hurt: {ppl_comp} -> {ppl_retr}"
+    );
+    // Retrained compressed model stays in the same ballpark as dense
+    // (paper: modest degradation at 50% CR for BLAST).
+    assert!(
+        ppl_retr < ppl_dense * 3.0,
+        "BLAST degradation too large: dense {ppl_dense} vs retrained {ppl_retr}"
+    );
+    let (_, acc_blast) = eval_suites(&blast, &suites);
+    assert!(acc_blast > 25.0, "0-shot collapsed: {acc_blast} (dense {acc_dense})");
+}
+
+/// Generation through a compressed model stays coherent (finite logits,
+/// valid tokens) for every structure.
+#[test]
+fn all_structures_generate_after_compression() {
+    let corpus = SyntheticCorpus::generate(64, 6_000, 512);
+    let mut rng = Rng::new(2025);
+    let mut dense = TinyLM::new(LmConfig::tiny(StructureKind::Dense), &mut rng);
+    train_lm(
+        &mut dense,
+        &corpus.train_dataset(),
+        &LmTrainConfig { steps: 40, ..Default::default() },
+    );
+    let comp = Compressor { blast_iters: 20, ..Default::default() };
+    for s in [
+        Structure::LowRank,
+        Structure::Monarch { b: 4 },
+        Structure::BlockDiag { b: 4 },
+        Structure::Blast { b: 4 },
+    ] {
+        let mut m = dense.clone();
+        compress_lm(&mut m, s, 0.4, &comp);
+        let out = m.generate(&[1, 2, 3], 10);
+        assert_eq!(out.len(), 13, "{s:?}");
+        assert!(out.iter().all(|&t| t < 64), "{s:?}");
+    }
+}
+
+/// The compression report's achieved ratio matches independent counting.
+#[test]
+fn compression_report_consistent_with_param_counts() {
+    let mut rng = Rng::new(2026);
+    let dense = TinyLM::new(LmConfig::tiny(StructureKind::Dense), &mut rng);
+    let before = dense.num_params();
+    let mut m = dense.clone();
+    let comp = Compressor { blast_iters: 10, ..Default::default() };
+    let report = compress_lm(&mut m, Structure::LowRank, 0.5, &comp);
+    assert_eq!(report.params_before, before);
+    assert_eq!(report.params_after, m.num_params());
+    assert!(report.params_after < before);
+}
+
+/// Training-from-scratch works through every structure (the Fig. 4/5
+/// mechanism) and the structured models stay smaller than dense.
+#[test]
+fn from_scratch_training_all_structures() {
+    let corpus = SyntheticCorpus::generate(64, 6_000, 512);
+    let mut rng = Rng::new(2027);
+    let dense_params =
+        TinyLM::new(LmConfig::tiny(StructureKind::Dense), &mut rng).num_params();
+    for s in [
+        StructureKind::LowRank { r: 12 },
+        StructureKind::Blast { b: 4, r: 10 },
+        StructureKind::Monarch { b: 4, t: 3 },
+        StructureKind::BlockDiag { b: 4, t: 12 },
+    ] {
+        let mut lm = TinyLM::new(LmConfig::tiny(s), &mut rng);
+        assert!(lm.num_params() < dense_params, "{s:?} not smaller");
+        let log = train_lm(
+            &mut lm,
+            &corpus.train_dataset(),
+            &LmTrainConfig { steps: 50, ..Default::default() },
+        );
+        let first = log.losses.first().unwrap().1;
+        assert!(
+            log.final_loss < first,
+            "{s:?} did not improve: {first} -> {}",
+            log.final_loss
+        );
+    }
+}
+
+/// Rust factorization and the Python-exported BMX format interoperate:
+/// write a bundle, read it back, factors identical.
+#[test]
+fn bmx_interop_with_blast_factors() {
+    use blast_repro::blast::BlastMatrix;
+    let mut rng = Rng::new(2028);
+    let a = BlastMatrix::random_init(16, 16, 4, 3, 0.3, &mut rng);
+    let bundle = a.to_bundle("w");
+    let path = std::env::temp_dir().join("blast_integration.bmx");
+    bundle.save(&path).unwrap();
+    let loaded = blast_repro::tensor::io::TensorBundle::load(&path).unwrap();
+    let back = BlastMatrix::from_bundle(&loaded, "w", 16, 16, 4, 3).unwrap();
+    assert!(a.to_dense().sub(&back.to_dense()).fro_norm() < 1e-6);
+    std::fs::remove_file(&path).ok();
+}
