@@ -15,57 +15,15 @@ use super::matrix::BlastMatrix;
 use crate::tensor::{matmul, matmul_tn, Matrix};
 
 impl BlastMatrix {
-    /// `y = A · x` (Algorithm 1).
+    /// `y = A · x` (Algorithm 1), dispatched through the kernel engine.
+    ///
+    /// A single vector is a batch-1 activation row (`y = A x` ⟺
+    /// `yᵀ = xᵀ Aᵀ`), so this shares the tuned decode-shape plan with
+    /// the serving path instead of keeping a separate hand-rolled loop.
     pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
         assert_eq!(x.len(), self.n, "matvec input length mismatch");
-        let p = self.p();
-        let q = self.q();
-        let r = self.r;
-
-        // Stage 1: z_j = V_j^T x_j for every block column.
-        let mut z = vec![0.0f32; self.b * r];
-        for j in 0..self.b {
-            let xj = &x[j * q..(j + 1) * q];
-            let v = &self.v[j];
-            let zj = &mut z[j * r..(j + 1) * r];
-            for a in 0..q {
-                let xv = xj[a];
-                if xv == 0.0 {
-                    continue;
-                }
-                let vrow = v.row(a);
-                for k in 0..r {
-                    zj[k] += vrow[k] * xv;
-                }
-            }
-        }
-
-        // Stages 2+3 per output block row.
-        let mut y = vec![0.0f32; self.m];
-        let mut w = vec![0.0f32; r];
-        for i in 0..self.b {
-            // Stage 2: w = Σ_j s_{i,j} ⊙ z_j.
-            w.fill(0.0);
-            for j in 0..self.b {
-                let s = &self.s[i][j];
-                let zj = &z[j * r..(j + 1) * r];
-                for k in 0..r {
-                    w[k] += s[k] * zj[k];
-                }
-            }
-            // Stage 3: y_i = U_i w.
-            let u = &self.u[i];
-            let yi = &mut y[i * p..(i + 1) * p];
-            for a in 0..p {
-                let urow = u.row(a);
-                let mut acc = 0.0f32;
-                for k in 0..r {
-                    acc += urow[k] * w[k];
-                }
-                yi[a] = acc;
-            }
-        }
-        y
+        let xm = Matrix::from_vec(1, self.n, x.to_vec());
+        crate::kernels::engine().blast_act(&xm, self).data
     }
 
     /// `Y = A · X` for `X ∈ R^{n×c}` (the matrix/tensor variant of
@@ -115,46 +73,13 @@ impl BlastMatrix {
 
     /// `Y = X · A^T` for row-major activations `X ∈ R^{batch×n}` — the
     /// layout used by the linear layers (`y = W x` per row with `W = A`,
-    /// i.e. PyTorch's `x @ W.T`). This is the inference hot path.
+    /// i.e. PyTorch's `x @ W.T`). This is the inference hot path; it
+    /// dispatches through the kernel engine, which autotunes between the
+    /// naive reference and the fused (stage-batched) Algorithm-1 kernels
+    /// per (shape, batch) and caches the plan.
     pub fn matmul_act(&self, x: &Matrix) -> Matrix {
         assert_eq!(x.cols, self.n, "matmul_act shape mismatch: x cols {} vs n {}", x.cols, self.n);
-        let p = self.p();
-        let q = self.q();
-        let r = self.r;
-        let batch = x.rows;
-
-        // Stage 1: Z_j = X_j V_j (batch×r) per block column — shared
-        // across all output block rows.
-        let z: Vec<Matrix> = (0..self.b)
-            .map(|j| {
-                let xj = x.submatrix(0, batch, j * q, (j + 1) * q);
-                matmul(&xj, &self.v[j])
-            })
-            .collect();
-
-        let mut y = Matrix::zeros(batch, self.m);
-        let mut w = Matrix::zeros(batch, r);
-        for i in 0..self.b {
-            // Stage 2: W = Σ_j Z_j diag(s_{i,j}).
-            w.data.fill(0.0);
-            for j in 0..self.b {
-                let s = &self.s[i][j];
-                let zj = &z[j];
-                for t in 0..batch {
-                    let zrow = zj.row(t);
-                    let wrow = w.row_mut(t);
-                    for k in 0..r {
-                        wrow[k] += zrow[k] * s[k];
-                    }
-                }
-            }
-            // Stage 3: Y_i = W U_i^T → columns i*p..(i+1)*p of Y.
-            let yi = crate::tensor::matmul_nt(&w, &self.u[i]);
-            for t in 0..batch {
-                y.row_mut(t)[i * p..(i + 1) * p].copy_from_slice(yi.row(t));
-            }
-        }
-        y
+        crate::kernels::engine().blast_act(x, self)
     }
 }
 

@@ -123,24 +123,30 @@ fn worker_loop(
     batcher_cfg: BatcherConfig,
     metrics: Arc<Metrics>,
 ) {
+    // Warm the kernel autotuner before taking traffic, so tuning probes
+    // run at model-load time rather than inside the first request. The
+    // prefill batch dimension is the *prompt length*, so cover the
+    // decode shape (batch 1), the micro-batch bucket, and the longest
+    // prompt this model accepts (which warms the large-batch buckets).
+    model.pretune(&[1, batcher_cfg.max_batch.max(2), model.cfg.max_seq - 1]);
     let mut batcher = DynamicBatcher::new(rx, batcher_cfg);
     while let Some(batch) = batcher.next_batch() {
         metrics.record_batch(batch.len());
-        // Decode each request in the batch. KV slots are independent;
-        // the batch amortizes queue/dispatch overhead (the structured
-        // matmuls inside the model are the Table-4 object of study).
+        // Serve each request in the batch: one batched prefill over the
+        // prompt (Algorithm-1 products batched across positions through
+        // the kernel engine), then the token-by-token decode loop. KV
+        // slots are independent; the batch amortizes queue/dispatch
+        // overhead (the structured matmuls inside the model are the
+        // Table-4 object of study).
         for req in batch {
             let queue_time = req.enqueued_at.elapsed();
             let t0 = Instant::now();
             let mut kv = model.new_kv_cache();
             let mut tokens = req.prompt.clone();
-            let mut logits = None;
-            for (pos, &tok) in req.prompt.iter().enumerate() {
-                if pos + 1 >= model.cfg.max_seq {
-                    break;
-                }
-                logits = Some(model.decode_step(tok, pos, &mut kv));
-            }
+            // Prefill positions 0..max_seq-1 of the prompt in one pass
+            // (the same positions the per-token loop used to ingest).
+            let prefill_len = req.prompt.len().min(model.cfg.max_seq - 1);
+            let mut logits = model.prefill(&req.prompt[..prefill_len], &mut kv);
             let mut generated = 0usize;
             for _ in 0..req.max_new_tokens {
                 let Some(l) = &logits else { break };

@@ -1,0 +1,310 @@
+//! Per-shape kernel autotuner.
+//!
+//! The first time the engine sees a `(structure, shape, batch-bucket)`
+//! key it times every registered kernel that supports the op on the real
+//! input and caches the winner; later dispatches for the same key are a
+//! hash lookup. Plans key on a *bucketed* batch size so the decode path
+//! (batch 1) and the prefill/training path (batch ≫ 1) tune
+//! independently without fragmenting the table per exact batch.
+//!
+//! The table persists as JSON (written with `util::json`, no serde)
+//! when `BLAST_AUTOTUNE_CACHE=<path>` is set: the file is loaded at
+//! engine construction and re-written after every new tuning decision,
+//! so a served model warms once per deployment instead of once per
+//! process. Plans store kernel *names*; unknown names (an old file, a
+//! renamed kernel) are ignored and simply re-tuned.
+
+use super::{KernelOp, MatmulKernel, OpTag};
+use crate::tensor::Matrix;
+use crate::util::json::{obj, Json};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::RwLock;
+use std::time::Instant;
+
+/// Identity of one tuning decision. `Copy` and allocation-free: one is
+/// built on every engine dispatch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    /// Structure tag (serialized as `"dense"` / `"blast(b=8,r=32)"`).
+    pub op: OpTag,
+    /// Output features.
+    pub m: usize,
+    /// Input features.
+    pub n: usize,
+    /// Bucketed batch size (the bucket ceiling).
+    pub batch: usize,
+}
+
+impl PlanKey {
+    /// Key for an op at a concrete batch size.
+    pub fn for_op(op: &KernelOp<'_>, batch: usize) -> Self {
+        PlanKey {
+            op: op.tag(),
+            m: op.out_features(),
+            n: op.in_features(),
+            batch: batch_bucket(batch),
+        }
+    }
+}
+
+/// Bucket a concrete batch size: 1 (decode), ≤8 (small prefill /
+/// micro-batch), ≤64 (prefill), everything else (training-scale).
+pub fn batch_bucket(batch: usize) -> usize {
+    match batch {
+        0..=1 => 1,
+        2..=8 => 8,
+        9..=64 => 64,
+        _ => 4096,
+    }
+}
+
+/// Benchmark-and-cache kernel selection. The plan table is read-mostly
+/// (every dispatch takes the read lock; only tuning and plan-file loads
+/// take the write lock).
+pub struct Autotuner {
+    plans: RwLock<HashMap<PlanKey, String>>,
+    persist_to: Option<PathBuf>,
+}
+
+impl Autotuner {
+    /// Empty tuner with no persistence.
+    pub fn new() -> Self {
+        Autotuner { plans: RwLock::new(HashMap::new()), persist_to: None }
+    }
+
+    /// Tuner configured from `BLAST_AUTOTUNE_CACHE` (loads the file if it
+    /// exists; tuning decisions are re-persisted to it).
+    pub fn from_env() -> Self {
+        let tuner = Autotuner::new();
+        if let Ok(path) = std::env::var("BLAST_AUTOTUNE_CACHE") {
+            let path = PathBuf::from(path);
+            let _ = tuner.load(&path); // best effort; absent file is fine
+            // Safety note: persist_to is only read after construction.
+            return Autotuner { persist_to: Some(path), ..tuner };
+        }
+        tuner
+    }
+
+    /// The cached kernel index for `key`, if present and still valid for
+    /// this kernel set.
+    pub fn lookup(&self, key: &PlanKey, kernels: &[Box<dyn MatmulKernel>]) -> Option<usize> {
+        let plans = self.plans.read().unwrap();
+        let name = plans.get(key)?;
+        kernels.iter().position(|k| k.name() == name.as_str())
+    }
+
+    /// The cached kernel name for `key` (diagnostics / benches).
+    pub fn plan_name(&self, key: &PlanKey) -> Option<String> {
+        self.plans.read().unwrap().get(key).cloned()
+    }
+
+    /// Time every supporting kernel on `x` and cache the fastest.
+    /// Returns the winning kernel index (there is always at least one
+    /// candidate: the naive reference supports every op).
+    pub fn tune(
+        &self,
+        key: &PlanKey,
+        x: &Matrix,
+        op: &KernelOp<'_>,
+        kernels: &[Box<dyn MatmulKernel>],
+    ) -> usize {
+        let mut best: Option<(f64, usize)> = None;
+        for (i, kernel) in kernels.iter().enumerate() {
+            if !kernel.supports(op, x.rows) {
+                continue;
+            }
+            let secs = time_kernel(kernel.as_ref(), x, op);
+            let improves = match best {
+                None => true,
+                Some((b, _)) => secs < b,
+            };
+            if improves {
+                best = Some((secs, i));
+            }
+        }
+        let (_, idx) = best.expect("no kernel supports this op (naive must)");
+        {
+            let mut plans = self.plans.write().unwrap();
+            plans.insert(*key, kernels[idx].name().to_string());
+        }
+        if let Some(path) = &self.persist_to {
+            let _ = self.save(path); // best effort
+        }
+        idx
+    }
+
+    /// Number of cached plans.
+    pub fn len(&self) -> usize {
+        self.plans.read().unwrap().len()
+    }
+
+    /// Serialize the plan table to `path` as JSON.
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        let plans = self.plans.read().unwrap();
+        let mut entries: Vec<(PlanKey, String)> =
+            plans.iter().map(|(k, v)| (*k, v.clone())).collect();
+        drop(plans);
+        // Deterministic file contents regardless of hash order.
+        entries.sort_by_key(|(k, _)| (k.op.to_tag_string(), k.m, k.n, k.batch));
+        let arr: Vec<Json> = entries
+            .into_iter()
+            .map(|(k, name)| {
+                obj(vec![
+                    ("op", Json::from(k.op.to_tag_string())),
+                    ("m", Json::from(k.m)),
+                    ("n", Json::from(k.n)),
+                    ("batch", Json::from(k.batch)),
+                    ("kernel", Json::from(name)),
+                ])
+            })
+            .collect();
+        let root = obj(vec![("version", Json::from(1usize)), ("plans", Json::Arr(arr))]);
+        std::fs::write(path, root.to_string_pretty())?;
+        Ok(())
+    }
+
+    /// Merge plans from a JSON file into the table; returns how many
+    /// entries were loaded. Malformed entries are skipped.
+    pub fn load(&self, path: &Path) -> anyhow::Result<usize> {
+        let text = std::fs::read_to_string(path)?;
+        let root = Json::parse(&text)?;
+        let mut loaded = 0usize;
+        if let Ok(arr) = root.get("plans") {
+            if let Some(items) = arr.as_arr() {
+                let mut plans = self.plans.write().unwrap();
+                for item in items {
+                    let parsed = (|| -> Option<(PlanKey, String)> {
+                        Some((
+                            PlanKey {
+                                op: OpTag::parse(item.get("op").ok()?.as_str()?)?,
+                                m: item.get("m").ok()?.as_usize()?,
+                                n: item.get("n").ok()?.as_usize()?,
+                                batch: item.get("batch").ok()?.as_usize()?,
+                            },
+                            item.get("kernel").ok()?.as_str()?.to_string(),
+                        ))
+                    })();
+                    if let Some((key, name)) = parsed {
+                        plans.insert(key, name);
+                        loaded += 1;
+                    }
+                }
+            }
+        }
+        Ok(loaded)
+    }
+}
+
+impl Default for Autotuner {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Best-of-a-few wall-clock seconds for one kernel on one input. One
+/// warmup run, then up to three timed runs with an early exit once the
+/// probe has cost ~20 ms — model-load tuning must stay cheap.
+fn time_kernel(kernel: &dyn MatmulKernel, x: &Matrix, op: &KernelOp<'_>) -> f64 {
+    std::hint::black_box(kernel.run(x, op));
+    let mut best = f64::INFINITY;
+    let mut spent = 0.0f64;
+    for _ in 0..3 {
+        let t0 = Instant::now();
+        std::hint::black_box(kernel.run(x, op));
+        let dt = t0.elapsed().as_secs_f64();
+        best = best.min(dt);
+        spent += dt;
+        if spent > 0.02 {
+            break;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{FusedBlastKernel, NaiveKernel, ParallelKernel, TiledKernel};
+    use crate::tensor::Rng;
+
+    fn kernel_set() -> Vec<Box<dyn MatmulKernel>> {
+        vec![
+            Box::new(NaiveKernel),
+            Box::new(TiledKernel),
+            Box::new(ParallelKernel),
+            Box::new(FusedBlastKernel::sequential()),
+            Box::new(FusedBlastKernel::row_parallel()),
+        ]
+    }
+
+    #[test]
+    fn op_tag_string_round_trip() {
+        for tag in [OpTag::Dense, OpTag::Blast { b: 8, r: 32 }, OpTag::Blast { b: 1, r: 1 }] {
+            assert_eq!(OpTag::parse(&tag.to_tag_string()), Some(tag));
+        }
+        assert_eq!(OpTag::parse("blast(b=8,r=32)"), Some(OpTag::Blast { b: 8, r: 32 }));
+        assert!(OpTag::parse("monarch(b=2)").is_none());
+        assert!(OpTag::parse("blast(b=x,r=2)").is_none());
+    }
+
+    #[test]
+    fn batch_buckets() {
+        assert_eq!(batch_bucket(0), 1);
+        assert_eq!(batch_bucket(1), 1);
+        assert_eq!(batch_bucket(2), 8);
+        assert_eq!(batch_bucket(8), 8);
+        assert_eq!(batch_bucket(9), 64);
+        assert_eq!(batch_bucket(64), 64);
+        assert_eq!(batch_bucket(65), 4096);
+        assert_eq!(batch_bucket(100_000), 4096);
+    }
+
+    #[test]
+    fn tune_then_lookup_round_trip() {
+        let tuner = Autotuner::new();
+        let kernels = kernel_set();
+        let mut rng = Rng::new(850);
+        let x = rng.gaussian_matrix(4, 32, 1.0);
+        let w = rng.gaussian_matrix(16, 32, 1.0);
+        let op = KernelOp::DenseNt { w: &w };
+        let key = PlanKey::for_op(&op, x.rows);
+        assert!(tuner.lookup(&key, &kernels).is_none());
+        let idx = tuner.tune(&key, &x, &op, &kernels);
+        assert_eq!(tuner.lookup(&key, &kernels), Some(idx));
+        // Dense ops must never select a BLAST-only kernel.
+        assert!(kernels[idx].supports(&op, x.rows));
+    }
+
+    #[test]
+    fn save_load_round_trip() {
+        let tuner = Autotuner::new();
+        let kernels = kernel_set();
+        let mut rng = Rng::new(851);
+        let x = rng.gaussian_matrix(2, 16, 1.0);
+        let w = rng.gaussian_matrix(8, 16, 1.0);
+        let op = KernelOp::DenseNt { w: &w };
+        let key = PlanKey::for_op(&op, x.rows);
+        tuner.tune(&key, &x, &op, &kernels);
+
+        let dir = std::env::temp_dir().join(format!("blast-tune-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("plans.json");
+        tuner.save(&path).unwrap();
+
+        let fresh = Autotuner::new();
+        let n = fresh.load(&path).unwrap();
+        assert_eq!(n, 1);
+        assert_eq!(fresh.plan_name(&key), tuner.plan_name(&key));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn unknown_kernel_names_force_retune() {
+        let tuner = Autotuner::new();
+        let kernels = kernel_set();
+        let key = PlanKey { op: OpTag::Dense, m: 8, n: 16, batch: 1 };
+        tuner.plans.write().unwrap().insert(key, "no_such_kernel".into());
+        assert!(tuner.lookup(&key, &kernels).is_none());
+    }
+}

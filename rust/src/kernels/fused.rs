@@ -1,0 +1,193 @@
+//! Fused BLAST Algorithm-1 kernel.
+//!
+//! The baseline (`naive` kernel / the pre-engine `matmul_act`) walks the
+//! product block by block: it copies each input block column out with
+//! `submatrix`, allocates a fresh `z_j` per block, a fresh `w` per output
+//! block row, and a fresh `y_i` per stage-3 product. This kernel fuses
+//! the three stages over contiguous buffers instead:
+//!
+//! * **Stage 1 batched across blocks** — one pass over the activation
+//!   row accumulates `z = [z_1 | … | z_b]` (a single `b·r` buffer) via
+//!   contiguous axpy over `V_j` rows; no block copies, no per-block
+//!   allocation.
+//! * **Stage 2** — the `b²` couplings scale-and-add `z` bands into a
+//!   single `w = [w_1 | … | w_b]` buffer.
+//! * **Stage 3 batched across blocks** — one sweep writes every output
+//!   block `y_i = U_i w_i` as contiguous dot products over `U_i` rows.
+//!
+//! Total scratch per worker: `2·b·r` floats, reused across the whole
+//! batch. The row-parallel variant (`blast_fused_par`) hands disjoint
+//! output-row chunks to `util::par` workers, each with its own scratch;
+//! the sequential variant wins at decode shapes (batch 1) where thread
+//! fan-out costs more than the product itself. The autotuner picks.
+
+use super::{BlastView, KernelOp, MatmulKernel};
+use crate::tensor::Matrix;
+use crate::util::par;
+
+/// Fused Algorithm-1 kernel (sequential or row-parallel).
+pub struct FusedBlastKernel {
+    row_parallel: bool,
+}
+
+impl FusedBlastKernel {
+    /// Single-threaded variant — the decode-path (batch 1) choice.
+    pub fn sequential() -> Self {
+        FusedBlastKernel { row_parallel: false }
+    }
+
+    /// Batch-row-parallel variant — the prefill/training-batch choice.
+    pub fn row_parallel() -> Self {
+        FusedBlastKernel { row_parallel: true }
+    }
+}
+
+impl MatmulKernel for FusedBlastKernel {
+    fn name(&self) -> &'static str {
+        if self.row_parallel {
+            "blast_fused_par"
+        } else {
+            "blast_fused"
+        }
+    }
+
+    fn supports(&self, op: &KernelOp<'_>, _batch: usize) -> bool {
+        matches!(op, KernelOp::Blast(_))
+    }
+
+    fn run(&self, x: &Matrix, op: &KernelOp<'_>) -> Matrix {
+        let KernelOp::Blast(a) = op else {
+            unreachable!("FusedBlastKernel only supports Blast (checked via supports)")
+        };
+        let batch = x.rows;
+        let mut y = Matrix::zeros(batch, a.m);
+        if batch == 0 {
+            return y;
+        }
+        if self.row_parallel && batch > 1 {
+            let chunk_rows = batch.div_ceil(par::num_threads()).max(1);
+            par::par_chunks_mut(&mut y.data, chunk_rows * a.m, |ci, chunk| {
+                let rows = chunk.len() / a.m;
+                fused_rows(x, a, ci * chunk_rows, rows, chunk);
+            });
+        } else {
+            fused_rows(x, a, 0, batch, &mut y.data);
+        }
+        y
+    }
+}
+
+/// Compute output rows `t0 .. t0+rows` into `out` (`rows × a.m`,
+/// row-major) with one `2·b·r` scratch reused across rows.
+fn fused_rows(x: &Matrix, a: &BlastView<'_>, t0: usize, rows: usize, out: &mut [f32]) {
+    let (p, q, b, r) = (a.p(), a.q(), a.b, a.r);
+    let br = b * r;
+    debug_assert_eq!(out.len(), rows * a.m);
+    let mut z = vec![0.0f32; br];
+    let mut w = vec![0.0f32; br];
+    for tt in 0..rows {
+        let xrow = x.row(t0 + tt);
+
+        // Stage 1 (batched): z[j·r ..] += x_{j·q+c} · V_j[c, :].
+        z.fill(0.0);
+        for j in 0..b {
+            let zj = &mut z[j * r..(j + 1) * r];
+            let vj = a.v[j];
+            let xj = &xrow[j * q..(j + 1) * q];
+            for (c, &xv) in xj.iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                let vrow = vj.row(c);
+                // Contiguous axpy of width r — auto-vectorizes.
+                for k in 0..r {
+                    zj[k] += xv * vrow[k];
+                }
+            }
+        }
+
+        // Stage 2: w[i·r ..] = Σ_j s_{i,j} ⊙ z_j.
+        w.fill(0.0);
+        for i in 0..b {
+            let wi = &mut w[i * r..(i + 1) * r];
+            for j in 0..b {
+                let s = a.s_row(i, j);
+                let zj = &z[j * r..(j + 1) * r];
+                for k in 0..r {
+                    wi[k] += s[k] * zj[k];
+                }
+            }
+        }
+
+        // Stage 3 (batched): y[i·p + c] = U_i[c, :] · w_i.
+        let yrow = &mut out[tt * a.m..(tt + 1) * a.m];
+        for i in 0..b {
+            let ui = a.u[i];
+            let wi = &w[i * r..(i + 1) * r];
+            let yi = &mut yrow[i * p..(i + 1) * p];
+            for (c, ycell) in yi.iter_mut().enumerate() {
+                let urow = ui.row(c);
+                let mut acc = 0.0f32;
+                for k in 0..r {
+                    acc += urow[k] * wi[k];
+                }
+                *ycell = acc;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blast::BlastMatrix;
+    use crate::tensor::Rng;
+
+    fn check(a: &BlastMatrix, x: &Matrix, kernel: &FusedBlastKernel) {
+        let view = BlastView::from_matrix(a);
+        let y = kernel.run(x, &KernelOp::Blast(view));
+        let y_ref = crate::tensor::matmul_nt(x, &a.to_dense());
+        assert!(
+            y.sub(&y_ref).fro_norm() < 1e-3 * (1.0 + y_ref.fro_norm()),
+            "fused mismatch (m={}, n={}, b={}, r={}, batch={}, par={})",
+            a.m,
+            a.n,
+            a.b,
+            a.r,
+            x.rows,
+            kernel.row_parallel,
+        );
+    }
+
+    #[test]
+    fn sequential_and_parallel_match_dense() {
+        let mut rng = Rng::new(840);
+        for &(m, n, b, r, batch) in &[
+            (4, 4, 1, 2, 1),
+            (8, 8, 2, 3, 1),
+            (12, 6, 3, 2, 5),
+            (16, 16, 4, 5, 8),
+            (10, 15, 5, 4, 33),
+        ] {
+            let a = BlastMatrix::random_init(m, n, b, r, 1.0, &mut rng);
+            let x = rng.gaussian_matrix(batch, n, 1.0);
+            check(&a, &x, &FusedBlastKernel::sequential());
+            check(&a, &x, &FusedBlastKernel::row_parallel());
+        }
+    }
+
+    #[test]
+    fn zero_couplings_give_exact_zero() {
+        let mut rng = Rng::new(841);
+        let mut a = BlastMatrix::random_init(8, 8, 2, 2, 1.0, &mut rng);
+        for i in 0..2 {
+            for j in 0..2 {
+                a.s[i][j].fill(0.0);
+            }
+        }
+        let x = rng.gaussian_matrix(3, 8, 1.0);
+        let view = BlastView::from_matrix(&a);
+        let y = FusedBlastKernel::sequential().run(&x, &KernelOp::Blast(view));
+        assert!(y.data.iter().all(|&v| v == 0.0));
+    }
+}

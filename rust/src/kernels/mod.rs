@@ -1,0 +1,406 @@
+//! Kernel engine: tiled + parallel BLAST kernels with a per-shape autotuner.
+//!
+//! Every inference-time matrix product in the repo — the dense
+//! `Y = X · Wᵀ` of `nn::linear`, the attention score/context products,
+//! and the BLAST Algorithm-1 product of `blast::matmul` — dispatches
+//! through this subsystem instead of calling a fixed loop nest. The
+//! pieces:
+//!
+//! * [`MatmulKernel`] — the kernel trait. A kernel advertises which
+//!   [`KernelOp`]s it supports and computes `Y = X · Wᵀ` (dense) or the
+//!   Algorithm-1 product `Y = X · Aᵀ` (BLAST) for row-major activation
+//!   batches.
+//! * [`naive::NaiveKernel`] — the scalar triple-loop reference. Every
+//!   other kernel is property-tested element-wise against it
+//!   (`tests/kernel_parity.rs`).
+//! * [`tiled::TiledKernel`] — cache-blocked dense kernel: 8-wide
+//!   output-column register tiles over contiguous rows, weight tile held
+//!   cache-hot across the activation batch. All kernels share a
+//!   **bit-stability invariant** — each output element is one sequential
+//!   ascending-k sum — so the autotuner's choice never changes results
+//!   by a bit (the prefill/decode identity depends on this).
+//! * [`parallel::ParallelKernel`] — the tiled row kernel fanned out over
+//!   `util::par`'s scoped-thread pool, one disjoint output-row chunk per
+//!   worker.
+//! * [`fused::FusedBlastKernel`] — Algorithm 1 with stage 1
+//!   (`V_jᵀ x_j`) and stage 3 (`U_i w_i`) batched across *all* blocks in
+//!   contiguous buffers: no per-block submatrix copies, no per-block
+//!   allocations, one pass over the input per token. Sequential and
+//!   row-parallel variants are registered.
+//! * [`autotune::Autotuner`] — benchmarks the candidate kernels the
+//!   first time each `(structure, shape, batch-bucket)` key is seen,
+//!   caches the winner in-process, and (optionally) persists the plan
+//!   table as JSON via `util::json` so later processes skip the probe.
+//!
+//! ## Dispatch
+//!
+//! [`engine()`] returns the process-wide [`KernelEngine`]. Hot paths call
+//! [`KernelEngine::matmul_nt`] / [`KernelEngine::blast_act`]; the engine
+//! resolves the plan (tuning on a miss) and runs the chosen kernel.
+//!
+//! Environment knobs:
+//!
+//! * `BLAST_KERNEL=<name>` — force one kernel (e.g. `naive`,
+//!   `dense_tiled`, `dense_parallel`, `blast_fused`, `blast_fused_par`)
+//!   for every op it supports; used by the benches to compare kernels.
+//! * `BLAST_AUTOTUNE_CACHE=<path>` — load the plan table from `<path>`
+//!   at startup and re-persist it after each new tuning decision.
+//!
+//! ## Plan format
+//!
+//! ```json
+//! {
+//!   "version": 1,
+//!   "plans": [
+//!     {"op": "blast(b=8,r=32)", "m": 1024, "n": 1024, "batch": 8,
+//!      "kernel": "blast_fused_par"}
+//!   ]
+//! }
+//! ```
+//!
+//! `batch` is the bucket ceiling (1, 8, 64, 4096), so decode (batch=1)
+//! and prefill (batch≫1) tune independently. Regenerate a plan file with
+//! `BLAST_AUTOTUNE_CACHE=plans.json cargo bench --bench blast_matmul`.
+
+pub mod autotune;
+pub mod fused;
+pub mod naive;
+pub mod parallel;
+pub mod tiled;
+
+pub use autotune::{Autotuner, PlanKey};
+pub use fused::FusedBlastKernel;
+pub use naive::NaiveKernel;
+pub use parallel::ParallelKernel;
+pub use tiled::TiledKernel;
+
+use crate::blast::BlastMatrix;
+use crate::tensor::Matrix;
+use std::sync::OnceLock;
+
+/// Borrowed view of a BLAST weight, shared by `BlastMatrix` and the
+/// trainable `nn::linear::LinearWeight::Blast` layout so kernels are
+/// agnostic to where the factors live.
+pub struct BlastView<'a> {
+    /// Logical output features (rows of the represented matrix).
+    pub m: usize,
+    /// Logical input features (cols of the represented matrix).
+    pub n: usize,
+    /// Blocks per side.
+    pub b: usize,
+    /// Rank parameter.
+    pub r: usize,
+    /// Left factors, `b` entries of shape `p×r` (`p = m/b`).
+    pub u: Vec<&'a Matrix>,
+    /// Right factors, `b` entries of shape `q×r` (`q = n/b`).
+    pub v: Vec<&'a Matrix>,
+    /// Diagonal couplings, `b·b` slices of length `r`, row-major by
+    /// `(i, j) → i·b + j`.
+    pub s: Vec<&'a [f32]>,
+}
+
+impl<'a> BlastView<'a> {
+    /// Block height `p = m/b`.
+    #[inline]
+    pub fn p(&self) -> usize {
+        self.m / self.b
+    }
+
+    /// Block width `q = n/b`.
+    #[inline]
+    pub fn q(&self) -> usize {
+        self.n / self.b
+    }
+
+    /// Coupling vector `s_{i,j}`.
+    #[inline]
+    pub fn s_row(&self, i: usize, j: usize) -> &'a [f32] {
+        self.s[i * self.b + j]
+    }
+
+    /// View over a `BlastMatrix`.
+    pub fn from_matrix(a: &'a BlastMatrix) -> Self {
+        BlastView {
+            m: a.m,
+            n: a.n,
+            b: a.b,
+            r: a.r,
+            u: a.u.iter().collect(),
+            v: a.v.iter().collect(),
+            s: a
+                .s
+                .iter()
+                .flat_map(|row| row.iter().map(|sij| sij.as_slice()))
+                .collect(),
+        }
+    }
+
+    fn validate(&self, x: &Matrix) {
+        assert_eq!(x.cols, self.n, "blast_act input mismatch: x cols {} vs n {}", x.cols, self.n);
+        assert_eq!(self.u.len(), self.b, "blast view: {} left factors for b={}", self.u.len(), self.b);
+        assert_eq!(self.v.len(), self.b, "blast view: {} right factors for b={}", self.v.len(), self.b);
+        assert_eq!(self.s.len(), self.b * self.b, "blast view: coupling table size");
+    }
+}
+
+/// One dispatchable operation over a row-major activation batch
+/// `X (batch × in_features)`.
+pub enum KernelOp<'a> {
+    /// `Y = X · Wᵀ` with a dense weight `W (out × in)` — the linear-layer
+    /// and attention-score primitive.
+    DenseNt { w: &'a Matrix },
+    /// `Y = X · Aᵀ` via BLAST Algorithm 1.
+    Blast(BlastView<'a>),
+}
+
+/// Allocation-free structure identity of an op — the hot-path half of a
+/// plan key (`PlanKey::for_op` runs on every dispatch, so this must not
+/// build a `String`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum OpTag {
+    Dense,
+    Blast { b: u32, r: u32 },
+}
+
+impl OpTag {
+    /// Stable textual form used in the JSON plan file
+    /// (`"dense"` / `"blast(b=8,r=32)"`).
+    pub fn to_tag_string(self) -> String {
+        match self {
+            OpTag::Dense => "dense".to_string(),
+            OpTag::Blast { b, r } => format!("blast(b={b},r={r})"),
+        }
+    }
+
+    /// Inverse of [`to_tag_string`]; `None` on unknown tags (old or
+    /// hand-edited plan files).
+    ///
+    /// [`to_tag_string`]: OpTag::to_tag_string
+    pub fn parse(tag: &str) -> Option<Self> {
+        if tag == "dense" {
+            return Some(OpTag::Dense);
+        }
+        let inner = tag.strip_prefix("blast(b=")?.strip_suffix(')')?;
+        let (b, r) = inner.split_once(",r=")?;
+        Some(OpTag::Blast { b: b.parse().ok()?, r: r.parse().ok()? })
+    }
+}
+
+impl KernelOp<'_> {
+    /// Output features of the op.
+    pub fn out_features(&self) -> usize {
+        match self {
+            KernelOp::DenseNt { w } => w.rows,
+            KernelOp::Blast(a) => a.m,
+        }
+    }
+
+    /// Input features of the op.
+    pub fn in_features(&self) -> usize {
+        match self {
+            KernelOp::DenseNt { w } => w.cols,
+            KernelOp::Blast(a) => a.n,
+        }
+    }
+
+    /// Structure identity for plan keys (allocation-free).
+    pub fn tag(&self) -> OpTag {
+        match self {
+            KernelOp::DenseNt { .. } => OpTag::Dense,
+            KernelOp::Blast(a) => OpTag::Blast { b: a.b as u32, r: a.r as u32 },
+        }
+    }
+}
+
+/// A matmul kernel. Implementations must be pure functions of their
+/// inputs (no internal state), `Send + Sync`, and exact-shape-agnostic
+/// within the ops they support.
+pub trait MatmulKernel: Send + Sync {
+    /// Stable name (plan files store it).
+    fn name(&self) -> &'static str;
+
+    /// Whether this kernel can run `op` at the given batch size.
+    fn supports(&self, op: &KernelOp<'_>, batch: usize) -> bool;
+
+    /// Compute the op. `x` is `(batch × in_features)`; the result is
+    /// `(batch × out_features)`.
+    fn run(&self, x: &Matrix, op: &KernelOp<'_>) -> Matrix;
+}
+
+/// The process-wide engine: registered kernels + the autotuner that maps
+/// `(structure, shape, batch-bucket)` keys onto them.
+pub struct KernelEngine {
+    kernels: Vec<Box<dyn MatmulKernel>>,
+    tuner: Autotuner,
+    forced: Option<usize>,
+}
+
+impl KernelEngine {
+    /// Engine with the standard kernel set and env-configured tuner.
+    pub fn with_default_kernels() -> Self {
+        let kernels: Vec<Box<dyn MatmulKernel>> = vec![
+            Box::new(NaiveKernel),
+            Box::new(TiledKernel),
+            Box::new(ParallelKernel),
+            Box::new(FusedBlastKernel::sequential()),
+            Box::new(FusedBlastKernel::row_parallel()),
+        ];
+        let tuner = Autotuner::from_env();
+        let forced = std::env::var("BLAST_KERNEL")
+            .ok()
+            .and_then(|name| kernels.iter().position(|k| k.name() == name));
+        KernelEngine { kernels, tuner, forced }
+    }
+
+    /// `Y = X · Wᵀ` through the tuned kernel for this shape.
+    pub fn matmul_nt(&self, x: &Matrix, w: &Matrix) -> Matrix {
+        assert_eq!(x.cols, w.cols, "matmul_nt shape mismatch: {:?} vs {:?}", x.shape(), w.shape());
+        self.dispatch(x, &KernelOp::DenseNt { w })
+    }
+
+    /// `Y = X · Wᵀ` with a *statically* chosen dense kernel (tiled below
+    /// a work threshold, row-parallel above), bypassing the autotuner.
+    ///
+    /// Use this for activation×activation products whose shapes vary per
+    /// input (e.g. attention scores, where one operand dimension is the
+    /// sequence length): tuning those would create a throwaway plan
+    /// entry — and a probe run — for every distinct length. Thanks to
+    /// the kernels' shared bit-stability invariant the static choice is
+    /// numerically identical to the tuned one.
+    pub fn matmul_nt_static(&self, x: &Matrix, w: &Matrix) -> Matrix {
+        assert_eq!(x.cols, w.cols, "matmul_nt shape mismatch: {:?} vs {:?}", x.shape(), w.shape());
+        if x.rows == 0 {
+            return Matrix::zeros(0, w.rows);
+        }
+        let op = KernelOp::DenseNt { w };
+        if let Some(i) = self.forced {
+            if self.kernels[i].supports(&op, x.rows) {
+                return self.kernels[i].run(x, &op);
+            }
+        }
+        // Same work threshold the tensor-level GEMMs use to decide
+        // whether threads pay for themselves.
+        let name = if x.rows * w.rows * w.cols >= 64 * 64 * 64 && x.rows >= 2 {
+            "dense_parallel"
+        } else {
+            "dense_tiled"
+        };
+        self.kernel_named(name).expect("built-in dense kernel").run(x, &op)
+    }
+
+    /// BLAST Algorithm-1 activation product through the tuned kernel.
+    pub fn blast_act(&self, x: &Matrix, a: &BlastMatrix) -> Matrix {
+        self.dispatch(x, &KernelOp::Blast(BlastView::from_matrix(a)))
+    }
+
+    /// Dispatch an op, tuning on a plan miss.
+    pub fn dispatch(&self, x: &Matrix, op: &KernelOp<'_>) -> Matrix {
+        if let KernelOp::Blast(view) = op {
+            view.validate(x);
+        }
+        if x.rows == 0 {
+            return Matrix::zeros(0, op.out_features());
+        }
+        if let Some(i) = self.forced {
+            if self.kernels[i].supports(op, x.rows) {
+                return self.kernels[i].run(x, op);
+            }
+        }
+        let key = PlanKey::for_op(op, x.rows);
+        let idx = match self.tuner.lookup(&key, &self.kernels) {
+            Some(i) => i,
+            None => self.tuner.tune(&key, x, op, &self.kernels),
+        };
+        self.kernels[idx].run(x, op)
+    }
+
+    /// Kernel by stable name (benches and tests compare specific kernels).
+    pub fn kernel_named(&self, name: &str) -> Option<&dyn MatmulKernel> {
+        self.kernels.iter().find(|k| k.name() == name).map(|k| k.as_ref())
+    }
+
+    /// Names of all registered kernels.
+    pub fn kernel_names(&self) -> Vec<&'static str> {
+        self.kernels.iter().map(|k| k.name()).collect()
+    }
+
+    /// The chosen kernel name for a key, if already planned.
+    pub fn plan_for(&self, key: &PlanKey) -> Option<String> {
+        self.tuner.plan_name(key)
+    }
+
+    /// Persist the current plan table as JSON.
+    pub fn save_plans(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        self.tuner.save(path)
+    }
+
+    /// Load a plan table, merging over the in-process cache.
+    pub fn load_plans(&self, path: &std::path::Path) -> anyhow::Result<usize> {
+        self.tuner.load(path)
+    }
+}
+
+static ENGINE: OnceLock<KernelEngine> = OnceLock::new();
+
+/// The process-wide [`KernelEngine`] (constructed on first use).
+pub fn engine() -> &'static KernelEngine {
+    ENGINE.get_or_init(KernelEngine::with_default_kernels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn engine_matches_tensor_matmul_nt() {
+        let mut rng = Rng::new(800);
+        let x = rng.gaussian_matrix(5, 24, 1.0);
+        let w = rng.gaussian_matrix(10, 24, 1.0);
+        let y = engine().matmul_nt(&x, &w);
+        let y_ref = crate::tensor::matmul_nt(&x, &w);
+        assert_eq!(y.shape(), (5, 10));
+        assert!(y.sub(&y_ref).fro_norm() < 1e-4 * (1.0 + y_ref.fro_norm()));
+    }
+
+    #[test]
+    fn engine_matches_blast_dense_reconstruction() {
+        let mut rng = Rng::new(801);
+        let a = BlastMatrix::random_init(12, 18, 3, 4, 1.0, &mut rng);
+        let x = rng.gaussian_matrix(6, 18, 1.0);
+        let y = engine().blast_act(&x, &a);
+        let y_ref = crate::tensor::matmul_nt(&x, &a.to_dense());
+        assert_eq!(y.shape(), (6, 12));
+        assert!(y.sub(&y_ref).fro_norm() < 1e-3 * (1.0 + y_ref.fro_norm()));
+    }
+
+    #[test]
+    fn empty_batch_short_circuits() {
+        let w = Matrix::zeros(4, 6);
+        let x = Matrix::zeros(0, 6);
+        let y = engine().matmul_nt(&x, &w);
+        assert_eq!(y.shape(), (0, 4));
+    }
+
+    #[test]
+    fn plan_is_cached_after_dispatch() {
+        let mut rng = Rng::new(802);
+        let x = rng.gaussian_matrix(3, 16, 1.0);
+        let w = rng.gaussian_matrix(8, 16, 1.0);
+        let _ = engine().matmul_nt(&x, &w);
+        let key = PlanKey::for_op(&KernelOp::DenseNt { w: &w }, 3);
+        let plan = engine().plan_for(&key).expect("plan cached after dispatch");
+        assert!(engine().kernel_named(&plan).is_some());
+    }
+
+    #[test]
+    fn view_from_matrix_is_consistent() {
+        let mut rng = Rng::new(803);
+        let a = BlastMatrix::random_init(8, 8, 2, 3, 1.0, &mut rng);
+        let view = BlastView::from_matrix(&a);
+        assert_eq!(view.p(), 4);
+        assert_eq!(view.q(), 4);
+        assert_eq!(view.s_row(1, 0), a.s[1][0].as_slice());
+        assert_eq!(view.u[1].shape(), (4, 3));
+    }
+}

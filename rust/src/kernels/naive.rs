@@ -1,0 +1,113 @@
+//! The reference kernel: scalar triple loops, no blocking, no threading.
+//!
+//! This is deliberately the slowest correct implementation — it mirrors
+//! the textbook definition of each op (dense `y_{t,o} = Σ_k x_{t,k}
+//! w_{o,k}`; BLAST Algorithm 1 block by block) so that every optimized
+//! kernel has an unambiguous parity target, and so the autotuner always
+//! has a universal fallback that supports every op.
+
+use super::{BlastView, KernelOp, MatmulKernel};
+use crate::tensor::Matrix;
+
+/// Scalar reference kernel (supports every op).
+pub struct NaiveKernel;
+
+impl MatmulKernel for NaiveKernel {
+    fn name(&self) -> &'static str {
+        "naive"
+    }
+
+    fn supports(&self, _op: &KernelOp<'_>, _batch: usize) -> bool {
+        true
+    }
+
+    fn run(&self, x: &Matrix, op: &KernelOp<'_>) -> Matrix {
+        match op {
+            KernelOp::DenseNt { w } => dense_nt(x, w),
+            KernelOp::Blast(a) => blast_act(x, a),
+        }
+    }
+}
+
+fn dense_nt(x: &Matrix, w: &Matrix) -> Matrix {
+    let (batch, k) = x.shape();
+    let out = w.rows;
+    let mut y = Matrix::zeros(batch, out);
+    for t in 0..batch {
+        for o in 0..out {
+            let mut acc = 0.0f32;
+            for c in 0..k {
+                acc += x.at(t, c) * w.at(o, c);
+            }
+            y.set(t, o, acc);
+        }
+    }
+    y
+}
+
+/// Algorithm 1, one block at a time, one token at a time.
+fn blast_act(x: &Matrix, a: &BlastView<'_>) -> Matrix {
+    let (p, q, b, r) = (a.p(), a.q(), a.b, a.r);
+    let batch = x.rows;
+    let mut y = Matrix::zeros(batch, a.m);
+    for t in 0..batch {
+        let xrow = x.row(t);
+        // Stage 1: z_j = V_jᵀ x_j, column-major access into V (naive).
+        let mut z = vec![0.0f32; b * r];
+        for j in 0..b {
+            for k in 0..r {
+                let mut acc = 0.0f32;
+                for c in 0..q {
+                    acc += xrow[j * q + c] * a.v[j].at(c, k);
+                }
+                z[j * r + k] = acc;
+            }
+        }
+        // Stages 2+3 per output block row.
+        for i in 0..b {
+            let mut w = vec![0.0f32; r];
+            for j in 0..b {
+                let s = a.s_row(i, j);
+                for k in 0..r {
+                    w[k] += s[k] * z[j * r + k];
+                }
+            }
+            for c in 0..p {
+                let mut acc = 0.0f32;
+                for k in 0..r {
+                    acc += a.u[i].at(c, k) * w[k];
+                }
+                y.set(t, i * p + c, acc);
+            }
+        }
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blast::BlastMatrix;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn dense_matches_tensor_ops() {
+        let mut rng = Rng::new(810);
+        let x = rng.gaussian_matrix(4, 9, 1.0);
+        let w = rng.gaussian_matrix(7, 9, 1.0);
+        let y = NaiveKernel.run(&x, &KernelOp::DenseNt { w: &w });
+        let y_ref = crate::tensor::matmul_nt(&x, &w);
+        assert!(y.sub(&y_ref).fro_norm() < 1e-4 * (1.0 + y_ref.fro_norm()));
+    }
+
+    #[test]
+    fn blast_matches_dense_reconstruction() {
+        let mut rng = Rng::new(811);
+        let a = BlastMatrix::random_init(10, 15, 5, 3, 1.0, &mut rng);
+        let x = rng.gaussian_matrix(3, 15, 1.0);
+        let view = super::super::BlastView::from_matrix(&a);
+        let y = NaiveKernel.run(&x, &KernelOp::Blast(view));
+        let y_ref = crate::tensor::matmul_nt(&x, &a.to_dense());
+        assert!(y.sub(&y_ref).fro_norm() < 1e-3 * (1.0 + y_ref.fro_norm()));
+    }
+}

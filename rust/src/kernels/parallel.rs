@@ -1,0 +1,67 @@
+//! Thread-parallel dense kernel: the tiled row micro-kernel fanned out
+//! over `util::par`'s scoped-thread pool.
+//!
+//! The output is partitioned into contiguous row chunks (one per worker);
+//! each worker runs `tiled::dense_nt_rows` on its chunk, so workers share
+//! read-only `x`/`W` and own disjoint slices of `Y` — no locks, no false
+//! sharing beyond chunk boundaries. For a single-row batch the chunking
+//! degenerates to one chunk and `par_chunks_mut` runs it inline, so the
+//! kernel is safe (if pointless) at decode shapes; the autotuner is what
+//! keeps it off them.
+
+use super::{tiled, KernelOp, MatmulKernel};
+use crate::tensor::Matrix;
+use crate::util::par;
+
+/// Row-parallel tiled dense kernel.
+pub struct ParallelKernel;
+
+impl MatmulKernel for ParallelKernel {
+    fn name(&self) -> &'static str {
+        "dense_parallel"
+    }
+
+    fn supports(&self, op: &KernelOp<'_>, _batch: usize) -> bool {
+        matches!(op, KernelOp::DenseNt { .. })
+    }
+
+    fn run(&self, x: &Matrix, op: &KernelOp<'_>) -> Matrix {
+        let KernelOp::DenseNt { w } = op else {
+            unreachable!("ParallelKernel only supports DenseNt (checked via supports)")
+        };
+        let batch = x.rows;
+        let n = w.rows;
+        let mut y = Matrix::zeros(batch, n);
+        if batch == 0 || n == 0 {
+            return y;
+        }
+        let chunk_rows = batch.div_ceil(par::num_threads()).max(1);
+        par::par_chunks_mut(&mut y.data, chunk_rows * n, |ci, chunk| {
+            let t0 = ci * chunk_rows;
+            let rows = chunk.len() / n;
+            tiled::dense_nt_rows(x, w, t0, rows, chunk);
+        });
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn matches_reference_above_and_below_thread_counts() {
+        let mut rng = Rng::new(830);
+        for &(batch, k, n) in &[(1, 32, 16), (3, 64, 64), (64, 128, 96), (130, 40, 25)] {
+            let x = rng.gaussian_matrix(batch, k, 1.0);
+            let w = rng.gaussian_matrix(n, k, 1.0);
+            let y = ParallelKernel.run(&x, &KernelOp::DenseNt { w: &w });
+            let y_ref = crate::tensor::matmul_nt(&x, &w);
+            assert!(
+                y.sub(&y_ref).fro_norm() < 1e-3 * (1.0 + y_ref.fro_norm()),
+                "mismatch at batch={batch} k={k} n={n}"
+            );
+        }
+    }
+}

@@ -1,0 +1,112 @@
+//! Cache-blocked dense `Y = X · Wᵀ` kernel.
+//!
+//! Blocking scheme (single-threaded; `parallel::ParallelKernel` reuses
+//! the same row micro-kernel across threads):
+//!
+//! * output columns are processed in `NR`-wide register tiles: one pass
+//!   over an activation row feeds `NR` simultaneous dot-product
+//!   accumulators, so each loaded `x` value is reused `NR` times;
+//! * within a column tile the batch loop is outermost per tile, so the
+//!   `NR` weight rows stay cache-hot across the activation rows;
+//! * every inner product is a single sequential ascending-`k` sum over
+//!   contiguous slices — no shared-dimension panel splitting. This is
+//!   the engine-wide **bit-stability invariant**: all dense kernels
+//!   accumulate each output element in the same order, so the
+//!   autotuner's per-(shape, batch) kernel choice can never change
+//!   results by a single bit (the prefill/decode identity in
+//!   `nn::gpt::prefill` depends on this).
+
+use super::{KernelOp, MatmulKernel};
+use crate::tensor::Matrix;
+
+/// Output-column register-tile width.
+const NR: usize = 8;
+
+/// Cache-blocked dense kernel.
+pub struct TiledKernel;
+
+impl MatmulKernel for TiledKernel {
+    fn name(&self) -> &'static str {
+        "dense_tiled"
+    }
+
+    fn supports(&self, op: &KernelOp<'_>, _batch: usize) -> bool {
+        matches!(op, KernelOp::DenseNt { .. })
+    }
+
+    fn run(&self, x: &Matrix, op: &KernelOp<'_>) -> Matrix {
+        let KernelOp::DenseNt { w } = op else {
+            unreachable!("TiledKernel only supports DenseNt (checked via supports)")
+        };
+        let mut y = Matrix::zeros(x.rows, w.rows);
+        dense_nt_rows(x, w, 0, x.rows, &mut y.data);
+        y
+    }
+}
+
+/// Compute rows `t0 .. t0+rows` of `Y = X · Wᵀ` into `out` (a
+/// `rows × w.rows` row-major slice). Shared with the parallel kernel,
+/// which hands each worker a disjoint output-row chunk.
+pub(crate) fn dense_nt_rows(x: &Matrix, w: &Matrix, t0: usize, rows: usize, out: &mut [f32]) {
+    let k = x.cols;
+    let n = w.rows;
+    debug_assert_eq!(out.len(), rows * n);
+    for j0 in (0..n).step_by(NR) {
+        let j1 = (j0 + NR).min(n);
+        let tile = j1 - j0;
+        for tt in 0..rows {
+            let xrow = x.row(t0 + tt);
+            let mut acc = [0.0f32; NR];
+            for (jj, j) in (j0..j1).enumerate() {
+                let wrow = w.row(j);
+                let mut s = 0.0f32;
+                // Single sequential ascending-k pass over contiguous
+                // slices (see the bit-stability invariant above).
+                for c in 0..k {
+                    s += xrow[c] * wrow[c];
+                }
+                acc[jj] = s;
+            }
+            let yrow = &mut out[tt * n + j0..tt * n + j1];
+            yrow.copy_from_slice(&acc[..tile]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn matches_reference_across_awkward_shapes() {
+        let mut rng = Rng::new(820);
+        // Shapes straddling the NR register-tile boundary and large-k cases.
+        for &(batch, k, n) in &[
+            (1, 1, 1),
+            (3, 7, 5),
+            (2, 255, 9),
+            (4, 256, 8),
+            (5, 257, 17),
+            (1, 300, 300),
+            (9, 520, 33),
+        ] {
+            let x = rng.gaussian_matrix(batch, k, 1.0);
+            let w = rng.gaussian_matrix(n, k, 1.0);
+            let y = TiledKernel.run(&x, &KernelOp::DenseNt { w: &w });
+            let y_ref = crate::tensor::matmul_nt(&x, &w);
+            assert!(
+                y.sub(&y_ref).fro_norm() < 1e-3 * (1.0 + y_ref.fro_norm()),
+                "mismatch at batch={batch} k={k} n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn declines_blast_ops() {
+        let mut rng = Rng::new(821);
+        let a = crate::blast::BlastMatrix::random_init(4, 4, 2, 2, 1.0, &mut rng);
+        let view = super::super::BlastView::from_matrix(&a);
+        assert!(!TiledKernel.supports(&KernelOp::Blast(view), 1));
+    }
+}

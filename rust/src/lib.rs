@@ -5,6 +5,9 @@
 //! Kim — NeurIPS 2024) as a three-layer Rust + JAX + Pallas stack.
 //!
 //! * [`tensor`] / [`linalg`] — dense numeric substrate (from scratch).
+//! * [`kernels`] — the matmul kernel engine: naive/tiled/parallel/fused
+//!   implementations behind one trait, selected per shape by an
+//!   autotuner; every inference hot path dispatches through it.
 //! * [`blast`] — the BLAST matrix type and Algorithm 1 products.
 //! * [`factorize`] — Algorithm 2 (preconditioned GD factorization) and
 //!   the Low-Rank / Monarch / Block-Diagonal baseline compressors.
@@ -18,6 +21,7 @@
 pub mod util;
 pub mod tensor;
 pub mod linalg;
+pub mod kernels;
 pub mod blast;
 pub mod factorize;
 pub mod nn;
@@ -27,3 +31,9 @@ pub mod eval;
 pub mod runtime;
 pub mod coordinator;
 pub mod experiments;
+
+// Crate-level re-exports. `Executor` and `Manifest` live in
+// `runtime::{executor, manifest}` (there are no top-level modules of
+// those names); re-export them here so downstream code has a stable
+// path that does not depend on the runtime module layout.
+pub use runtime::{ArtifactEntry, Executor, Manifest, PjrtEngine};

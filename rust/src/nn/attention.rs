@@ -125,40 +125,30 @@ impl Attention {
             let q0 = h * hd;
             let k0 = d + h * hd;
             let v0 = 2 * d + h * hd;
-            // scores[t, u] = q_t · k_u * scale for u <= t else -inf.
-            let mut scores = Matrix::zeros(seq, seq);
-            for t in 0..seq {
-                let qrow = &qkv.row(t)[q0..q0 + hd];
-                let srow = scores.row_mut(t);
-                for u in 0..seq {
-                    if self.causal && u > t {
-                        srow[u] = f32::NEG_INFINITY;
-                    } else {
-                        let krow = &qkv.row(u)[k0..k0 + hd];
-                        let mut acc = 0.0f32;
-                        for c in 0..hd {
-                            acc += qrow[c] * krow[c];
-                        }
-                        srow[u] = acc * scale;
+            let qh = qkv.submatrix(0, seq, q0, q0 + hd);
+            let kh = qkv.submatrix(0, seq, k0, k0 + hd);
+            let vh = qkv.submatrix(0, seq, v0, v0 + hd);
+            // scores = (Q_h K_hᵀ) · scale through the kernel engine's
+            // statically-chosen dense kernel (both operands are
+            // activations, so per-shape autotuning would create a plan
+            // entry per sequence length), then causal masking (masked
+            // entries softmax to exactly 0).
+            let mut scores = crate::kernels::engine().matmul_nt_static(&qh, &kh);
+            scores.scale_inplace(scale);
+            if self.causal {
+                for t in 0..seq {
+                    let srow = scores.row_mut(t);
+                    for s in srow.iter_mut().skip(t + 1) {
+                        *s = f32::NEG_INFINITY;
                     }
                 }
             }
             let p = softmax_rows(&scores);
-            // ctx_t = Σ_u p[t,u] v_u.
+            // ctx_h = P · V_h; the GEMM skips the exact-zero masked
+            // probabilities, so causality is preserved bit-for-bit.
+            let ctx_h = crate::tensor::matmul(&p, &vh);
             for t in 0..seq {
-                let prow = p.row(t);
-                let crow = &mut ctx.row_mut(t)[h * hd..(h + 1) * hd];
-                let limit = if self.causal { t + 1 } else { seq };
-                for u in 0..limit {
-                    let w = prow[u];
-                    if w == 0.0 {
-                        continue;
-                    }
-                    let vrow = &qkv.row(u)[v0..v0 + hd];
-                    for c in 0..hd {
-                        crow[c] += w * vrow[c];
-                    }
-                }
+                ctx.row_mut(t)[h * hd..(h + 1) * hd].copy_from_slice(ctx_h.row(t));
             }
             if let Some(ps) = probs_all.as_mut() {
                 ps.push(p);
@@ -301,6 +291,61 @@ impl Attention {
         self.wo.forward(&ctx)
     }
 
+    /// Batched prefill: ingest `x (seq×d)` in one pass, appending every
+    /// position's K/V to `kv` and returning all `seq` outputs.
+    ///
+    /// The QKV and output projections run as single batched products
+    /// through the kernel engine (that is the speedup over per-token
+    /// `forward_decode`), while the per-position attention uses exactly
+    /// the decode-path softmax, so a prefill followed by decode steps is
+    /// bit-identical to decoding the whole prompt token by token.
+    pub fn forward_prefill(&self, x: &Matrix, kv: &mut LayerKv) -> Matrix {
+        assert!(self.causal, "prefill is only defined for causal attention");
+        let seq = x.rows;
+        let d = self.d_model;
+        let hd = self.head_dim;
+        let scale = 1.0 / (hd as f32).sqrt();
+        let qkv = self.wqkv.forward(x); // seq×3d, batched
+        let base = kv.len;
+        for t in 0..seq {
+            let row = qkv.row(t);
+            kv.append(&row[d..2 * d], &row[2 * d..3 * d]);
+        }
+        let mut ctx = Matrix::zeros(seq, d);
+        for h in 0..self.n_heads {
+            for t in 0..seq {
+                let q = &qkv.row(t)[h * hd..(h + 1) * hd];
+                let len = base + t + 1; // causal: positions 0..=base+t
+                let mut scores = vec![0.0f32; len];
+                let mut max = f32::NEG_INFINITY;
+                for u in 0..len {
+                    let krow = &kv.k.row(u)[h * hd..(h + 1) * hd];
+                    let mut acc = 0.0f32;
+                    for c in 0..hd {
+                        acc += q[c] * krow[c];
+                    }
+                    scores[u] = acc * scale;
+                    max = max.max(scores[u]);
+                }
+                let mut denom = 0.0f32;
+                for s in scores.iter_mut() {
+                    *s = (*s - max).exp();
+                    denom += *s;
+                }
+                let inv = 1.0 / denom.max(1e-30);
+                let crow = &mut ctx.row_mut(t)[h * hd..(h + 1) * hd];
+                for u in 0..len {
+                    let w = scores[u] * inv;
+                    let vrow = &kv.v.row(u)[h * hd..(h + 1) * hd];
+                    for c in 0..hd {
+                        crow[c] += w * vrow[c];
+                    }
+                }
+            }
+        }
+        self.wo.forward(&ctx) // seq×d, batched
+    }
+
     pub fn params_mut(&mut self) -> Vec<&mut PTensor> {
         let mut out = self.wqkv.params_mut();
         out.extend(self.wo.params_mut());
@@ -401,6 +446,42 @@ mod tests {
                 "dx({i},{j}): {num} vs {}",
                 dx.at(i, j)
             );
+        }
+    }
+
+    #[test]
+    fn prefill_matches_sequential_decode() {
+        let mut rng = Rng::new(344);
+        for structure in [StructureKind::Dense, StructureKind::Blast { b: 2, r: 3 }] {
+            let attn = Attention::new(8, 2, structure, &mut rng);
+            let x = rng.gaussian_matrix(6, 8, 1.0);
+            // Sequential decode reference.
+            let mut kv_ref = LayerKv::with_capacity(8, 8);
+            let mut y_ref = Vec::new();
+            for t in 0..6 {
+                let xt = x.submatrix(t, t + 1, 0, 8);
+                y_ref.push(attn.forward_decode(&xt, &mut kv_ref));
+            }
+            // Prefill 4 positions at once, then decode 2 more.
+            let mut kv = LayerKv::with_capacity(8, 8);
+            let y_pre = attn.forward_prefill(&x.submatrix(0, 4, 0, 8), &mut kv);
+            for t in 0..4 {
+                for c in 0..8 {
+                    assert_eq!(
+                        y_pre.at(t, c),
+                        y_ref[t].at(0, c),
+                        "{structure:?} prefill t={t} c={c}"
+                    );
+                }
+            }
+            for t in 4..6 {
+                let xt = x.submatrix(t, t + 1, 0, 8);
+                let yt = attn.forward_decode(&xt, &mut kv);
+                for c in 0..8 {
+                    assert_eq!(yt.at(0, c), y_ref[t].at(0, c), "{structure:?} decode t={t}");
+                }
+            }
+            assert_eq!(kv.len, kv_ref.len);
         }
     }
 

@@ -129,6 +129,18 @@ impl Block {
         x_mid.add(&m)
     }
 
+    /// KV-cached batched prefill over `x (seq×d)`: every non-attention
+    /// op is row-wise and attention uses the decode softmax, so this is
+    /// bit-identical to `seq` successive `forward_decode` calls while
+    /// running the four structured linears as batched kernel dispatches.
+    pub fn forward_prefill(&self, x: &Matrix, kv: &mut LayerKv) -> Matrix {
+        let a = self.attn.forward_prefill(&self.ln1.forward(x), kv);
+        let x_mid = x.add(&a);
+        let h = gelu(&self.fc1.forward(&self.ln2.forward(&x_mid)));
+        let m = self.fc2.forward(&h);
+        x_mid.add(&m)
+    }
+
     pub fn params_mut(&mut self) -> Vec<&mut PTensor> {
         let mut out = self.ln1.params_mut();
         out.extend(self.attn.params_mut());

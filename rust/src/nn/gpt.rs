@@ -203,6 +203,50 @@ impl TinyLM {
         out
     }
 
+    /// Batched prompt prefill: ingest `tokens` starting at the cache's
+    /// current sequence position in one pass per layer (batched kernel
+    /// dispatches instead of per-token decode steps) and return the
+    /// logits of the **last** ingested position (1×vocab), or `None`
+    /// when `tokens` is empty. Bit-identical to calling [`decode_step`]
+    /// per token, so prefill-then-decode generation reproduces
+    /// token-by-token generation exactly.
+    ///
+    /// [`decode_step`]: TinyLM::decode_step
+    pub fn prefill(&self, tokens: &[usize], kv: &mut KvCache) -> Option<Matrix> {
+        if tokens.is_empty() {
+            return None;
+        }
+        let d = self.cfg.d_model;
+        let pos0 = kv.seq_len();
+        let mut x = Matrix::zeros(tokens.len(), d);
+        for (t, &tok) in tokens.iter().enumerate() {
+            assert!(tok < self.cfg.vocab, "token {tok} out of vocab");
+            let e = self.tok_embed.v.row(tok);
+            let p = self.pos_embed.v.row((pos0 + t).min(self.cfg.max_seq - 1));
+            let row = x.row_mut(t);
+            for c in 0..d {
+                row[c] = e[c] + p[c];
+            }
+        }
+        for (blk, lkv) in self.blocks.iter().zip(&mut kv.layers) {
+            x = blk.forward_prefill(&x, lkv);
+        }
+        let last = x.submatrix(x.rows - 1, x.rows, 0, d);
+        Some(self.head.forward(&self.ln_f.forward(&last)))
+    }
+
+    /// Warm the kernel autotuner for this model's serving shapes before
+    /// taking traffic: one forward per requested batch size touches every
+    /// structured linear at that (shape, batch) key, so tuning probes run
+    /// at model-load time instead of inside the first user request.
+    pub fn pretune(&self, batches: &[usize]) {
+        for &bsz in batches {
+            let n = bsz.clamp(1, self.cfg.max_seq.saturating_sub(1).max(1));
+            let tokens = vec![0usize; n];
+            let _ = self.forward(&tokens);
+        }
+    }
+
     /// One decode step: token at position `pos` → logits (1×vocab).
     pub fn decode_step(&self, tok: usize, pos: usize, kv: &mut KvCache) -> Matrix {
         let d = self.cfg.d_model;
@@ -309,6 +353,39 @@ mod tests {
                     );
                 }
             }
+        }
+    }
+
+    #[test]
+    fn prefill_matches_tokenwise_decode() {
+        let mut rng = Rng::new(406);
+        for s in [StructureKind::Dense, StructureKind::Blast { b: 2, r: 4 }] {
+            let lm = TinyLM::new(LmConfig::tiny(s), &mut rng);
+            let prompt: Vec<usize> = vec![3, 9, 27, 17, 5];
+            // Reference: sequential decode of the prompt.
+            let mut kv_ref = lm.new_kv_cache();
+            let mut logits_ref = Matrix::zeros(1, lm.cfg.vocab);
+            for (t, &tok) in prompt.iter().enumerate() {
+                logits_ref = lm.decode_step(tok, t, &mut kv_ref);
+            }
+            // Batched prefill.
+            let mut kv = lm.new_kv_cache();
+            let logits = lm.prefill(&prompt, &mut kv).expect("nonempty prompt");
+            assert_eq!(kv.seq_len(), kv_ref.seq_len());
+            for c in 0..lm.cfg.vocab {
+                assert_eq!(logits.at(0, c), logits_ref.at(0, c), "{s:?} c={c}");
+            }
+            // Continuing with decode steps stays consistent.
+            let next = argmax(logits.row(0));
+            let l1 = lm.decode_step(next, prompt.len(), &mut kv);
+            let l2 = lm.decode_step(next, prompt.len(), &mut kv_ref);
+            for c in 0..lm.cfg.vocab {
+                assert_eq!(l1.at(0, c), l2.at(0, c));
+            }
+            // Empty prompt yields no logits and an untouched cache.
+            let mut kv_empty = lm.new_kv_cache();
+            assert!(lm.prefill(&[], &mut kv_empty).is_none());
+            assert_eq!(kv_empty.seq_len(), 0);
         }
     }
 

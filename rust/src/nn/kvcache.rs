@@ -28,21 +28,31 @@ impl LayerKv {
     }
 
     /// Append one position's K/V rows; grows by doubling when full.
+    ///
+    /// Growth is reserve-style: `Vec::resize` extends the existing
+    /// buffers in place, zero-filling only the newly added region. The
+    /// previous implementation allocated fully zeroed buffers of the new
+    /// capacity and then copied the live prefix over — a redundant
+    /// zero-fill + copy of the entire live region on every doubling.
     pub fn append(&mut self, k_row: &[f32], v_row: &[f32]) {
         assert_eq!(k_row.len(), self.k.cols);
+        assert_eq!(v_row.len(), self.v.cols);
         if self.len == self.capacity {
             let new_cap = (self.capacity * 2).max(16);
-            let mut k = Matrix::zeros(new_cap, self.k.cols);
-            let mut v = Matrix::zeros(new_cap, self.v.cols);
-            k.data[..self.len * self.k.cols].copy_from_slice(&self.k.data[..self.len * self.k.cols]);
-            v.data[..self.len * self.v.cols].copy_from_slice(&self.v.data[..self.len * self.v.cols]);
-            self.k = k;
-            self.v = v;
+            self.k.data.resize(new_cap * self.k.cols, 0.0);
+            self.k.rows = new_cap;
+            self.v.data.resize(new_cap * self.v.cols, 0.0);
+            self.v.rows = new_cap;
             self.capacity = new_cap;
         }
         self.k.row_mut(self.len).copy_from_slice(k_row);
         self.v.row_mut(self.len).copy_from_slice(v_row);
         self.len += 1;
+    }
+
+    /// Allocated capacity in positions (for growth tests/diagnostics).
+    pub fn capacity(&self) -> usize {
+        self.capacity
     }
 
     /// Valid prefix views.
@@ -108,6 +118,45 @@ mod tests {
             assert_eq!(kv.keys().at(i, 0), i as f32);
             assert_eq!(kv.values().at(i, 1), i as f32);
         }
+    }
+
+    #[test]
+    fn append_beyond_capacity_grows_geometrically() {
+        // Regression for the reserve-style growth path: repeated
+        // doublings must preserve every live row, report the expected
+        // capacity, and keep the row views consistent.
+        let mut kv = LayerKv::with_capacity(2, 3);
+        assert_eq!(kv.capacity(), 2);
+        for i in 0..37 {
+            let f = i as f32;
+            kv.append(&[f, f + 0.5, -f], &[-f, f, f + 0.25]);
+        }
+        assert_eq!(kv.len, 37);
+        // 2 → 4 → 8 → 16 → 32 → 64.
+        assert_eq!(kv.capacity(), 64);
+        assert_eq!(kv.k.rows, 64);
+        assert_eq!(kv.v.rows, 64);
+        for i in 0..37 {
+            let f = i as f32;
+            assert_eq!(kv.keys().row(i), &[f, f + 0.5, -f]);
+            assert_eq!(kv.values().row(i), &[-f, f, f + 0.25]);
+        }
+        // Clear keeps capacity; appending again reuses the buffer.
+        kv.clear();
+        assert_eq!(kv.len, 0);
+        assert_eq!(kv.capacity(), 64);
+        kv.append(&[9., 9., 9.], &[8., 8., 8.]);
+        assert_eq!(kv.keys().row(0), &[9., 9., 9.]);
+    }
+
+    #[test]
+    fn zero_capacity_start_is_valid() {
+        let mut kv = LayerKv::with_capacity(0, 2);
+        kv.append(&[1., 2.], &[3., 4.]);
+        assert_eq!(kv.len, 1);
+        assert_eq!(kv.capacity(), 16);
+        assert_eq!(kv.keys().row(0), &[1., 2.]);
+        assert_eq!(kv.values().row(0), &[3., 4.]);
     }
 
     #[test]

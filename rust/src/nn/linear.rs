@@ -9,6 +9,7 @@
 
 use super::param::PTensor;
 use crate::blast::BlastMatrix;
+use crate::kernels::{engine, BlastView, KernelOp};
 use crate::tensor::{matmul, matmul_nt, matmul_tn, Matrix, Rng};
 
 /// The trainable weight representation of a linear layer.
@@ -274,49 +275,66 @@ impl Linear {
         let tokens = x.rows;
         let (mut y, cache) = match &self.weight {
             LinearWeight::Dense { w } => {
-                let y = matmul_nt(x, &w.v);
+                let y = engine().matmul_nt(x, &w.v);
                 (y, keep.then(|| LinearCache::Dense { x: x.clone() }))
             }
             LinearWeight::LowRank { p, q } => {
                 let z = matmul(x, &q.v); // tokens×r
-                let y = matmul_nt(&z, &p.v); // tokens×out
+                let y = engine().matmul_nt(&z, &p.v); // tokens×out
                 (y, keep.then(|| LinearCache::LowRank { x: x.clone(), z }))
             }
             LinearWeight::Blast { b, r, out, inp, u, v, s } => {
-                let p = out / b;
-                let q = inp / b;
-                // Stage 1: z_j = x_j V_j (tokens×r) — shared across i.
-                let z: Vec<Matrix> = (0..*b)
-                    .map(|j| {
-                        let xj = x.submatrix(0, tokens, j * q, (j + 1) * q);
-                        matmul(&xj, &v[j].v)
-                    })
-                    .collect();
-                // Stage 2+3 per output block row.
-                let mut y = Matrix::zeros(tokens, *out);
-                let mut ws = Vec::with_capacity(*b);
-                for i in 0..*b {
-                    let mut w = Matrix::zeros(tokens, *r);
-                    for j in 0..*b {
-                        let srow = s.v.row(i * b + j);
-                        let zj = &z[j];
-                        for t in 0..tokens {
-                            let zrow = zj.row(t);
-                            let wrow = w.row_mut(t);
-                            for k in 0..*r {
-                                wrow[k] += zrow[k] * srow[k];
+                if !keep {
+                    // Inference hot path: one fused, autotuned
+                    // Algorithm-1 dispatch — no per-block submatrix
+                    // copies, no cache materialization.
+                    let view = BlastView {
+                        m: *out,
+                        n: *inp,
+                        b: *b,
+                        r: *r,
+                        u: u.iter().map(|t| &t.v).collect(),
+                        v: v.iter().map(|t| &t.v).collect(),
+                        s: (0..b * b).map(|k| s.v.row(k)).collect(),
+                    };
+                    let y = engine().dispatch(x, &KernelOp::Blast(view));
+                    (y, None)
+                } else {
+                    let p = out / b;
+                    let q = inp / b;
+                    // Training forward keeps the per-stage intermediates
+                    // (z_j, w_i) that `backward` consumes.
+                    // Stage 1: z_j = x_j V_j (tokens×r) — shared across i.
+                    let z: Vec<Matrix> = (0..*b)
+                        .map(|j| {
+                            let xj = x.submatrix(0, tokens, j * q, (j + 1) * q);
+                            matmul(&xj, &v[j].v)
+                        })
+                        .collect();
+                    // Stage 2+3 per output block row.
+                    let mut y = Matrix::zeros(tokens, *out);
+                    let mut ws = Vec::with_capacity(*b);
+                    for i in 0..*b {
+                        let mut w = Matrix::zeros(tokens, *r);
+                        for j in 0..*b {
+                            let srow = s.v.row(i * b + j);
+                            let zj = &z[j];
+                            for t in 0..tokens {
+                                let zrow = zj.row(t);
+                                let wrow = w.row_mut(t);
+                                for k in 0..*r {
+                                    wrow[k] += zrow[k] * srow[k];
+                                }
                             }
                         }
-                    }
-                    let yi = matmul_nt(&w, &u[i].v); // tokens×p
-                    for t in 0..tokens {
-                        y.row_mut(t)[i * p..(i + 1) * p].copy_from_slice(yi.row(t));
-                    }
-                    if keep {
+                        let yi = matmul_nt(&w, &u[i].v); // tokens×p
+                        for t in 0..tokens {
+                            y.row_mut(t)[i * p..(i + 1) * p].copy_from_slice(yi.row(t));
+                        }
                         ws.push(w);
                     }
+                    (y, Some(LinearCache::Blast { x: x.clone(), z, w: ws }))
                 }
-                (y, keep.then(|| LinearCache::Blast { x: x.clone(), z, w: ws }))
             }
             LinearWeight::Monarch { b, out, inp, rb, l, .. } => {
                 let p = out / b;
@@ -324,13 +342,13 @@ impl Linear {
                 let z: Vec<Matrix> = (0..*b)
                     .map(|j| {
                         let xj = x.submatrix(0, tokens, j * q, (j + 1) * q);
-                        matmul_nt(&xj, &rb[j].v) // tokens×t
+                        engine().matmul_nt(&xj, &rb[j].v) // tokens×t
                     })
                     .collect();
                 let mut y = Matrix::zeros(tokens, *out);
                 for i in 0..*b {
                     for j in 0..*b {
-                        let contrib = matmul_nt(&z[j], &l[i * b + j].v); // tokens×p
+                        let contrib = engine().matmul_nt(&z[j], &l[i * b + j].v); // tokens×p
                         for t in 0..tokens {
                             let yrow = &mut y.row_mut(t)[i * p..(i + 1) * p];
                             for (yv, cv) in yrow.iter_mut().zip(contrib.row(t)) {
@@ -349,7 +367,7 @@ impl Linear {
                 for i in 0..*b {
                     let xi = x.submatrix(0, tokens, i * q, (i + 1) * q);
                     let z = matmul(&xi, &qd[i].v); // tokens×t
-                    let yi = matmul_nt(&z, &pd[i].v); // tokens×p
+                    let yi = engine().matmul_nt(&z, &pd[i].v); // tokens×p
                     for t in 0..tokens {
                         y.row_mut(t)[i * p..(i + 1) * p].copy_from_slice(yi.row(t));
                     }

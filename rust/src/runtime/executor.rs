@@ -5,9 +5,18 @@
 //! a value-level `TensorValue` interface so the coordinator and the
 //! end-to-end training example can feed plain `f32`/`i32` buffers in
 //! manifest order without touching XLA types.
+//!
+//! The `xla` crate is not available in the offline build, so everything
+//! that touches XLA types is gated behind the `pjrt` cargo feature. With
+//! the feature off (the default) a stub [`PjrtEngine`]/[`Executor`] pair
+//! with identical signatures is compiled whose constructor returns an
+//! error — callers (`blast info`, the PJRT integration tests, benches)
+//! already handle "PJRT unavailable" gracefully, so the whole crate
+//! builds and tests without XLA.
 
 use super::manifest::ArtifactEntry;
 use anyhow::{bail, Context, Result};
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
 
 /// A host-side tensor value (what crosses the executor boundary).
@@ -46,6 +55,7 @@ impl TensorValue {
         TensorValue::F32 { shape: vec![m.rows, m.cols], data: m.data.clone() }
     }
 
+    #[cfg(feature = "pjrt")]
     fn to_literal(&self) -> Result<xla::Literal> {
         match self {
             TensorValue::F32 { shape, data } => {
@@ -69,6 +79,7 @@ impl TensorValue {
         }
     }
 
+    #[cfg(feature = "pjrt")]
     fn from_literal(lit: &xla::Literal) -> Result<Self> {
         let shape = lit
             .array_shape()
@@ -93,11 +104,13 @@ impl TensorValue {
 }
 
 /// Shared PJRT client + executable cache.
+#[cfg(feature = "pjrt")]
 pub struct PjrtEngine {
     client: xla::PjRtClient,
     cache: HashMap<String, xla::PjRtLoadedExecutable>,
 }
 
+#[cfg(feature = "pjrt")]
 impl PjrtEngine {
     pub fn cpu() -> Result<Self> {
         let client =
@@ -129,11 +142,13 @@ impl PjrtEngine {
 }
 
 /// A compiled artifact ready to run.
+#[cfg(feature = "pjrt")]
 pub struct Executor<'a> {
     exe: &'a xla::PjRtLoadedExecutable,
     pub entry: ArtifactEntry,
 }
 
+#[cfg(feature = "pjrt")]
 impl Executor<'_> {
     /// Execute with arguments in manifest order; returns the flattened
     /// tuple outputs.
@@ -175,6 +190,45 @@ impl Executor<'_> {
     }
 }
 
+/// Stub engine compiled when the `pjrt` feature is off: identical public
+/// surface, but the constructor reports that PJRT support is unavailable.
+#[cfg(not(feature = "pjrt"))]
+pub struct PjrtEngine {
+    _private: (),
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl PjrtEngine {
+    pub fn cpu() -> Result<Self> {
+        bail!(
+            "PJRT support is not compiled in; rebuild with `--features pjrt` \
+             (requires the `xla` crate)"
+        )
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable".to_string()
+    }
+
+    pub fn load(&mut self, _entry: &ArtifactEntry) -> Result<Executor<'_>> {
+        bail!("PJRT support is not compiled in")
+    }
+}
+
+/// Stub executor matching the real `Executor<'a>` surface.
+#[cfg(not(feature = "pjrt"))]
+pub struct Executor<'a> {
+    pub entry: ArtifactEntry,
+    _engine: std::marker::PhantomData<&'a ()>,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Executor<'_> {
+    pub fn run(&self, _args: &[TensorValue]) -> Result<Vec<TensorValue>> {
+        bail!("PJRT support is not compiled in")
+    }
+}
+
 /// Load a params `.bmx` bundle into manifest-ordered TensorValues, using
 /// the artifact's `param_names` and `arg_shapes` (the bundle stores 2-D
 /// views; reshape to the manifest's true shapes).
@@ -197,7 +251,7 @@ pub fn load_params_ordered(entry: &ArtifactEntry) -> Result<Vec<TensorValue>> {
     Ok(out)
 }
 
-#[cfg(test)]
+#[cfg(all(test, feature = "pjrt"))]
 mod tests {
     use super::*;
 
@@ -221,5 +275,26 @@ mod tests {
         let lit = v.to_literal().unwrap();
         let back = TensorValue::from_literal(&lit).unwrap();
         assert_eq!(back.as_f32().unwrap(), &[2.5]);
+    }
+}
+
+#[cfg(all(test, not(feature = "pjrt")))]
+mod stub_tests {
+    use super::*;
+
+    #[test]
+    fn stub_engine_reports_unavailable() {
+        let err = PjrtEngine::cpu().err().expect("stub must not construct");
+        assert!(format!("{err}").contains("PJRT support"));
+    }
+
+    #[test]
+    fn tensor_value_accessors_work_without_xla() {
+        let v = TensorValue::F32 { shape: vec![2, 2], data: vec![1., 2., 3., 4.] };
+        assert_eq!(v.shape(), &[2, 2]);
+        assert_eq!(v.as_f32().unwrap(), &[1., 2., 3., 4.]);
+        assert!(v.as_i32().is_err());
+        let s = TensorValue::scalar_f32(2.5);
+        assert!(s.shape().is_empty());
     }
 }

@@ -1,0 +1,167 @@
+//! Kernel parity property tests: every optimized kernel in the engine
+//! must be element-wise close to the naive reference kernel (and to the
+//! dense reconstruction of the weight) across random shapes, block
+//! counts `b`, ranks `r`, and batch sizes — including the low-rank /
+//! block-diagonal / Monarch special-case embeddings of `blast::special`.
+
+use blast_repro::blast::BlastMatrix;
+use blast_repro::kernels::{
+    engine, BlastView, FusedBlastKernel, KernelOp, MatmulKernel, NaiveKernel, ParallelKernel,
+    TiledKernel,
+};
+use blast_repro::tensor::{matmul_nt, Matrix, Rng};
+use blast_repro::util::check::{property, PropGen};
+
+fn assert_close(got: &Matrix, want: &Matrix, what: &str) {
+    assert_eq!(got.shape(), want.shape(), "{what}: shape mismatch");
+    let tol = 1e-3 * (1.0 + want.max_abs());
+    for (i, (a, b)) in got.data.iter().zip(&want.data).enumerate() {
+        assert!(
+            (a - b).abs() <= tol,
+            "{what}: element {i} differs: {a} vs {b} (tol {tol})"
+        );
+    }
+}
+
+fn blast_kernels() -> Vec<Box<dyn MatmulKernel>> {
+    vec![
+        Box::new(FusedBlastKernel::sequential()),
+        Box::new(FusedBlastKernel::row_parallel()),
+    ]
+}
+
+fn dense_kernels() -> Vec<Box<dyn MatmulKernel>> {
+    vec![Box::new(TiledKernel), Box::new(ParallelKernel)]
+}
+
+/// Run every BLAST-capable kernel on (a, x) and compare against both the
+/// naive reference and the dense reconstruction.
+fn check_blast_parity(a: &BlastMatrix, x: &Matrix, what: &str) {
+    let reference = NaiveKernel.run(x, &KernelOp::Blast(BlastView::from_matrix(a)));
+    let dense = matmul_nt(x, &a.to_dense());
+    assert_close(&reference, &dense, &format!("{what}: naive vs dense"));
+    for kernel in blast_kernels() {
+        let op = KernelOp::Blast(BlastView::from_matrix(a));
+        assert!(kernel.supports(&op, x.rows));
+        let y = kernel.run(x, &op);
+        assert_close(&y, &reference, &format!("{what}: {} vs naive", kernel.name()));
+    }
+    // The engine's tuned dispatch must agree with whatever it picked.
+    let y = engine().blast_act(x, a);
+    assert_close(&y, &reference, &format!("{what}: engine vs naive"));
+}
+
+#[test]
+fn dense_kernels_match_naive_across_random_shapes() {
+    property(40, |g: &mut PropGen| {
+        let batch = g.usize_in(1, 16);
+        // Straddle the KC=256 panel boundary and the NR=8 column tile.
+        let k = g.usize_in(1, 300);
+        let n = g.usize_in(1, 40);
+        let x = g.matrix(batch, k);
+        let w = g.matrix(n, k);
+        let op = KernelOp::DenseNt { w: &w };
+        let reference = NaiveKernel.run(&x, &op);
+        for kernel in dense_kernels() {
+            assert!(kernel.supports(&op, batch));
+            let y = kernel.run(&x, &op);
+            assert_close(
+                &y,
+                &reference,
+                &format!("dense {}x{k} out={n} kernel={}", batch, kernel.name()),
+            );
+        }
+        let y = engine().matmul_nt(&x, &w);
+        assert_close(&y, &reference, "dense engine dispatch");
+    });
+}
+
+#[test]
+fn blast_kernels_match_naive_across_random_structures() {
+    property(40, |g: &mut PropGen| {
+        let b = g.usize_in(1, 6);
+        let p = g.usize_in(1, 6);
+        let q = g.usize_in(1, 6);
+        let r = g.usize_in(1, 8);
+        let batch = g.usize_in(1, 12);
+        let (m, n) = (b * p, b * q);
+        let mut rng = Rng::new(g.rng.next_u64());
+        let a = BlastMatrix::random_init(m, n, b, r, 1.0, &mut rng);
+        let x = g.matrix(batch, n);
+        check_blast_parity(&a, &x, &format!("blast m={m} n={n} b={b} r={r} batch={batch}"));
+    });
+}
+
+#[test]
+fn blast_kernels_handle_low_rank_special_case() {
+    property(15, |g: &mut PropGen| {
+        let r = g.usize_in(1, 4);
+        let b = [1, 2, 3, 4, 6][g.usize_in(0, 4)];
+        let m = b * g.usize_in(1, 4);
+        let n = b * g.usize_in(1, 4);
+        let u = g.matrix(m, r);
+        let v = g.matrix(n, r);
+        let a = BlastMatrix::from_low_rank(&u, &v, b);
+        let x = g.matrix(g.usize_in(1, 6), n);
+        check_blast_parity(&a, &x, &format!("low-rank b={b} r={r}"));
+    });
+}
+
+#[test]
+fn blast_kernels_handle_block_diagonal_special_case() {
+    property(10, |g: &mut PropGen| {
+        let b = g.usize_in(1, 4);
+        let p = g.usize_in(2, 5);
+        let full_rank = g.usize_in(1, p);
+        let blocks: Vec<Matrix> = (0..b).map(|_| g.matrix(p, p)).collect();
+        let a = BlastMatrix::from_block_diagonal(&blocks, full_rank);
+        let x = g.matrix(g.usize_in(1, 6), p * b);
+        check_blast_parity(&a, &x, &format!("block-diag b={b} p={p} r={full_rank}"));
+    });
+}
+
+#[test]
+fn blast_kernels_handle_monarch_special_case() {
+    property(10, |g: &mut PropGen| {
+        let b = g.usize_in(1, 3);
+        let p = g.usize_in(1, 4);
+        let q = g.usize_in(1, 4);
+        let t = g.usize_in(1, 3);
+        let l: Vec<Vec<Matrix>> =
+            (0..b).map(|_| (0..b).map(|_| g.matrix(p, t)).collect()).collect();
+        let r_bases: Vec<Matrix> = (0..b).map(|_| g.matrix(t, q)).collect();
+        let a = BlastMatrix::from_monarch(&l, &r_bases);
+        let x = g.matrix(g.usize_in(1, 6), q * b);
+        check_blast_parity(&a, &x, &format!("monarch b={b} t={t}"));
+    });
+}
+
+#[test]
+fn matvec_and_matmul_act_agree_with_kernel_dispatch() {
+    // The public BlastMatrix entry points route through the engine; they
+    // must agree with the naive reference exactly like raw dispatch does.
+    property(15, |g: &mut PropGen| {
+        let b = g.usize_in(1, 4);
+        let (m, n) = (b * g.usize_in(1, 5), b * g.usize_in(1, 5));
+        let r = g.usize_in(1, 6);
+        let mut rng = Rng::new(g.rng.next_u64());
+        let a = BlastMatrix::random_init(m, n, b, r, 1.0, &mut rng);
+        let x: Vec<f32> = (0..n).map(|i| ((i * 13 + 7) as f32 * 0.1).sin()).collect();
+        let y = a.matvec(&x);
+        let xm = Matrix::from_vec(1, n, x.clone());
+        let reference = NaiveKernel.run(&xm, &KernelOp::Blast(BlastView::from_matrix(&a)));
+        assert_eq!(y.len(), m);
+        for (i, (got, want)) in y.iter().zip(reference.row(0)).enumerate() {
+            assert!(
+                (got - want).abs() <= 1e-3 * (1.0 + want.abs()),
+                "matvec[{i}]: {got} vs {want}"
+            );
+        }
+        let xb = g.matrix(3, n);
+        assert_close(
+            &a.matmul_act(&xb),
+            &NaiveKernel.run(&xb, &KernelOp::Blast(BlastView::from_matrix(&a))),
+            "matmul_act vs naive",
+        );
+    });
+}
