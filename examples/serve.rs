@@ -1,10 +1,14 @@
 //! Serving demo: start the L3 coordinator with dense + BLAST-compressed
-//! variants, fire a batched request load from client threads, and report
-//! latency/throughput per variant — the serving-system view of Table 4.
+//! variants, fire a request load from client threads through the
+//! continuous-batching workers, and report latency/throughput per
+//! variant — the serving-system view of Table 4. Ends with a streaming
+//! request consumed token by token.
 //!
 //! Run: `cargo run --release --example serve`
 
-use blast_repro::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig};
+use blast_repro::coordinator::{
+    BatcherConfig, Coordinator, CoordinatorConfig, ResponseEvent,
+};
 use blast_repro::nn::attention::StructureKind;
 use blast_repro::nn::gpt::{LmConfig, TinyLM};
 use blast_repro::tensor::Rng;
@@ -30,6 +34,7 @@ fn main() {
         vec![("dense".into(), dense), ("blast".into(), blast)],
         CoordinatorConfig {
             batcher: BatcherConfig { max_batch: 8, ..Default::default() },
+            slots: 8,
         },
     ));
 
@@ -43,26 +48,61 @@ fn main() {
             let coord = Arc::clone(&coord);
             let variant = variant.to_string();
             handles.push(std::thread::spawn(move || {
-                let mut total_compute = std::time::Duration::ZERO;
+                // Per-request latencies: under continuous batching the
+                // decode work is shared across live sequences, so
+                // client-side TTFT / end-to-end are the meaningful
+                // per-request numbers (a sum of compute_time would
+                // count each batched iteration up to `slots` times).
+                let mut ttft_sum = std::time::Duration::ZERO;
+                let mut e2e_sum = std::time::Duration::ZERO;
                 for i in 0..per_client {
                     let resp = coord
                         .generate(&variant, vec![1 + (c + i) % 8, 2, 3], new_tokens)
                         .expect("request");
-                    total_compute += resp.compute_time;
+                    ttft_sum += resp.ttft.unwrap_or_default();
+                    e2e_sum += resp.queue_time + resp.compute_time;
                 }
-                total_compute
+                (ttft_sum, e2e_sum)
             }));
         }
-        let mut compute = std::time::Duration::ZERO;
+        let mut ttft = std::time::Duration::ZERO;
+        let mut e2e = std::time::Duration::ZERO;
         for h in handles {
-            compute += h.join().unwrap();
+            let (t, e) = h.join().unwrap();
+            ttft += t;
+            e2e += e;
         }
         let wall = t0.elapsed();
+        let n_requests = (n_clients * per_client) as u32;
         let tokens = n_clients * per_client * new_tokens;
         println!(
-            "{variant:<6}: {tokens} tokens in {wall:?} wall ({:.0} tok/s), compute sum {compute:?}",
-            tokens as f64 / wall.as_secs_f64()
+            "{variant:<6}: {tokens} tokens in {wall:?} wall ({:.0} tok/s), \
+             mean ttft {:?}, mean e2e {:?}",
+            tokens as f64 / wall.as_secs_f64(),
+            ttft / n_requests,
+            e2e / n_requests,
         );
     }
+    // Streaming API: consume tokens as they are sampled. stdout is
+    // line-buffered, so flush per token to actually see the stream.
+    use std::io::Write as _;
+    let (_, handle) = coord.submit("blast", vec![1, 2, 3], 12).expect("submit");
+    print!("streamed:");
+    for ev in handle.events() {
+        match ev {
+            ResponseEvent::Token { token, .. } => {
+                print!(" {token}");
+                let _ = std::io::stdout().flush();
+            }
+            ResponseEvent::Done(resp) => {
+                println!(
+                    "  [done: {} tokens, ttft {:?}]",
+                    resp.generated,
+                    resp.ttft.unwrap_or_default()
+                );
+            }
+        }
+    }
+
     println!("\nmetrics: {}", coord.metrics.report());
 }

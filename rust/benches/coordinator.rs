@@ -25,6 +25,7 @@ fn main() {
         vec![("m".into(), model)],
         CoordinatorConfig {
             batcher: BatcherConfig { max_batch: 8, max_wait: std::time::Duration::from_micros(200) },
+            slots: 8,
         },
     );
     suite.bench_throughput("coordinator generate L=16", l as f64, "tok", || {

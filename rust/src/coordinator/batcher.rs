@@ -1,13 +1,21 @@
-//! Dynamic batcher: greedily form decode batches up to `max_batch`
-//! requests, waiting at most `max_wait` for stragglers — the standard
-//! continuous-batching admission policy (vLLM-style, simplified to
-//! request granularity).
+//! Admission policy for the continuous-batching worker.
+//!
+//! The worker's step loop calls [`DynamicBatcher::try_admit`] between
+//! decode iterations: a non-blocking drain of up to `free_slots` queued
+//! requests, so new arrivals join the running batch without ever
+//! stalling live sequences. [`DynamicBatcher::recv_one`] parks an idle
+//! worker until work arrives. The legacy blocking
+//! [`DynamicBatcher::next_batch`] (greedy batch formation up to
+//! `max_batch` within `max_wait`) is kept for request-granularity
+//! callers and tests.
 
 use super::request::GenerateRequest;
-use std::sync::mpsc::Receiver;
+use std::sync::mpsc::{Receiver, TryRecvError};
 use std::time::{Duration, Instant};
 
-/// Batching policy knobs.
+/// Batching policy knobs. Under continuous batching `max_batch` caps
+/// the admissions (prefills) per decode iteration; `max_wait` only
+/// affects the legacy `next_batch` path.
 #[derive(Clone, Copy, Debug)]
 pub struct BatcherConfig {
     pub max_batch: usize,
@@ -20,32 +28,49 @@ impl Default for BatcherConfig {
     }
 }
 
-/// Pulls requests off a channel and forms batches.
+/// Pulls requests off a channel and forms batches. (Purely a view over
+/// the channel: the channel itself is the only queue, so the blocking
+/// and non-blocking paths can be mixed freely without losing FIFO
+/// order.)
 pub struct DynamicBatcher {
     pub cfg: BatcherConfig,
     rx: Receiver<GenerateRequest>,
-    /// Request pulled while closing out the previous batch.
-    pending: Option<GenerateRequest>,
 }
 
 impl DynamicBatcher {
     pub fn new(rx: Receiver<GenerateRequest>, cfg: BatcherConfig) -> Self {
-        DynamicBatcher { cfg, rx, pending: None }
+        DynamicBatcher { cfg, rx }
+    }
+
+    /// Non-blocking admission: drain up to `limit` queued requests in
+    /// FIFO order, returning immediately with whatever is available
+    /// (possibly nothing). The continuous-batching step loop calls this
+    /// with the number of free KV-pool slots between decode iterations.
+    pub fn try_admit(&mut self, limit: usize) -> Vec<GenerateRequest> {
+        let mut out = Vec::new();
+        while out.len() < limit {
+            match self.rx.try_recv() {
+                Ok(req) => out.push(req),
+                Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+            }
+        }
+        out
+    }
+
+    /// Block for a single request — used to park an idle worker.
+    /// Returns `None` when the channel is closed and drained.
+    pub fn recv_one(&mut self) -> Option<GenerateRequest> {
+        self.rx.recv().ok()
     }
 
     /// Block for the next batch. Returns `None` when the channel is
     /// closed and drained.
     pub fn next_batch(&mut self) -> Option<Vec<GenerateRequest>> {
         let mut batch = Vec::with_capacity(self.cfg.max_batch);
-        if let Some(p) = self.pending.take() {
-            batch.push(p);
-        }
-        if batch.is_empty() {
-            // Block for the first request.
-            match self.rx.recv() {
-                Ok(req) => batch.push(req),
-                Err(_) => return None,
-            }
+        // Block for the first request.
+        match self.rx.recv() {
+            Ok(req) => batch.push(req),
+            Err(_) => return None,
         }
         // Fill up to max_batch within the deadline.
         let deadline = Instant::now() + self.cfg.max_wait;
@@ -69,7 +94,10 @@ mod tests {
     use super::*;
     use std::sync::mpsc::channel;
 
-    fn req(id: u64, tx: &std::sync::mpsc::Sender<super::super::request::GenerateResponse>) -> GenerateRequest {
+    fn req(
+        id: u64,
+        tx: &std::sync::mpsc::Sender<super::super::request::ResponseEvent>,
+    ) -> GenerateRequest {
         GenerateRequest {
             id,
             variant: "v".into(),
@@ -78,6 +106,64 @@ mod tests {
             respond_to: tx.clone(),
             enqueued_at: Instant::now(),
         }
+    }
+
+    #[test]
+    fn try_admit_is_nonblocking_fifo_and_capped() {
+        let (tx, rx) = channel();
+        let (rtx, _rrx) = channel();
+        for i in 0..5 {
+            tx.send(req(i, &rtx)).unwrap();
+        }
+        let mut b = DynamicBatcher::new(rx, BatcherConfig::default());
+        // Cap 0: nothing, even with work queued.
+        assert!(b.try_admit(0).is_empty());
+        // Cap 3: exactly the first three, in order.
+        let ids: Vec<u64> = b.try_admit(3).iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1, 2]);
+        // Remaining two, cap larger than the queue: returns what's there.
+        let ids: Vec<u64> = b.try_admit(8).iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![3, 4]);
+        // Empty queue: immediate empty result, channel still open.
+        let t0 = Instant::now();
+        assert!(b.try_admit(8).is_empty());
+        assert!(t0.elapsed() < Duration::from_millis(100), "try_admit blocked");
+        drop(tx);
+        assert!(b.try_admit(8).is_empty());
+    }
+
+    #[test]
+    fn recv_one_blocks_then_yields_and_detects_close() {
+        let (tx, rx) = channel();
+        let (rtx, _rrx) = channel();
+        tx.send(req(9, &rtx)).unwrap();
+        let mut b = DynamicBatcher::new(rx, BatcherConfig::default());
+        assert_eq!(b.recv_one().unwrap().id, 9);
+        drop(tx);
+        assert!(b.recv_one().is_none());
+    }
+
+    #[test]
+    fn blocking_and_nonblocking_paths_share_fifo_order() {
+        // Mixing the legacy blocking path with try_admit must keep the
+        // channel's FIFO order intact (there is no side-buffer).
+        let (tx, rx) = channel();
+        let (rtx, _rrx) = channel();
+        for i in 0..4 {
+            tx.send(req(i, &rtx)).unwrap();
+        }
+        let mut b = DynamicBatcher::new(
+            rx,
+            BatcherConfig { max_batch: 2, max_wait: Duration::from_millis(5) },
+        );
+        // next_batch consumes 0 and 1; try_admit picks up from 2;
+        // recv_one yields 3.
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 2);
+        let ids: Vec<u64> = b.try_admit(1).iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![2]);
+        assert_eq!(b.recv_one().unwrap().id, 3);
+        drop(tx);
     }
 
     #[test]

@@ -1,23 +1,60 @@
-//! Serving metrics: counters + latency histogram, lock-protected and
-//! cheap to clone snapshots out of.
+//! Serving metrics: counters, queue-depth gauge, and fixed-bucket
+//! latency histograms (p50/p95/p99), lock-protected and cheap to clone
+//! snapshots out of.
+//!
+//! Tracked per worker fleet:
+//!
+//! * request counters — requests served, tokens generated, decode
+//!   iterations (`batches`) and their summed width;
+//! * queue depth — submitted-but-not-yet-admitted requests (current and
+//!   peak), maintained by `record_enqueued`/`record_admitted`;
+//! * latency histograms — queue wait, end-to-end, **TTFT** (enqueue →
+//!   first generated token) and **TPOT** (mean inter-token latency per
+//!   request), all as fixed log-linear bucket tables with no
+//!   dependencies and p50/p95/p99 in the report.
 
 use std::sync::Mutex;
 use std::time::Duration;
 
-/// Exponential-bucket latency histogram (microseconds).
+/// Log-linear latency histogram (microseconds): each power-of-two
+/// octave splits into [`SUB_BUCKETS`] linear sub-buckets, so percentile
+/// reads are bounded to ~25 % relative error (vs. ~100 % for plain
+/// power-of-two buckets) while the table stays a fixed, tiny `Vec<u64>`
+/// — no samples retained, no dependencies.
 #[derive(Clone, Debug, Default)]
 pub struct Histogram {
-    /// Bucket i counts samples in [2^i, 2^{i+1}) µs; 40 buckets ≈ 12 days.
     buckets: Vec<u64>,
     count: u64,
     sum_us: u64,
     max_us: u64,
 }
 
+/// Linear sub-buckets per power-of-two octave.
+const SUB_BUCKETS: u64 = 4;
+
+/// Bucket index for a microsecond value.
+fn bucket_index(us: u64) -> usize {
+    // Clamp so the sub-bucket arithmetic cannot overflow (2^60 µs is
+    // ~36 000 years; nothing real lands there).
+    let us = us.clamp(1, 1 << 60);
+    let oct = 63 - u64::from(us.leading_zeros());
+    let base = 1u64 << oct;
+    let sub = ((us - base) * SUB_BUCKETS) >> oct;
+    (oct * SUB_BUCKETS + sub) as usize
+}
+
+/// Inclusive upper bound (µs) of bucket `idx`.
+fn bucket_upper_us(idx: usize) -> u64 {
+    let oct = idx as u64 / SUB_BUCKETS;
+    let sub = idx as u64 % SUB_BUCKETS;
+    let base = 1u64 << oct;
+    base + ((sub + 1) * base) / SUB_BUCKETS
+}
+
 impl Histogram {
     pub fn record(&mut self, d: Duration) {
         let us = d.as_micros().min(u128::from(u64::MAX)) as u64;
-        let idx = (64 - us.max(1).leading_zeros()) as usize;
+        let idx = bucket_index(us);
         if self.buckets.len() <= idx {
             self.buckets.resize(idx + 1, 0);
         }
@@ -42,20 +79,26 @@ impl Histogram {
         Duration::from_micros(self.max_us)
     }
 
-    /// Upper bound of the bucket containing the p-th percentile.
+    /// Upper bound of the bucket containing the p-th percentile
+    /// (capped at the observed max).
     pub fn percentile(&self, p: f64) -> Duration {
         if self.count == 0 {
             return Duration::ZERO;
         }
-        let target = ((self.count as f64) * p / 100.0).ceil() as u64;
+        let target = (((self.count as f64) * p / 100.0).ceil() as u64).max(1);
         let mut seen = 0u64;
         for (i, &c) in self.buckets.iter().enumerate() {
             seen += c;
             if seen >= target {
-                return Duration::from_micros(1u64 << i);
+                return Duration::from_micros(bucket_upper_us(i).min(self.max_us));
             }
         }
         self.max()
+    }
+
+    /// The (p50, p95, p99) triple every snapshot consumer wants.
+    pub fn percentiles(&self) -> (Duration, Duration, Duration) {
+        (self.percentile(50.0), self.percentile(95.0), self.percentile(99.0))
     }
 }
 
@@ -68,11 +111,28 @@ pub struct Metrics {
 #[derive(Clone, Debug, Default)]
 pub struct MetricsInner {
     pub requests: u64,
+    /// Of `requests`, how many were cancelled (client dropped the
+    /// stream before completion). Cancelled requests keep their token
+    /// counts but are excluded from the e2e/tpot histograms (queue
+    /// wait is recorded at admission, before cancellation can be
+    /// known); the ttft histogram records a request iff its first
+    /// token was actually delivered, so a mid-stream cancel keeps its
+    /// TTFT.
+    pub cancelled: u64,
     pub tokens_generated: u64,
+    /// Decode iterations of the continuous-batching step loop.
     pub batches: u64,
+    /// Summed step width (active sequences per iteration).
     pub batch_size_sum: u64,
+    /// Requests submitted but not yet admitted to a KV slot.
+    pub queue_depth: u64,
+    pub queue_depth_peak: u64,
     pub queue_latency: Histogram,
     pub e2e_latency: Histogram,
+    /// Enqueue → first generated token.
+    pub ttft: Histogram,
+    /// Mean inter-token latency, one sample per request with ≥ 2 tokens.
+    pub tpot: Histogram,
 }
 
 impl Metrics {
@@ -80,18 +140,65 @@ impl Metrics {
         Self::default()
     }
 
+    /// A request entered a variant queue.
+    pub fn record_enqueued(&self) {
+        let mut m = self.inner.lock().unwrap();
+        m.queue_depth += 1;
+        m.queue_depth_peak = m.queue_depth_peak.max(m.queue_depth);
+    }
+
+    /// A request failed to enqueue after `record_enqueued` (the worker
+    /// shut down): undo the gauge.
+    pub fn record_enqueue_aborted(&self) {
+        let mut m = self.inner.lock().unwrap();
+        m.queue_depth = m.queue_depth.saturating_sub(1);
+    }
+
+    /// A request left the queue for a KV slot after waiting `queue`.
+    pub fn record_admitted(&self, queue: Duration) {
+        let mut m = self.inner.lock().unwrap();
+        // Saturating: enqueue accounting races admission by design (the
+        // gauge is advisory), so never underflow.
+        m.queue_depth = m.queue_depth.saturating_sub(1);
+        m.queue_latency.record(queue);
+    }
+
+    /// One decode iteration advanced `batch_size` sequences.
     pub fn record_batch(&self, batch_size: usize) {
         let mut m = self.inner.lock().unwrap();
         m.batches += 1;
         m.batch_size_sum += batch_size as u64;
     }
 
-    pub fn record_request(&self, tokens: usize, queue: Duration, e2e: Duration) {
+    /// A request produced its first token `d` after being enqueued.
+    pub fn record_ttft(&self, d: Duration) {
+        self.inner.lock().unwrap().ttft.record(d);
+    }
+
+    /// A request retired: `tokens` generated, end-to-end latency `e2e`,
+    /// and (when it generated ≥ 2 tokens) its mean inter-token latency.
+    /// Cancelled requests (client gone before completion) are counted
+    /// but kept out of the latency histograms — a truncated request's
+    /// "latency" would make the served percentiles look artificially
+    /// good.
+    pub fn record_request(
+        &self,
+        tokens: usize,
+        e2e: Duration,
+        tpot: Option<Duration>,
+        cancelled: bool,
+    ) {
         let mut m = self.inner.lock().unwrap();
         m.requests += 1;
         m.tokens_generated += tokens as u64;
-        m.queue_latency.record(queue);
+        if cancelled {
+            m.cancelled += 1;
+            return;
+        }
         m.e2e_latency.record(e2e);
+        if let Some(t) = tpot {
+            m.tpot.record(t);
+        }
     }
 
     pub fn snapshot(&self) -> MetricsInner {
@@ -105,17 +212,24 @@ impl Metrics {
         } else {
             0.0
         };
+        let (q50, q95, q99) = m.queue_latency.percentiles();
+        let (e50, e95, e99) = m.e2e_latency.percentiles();
+        let (t50, t95, t99) = m.ttft.percentiles();
+        let (p50, p95, p99) = m.tpot.percentiles();
         format!(
-            "requests={} tokens={} batches={} mean_batch={:.2} \
-             queue(mean={:?} p95={:?}) e2e(mean={:?} p95={:?} max={:?})",
+            "requests={} (cancelled {}) tokens={} steps={} mean_step_width={:.2} \
+             queue_depth={} (peak {}) \
+             queue(p50={q50:?} p95={q95:?} p99={q99:?}) \
+             e2e(p50={e50:?} p95={e95:?} p99={e99:?} max={:?}) \
+             ttft(p50={t50:?} p95={t95:?} p99={t99:?}) \
+             tpot(p50={p50:?} p95={p95:?} p99={p99:?})",
             m.requests,
+            m.cancelled,
             m.tokens_generated,
             m.batches,
             mean_batch,
-            m.queue_latency.mean(),
-            m.queue_latency.percentile(95.0),
-            m.e2e_latency.mean(),
-            m.e2e_latency.percentile(95.0),
+            m.queue_depth,
+            m.queue_depth_peak,
             m.e2e_latency.max(),
         )
     }
@@ -133,8 +247,48 @@ mod tests {
         }
         assert_eq!(h.count(), 10);
         assert!(h.percentile(50.0) <= h.percentile(95.0));
-        assert!(h.percentile(95.0) <= h.max() * 2);
+        assert!(h.percentile(95.0) <= h.percentile(99.0));
+        assert!(h.percentile(99.0) <= h.max());
         assert!(h.mean() > Duration::from_micros(100));
+    }
+
+    #[test]
+    fn log_linear_buckets_bound_percentile_error() {
+        // Uniform 1..=1000 µs: the sub-bucketed table must place p50
+        // within 25 % of the true median (plain pow-2 buckets give
+        // 512→1024, i.e. up to ~100 % off).
+        let mut h = Histogram::default();
+        for us in 1..=1000u64 {
+            h.record(Duration::from_micros(us));
+        }
+        let p50 = h.percentile(50.0).as_micros() as f64;
+        assert!(
+            (400.0..=640.0).contains(&p50),
+            "p50 {p50}µs too far from true median 500µs"
+        );
+        let p99 = h.percentile(99.0).as_micros() as f64;
+        assert!((940.0..=1000.0).contains(&p99), "p99 {p99}µs off");
+    }
+
+    #[test]
+    fn bucket_index_and_upper_are_consistent() {
+        for us in [1u64, 2, 3, 5, 9, 100, 1023, 1024, 1025, 1 << 20, u64::MAX] {
+            let idx = bucket_index(us);
+            assert!(
+                bucket_upper_us(idx) >= us.clamp(1, 1 << 60),
+                "upper({idx}) < {us}"
+            );
+            if idx > 0 {
+                assert!(bucket_upper_us(idx - 1) <= bucket_upper_us(idx));
+            }
+        }
+        // Monotone: larger values never land in earlier buckets.
+        let mut prev = 0usize;
+        for us in 1..4096u64 {
+            let idx = bucket_index(us);
+            assert!(idx >= prev, "bucket order broke at {us}µs");
+            prev = idx;
+        }
     }
 
     #[test]
@@ -143,13 +297,50 @@ mod tests {
         m.record_batch(4);
         m.record_batch(2);
         for _ in 0..6 {
-            m.record_request(5, Duration::from_micros(50), Duration::from_millis(1));
+            m.record_enqueued();
+        }
+        for _ in 0..6 {
+            m.record_admitted(Duration::from_micros(50));
+            m.record_ttft(Duration::from_micros(300));
+            m.record_request(
+                5,
+                Duration::from_millis(1),
+                Some(Duration::from_micros(120)),
+                false,
+            );
         }
         let s = m.snapshot();
         assert_eq!(s.requests, 6);
+        assert_eq!(s.cancelled, 0);
         assert_eq!(s.tokens_generated, 30);
         assert_eq!(s.batches, 2);
+        assert_eq!(s.queue_depth, 0);
+        assert_eq!(s.queue_depth_peak, 6);
+        assert_eq!(s.queue_latency.count(), 6);
+        assert_eq!(s.ttft.count(), 6);
+        assert_eq!(s.tpot.count(), 6);
         assert!(m.report().contains("requests=6"));
+        assert!(m.report().contains("ttft"));
+    }
+
+    #[test]
+    fn cancelled_requests_counted_but_kept_out_of_latency() {
+        let m = Metrics::new();
+        m.record_request(3, Duration::from_millis(5), None, true);
+        m.record_request(4, Duration::from_millis(1), None, false);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 2);
+        assert_eq!(s.cancelled, 1);
+        assert_eq!(s.tokens_generated, 7);
+        assert_eq!(s.e2e_latency.count(), 1, "cancelled excluded from e2e");
+        assert!(m.report().contains("cancelled 1"));
+    }
+
+    #[test]
+    fn queue_depth_never_underflows() {
+        let m = Metrics::new();
+        m.record_admitted(Duration::ZERO);
+        assert_eq!(m.snapshot().queue_depth, 0);
     }
 
     #[test]
@@ -158,6 +349,7 @@ mod tests {
         let s = m.snapshot();
         assert_eq!(s.requests, 0);
         assert_eq!(s.e2e_latency.mean(), Duration::ZERO);
+        assert_eq!(s.ttft.percentile(99.0), Duration::ZERO);
         assert!(!m.report().is_empty());
     }
 }

@@ -1,23 +1,34 @@
 //! L3 coordinator: the serving system around the compressed models.
 //!
-//! Architecture (vllm-router-like; std::thread + mpsc — the build is
-//! offline so no tokio, and the request path is synchronous channel
-//! passing):
+//! Architecture (vLLM-style iteration-level continuous batching;
+//! std::thread + mpsc — the build is offline so no tokio, and the
+//! request path is synchronous channel passing):
 //!
 //! ```text
 //!   clients ──> Router ──> per-variant queue ──> DynamicBatcher
-//!                                                    │ (max batch / deadline)
+//!                                                    │ try_admit(free slots)
 //!                                                    v
-//!                                              Worker thread
-//!                                         (prefill + decode loop,
-//!                                          KV-cache slots, metrics)
+//!                                            Worker step loop
+//!                                     ┌─ admit → prefill into KvPool slot
+//!                                     ├─ sample 1 token/sequence, stream it
+//!                                     ├─ retire finished → free slot
+//!                                     └─ ONE batched decode step (batch =
+//!                                        active slots through the kernels)
 //!                                                    │
-//!   clients <── response channels <──────────────────┘
+//!   clients <── Token / Done event streams <─────────┘
 //! ```
 //!
+//! Requests are admitted *between decode iterations* into free slots of
+//! a fixed [`nn::kvcache::KvPool`](crate::nn::kvcache::KvPool), so new
+//! arrivals never stall live sequences and a finished sequence's slot
+//! is reused one iteration later. Tokens stream to clients as
+//! [`ResponseEvent::Token`] the moment they are sampled;
+//! [`Coordinator::generate`] stays as the blocking convenience wrapper.
 //! The paper's contribution lives in the *weights* (L1/L2); the
-//! coordinator is the production harness that turns the compressed model
-//! into a service and measures the Table-4 runtime story end to end.
+//! coordinator is the production harness that turns the compressed
+//! model into a service and measures the Table-4 runtime story end to
+//! end — batched decode is what lets BLAST's Algorithm-1 products
+//! amortize across concurrent users.
 
 pub mod request;
 pub mod batcher;
@@ -25,6 +36,8 @@ pub mod metrics;
 pub mod server;
 
 pub use batcher::{BatcherConfig, DynamicBatcher};
-pub use metrics::Metrics;
-pub use request::{GenerateRequest, GenerateResponse, RequestId};
+pub use metrics::{Histogram, Metrics};
+pub use request::{
+    GenerateRequest, GenerateResponse, RequestId, ResponseEvent, ResponseHandle,
+};
 pub use server::{Coordinator, CoordinatorConfig};

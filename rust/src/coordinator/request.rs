@@ -1,6 +1,14 @@
 //! Request/response types crossing the coordinator boundary.
+//!
+//! Responses stream: the worker emits one [`ResponseEvent::Token`] per
+//! generated token as soon as it is sampled (continuous batching
+//! produces tokens incrementally, so clients can render them live) and
+//! a final [`ResponseEvent::Done`] summary. [`ResponseHandle`] wraps the
+//! event channel; its [`recv`](ResponseHandle::recv) drains to the
+//! summary, so blocking callers keep the pre-streaming call shape.
 
-use std::sync::mpsc::Sender;
+use std::sync::mpsc::{Receiver, RecvError, Sender};
+use std::time::Duration;
 
 /// Monotonically increasing request identifier.
 pub type RequestId = u64;
@@ -13,10 +21,20 @@ pub struct GenerateRequest {
     pub variant: String,
     pub prompt: Vec<usize>,
     pub max_new_tokens: usize,
-    /// Channel the worker answers on.
-    pub respond_to: Sender<GenerateResponse>,
+    /// Channel the worker streams events on.
+    pub respond_to: Sender<ResponseEvent>,
     /// Enqueue timestamp (for latency accounting).
     pub enqueued_at: std::time::Instant,
+}
+
+/// One streamed serving event.
+#[derive(Clone, Debug)]
+pub enum ResponseEvent {
+    /// The `index`-th generated token (0-based) of request `id`,
+    /// emitted the moment it is sampled.
+    Token { id: RequestId, token: usize, index: usize },
+    /// Final summary; always the last event of a request's stream.
+    Done(GenerateResponse),
 }
 
 /// The completed generation.
@@ -26,14 +44,62 @@ pub struct GenerateResponse {
     pub tokens: Vec<usize>,
     /// Tokens actually generated (≤ max_new_tokens).
     pub generated: usize,
-    pub queue_time: std::time::Duration,
-    pub compute_time: std::time::Duration,
+    pub queue_time: Duration,
+    pub compute_time: Duration,
+    /// Enqueue → first generated token (`None` when nothing was
+    /// generated, e.g. an empty prompt or `max_new_tokens == 0`).
+    pub ttft: Option<Duration>,
+}
+
+/// Client-side view of one request's event stream.
+pub struct ResponseHandle {
+    rx: Receiver<ResponseEvent>,
+}
+
+impl ResponseHandle {
+    pub fn new(rx: Receiver<ResponseEvent>) -> Self {
+        ResponseHandle { rx }
+    }
+
+    /// Next streamed event (blocking). Errors once the stream is closed
+    /// — after `Done`, or on worker shutdown.
+    pub fn recv_event(&self) -> Result<ResponseEvent, RecvError> {
+        self.rx.recv()
+    }
+
+    /// Blocking convenience: drain the stream to the final summary.
+    /// Call-compatible with the pre-streaming
+    /// `Receiver<GenerateResponse>::recv`.
+    pub fn recv(&self) -> Result<GenerateResponse, RecvError> {
+        loop {
+            if let ResponseEvent::Done(resp) = self.rx.recv()? {
+                return Ok(resp);
+            }
+        }
+    }
+
+    /// Iterate events until the stream closes (the worker drops its
+    /// sender right after `Done`).
+    pub fn events(&self) -> impl Iterator<Item = ResponseEvent> + '_ {
+        std::iter::from_fn(move || self.rx.recv().ok())
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use std::sync::mpsc::channel;
+
+    fn done(id: RequestId, tokens: Vec<usize>, generated: usize) -> ResponseEvent {
+        ResponseEvent::Done(GenerateResponse {
+            id,
+            tokens,
+            generated,
+            queue_time: Default::default(),
+            compute_time: Default::default(),
+            ttft: None,
+        })
+    }
 
     #[test]
     fn request_response_round_trip() {
@@ -46,17 +112,38 @@ mod tests {
             respond_to: tx,
             enqueued_at: std::time::Instant::now(),
         };
-        req.respond_to
-            .send(GenerateResponse {
-                id: req.id,
-                tokens: vec![1, 2, 3, 9],
-                generated: 1,
-                queue_time: Default::default(),
-                compute_time: Default::default(),
-            })
-            .unwrap();
-        let resp = rx.recv().unwrap();
+        req.respond_to.send(done(req.id, vec![1, 2, 3, 9], 1)).unwrap();
+        drop(req);
+        let handle = ResponseHandle::new(rx);
+        let resp = handle.recv().unwrap();
         assert_eq!(resp.id, 7);
         assert_eq!(resp.tokens.len(), 4);
+        assert!(handle.recv_event().is_err(), "stream closed after Done");
+    }
+
+    #[test]
+    fn recv_skips_token_events_and_events_iterates_all() {
+        let (tx, rx) = channel();
+        tx.send(ResponseEvent::Token { id: 1, token: 42, index: 0 }).unwrap();
+        tx.send(ResponseEvent::Token { id: 1, token: 7, index: 1 }).unwrap();
+        tx.send(done(1, vec![42, 7], 2)).unwrap();
+        drop(tx);
+        let handle = ResponseHandle::new(rx);
+        let events: Vec<ResponseEvent> = handle.events().collect();
+        assert_eq!(events.len(), 3);
+        match &events[0] {
+            ResponseEvent::Token { token, index, .. } => {
+                assert_eq!((*token, *index), (42, 0));
+            }
+            other => panic!("expected Token, got {other:?}"),
+        }
+        assert!(matches!(events[2], ResponseEvent::Done(_)));
+
+        // recv() on a fresh stream jumps straight to the summary.
+        let (tx, rx) = channel();
+        tx.send(ResponseEvent::Token { id: 2, token: 3, index: 0 }).unwrap();
+        tx.send(done(2, vec![3], 1)).unwrap();
+        let handle = ResponseHandle::new(rx);
+        assert_eq!(handle.recv().unwrap().generated, 1);
     }
 }

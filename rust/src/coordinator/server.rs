@@ -1,31 +1,79 @@
-//! The coordinator proper: router + per-variant worker threads.
+//! The coordinator proper: router + per-variant continuous-batching
+//! workers.
 //!
-//! Each registered model variant gets its own request queue, dynamic
-//! batcher, and worker thread running the decode loop over the Rust
-//! native `TinyLM` (KV-cached, one cache slot per in-flight request).
-//! The router dispatches by variant name and returns a handle clients
-//! block on.
+//! Each registered model variant gets its own request queue, admission
+//! policy ([`DynamicBatcher`]), and worker thread running an
+//! **iteration-level continuous-batching** step loop over a slotted
+//! [`KvPool`]:
+//!
+//! ```text
+//!        ┌──────────────────────── step loop ────────────────────────┐
+//!        │ 1. admit: drain queue into free KV slots (prefill on      │
+//!        │    admit, at most `max_batch` per iteration)              │
+//!        │ 2. sample: one token per active sequence, streamed to the │
+//!        │    client immediately; finished sequences retire and free │
+//!        │    their slot in the same iteration                       │
+//!        │ 3. decode: ONE batched decode step advances every live    │
+//!        │    slot (batch = active sequences through the kernels)    │
+//!        └───────────────────────────────────────────────────────────┘
+//! ```
+//!
+//! Sequences never wait for each other: a request admitted mid-flight
+//! joins the next iteration, and a finished sequence's slot is reusable
+//! one iteration later. Decode math is bit-identical to per-request
+//! `TinyLM::generate` for every accepted prompt (see
+//! `tests/serving_parity.rs`), so continuous batching is purely a
+//! throughput/latency change. The submit boundary rejects out-of-vocab
+//! tokens and prompts longer than the context window (both would hurt
+//! the whole variant, not just the offending request); empty prompts
+//! are accepted but generate zero tokens rather than reproducing
+//! `generate`'s quirk of sampling from a zeroed logits row.
 
 use super::batcher::{BatcherConfig, DynamicBatcher};
 use super::metrics::Metrics;
-use super::request::{GenerateRequest, GenerateResponse, RequestId};
+use super::request::{
+    GenerateRequest, GenerateResponse, RequestId, ResponseEvent, ResponseHandle,
+};
 use crate::nn::gpt::{argmax, TinyLM};
+use crate::nn::kvcache::KvPool;
+use crate::tensor::Matrix;
 use anyhow::{bail, Result};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Coordinator configuration.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Copy, Debug)]
 pub struct CoordinatorConfig {
     pub batcher: BatcherConfig,
+    /// KV-pool slots per worker: the maximum number of sequences
+    /// decoding concurrently. Admission waits for a free slot.
+    pub slots: usize,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig { batcher: BatcherConfig::default(), slots: 8 }
+    }
+}
+
+/// One variant's route: its request queue plus the model bounds used to
+/// validate prompts at the submission boundary — the model asserts on
+/// out-of-vocab tokens (a worker panic would kill the variant), and an
+/// unbounded prompt would stall every live sequence behind an O(n²)
+/// prefill while growing the slot's KV buffers past their pooled
+/// capacity for good.
+struct Route {
+    queue: Sender<GenerateRequest>,
+    vocab: usize,
+    max_seq: usize,
 }
 
 /// A running coordinator.
 pub struct Coordinator {
-    routes: HashMap<String, Sender<GenerateRequest>>,
+    routes: HashMap<String, Route>,
     workers: Vec<std::thread::JoinHandle<()>>,
     pub metrics: Arc<Metrics>,
     next_id: AtomicU64,
@@ -39,56 +87,82 @@ impl Coordinator {
         let mut workers = Vec::new();
         for (name, model) in models {
             let (tx, rx) = channel::<GenerateRequest>();
-            routes.insert(name.clone(), tx);
+            routes.insert(
+                name.clone(),
+                Route { queue: tx, vocab: model.cfg.vocab, max_seq: model.cfg.max_seq },
+            );
             let m = Arc::clone(&metrics);
-            let batcher_cfg = cfg.batcher;
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("worker-{name}"))
-                    .spawn(move || worker_loop(model, rx, batcher_cfg, m))
+                    .spawn(move || worker_loop(model, rx, cfg, m))
                     .expect("spawn worker"),
             );
         }
         Coordinator { routes, workers, metrics, next_id: AtomicU64::new(1) }
     }
 
-    /// Submit a generation request; returns (id, receiver).
+    /// Submit a generation request; returns the id and a streaming
+    /// [`ResponseHandle`] (per-token `Token` events, then `Done`).
     pub fn submit(
         &self,
         variant: &str,
         prompt: Vec<usize>,
         max_new_tokens: usize,
-    ) -> Result<(RequestId, Receiver<GenerateResponse>)> {
+    ) -> Result<(RequestId, ResponseHandle)> {
         let Some(route) = self.routes.get(variant) else {
             bail!(
                 "unknown variant `{variant}` (have: {:?})",
                 self.routes.keys().collect::<Vec<_>>()
             );
         };
+        // Validate untrusted input here: an out-of-vocab token would
+        // panic (and kill) the variant's worker thread, and a prompt
+        // longer than the context window would stall live sequences
+        // behind an O(n²) prefill. Capping at max_seq also means a
+        // slot's K/V buffers never grow past their pooled capacity.
+        if prompt.len() > route.max_seq {
+            bail!(
+                "prompt of {} tokens exceeds variant `{variant}`'s context window ({})",
+                prompt.len(),
+                route.max_seq
+            );
+        }
+        if let Some(&bad) = prompt.iter().find(|&&t| t >= route.vocab) {
+            bail!(
+                "prompt token {bad} out of vocab (variant `{variant}` has vocab {})",
+                route.vocab
+            );
+        }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = channel();
-        route
-            .send(GenerateRequest {
-                id,
-                variant: variant.to_string(),
-                prompt,
-                max_new_tokens,
-                respond_to: tx,
-                enqueued_at: Instant::now(),
-            })
-            .map_err(|_| anyhow::anyhow!("variant `{variant}` worker has shut down"))?;
-        Ok((id, rx))
+        // Count the enqueue before sending: the worker may admit (and
+        // decrement the gauge) the instant the request lands.
+        self.metrics.record_enqueued();
+        let sent = route.queue.send(GenerateRequest {
+            id,
+            variant: variant.to_string(),
+            prompt,
+            max_new_tokens,
+            respond_to: tx,
+            enqueued_at: Instant::now(),
+        });
+        if sent.is_err() {
+            self.metrics.record_enqueue_aborted();
+            bail!("variant `{variant}` worker has shut down");
+        }
+        Ok((id, ResponseHandle::new(rx)))
     }
 
-    /// Convenience: submit and block for the response.
+    /// Convenience: submit and block for the final summary.
     pub fn generate(
         &self,
         variant: &str,
         prompt: Vec<usize>,
         max_new_tokens: usize,
     ) -> Result<GenerateResponse> {
-        let (_, rx) = self.submit(variant, prompt, max_new_tokens)?;
-        rx.recv().map_err(|_| anyhow::anyhow!("worker dropped the response"))
+        let (_, handle) = self.submit(variant, prompt, max_new_tokens)?;
+        handle.recv().map_err(|_| anyhow::anyhow!("worker dropped the response"))
     }
 
     pub fn variants(&self) -> Vec<String> {
@@ -115,60 +189,205 @@ impl Drop for Coordinator {
     }
 }
 
-/// Worker: batch requests, run the decode loop per request with its own
-/// KV slot, respond on each request's channel.
+/// One in-flight sequence: its request, KV-pool slot, token state, and
+/// the pending logits its next token will be sampled from.
+struct ActiveSeq {
+    req: GenerateRequest,
+    slot: usize,
+    /// Prompt + generated tokens.
+    tokens: Vec<usize>,
+    generated: usize,
+    /// Logits (1×vocab) of the last prefill position; `None` when the
+    /// prompt was empty (nothing to sample from). Consumed by the
+    /// sequence's first sampling step — afterwards the worker samples
+    /// straight from the shared step-logits matrix (one row per live
+    /// sequence), so the hot loop never copies logits around.
+    logits: Option<Matrix>,
+    queue_time: Duration,
+    admitted_at: Instant,
+    /// Set when the first token is sampled (drives TPOT at retire).
+    first_token_at: Option<Instant>,
+    /// Enqueue → first token, computed once at sampling time; the
+    /// `Done` summary reuses exactly the value the ttft histogram saw.
+    ttft: Option<Duration>,
+    /// Client dropped its receiver: stop decoding, skip `Done`.
+    cancelled: bool,
+}
+
+/// Admit one request: claim a KV slot and prefill the prompt into it.
+fn admit(
+    model: &TinyLM,
+    pool: &mut KvPool,
+    metrics: &Metrics,
+    mut req: GenerateRequest,
+) -> ActiveSeq {
+    let queue_time = req.enqueued_at.elapsed();
+    metrics.record_admitted(queue_time);
+    let slot = pool.alloc().expect("admission is capped by pool.free_count()");
+    let admitted_at = Instant::now();
+    // Ingest the WHOLE prompt, exactly like `TinyLM::generate`'s
+    // token-by-token loop does (position embeddings clamp inside the
+    // model; the slot's K/V grows past its capacity if needed). The
+    // step loop then stops at the context edge before any decode, so
+    // over-long prompts yield the same single token as direct
+    // generation.
+    let logits = model.prefill_slot(&req.prompt, pool, slot);
+    // The prompt buffer becomes the sequence's token list (nothing
+    // reads req.prompt after prefill) — no second copy per slot.
+    let tokens = std::mem::take(&mut req.prompt);
+    ActiveSeq {
+        req,
+        slot,
+        tokens,
+        generated: 0,
+        logits,
+        queue_time,
+        admitted_at,
+        first_token_at: None,
+        ttft: None,
+        cancelled: false,
+    }
+}
+
+/// Retire a sequence: free its slot, record metrics, send `Done`.
+fn retire(seq: ActiveSeq, pool: &mut KvPool, metrics: &Metrics) {
+    pool.release(seq.slot);
+    let compute_time = seq.admitted_at.elapsed();
+    let ttft = seq.ttft;
+    let tpot = seq.first_token_at.and_then(|t| {
+        (seq.generated >= 2).then(|| t.elapsed() / (seq.generated as u32 - 1))
+    });
+    metrics.record_request(
+        seq.generated,
+        seq.queue_time + compute_time,
+        tpot,
+        seq.cancelled,
+    );
+    if !seq.cancelled {
+        let ActiveSeq { req, tokens, generated, queue_time, .. } = seq;
+        let _ = req.respond_to.send(ResponseEvent::Done(GenerateResponse {
+            id: req.id,
+            tokens,
+            generated,
+            queue_time,
+            compute_time,
+            ttft,
+        }));
+        // `req` (and its sender) drops here, closing the client stream.
+    }
+}
+
+/// Worker: the iteration-level continuous-batching step loop described
+/// in the module docs. Greedy sampling per sequence matches the
+/// per-request decode loop token for token: prefill yields the logits
+/// of the last prompt position, each iteration samples one token from
+/// the pending logits, and the batched decode step (bit-identical to
+/// `decode_step` per row) produces the next logits.
 fn worker_loop(
     model: TinyLM,
     rx: Receiver<GenerateRequest>,
-    batcher_cfg: BatcherConfig,
+    cfg: CoordinatorConfig,
     metrics: Arc<Metrics>,
 ) {
-    // Warm the kernel autotuner before taking traffic, so tuning probes
-    // run at model-load time rather than inside the first request. The
-    // prefill batch dimension is the *prompt length*, so cover the
-    // decode shape (batch 1), the micro-batch bucket, and the longest
-    // prompt this model accepts (which warms the large-batch buckets).
-    model.pretune(&[1, batcher_cfg.max_batch.max(2), model.cfg.max_seq - 1]);
-    let mut batcher = DynamicBatcher::new(rx, batcher_cfg);
-    while let Some(batch) = batcher.next_batch() {
-        metrics.record_batch(batch.len());
-        // Serve each request in the batch: one batched prefill over the
-        // prompt (Algorithm-1 products batched across positions through
-        // the kernel engine), then the token-by-token decode loop. KV
-        // slots are independent; the batch amortizes queue/dispatch
-        // overhead (the structured matmuls inside the model are the
-        // Table-4 object of study).
-        for req in batch {
-            let queue_time = req.enqueued_at.elapsed();
-            let t0 = Instant::now();
-            let mut kv = model.new_kv_cache();
-            let mut tokens = req.prompt.clone();
-            // Prefill positions 0..max_seq-1 of the prompt in one pass
-            // (the same positions the per-token loop used to ingest).
-            let prefill_len = req.prompt.len().min(model.cfg.max_seq - 1);
-            let mut logits = model.prefill(&req.prompt[..prefill_len], &mut kv);
-            let mut generated = 0usize;
-            for _ in 0..req.max_new_tokens {
-                let Some(l) = &logits else { break };
-                let next = argmax(l.row(0));
-                tokens.push(next);
-                generated += 1;
-                let pos = tokens.len() - 1;
-                if pos + 1 >= model.cfg.max_seq {
-                    break;
-                }
-                logits = Some(model.decode_step(next, pos, &mut kv));
-            }
-            let compute_time = t0.elapsed();
-            metrics.record_request(generated, queue_time, queue_time + compute_time);
-            let _ = req.respond_to.send(GenerateResponse {
-                id: req.id,
-                tokens,
-                generated,
-                queue_time,
-                compute_time,
-            });
+    let slots = cfg.slots.max(1);
+    // Warm the kernel autotuner before taking traffic: decode at batch
+    // 1 and at full pool width, plus the longest prefill this model
+    // accepts, so tuning probes run at model-load time rather than
+    // inside the first request.
+    model.pretune(&[1, slots, model.cfg.max_seq - 1]);
+    let mut pool = model.new_kv_pool(slots);
+    let mut batcher = DynamicBatcher::new(rx, cfg.batcher);
+    let mut active: Vec<ActiveSeq> = Vec::new();
+    // Logits of the previous decode step: row `i` belongs to
+    // `active[i]` (retired sequences were filtered out of `active`
+    // before the step ran, and admissions only append, so the
+    // prefix-index correspondence is stable across iterations).
+    let mut step_logits: Option<Matrix> = None;
+    loop {
+        // ---- 1. Admission: fill free slots from the queue. ----
+        let mut admitted = 0usize;
+        if active.is_empty() {
+            // Idle: park until work arrives (None = queue closed).
+            let Some(req) = batcher.recv_one() else { break };
+            active.push(admit(&model, &mut pool, &metrics, req));
+            admitted = 1;
         }
+        // `max_batch` caps prefills per iteration (including an
+        // idle-wake admission above); free slots cap concurrency.
+        let burst = pool
+            .free_count()
+            .min(cfg.batcher.max_batch.saturating_sub(admitted));
+        for req in batcher.try_admit(burst) {
+            active.push(admit(&model, &mut pool, &metrics, req));
+        }
+
+        // ---- 2. Sample one token per sequence; stream + retire. ----
+        let prev_live = step_logits.as_ref().map_or(0, |m| m.rows);
+        let mut step_toks: Vec<usize> = Vec::with_capacity(active.len());
+        let mut step_slots: Vec<usize> = Vec::with_capacity(active.len());
+        let mut still = Vec::with_capacity(active.len());
+        for (idx, mut seq) in active.drain(..).enumerate() {
+            let sampled = if seq.generated >= seq.req.max_new_tokens {
+                None // max_new_tokens exhausted (or zero).
+            } else if idx < prev_live {
+                // Continuing sequence: its row of the last decode step.
+                step_logits.as_ref().map(|m| argmax(m.row(idx)))
+            } else {
+                // Freshly admitted: the prefill logits (None = empty
+                // prompt, nothing to sample from).
+                seq.logits.as_ref().map(|l| argmax(l.row(0)))
+            };
+            let Some(next) = sampled else {
+                retire(seq, &mut pool, &metrics);
+                continue;
+            };
+            seq.tokens.push(next);
+            seq.generated += 1;
+            let first = seq.first_token_at.is_none();
+            if first {
+                let now = Instant::now();
+                seq.first_token_at = Some(now);
+                seq.ttft = Some(seq.queue_time + now.duration_since(seq.admitted_at));
+            }
+            let event = ResponseEvent::Token {
+                id: seq.req.id,
+                token: next,
+                index: seq.generated - 1,
+            };
+            if seq.req.respond_to.send(event).is_err() {
+                // Client went away: free the slot instead of decoding on.
+                seq.cancelled = true;
+            } else if first {
+                // Record TTFT only once the first token actually
+                // reached the client — a request cancelled before
+                // delivery must not contribute a latency sample.
+                metrics.record_ttft(seq.ttft.expect("set above"));
+            }
+            let pos = seq.tokens.len() - 1;
+            let done = seq.cancelled
+                || seq.generated >= seq.req.max_new_tokens
+                || pos + 1 >= model.cfg.max_seq;
+            if done {
+                retire(seq, &mut pool, &metrics);
+            } else {
+                // The prefill logits (if any) are spent; from here on
+                // the sequence samples from the shared step matrix.
+                seq.logits = None;
+                step_toks.push(next);
+                step_slots.push(seq.slot);
+                still.push(seq);
+            }
+        }
+        active = still;
+
+        // ---- 3. One batched decode step over every live slot. ----
+        // Row `i` of the result is `active[i]`'s next-token logits.
+        step_logits = if step_toks.is_empty() {
+            None
+        } else {
+            metrics.record_batch(step_toks.len());
+            Some(model.decode_step_batch(&step_toks, &mut pool, &step_slots))
+        };
     }
 }
 
@@ -195,6 +414,7 @@ mod tests {
         let resp = coord.generate("blast", vec![1, 2, 3], 5).unwrap();
         assert_eq!(resp.tokens, direct);
         assert_eq!(resp.generated, 5);
+        assert!(resp.ttft.is_some());
         coord.shutdown();
     }
 
@@ -239,6 +459,82 @@ mod tests {
         let snap = coord.metrics.snapshot();
         assert_eq!(snap.requests, 16);
         assert!(snap.batches >= 1);
+        assert_eq!(snap.queue_depth, 0, "all admitted");
+    }
+
+    #[test]
+    fn slot_churn_more_requests_than_slots() {
+        // 2 slots, 10 concurrent requests: admission must recycle slots
+        // mid-flight without corrupting any sequence.
+        let model = tiny_model(905, StructureKind::Blast { b: 2, r: 4 });
+        let expectations: Vec<(Vec<usize>, Vec<usize>)> = (0..10usize)
+            .map(|i| {
+                let prompt: Vec<usize> = vec![1 + i % 8, (2 * i) % 8 + 1];
+                (prompt.clone(), model.generate(&prompt, 4 + i % 5))
+            })
+            .collect();
+        let coord = Arc::new(Coordinator::new(
+            vec![("m".into(), model)],
+            CoordinatorConfig {
+                batcher: BatcherConfig::default(),
+                slots: 2,
+            },
+        ));
+        let mut joins = Vec::new();
+        for (i, (prompt, expected)) in expectations.into_iter().enumerate() {
+            let c = Arc::clone(&coord);
+            joins.push(std::thread::spawn(move || {
+                let resp = c.generate("m", prompt, 4 + i % 5).unwrap();
+                assert_eq!(resp.tokens, expected, "request {i}");
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        let snap = coord.metrics.snapshot();
+        assert_eq!(snap.requests, 10);
+        // With only 2 slots, steps can never be wider than 2.
+        assert!(snap.batch_size_sum <= snap.batches * 2);
+    }
+
+    #[test]
+    fn streaming_tokens_precede_done() {
+        let model = tiny_model(906, StructureKind::Dense);
+        let direct = model.generate(&[2, 4], 6);
+        let coord =
+            Coordinator::new(vec![("m".into(), model)], CoordinatorConfig::default());
+        let (id, handle) = coord.submit("m", vec![2, 4], 6).unwrap();
+        let mut streamed = Vec::new();
+        let mut summary = None;
+        for ev in handle.events() {
+            match ev {
+                ResponseEvent::Token { id: eid, token, index } => {
+                    assert_eq!(eid, id);
+                    assert_eq!(index, streamed.len());
+                    streamed.push(token);
+                }
+                ResponseEvent::Done(resp) => summary = Some(resp),
+            }
+        }
+        let summary = summary.expect("stream must end with Done");
+        assert_eq!(summary.tokens, direct);
+        assert_eq!(&summary.tokens[2..], &streamed[..]);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn dropped_client_does_not_wedge_the_worker() {
+        let model = tiny_model(907, StructureKind::Dense);
+        let coord =
+            Coordinator::new(vec![("m".into(), model)], CoordinatorConfig::default());
+        {
+            let (_, handle) = coord.submit("m", vec![1, 2, 3], 50).unwrap();
+            drop(handle); // client gives up immediately
+        }
+        // The worker must cancel the orphan and keep serving.
+        let resp = coord.generate("m", vec![3, 2], 3).unwrap();
+        assert_eq!(resp.generated, 3);
+        coord.shutdown();
     }
 
     #[test]
@@ -249,7 +545,42 @@ mod tests {
         let snap = coord.metrics.snapshot();
         assert_eq!(snap.requests, 1);
         assert_eq!(snap.tokens_generated, 3);
-        assert!(snap.e2e_latency.count() == 1);
+        assert_eq!(snap.e2e_latency.count(), 1);
+        assert_eq!(snap.ttft.count(), 1);
+        assert_eq!(snap.tpot.count(), 1, "3 tokens → one TPOT sample");
+        assert_eq!(snap.queue_latency.count(), 1);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn out_of_vocab_prompt_rejected_at_submit() {
+        let model = tiny_model(909, StructureKind::Dense);
+        let vocab = model.cfg.vocab;
+        let coord =
+            Coordinator::new(vec![("m".into(), model)], CoordinatorConfig::default());
+        // Rejected at the boundary, not panicking the worker…
+        let err = coord.generate("m", vec![1, vocab, 2], 3).unwrap_err();
+        assert!(format!("{err}").contains("out of vocab"), "{err}");
+        // …which therefore keeps serving valid requests.
+        let resp = coord.generate("m", vec![1, 2], 3).unwrap();
+        assert_eq!(resp.generated, 3);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn zero_new_tokens_and_empty_prompt() {
+        let model = tiny_model(908, StructureKind::Dense);
+        let coord =
+            Coordinator::new(vec![("m".into(), model)], CoordinatorConfig::default());
+        let resp = coord.generate("m", vec![4, 5, 6], 0).unwrap();
+        assert_eq!(resp.tokens, vec![4, 5, 6]);
+        assert_eq!(resp.generated, 0);
+        assert!(resp.ttft.is_none());
+        // Empty prompts generate nothing (deliberate divergence from
+        // `TinyLM::generate`, which samples from a zeroed logits row).
+        let resp = coord.generate("m", vec![], 5).unwrap();
+        assert!(resp.tokens.is_empty());
+        assert_eq!(resp.generated, 0);
         coord.shutdown();
     }
 }

@@ -15,7 +15,9 @@
 //!   Rust-native inference and training (manual backprop).
 //! * [`data`] / [`eval`] — synthetic workloads and the paper's metrics.
 //! * [`runtime`] — PJRT executor for AOT-compiled JAX/Pallas artifacts.
-//! * [`coordinator`] — the L3 serving system (router, batcher, KV cache).
+//! * [`coordinator`] — the L3 serving system: router, streaming
+//!   responses, and iteration-level continuous batching over a slotted
+//!   KV pool.
 //! * [`experiments`] — one harness per paper table/figure.
 
 pub mod util;

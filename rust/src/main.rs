@@ -35,7 +35,7 @@ fn usage() -> &'static str {
        blast experiment all --scale 0\n\
        blast train --structure blast --b 4 --r 8 --steps 200\n\
        blast compress --ratio 0.5 --structure blast\n\
-       blast serve --requests 32 --batch 8\n\
+       blast serve --requests 32 --batch 8 --slots 8\n\
        blast bench-runtime --reps 5"
 }
 
@@ -187,6 +187,7 @@ fn cmd_train(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let n_requests = args.get_usize("requests", 32)?;
     let max_batch = args.get_usize("batch", 8)?;
+    let slots = args.get_usize("slots", 8)?;
     let new_tokens = args.get_usize("tokens", 16)?;
     let mut rng = Rng::new(args.get_u64("seed", 0)?);
     let dense = TinyLM::new(LmConfig::tiny(StructureKind::Dense), &mut rng);
@@ -198,6 +199,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 max_batch,
                 ..Default::default()
             },
+            slots,
         },
     );
     println!("serving variants: {:?}", coord.variants());

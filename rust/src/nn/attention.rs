@@ -247,20 +247,17 @@ impl Attention {
         self.wqkv.backward(&cache.qkv_cache, &dqkv)
     }
 
-    /// Incremental decode for one new token row `x (1×d)`; appends this
-    /// position's K/V to `kv` and attends over the whole prefix.
-    pub fn forward_decode(&self, x: &Matrix, kv: &mut LayerKv) -> Matrix {
-        assert_eq!(x.rows, 1);
-        let d = self.d_model;
+    /// Attention for one position whose K/V rows are already in `kv`:
+    /// per head, softmax the query slice of `qkv_row` against the first
+    /// `len` cached positions and accumulate the context into `ctx_row`
+    /// (which must start zeroed). Shared verbatim by the single-token,
+    /// batched, and prefill decode paths — one code path is what keeps
+    /// them bit-identical.
+    fn decode_attend(&self, qkv_row: &[f32], kv: &LayerKv, len: usize, ctx_row: &mut [f32]) {
         let hd = self.head_dim;
         let scale = 1.0 / (hd as f32).sqrt();
-        let qkv = self.wqkv.forward(x); // 1×3d
-        let row = qkv.row(0);
-        kv.append(&row[d..2 * d], &row[2 * d..3 * d]);
-        let len = kv.len;
-        let mut ctx = Matrix::zeros(1, d);
         for h in 0..self.n_heads {
-            let q = &row[h * hd..(h + 1) * hd];
+            let q = &qkv_row[h * hd..(h + 1) * hd];
             // Scores over the cached keys.
             let mut scores = vec![0.0f32; len];
             let mut max = f32::NEG_INFINITY;
@@ -279,7 +276,7 @@ impl Attention {
                 denom += *s;
             }
             let inv = 1.0 / denom.max(1e-30);
-            let crow = &mut ctx.row_mut(0)[h * hd..(h + 1) * hd];
+            let crow = &mut ctx_row[h * hd..(h + 1) * hd];
             for u in 0..len {
                 let w = scores[u] * inv;
                 let vrow = &kv.v.row(u)[h * hd..(h + 1) * hd];
@@ -288,7 +285,43 @@ impl Attention {
                 }
             }
         }
+    }
+
+    /// Incremental decode for one new token row `x (1×d)`; appends this
+    /// position's K/V to `kv` and attends over the whole prefix.
+    pub fn forward_decode(&self, x: &Matrix, kv: &mut LayerKv) -> Matrix {
+        assert_eq!(x.rows, 1);
+        let d = self.d_model;
+        let qkv = self.wqkv.forward(x); // 1×3d
+        let row = qkv.row(0);
+        kv.append(&row[d..2 * d], &row[2 * d..3 * d]);
+        let mut ctx = Matrix::zeros(1, d);
+        self.decode_attend(row, kv, kv.len, ctx.row_mut(0));
         self.wo.forward(&ctx)
+    }
+
+    /// Batched incremental decode for continuous batching: row `t` of
+    /// `x (n_active×d)` is the next token of pool slot `slots[t]` in
+    /// `kv` (one `LayerKv` per slot, this layer). The Q/K/V and output
+    /// projections run as single batched products over all active rows
+    /// — that is the throughput win over per-sequence `forward_decode`
+    /// — while each row's attention runs the shared per-position
+    /// softmax over its own slot's prefix, so ragged sequence lengths
+    /// get their causal masking implicitly from each slot's K/V length
+    /// and every row is bit-identical to a lone `forward_decode` on the
+    /// same slot.
+    pub fn forward_decode_batch(&self, x: &Matrix, kv: &mut [LayerKv], slots: &[usize]) -> Matrix {
+        assert_eq!(x.rows, slots.len(), "one activation row per active slot");
+        let d = self.d_model;
+        let qkv = self.wqkv.forward(x); // n_active×3d, batched
+        let mut ctx = Matrix::zeros(x.rows, d);
+        for (t, &slot) in slots.iter().enumerate() {
+            let row = qkv.row(t);
+            let lkv = &mut kv[slot];
+            lkv.append(&row[d..2 * d], &row[2 * d..3 * d]);
+            self.decode_attend(row, lkv, lkv.len, ctx.row_mut(t));
+        }
+        self.wo.forward(&ctx) // n_active×d, batched
     }
 
     /// Batched prefill: ingest `x (seq×d)` in one pass, appending every
@@ -303,8 +336,6 @@ impl Attention {
         assert!(self.causal, "prefill is only defined for causal attention");
         let seq = x.rows;
         let d = self.d_model;
-        let hd = self.head_dim;
-        let scale = 1.0 / (hd as f32).sqrt();
         let qkv = self.wqkv.forward(x); // seq×3d, batched
         let base = kv.len;
         for t in 0..seq {
@@ -312,36 +343,9 @@ impl Attention {
             kv.append(&row[d..2 * d], &row[2 * d..3 * d]);
         }
         let mut ctx = Matrix::zeros(seq, d);
-        for h in 0..self.n_heads {
-            for t in 0..seq {
-                let q = &qkv.row(t)[h * hd..(h + 1) * hd];
-                let len = base + t + 1; // causal: positions 0..=base+t
-                let mut scores = vec![0.0f32; len];
-                let mut max = f32::NEG_INFINITY;
-                for u in 0..len {
-                    let krow = &kv.k.row(u)[h * hd..(h + 1) * hd];
-                    let mut acc = 0.0f32;
-                    for c in 0..hd {
-                        acc += q[c] * krow[c];
-                    }
-                    scores[u] = acc * scale;
-                    max = max.max(scores[u]);
-                }
-                let mut denom = 0.0f32;
-                for s in scores.iter_mut() {
-                    *s = (*s - max).exp();
-                    denom += *s;
-                }
-                let inv = 1.0 / denom.max(1e-30);
-                let crow = &mut ctx.row_mut(t)[h * hd..(h + 1) * hd];
-                for u in 0..len {
-                    let w = scores[u] * inv;
-                    let vrow = &kv.v.row(u)[h * hd..(h + 1) * hd];
-                    for c in 0..hd {
-                        crow[c] += w * vrow[c];
-                    }
-                }
-            }
+        for t in 0..seq {
+            // Causal: position base+t attends to positions 0..=base+t.
+            self.decode_attend(qkv.row(t), kv, base + t + 1, ctx.row_mut(t));
         }
         self.wo.forward(&ctx) // seq×d, batched
     }
@@ -482,6 +486,47 @@ mod tests {
                 }
             }
             assert_eq!(kv.len, kv_ref.len);
+        }
+    }
+
+    #[test]
+    fn batched_decode_bit_identical_to_sequential_ragged_lengths() {
+        // Three slots with different prefix lengths advanced in one
+        // batched step must match three independent forward_decode
+        // calls exactly (not just approximately).
+        let mut rng = Rng::new(345);
+        for structure in [StructureKind::Dense, StructureKind::Blast { b: 2, r: 3 }] {
+            let attn = Attention::new(8, 2, structure, &mut rng);
+            // Ragged prefixes: slot 0 has 3 positions, slot 1 none,
+            // slot 2 one.
+            let prefix_lens = [3usize, 0, 1];
+            let mut pool: Vec<LayerKv> =
+                (0..3).map(|_| LayerKv::with_capacity(8, 8)).collect();
+            let mut refs: Vec<LayerKv> =
+                (0..3).map(|_| LayerKv::with_capacity(8, 8)).collect();
+            for (s, &plen) in prefix_lens.iter().enumerate() {
+                for _ in 0..plen {
+                    let xt = rng.gaussian_matrix(1, 8, 1.0);
+                    let _ = attn.forward_decode(&xt, &mut pool[s]);
+                    let _ = attn.forward_decode(&xt, &mut refs[s]);
+                }
+            }
+            // One batched step over slots [2, 0, 1] (order ≠ slot id).
+            let x = rng.gaussian_matrix(3, 8, 1.0);
+            let slots = [2usize, 0, 1];
+            let y = attn.forward_decode_batch(&x, &mut pool, &slots);
+            for (t, &slot) in slots.iter().enumerate() {
+                let xt = x.submatrix(t, t + 1, 0, 8);
+                let yt = attn.forward_decode(&xt, &mut refs[slot]);
+                for c in 0..8 {
+                    assert_eq!(
+                        y.at(t, c),
+                        yt.at(0, c),
+                        "{structure:?} slot {slot} row {t} col {c}"
+                    );
+                }
+                assert_eq!(pool[slot].len, refs[slot].len);
+            }
         }
     }
 

@@ -129,6 +129,19 @@ impl Block {
         x_mid.add(&m)
     }
 
+    /// Batched KV-cached decode for continuous batching: row `t` of `x`
+    /// advances pool slot `slots[t]` (one `LayerKv` per slot in `kv`).
+    /// LayerNorm/GELU/residuals are row-wise and the four structured
+    /// linears run as batched kernel dispatches, so each row is
+    /// bit-identical to a lone `forward_decode` on that slot.
+    pub fn forward_decode_batch(&self, x: &Matrix, kv: &mut [LayerKv], slots: &[usize]) -> Matrix {
+        let a = self.attn.forward_decode_batch(&self.ln1.forward(x), kv, slots);
+        let x_mid = x.add(&a);
+        let h = gelu(&self.fc1.forward(&self.ln2.forward(&x_mid)));
+        let m = self.fc2.forward(&h);
+        x_mid.add(&m)
+    }
+
     /// KV-cached batched prefill over `x (seq×d)`: every non-attention
     /// op is row-wise and attention uses the decode softmax, so this is
     /// bit-identical to `seq` successive `forward_decode` calls while

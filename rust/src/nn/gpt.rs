@@ -7,7 +7,7 @@
 
 use super::attention::StructureKind;
 use super::block::{Block, BlockCache};
-use super::kvcache::KvCache;
+use super::kvcache::{KvCache, KvPool, LayerKv};
 use super::layernorm::{LayerNorm, LnCache};
 use super::linear::{Linear, LinearCache};
 use super::param::PTensor;
@@ -213,11 +213,35 @@ impl TinyLM {
     ///
     /// [`decode_step`]: TinyLM::decode_step
     pub fn prefill(&self, tokens: &[usize], kv: &mut KvCache) -> Option<Matrix> {
+        let pos0 = kv.seq_len();
+        self.prefill_impl(tokens, pos0, kv.layers.iter_mut())
+    }
+
+    /// Prefill into a [`KvPool`] slot — the continuous-batching
+    /// admission path. Identical to [`prefill`] except the per-layer
+    /// K/V lives in the pool's `slot` instead of a private cache.
+    ///
+    /// [`prefill`]: TinyLM::prefill
+    pub fn prefill_slot(
+        &self,
+        tokens: &[usize],
+        pool: &mut KvPool,
+        slot: usize,
+    ) -> Option<Matrix> {
+        let pos0 = pool.seq_len(slot);
+        self.prefill_impl(tokens, pos0, pool.slot_layers_mut(slot))
+    }
+
+    fn prefill_impl<'a>(
+        &self,
+        tokens: &[usize],
+        pos0: usize,
+        layers: impl Iterator<Item = &'a mut LayerKv>,
+    ) -> Option<Matrix> {
         if tokens.is_empty() {
             return None;
         }
         let d = self.cfg.d_model;
-        let pos0 = kv.seq_len();
         let mut x = Matrix::zeros(tokens.len(), d);
         for (t, &tok) in tokens.iter().enumerate() {
             assert!(tok < self.cfg.vocab, "token {tok} out of vocab");
@@ -228,7 +252,7 @@ impl TinyLM {
                 row[c] = e[c] + p[c];
             }
         }
-        for (blk, lkv) in self.blocks.iter().zip(&mut kv.layers) {
+        for (blk, lkv) in self.blocks.iter().zip(layers) {
             x = blk.forward_prefill(&x, lkv);
         }
         let last = x.submatrix(x.rows - 1, x.rows, 0, d);
@@ -265,8 +289,51 @@ impl TinyLM {
         self.head.forward(&self.ln_f.forward(&x))
     }
 
+    /// One continuous-batching decode iteration: `toks[t]` is the next
+    /// token for pool slot `slots[t]`, fed at that slot's current
+    /// sequence position. Every layer's Q/K/V, attention-output, and
+    /// MLP products run at batch = active slots through the kernel
+    /// engine (instead of `slots.len()` independent matvecs); the
+    /// returned logits matrix has one row per entry of `slots`, each
+    /// bit-identical to [`decode_step`] on a private cache holding the
+    /// same prefix. `slots` must not contain duplicates.
+    ///
+    /// [`decode_step`]: TinyLM::decode_step
+    pub fn decode_step_batch(
+        &self,
+        toks: &[usize],
+        pool: &mut KvPool,
+        slots: &[usize],
+    ) -> Matrix {
+        assert_eq!(toks.len(), slots.len(), "one token per active slot");
+        if slots.is_empty() {
+            return Matrix::zeros(0, self.cfg.vocab);
+        }
+        let d = self.cfg.d_model;
+        let mut x = Matrix::zeros(toks.len(), d);
+        for (t, (&tok, &slot)) in toks.iter().zip(slots).enumerate() {
+            assert!(tok < self.cfg.vocab, "token {tok} out of vocab");
+            let e = self.tok_embed.v.row(tok);
+            let p = self.pos_embed.v.row(pool.seq_len(slot).min(self.cfg.max_seq - 1));
+            let row = x.row_mut(t);
+            for c in 0..d {
+                row[c] = e[c] + p[c];
+            }
+        }
+        for (l, blk) in self.blocks.iter().enumerate() {
+            x = blk.forward_decode_batch(&x, pool.layer_mut(l), slots);
+        }
+        self.head.forward(&self.ln_f.forward(&x))
+    }
+
     pub fn new_kv_cache(&self) -> KvCache {
         KvCache::new(self.cfg.n_layers, self.cfg.max_seq, self.cfg.d_model)
+    }
+
+    /// A [`KvPool`] sized for this model: `slots` concurrent sequences,
+    /// each with `max_seq` positions of per-layer K/V capacity.
+    pub fn new_kv_pool(&self, slots: usize) -> KvPool {
+        KvPool::new(self.cfg.n_layers, slots, self.cfg.max_seq, self.cfg.d_model)
     }
 
     pub fn params_mut(&mut self) -> Vec<&mut PTensor> {
@@ -387,6 +454,73 @@ mod tests {
             assert!(lm.prefill(&[], &mut kv_empty).is_none());
             assert_eq!(kv_empty.seq_len(), 0);
         }
+    }
+
+    #[test]
+    fn pool_decode_bit_identical_to_private_caches() {
+        // Three sequences with different prompts, prefilled into pool
+        // slots and advanced with batched decode steps, must match
+        // per-sequence prefill + decode_step exactly.
+        let mut rng = Rng::new(407);
+        for s in [StructureKind::Dense, StructureKind::Blast { b: 2, r: 4 }] {
+            let lm = TinyLM::new(LmConfig::tiny(s), &mut rng);
+            let prompts: [&[usize]; 3] = [&[3, 9, 27], &[17], &[5, 1, 2, 8, 44]];
+            // Reference: private caches.
+            let mut kvs: Vec<KvCache> = (0..3).map(|_| lm.new_kv_cache()).collect();
+            let mut ref_logits: Vec<Matrix> = prompts
+                .iter()
+                .zip(&mut kvs)
+                .map(|(p, kv)| lm.prefill(p, kv).unwrap())
+                .collect();
+            // Pool: prefill each prompt into its own slot.
+            let mut pool = lm.new_kv_pool(3);
+            let slots: Vec<usize> =
+                prompts.iter().map(|_| pool.alloc().unwrap()).collect();
+            let mut pool_logits: Vec<Matrix> = prompts
+                .iter()
+                .zip(&slots)
+                .map(|(p, &slot)| lm.prefill_slot(p, &mut pool, slot).unwrap())
+                .collect();
+            for step in 0..4 {
+                for i in 0..3 {
+                    for c in 0..lm.cfg.vocab {
+                        assert_eq!(
+                            pool_logits[i].at(0, c),
+                            ref_logits[i].at(0, c),
+                            "{s:?} step {step} seq {i} col {c}"
+                        );
+                    }
+                }
+                // Greedy-advance every sequence; batched vs private.
+                let toks: Vec<usize> =
+                    pool_logits.iter().map(|l| argmax(l.row(0))).collect();
+                let batched = lm.decode_step_batch(&toks, &mut pool, &slots);
+                for i in 0..3 {
+                    pool_logits[i] = batched.submatrix(i, i + 1, 0, batched.cols);
+                    let pos = kvs[i].seq_len();
+                    ref_logits[i] = lm.decode_step(toks[i], pos, &mut kvs[i]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pool_prefill_matches_private_prefill_after_churn() {
+        // Reusing a released slot must behave like a fresh cache.
+        let mut rng = Rng::new(408);
+        let lm = TinyLM::new(LmConfig::tiny(StructureKind::Blast { b: 2, r: 4 }), &mut rng);
+        let mut pool = lm.new_kv_pool(1);
+        let s0 = pool.alloc().unwrap();
+        let _ = lm.prefill_slot(&[1, 2, 3, 4], &mut pool, s0).unwrap();
+        pool.release(s0);
+        let s1 = pool.alloc().unwrap();
+        let logits = lm.prefill_slot(&[7, 8], &mut pool, s1).unwrap();
+        let mut kv = lm.new_kv_cache();
+        let expected = lm.prefill(&[7, 8], &mut kv).unwrap();
+        for c in 0..lm.cfg.vocab {
+            assert_eq!(logits.at(0, c), expected.at(0, c));
+        }
+        assert_eq!(pool.seq_len(s1), 2);
     }
 
     #[test]

@@ -1,9 +1,14 @@
-//! KV cache for incremental decoding.
+//! KV storage for incremental decoding: per-sequence caches and the
+//! slotted pool behind continuous batching.
 //!
-//! One cache slot per sequence: per layer, per head, the accumulated key
-//! and value rows. The Table 4 runtime experiment decodes token-by-token,
-//! so cache appends must be O(head_dim) copies with no reallocation in the
-//! steady state.
+//! [`LayerKv`] holds one sequence's accumulated K/V rows for one layer;
+//! [`KvCache`] stacks them per layer for a single private sequence (the
+//! `TinyLM::generate` convenience path). [`KvPool`] is the serving-side
+//! container: a fixed number of sequence *slots*, each with its own
+//! per-layer `LayerKv` and sequence length, claimed on request admission
+//! and released on retirement. Slots retain their buffers across
+//! alloc/release cycles, so steady-state serving does no cache
+//! reallocation; appends stay O(width) copies.
 
 use crate::tensor::Matrix;
 
@@ -93,6 +98,94 @@ impl KvCache {
     }
 }
 
+/// Slotted, batch-major KV pool for iteration-level continuous batching.
+///
+/// Layout is `layers[layer][slot]`: one [`LayerKv`] per (layer, slot)
+/// pair, so a batched decode step can hand each transformer layer the
+/// whole slot axis (`layer_mut`) while prefill walks one slot across all
+/// layers (`slot_layers_mut`). Slot lifecycle:
+///
+/// ```text
+/// free ──alloc()──> in use (prefill, then decode steps) ──release()──> free
+/// ```
+///
+/// `alloc` clears the slot's rows but keeps its buffers, so churning
+/// requests through the pool never reallocates in the steady state.
+#[derive(Clone, Debug)]
+pub struct KvPool {
+    /// `layers[l][s]` is slot `s`'s K/V for layer `l`.
+    layers: Vec<Vec<LayerKv>>,
+    in_use: Vec<bool>,
+    /// LIFO free list of slot ids.
+    free: Vec<usize>,
+}
+
+impl KvPool {
+    /// Pool with `slots` sequence slots, each pre-sized for `capacity`
+    /// positions of `width` features across `n_layers` layers.
+    pub fn new(n_layers: usize, slots: usize, capacity: usize, width: usize) -> Self {
+        KvPool {
+            layers: (0..n_layers)
+                .map(|_| (0..slots).map(|_| LayerKv::with_capacity(capacity, width)).collect())
+                .collect(),
+            in_use: vec![false; slots],
+            // Reversed so `pop` hands out slot 0 first (determinism in
+            // tests; any order would be correct).
+            free: (0..slots).rev().collect(),
+        }
+    }
+
+    /// Total slot count (the max number of concurrent sequences).
+    pub fn num_slots(&self) -> usize {
+        self.in_use.len()
+    }
+
+    /// Slots currently free for admission.
+    pub fn free_count(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Slots currently holding live sequences.
+    pub fn active_count(&self) -> usize {
+        self.num_slots() - self.free.len()
+    }
+
+    /// Claim a free slot (cleared, buffers retained). `None` when the
+    /// pool is full.
+    pub fn alloc(&mut self) -> Option<usize> {
+        let slot = self.free.pop()?;
+        for layer in &mut self.layers {
+            layer[slot].clear();
+        }
+        self.in_use[slot] = true;
+        Some(slot)
+    }
+
+    /// Return a retired sequence's slot to the free list.
+    pub fn release(&mut self, slot: usize) {
+        assert!(self.in_use[slot], "release of slot {slot} that is not in use");
+        self.in_use[slot] = false;
+        self.free.push(slot);
+    }
+
+    /// Sequence length currently stored in `slot`.
+    pub fn seq_len(&self, slot: usize) -> usize {
+        self.layers.first().map_or(0, |l| l[slot].len)
+    }
+
+    /// All slots of one layer — the batched decode step indexes this by
+    /// slot id.
+    pub fn layer_mut(&mut self, layer: usize) -> &mut [LayerKv] {
+        &mut self.layers[layer]
+    }
+
+    /// One slot's per-layer caches, first layer first (the prefill path
+    /// walks this alongside the transformer blocks).
+    pub fn slot_layers_mut(&mut self, slot: usize) -> impl Iterator<Item = &mut LayerKv> + '_ {
+        self.layers.iter_mut().map(move |l| &mut l[slot])
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -169,5 +262,64 @@ mod tests {
         assert_eq!(c.seq_len(), 1);
         c.clear();
         assert_eq!(c.seq_len(), 0);
+    }
+
+    #[test]
+    fn pool_alloc_release_lifecycle() {
+        let mut pool = KvPool::new(2, 3, 8, 4);
+        assert_eq!(pool.num_slots(), 3);
+        assert_eq!(pool.free_count(), 3);
+        assert_eq!(pool.active_count(), 0);
+        let a = pool.alloc().unwrap();
+        let b = pool.alloc().unwrap();
+        let c = pool.alloc().unwrap();
+        assert_eq!(pool.free_count(), 0);
+        assert!(pool.alloc().is_none(), "full pool must refuse admission");
+        // Distinct slots.
+        assert_ne!(a, b);
+        assert_ne!(b, c);
+        assert_ne!(a, c);
+        pool.release(b);
+        assert_eq!(pool.free_count(), 1);
+        assert_eq!(pool.active_count(), 2);
+        assert_eq!(pool.alloc(), Some(b), "freed slot is reusable");
+    }
+
+    #[test]
+    #[should_panic(expected = "not in use")]
+    fn pool_double_release_panics() {
+        let mut pool = KvPool::new(1, 2, 4, 2);
+        let s = pool.alloc().unwrap();
+        pool.release(s);
+        pool.release(s);
+    }
+
+    #[test]
+    fn pool_slots_are_independent_and_cleared_on_alloc() {
+        let mut pool = KvPool::new(2, 2, 2, 3);
+        let s0 = pool.alloc().unwrap();
+        let s1 = pool.alloc().unwrap();
+        for lkv in pool.slot_layers_mut(s0) {
+            lkv.append(&[1., 1., 1.], &[2., 2., 2.]);
+            lkv.append(&[3., 3., 3.], &[4., 4., 4.]);
+        }
+        for lkv in pool.slot_layers_mut(s1) {
+            lkv.append(&[9., 9., 9.], &[8., 8., 8.]);
+        }
+        assert_eq!(pool.seq_len(s0), 2);
+        assert_eq!(pool.seq_len(s1), 1);
+        // Layer view exposes both slots.
+        let layer0 = pool.layer_mut(0);
+        assert_eq!(layer0[s0].keys().row(1), &[3., 3., 3.]);
+        assert_eq!(layer0[s1].values().row(0), &[8., 8., 8.]);
+        // Release + realloc clears the rows but keeps capacity.
+        let cap_before = pool.layer_mut(0)[s0].capacity();
+        pool.release(s0);
+        let s0_again = pool.alloc().unwrap();
+        assert_eq!(s0_again, s0);
+        assert_eq!(pool.seq_len(s0_again), 0);
+        assert_eq!(pool.layer_mut(0)[s0_again].capacity(), cap_before);
+        // The other slot was untouched.
+        assert_eq!(pool.seq_len(s1), 1);
     }
 }

@@ -14,7 +14,7 @@ use std::time::Duration;
 
 fn mk_req(
     id: u64,
-    rtx: &std::sync::mpsc::Sender<blast_repro::coordinator::GenerateResponse>,
+    rtx: &std::sync::mpsc::Sender<blast_repro::coordinator::ResponseEvent>,
 ) -> GenerateRequest {
     GenerateRequest {
         id,
@@ -62,6 +62,7 @@ fn prop_request_response_pairing() {
         vec![("m".into(), model)],
         CoordinatorConfig {
             batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_micros(500) },
+            slots: 4,
         },
     ));
     property(6, |g: &mut PropGen| {
