@@ -24,7 +24,10 @@ fn main() {
     let coord = Coordinator::new(
         vec![("m".into(), model)],
         CoordinatorConfig {
-            batcher: BatcherConfig { max_batch: 8, max_wait: std::time::Duration::from_micros(200) },
+            batcher: BatcherConfig {
+                max_batch: 8,
+                max_wait: std::time::Duration::from_micros(200),
+            },
             slots: 8,
         },
     );

@@ -1,47 +1,164 @@
-//! Bench: factorization step cost (Fig. 3 / Fig. 9 infrastructure) —
-//! GD vs PrecGD per-iteration cost and full-solve cost across b and r.
+//! Bench: compression-pipeline throughput — single-thread vs
+//! block-parallel PrecGD (Algorithm 2), plus per-structure compressor
+//! cost at a fixed budget. Writes the machine-readable
+//! `BENCH_factorize.json` at the repo root so the CI bench-trend job can
+//! track the trajectory.
+//!
+//! Acceptance gate: block-parallel PrecGD must reach ≥ 2× the
+//! single-thread wall clock on ≥ 4 cores, at **bit-identical** loss
+//! trajectories (asserted here and in `tests/factorize_parity.rs`).
+//! On < 4 cores or under `BLAST_BENCH_FAST=1` (the CI smoke setting) a
+//! miss is reported but not fatal, matching the other bench gates.
+//!
+//! `BLAST_FACTORIZE_BENCH_OUT` overrides the JSON output path.
 
-use blast_repro::factorize::{factorize_gd, factorize_precgd, GdOptions, PrecGdOptions};
+use blast_repro::factorize::{factorize_precgd, Compressor, PrecGdOptions, Structure};
 use blast_repro::tensor::{matmul_nt, Rng};
 use blast_repro::util::bench::BenchSuite;
+use blast_repro::util::json::{obj, Json};
+use blast_repro::util::par;
 
 fn main() {
-    let mut suite = BenchSuite::new("factorize — Algorithm 2 cost");
-    let mut rng = Rng::new(0);
-    let n = 128;
-    let u = rng.gaussian_matrix(n, 8, 1.0);
-    let v = rng.gaussian_matrix(n, 8, 1.0);
-    let target = matmul_nt(&u, &v).scale(1.0 / 8f32.sqrt());
+    let fast = std::env::var("BLAST_BENCH_FAST").is_ok_and(|v| v == "1");
+    let threads = par::num_threads();
+    let (n, iters) = if fast { (128usize, 8usize) } else { (256, 20) };
+    let (b, r, r_star) = (8usize, 16usize, 8usize);
 
-    for &(b, r) in &[(4usize, 8usize), (8, 8), (8, 32), (16, 32)] {
-        suite.bench(&format!("GD 10 iters n={n} b={b} r={r}"), || {
-            std::hint::black_box(factorize_gd(
-                &target,
-                &GdOptions { b, r, iters: 10, trace_every: 0, ..Default::default() },
-            ));
+    let mut suite = BenchSuite::new("factorize — parallel compression pipeline");
+    let mut rng = Rng::new(0);
+    let u = rng.gaussian_matrix(n, r_star, 1.0);
+    let v = rng.gaussian_matrix(n, r_star, 1.0);
+    let target = matmul_nt(&u, &v).scale(1.0 / (r_star as f32).sqrt());
+    println!(
+        "target {n}x{n} rank-{r_star}; PrecGD b={b} r={r} iters={iters}; {threads} threads{}",
+        if fast { " (fast)" } else { "" }
+    );
+
+    // --- Single-thread vs block-parallel PrecGD (the tentpole gate). ---
+    let single_name = format!("PrecGD single-thread n={n} b={b} r={r}");
+    let parallel_name = format!("PrecGD block-parallel n={n} b={b} r={r}");
+    suite.bench(&single_name, || {
+        std::hint::black_box(factorize_precgd(
+            &target,
+            &PrecGdOptions {
+                b,
+                r,
+                iters,
+                trace_every: 0,
+                parallel: false,
+                ..Default::default()
+            },
+        ));
+    });
+    suite.bench(&parallel_name, || {
+        std::hint::black_box(factorize_precgd(
+            &target,
+            &PrecGdOptions { b, r, iters, trace_every: 0, parallel: true, ..Default::default() },
+        ));
+    });
+    suite.report_speedup(&single_name, &parallel_name);
+
+    // Parity: the parallel schedule is bit-identical, not just close.
+    let seq = factorize_precgd(
+        &target,
+        &PrecGdOptions { b, r, iters, trace_every: 0, parallel: false, ..Default::default() },
+    );
+    let par = factorize_precgd(
+        &target,
+        &PrecGdOptions { b, r, iters, trace_every: 0, parallel: true, ..Default::default() },
+    );
+    assert_eq!(
+        seq.rel_error, par.rel_error,
+        "block-parallel PrecGD must be bit-identical to single-thread"
+    );
+    println!("parity: single vs parallel rel-err {:.3e} (bit-identical)", par.rel_error);
+
+    let single_ms = suite.mean_of(&single_name).unwrap().as_secs_f64() * 1e3;
+    let parallel_ms = suite.mean_of(&parallel_name).unwrap().as_secs_f64() * 1e3;
+    let speedup = single_ms / parallel_ms.max(1e-9);
+    // Throughput metric the bench-trend job tracks: PrecGD iterations/s
+    // through the parallel path.
+    let iters_per_sec = iters as f64 / (parallel_ms / 1e3);
+
+    // --- Per-structure compressor cost at a 50% budget. ---
+    let m = if fast { 64 } else { 96 };
+    let layer = rng.gaussian_matrix(m, m, 1.0);
+    let comp = Compressor { blast_iters: if fast { 10 } else { 30 }, ..Default::default() };
+    let mut per_structure = Vec::new();
+    for s in [
+        Structure::LowRank,
+        Structure::Monarch { b: 4 },
+        Structure::BlockDiag { b: 4 },
+        Structure::Blast { b: 4 },
+    ] {
+        let name = format!("compress {m}x{m} {}", s.name());
+        suite.bench(&name, || {
+            std::hint::black_box(comp.compress(&layer, s, 0.5));
         });
-        suite.bench(&format!("PrecGD 10 iters n={n} b={b} r={r}"), || {
-            std::hint::black_box(factorize_precgd(
-                &target,
-                &PrecGdOptions { b, r, iters: 10, trace_every: 0, ..Default::default() },
-            ));
-        });
+        let mean_ms = suite.mean_of(&name).unwrap().as_secs_f64() * 1e3;
+        let rel_error = comp
+            .compress(&layer, s, 0.5)
+            .map(|w| w.rel_error(&layer))
+            .unwrap_or(f64::NAN);
+        per_structure.push(obj(vec![
+            ("structure", Json::from(s.name())),
+            ("mean_ms", Json::from(mean_ms)),
+            ("rel_error", Json::from(rel_error)),
+        ]));
     }
 
-    // Convergence-to-tolerance comparison (the Fig. 3 story in one line):
-    // iterations are equal; PrecGD reaches far lower error.
-    let gd = factorize_gd(
-        &target,
-        &GdOptions { b: 8, r: 32, iters: 40, trace_every: 0, ..Default::default() },
-    );
-    let pgd = factorize_precgd(
-        &target,
-        &PrecGdOptions { b: 8, r: 32, iters: 40, trace_every: 0, ..Default::default() },
-    );
-    println!(
-        "--> after 40 iters (r=4r*): GD rel-err {:.3e} vs PrecGD {:.3e} ({:.0}x better)",
-        gd.rel_error,
-        pgd.rel_error,
-        gd.rel_error / pgd.rel_error.max(1e-12)
-    );
+    // --- Machine-readable report. ---
+    let enforced = threads >= 4 && !fast;
+    let pass = speedup >= 2.0;
+    let out_path = std::env::var("BLAST_FACTORIZE_BENCH_OUT")
+        .unwrap_or_else(|_| concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_factorize.json").into());
+    let root = obj(vec![
+        ("bench", Json::from("factorize")),
+        (
+            "config",
+            obj(vec![
+                ("n", Json::from(n)),
+                ("b", Json::from(b)),
+                ("r", Json::from(r)),
+                ("iters", Json::from(iters)),
+                ("threads", Json::from(threads)),
+                ("fast_mode", Json::from(fast)),
+            ]),
+        ),
+        (
+            "precgd",
+            obj(vec![
+                ("single_thread_ms", Json::from(single_ms)),
+                ("parallel_ms", Json::from(parallel_ms)),
+                ("speedup", Json::from(speedup)),
+                ("iters_per_sec", Json::from(iters_per_sec)),
+                ("rel_error", Json::from(par.rel_error)),
+            ]),
+        ),
+        ("per_structure", Json::Arr(per_structure)),
+        (
+            "gate",
+            obj(vec![
+                ("min_speedup", Json::from(2.0)),
+                ("enforced", Json::from(enforced)),
+                ("pass", Json::from(pass)),
+            ]),
+        ),
+    ]);
+    match std::fs::write(&out_path, root.to_string_pretty()) {
+        Ok(()) => println!("wrote {out_path}"),
+        Err(e) => println!("could not write {out_path}: {e}"),
+    }
+
+    // Acceptance gate: parallel PrecGD >= 2x single-thread on >= 4 cores.
+    if !pass {
+        let msg = format!(
+            "block-parallel PrecGD ({parallel_ms:.1}ms) must be >= 2x single-thread \
+             ({single_ms:.1}ms) on >= 4 cores, got {speedup:.2}x on {threads} threads"
+        );
+        assert!(!enforced, "acceptance gate: {msg}");
+        println!("WARNING (not fatal: {} threads, fast={fast}): {msg}", threads);
+    } else {
+        println!("gate: parallel PrecGD >= 2x single-thread — OK ({speedup:.2}x)");
+    }
 }

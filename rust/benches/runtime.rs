@@ -20,9 +20,18 @@ fn main() {
     };
     let rows: Vec<(String, TinyLM)> = vec![
         ("CR0 dense".into(), make(StructureKind::Dense)),
-        ("CR20 b=2".into(), make(StructureKind::Blast { b: 2, r: blast_rank_for_ratio(128, 64, 2, 0.2).unwrap() })),
-        ("CR20 b=4".into(), make(StructureKind::Blast { b: 4, r: blast_rank_for_ratio(128, 64, 4, 0.2).unwrap() })),
-        ("CR50 b=4".into(), make(StructureKind::Blast { b: 4, r: blast_rank_for_ratio(128, 64, 4, 0.5).unwrap() })),
+        (
+            "CR20 b=2".into(),
+            make(StructureKind::Blast { b: 2, r: blast_rank_for_ratio(128, 64, 2, 0.2).unwrap() }),
+        ),
+        (
+            "CR20 b=4".into(),
+            make(StructureKind::Blast { b: 4, r: blast_rank_for_ratio(128, 64, 4, 0.2).unwrap() }),
+        ),
+        (
+            "CR50 b=4".into(),
+            make(StructureKind::Blast { b: 4, r: blast_rank_for_ratio(128, 64, 4, 0.5).unwrap() }),
+        ),
     ];
     for &l in &[10usize, 100] {
         let dense_name = format!("generate L={l} CR0 dense");

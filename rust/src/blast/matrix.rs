@@ -115,6 +115,21 @@ impl BlastMatrix {
         1.0 - self.num_params() as f64 / self.dense_params() as f64
     }
 
+    /// `U_i · diag(s_{i,j})` — the coupling folded into the left factor,
+    /// so a block reconstruction becomes one dense `X · Wᵀ` dispatch
+    /// (`u_scaled(i,j) · V_jᵀ`); used by the block-parallel loss of
+    /// `factorize::loss`.
+    pub fn u_scaled(&self, i: usize, j: usize) -> Matrix {
+        let mut out = self.u[i].clone();
+        let s = &self.s[i][j];
+        for a in 0..out.rows {
+            for (v, sv) in out.row_mut(a).iter_mut().zip(s) {
+                *v *= sv;
+            }
+        }
+        out
+    }
+
     /// Reconstruct block `(i, j)` densely: `U_i diag(s_{i,j}) V_j^T`.
     pub fn block_dense(&self, i: usize, j: usize) -> Matrix {
         let p = self.p();
@@ -355,6 +370,14 @@ mod tests {
             let expect = dense.block_col(j, 3);
             assert!(col.sub(&expect).fro_norm() < 1e-4);
         }
+    }
+
+    #[test]
+    fn u_scaled_reconstructs_block() {
+        let mut rng = Rng::new(55);
+        let a = BlastMatrix::random_init(6, 6, 2, 3, 1.0, &mut rng);
+        let rec = crate::tensor::matmul_nt(&a.u_scaled(0, 1), &a.v[1]);
+        assert!(rec.sub(&a.block_dense(0, 1)).fro_norm() < 1e-5);
     }
 
     #[test]

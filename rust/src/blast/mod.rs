@@ -13,4 +13,6 @@ pub mod special;
 pub mod budget;
 
 pub use matrix::BlastMatrix;
-pub use budget::{blast_achieved_ratio, blast_rank_for_ratio, lowrank_rank_for_ratio, CompressionBudget};
+pub use budget::{
+    blast_achieved_ratio, blast_rank_for_ratio, lowrank_rank_for_ratio, CompressionBudget,
+};

@@ -10,7 +10,6 @@ use crate::nn::dit::{Ddpm, DitConfig, TinyDiT};
 use crate::nn::param::AdamW;
 use crate::nn::vit::{TinyViT, VitConfig};
 use crate::tensor::{Matrix, Rng};
-use crate::train::compress_model::compress_linear;
 use crate::train::vit_trainer::{eval_vit_accuracy, train_vit, VitTrainConfig};
 use anyhow::Result;
 
@@ -18,17 +17,21 @@ fn vit_cfg() -> VitConfig {
     VitConfig { n_classes: 4, ..VitConfig::tiny(StructureKind::Dense) }
 }
 
-/// Compress every transformer linear of a ViT in place.
-fn compress_vit(vit: &mut TinyViT, s: Structure, ratio: f64, comp: &Compressor) -> usize {
-    let mut n = 0;
-    for blk in &mut vit.blocks {
-        for layer in [&mut blk.attn.wqkv, &mut blk.attn.wo, &mut blk.fc1, &mut blk.fc2] {
-            if compress_linear(layer, comp, s, ratio).is_some() {
-                n += 1;
-            }
-        }
+/// Compress every transformer linear of a ViT in place through the
+/// parallel layer queue; returns the per-layer reconstruction errors of
+/// the layers that met the budget.
+fn compress_vit(vit: &mut TinyViT, s: Structure, ratio: f64, comp: &Compressor) -> Vec<f64> {
+    let mut named = Vec::new();
+    for (i, blk) in vit.blocks.iter_mut().enumerate() {
+        named.push((format!("block{i}.attn.wqkv"), &mut blk.attn.wqkv));
+        named.push((format!("block{i}.attn.wo"), &mut blk.attn.wo));
+        named.push((format!("block{i}.fc1"), &mut blk.fc1));
+        named.push((format!("block{i}.fc2"), &mut blk.fc2));
     }
-    n
+    crate::factorize::compress_linears_parallel(named, comp, s, ratio)
+        .into_iter()
+        .flatten()
+        .collect()
 }
 
 /// Fig. 6 — ViT compress + retrain accuracy–FLOPs curves.
@@ -59,16 +62,7 @@ pub fn fig6(scale: usize) -> Result<()> {
             Structure::Blast { b: 4 },
         ] {
             let mut m = dense.clone();
-            let mut errs = Vec::new();
-            for blk in &mut m.blocks {
-                for layer in
-                    [&mut blk.attn.wqkv, &mut blk.attn.wo, &mut blk.fc1, &mut blk.fc2]
-                {
-                    if let Some(e) = compress_linear(layer, &comp, s, ratio) {
-                        errs.push(e);
-                    }
-                }
-            }
+            let errs = compress_vit(&mut m, s, ratio, &comp);
             let mean_err: f64 = errs.iter().sum::<f64>() / errs.len().max(1) as f64;
             let acc_comp = eval_vit_accuracy(&m, &data, eval_n, 3);
             train_vit(
@@ -121,12 +115,15 @@ fn train_dit(steps: usize, seed: u64) -> (TinyDiT, Ddpm, DiffusionDataset) {
 }
 
 fn compress_dit(dit: &mut TinyDiT, s: Structure, ratio: f64, comp: &Compressor) {
-    // Paper Table 7: compress QKV, FC1, adaLN projections.
-    for blk in &mut dit.blocks {
-        compress_linear(&mut blk.attn.wqkv, comp, s, ratio);
-        compress_linear(&mut blk.fc1, comp, s, ratio);
+    // Paper Table 7: compress QKV, FC1, adaLN projections — through the
+    // parallel layer queue.
+    let mut named = Vec::new();
+    for (i, blk) in dit.blocks.iter_mut().enumerate() {
+        named.push((format!("block{i}.attn.wqkv"), &mut blk.attn.wqkv));
+        named.push((format!("block{i}.fc1"), &mut blk.fc1));
     }
-    compress_linear(&mut dit.adaln_proj, comp, s, ratio);
+    named.push(("adaln_proj".to_string(), &mut dit.adaln_proj));
+    crate::factorize::compress_linears_parallel(named, comp, s, ratio);
 }
 
 fn retrain_dit(dit: &mut TinyDiT, ddpm: &Ddpm, ds: &DiffusionDataset, steps: usize, seed: u64) {

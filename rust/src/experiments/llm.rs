@@ -128,7 +128,12 @@ pub fn table12(scale: usize) -> Result<()> {
     let bb = configs::llm_compress::BLAST_B;
     let mut rows = vec![("Original".to_string(), b.dense.clone())];
     for ratio in [0.1, 0.2] {
-        for s in [Structure::LowRank, Structure::Monarch { b: bb }, Structure::Blast { b: 2 }, Structure::Blast { b: bb }] {
+        for s in [
+            Structure::LowRank,
+            Structure::Monarch { b: bb },
+            Structure::Blast { b: 2 },
+            Structure::Blast { b: bb },
+        ] {
             let mut m = b.dense.clone();
             compress_lm(&mut m, s, ratio, &comp);
             rows.push((format!("{} @{:.0}%", s.name(), ratio * 100.0), m));

@@ -25,19 +25,71 @@ pub struct Experiment {
 /// All registered experiments.
 pub fn registry() -> Vec<Experiment> {
     vec![
-        Experiment { id: "fig3", paper_ref: "Fig. 3 — GD vs PrecGD on a low-rank target", run: convergence::fig3 },
-        Experiment { id: "fig9", paper_ref: "Fig. 9 — GD vs PrecGD on a BLAST target", run: convergence::fig9 },
-        Experiment { id: "fig4", paper_ref: "Fig. 4 — ViT-S from scratch, accuracy vs FLOPs", run: scratch::fig4 },
-        Experiment { id: "table1", paper_ref: "Table 1 — ViT-B from scratch, accuracy + relative FLOPs", run: scratch::table1 },
-        Experiment { id: "fig5", paper_ref: "Fig. 5 — GPT-2 perplexity–FLOPs trade-off", run: scratch::fig5 },
-        Experiment { id: "fig6", paper_ref: "Fig. 6 — ViT compress+retrain accuracy–FLOPs", run: compress::fig6 },
-        Experiment { id: "table2", paper_ref: "Table 2 — DiT 50% compression FID/sFID/IS", run: compress::table2 },
-        Experiment { id: "fig1", paper_ref: "Fig. 1 — DiT qualitative samples from shared noise", run: compress::fig1 },
-        Experiment { id: "table3", paper_ref: "Table 3 — LLM compression ± re-training", run: llm::table3 },
-        Experiment { id: "table12", paper_ref: "Table 12 — per-task 0-shot, compression only", run: llm::table12 },
-        Experiment { id: "table13", paper_ref: "Table 13 — per-task 0-shot after re-training", run: llm::table13 },
-        Experiment { id: "fig7", paper_ref: "Fig. 7 — accuracy vs CR, before/after re-training", run: llm::fig7 },
-        Experiment { id: "table4", paper_ref: "Table 4 — decode runtime vs CR and b", run: runtime_exp::table4 },
+        Experiment {
+            id: "fig3",
+            paper_ref: "Fig. 3 — GD vs PrecGD on a low-rank target",
+            run: convergence::fig3,
+        },
+        Experiment {
+            id: "fig9",
+            paper_ref: "Fig. 9 — GD vs PrecGD on a BLAST target",
+            run: convergence::fig9,
+        },
+        Experiment {
+            id: "fig4",
+            paper_ref: "Fig. 4 — ViT-S from scratch, accuracy vs FLOPs",
+            run: scratch::fig4,
+        },
+        Experiment {
+            id: "table1",
+            paper_ref: "Table 1 — ViT-B from scratch, accuracy + relative FLOPs",
+            run: scratch::table1,
+        },
+        Experiment {
+            id: "fig5",
+            paper_ref: "Fig. 5 — GPT-2 perplexity–FLOPs trade-off",
+            run: scratch::fig5,
+        },
+        Experiment {
+            id: "fig6",
+            paper_ref: "Fig. 6 — ViT compress+retrain accuracy–FLOPs",
+            run: compress::fig6,
+        },
+        Experiment {
+            id: "table2",
+            paper_ref: "Table 2 — DiT 50% compression FID/sFID/IS",
+            run: compress::table2,
+        },
+        Experiment {
+            id: "fig1",
+            paper_ref: "Fig. 1 — DiT qualitative samples from shared noise",
+            run: compress::fig1,
+        },
+        Experiment {
+            id: "table3",
+            paper_ref: "Table 3 — LLM compression ± re-training",
+            run: llm::table3,
+        },
+        Experiment {
+            id: "table12",
+            paper_ref: "Table 12 — per-task 0-shot, compression only",
+            run: llm::table12,
+        },
+        Experiment {
+            id: "table13",
+            paper_ref: "Table 13 — per-task 0-shot after re-training",
+            run: llm::table13,
+        },
+        Experiment {
+            id: "fig7",
+            paper_ref: "Fig. 7 — accuracy vs CR, before/after re-training",
+            run: llm::fig7,
+        },
+        Experiment {
+            id: "table4",
+            paper_ref: "Table 4 — decode runtime vs CR and b",
+            run: runtime_exp::table4,
+        },
     ]
 }
 

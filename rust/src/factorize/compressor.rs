@@ -20,6 +20,20 @@ pub enum Structure {
 }
 
 impl Structure {
+    /// Parse a CLI/config token (`dense`, `lowrank`, `monarch`,
+    /// `blockdiag`, `blast`); block-structured families take `b` from the
+    /// caller. `None` on unknown tokens.
+    pub fn parse(token: &str, b: usize) -> Option<Structure> {
+        match token {
+            "dense" => Some(Structure::Dense),
+            "lowrank" => Some(Structure::LowRank),
+            "monarch" => Some(Structure::Monarch { b }),
+            "blockdiag" => Some(Structure::BlockDiag { b }),
+            "blast" => Some(Structure::Blast { b }),
+            _ => None,
+        }
+    }
+
     pub fn name(&self) -> String {
         match self {
             Structure::Dense => "Dense".into(),
@@ -89,11 +103,16 @@ pub struct Compressor {
     pub blast_iters: usize,
     pub delta0: f32,
     pub seed: u64,
+    /// Run PrecGD's `b×b` factor-grid updates across the thread pool
+    /// (bit-identical to the sequential sweep). The pipeline driver
+    /// turns this off when it already parallelizes across layers, so the
+    /// machine is not oversubscribed.
+    pub parallel: bool,
 }
 
 impl Default for Compressor {
     fn default() -> Self {
-        Compressor { blast_iters: 150, delta0: 0.1, seed: 0 }
+        Compressor { blast_iters: 150, delta0: 0.1, seed: 0, parallel: true }
     }
 }
 
@@ -132,6 +151,7 @@ impl Compressor {
                         iters: self.blast_iters,
                         delta0: self.delta0,
                         seed: self.seed,
+                        parallel: self.parallel,
                         ..Default::default()
                     },
                 );

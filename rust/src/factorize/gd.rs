@@ -1,18 +1,26 @@
 //! Alternating gradient descent for BLAST factorization (Eqs. 5–7) with
 //! the Theorem-1 step-size rule.
 //!
-//! Each iteration performs three sequential sweeps — all `U_i`, then all
-//! `V_j` (using the *updated* U), then all `s_{i,j}` (using updated U and
-//! V) — exactly the ordering of Eqs. 5–7 that Theorem 1's monotone-descent
-//! proof requires. Step sizes are either a user-supplied schedule scaled
-//! into the Lipschitz bound, or the bound itself:
+//! Each iteration performs three sweeps — all `U_i`, then all `V_j`
+//! (using the *updated* U), then all `s_{i,j}` (using updated U and V) —
+//! exactly the ordering of Eqs. 5–7 that Theorem 1's monotone-descent
+//! proof requires. *Within* a sweep the per-factor updates are mutually
+//! independent (each `U_i` reads only `V`/`s`, each `V_j` only the
+//! already-updated `U`/`s`, each `s_{i,j}` only `U_i`/`V_j`), so with
+//! [`GdOptions::parallel`] the sweep fans the `b` (or `b²`) updates
+//! across the scoped-thread pool with a barrier between sweeps —
+//! bit-identical to the sequential order because each update's
+//! arithmetic is unchanged and results are written back in index order.
+//! Step sizes are either a user-supplied schedule scaled into the
+//! Lipschitz bound, or the bound itself:
 //! `η_U ≤ 1/σ₁(V̄^T V̄)`, `η_V ≤ 1/σ₁(Ū^T Ū)`,
 //! `η_s ≤ 1/σ₁((U^T U)⊙(V^T V))`.
 
-use super::loss::{blast_loss, grad_s, grad_u, grad_v, gram_hadamard};
+use super::loss::{blast_loss_with, grad_s, grad_u, grad_v, gram_hadamard};
 use crate::blast::BlastMatrix;
 use crate::linalg::svd::lambda_max_psd;
 use crate::tensor::{matmul_tn, Matrix, Rng};
+use crate::util::par::par_map_if;
 
 /// Options for plain (non-preconditioned) GD factorization.
 #[derive(Clone, Debug)]
@@ -33,6 +41,10 @@ pub struct GdOptions {
     pub lr_decay: bool,
     /// Record the loss every `trace_every` iterations (0 = never).
     pub trace_every: usize,
+    /// Fan each sweep's independent per-factor updates across the
+    /// scoped-thread pool (bit-identical to the sequential sweep; see
+    /// module docs).
+    pub parallel: bool,
 }
 
 impl Default for GdOptions {
@@ -45,6 +57,7 @@ impl Default for GdOptions {
             seed: 0,
             lr_decay: true,
             trace_every: 1,
+            parallel: true,
         }
     }
 }
@@ -73,6 +86,7 @@ pub fn factorize_gd(target: &Matrix, opts: &GdOptions) -> FactorizeResult {
     let mut trace = Vec::new();
     let target_norm = target.fro_norm() as f64;
 
+    let par = opts.parallel;
     for k in 0..opts.iters {
         let sched = if opts.lr_decay {
             1.0 - k as f32 / opts.iters as f32
@@ -81,40 +95,50 @@ pub fn factorize_gd(target: &Matrix, opts: &GdOptions) -> FactorizeResult {
         };
 
         // --- U sweep (Eq. 5), step 1/σ₁(V̄_i^T V̄_i). ---
-        for i in 0..x.b {
+        let new_u = par_map_if(par, x.b, |i| {
             let v_bar = x.v_bar(i);
             let lip = lambda_max_psd(&matmul_tn(&v_bar, &v_bar)).max(1e-12);
             let g = grad_u(target, &x, i);
-            x.u[i].axpy(-sched / lip, &g);
-        }
+            let mut u = x.u[i].clone();
+            u.axpy(-sched / lip, &g);
+            u
+        });
+        x.u = new_u;
 
         // --- V sweep (Eq. 6) with updated U. ---
-        for j in 0..x.b {
+        let new_v = par_map_if(par, x.b, |j| {
             let u_bar = x.u_bar(j);
             let lip = lambda_max_psd(&matmul_tn(&u_bar, &u_bar)).max(1e-12);
             let g = grad_v(target, &x, j);
-            x.v[j].axpy(-sched / lip, &g);
-        }
+            let mut v = x.v[j].clone();
+            v.axpy(-sched / lip, &g);
+            v
+        });
+        x.v = new_v;
 
         // --- s sweep (Eq. 7) with updated U, V. ---
-        for i in 0..x.b {
-            for j in 0..x.b {
-                let w = gram_hadamard(&x.u[i], &x.v[j]);
-                let lip = lambda_max_psd(&w).max(1e-12);
-                let g = grad_s(target, &x, i, j);
-                let eta = sched / lip;
-                for (sk, gk) in x.s[i][j].iter_mut().zip(&g) {
-                    *sk -= eta * gk;
-                }
-            }
+        let new_s = par_map_if(par, x.b * x.b, |idx| {
+            let (i, j) = (idx / x.b, idx % x.b);
+            let w = gram_hadamard(&x.u[i], &x.v[j]);
+            let lip = lambda_max_psd(&w).max(1e-12);
+            let g = grad_s(target, &x, i, j);
+            let eta = sched / lip;
+            x.s[i][j]
+                .iter()
+                .zip(&g)
+                .map(|(sk, gk)| sk - eta * gk)
+                .collect::<Vec<f32>>()
+        });
+        for (idx, s) in new_s.into_iter().enumerate() {
+            x.s[idx / x.b][idx % x.b] = s;
         }
 
         if opts.trace_every > 0 && (k % opts.trace_every == 0 || k + 1 == opts.iters) {
-            trace.push((k, blast_loss(target, &x)));
+            trace.push((k, blast_loss_with(target, &x, par)));
         }
     }
 
-    let final_loss = blast_loss(target, &x);
+    let final_loss = blast_loss_with(target, &x, par);
     let rel_error = (2.0 * final_loss).sqrt() / target_norm.max(1e-30);
     FactorizeResult { blast: x, trace, rel_error }
 }
@@ -198,6 +222,24 @@ mod tests {
         );
         assert!(res.trace.len() >= 5);
         assert_eq!(res.trace[0].0, 0);
+    }
+
+    #[test]
+    fn parallel_sweep_bit_identical_to_sequential() {
+        let target = low_rank_target(48, 4, 95);
+        let seq = factorize_gd(
+            &target,
+            &GdOptions { b: 4, r: 8, iters: 15, seed: 6, parallel: false, ..Default::default() },
+        );
+        let par = factorize_gd(
+            &target,
+            &GdOptions { b: 4, r: 8, iters: 15, seed: 6, parallel: true, ..Default::default() },
+        );
+        assert_eq!(seq.rel_error, par.rel_error);
+        assert_eq!(seq.trace, par.trace);
+        for (a, b) in seq.blast.u.iter().zip(&par.blast.u) {
+            assert_eq!(a.data, b.data);
+        }
     }
 
     #[test]

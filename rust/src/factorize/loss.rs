@@ -7,31 +7,71 @@
 //! * `∇V_j = (Ū_j V_j^T − A_{*,j})^T Ū_j`                       (Eq. 11)
 //! * `∇s_{i,j} = ((U_i^T U_i) ⊙ (V_j^T V_j)) s_{i,j}
 //!               − diag(U_i^T A_{i,j} V_j)`                     (Eq. 15)
+//!
+//! Every O(p·n·r)-class product here dispatches through the kernel
+//! engine's **serial** dense path ([`KernelEngine::matmul_nt_serial`]):
+//! factor shapes repeat thousands of times per solve, so the engine's
+//! cache-blocked kernel pays off, while the serial (never
+//! thread-spawning, non-probing) dispatch guarantees no nested workers
+//! when the `b×b` grid itself runs across the thread pool — the grid
+//! (and the pipeline's layer queue above it) own all thread-level
+//! parallelism. Thanks to the kernels' shared bit-stability invariant
+//! (one sequential ascending-k sum per output element — the same order
+//! the tensor-level GEMMs use) this routing does not change results by
+//! a bit. The `A·B`-shaped products go through `matmul_serial`, which
+//! transposes the tall-thin right operand once per call — an O(1/r)
+//! overhead relative to the product, accepted to keep every dispatch on
+//! the one NT kernel form.
+//!
+//! [`KernelEngine::matmul_nt_serial`]: crate::kernels::KernelEngine::matmul_nt_serial
 
 use crate::blast::BlastMatrix;
-use crate::tensor::{matmul, matmul_nt, matmul_tn, Matrix};
+use crate::kernels::engine;
+use crate::tensor::{matmul_tn, Matrix};
+use crate::util::par;
 
 /// Eq. 4 evaluated over the full matrix: `½ ‖A − BLAST‖_F²`.
+///
+/// Computed block-by-block (the natural decomposition of Eq. 4), summed
+/// in block order with f64 accumulation.
 pub fn blast_loss(target: &Matrix, x: &BlastMatrix) -> f64 {
+    blast_loss_with(target, x, false)
+}
+
+/// [`blast_loss`] with the per-block terms optionally evaluated across
+/// the thread pool. The per-block arithmetic and the final (sequential,
+/// block-ordered) sum are identical in both modes, so parallel and
+/// single-thread evaluation return bit-identical values.
+pub fn blast_loss_with(target: &Matrix, x: &BlastMatrix, parallel: bool) -> f64 {
     assert_eq!(target.shape(), (x.m, x.n));
-    let rec = x.to_dense();
-    0.5 * target.sub(&rec).fro_norm_sq()
+    let b = x.b;
+    let terms = par::par_map_if(parallel, b * b, |idx| {
+        block_loss_term(target, x, idx / b, idx % b)
+    });
+    terms.iter().sum()
+}
+
+/// `½ ‖A_{i,j} − U_i diag(s_{i,j}) V_j^T‖_F²` — one block's share of Eq. 4.
+fn block_loss_term(target: &Matrix, x: &BlastMatrix, i: usize, j: usize) -> f64 {
+    let rec = engine().matmul_nt_serial(&x.u_scaled(i, j), &x.v[j]); // p×q
+    let a = target.block(i, j, x.b, x.b);
+    0.5 * a.sub(&rec).fro_norm_sq()
 }
 
 /// Gradient of Eq. 4 w.r.t. `U_i` (Eq. 10): `(U_i V̄_i^T − A_{i,*}) V̄_i`.
 pub fn grad_u(target: &Matrix, x: &BlastMatrix, i: usize) -> Matrix {
     let v_bar = x.v_bar(i); // n×r
     let a_row = target.block_row(i, x.b); // p×n
-    let resid = matmul_nt(&x.u[i], &v_bar).sub(&a_row); // p×n
-    matmul(&resid, &v_bar) // p×r
+    let resid = engine().matmul_nt_serial(&x.u[i], &v_bar).sub(&a_row); // p×n
+    engine().matmul_serial(&resid, &v_bar) // p×r
 }
 
 /// Gradient w.r.t. `V_j` (Eq. 11): `(Ū_j V_j^T − A_{*,j})^T Ū_j`.
 pub fn grad_v(target: &Matrix, x: &BlastMatrix, j: usize) -> Matrix {
     let u_bar = x.u_bar(j); // m×r
     let a_col = target.block_col(j, x.b); // m×q
-    let resid = matmul_nt(&u_bar, &x.v[j]).sub(&a_col); // m×q
-    matmul_tn(&resid, &u_bar) // q×r
+    let resid = engine().matmul_nt_serial(&u_bar, &x.v[j]).sub(&a_col); // m×q
+    engine().matmul_serial(&resid.transpose(), &u_bar) // q×r
 }
 
 /// Gradient w.r.t. `s_{i,j}` (Eq. 15):
@@ -55,7 +95,7 @@ pub fn gram_hadamard(u: &Matrix, v: &Matrix) -> Matrix {
 /// `diag(U^T A V)` computed without forming the full r×r product:
 /// entry `k` is `u_k^T A v_k`.
 pub fn diag_utav(u: &Matrix, a: &Matrix, v: &Matrix) -> Vec<f32> {
-    let av = matmul(a, v); // p×r
+    let av = engine().matmul_serial(a, v); // p×r
     let r = u.cols;
     let mut out = vec![0.0f32; r];
     for k in 0..r {
@@ -175,7 +215,7 @@ mod tests {
         let a = rng.gaussian_matrix(7, 5, 1.0);
         let v = rng.gaussian_matrix(5, 3, 1.0);
         let d = diag_utav(&u, &a, &v);
-        let full = matmul(&matmul_tn(&u, &a), &v);
+        let full = crate::tensor::matmul(&matmul_tn(&u, &a), &v);
         for k in 0..3 {
             assert!((d[k] - full.at(k, k)).abs() < 1e-4);
         }

@@ -11,14 +11,22 @@
 //!   against.
 //! * [`compressor`] — a uniform `Compressor` interface + registry used by
 //!   the experiment harnesses.
+//! * [`pipeline`] — the parallel, resumable whole-model compression
+//!   driver (layer work queue, JSONL progress checkpointing, manifest);
+//!   backs the `blast compress` CLI.
 
 pub mod loss;
 pub mod gd;
 pub mod precgd;
 pub mod baselines;
 pub mod compressor;
+pub mod pipeline;
 
 pub use compressor::{CompressedWeight, Compressor, Structure};
 pub use gd::{factorize_gd, GdOptions};
+pub use pipeline::{
+    compress_linears_parallel, CompressionPipeline, PipelineOptions, PipelineReport,
+    StructurePolicy,
+};
 pub use precgd::{factorize_precgd, PrecGdOptions};
-pub use loss::blast_loss;
+pub use loss::{blast_loss, blast_loss_with};

@@ -12,12 +12,30 @@
 //! residual, recovering the ideal Newton-like preconditioner near the
 //! optimum. This fixes the slow convergence of over-parameterized (`r >
 //! r*`) factorization (paper Fig. 3/9).
+//!
+//! ## Block-parallel execution
+//!
+//! Within each of the three sweeps the per-factor updates are mutually
+//! independent given the shared stage-2 coupling: a `U_i` update reads
+//! only `V`/`s` (fixed during the U sweep), a `V_j` update only the
+//! already-updated `U` and `s`, and an `s_{i,j}` update only `U_i`,
+//! `V_j`, and its own coupling vector. With [`PrecGdOptions::parallel`]
+//! each sweep therefore fans its `b` (or `b²`) updates across the
+//! scoped-thread pool with a barrier between sweeps, preserving the
+//! Algorithm-2 ordering. Because every update's arithmetic is unchanged
+//! and results are written back in index order, the parallel schedule is
+//! **bit-identical** to the sequential one (asserted by
+//! `tests/factorize_parity.rs`). The per-iteration loss (needed for the
+//! Eq. 19 regularizer) is likewise evaluated block-parallel, and each
+//! iteration's post-sweep loss is reused as the next iteration's `ℓ` so
+//! the objective is computed once, not twice, per iteration.
 
 use super::gd::FactorizeResult;
-use super::loss::{blast_loss, diag_utav, grad_s, grad_u, grad_v, gram_hadamard};
+use super::loss::{blast_loss_with, diag_utav, grad_s, grad_u, grad_v, gram_hadamard};
 use crate::blast::BlastMatrix;
 use crate::linalg::solve::{spd_solve_matrix, spd_solve_right};
 use crate::tensor::{matmul_tn, Matrix, Rng};
+use crate::util::par::par_map_if;
 
 /// Options for Algorithm 2.
 #[derive(Clone, Debug)]
@@ -35,6 +53,10 @@ pub struct PrecGdOptions {
     pub lr_decay: bool,
     pub seed: u64,
     pub trace_every: usize,
+    /// Fan each sweep's independent per-factor updates (and the
+    /// per-block loss terms) across the scoped-thread pool —
+    /// bit-identical to the sequential schedule (see module docs).
+    pub parallel: bool,
 }
 
 impl Default for PrecGdOptions {
@@ -48,6 +70,7 @@ impl Default for PrecGdOptions {
             lr_decay: true,
             seed: 0,
             trace_every: 1,
+            parallel: true,
         }
     }
 }
@@ -65,6 +88,11 @@ pub fn factorize_precgd(target: &Matrix, opts: &PrecGdOptions) -> FactorizeResul
     );
     let mut trace = Vec::new();
     let target_norm = target.fro_norm() as f64;
+    let par = opts.parallel;
+
+    // ℓ at the current iterate; refreshed after each iteration's sweeps
+    // so Eq. 19's δ and the trace share one evaluation per iteration.
+    let mut cur_loss = blast_loss_with(target, &x, par);
 
     for k in 0..opts.iters {
         let eta = if opts.lr_decay {
@@ -72,75 +100,85 @@ pub fn factorize_precgd(target: &Matrix, opts: &PrecGdOptions) -> FactorizeResul
         } else {
             1.0
         };
-        // δ = δ₀ √ℓ (Eq. 19), recomputed once per iteration.
-        let cur_loss = blast_loss(target, &x);
+        // δ = δ₀ √ℓ (Eq. 19), from the pre-sweep loss.
         let delta = (opts.delta0 as f64 * cur_loss.sqrt()).max(1e-10) as f32;
 
         // --- U updates (Algorithm 2 line 3). ---
-        for i in 0..x.b {
+        let new_u = par_map_if(par, x.b, |i| {
             let v_bar = x.v_bar(i); // n×r
             let mut gram = matmul_tn(&v_bar, &v_bar); // r×r
             for t in 0..x.r {
                 *gram.at_mut(t, t) += delta;
             }
             let g = grad_u(target, &x, i); // p×r
+            let mut u = x.u[i].clone();
             // U -= η · g · (gram)^{-1}  (right preconditioning)
             match spd_solve_right(&g, &gram) {
-                Ok(pg) => x.u[i].axpy(-eta, &pg),
-                Err(_) => x.u[i].axpy(-eta / (gram.max_abs().max(1e-12)), &g),
+                Ok(pg) => u.axpy(-eta, &pg),
+                Err(_) => u.axpy(-eta / (gram.max_abs().max(1e-12)), &g),
             }
-        }
+            u
+        });
+        x.u = new_u;
 
         // --- V updates (line 4), using updated U. ---
-        for j in 0..x.b {
+        let new_v = par_map_if(par, x.b, |j| {
             let u_bar = x.u_bar(j); // m×r
             let mut gram = matmul_tn(&u_bar, &u_bar);
             for t in 0..x.r {
                 *gram.at_mut(t, t) += delta;
             }
             let g = grad_v(target, &x, j); // q×r
+            let mut v = x.v[j].clone();
             match spd_solve_right(&g, &gram) {
-                Ok(pg) => x.v[j].axpy(-eta, &pg),
-                Err(_) => x.v[j].axpy(-eta / (gram.max_abs().max(1e-12)), &g),
+                Ok(pg) => v.axpy(-eta, &pg),
+                Err(_) => v.axpy(-eta / (gram.max_abs().max(1e-12)), &g),
             }
-        }
+            v
+        });
+        x.v = new_v;
 
         // --- s updates (line 5), using updated U, V. ---
-        for i in 0..x.b {
-            for j in 0..x.b {
-                let mut w = gram_hadamard(&x.u[i], &x.v[j]);
-                let g = {
-                    // W s − diag(U^T A V) with the *updated* factors.
-                    let ws = crate::tensor::gemv(&w, &x.s[i][j]);
-                    let rhs = diag_utav(&x.u[i], &target.block(i, j, x.b, x.b), &x.v[j]);
-                    ws.iter().zip(&rhs).map(|(a, b)| a - b).collect::<Vec<f32>>()
-                };
-                for t in 0..x.r {
-                    *w.at_mut(t, t) += delta;
-                }
-                let gm = Matrix::from_vec(x.r, 1, g);
-                match spd_solve_matrix(&w, &gm) {
-                    Ok(pg) => {
-                        for t in 0..x.r {
-                            x.s[i][j][t] -= eta * pg.at(t, 0);
-                        }
+        let new_s = par_map_if(par, x.b * x.b, |idx| {
+            let (i, j) = (idx / x.b, idx % x.b);
+            let mut w = gram_hadamard(&x.u[i], &x.v[j]);
+            let g = {
+                // W s − diag(U^T A V) with the *updated* factors.
+                let ws = crate::tensor::gemv(&w, &x.s[i][j]);
+                let rhs = diag_utav(&x.u[i], &target.block(i, j, x.b, x.b), &x.v[j]);
+                ws.iter().zip(&rhs).map(|(a, b)| a - b).collect::<Vec<f32>>()
+            };
+            for t in 0..x.r {
+                *w.at_mut(t, t) += delta;
+            }
+            let gm = Matrix::from_vec(x.r, 1, g);
+            let mut s = x.s[i][j].clone();
+            match spd_solve_matrix(&w, &gm) {
+                Ok(pg) => {
+                    for t in 0..x.r {
+                        s[t] -= eta * pg.at(t, 0);
                     }
-                    Err(_) => {
-                        let lip = w.max_abs().max(1e-12);
-                        for t in 0..x.r {
-                            x.s[i][j][t] -= eta / lip * gm.at(t, 0);
-                        }
+                }
+                Err(_) => {
+                    let lip = w.max_abs().max(1e-12);
+                    for t in 0..x.r {
+                        s[t] -= eta / lip * gm.at(t, 0);
                     }
                 }
             }
+            s
+        });
+        for (idx, s) in new_s.into_iter().enumerate() {
+            x.s[idx / x.b][idx % x.b] = s;
         }
 
+        cur_loss = blast_loss_with(target, &x, par);
         if opts.trace_every > 0 && (k % opts.trace_every == 0 || k + 1 == opts.iters) {
-            trace.push((k, blast_loss(target, &x)));
+            trace.push((k, cur_loss));
         }
     }
 
-    let final_loss = blast_loss(target, &x);
+    let final_loss = cur_loss;
     let rel_error = (2.0 * final_loss).sqrt() / target_norm.max(1e-30);
     FactorizeResult { blast: x, trace, rel_error }
 }

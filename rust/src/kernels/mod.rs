@@ -137,8 +137,20 @@ impl<'a> BlastView<'a> {
 
     fn validate(&self, x: &Matrix) {
         assert_eq!(x.cols, self.n, "blast_act input mismatch: x cols {} vs n {}", x.cols, self.n);
-        assert_eq!(self.u.len(), self.b, "blast view: {} left factors for b={}", self.u.len(), self.b);
-        assert_eq!(self.v.len(), self.b, "blast view: {} right factors for b={}", self.v.len(), self.b);
+        assert_eq!(
+            self.u.len(),
+            self.b,
+            "blast view: {} left factors for b={}",
+            self.u.len(),
+            self.b
+        );
+        assert_eq!(
+            self.v.len(),
+            self.b,
+            "blast view: {} right factors for b={}",
+            self.v.len(),
+            self.b
+        );
         assert_eq!(self.s.len(), self.b * self.b, "blast view: coupling table size");
     }
 }
@@ -288,6 +300,49 @@ impl KernelEngine {
         self.kernel_named(name).expect("built-in dense kernel").run(x, &op)
     }
 
+    /// `Y = X · Wᵀ` through the fixed serial dense kernel
+    /// (`dense_tiled`), guaranteed never to spawn worker threads. For
+    /// callers that already own the thread-level parallelism — the
+    /// factorization sweeps fan the `b×b` factor grid across the pool
+    /// and the compression pipeline fans whole layers — where a nested
+    /// `dense_parallel` dispatch would multiply live threads
+    /// (workers × pool) and oversubscribe the machine. Deliberately
+    /// ignores `BLAST_KERNEL` forcing: "no nested threads" is a
+    /// correctness-of-scheduling contract, not a tuning preference.
+    /// Bit-identical to every other dense kernel by the engine's
+    /// bit-stability invariant.
+    pub fn matmul_nt_serial(&self, x: &Matrix, w: &Matrix) -> Matrix {
+        assert_eq!(
+            x.cols,
+            w.cols,
+            "matmul_nt shape mismatch: {:?} vs {:?}",
+            x.shape(),
+            w.shape()
+        );
+        if x.rows == 0 {
+            return Matrix::zeros(0, w.rows);
+        }
+        let op = KernelOp::DenseNt { w };
+        self.kernel_named("dense_tiled").expect("built-in dense kernel").run(x, &op)
+    }
+
+    /// `C = A · B` via [`matmul_nt_serial`]: `B` is transposed once
+    /// (O(rows·cols), a ≤1/r fraction of the O(m·n·r) product for the
+    /// tall-thin factor shapes this serves) and dispatched as
+    /// `A · (Bᵀ)ᵀ`.
+    ///
+    /// [`matmul_nt_serial`]: KernelEngine::matmul_nt_serial
+    pub fn matmul_serial(&self, a: &Matrix, b: &Matrix) -> Matrix {
+        assert_eq!(
+            a.cols,
+            b.rows,
+            "matmul_serial shape mismatch: {:?} x {:?}",
+            a.shape(),
+            b.shape()
+        );
+        self.matmul_nt_serial(a, &b.transpose())
+    }
+
     /// BLAST Algorithm-1 activation product through the tuned kernel.
     pub fn blast_act(&self, x: &Matrix, a: &BlastMatrix) -> Matrix {
         self.dispatch(x, &KernelOp::Blast(BlastView::from_matrix(a)))
@@ -372,6 +427,20 @@ mod tests {
         let y_ref = crate::tensor::matmul_nt(&x, &a.to_dense());
         assert_eq!(y.shape(), (6, 12));
         assert!(y.sub(&y_ref).fro_norm() < 1e-3 * (1.0 + y_ref.fro_norm()));
+    }
+
+    #[test]
+    fn matmul_serial_matches_tensor_matmul() {
+        let mut rng = Rng::new(804);
+        let a = rng.gaussian_matrix(7, 12, 1.0);
+        let b = rng.gaussian_matrix(12, 9, 1.0);
+        let y = engine().matmul_serial(&a, &b);
+        let y_ref = crate::tensor::matmul(&a, &b);
+        assert_eq!(y.shape(), (7, 9));
+        assert!(y.sub(&y_ref).fro_norm() < 1e-4 * (1.0 + y_ref.fro_norm()));
+
+        let nt = engine().matmul_nt_serial(&a, &rng.gaussian_matrix(5, 12, 1.0));
+        assert_eq!(nt.shape(), (7, 5));
     }
 
     #[test]

@@ -9,8 +9,10 @@
 //!   implementations behind one trait, selected per shape by an
 //!   autotuner; every inference hot path dispatches through it.
 //! * [`blast`] — the BLAST matrix type and Algorithm 1 products.
-//! * [`factorize`] — Algorithm 2 (preconditioned GD factorization) and
-//!   the Low-Rank / Monarch / Block-Diagonal baseline compressors.
+//! * [`factorize`] — Algorithm 2 (preconditioned GD factorization, with
+//!   block-parallel sweeps through the kernel engine), the Low-Rank /
+//!   Monarch / Block-Diagonal baseline compressors, and the parallel,
+//!   resumable whole-model compression pipeline behind `blast compress`.
 //! * [`nn`] / [`train`] — structured-linear transformer stack with
 //!   Rust-native inference and training (manual backprop).
 //! * [`data`] / [`eval`] — synthetic workloads and the paper's metrics.

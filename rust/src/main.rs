@@ -2,9 +2,13 @@
 //!
 //! Subcommands:
 //!   factorize        factorize a synthetic matrix (GD vs PrecGD demo)
-//!   compress         compress a trained TinyLM and report quality
-//!   train            train a TinyLM from scratch with a chosen structure
+//!   compress         dense `.bmx` checkpoint → compressed checkpoint via
+//!                    the parallel, resumable pipeline (or train a small
+//!                    dense model first when no --in is given)
+//!   train            train a TinyLM from scratch (--save writes a
+//!                    `.bmx` checkpoint the pipeline can consume)
 //!   serve            start the coordinator and run a request load
+//!                    (--model serves a compressed checkpoint)
 //!   generate         one-off generation through a trained model
 //!   experiment <id>  run a paper table/figure harness (or `all`)
 //!   bench-runtime    Table-4 matvec sweep at Llama shapes
@@ -33,9 +37,12 @@ fn usage() -> &'static str {
      flags are --name value; examples:\n\
        blast experiment fig3 --scale 1\n\
        blast experiment all --scale 0\n\
-       blast train --structure blast --b 4 --r 8 --steps 200\n\
-       blast compress --ratio 0.5 --structure blast\n\
-       blast serve --requests 32 --batch 8 --slots 8\n\
+       blast train --structure blast --b 4 --r 8 --steps 200 --save dense.bmx\n\
+       blast compress --in dense.bmx --out blast.bmx --structure blast --ratio 0.5 \\\n\
+                      --ckpt-dir compress_ckpt --jobs 0   # resumes from ckpt-dir\n\
+       blast compress --ratio 0.5 --structure auto        # trains a demo model first\n\
+       blast serve --model blast.bmx --requests 32 --slots 8\n\
+       blast generate --model blast.bmx --tokens 20\n\
        blast bench-runtime --reps 5"
 }
 
@@ -59,7 +66,7 @@ fn run() -> Result<()> {
         println!("{}", usage());
         return Ok(());
     };
-    let args = Args::parse(&argv[1..], &["verbose", "no-prec"])?;
+    let args = Args::parse(&argv[1..], &["verbose", "no-prec", "fresh", "no-retrain"])?;
 
     match cmd.as_str() {
         "factorize" => cmd_factorize(&args),
@@ -122,43 +129,109 @@ fn cmd_factorize(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `blast compress`: dense checkpoint in → compressed checkpoint out,
+/// through the parallel, resumable pipeline. Without `--in`, a small
+/// dense TinyLM is trained on the synthetic corpus first (demo mode) and
+/// perplexity is reported before/after compression and re-training.
 fn cmd_compress(args: &Args) -> Result<()> {
-    use blast_repro::factorize::{Compressor, Structure};
+    use blast_repro::factorize::{
+        CompressionPipeline, Compressor, PipelineOptions, StructurePolicy,
+    };
+    use std::path::{Path, PathBuf};
+
     let ratio = args.get_f64("ratio", 0.5)?;
-    let steps = args.get_usize("steps", 200)?;
-    let retrain_steps = args.get_usize("retrain-steps", 100)?;
     let b = args.get_usize("b", 4)?;
-    let structure = match args.get_or("structure", "blast") {
-        "blast" => Structure::Blast { b },
-        "lowrank" => Structure::LowRank,
-        "monarch" => Structure::Monarch { b },
-        "blockdiag" => Structure::BlockDiag { b },
-        other => bail!("unknown structure `{other}`"),
+    let structure_tok = args.get_or("structure", "blast");
+    let policy = StructurePolicy::parse(structure_tok, b)
+        .ok_or_else(|| anyhow::anyhow!("unknown structure/policy `{structure_tok}`"))?;
+    let out = args.get_or("out", "blast_model.bmx").to_string();
+    let ckpt_dir = PathBuf::from(args.get_or("ckpt-dir", "compress_ckpt"));
+    if args.has("fresh") && ckpt_dir.exists() {
+        std::fs::remove_dir_all(&ckpt_dir)?;
+        println!("--fresh: cleared {}", ckpt_dir.display());
+    }
+    let compressor = Compressor {
+        blast_iters: args.get_usize("iters", 120)?,
+        seed: args.get_u64("seed", 0)?,
+        ..Default::default()
+    };
+    let pipeline = CompressionPipeline::new(
+        compressor,
+        PipelineOptions {
+            policy,
+            ratio,
+            jobs: args.get_usize("jobs", 0)?,
+            checkpoint_dir: Some(ckpt_dir.clone()),
+            max_layers: None,
+        },
+    );
+
+    let report = if let Some(input) = args.get("in") {
+        println!(
+            "compressing {} -> {} (policy {}, ratio {:.0}%, resumable via {})",
+            input,
+            out,
+            pipeline.opts.policy.name(),
+            ratio * 100.0,
+            ckpt_dir.display()
+        );
+        let (model, report) = pipeline.compress_checkpoint(Path::new(input), Path::new(&out))?;
+        // Serving handoff smoke: the written checkpoint must generate.
+        let sample = model.generate(&[1, 2, 3], 8);
+        println!("handoff check: compressed model generates {sample:?}");
+        report
+    } else {
+        let steps = args.get_usize("steps", 200)?;
+        let retrain_steps = args.get_usize("retrain-steps", 100)?;
+        println!("no --in given: training a dense TinyLM ({steps} steps) to compress...");
+        let corpus = SyntheticCorpus::generate(64, 20_000, 2048);
+        let mut rng = Rng::new(args.get_u64("seed", 0)?);
+        let mut lm = TinyLM::new(LmConfig::tiny(StructureKind::Dense), &mut rng);
+        train_lm(&mut lm, &corpus.train_dataset(), &LmTrainConfig { steps, ..Default::default() });
+        let ppl0 = blast_repro::eval::perplexity(&lm, &corpus.valid_dataset(), 32, 8);
+        println!("dense valid perplexity: {ppl0:.2}");
+
+        let report = pipeline.compress_model(&mut lm)?;
+        let ppl1 = blast_repro::eval::perplexity(&lm, &corpus.valid_dataset(), 32, 8);
+        println!("compressed perplexity: {ppl1:.2}");
+        if !args.has("no-retrain") {
+            blast_repro::train::retrain_lm(&mut lm, &corpus.train_dataset(), retrain_steps);
+            let ppl2 = blast_repro::eval::perplexity(&lm, &corpus.valid_dataset(), 32, 8);
+            println!("re-trained perplexity: {ppl2:.2}");
+        }
+        lm.save(&out)?;
+        report
     };
 
-    println!("training dense TinyLM ({steps} steps)...");
-    let corpus = SyntheticCorpus::generate(64, 20_000, 2048);
-    let mut rng = Rng::new(args.get_u64("seed", 0)?);
-    let mut lm = TinyLM::new(LmConfig::tiny(StructureKind::Dense), &mut rng);
-    train_lm(&mut lm, &corpus.train_dataset(), &LmTrainConfig { steps, ..Default::default() });
-    let ppl0 = blast_repro::eval::perplexity(&lm, &corpus.valid_dataset(), 32, 8);
-    println!("dense valid perplexity: {ppl0:.2}");
-
-    let comp = Compressor { blast_iters: args.get_usize("iters", 120)?, ..Default::default() };
-    let report = blast_repro::train::compress_lm(&mut lm, structure, ratio, &comp);
     println!(
-        "compressed {} layers: {} -> {} params ({:.1}% achieved), mean rel err {:.4}",
-        report.layers_compressed,
+        "{:<20} {:<24} {:>10} {:>12} {:>12} {:>8}",
+        "layer", "structure", "rel err", "params in", "params out", "resumed"
+    );
+    for l in &report.layers {
+        println!(
+            "{:<20} {:<24} {:>10.4} {:>12} {:>12} {:>8}",
+            l.name,
+            l.structure,
+            l.rel_error,
+            l.params_before,
+            l.params_after,
+            if l.resumed { "yes" } else { "" }
+        );
+    }
+    let resumed = report.layers.iter().filter(|l| l.resumed).count();
+    println!(
+        "total: {} -> {} model params ({:.1}% removed), mean rel err {:.4}, {} of {} layers resumed",
         report.params_before,
         report.params_after,
         report.achieved_ratio() * 100.0,
-        report.mean_rel_error
+        report.mean_rel_error(),
+        resumed,
+        report.layers.len()
     );
-    let ppl1 = blast_repro::eval::perplexity(&lm, &corpus.valid_dataset(), 32, 8);
-    println!("compressed perplexity: {ppl1:.2}");
-    blast_repro::train::retrain_lm(&mut lm, &corpus.train_dataset(), retrain_steps);
-    let ppl2 = blast_repro::eval::perplexity(&lm, &corpus.valid_dataset(), 32, 8);
-    println!("re-trained perplexity: {ppl2:.2}");
+    println!(
+        "wrote {out}; manifest at {}",
+        ckpt_dir.join("manifest.json").display()
+    );
     Ok(())
 }
 
@@ -181,6 +254,10 @@ fn cmd_train(args: &Args) -> Result<()> {
     );
     let ppl = blast_repro::eval::perplexity(&lm, &corpus.valid_dataset(), 32, 8);
     println!("final train loss {:.4}, valid perplexity {ppl:.2}", log.final_loss);
+    if let Some(path) = args.get("save") {
+        lm.save(path)?;
+        println!("checkpoint written to {path} (feed it to `blast compress --in {path}`)");
+    }
     Ok(())
 }
 
@@ -189,11 +266,30 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let max_batch = args.get_usize("batch", 8)?;
     let slots = args.get_usize("slots", 8)?;
     let new_tokens = args.get_usize("tokens", 16)?;
-    let mut rng = Rng::new(args.get_u64("seed", 0)?);
-    let dense = TinyLM::new(LmConfig::tiny(StructureKind::Dense), &mut rng);
-    let blast = TinyLM::new(LmConfig::tiny(StructureKind::Blast { b: 4, r: 8 }), &mut rng);
+    // With --model, serve a compressed `.bmx` checkpoint (the pipeline
+    // handoff); otherwise spin up the dense/BLAST demo pair.
+    let models = if let Some(path) = args.get("model") {
+        let lm = TinyLM::load(path)?;
+        println!(
+            "loaded {} ({} params, structure {})",
+            path,
+            lm.num_params(),
+            lm.cfg.structure.name()
+        );
+        vec![("model".to_string(), lm)]
+    } else {
+        let mut rng = Rng::new(args.get_u64("seed", 0)?);
+        vec![
+            ("dense".to_string(), TinyLM::new(LmConfig::tiny(StructureKind::Dense), &mut rng)),
+            (
+                "blast".to_string(),
+                TinyLM::new(LmConfig::tiny(StructureKind::Blast { b: 4, r: 8 }), &mut rng),
+            ),
+        ]
+    };
+    let vocab = models[0].1.cfg.vocab;
     let coord = Coordinator::new(
-        vec![("dense".into(), dense), ("blast".into(), blast)],
+        models,
         CoordinatorConfig {
             batcher: blast_repro::coordinator::BatcherConfig {
                 max_batch,
@@ -202,12 +298,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
             slots,
         },
     );
-    println!("serving variants: {:?}", coord.variants());
+    let variants = coord.variants();
+    println!("serving variants: {variants:?}");
     let t0 = std::time::Instant::now();
     let mut handles = Vec::new();
     for i in 0..n_requests {
-        let variant = if i % 2 == 0 { "dense" } else { "blast" };
-        let (_, rx) = coord.submit(variant, vec![1 + i % 8, 2, 3], new_tokens)?;
+        let variant = &variants[i % variants.len()];
+        let prompt = vec![1 + i % vocab.saturating_sub(2).max(1), 2, 3];
+        let (_, rx) = coord.submit(variant, prompt, new_tokens)?;
         handles.push(rx);
     }
     let mut tokens = 0usize;
@@ -226,10 +324,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
 }
 
 fn cmd_generate(args: &Args) -> Result<()> {
-    let structure = parse_structure(args)?;
     let tokens = args.get_usize("tokens", 20)?;
-    let mut rng = Rng::new(args.get_u64("seed", 0)?);
-    let lm = TinyLM::new(LmConfig::tiny(structure), &mut rng);
+    let lm = if let Some(path) = args.get("model") {
+        let lm = TinyLM::load(path)?;
+        println!("loaded {} (structure {})", path, lm.cfg.structure.name());
+        lm
+    } else {
+        let structure = parse_structure(args)?;
+        let mut rng = Rng::new(args.get_u64("seed", 0)?);
+        TinyLM::new(LmConfig::tiny(structure), &mut rng)
+    };
     let out = lm.generate(&[1, 2, 3], tokens);
     println!("{out:?}");
     Ok(())
@@ -257,6 +361,7 @@ fn cmd_info() -> Result<()> {
         Ok(engine) => println!("PJRT platform: {}", engine.platform()),
         Err(e) => println!("PJRT unavailable: {e}"),
     }
-    println!("experiments: {}", experiments::registry().iter().map(|e| e.id).collect::<Vec<_>>().join(", "));
+    let ids: Vec<&str> = experiments::registry().iter().map(|e| e.id).collect();
+    println!("experiments: {}", ids.join(", "));
     Ok(())
 }

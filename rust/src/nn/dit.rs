@@ -116,7 +116,9 @@ impl TinyDiT {
             class_embed: PTensor::new(rng.gaussian_matrix(cfg.n_classes, cfg.d_model, std)),
             adaln_proj: cfg.structure.make_linear(2 * cfg.d_model, cfg.d_model, std, rng),
             blocks: (0..cfg.n_layers)
-                .map(|_| Block::new_bidirectional(cfg.d_model, cfg.n_heads, cfg.d_ff, cfg.structure, rng))
+                .map(|_| {
+                    Block::new_bidirectional(cfg.d_model, cfg.n_heads, cfg.d_ff, cfg.structure, rng)
+                })
                 .collect(),
             ln_f: LayerNorm::new(cfg.d_model),
             out_proj: Linear::dense(cfg.patch_dim(), cfg.d_model, std, rng),
@@ -467,7 +469,8 @@ mod tests {
         let mut rng = Rng::new(423);
         let mut dit = TinyDiT::new(DitConfig::tiny(StructureKind::Dense), &mut rng);
         let ddpm = Ddpm::new(50);
-        let x0: Vec<f32> = (0..64).map(|i| if (i / 8 + i % 8) % 2 == 0 { 0.8 } else { -0.8 }).collect();
+        let x0: Vec<f32> =
+            (0..64).map(|i| if (i / 8 + i % 8) % 2 == 0 { 0.8 } else { -0.8 }).collect();
         let mut opt = crate::nn::param::AdamW::new(3e-3, 0.0);
         // Fixed (t, eps) pair → loss must drop.
         let eps: Vec<f32> = (0..64).map(|_| rng.gaussian()).collect();

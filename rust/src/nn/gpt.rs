@@ -5,13 +5,15 @@
 //! synthetic corpus. Token + learned positional embeddings, pre-LN
 //! blocks, weight-untied LM head.
 
-use super::attention::StructureKind;
+use super::attention::{Attention, StructureKind};
 use super::block::{Block, BlockCache};
 use super::kvcache::{KvCache, KvPool, LayerKv};
 use super::layernorm::{LayerNorm, LnCache};
 use super::linear::{Linear, LinearCache};
 use super::param::PTensor;
+use crate::tensor::io::TensorBundle;
 use crate::tensor::{Matrix, Rng};
+use anyhow::Result;
 
 /// Model configuration.
 #[derive(Clone, Copy, Debug)]
@@ -336,6 +338,119 @@ impl TinyLM {
         KvPool::new(self.cfg.n_layers, slots, self.cfg.max_seq, self.cfg.d_model)
     }
 
+    // ------------------------------------------------------------------
+    // Checkpointing (`.bmx` bundles — see tensor::io)
+    // ------------------------------------------------------------------
+
+    /// Serialize the whole model (embeddings, every block's structured
+    /// linears + LayerNorms, final LN, head) into one [`TensorBundle`].
+    /// Per-linear structure is encoded in the tensor names (see
+    /// [`Linear::write_into`]), so dense, compressed, and mixed-structure
+    /// models all round-trip through the same format — this is the file
+    /// the `compress` CLI writes and `serve`/`generate` load.
+    pub fn to_bundle(&self) -> TensorBundle {
+        let mut b = TensorBundle::new();
+        // n_heads is the one config field not recoverable from tensor
+        // shapes; stored as a 1×1 entry.
+        b.insert("lm.n_heads", Matrix::from_vec(1, 1, vec![self.cfg.n_heads as f32]));
+        b.insert("lm.tok_embed", self.tok_embed.v.clone());
+        b.insert("lm.pos_embed", self.pos_embed.v.clone());
+        for (i, blk) in self.blocks.iter().enumerate() {
+            let p = format!("lm.block{i}");
+            b.insert(format!("{p}.ln1.gamma"), blk.ln1.gamma.v.clone());
+            b.insert(format!("{p}.ln1.beta"), blk.ln1.beta.v.clone());
+            b.insert(format!("{p}.ln2.gamma"), blk.ln2.gamma.v.clone());
+            b.insert(format!("{p}.ln2.beta"), blk.ln2.beta.v.clone());
+            blk.attn.wqkv.write_into(&mut b, &format!("{p}.attn.wqkv"));
+            blk.attn.wo.write_into(&mut b, &format!("{p}.attn.wo"));
+            blk.fc1.write_into(&mut b, &format!("{p}.fc1"));
+            blk.fc2.write_into(&mut b, &format!("{p}.fc2"));
+        }
+        b.insert("lm.ln_f.gamma", self.ln_f.gamma.v.clone());
+        b.insert("lm.ln_f.beta", self.ln_f.beta.v.clone());
+        self.head.write_into(&mut b, "lm.head");
+        b
+    }
+
+    /// Inverse of [`to_bundle`].
+    ///
+    /// [`to_bundle`]: TinyLM::to_bundle
+    pub fn from_bundle(bundle: &TensorBundle) -> Result<TinyLM> {
+        let read_ln = |prefix: &str| -> Result<LayerNorm> {
+            let gamma = bundle.get(&format!("{prefix}.gamma"))?.clone();
+            let beta = bundle.get(&format!("{prefix}.beta"))?.clone();
+            let dim = gamma.cols;
+            anyhow::ensure!(beta.cols == dim, "LayerNorm shape mismatch at {prefix}");
+            Ok(LayerNorm {
+                gamma: PTensor::new_nodecay(gamma),
+                beta: PTensor::new_nodecay(beta),
+                eps: 1e-5,
+                dim,
+            })
+        };
+        let tok_embed = bundle.get("lm.tok_embed")?.clone();
+        let pos_embed = bundle.get("lm.pos_embed")?.clone();
+        let (vocab, d_model) = tok_embed.shape();
+        let max_seq = pos_embed.rows;
+        let n_heads = bundle.get("lm.n_heads")?.at(0, 0) as usize;
+        anyhow::ensure!(
+            n_heads > 0 && d_model % n_heads == 0,
+            "checkpoint n_heads {n_heads} does not divide d_model {d_model}"
+        );
+        let mut blocks = Vec::new();
+        while bundle.entries.contains_key(&format!("lm.block{}.ln1.gamma", blocks.len())) {
+            let p = format!("lm.block{}", blocks.len());
+            let wqkv = Linear::read_from(bundle, &format!("{p}.attn.wqkv"))?;
+            let wo = Linear::read_from(bundle, &format!("{p}.attn.wo"))?;
+            blocks.push(Block {
+                ln1: read_ln(&format!("{p}.ln1"))?,
+                attn: Attention {
+                    wqkv,
+                    wo,
+                    n_heads,
+                    d_model,
+                    head_dim: d_model / n_heads,
+                    causal: true,
+                },
+                ln2: read_ln(&format!("{p}.ln2"))?,
+                fc1: Linear::read_from(bundle, &format!("{p}.fc1"))?,
+                fc2: Linear::read_from(bundle, &format!("{p}.fc2"))?,
+                d_model,
+            });
+        }
+        anyhow::ensure!(!blocks.is_empty(), "checkpoint has no transformer blocks");
+        let d_ff = blocks[0].fc1.out_features;
+        // Nominal structure (mixed-structure checkpoints report block 0's
+        // QKV kind; only informational).
+        let structure = blocks[0].attn.wqkv.structure_kind();
+        Ok(TinyLM {
+            cfg: LmConfig {
+                vocab,
+                d_model,
+                n_layers: blocks.len(),
+                n_heads,
+                d_ff,
+                max_seq,
+                structure,
+            },
+            tok_embed: PTensor::new(tok_embed),
+            pos_embed: PTensor::new(pos_embed),
+            blocks,
+            ln_f: read_ln("lm.ln_f")?,
+            head: Linear::read_from(bundle, "lm.head")?,
+        })
+    }
+
+    /// Save to a `.bmx` checkpoint file.
+    pub fn save(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        self.to_bundle().save(path)
+    }
+
+    /// Load from a `.bmx` checkpoint file.
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<TinyLM> {
+        Self::from_bundle(&TensorBundle::load(path)?)
+    }
+
     pub fn params_mut(&mut self) -> Vec<&mut PTensor> {
         let mut out: Vec<&mut PTensor> = vec![&mut self.tok_embed, &mut self.pos_embed];
         for blk in &mut self.blocks {
@@ -521,6 +636,42 @@ mod tests {
             assert_eq!(logits.at(0, c), expected.at(0, c));
         }
         assert_eq!(pool.seq_len(s1), 2);
+    }
+
+    #[test]
+    fn checkpoint_round_trip_forward_identical() {
+        let mut rng = Rng::new(409);
+        for s in [
+            StructureKind::Dense,
+            StructureKind::Blast { b: 2, r: 4 },
+            StructureKind::LowRank { r: 4 },
+        ] {
+            let lm = TinyLM::new(LmConfig::tiny(s), &mut rng);
+            let back = TinyLM::from_bundle(&lm.to_bundle()).expect("round trip");
+            assert_eq!(back.cfg.vocab, lm.cfg.vocab);
+            assert_eq!(back.cfg.d_model, lm.cfg.d_model);
+            assert_eq!(back.cfg.n_layers, lm.cfg.n_layers);
+            assert_eq!(back.cfg.n_heads, lm.cfg.n_heads);
+            assert_eq!(back.cfg.max_seq, lm.cfg.max_seq);
+            assert_eq!(back.num_params(), lm.num_params());
+            let tokens: Vec<usize> = (0..9).map(|i| (i * 5 + 2) % 64).collect();
+            assert_eq!(lm.forward(&tokens).data, back.forward(&tokens).data, "{s:?}");
+            assert_eq!(lm.generate(&[1, 2, 3], 6), back.generate(&[1, 2, 3], 6), "{s:?}");
+        }
+    }
+
+    #[test]
+    fn checkpoint_file_round_trip() {
+        let dir = std::env::temp_dir().join("blast_gpt_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("model.bmx");
+        let mut rng = Rng::new(410);
+        let lm = TinyLM::new(LmConfig::tiny(StructureKind::Blast { b: 4, r: 4 }), &mut rng);
+        lm.save(&path).unwrap();
+        let back = TinyLM::load(&path).unwrap();
+        let tokens = vec![3usize, 7, 11];
+        assert_eq!(lm.forward(&tokens).data, back.forward(&tokens).data);
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -10,7 +10,9 @@
 use super::param::PTensor;
 use crate::blast::BlastMatrix;
 use crate::kernels::{engine, BlastView, KernelOp};
+use crate::tensor::io::TensorBundle;
 use crate::tensor::{matmul, matmul_nt, matmul_tn, Matrix, Rng};
+use anyhow::{bail, Result};
 
 /// The trainable weight representation of a linear layer.
 #[derive(Clone, Debug)]
@@ -523,6 +525,149 @@ impl Linear {
         }
     }
 
+    /// The [`StructureKind`] this layer's weight realizes (nominal
+    /// hyperparameters recovered from the stored shapes).
+    ///
+    /// [`StructureKind`]: super::attention::StructureKind
+    pub fn structure_kind(&self) -> super::attention::StructureKind {
+        use super::attention::StructureKind as K;
+        match &self.weight {
+            LinearWeight::Dense { .. } => K::Dense,
+            LinearWeight::LowRank { p, .. } => K::LowRank { r: p.v.cols },
+            LinearWeight::Blast { b, r, .. } => K::Blast { b: *b, r: *r },
+            LinearWeight::Monarch { b, t, .. } => K::Monarch { b: *b, t: *t },
+            LinearWeight::BlockDiag { b, pd, .. } => {
+                K::BlockDiag { b: *b, t: pd[0].v.cols }
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Checkpoint serialization
+    // ------------------------------------------------------------------
+
+    /// Serialize this layer's weight (and bias, if any) into `bundle`
+    /// under `prefix`. The structure kind is encoded in the tensor names
+    /// (`<prefix>.dense.w`, `<prefix>.blast.u.0`, …) so [`read_from`]
+    /// reconstructs the exact representation — the checkpoint format
+    /// shared by the compression pipeline and the serving handoff.
+    ///
+    /// [`read_from`]: Linear::read_from
+    pub fn write_into(&self, bundle: &mut TensorBundle, prefix: &str) {
+        match &self.weight {
+            LinearWeight::Dense { w } => bundle.insert(format!("{prefix}.dense.w"), w.v.clone()),
+            LinearWeight::LowRank { p, q } => {
+                bundle.insert(format!("{prefix}.lowrank.p"), p.v.clone());
+                bundle.insert(format!("{prefix}.lowrank.q"), q.v.clone());
+            }
+            LinearWeight::Blast { b, u, v, s, .. } => {
+                for i in 0..*b {
+                    bundle.insert(format!("{prefix}.blast.u.{i}"), u[i].v.clone());
+                    bundle.insert(format!("{prefix}.blast.v.{i}"), v[i].v.clone());
+                }
+                bundle.insert(format!("{prefix}.blast.s"), s.v.clone());
+            }
+            LinearWeight::Monarch { b, rb, l, .. } => {
+                for j in 0..*b {
+                    bundle.insert(format!("{prefix}.monarch.rb.{j}"), rb[j].v.clone());
+                }
+                for (k, lk) in l.iter().enumerate() {
+                    bundle.insert(format!("{prefix}.monarch.l.{k}"), lk.v.clone());
+                }
+            }
+            LinearWeight::BlockDiag { b, pd, qd, .. } => {
+                for i in 0..*b {
+                    bundle.insert(format!("{prefix}.blockdiag.p.{i}"), pd[i].v.clone());
+                    bundle.insert(format!("{prefix}.blockdiag.q.{i}"), qd[i].v.clone());
+                }
+            }
+        }
+        if let Some(bias) = &self.bias {
+            bundle.insert(format!("{prefix}.bias"), bias.v.clone());
+        }
+    }
+
+    /// Inverse of [`write_into`]: probe the kind-tagged tensor names
+    /// under `prefix` and rebuild the layer. Errors when no weight of any
+    /// known structure is found.
+    ///
+    /// [`write_into`]: Linear::write_into
+    pub fn read_from(bundle: &TensorBundle, prefix: &str) -> Result<Linear> {
+        // How many consecutive `<base>.<i>` entries exist.
+        let count = |base: &str| -> usize {
+            let mut n = 0;
+            while bundle.entries.contains_key(&format!("{base}.{n}")) {
+                n += 1;
+            }
+            n
+        };
+        let (weight, out, inp) = if let Ok(w) = bundle.get(&format!("{prefix}.dense.w")) {
+            let (out, inp) = w.shape();
+            (LinearWeight::Dense { w: PTensor::new(w.clone()) }, out, inp)
+        } else if let Ok(p) = bundle.get(&format!("{prefix}.lowrank.p")) {
+            let q = bundle.get(&format!("{prefix}.lowrank.q"))?;
+            let (out, inp) = (p.rows, q.rows);
+            (
+                LinearWeight::LowRank { p: PTensor::new(p.clone()), q: PTensor::new(q.clone()) },
+                out,
+                inp,
+            )
+        } else if let Ok(s) = bundle.get(&format!("{prefix}.blast.s")) {
+            let b = count(&format!("{prefix}.blast.u"));
+            anyhow::ensure!(b > 0 && s.rows == b * b, "blast factors malformed at {prefix}");
+            let r = s.cols;
+            let mut u = Vec::with_capacity(b);
+            let mut v = Vec::with_capacity(b);
+            for i in 0..b {
+                u.push(PTensor::new(bundle.get(&format!("{prefix}.blast.u.{i}"))?.clone()));
+                v.push(PTensor::new(bundle.get(&format!("{prefix}.blast.v.{i}"))?.clone()));
+            }
+            let out = u[0].v.rows * b;
+            let inp = v[0].v.rows * b;
+            (
+                LinearWeight::Blast { b, r, out, inp, u, v, s: PTensor::new(s.clone()) },
+                out,
+                inp,
+            )
+        } else if count(&format!("{prefix}.monarch.rb")) > 0 {
+            let b = count(&format!("{prefix}.monarch.rb"));
+            anyhow::ensure!(
+                count(&format!("{prefix}.monarch.l")) == b * b,
+                "monarch couplings malformed at {prefix}"
+            );
+            let mut rb = Vec::with_capacity(b);
+            let mut l = Vec::with_capacity(b * b);
+            for j in 0..b {
+                rb.push(PTensor::new(bundle.get(&format!("{prefix}.monarch.rb.{j}"))?.clone()));
+            }
+            for k in 0..b * b {
+                l.push(PTensor::new(bundle.get(&format!("{prefix}.monarch.l.{k}"))?.clone()));
+            }
+            let t = rb[0].v.rows;
+            let out = l[0].v.rows * b;
+            let inp = rb[0].v.cols * b;
+            (LinearWeight::Monarch { b, t, out, inp, rb, l }, out, inp)
+        } else if count(&format!("{prefix}.blockdiag.p")) > 0 {
+            let b = count(&format!("{prefix}.blockdiag.p"));
+            let mut pd = Vec::with_capacity(b);
+            let mut qd = Vec::with_capacity(b);
+            for i in 0..b {
+                pd.push(PTensor::new(bundle.get(&format!("{prefix}.blockdiag.p.{i}"))?.clone()));
+                qd.push(PTensor::new(bundle.get(&format!("{prefix}.blockdiag.q.{i}"))?.clone()));
+            }
+            let out = pd[0].v.rows * b;
+            let inp = qd[0].v.rows * b;
+            (LinearWeight::BlockDiag { b, out, inp, pd, qd }, out, inp)
+        } else {
+            bail!("no weight of any known structure under `{prefix}`");
+        };
+        let bias = bundle
+            .entries
+            .get(&format!("{prefix}.bias"))
+            .map(|m| PTensor::new_nodecay(m.clone()));
+        Ok(Linear { weight, bias, out_features: out, in_features: inp })
+    }
+
     /// Collect all trainable parameters (for the optimizer).
     pub fn params_mut(&mut self) -> Vec<&mut PTensor> {
         let mut out: Vec<&mut PTensor> = Vec::new();
@@ -700,6 +845,34 @@ mod tests {
         assert_eq!(dense.flops_per_token(), 64 * 64);
         assert_eq!(blast.flops_per_token(), (64 + 64 + 16) * 8);
         assert!(blast.flops_per_token() < dense.flops_per_token() / 3);
+    }
+
+    #[test]
+    fn checkpoint_round_trip_all_structures() {
+        let mut rng = Rng::new(313);
+        let layers = [
+            Linear::dense(6, 8, 0.3, &mut rng),
+            Linear::low_rank(6, 8, 3, 0.3, &mut rng),
+            Linear::blast(6, 8, 2, 3, 0.3, &mut rng),
+            Linear::monarch(6, 8, 2, 2, 0.3, &mut rng),
+            Linear::block_diag(6, 8, 2, 2, 0.3, &mut rng),
+        ];
+        for (k, layer) in layers.into_iter().enumerate() {
+            let mut bundle = TensorBundle::new();
+            layer.write_into(&mut bundle, "l");
+            let back = Linear::read_from(&bundle, "l").unwrap();
+            assert_eq!(back.out_features, 6, "case {k}");
+            assert_eq!(back.in_features, 8, "case {k}");
+            assert_eq!(back.num_params(), layer.num_params(), "case {k}");
+            let x = rng.gaussian_matrix(3, 8, 1.0);
+            assert_eq!(layer.forward(&x).data, back.forward(&x).data, "case {k}");
+        }
+    }
+
+    #[test]
+    fn read_from_missing_prefix_errors() {
+        let bundle = TensorBundle::new();
+        assert!(Linear::read_from(&bundle, "nope").is_err());
     }
 
     #[test]

@@ -81,7 +81,9 @@ impl TinyViT {
             cls_token: PTensor::new(rng.gaussian_matrix(1, cfg.d_model, std)),
             pos_embed: PTensor::new(rng.gaussian_matrix(seq, cfg.d_model, std)),
             blocks: (0..cfg.n_layers)
-                .map(|_| Block::new_bidirectional(cfg.d_model, cfg.n_heads, cfg.d_ff, cfg.structure, rng))
+                .map(|_| {
+                    Block::new_bidirectional(cfg.d_model, cfg.n_heads, cfg.d_ff, cfg.structure, rng)
+                })
                 .collect(),
             ln_f: LayerNorm::new(cfg.d_model),
             head: Linear::dense(cfg.n_classes, cfg.d_model, std, rng),

@@ -31,6 +31,53 @@ impl CompressReport {
     }
 }
 
+/// Convert a factorization-side [`CompressedWeight`] into the trainable
+/// [`LinearWeight`] representation for an `out×inp` layer. Shared by
+/// [`compress_linear`] and the parallel compression pipeline
+/// ([`crate::factorize::pipeline`]), which checkpoints compressed factors
+/// to disk between the two.
+///
+/// [`CompressedWeight`]: crate::factorize::CompressedWeight
+pub fn linear_weight_from_compressed(
+    compressed: crate::factorize::CompressedWeight,
+    out: usize,
+    inp: usize,
+) -> LinearWeight {
+    match compressed {
+        crate::factorize::CompressedWeight::Dense(m) => LinearWeight::Dense { w: PTensor::new(m) },
+        crate::factorize::CompressedWeight::LowRank(w) => LinearWeight::LowRank {
+            p: PTensor::new(w.p),
+            q: PTensor::new(w.q),
+        },
+        crate::factorize::CompressedWeight::Blast(bm) => {
+            let tmp = Linear::from_blast_matrix(&bm);
+            tmp.weight
+        }
+        crate::factorize::CompressedWeight::Monarch(w) => {
+            let b = w.b;
+            LinearWeight::Monarch {
+                b,
+                t: w.t,
+                out,
+                inp,
+                rb: w.r_bases.into_iter().map(PTensor::new).collect(),
+                l: w.l.into_iter().flatten().map(PTensor::new).collect(),
+            }
+        }
+        crate::factorize::CompressedWeight::BlockDiag(w) => {
+            let b = w.b;
+            let (pd, qd): (Vec<Matrix>, Vec<Matrix>) = w.blocks.into_iter().unzip();
+            LinearWeight::BlockDiag {
+                b,
+                out,
+                inp,
+                pd: pd.into_iter().map(PTensor::new).collect(),
+                qd: qd.into_iter().map(PTensor::new).collect(),
+            }
+        }
+    }
+}
+
 /// Replace one dense linear's weight with a compressed structure (bias is
 /// preserved). Returns the relative reconstruction error, or None if the
 /// budget is infeasible for this layer.
@@ -43,47 +90,16 @@ pub fn compress_linear(
     let dense = layer.dense_weight();
     let compressed = compressor.compress(&dense, structure, ratio)?;
     let rel = compressed.rel_error(&dense);
-    let new_weight = match compressed {
-        crate::factorize::CompressedWeight::Dense(m) => LinearWeight::Dense { w: PTensor::new(m) },
-        crate::factorize::CompressedWeight::LowRank(w) => LinearWeight::LowRank {
-            p: PTensor::new(w.p),
-            q: PTensor::new(w.q),
-        },
-        crate::factorize::CompressedWeight::Blast(bm) => {
-            let tmp = Linear::from_blast_matrix(&bm);
-            tmp.weight
-        }
-        crate::factorize::CompressedWeight::Monarch(w) => {
-            let b = w.b;
-            let (out, inp) = (dense.rows, dense.cols);
-            LinearWeight::Monarch {
-                b,
-                t: w.t,
-                out,
-                inp,
-                rb: w.r_bases.into_iter().map(PTensor::new).collect(),
-                l: w.l.into_iter().flatten().map(PTensor::new).collect(),
-            }
-        }
-        crate::factorize::CompressedWeight::BlockDiag(w) => {
-            let b = w.b;
-            let (out, inp) = (dense.rows, dense.cols);
-            let (pd, qd): (Vec<Matrix>, Vec<Matrix>) = w.blocks.into_iter().unzip();
-            LinearWeight::BlockDiag {
-                b,
-                out,
-                inp,
-                pd: pd.into_iter().map(PTensor::new).collect(),
-                qd: qd.into_iter().map(PTensor::new).collect(),
-            }
-        }
-    };
-    layer.weight = new_weight;
+    layer.weight = linear_weight_from_compressed(compressed, dense.rows, dense.cols);
     Some(rel)
 }
 
 /// Compress every transformer linear of a trained LM in place (embeddings
 /// and head stay dense, as in the paper). Returns the report.
+///
+/// Layers run through the parallel work queue of
+/// [`crate::factorize::pipeline`] with deterministic per-layer seeds, so
+/// multi-layer compression scales with cores while staying reproducible.
 pub fn compress_lm(
     model: &mut TinyLM,
     structure: Structure,
@@ -91,16 +107,16 @@ pub fn compress_lm(
     compressor: &Compressor,
 ) -> CompressReport {
     let params_before = model.num_params();
-    let mut layers = 0usize;
-    let mut err_sum = 0.0f64;
-    for blk in &mut model.blocks {
-        for layer in [&mut blk.attn.wqkv, &mut blk.attn.wo, &mut blk.fc1, &mut blk.fc2] {
-            if let Some(rel) = compress_linear(layer, compressor, structure, ratio) {
-                layers += 1;
-                err_sum += rel;
-            }
-        }
+    let mut named: Vec<(String, &mut Linear)> = Vec::new();
+    for (i, blk) in model.blocks.iter_mut().enumerate() {
+        named.push((format!("block{i}.attn.wqkv"), &mut blk.attn.wqkv));
+        named.push((format!("block{i}.attn.wo"), &mut blk.attn.wo));
+        named.push((format!("block{i}.fc1"), &mut blk.fc1));
+        named.push((format!("block{i}.fc2"), &mut blk.fc2));
     }
+    let errs = crate::factorize::compress_linears_parallel(named, compressor, structure, ratio);
+    let layers = errs.iter().flatten().count();
+    let err_sum: f64 = errs.iter().flatten().sum();
     let params_after = model.num_params();
     CompressReport {
         structure: structure.name(),

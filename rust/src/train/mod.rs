@@ -6,6 +6,8 @@ pub mod lm_trainer;
 pub mod vit_trainer;
 pub mod compress_model;
 
-pub use compress_model::{compress_lm, retrain_lm, CompressReport};
+pub use compress_model::{
+    compress_lm, linear_weight_from_compressed, retrain_lm, CompressReport,
+};
 pub use lm_trainer::{train_lm, LmTrainConfig, TrainLog};
 pub use vit_trainer::{train_vit, VitTrainConfig};

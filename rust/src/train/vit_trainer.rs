@@ -64,7 +64,12 @@ pub fn train_vit(model: &mut TinyViT, data: &TextureDataset, cfg: &VitTrainConfi
 }
 
 /// Held-out accuracy over freshly sampled images.
-pub fn eval_vit_accuracy(model: &TinyViT, data: &TextureDataset, per_class: usize, seed: u64) -> f64 {
+pub fn eval_vit_accuracy(
+    model: &TinyViT,
+    data: &TextureDataset,
+    per_class: usize,
+    seed: u64,
+) -> f64 {
     let mut rng = Rng::new(seed ^ 0xE7A1);
     let mut correct = 0usize;
     let mut total = 0usize;

@@ -92,6 +92,23 @@ where
     out.into_iter().map(|o| o.expect("par_map slot unfilled")).collect()
 }
 
+/// [`par_map`] when `parallel` is true, plain sequential map otherwise.
+///
+/// The factorization sweeps use this so one code path serves both the
+/// grid-parallel and the single-thread reference execution: per-index
+/// arithmetic is identical and results are collected in index order, so
+/// both modes produce bit-identical outputs.
+pub fn par_map_if<T: Send, F>(parallel: bool, n: usize, f: F) -> Vec<T>
+where
+    F: Fn(usize) -> T + Sync,
+{
+    if parallel {
+        par_map(n, f)
+    } else {
+        (0..n).map(f).collect()
+    }
+}
+
 /// Parallel for over indices `0..n` (no results).
 pub fn par_for<F>(n: usize, f: F)
 where
@@ -167,5 +184,12 @@ mod tests {
     #[test]
     fn num_threads_positive() {
         assert!(num_threads() >= 1);
+    }
+
+    #[test]
+    fn par_map_if_modes_agree() {
+        let seq = par_map_if(false, 37, |i| i * 3 + 1);
+        let par = par_map_if(true, 37, |i| i * 3 + 1);
+        assert_eq!(seq, par);
     }
 }

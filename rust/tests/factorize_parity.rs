@@ -1,0 +1,297 @@
+//! Property tests for the parallel compression pipeline:
+//!
+//! * block-parallel PrecGD/GD is **bit-identical** to the single-thread
+//!   schedule across random shapes and block counts (the tentpole's
+//!   correctness invariant — stronger than the tolerance bound the
+//!   acceptance criteria ask for);
+//! * resuming a killed pipeline run from its checkpoint directory
+//!   produces the same manifest (and the same compressed model) as an
+//!   uninterrupted run;
+//! * the Low-Rank / Monarch / Block-Diagonal baselines hit their
+//!   closed-form optima on synthetic rank-deficient targets;
+//! * the `compress` path runs end to end: dense checkpoint → compressed
+//!   checkpoint → loads into `TinyLM` → serves through the coordinator.
+
+use blast_repro::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig};
+use blast_repro::factorize::{
+    factorize_gd, factorize_precgd, CompressionPipeline, Compressor, GdOptions,
+    PipelineOptions, PrecGdOptions, Structure, StructurePolicy,
+};
+use blast_repro::nn::attention::StructureKind;
+use blast_repro::nn::gpt::{LmConfig, TinyLM};
+use blast_repro::tensor::{matmul, matmul_nt, Matrix, Rng};
+use std::path::PathBuf;
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("blast_factorize_parity_{}_{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+// ---------------------------------------------------------------------
+// Parallel vs single-thread parity
+// ---------------------------------------------------------------------
+
+#[test]
+fn precgd_parallel_bit_identical_across_shapes() {
+    // Random shapes and block counts, rectangular included.
+    for (case, &(m, n, b, r)) in
+        [(48usize, 48usize, 2usize, 4usize), (64, 32, 4, 6), (64, 64, 8, 8), (40, 60, 4, 5)]
+            .iter()
+            .enumerate()
+    {
+        let mut rng = Rng::new(1000 + case as u64);
+        let target = rng.gaussian_matrix(m, n, 1.0);
+        let run = |parallel: bool| {
+            factorize_precgd(
+                &target,
+                &PrecGdOptions {
+                    b,
+                    r,
+                    iters: 12,
+                    seed: 77,
+                    parallel,
+                    ..Default::default()
+                },
+            )
+        };
+        let seq = run(false);
+        let par = run(true);
+        assert_eq!(seq.rel_error, par.rel_error, "case {case}: rel_error");
+        assert_eq!(seq.trace, par.trace, "case {case}: loss trajectory");
+        for (a, c) in seq.blast.u.iter().zip(&par.blast.u) {
+            assert_eq!(a.data, c.data, "case {case}: U factors");
+        }
+        for (a, c) in seq.blast.v.iter().zip(&par.blast.v) {
+            assert_eq!(a.data, c.data, "case {case}: V factors");
+        }
+        assert_eq!(seq.blast.s, par.blast.s, "case {case}: couplings");
+    }
+}
+
+#[test]
+fn gd_parallel_bit_identical() {
+    let mut rng = Rng::new(1100);
+    let target = rng.gaussian_matrix(48, 48, 1.0);
+    let run = |parallel: bool| {
+        factorize_gd(
+            &target,
+            &GdOptions { b: 4, r: 6, iters: 10, seed: 5, parallel, ..Default::default() },
+        )
+    };
+    let seq = run(false);
+    let par = run(true);
+    assert_eq!(seq.rel_error, par.rel_error);
+    assert_eq!(seq.trace, par.trace);
+}
+
+// ---------------------------------------------------------------------
+// Resume-from-checkpoint
+// ---------------------------------------------------------------------
+
+fn quick_pipeline(dir: Option<PathBuf>, max_layers: Option<usize>) -> CompressionPipeline {
+    CompressionPipeline::new(
+        Compressor { blast_iters: 8, ..Default::default() },
+        PipelineOptions {
+            policy: StructurePolicy::Fixed(Structure::Blast { b: 4 }),
+            ratio: 0.5,
+            jobs: 0,
+            checkpoint_dir: dir,
+            max_layers,
+        },
+    )
+}
+
+#[test]
+fn resume_produces_same_manifest_as_uninterrupted_run() {
+    let dir_full = temp_dir("full");
+    let dir_resume = temp_dir("resume");
+    let mut rng = Rng::new(1200);
+    let template = TinyLM::new(LmConfig::tiny(StructureKind::Dense), &mut rng);
+
+    // Uninterrupted reference run.
+    let mut lm_full = template.clone();
+    let full = quick_pipeline(Some(dir_full.clone()), None)
+        .compress_model(&mut lm_full)
+        .unwrap();
+    assert!(full.completed);
+
+    // "Killed" run: stops after 3 layers...
+    let mut scratch = template.clone();
+    let partial = quick_pipeline(Some(dir_resume.clone()), Some(3))
+        .compress_model(&mut scratch)
+        .unwrap();
+    assert!(!partial.completed);
+    assert_eq!(partial.layers.len(), 3);
+    assert!(dir_resume.join("progress.jsonl").exists());
+    assert!(!dir_resume.join("manifest.json").exists(), "no manifest for a partial run");
+
+    // ...then restarted against the same checkpoint directory.
+    let mut lm_resumed = template.clone();
+    let resumed = quick_pipeline(Some(dir_resume.clone()), None)
+        .compress_model(&mut lm_resumed)
+        .unwrap();
+    assert!(resumed.completed);
+    assert_eq!(resumed.layers.iter().filter(|l| l.resumed).count(), 3);
+    assert!(dir_resume.join("manifest.json").exists());
+
+    // Same manifest content (everything except wall-clock seconds).
+    assert_eq!(full.layers.len(), resumed.layers.len());
+    for (a, b) in full.layers.iter().zip(&resumed.layers) {
+        assert_eq!(a.name, b.name);
+        assert_eq!(a.structure, b.structure);
+        assert_eq!(a.rel_error, b.rel_error, "{}", a.name);
+        assert_eq!(a.params_before, b.params_before);
+        assert_eq!(a.params_after, b.params_after);
+    }
+    assert_eq!(full.params_after, resumed.params_after);
+
+    // And the resumed model itself is identical to the uninterrupted one.
+    let tokens: Vec<usize> = (0..8).map(|i| (i * 11 + 1) % 64).collect();
+    assert_eq!(lm_full.forward(&tokens).data, lm_resumed.forward(&tokens).data);
+
+    let _ = std::fs::remove_dir_all(&dir_full);
+    let _ = std::fs::remove_dir_all(&dir_resume);
+}
+
+#[test]
+fn checkpoint_dir_from_different_run_is_rejected() {
+    let dir = temp_dir("stale");
+    let mut rng = Rng::new(1250);
+    let template = TinyLM::new(LmConfig::tiny(StructureKind::Dense), &mut rng);
+
+    let mut lm = template.clone();
+    quick_pipeline(Some(dir.clone()), None).compress_model(&mut lm).unwrap();
+
+    // Same directory, different ratio → stale factors must NOT be
+    // silently resumed.
+    let other = CompressionPipeline::new(
+        Compressor { blast_iters: 8, ..Default::default() },
+        PipelineOptions {
+            policy: StructurePolicy::Fixed(Structure::Blast { b: 4 }),
+            ratio: 0.25,
+            jobs: 0,
+            checkpoint_dir: Some(dir.clone()),
+            max_layers: None,
+        },
+    );
+    let mut lm2 = template.clone();
+    let err = other.compress_model(&mut lm2).unwrap_err();
+    assert!(format!("{err:#}").contains("fingerprint mismatch"), "{err:#}");
+
+    // A different source model is rejected too.
+    let mut rng2 = Rng::new(4321);
+    let mut other_model = TinyLM::new(LmConfig::tiny(StructureKind::Dense), &mut rng2);
+    let err = quick_pipeline(Some(dir.clone()), None)
+        .compress_model(&mut other_model)
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("fingerprint mismatch"), "{err:#}");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------
+// Baselines hit closed-form optima on rank-deficient targets
+// ---------------------------------------------------------------------
+
+#[test]
+fn lowrank_recovers_exact_rank_deficient_target() {
+    let mut rng = Rng::new(1300);
+    let u = rng.gaussian_matrix(64, 4, 1.0);
+    let v = rng.gaussian_matrix(64, 4, 1.0);
+    let target = matmul_nt(&u, &v);
+    // ratio 0.5 on 64x64 gives rank budget 16 >= true rank 4: the
+    // truncated SVD is the closed-form optimum — error ~ 0.
+    let w = Compressor::default().compress(&target, Structure::LowRank, 0.5).unwrap();
+    assert!(w.rel_error(&target) < 1e-2, "rel err {}", w.rel_error(&target));
+}
+
+#[test]
+fn blockdiag_recovers_block_diagonal_target() {
+    let mut rng = Rng::new(1301);
+    let b = 4;
+    let (p, rank) = (8, 2);
+    let mut target = Matrix::zeros(b * p, b * p);
+    for i in 0..b {
+        let u = rng.gaussian_matrix(p, rank, 1.0);
+        let v = rng.gaussian_matrix(p, rank, 1.0);
+        target.set_submatrix(i * p, i * p, &matmul_nt(&u, &v));
+    }
+    // Budget at ratio 0.5 allows per-block rank 8 >= true rank 2.
+    let w = Compressor::default()
+        .compress(&target, Structure::BlockDiag { b }, 0.5)
+        .unwrap();
+    assert!(w.rel_error(&target) < 5e-2, "rel err {}", w.rel_error(&target));
+}
+
+#[test]
+fn monarch_recovers_shared_basis_target() {
+    let mut rng = Rng::new(1302);
+    let b = 4;
+    let (p, q, t_true) = (8, 8, 2);
+    // Every block column shares a t_true-dimensional right basis — the
+    // exact structure Monarch's per-column SVD recovers.
+    let mut target = Matrix::zeros(b * p, b * q);
+    for j in 0..b {
+        let basis = rng.gaussian_matrix(t_true, q, 1.0);
+        for i in 0..b {
+            let l = rng.gaussian_matrix(p, t_true, 1.0);
+            target.set_submatrix(i * p, j * q, &matmul(&l, &basis));
+        }
+    }
+    // ratio 0.5 gives per-block rank t = 2 = t_true.
+    let w = Compressor::default()
+        .compress(&target, Structure::Monarch { b }, 0.5)
+        .unwrap();
+    assert!(w.rel_error(&target) < 5e-2, "rel err {}", w.rel_error(&target));
+}
+
+// ---------------------------------------------------------------------
+// End-to-end: checkpoint → pipeline → checkpoint → coordinator
+// ---------------------------------------------------------------------
+
+#[test]
+fn compressed_checkpoint_serves_through_coordinator() {
+    let dir = temp_dir("e2e");
+    let dense_path = dir.join("dense.bmx");
+    let out_path = dir.join("blast.bmx");
+
+    let mut rng = Rng::new(1400);
+    let dense = TinyLM::new(LmConfig::tiny(StructureKind::Dense), &mut rng);
+    dense.save(&dense_path).unwrap();
+
+    let pipe = CompressionPipeline::new(
+        Compressor { blast_iters: 8, ..Default::default() },
+        PipelineOptions {
+            policy: StructurePolicy::Fixed(Structure::Blast { b: 4 }),
+            ratio: 0.5,
+            jobs: 0,
+            checkpoint_dir: Some(dir.join("ckpt")),
+            max_layers: None,
+        },
+    );
+    let (model, report) = pipe.compress_checkpoint(&dense_path, &out_path).unwrap();
+    assert!(report.completed);
+    assert!(report.achieved_ratio() > 0.05, "ratio {}", report.achieved_ratio());
+    assert!(dir.join("ckpt").join("manifest.json").exists());
+
+    // The written checkpoint reloads bit-identically...
+    let loaded = TinyLM::load(&out_path).unwrap();
+    let prompt = vec![1usize, 2, 3];
+    let reference = model.generate(&prompt, 6);
+    assert_eq!(loaded.generate(&prompt, 6), reference);
+
+    // ...and serves through the continuous-batching coordinator with the
+    // same greedy decode.
+    let coord = Coordinator::new(
+        vec![("blast".to_string(), loaded)],
+        CoordinatorConfig { batcher: BatcherConfig::default(), slots: 2 },
+    );
+    let resp = coord.generate("blast", prompt.clone(), 6).unwrap();
+    assert_eq!(resp.tokens, reference);
+    coord.shutdown();
+
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -3,7 +3,9 @@
 //! the Rust-native model semantics. Skips (with a note) when artifacts
 //! have not been built.
 
-use blast_repro::runtime::{executor::load_params_ordered, executor::TensorValue, Manifest, PjrtEngine};
+use blast_repro::runtime::{
+    executor::load_params_ordered, executor::TensorValue, Manifest, PjrtEngine,
+};
 
 fn manifest() -> Option<Manifest> {
     if !std::path::Path::new("artifacts/manifest.json").exists() {

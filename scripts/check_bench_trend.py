@@ -1,0 +1,75 @@
+#!/usr/bin/env python3
+"""Bench-trend gate: compare the current BENCH_*.json files against the
+previous CI run's artifacts and fail on a >20% throughput regression.
+
+Usage: check_bench_trend.py [--prev DIR] [--curr DIR]
+
+* Missing previous artifacts (first run, expired retention) just set the
+  baseline — never a failure.
+* Under BLAST_BENCH_FAST=1 (the CI smoke setting: tiny workloads on noisy
+  shared runners) regressions are reported but warn-only, matching the
+  in-bench gate policy.
+"""
+
+import json
+import os
+import sys
+
+# (file, path-into-json, human label) — higher is better for all of them.
+METRICS = [
+    ("BENCH_serving.json", ("continuous", "tokens_per_sec"), "serving tokens/sec"),
+    ("BENCH_factorize.json", ("precgd", "iters_per_sec"), "factorize PrecGD iters/sec"),
+]
+THRESHOLD = 0.20
+
+
+def load_metric(path, keys):
+    try:
+        with open(path) as f:
+            node = json.load(f)
+        for k in keys:
+            node = node[k]
+        return float(node)
+    except (OSError, KeyError, TypeError, ValueError):
+        return None
+
+
+def arg_value(flag, default):
+    if flag in sys.argv:
+        return sys.argv[sys.argv.index(flag) + 1]
+    return default
+
+
+def main():
+    prev_dir = arg_value("--prev", "prev-bench")
+    curr_dir = arg_value("--curr", ".")
+    warn_only = os.environ.get("BLAST_BENCH_FAST") == "1"
+    failures = []
+    for fname, keys, label in METRICS:
+        curr = load_metric(os.path.join(curr_dir, fname), keys)
+        prev = load_metric(os.path.join(prev_dir, fname), keys)
+        if curr is None:
+            print(f"[trend] {label}: no current measurement in {fname} — skipped")
+            continue
+        if prev is None:
+            print(f"[trend] {label}: no previous artifact — baseline set at {curr:.2f}")
+            continue
+        change = (curr - prev) / prev if prev > 0 else 0.0
+        print(f"[trend] {label}: prev {prev:.2f} -> curr {curr:.2f} ({change:+.1%})")
+        if change < -THRESHOLD:
+            failures.append(
+                f"{label} regressed {-change:.1%} (threshold {THRESHOLD:.0%})"
+            )
+    if failures:
+        for f in failures:
+            print(f"[trend] REGRESSION: {f}")
+        if warn_only:
+            print("[trend] BLAST_BENCH_FAST=1 — warn-only, job passes")
+            return 0
+        return 1
+    print("[trend] OK — no regression beyond threshold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
