@@ -1,33 +1,101 @@
-//! Bench: BLAST kernel engine vs the naive reference, plus Algorithm 1
-//! vs dense — the kernel-level basis of every FLOPs column in the paper
-//! and of Table 4's speedups.
+//! Bench: the kernel engine — packed SIMD dense GEMM vs the PR-3 scalar
+//! loop, BLAST kernels vs the naive reference, and Algorithm 1 vs dense
+//! — the kernel-level basis of every FLOPs column in the paper and of
+//! Table 4's speedups.
 //!
 //! Sections:
-//!   1. Kernel shoot-out on the acceptance shape (1024×1024 BLAST,
+//!   1. Dense GEMM shoot-out at prefill/decode shapes: the pre-SIMD
+//!      scalar tiled loop (kept as a baseline) vs the packed
+//!      microkernel (single-thread and autotuned). Acceptance gate:
+//!      autotuned ≥ 2× scalar at the prefill shape on ≥8-lane FMA
+//!      hardware (warn-only under `BLAST_BENCH_FAST` or without AVX2).
+//!   2. Kernel shoot-out on the acceptance shape (1024×1024 BLAST,
 //!      b=8, r=32): naive reference vs every registered kernel vs the
 //!      autotuned engine dispatch, at decode (batch 1) and prefill
-//!      (batch 8) shapes.
-//!   2. Algorithm 1 vs dense matvec across sizes at 50% compression.
-//!   3. Activation-batch matmul at the transformer layer shape.
+//!      (batch 8) shapes, with the ≥2× autotuned-vs-naive gate.
+//!   3. Algorithm 1 vs dense matvec across sizes at 50% compression.
+//!   4. Activation-batch matmul at the transformer layer shape.
 //!
-//! Set `BLAST_AUTOTUNE_CACHE=<path>` to regenerate a persisted plan
-//! file: the run prints where the plan table was written.
+//! Always writes the machine-readable `BENCH_kernels.json` (repo root;
+//! override with `BLAST_KERNELS_BENCH_OUT`) so `scripts/
+//! check_bench_trend.py` can track the trajectory. Set
+//! `BLAST_AUTOTUNE_CACHE=<path>` to also persist the plan table.
 
 use blast_repro::blast::{blast_rank_for_ratio, BlastMatrix};
-use blast_repro::kernels::{engine, BlastView, KernelOp, PlanKey};
+use blast_repro::kernels::{engine, micro, tiled, BlastView, KernelOp, PlanKey};
 use blast_repro::tensor::{gemv, Matrix, Rng};
 use blast_repro::util::bench::BenchSuite;
+use blast_repro::util::json::{obj, Json};
 
 fn main() {
-    let mut suite = BenchSuite::new("blast_matmul — kernel engine + Algorithm 1 vs dense");
+    let fast_mode = std::env::var("BLAST_BENCH_FAST").is_ok_and(|v| v == "1");
+    let avx2 = micro::avx2_detected();
+    let mut suite = BenchSuite::new("blast_matmul — packed SIMD engine + Algorithm 1 vs dense");
     let mut rng = Rng::new(0);
+    println!(
+        "simd: mode={:?} avx2_detected={avx2} (BLAST_SIMD overrides; contract is bit-identical)",
+        micro::simd_mode()
+    );
 
     // ------------------------------------------------------------------
-    // 1. Kernel shoot-out on the acceptance shape: 1024×1024, b=8, r=32.
+    // 1. Dense GEMM: scalar baseline vs packed microkernel.
+    // ------------------------------------------------------------------
+    let (dk, dn) = (1024usize, 1024usize);
+    let dense_w = rng.gaussian_matrix(dn, dk, 0.02);
+    let mut dense_gflops = (0.0f64, 0.0f64); // (scalar, autotuned) at prefill
+    let mut dense_speedup = 0.0f64;
+    for &batch in &[1usize, 8] {
+        let x = rng.gaussian_matrix(batch, dk, 1.0);
+        let flops = (2 * batch * dk * dn) as f64;
+        let scalar_name = format!("dense {dk}x{dn} batch={batch} [scalar PR-3 baseline]");
+        suite.bench_throughput(&scalar_name, flops, "flop", || {
+            let mut out = vec![0.0f32; batch * dn];
+            tiled::dense_nt_rows_scalar_baseline(&x, &dense_w, 0, batch, &mut out);
+            std::hint::black_box(out);
+        });
+        let packed_name = format!("dense {dk}x{dn} batch={batch} [packed 1-thread]");
+        {
+            let kernel = engine().kernel_named("dense_tiled").expect("registered");
+            suite.bench_throughput(&packed_name, flops, "flop", || {
+                std::hint::black_box(kernel.run(&x, &KernelOp::DenseNt { w: &dense_w }));
+            });
+            suite.report_speedup(&scalar_name, &packed_name);
+        }
+        let tuned_name = format!("dense {dk}x{dn} batch={batch} [autotuned]");
+        suite.bench_throughput(&tuned_name, flops, "flop", || {
+            std::hint::black_box(engine().matmul_nt(&x, &dense_w));
+        });
+        suite.report_speedup(&scalar_name, &tuned_name);
+
+        let scalar_t = suite.mean_of(&scalar_name).unwrap().as_secs_f64();
+        let tuned_t = suite.mean_of(&tuned_name).unwrap().as_secs_f64();
+        if batch == 8 {
+            dense_gflops = (flops / scalar_t / 1e9, flops / tuned_t / 1e9);
+            dense_speedup = scalar_t / tuned_t;
+            println!(
+                "    acceptance: autotuned dense GEMM is {dense_speedup:.2}x the scalar \
+                 baseline at batch={batch}"
+            );
+            // Gate: ≥2× on ≥8-lane FMA hardware; warn-only in fast mode
+            // or when the machine has no AVX2 to vectorize onto.
+            if dense_speedup < 2.0 {
+                let msg = format!(
+                    "autotuned dense GEMM must be >= 2x the PR-3 scalar tiled loop at \
+                     {dk}x{dn} batch={batch}, got {dense_speedup:.2}x"
+                );
+                assert!(fast_mode || !avx2, "{msg}");
+                println!("    WARNING (not fatal: fast-mode/no-AVX2): {msg}");
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // 2. BLAST kernel shoot-out on the acceptance shape.
     // ------------------------------------------------------------------
     let (n, b, r) = (1024usize, 8usize, 32usize);
     let a = BlastMatrix::random_init(n, n, b, r, 0.02, &mut rng);
     let flops = a.matvec_flops() as f64;
+    let mut blast_speedups = Vec::new();
     for &batch in &[1usize, 8] {
         let x = rng.gaussian_matrix(batch, n, 1.0);
         let naive_name = format!("blast {n}x{n} b={b} r={r} batch={batch} [naive]");
@@ -71,8 +139,8 @@ fn main() {
         let naive_t = suite.mean_of(&naive_name).unwrap().as_secs_f64();
         let tuned_t = suite.mean_of(&tuned_name).unwrap().as_secs_f64();
         let speedup = naive_t / tuned_t;
+        blast_speedups.push((batch, speedup));
         println!("    acceptance: autotuned is {speedup:.2}x naive at batch={batch}");
-        let fast_mode = std::env::var("BLAST_BENCH_FAST").is_ok_and(|v| v == "1");
         if speedup < 2.0 {
             let msg = format!(
                 "autotuned kernel must be >= 2x naive on {n}x{n} b={b} r={r} batch={batch}, got {speedup:.2}x"
@@ -90,7 +158,7 @@ fn main() {
     assert!(err < 1e-3, "bench-path numerics drifted: {err}");
 
     // ------------------------------------------------------------------
-    // 2. Matvec sweep over sizes at 50% compression.
+    // 3. Matvec sweep over sizes at 50% compression.
     // ------------------------------------------------------------------
     for &size in &[512usize, 1024, 2048, 4096] {
         let dense = rng.gaussian_matrix(size, size, 0.02);
@@ -112,7 +180,7 @@ fn main() {
     }
 
     // ------------------------------------------------------------------
-    // 3. Activation-batch matmul (the transformer layer shape).
+    // 4. Activation-batch matmul (the transformer layer shape).
     // ------------------------------------------------------------------
     let size = 1024;
     let batch = 8;
@@ -133,6 +201,54 @@ fn main() {
         "dense matmul_act 8x1024 [engine]",
         "blast matmul_act 8x1024 b=16 [engine]",
     );
+
+    // ------------------------------------------------------------------
+    // Machine-readable output for the bench-trend gate.
+    // ------------------------------------------------------------------
+    let out_path = std::env::var("BLAST_KERNELS_BENCH_OUT")
+        .unwrap_or_else(|_| concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_kernels.json").into());
+    let blast_json: Vec<Json> = blast_speedups
+        .iter()
+        .map(|(bsz, s)| {
+            obj(vec![("batch", Json::from(*bsz)), ("speedup_vs_naive", Json::from(*s))])
+        })
+        .collect();
+    let root = obj(vec![
+        ("bench", Json::from("blast_matmul")),
+        ("provenance", Json::from("bench run")),
+        (
+            "simd",
+            obj(vec![
+                ("mode", Json::from(format!("{:?}", micro::simd_mode()))),
+                ("avx2_detected", Json::from(avx2)),
+            ]),
+        ),
+        (
+            "dense",
+            obj(vec![
+                ("batch", Json::from(8usize)),
+                ("k", Json::from(dk)),
+                ("n", Json::from(dn)),
+                ("scalar_gflops", Json::from(dense_gflops.0)),
+                ("autotuned_gflops", Json::from(dense_gflops.1)),
+                ("speedup_vs_scalar", Json::from(dense_speedup)),
+            ]),
+        ),
+        ("blast", Json::Arr(blast_json)),
+        (
+            "gate",
+            obj(vec![
+                ("min_dense_speedup", Json::from(2.0)),
+                ("min_blast_speedup", Json::from(2.0)),
+                ("enforced", Json::from(!fast_mode && avx2)),
+                ("fast_mode", Json::from(fast_mode)),
+            ]),
+        ),
+    ]);
+    match std::fs::write(&out_path, root.to_string_pretty()) {
+        Ok(()) => println!("wrote {out_path}"),
+        Err(e) => println!("could not write {out_path}: {e}"),
+    }
 
     if let Ok(path) = std::env::var("BLAST_AUTOTUNE_CACHE") {
         // Every tuning decision is persisted as it is made; report where.

@@ -81,6 +81,18 @@ impl BlastMatrix {
         assert_eq!(x.cols, self.n, "matmul_act shape mismatch: x cols {} vs n {}", x.cols, self.n);
         crate::kernels::engine().blast_act(x, self)
     }
+
+    /// [`matmul_act`] into a caller-owned output: the allocation-free
+    /// variant for steady-state loops (the kernel draws its stage
+    /// scratch from thread-local pools and `out`'s buffer is reused
+    /// whenever its capacity suffices). Bit-identical to
+    /// [`matmul_act`].
+    ///
+    /// [`matmul_act`]: BlastMatrix::matmul_act
+    pub fn matmul_act_into(&self, x: &Matrix, out: &mut Matrix) {
+        assert_eq!(x.cols, self.n, "matmul_act shape mismatch: x cols {} vs n {}", x.cols, self.n);
+        crate::kernels::engine().blast_act_into(x, self, out);
+    }
 }
 
 #[cfg(test)]
@@ -125,6 +137,19 @@ mod tests {
         let y_ref = crate::tensor::matmul_nt(&x, &dense);
         assert!(y.sub(&y_ref).fro_norm() < 1e-3 * (1.0 + y_ref.fro_norm()));
         assert_eq!(y.shape(), (7, 10));
+    }
+
+    #[test]
+    fn matmul_act_into_bit_matches_allocating_variant() {
+        let mut rng = Rng::new(65);
+        let a = BlastMatrix::random_init(12, 8, 4, 3, 1.0, &mut rng);
+        let x = rng.gaussian_matrix(5, 8, 1.0);
+        let y = a.matmul_act(&x);
+        let mut out = Matrix::zeros(5, 12);
+        let ptr = out.data.as_ptr();
+        a.matmul_act_into(&x, &mut out);
+        assert_eq!(out.data, y.data);
+        assert_eq!(out.data.as_ptr(), ptr, "adequately-sized buffer must be reused");
     }
 
     #[test]

@@ -37,6 +37,7 @@ use super::request::{
 use crate::nn::gpt::{argmax, TinyLM};
 use crate::nn::kvcache::KvPool;
 use crate::tensor::Matrix;
+use crate::util::arena::ScratchArena;
 use anyhow::{bail, Result};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -298,11 +299,20 @@ fn worker_loop(
     let mut pool = model.new_kv_pool(slots);
     let mut batcher = DynamicBatcher::new(rx, cfg.batcher);
     let mut active: Vec<ActiveSeq> = Vec::new();
-    // Logits of the previous decode step: row `i` belongs to
-    // `active[i]` (retired sequences were filtered out of `active`
-    // before the step ran, and admissions only append, so the
-    // prefix-index correspondence is stable across iterations).
-    let mut step_logits: Option<Matrix> = None;
+    // Steady-state decode scratch: one arena per worker plus reusable
+    // step buffers, so an iteration with no admissions or retirements
+    // performs zero heap allocations (the prefill on admission is the
+    // one allowed allocator — it is not steady state).
+    let mut arena = ScratchArena::new();
+    let mut step_toks: Vec<usize> = Vec::with_capacity(slots);
+    let mut step_slots: Vec<usize> = Vec::with_capacity(slots);
+    let mut next_active: Vec<ActiveSeq> = Vec::with_capacity(slots);
+    // Logits of the previous decode step (valid when `have_logits`):
+    // row `i` belongs to `active[i]` (retired sequences were filtered
+    // out of `active` before the step ran, and admissions only append,
+    // so the prefix-index correspondence is stable across iterations).
+    let mut step_logits = Matrix::zeros(0, model.cfg.vocab);
+    let mut have_logits = false;
     loop {
         // ---- 1. Admission: fill free slots from the queue. ----
         let mut admitted = 0usize;
@@ -322,16 +332,15 @@ fn worker_loop(
         }
 
         // ---- 2. Sample one token per sequence; stream + retire. ----
-        let prev_live = step_logits.as_ref().map_or(0, |m| m.rows);
-        let mut step_toks: Vec<usize> = Vec::with_capacity(active.len());
-        let mut step_slots: Vec<usize> = Vec::with_capacity(active.len());
-        let mut still = Vec::with_capacity(active.len());
+        let prev_live = if have_logits { step_logits.rows } else { 0 };
+        step_toks.clear();
+        step_slots.clear();
         for (idx, mut seq) in active.drain(..).enumerate() {
             let sampled = if seq.generated >= seq.req.max_new_tokens {
                 None // max_new_tokens exhausted (or zero).
             } else if idx < prev_live {
                 // Continuing sequence: its row of the last decode step.
-                step_logits.as_ref().map(|m| argmax(m.row(idx)))
+                Some(argmax(step_logits.row(idx)))
             } else {
                 // Freshly admitted: the prefill logits (None = empty
                 // prompt, nothing to sample from).
@@ -375,19 +384,28 @@ fn worker_loop(
                 seq.logits = None;
                 step_toks.push(next);
                 step_slots.push(seq.slot);
-                still.push(seq);
+                next_active.push(seq);
             }
         }
-        active = still;
+        std::mem::swap(&mut active, &mut next_active); // next_active is now empty
 
         // ---- 3. One batched decode step over every live slot. ----
-        // Row `i` of the result is `active[i]`'s next-token logits.
-        step_logits = if step_toks.is_empty() {
-            None
+        // Row `i` of the result is `active[i]`'s next-token logits,
+        // written into the worker's reusable logits buffer through the
+        // arena-backed zero-allocation path.
+        if step_toks.is_empty() {
+            have_logits = false;
         } else {
             metrics.record_batch(step_toks.len());
-            Some(model.decode_step_batch(&step_toks, &mut pool, &step_slots))
-        };
+            model.decode_step_batch_into(
+                &step_toks,
+                &mut pool,
+                &step_slots,
+                &mut arena,
+                &mut step_logits,
+            );
+            have_logits = true;
+        }
     }
 }
 

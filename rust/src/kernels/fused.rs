@@ -1,29 +1,52 @@
-//! Fused BLAST Algorithm-1 kernel.
+//! Fused BLAST Algorithm-1 kernel on the packed SIMD microkernel.
 //!
-//! The baseline (`naive` kernel / the pre-engine `matmul_act`) walks the
-//! product block by block: it copies each input block column out with
-//! `submatrix`, allocates a fresh `z_j` per block, a fresh `w` per output
-//! block row, and a fresh `y_i` per stage-3 product. This kernel fuses
-//! the three stages over contiguous buffers instead:
+//! Algorithm 1 per token:
 //!
-//! * **Stage 1 batched across blocks** — one pass over the activation
-//!   row accumulates `z = [z_1 | … | z_b]` (a single `b·r` buffer) via
-//!   contiguous axpy over `V_j` rows; no block copies, no per-block
-//!   allocation.
+//! * **Stage 1 (microkernel)** — `z_j = V_jᵀ x_j` runs as packed
+//!   `nt_row` products over the column-packed `V_j` panels (`V_jᵀ` rows
+//!   become contiguous panel streams; packed once per factor and cached
+//!   process-wide by `pack::PackCache`).
 //! * **Stage 2** — the `b²` couplings scale-and-add `z` bands into a
-//!   single `w = [w_1 | … | w_b]` buffer.
-//! * **Stage 3 batched across blocks** — one sweep writes every output
-//!   block `y_i = U_i w_i` as contiguous dot products over `U_i` rows.
+//!   single `w = [w_1 | … | w_b]` buffer, ascending `j` (short: `b·r`
+//!   multiply-adds per output block row).
+//! * **Stage 3 (microkernel)** — `y_i = U_i w_i` as packed `nt_row`
+//!   products over the row-packed `U_i` panels.
 //!
-//! Total scratch per worker: `2·b·r` floats, reused across the whole
-//! batch. The row-parallel variant (`blast_fused_par`) hands disjoint
-//! output-row chunks to `util::par` workers, each with its own scratch;
-//! the sequential variant wins at decode shapes (batch 1) where thread
-//! fan-out costs more than the product itself. The autotuner picks.
+//! Stages 1 and 3 follow the engine-wide fixed-lane accumulation
+//! contract (see `micro`), so this kernel is bit-identical to the naive
+//! reference for every op, batch size, and `BLAST_SIMD` mode.
+//!
+//! Scratch (`2·b·r` floats) lives in a thread-local pool reused across
+//! calls — a steady-state decode dispatch performs **zero heap
+//! allocations** through `run_into`. The row-parallel variant
+//! (`blast_fused_par`) hands disjoint output-row chunks to `util::par`
+//! workers, each with its own thread-local scratch; the sequential
+//! variant wins at decode shapes (batch 1) where thread fan-out costs
+//! more than the product itself. The autotuner picks.
 
+use super::micro::{self, SimdMode};
+use super::pack::{self, PackedPanels};
 use super::{BlastView, KernelOp, MatmulKernel};
 use crate::tensor::Matrix;
 use crate::util::par;
+use std::cell::RefCell;
+use std::sync::Arc;
+
+/// Per-thread fused-kernel scratch: the (z, w) stage buffers plus the
+/// packed-panel handles for the call's `V`/`U` factors, all reused
+/// across calls (capacities persist, so a warm call never allocates;
+/// clearing the panel vecs only drops `Arc` refcounts).
+#[derive(Default)]
+struct FusedScratch {
+    z: Vec<f32>,
+    w: Vec<f32>,
+    vpanels: Vec<Arc<PackedPanels>>,
+    upanels: Vec<Arc<PackedPanels>>,
+}
+
+thread_local! {
+    static SCRATCH: RefCell<FusedScratch> = RefCell::new(FusedScratch::default());
+}
 
 /// Fused Algorithm-1 kernel (sequential or row-parallel).
 pub struct FusedBlastKernel {
@@ -59,88 +82,107 @@ impl MatmulKernel for FusedBlastKernel {
         let KernelOp::Blast(a) = op else {
             unreachable!("FusedBlastKernel only supports Blast (checked via supports)")
         };
+        let mut y = Matrix::zeros(x.rows, a.m);
+        self.run_into_buf(x, a, &mut y.data);
+        y
+    }
+
+    fn run_into(&self, x: &Matrix, op: &KernelOp<'_>, out: &mut Matrix) {
+        let KernelOp::Blast(a) = op else {
+            unreachable!("FusedBlastKernel only supports Blast (checked via supports)")
+        };
+        out.reset(x.rows, a.m);
+        self.run_into_buf(x, a, &mut out.data);
+    }
+}
+
+impl FusedBlastKernel {
+    fn run_into_buf(&self, x: &Matrix, a: &BlastView<'_>, out: &mut [f32]) {
         let batch = x.rows;
-        let mut y = Matrix::zeros(batch, a.m);
         if batch == 0 {
-            return y;
+            return;
         }
+        let mode = micro::simd_mode();
         if self.row_parallel && batch > 1 {
             let chunk_rows = batch.div_ceil(par::num_threads()).max(1);
-            par::par_chunks_mut(&mut y.data, chunk_rows * a.m, |ci, chunk| {
+            par::par_chunks_mut(out, chunk_rows * a.m, |ci, chunk| {
                 let rows = chunk.len() / a.m;
-                fused_rows(x, a, ci * chunk_rows, rows, chunk);
+                fused_rows(mode, x, a, ci * chunk_rows, rows, chunk);
             });
         } else {
-            fused_rows(x, a, 0, batch, &mut y.data);
+            fused_rows(mode, x, a, 0, batch, out);
         }
-        y
     }
 }
 
 /// Compute output rows `t0 .. t0+rows` into `out` (`rows × a.m`,
-/// row-major) with one `2·b·r` scratch reused across rows.
-fn fused_rows(x: &Matrix, a: &BlastView<'_>, t0: usize, rows: usize, out: &mut [f32]) {
+/// row-major) with the thread-local `2·b·r` scratch reused across rows.
+fn fused_rows(
+    mode: SimdMode,
+    x: &Matrix,
+    a: &BlastView<'_>,
+    t0: usize,
+    rows: usize,
+    out: &mut [f32],
+) {
     let (p, q, b, r) = (a.p(), a.q(), a.b, a.r);
     let br = b * r;
     debug_assert_eq!(out.len(), rows * a.m);
-    let mut z = vec![0.0f32; br];
-    let mut w = vec![0.0f32; br];
-    for tt in 0..rows {
-        let xrow = x.row(t0 + tt);
-
-        // Stage 1 (batched): z[j·r ..] += x_{j·q+c} · V_j[c, :].
-        z.fill(0.0);
+    SCRATCH.with(|cell| {
+        let mut scratch = cell.borrow_mut();
+        let FusedScratch { z, w, vpanels, upanels } = &mut *scratch;
+        z.clear();
+        z.resize(br, 0.0);
+        w.clear();
+        w.resize(br, 0.0);
+        // Fetch every factor's packed panels once per call (one cache
+        // lookup + fingerprint each), not once per token row.
+        let cache = pack::pack_cache();
+        vpanels.clear();
+        upanels.clear();
         for j in 0..b {
-            let zj = &mut z[j * r..(j + 1) * r];
-            let vj = a.v[j];
-            let xj = &xrow[j * q..(j + 1) * q];
-            for (c, &xv) in xj.iter().enumerate() {
-                if xv == 0.0 {
-                    continue;
-                }
-                let vrow = vj.row(c);
-                // Contiguous axpy of width r — auto-vectorizes.
-                for k in 0..r {
-                    zj[k] += xv * vrow[k];
-                }
-            }
+            vpanels.push(cache.cols(a.v(j)));
         }
-
-        // Stage 2: w[i·r ..] = Σ_j s_{i,j} ⊙ z_j.
-        w.fill(0.0);
         for i in 0..b {
-            let wi = &mut w[i * r..(i + 1) * r];
+            upanels.push(cache.rows(a.u(i)));
+        }
+        for tt in 0..rows {
+            let xrow = x.row(t0 + tt);
+
+            // Stage 1 (microkernel): z_j = V_jᵀ x_j over packed panels.
             for j in 0..b {
-                let s = a.s_row(i, j);
-                let zj = &z[j * r..(j + 1) * r];
-                for k in 0..r {
-                    wi[k] += s[k] * zj[k];
-                }
+                let xj = &xrow[j * q..(j + 1) * q];
+                micro::nt_row_packed(mode, xj, &vpanels[j], &mut z[j * r..(j + 1) * r]);
             }
-        }
 
-        // Stage 3 (batched): y[i·p + c] = U_i[c, :] · w_i.
-        let yrow = &mut out[tt * a.m..(tt + 1) * a.m];
-        for i in 0..b {
-            let ui = a.u[i];
-            let wi = &w[i * r..(i + 1) * r];
-            let yi = &mut yrow[i * p..(i + 1) * p];
-            for (c, ycell) in yi.iter_mut().enumerate() {
-                let urow = ui.row(c);
-                let mut acc = 0.0f32;
-                for k in 0..r {
-                    acc += urow[k] * wi[k];
+            // Stage 2: w[i·r ..] = Σ_j s_{i,j} ⊙ z_j (ascending j).
+            w.iter_mut().for_each(|v| *v = 0.0);
+            for i in 0..b {
+                let wi = &mut w[i * r..(i + 1) * r];
+                for j in 0..b {
+                    let s = a.s_row(i, j);
+                    let zj = &z[j * r..(j + 1) * r];
+                    for k in 0..r {
+                        wi[k] += s[k] * zj[k];
+                    }
                 }
-                *ycell = acc;
+            }
+
+            // Stage 3 (microkernel): y_i = U_i w_i over packed panels.
+            let yrow = &mut out[tt * a.m..(tt + 1) * a.m];
+            for i in 0..b {
+                let wi = &w[i * r..(i + 1) * r];
+                micro::nt_row_packed(mode, wi, &upanels[i], &mut yrow[i * p..(i + 1) * p]);
             }
         }
-    }
+    });
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::blast::BlastMatrix;
+    use crate::kernels::NaiveKernel;
     use crate::tensor::Rng;
 
     fn check(a: &BlastMatrix, x: &Matrix, kernel: &FusedBlastKernel) {
@@ -157,6 +199,20 @@ mod tests {
             x.rows,
             kernel.row_parallel,
         );
+        // Bit-identity with the contract reference.
+        let naive = NaiveKernel.run(x, &KernelOp::Blast(BlastView::from_matrix(a)));
+        for (i, (got, want)) in y.data.iter().zip(&naive.data).enumerate() {
+            assert_eq!(
+                got.to_bits(),
+                want.to_bits(),
+                "contract violation (m={}, b={}, r={}, batch={}, par={}) elem {i}: {got} vs {want}",
+                a.m,
+                a.b,
+                a.r,
+                x.rows,
+                kernel.row_parallel,
+            );
+        }
     }
 
     #[test]
@@ -168,12 +224,28 @@ mod tests {
             (12, 6, 3, 2, 5),
             (16, 16, 4, 5, 8),
             (10, 15, 5, 4, 33),
+            (18, 9, 3, 9, 2), // r > LANES, q not a lane multiple
         ] {
             let a = BlastMatrix::random_init(m, n, b, r, 1.0, &mut rng);
             let x = rng.gaussian_matrix(batch, n, 1.0);
             check(&a, &x, &FusedBlastKernel::sequential());
             check(&a, &x, &FusedBlastKernel::row_parallel());
         }
+    }
+
+    #[test]
+    fn run_into_matches_run_without_reallocating() {
+        let mut rng = Rng::new(842);
+        let a = BlastMatrix::random_init(12, 12, 3, 4, 1.0, &mut rng);
+        let x = rng.gaussian_matrix(2, 12, 1.0);
+        let view = BlastView::from_matrix(&a);
+        let y = FusedBlastKernel::sequential().run(&x, &KernelOp::Blast(view));
+        let mut out = Matrix::zeros(2, 12);
+        let ptr = out.data.as_ptr();
+        let view2 = BlastView::from_matrix(&a);
+        FusedBlastKernel::sequential().run_into(&x, &KernelOp::Blast(view2), &mut out);
+        assert_eq!(out.data, y.data);
+        assert_eq!(out.data.as_ptr(), ptr, "same-size run_into must not reallocate");
     }
 
     #[test]

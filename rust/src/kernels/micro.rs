@@ -1,0 +1,648 @@
+//! The packed SIMD microkernel: the one place that defines the engine's
+//! accumulation-order contract.
+//!
+//! ## The fixed-lane accumulation contract
+//!
+//! Every contraction the kernel engine performs — the dense
+//! `y = x · wᵀ` dot products, BLAST stage 1 (`z_j = V_jᵀ x_j`) and
+//! stage 3 (`y_i = U_i w_i`) — is computed as a **fixed 8-lane strided
+//! partial sum reduced in a fixed tree order**:
+//!
+//! * element `c` of the shared dimension is accumulated into lane
+//!   `c % LANES` (the input is consumed in ascending 8-element chunks);
+//! * a short final chunk is zero-padded on *both* operands to a full
+//!   `LANES`-wide step, so the tail performs the same eight
+//!   multiply-adds as every other chunk;
+//! * the eight lane sums are reduced as
+//!   `((l0+l1)+(l2+l3)) + ((l4+l5)+(l6+l7))` — never left-to-right.
+//!
+//! Every kernel — including the naive reference — computes every output
+//! element with exactly this recipe, so the autotuner's per-(shape,
+//! batch) kernel choice, the pack cache, and the `BLAST_SIMD` runtime
+//! dispatch can never change a result by a single bit. This replaces
+//! the pre-SIMD engine contract ("one sequential ascending-k sum per
+//! element"); the prefill/decode identity and the parallel-schedule
+//! identity now rest on this definition instead.
+//!
+//! ## SIMD dispatch
+//!
+//! [`simd_mode`] resolves `BLAST_SIMD=auto|avx2|portable` (default
+//! `auto`) once per process:
+//!
+//! * `portable` — `[f32; 8]` lane arrays over `chunks_exact(8)`; stable
+//!   Rust, auto-vectorizes on any target.
+//! * `avx2` — `std::arch` 256-bit intrinsics behind
+//!   `is_x86_feature_detected!("avx2")` (+"fma" detection for the
+//!   dispatch decision). Forcing `avx2` on hardware without it falls
+//!   back to portable.
+//!
+//! The AVX2 path deliberately uses `mul` + `add` rather than `fmadd`:
+//! fused multiply-add skips the intermediate rounding step, which would
+//! produce different bits than the portable two-rounding sequence and
+//! break the contract above. The throughput win comes from the 8-wide
+//! lanes, register blocking, and packed panels — not from fusion.
+//!
+//! ## The microkernel
+//!
+//! [`nt_rows_packed`] computes an `MR×NR` register block of
+//! `Y = X · Wᵀ` per inner iteration against a [`pack::PackedPanels`]
+//! B-panel (`NR` weight rows interleaved per 8-wide k-chunk, so the
+//! inner loop streams one contiguous panel). `MR=2` activation rows ×
+//! `NR=4` panel rows keeps `MR·NR = 8` vector accumulators plus the
+//! operand loads inside the 16 ymm registers of AVX2.
+//!
+//! [`pack::PackedPanels`]: super::pack::PackedPanels
+
+use super::pack::PackedPanels;
+use std::sync::OnceLock;
+
+/// SIMD vector width in f32 lanes. Fixed by the accumulation contract —
+/// changing it changes every result bit.
+pub const LANES: usize = 8;
+/// Activation rows per microkernel block.
+pub const MR: usize = 2;
+/// Packed weight rows per microkernel block (panel tile height).
+pub const NR: usize = 4;
+
+/// Which instruction set the packed kernels run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdMode {
+    /// Runtime-detected best (AVX2 when available, else portable).
+    Auto,
+    /// Force the `std::arch` AVX2 path (falls back if undetected).
+    Avx2,
+    /// Force the portable lane-array path.
+    Portable,
+}
+
+impl SimdMode {
+    /// Parse the `BLAST_SIMD` value; unknown strings mean `Auto`.
+    pub fn parse(s: &str) -> SimdMode {
+        match s.to_ascii_lowercase().as_str() {
+            "avx2" => SimdMode::Avx2,
+            "portable" | "scalar" => SimdMode::Portable,
+            _ => SimdMode::Auto,
+        }
+    }
+
+    /// Whether this mode runs the AVX2 path on the current machine.
+    pub fn use_avx2(self) -> bool {
+        match self {
+            SimdMode::Portable => false,
+            SimdMode::Auto | SimdMode::Avx2 => avx2_detected(),
+        }
+    }
+}
+
+/// True when the CPU supports the AVX2(+FMA) path.
+pub fn avx2_detected() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("fma")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// Process-wide dispatch mode from `BLAST_SIMD` (resolved once).
+pub fn simd_mode() -> SimdMode {
+    static MODE: OnceLock<SimdMode> = OnceLock::new();
+    *MODE.get_or_init(|| {
+        std::env::var("BLAST_SIMD").map(|s| SimdMode::parse(&s)).unwrap_or(SimdMode::Auto)
+    })
+}
+
+/// The contract's fixed reduction tree over the eight lane sums.
+#[inline(always)]
+pub fn reduce_lanes(l: &[f32; LANES]) -> f32 {
+    ((l[0] + l[1]) + (l[2] + l[3])) + ((l[4] + l[5]) + (l[6] + l[7]))
+}
+
+/// Contract-defining dot product (portable): 8-lane strided partials
+/// over ascending chunks, zero-padded tail, fixed-tree reduction. This
+/// is what the naive reference kernel runs; every packed/SIMD path must
+/// reproduce its bits exactly.
+pub fn dot8(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut lanes = [0.0f32; LANES];
+    let mut ca = a.chunks_exact(LANES);
+    let mut cb = b.chunks_exact(LANES);
+    for (xa, xb) in (&mut ca).zip(&mut cb) {
+        for l in 0..LANES {
+            lanes[l] += xa[l] * xb[l];
+        }
+    }
+    let (ra, rb) = (ca.remainder(), cb.remainder());
+    if !ra.is_empty() {
+        let mut pa = [0.0f32; LANES];
+        let mut pb = [0.0f32; LANES];
+        pa[..ra.len()].copy_from_slice(ra);
+        pb[..rb.len()].copy_from_slice(rb);
+        for l in 0..LANES {
+            lanes[l] += pa[l] * pb[l];
+        }
+    }
+    reduce_lanes(&lanes)
+}
+
+/// [`dot8`] with explicit SIMD dispatch — bit-identical to the portable
+/// [`dot8`] in every mode (same lane assignment, same padded tail, same
+/// reduction tree; AVX2 uses mul+add, see the module docs). Used by the
+/// unpacked dense paths (`matmul_nt_static`/`matmul_nt_serial`), whose
+/// operands are transient activations that would churn the pack cache.
+#[cfg(target_arch = "x86_64")]
+pub fn dot8_with(mode: SimdMode, a: &[f32], b: &[f32]) -> f32 {
+    if mode.use_avx2() {
+        // SAFETY: avx2 detected (checked by use_avx2).
+        unsafe { dot8_avx2(a, b) }
+    } else {
+        dot8(a, b)
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+pub fn dot8_with(_mode: SimdMode, a: &[f32], b: &[f32]) -> f32 {
+    dot8(a, b)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn dot8_avx2(a: &[f32], b: &[f32]) -> f32 {
+    use std::arch::x86_64::*;
+    debug_assert_eq!(a.len(), b.len());
+    let k = a.len();
+    let kc = k.div_ceil(LANES);
+    let full = if has_ragged_tail(k, kc) { kc - 1 } else { kc };
+    let mut vacc = _mm256_setzero_ps();
+    let (pa, pb) = (a.as_ptr(), b.as_ptr());
+    for c in 0..full {
+        let va = _mm256_loadu_ps(pa.add(c * LANES));
+        let vb = _mm256_loadu_ps(pb.add(c * LANES));
+        vacc = _mm256_add_ps(vacc, _mm256_mul_ps(va, vb));
+    }
+    if full != kc {
+        let ta = padded_tail(a, kc);
+        let tb = padded_tail(b, kc);
+        let va = _mm256_loadu_ps(ta.as_ptr());
+        let vb = _mm256_loadu_ps(tb.as_ptr());
+        vacc = _mm256_add_ps(vacc, _mm256_mul_ps(va, vb));
+    }
+    let mut lanes = [0.0f32; LANES];
+    _mm256_storeu_ps(lanes.as_mut_ptr(), vacc);
+    reduce_lanes(&lanes)
+}
+
+/// `y[o] = dot8(x, W.row(o))` for every packed output row, without
+/// going through a `Matrix` — the BLAST fused kernel's stage-1/stage-3
+/// primitive (`x` is one activation row or one coupling-weighted `w_i`).
+/// `y.len()` may be shorter than the padded tile grid; extra (padding)
+/// rows are computed into the register block and discarded.
+pub fn nt_row_packed(mode: SimdMode, x: &[f32], panels: &PackedPanels, y: &mut [f32]) {
+    debug_assert_eq!(x.len(), panels.k);
+    debug_assert_eq!(y.len(), panels.n);
+    let use_avx2 = mode.use_avx2();
+    for tile in 0..panels.tiles() {
+        let j0 = tile * NR;
+        let jn = (j0 + NR).min(panels.n);
+        if j0 >= panels.n {
+            break;
+        }
+        let mut acc = [[0.0f32; LANES]; NR];
+        let panel = panels.panel(tile);
+        mk_1xnr(use_avx2, x, panel, panels.kc, &mut acc);
+        for (jj, j) in (j0..jn).enumerate() {
+            y[j] = reduce_lanes(&acc[jj]);
+        }
+    }
+}
+
+/// 1×NR microkernel dispatch (the cfg split keeps the call sites free
+/// of per-statement `cfg` attributes).
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn mk_1xnr(use_avx2: bool, x: &[f32], panel: &[f32], kc: usize, acc: &mut [[f32; LANES]; NR]) {
+    if use_avx2 {
+        // SAFETY: avx2 detected (checked by SimdMode::use_avx2).
+        unsafe { mk_1xnr_avx2(x, panel, kc, acc) }
+    } else {
+        mk_1xnr_portable(x, panel, kc, acc)
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+#[inline]
+fn mk_1xnr(_use_avx2: bool, x: &[f32], panel: &[f32], kc: usize, acc: &mut [[f32; LANES]; NR]) {
+    mk_1xnr_portable(x, panel, kc, acc)
+}
+
+/// MR×NR microkernel dispatch.
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn mk_2xnr(
+    use_avx2: bool,
+    xa: &[f32],
+    xb: &[f32],
+    panel: &[f32],
+    kc: usize,
+    acc: &mut [[[f32; LANES]; NR]; MR],
+) {
+    if use_avx2 {
+        // SAFETY: avx2 detected (checked by SimdMode::use_avx2).
+        unsafe { mk_2xnr_avx2(xa, xb, panel, kc, acc) }
+    } else {
+        mk_2xnr_portable(xa, xb, panel, kc, acc)
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+#[inline]
+fn mk_2xnr(
+    _use_avx2: bool,
+    xa: &[f32],
+    xb: &[f32],
+    panel: &[f32],
+    kc: usize,
+    acc: &mut [[[f32; LANES]; NR]; MR],
+) {
+    mk_2xnr_portable(xa, xb, panel, kc, acc)
+}
+
+/// Rows `t0 .. t0+rows` of `Y = X · Wᵀ` against packed panels, written
+/// into `out` (a `rows × panels.n` row-major slice). `MR`-row blocked;
+/// this is the dense kernels' shared inner routine (the parallel kernel
+/// hands each worker a disjoint `out` chunk).
+pub fn nt_rows_packed(
+    mode: SimdMode,
+    x: &crate::tensor::Matrix,
+    panels: &PackedPanels,
+    t0: usize,
+    rows: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(x.cols, panels.k);
+    let n = panels.n;
+    debug_assert_eq!(out.len(), rows * n);
+    let use_avx2 = mode.use_avx2();
+    for tile in 0..panels.tiles() {
+        let j0 = tile * NR;
+        let jn = (j0 + NR).min(n);
+        if j0 >= n {
+            break;
+        }
+        let panel = panels.panel(tile);
+        let mut t = 0usize;
+        while t + MR <= rows {
+            let xa = x.row(t0 + t);
+            let xb = x.row(t0 + t + 1);
+            let mut acc = [[[0.0f32; LANES]; NR]; MR];
+            mk_2xnr(use_avx2, xa, xb, panel, panels.kc, &mut acc);
+            write_block(&acc, t, j0, jn, n, out);
+            t += MR;
+        }
+        while t < rows {
+            let xa = x.row(t0 + t);
+            let mut acc = [[0.0f32; LANES]; NR];
+            mk_1xnr(use_avx2, xa, panel, panels.kc, &mut acc);
+            for (jj, j) in (j0..jn).enumerate() {
+                out[t * n + j] = reduce_lanes(&acc[jj]);
+            }
+            t += 1;
+        }
+    }
+}
+
+#[inline(always)]
+fn write_block(
+    acc: &[[[f32; LANES]; NR]; MR],
+    t: usize,
+    j0: usize,
+    jn: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    for (tt, row_acc) in acc.iter().enumerate() {
+        for (jj, j) in (j0..jn).enumerate() {
+            out[(t + tt) * n + j] = reduce_lanes(&row_acc[jj]);
+        }
+    }
+}
+
+/// Copy the ≤8-element tail of `x` into a zero-padded chunk (the
+/// contract's tail semantics: missing elements contribute `+0.0 · 0.0`).
+#[inline(always)]
+fn padded_tail(x: &[f32], kc: usize) -> [f32; LANES] {
+    let mut pad = [0.0f32; LANES];
+    let tail = &x[(kc - 1) * LANES..];
+    pad[..tail.len()].copy_from_slice(tail);
+    pad
+}
+
+/// Whether the final k-chunk of a length-`k` operand needs padding.
+#[inline(always)]
+fn has_ragged_tail(k: usize, kc: usize) -> bool {
+    kc * LANES != k
+}
+
+// ----------------------------------------------------------------------
+// Portable microkernels (auto-vectorizing lane arrays)
+// ----------------------------------------------------------------------
+
+fn mk_1xnr_portable(x: &[f32], panel: &[f32], kc: usize, acc: &mut [[f32; LANES]; NR]) {
+    let full = if has_ragged_tail(x.len(), kc) { kc - 1 } else { kc };
+    for c in 0..full {
+        let xa: &[f32] = &x[c * LANES..(c + 1) * LANES];
+        let base = c * NR * LANES;
+        for j in 0..NR {
+            let pj = &panel[base + j * LANES..base + (j + 1) * LANES];
+            let aj = &mut acc[j];
+            for l in 0..LANES {
+                aj[l] += xa[l] * pj[l];
+            }
+        }
+    }
+    if full != kc {
+        let pad = padded_tail(x, kc);
+        let base = (kc - 1) * NR * LANES;
+        for j in 0..NR {
+            let pj = &panel[base + j * LANES..base + (j + 1) * LANES];
+            let aj = &mut acc[j];
+            for l in 0..LANES {
+                aj[l] += pad[l] * pj[l];
+            }
+        }
+    }
+}
+
+fn mk_2xnr_portable(
+    xa: &[f32],
+    xb: &[f32],
+    panel: &[f32],
+    kc: usize,
+    acc: &mut [[[f32; LANES]; NR]; MR],
+) {
+    let full = if has_ragged_tail(xa.len(), kc) { kc - 1 } else { kc };
+    for c in 0..full {
+        let va: &[f32] = &xa[c * LANES..(c + 1) * LANES];
+        let vb: &[f32] = &xb[c * LANES..(c + 1) * LANES];
+        let base = c * NR * LANES;
+        for j in 0..NR {
+            let pj = &panel[base + j * LANES..base + (j + 1) * LANES];
+            let (a0, a1) = {
+                let (h, t) = acc.split_at_mut(1);
+                (&mut h[0][j], &mut t[0][j])
+            };
+            for l in 0..LANES {
+                a0[l] += va[l] * pj[l];
+                a1[l] += vb[l] * pj[l];
+            }
+        }
+    }
+    if full != kc {
+        let pa = padded_tail(xa, kc);
+        let pb = padded_tail(xb, kc);
+        let base = (kc - 1) * NR * LANES;
+        for j in 0..NR {
+            let pj = &panel[base + j * LANES..base + (j + 1) * LANES];
+            let (a0, a1) = {
+                let (h, t) = acc.split_at_mut(1);
+                (&mut h[0][j], &mut t[0][j])
+            };
+            for l in 0..LANES {
+                a0[l] += pa[l] * pj[l];
+                a1[l] += pb[l] * pj[l];
+            }
+        }
+    }
+}
+
+// ----------------------------------------------------------------------
+// AVX2 microkernels
+// ----------------------------------------------------------------------
+//
+// `mul` + `add` (NOT `fmadd`): bit-identity with the portable path
+// requires the same two-rounding sequence per lane step (see the module
+// docs). Lane assignment and reduction happen in the same order as the
+// portable kernels, so the final stores are bit-identical.
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn mk_1xnr_avx2(x: &[f32], panel: &[f32], kc: usize, acc: &mut [[f32; LANES]; NR]) {
+    use std::arch::x86_64::*;
+    let full = if has_ragged_tail(x.len(), kc) { kc - 1 } else { kc };
+    let mut va_acc = [_mm256_setzero_ps(); NR];
+    let pp = panel.as_ptr();
+    let xp = x.as_ptr();
+    for c in 0..full {
+        let vx = _mm256_loadu_ps(xp.add(c * LANES));
+        let base = c * NR * LANES;
+        for j in 0..NR {
+            let pj = _mm256_loadu_ps(pp.add(base + j * LANES));
+            va_acc[j] = _mm256_add_ps(va_acc[j], _mm256_mul_ps(vx, pj));
+        }
+    }
+    if full != kc {
+        let pad = padded_tail(x, kc);
+        let vx = _mm256_loadu_ps(pad.as_ptr());
+        let base = (kc - 1) * NR * LANES;
+        for j in 0..NR {
+            let pj = _mm256_loadu_ps(pp.add(base + j * LANES));
+            va_acc[j] = _mm256_add_ps(va_acc[j], _mm256_mul_ps(vx, pj));
+        }
+    }
+    for j in 0..NR {
+        _mm256_storeu_ps(acc[j].as_mut_ptr(), va_acc[j]);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn mk_2xnr_avx2(
+    xa: &[f32],
+    xb: &[f32],
+    panel: &[f32],
+    kc: usize,
+    acc: &mut [[[f32; LANES]; NR]; MR],
+) {
+    use std::arch::x86_64::*;
+    let full = if has_ragged_tail(xa.len(), kc) { kc - 1 } else { kc };
+    let mut acc0 = [_mm256_setzero_ps(); NR];
+    let mut acc1 = [_mm256_setzero_ps(); NR];
+    let pp = panel.as_ptr();
+    let pa = xa.as_ptr();
+    let pb = xb.as_ptr();
+    for c in 0..full {
+        let va = _mm256_loadu_ps(pa.add(c * LANES));
+        let vb = _mm256_loadu_ps(pb.add(c * LANES));
+        let base = c * NR * LANES;
+        for j in 0..NR {
+            let pj = _mm256_loadu_ps(pp.add(base + j * LANES));
+            acc0[j] = _mm256_add_ps(acc0[j], _mm256_mul_ps(va, pj));
+            acc1[j] = _mm256_add_ps(acc1[j], _mm256_mul_ps(vb, pj));
+        }
+    }
+    if full != kc {
+        let ta = padded_tail(xa, kc);
+        let tb = padded_tail(xb, kc);
+        let va = _mm256_loadu_ps(ta.as_ptr());
+        let vb = _mm256_loadu_ps(tb.as_ptr());
+        let base = (kc - 1) * NR * LANES;
+        for j in 0..NR {
+            let pj = _mm256_loadu_ps(pp.add(base + j * LANES));
+            acc0[j] = _mm256_add_ps(acc0[j], _mm256_mul_ps(va, pj));
+            acc1[j] = _mm256_add_ps(acc1[j], _mm256_mul_ps(vb, pj));
+        }
+    }
+    for j in 0..NR {
+        _mm256_storeu_ps(acc[0][j].as_mut_ptr(), acc0[j]);
+        _mm256_storeu_ps(acc[1][j].as_mut_ptr(), acc1[j]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{Matrix, Rng};
+
+    /// f64 reference dot (order-independent up to f64 rounding).
+    fn dot_ref(a: &[f32], b: &[f32]) -> f32 {
+        a.iter().zip(b).map(|(x, y)| (*x as f64) * (*y as f64)).sum::<f64>() as f32
+    }
+
+    #[test]
+    fn dot8_close_to_reference_across_lengths() {
+        let mut rng = Rng::new(860);
+        for k in [1usize, 2, 7, 8, 9, 15, 16, 17, 64, 100, 257] {
+            let a = rng.gaussian_matrix(1, k, 1.0);
+            let b = rng.gaussian_matrix(1, k, 1.0);
+            let got = dot8(a.row(0), b.row(0));
+            let want = dot_ref(a.row(0), b.row(0));
+            assert!(
+                (got - want).abs() <= 1e-4 * (1.0 + want.abs()),
+                "k={k}: {got} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn reduce_tree_is_fixed_order() {
+        let lanes = [1e8f32, 1.0, -1e8, 1.0, 3.0, 4.0, 5.0, 6.0];
+        // ((1e8+1)+(-1e8+1)) + ((3+4)+(5+6)) with f32 rounding at each
+        // step — NOT the left-to-right sum.
+        let expect = ((1e8f32 + 1.0) + (-1e8f32 + 1.0)) + ((3.0f32 + 4.0) + (5.0f32 + 6.0));
+        assert_eq!(reduce_lanes(&lanes), expect);
+    }
+
+    #[test]
+    fn packed_row_matches_dot8_bitwise() {
+        let mut rng = Rng::new(861);
+        // Awkward shapes: k not a multiple of 8, n < NR, n straddling
+        // tile edges.
+        for &(n, k) in &[(1usize, 3usize), (3, 8), (4, 9), (5, 16), (13, 31), (17, 64)] {
+            let w = rng.gaussian_matrix(n, k, 1.0);
+            let x = rng.gaussian_matrix(1, k, 1.0);
+            let panels = PackedPanels::pack_rows(&w);
+            let mut y = vec![0.0f32; n];
+            nt_row_packed(SimdMode::Portable, x.row(0), &panels, &mut y);
+            for o in 0..n {
+                let want = dot8(x.row(0), w.row(o));
+                assert!(
+                    y[o].to_bits() == want.to_bits(),
+                    "n={n} k={k} o={o}: packed {} vs dot8 {want}",
+                    y[o]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn packed_rows_match_dot8_bitwise_all_batch_shapes() {
+        let mut rng = Rng::new(862);
+        for &(batch, n, k) in &[(1usize, 5usize, 7usize), (2, 4, 8), (3, 9, 17), (5, 2, 40)] {
+            let w = rng.gaussian_matrix(n, k, 1.0);
+            let x = rng.gaussian_matrix(batch, k, 1.0);
+            let panels = PackedPanels::pack_rows(&w);
+            let mut out = vec![0.0f32; batch * n];
+            nt_rows_packed(SimdMode::Portable, &x, &panels, 0, batch, &mut out);
+            for t in 0..batch {
+                for o in 0..n {
+                    let want = dot8(x.row(t), w.row(o));
+                    assert_eq!(
+                        out[t * n + o].to_bits(),
+                        want.to_bits(),
+                        "batch={batch} n={n} k={k} t={t} o={o}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn avx2_bit_identical_to_portable_when_detected() {
+        if !avx2_detected() {
+            eprintln!("avx2 not detected; skipping SIMD bit-identity check");
+            return;
+        }
+        let mut rng = Rng::new(863);
+        for &(batch, n, k) in
+            &[(1usize, 3usize, 9usize), (2, 8, 64), (5, 13, 31), (7, 40, 129), (4, 4, 8)]
+        {
+            let w = rng.gaussian_matrix(n, k, 1.0);
+            let x = rng.gaussian_matrix(batch, k, 1.0);
+            let panels = PackedPanels::pack_rows(&w);
+            let mut a = vec![0.0f32; batch * n];
+            let mut b = vec![0.0f32; batch * n];
+            nt_rows_packed(SimdMode::Portable, &x, &panels, 0, batch, &mut a);
+            nt_rows_packed(SimdMode::Avx2, &x, &panels, 0, batch, &mut b);
+            for (i, (pa, pb)) in a.iter().zip(&b).enumerate() {
+                assert_eq!(
+                    pa.to_bits(),
+                    pb.to_bits(),
+                    "batch={batch} n={n} k={k} elem {i}: portable {pa} vs avx2 {pb}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dot8_with_modes_bit_identical() {
+        if !avx2_detected() {
+            eprintln!("avx2 not detected; skipping dot8_with identity check");
+            return;
+        }
+        let mut rng = Rng::new(864);
+        for k in [1usize, 7, 8, 9, 31, 64, 257] {
+            let a = rng.gaussian_matrix(1, k, 1.0);
+            let b = rng.gaussian_matrix(1, k, 1.0);
+            let p = dot8_with(SimdMode::Portable, a.row(0), b.row(0));
+            let v = dot8_with(SimdMode::Avx2, a.row(0), b.row(0));
+            assert_eq!(p.to_bits(), v.to_bits(), "k={k}: portable {p} vs avx2 {v}");
+            assert_eq!(p.to_bits(), dot8(a.row(0), b.row(0)).to_bits());
+        }
+    }
+
+    #[test]
+    fn simd_mode_parsing() {
+        assert_eq!(SimdMode::parse("avx2"), SimdMode::Avx2);
+        assert_eq!(SimdMode::parse("AVX2"), SimdMode::Avx2);
+        assert_eq!(SimdMode::parse("portable"), SimdMode::Portable);
+        assert_eq!(SimdMode::parse("scalar"), SimdMode::Portable);
+        assert_eq!(SimdMode::parse("auto"), SimdMode::Auto);
+        assert_eq!(SimdMode::parse("garbage"), SimdMode::Auto);
+        assert!(!SimdMode::Portable.use_avx2());
+    }
+
+    #[test]
+    fn zero_padding_tail_preserves_sign_semantics() {
+        // The padded tail must behave exactly like dot8's padded tail —
+        // including for negative zeros in the data.
+        let w = Matrix::from_vec(1, 3, vec![-0.0, 2.0, -3.0]);
+        let x = Matrix::from_vec(1, 3, vec![1.0, -0.0, 0.5]);
+        let panels = PackedPanels::pack_rows(&w);
+        let mut y = vec![0.0f32; 1];
+        nt_row_packed(SimdMode::Portable, x.row(0), &panels, &mut y);
+        assert_eq!(y[0].to_bits(), dot8(x.row(0), w.row(0)).to_bits());
+    }
+}

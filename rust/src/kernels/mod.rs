@@ -1,4 +1,5 @@
-//! Kernel engine: tiled + parallel BLAST kernels with a per-shape autotuner.
+//! Kernel engine: packed SIMD microkernel GEMM + fused BLAST kernels
+//! with a per-shape autotuner.
 //!
 //! Every inference-time matrix product in the repo — the dense
 //! `Y = X · Wᵀ` of `nn::linear`, the attention score/context products,
@@ -6,43 +7,51 @@
 //! through this subsystem instead of calling a fixed loop nest. The
 //! pieces:
 //!
-//! * [`MatmulKernel`] — the kernel trait. A kernel advertises which
-//!   [`KernelOp`]s it supports and computes `Y = X · Wᵀ` (dense) or the
-//!   Algorithm-1 product `Y = X · Aᵀ` (BLAST) for row-major activation
-//!   batches.
-//! * [`naive::NaiveKernel`] — the scalar triple-loop reference. Every
-//!   other kernel is property-tested element-wise against it
-//!   (`tests/kernel_parity.rs`).
-//! * [`tiled::TiledKernel`] — cache-blocked dense kernel: 8-wide
-//!   output-column register tiles over contiguous rows, weight tile held
-//!   cache-hot across the activation batch. All kernels share a
-//!   **bit-stability invariant** — each output element is one sequential
-//!   ascending-k sum — so the autotuner's choice never changes results
-//!   by a bit (the prefill/decode identity depends on this).
-//! * [`parallel::ParallelKernel`] — the tiled row kernel fanned out over
+//! * [`micro`] — the BLIS-style packed microkernel and the engine's
+//!   **fixed-lane accumulation contract**: every contraction is an
+//!   8-lane strided partial sum over ascending k-chunks (zero-padded
+//!   tail) reduced in a fixed tree order, identical across every
+//!   kernel, batch size, thread schedule, and SIMD path. Runtime
+//!   dispatch between a portable auto-vectorizing path and an
+//!   `std::arch` AVX2 path is controlled by `BLAST_SIMD=auto|avx2|
+//!   portable` (default `auto`; both paths are bit-identical).
+//! * [`pack`] — B-panel packing: weights are repacked once per
+//!   (weights, shape) into microkernel panels and cached process-wide,
+//!   with sampled-fingerprint invalidation on in-place mutation.
+//! * [`naive::NaiveKernel`] — the contract reference (no blocking, no
+//!   packing, no SIMD dispatch, no threads). Every other kernel must
+//!   match it **bit for bit** (`tests/kernel_parity.rs`).
+//! * [`tiled::TiledKernel`] — single-threaded packed-microkernel dense
+//!   kernel.
+//! * [`parallel::ParallelKernel`] — the same microkernel fanned out over
 //!   `util::par`'s scoped-thread pool, one disjoint output-row chunk per
 //!   worker.
-//! * [`fused::FusedBlastKernel`] — Algorithm 1 with stage 1
-//!   (`V_jᵀ x_j`) and stage 3 (`U_i w_i`) batched across *all* blocks in
-//!   contiguous buffers: no per-block submatrix copies, no per-block
-//!   allocations, one pass over the input per token. Sequential and
-//!   row-parallel variants are registered.
+//! * [`fused::FusedBlastKernel`] — Algorithm 1 with stages 1 and 3 as
+//!   microkernel calls over the packed `V`/`U` factor panels and
+//!   thread-local stage scratch. Sequential and row-parallel variants
+//!   are registered.
 //! * [`autotune::Autotuner`] — benchmarks the candidate kernels the
 //!   first time each `(structure, shape, batch-bucket)` key is seen,
 //!   caches the winner in-process, and (optionally) persists the plan
 //!   table as JSON via `util::json` so later processes skip the probe.
+//!   Because of the fixed-lane contract its choice can never change a
+//!   result bit.
 //!
 //! ## Dispatch
 //!
-//! [`engine()`] returns the process-wide [`KernelEngine`]. Hot paths call
-//! [`KernelEngine::matmul_nt`] / [`KernelEngine::blast_act`]; the engine
-//! resolves the plan (tuning on a miss) and runs the chosen kernel.
+//! [`engine()`] returns the process-wide [`KernelEngine`]. Hot paths
+//! call [`KernelEngine::matmul_nt`] / [`KernelEngine::blast_act`] (or
+//! their allocation-free `*_into` variants, which write into a
+//! caller-owned output matrix and are what the zero-allocation decode
+//! path uses); the engine resolves the plan (tuning on a miss) and runs
+//! the chosen kernel.
 //!
 //! Environment knobs:
 //!
 //! * `BLAST_KERNEL=<name>` — force one kernel (e.g. `naive`,
 //!   `dense_tiled`, `dense_parallel`, `blast_fused`, `blast_fused_par`)
 //!   for every op it supports; used by the benches to compare kernels.
+//! * `BLAST_SIMD=auto|avx2|portable` — SIMD path selection (see above).
 //! * `BLAST_AUTOTUNE_CACHE=<path>` — load the plan table from `<path>`
 //!   at startup and re-persist it after each new tuning decision.
 //!
@@ -64,23 +73,66 @@
 
 pub mod autotune;
 pub mod fused;
+pub mod micro;
 pub mod naive;
+pub mod pack;
 pub mod parallel;
 pub mod tiled;
 
 pub use autotune::{Autotuner, PlanKey};
 pub use fused::FusedBlastKernel;
+pub use micro::{SimdMode, LANES, MR, NR};
 pub use naive::NaiveKernel;
+pub use pack::{PackCache, PackedPanels};
 pub use parallel::ParallelKernel;
 pub use tiled::TiledKernel;
 
 use crate::blast::BlastMatrix;
+use crate::nn::param::PTensor;
 use crate::tensor::Matrix;
+use crate::util::par;
 use std::sync::OnceLock;
+
+/// Where a [`BlastView`]'s factor matrices live. Borrowed, so building
+/// a view is allocation-free — this runs on every decode dispatch.
+#[derive(Clone, Copy)]
+pub enum Factors<'a> {
+    /// Plain matrices (`BlastMatrix::u` / `::v`).
+    Mats(&'a [Matrix]),
+    /// Trainable parameters (`nn::linear::LinearWeight::Blast`).
+    Params(&'a [PTensor]),
+}
+
+impl<'a> Factors<'a> {
+    #[inline]
+    fn get(&self, i: usize) -> &'a Matrix {
+        match self {
+            Factors::Mats(m) => &m[i],
+            Factors::Params(p) => &p[i].v,
+        }
+    }
+
+    #[inline]
+    fn len(&self) -> usize {
+        match self {
+            Factors::Mats(m) => m.len(),
+            Factors::Params(p) => p.len(),
+        }
+    }
+}
+
+/// Where a [`BlastView`]'s coupling table lives (also borrowed).
+#[derive(Clone, Copy)]
+pub enum Couplings<'a> {
+    /// `BlastMatrix::s` — nested `[i][j] -> Vec<f32>` of length `r`.
+    Nested(&'a [Vec<Vec<f32>>]),
+    /// A packed `(b·b) × r` matrix, row `i·b + j` (the trainable layout).
+    Packed(&'a Matrix),
+}
 
 /// Borrowed view of a BLAST weight, shared by `BlastMatrix` and the
 /// trainable `nn::linear::LinearWeight::Blast` layout so kernels are
-/// agnostic to where the factors live.
+/// agnostic to where the factors live. Construction never allocates.
 pub struct BlastView<'a> {
     /// Logical output features (rows of the represented matrix).
     pub m: usize,
@@ -90,16 +142,38 @@ pub struct BlastView<'a> {
     pub b: usize,
     /// Rank parameter.
     pub r: usize,
-    /// Left factors, `b` entries of shape `p×r` (`p = m/b`).
-    pub u: Vec<&'a Matrix>,
-    /// Right factors, `b` entries of shape `q×r` (`q = n/b`).
-    pub v: Vec<&'a Matrix>,
-    /// Diagonal couplings, `b·b` slices of length `r`, row-major by
-    /// `(i, j) → i·b + j`.
-    pub s: Vec<&'a [f32]>,
+    u: Factors<'a>,
+    v: Factors<'a>,
+    s: Couplings<'a>,
 }
 
 impl<'a> BlastView<'a> {
+    /// View over explicit factor/coupling storage.
+    pub fn new(
+        m: usize,
+        n: usize,
+        b: usize,
+        r: usize,
+        u: Factors<'a>,
+        v: Factors<'a>,
+        s: Couplings<'a>,
+    ) -> Self {
+        BlastView { m, n, b, r, u, v, s }
+    }
+
+    /// View over a `BlastMatrix`.
+    pub fn from_matrix(a: &'a BlastMatrix) -> Self {
+        BlastView {
+            m: a.m,
+            n: a.n,
+            b: a.b,
+            r: a.r,
+            u: Factors::Mats(&a.u),
+            v: Factors::Mats(&a.v),
+            s: Couplings::Nested(&a.s),
+        }
+    }
+
     /// Block height `p = m/b`.
     #[inline]
     pub fn p(&self) -> usize {
@@ -112,26 +186,24 @@ impl<'a> BlastView<'a> {
         self.n / self.b
     }
 
-    /// Coupling vector `s_{i,j}`.
+    /// Left factor `U_i` (`p × r`).
     #[inline]
-    pub fn s_row(&self, i: usize, j: usize) -> &'a [f32] {
-        self.s[i * self.b + j]
+    pub fn u(&self, i: usize) -> &'a Matrix {
+        self.u.get(i)
     }
 
-    /// View over a `BlastMatrix`.
-    pub fn from_matrix(a: &'a BlastMatrix) -> Self {
-        BlastView {
-            m: a.m,
-            n: a.n,
-            b: a.b,
-            r: a.r,
-            u: a.u.iter().collect(),
-            v: a.v.iter().collect(),
-            s: a
-                .s
-                .iter()
-                .flat_map(|row| row.iter().map(|sij| sij.as_slice()))
-                .collect(),
+    /// Right factor `V_j` (`q × r`).
+    #[inline]
+    pub fn v(&self, j: usize) -> &'a Matrix {
+        self.v.get(j)
+    }
+
+    /// Coupling vector `s_{i,j}` (length `r`).
+    #[inline]
+    pub fn s_row(&self, i: usize, j: usize) -> &'a [f32] {
+        match self.s {
+            Couplings::Nested(s) => &s[i][j],
+            Couplings::Packed(s) => s.row(i * self.b + j),
         }
     }
 
@@ -151,7 +223,24 @@ impl<'a> BlastView<'a> {
             self.v.len(),
             self.b
         );
-        assert_eq!(self.s.len(), self.b * self.b, "blast view: coupling table size");
+        match self.s {
+            Couplings::Nested(s) => {
+                assert_eq!(s.len(), self.b, "blast view: coupling rows");
+                for (i, row) in s.iter().enumerate() {
+                    assert_eq!(
+                        row.len(),
+                        self.b,
+                        "blast view: coupling row {i} has {} entries for b={}",
+                        row.len(),
+                        self.b
+                    );
+                }
+            }
+            Couplings::Packed(s) => {
+                assert_eq!(s.rows, self.b * self.b, "blast view: coupling table size");
+                assert_eq!(s.cols, self.r, "blast view: coupling width");
+            }
+        }
     }
 }
 
@@ -225,8 +314,9 @@ impl KernelOp<'_> {
 }
 
 /// A matmul kernel. Implementations must be pure functions of their
-/// inputs (no internal state), `Send + Sync`, and exact-shape-agnostic
-/// within the ops they support.
+/// inputs (no observable internal state), `Send + Sync`, and
+/// exact-shape-agnostic within the ops they support, and must follow
+/// the engine's fixed-lane accumulation contract (see [`micro`]).
 pub trait MatmulKernel: Send + Sync {
     /// Stable name (plan files store it).
     fn name(&self) -> &'static str;
@@ -237,6 +327,18 @@ pub trait MatmulKernel: Send + Sync {
     /// Compute the op. `x` is `(batch × in_features)`; the result is
     /// `(batch × out_features)`.
     fn run(&self, x: &Matrix, op: &KernelOp<'_>) -> Matrix;
+
+    /// Compute the op into a caller-owned output (shape is reset by the
+    /// kernel; an adequately-sized buffer is reused without touching
+    /// the allocator). The default falls back to [`run`] and therefore
+    /// allocates — the optimized kernels override it; the decode hot
+    /// path relies on those overrides for its zero-allocation
+    /// guarantee.
+    ///
+    /// [`run`]: MatmulKernel::run
+    fn run_into(&self, x: &Matrix, op: &KernelOp<'_>, out: &mut Matrix) {
+        *out = self.run(x, op);
+    }
 }
 
 /// The process-wide engine: registered kernels + the autotuner that maps
@@ -270,47 +372,64 @@ impl KernelEngine {
         self.dispatch(x, &KernelOp::DenseNt { w })
     }
 
-    /// `Y = X · Wᵀ` with a *statically* chosen dense kernel (tiled below
-    /// a work threshold, row-parallel above), bypassing the autotuner.
+    /// [`matmul_nt`] into a caller-owned output (allocation-free once
+    /// the buffer and the plan are warm).
+    ///
+    /// [`matmul_nt`]: KernelEngine::matmul_nt
+    pub fn matmul_nt_into(&self, x: &Matrix, w: &Matrix, out: &mut Matrix) {
+        assert_eq!(x.cols, w.cols, "matmul_nt shape mismatch: {:?} vs {:?}", x.shape(), w.shape());
+        self.dispatch_into(x, &KernelOp::DenseNt { w }, out);
+    }
+
+    /// `Y = X · Wᵀ` with a *statically* chosen execution (serial below a
+    /// work threshold, row-parallel above), bypassing both the autotuner
+    /// and the pack cache.
     ///
     /// Use this for activation×activation products whose shapes vary per
     /// input (e.g. attention scores, where one operand dimension is the
     /// sequence length): tuning those would create a throwaway plan
-    /// entry — and a probe run — for every distinct length. Thanks to
-    /// the kernels' shared bit-stability invariant the static choice is
-    /// numerically identical to the tuned one.
+    /// entry — and a probe run — for every distinct length, and packing
+    /// them would churn the weight-panel cache. Like
+    /// [`matmul_nt_serial`], this path deliberately ignores
+    /// `BLAST_KERNEL` forcing: a forced packing kernel would insert
+    /// every transient activation operand into the pack cache,
+    /// evicting real layer-weight panels — and the fixed-lane contract
+    /// makes the unpacked choice bit-identical to any forced kernel
+    /// anyway, so forcing could never change results here.
+    ///
+    /// [`matmul_nt_serial`]: KernelEngine::matmul_nt_serial
     pub fn matmul_nt_static(&self, x: &Matrix, w: &Matrix) -> Matrix {
         assert_eq!(x.cols, w.cols, "matmul_nt shape mismatch: {:?} vs {:?}", x.shape(), w.shape());
         if x.rows == 0 {
             return Matrix::zeros(0, w.rows);
         }
-        let op = KernelOp::DenseNt { w };
-        if let Some(i) = self.forced {
-            if self.kernels[i].supports(&op, x.rows) {
-                return self.kernels[i].run(x, &op);
-            }
-        }
+        let mode = micro::simd_mode();
+        let mut y = Matrix::zeros(x.rows, w.rows);
         // Same work threshold the tensor-level GEMMs use to decide
         // whether threads pay for themselves.
-        let name = if x.rows * w.rows * w.cols >= 64 * 64 * 64 && x.rows >= 2 {
-            "dense_parallel"
+        if x.rows * w.rows * w.cols >= 64 * 64 * 64 && x.rows >= 2 {
+            let n = w.rows;
+            let chunk_rows = x.rows.div_ceil(par::num_threads()).max(1);
+            par::par_chunks_mut(&mut y.data, chunk_rows * n, |ci, chunk| {
+                let rows = chunk.len() / n;
+                tiled::dense_nt_rows_unpacked(mode, x, w, ci * chunk_rows, rows, chunk);
+            });
         } else {
-            "dense_tiled"
-        };
-        self.kernel_named(name).expect("built-in dense kernel").run(x, &op)
+            tiled::dense_nt_rows_unpacked(mode, x, w, 0, x.rows, &mut y.data);
+        }
+        y
     }
 
-    /// `Y = X · Wᵀ` through the fixed serial dense kernel
-    /// (`dense_tiled`), guaranteed never to spawn worker threads. For
-    /// callers that already own the thread-level parallelism — the
-    /// factorization sweeps fan the `b×b` factor grid across the pool
-    /// and the compression pipeline fans whole layers — where a nested
-    /// `dense_parallel` dispatch would multiply live threads
-    /// (workers × pool) and oversubscribe the machine. Deliberately
-    /// ignores `BLAST_KERNEL` forcing: "no nested threads" is a
-    /// correctness-of-scheduling contract, not a tuning preference.
-    /// Bit-identical to every other dense kernel by the engine's
-    /// bit-stability invariant.
+    /// `Y = X · Wᵀ` through the fixed serial unpacked path, guaranteed
+    /// never to spawn worker threads. For callers that already own the
+    /// thread-level parallelism — the factorization sweeps fan the `b×b`
+    /// factor grid across the pool and the compression pipeline fans
+    /// whole layers — where a nested `dense_parallel` dispatch would
+    /// multiply live threads (workers × pool) and oversubscribe the
+    /// machine. Deliberately ignores `BLAST_KERNEL` forcing: "no nested
+    /// threads" is a correctness-of-scheduling contract, not a tuning
+    /// preference. Bit-identical to every other dense path by the
+    /// engine's fixed-lane contract.
     pub fn matmul_nt_serial(&self, x: &Matrix, w: &Matrix) -> Matrix {
         assert_eq!(
             x.cols,
@@ -322,8 +441,9 @@ impl KernelEngine {
         if x.rows == 0 {
             return Matrix::zeros(0, w.rows);
         }
-        let op = KernelOp::DenseNt { w };
-        self.kernel_named("dense_tiled").expect("built-in dense kernel").run(x, &op)
+        let mut y = Matrix::zeros(x.rows, w.rows);
+        tiled::dense_nt_rows_unpacked(micro::simd_mode(), x, w, 0, x.rows, &mut y.data);
+        y
     }
 
     /// `C = A · B` via [`matmul_nt_serial`]: `B` is transposed once
@@ -348,25 +468,57 @@ impl KernelEngine {
         self.dispatch(x, &KernelOp::Blast(BlastView::from_matrix(a)))
     }
 
+    /// [`blast_act`] into a caller-owned output.
+    ///
+    /// [`blast_act`]: KernelEngine::blast_act
+    pub fn blast_act_into(&self, x: &Matrix, a: &BlastMatrix, out: &mut Matrix) {
+        self.dispatch_into(x, &KernelOp::Blast(BlastView::from_matrix(a)), out);
+    }
+
     /// Dispatch an op, tuning on a plan miss.
     pub fn dispatch(&self, x: &Matrix, op: &KernelOp<'_>) -> Matrix {
+        let idx = match self.resolve(x, op) {
+            Some(i) => i,
+            None => return Matrix::zeros(0, op.out_features()),
+        };
+        self.kernels[idx].run(x, op)
+    }
+
+    /// [`dispatch`] into a caller-owned output — the allocation-free hot
+    /// path (plan lookup, packed panels, and kernel scratch are all
+    /// cache hits in the steady state).
+    ///
+    /// [`dispatch`]: KernelEngine::dispatch
+    pub fn dispatch_into(&self, x: &Matrix, op: &KernelOp<'_>, out: &mut Matrix) {
+        let idx = match self.resolve(x, op) {
+            Some(i) => i,
+            None => {
+                out.reset(0, op.out_features());
+                return;
+            }
+        };
+        self.kernels[idx].run_into(x, op, out);
+    }
+
+    /// Shared plan resolution: validate, short-circuit empty batches
+    /// (`None`), apply `BLAST_KERNEL` forcing, tune on a miss.
+    fn resolve(&self, x: &Matrix, op: &KernelOp<'_>) -> Option<usize> {
         if let KernelOp::Blast(view) = op {
             view.validate(x);
         }
         if x.rows == 0 {
-            return Matrix::zeros(0, op.out_features());
+            return None;
         }
         if let Some(i) = self.forced {
             if self.kernels[i].supports(op, x.rows) {
-                return self.kernels[i].run(x, op);
+                return Some(i);
             }
         }
         let key = PlanKey::for_op(op, x.rows);
-        let idx = match self.tuner.lookup(&key, &self.kernels) {
+        Some(match self.tuner.lookup(&key, &self.kernels) {
             Some(i) => i,
             None => self.tuner.tune(&key, x, op, &self.kernels),
-        };
-        self.kernels[idx].run(x, op)
+        })
     }
 
     /// Kernel by stable name (benches and tests compare specific kernels).
@@ -430,6 +582,37 @@ mod tests {
     }
 
     #[test]
+    fn into_variants_bit_match_allocating_variants() {
+        let mut rng = Rng::new(805);
+        let x = rng.gaussian_matrix(4, 18, 1.0);
+        let w = rng.gaussian_matrix(9, 18, 1.0);
+        let y = engine().matmul_nt(&x, &w);
+        let mut out = Matrix::zeros(1, 1);
+        engine().matmul_nt_into(&x, &w, &mut out);
+        assert_eq!(out.shape(), y.shape());
+        assert_eq!(out.data, y.data);
+
+        let a = BlastMatrix::random_init(12, 18, 3, 4, 1.0, &mut rng);
+        let yb = engine().blast_act(&x, &a);
+        let mut outb = Matrix::zeros(0, 0);
+        engine().blast_act_into(&x, &a, &mut outb);
+        assert_eq!(outb.shape(), yb.shape());
+        assert_eq!(outb.data, yb.data);
+    }
+
+    #[test]
+    fn static_and_serial_paths_bit_match_tuned_dispatch() {
+        let mut rng = Rng::new(806);
+        let x = rng.gaussian_matrix(5, 33, 1.0);
+        let w = rng.gaussian_matrix(11, 33, 1.0);
+        let tuned = engine().matmul_nt(&x, &w);
+        let stat = engine().matmul_nt_static(&x, &w);
+        let serial = engine().matmul_nt_serial(&x, &w);
+        assert_eq!(tuned.data, stat.data, "static path diverged from tuned");
+        assert_eq!(tuned.data, serial.data, "serial path diverged from tuned");
+    }
+
+    #[test]
     fn matmul_serial_matches_tensor_matmul() {
         let mut rng = Rng::new(804);
         let a = rng.gaussian_matrix(7, 12, 1.0);
@@ -449,6 +632,9 @@ mod tests {
         let x = Matrix::zeros(0, 6);
         let y = engine().matmul_nt(&x, &w);
         assert_eq!(y.shape(), (0, 4));
+        let mut out = Matrix::zeros(3, 3);
+        engine().matmul_nt_into(&x, &w, &mut out);
+        assert_eq!(out.shape(), (0, 4));
     }
 
     #[test]
@@ -470,6 +656,6 @@ mod tests {
         assert_eq!(view.p(), 4);
         assert_eq!(view.q(), 4);
         assert_eq!(view.s_row(1, 0), a.s[1][0].as_slice());
-        assert_eq!(view.u[1].shape(), (4, 3));
+        assert_eq!(view.u(1).shape(), (4, 3));
     }
 }

@@ -1,15 +1,32 @@
-//! The reference kernel: scalar triple loops, no blocking, no threading.
+//! The reference kernel: the fixed-lane accumulation contract spelled
+//! out with no blocking, no packing, no threading, and no SIMD.
 //!
-//! This is deliberately the slowest correct implementation — it mirrors
-//! the textbook definition of each op (dense `y_{t,o} = Σ_k x_{t,k}
-//! w_{o,k}`; BLAST Algorithm 1 block by block) so that every optimized
-//! kernel has an unambiguous parity target, and so the autotuner always
-//! has a universal fallback that supports every op.
+//! Deliberately the slowest correct implementation — it mirrors the
+//! textbook structure of each op (dense `y_{t,o} = x_t · w_o`; BLAST
+//! Algorithm 1 block by block) while computing **every contraction with
+//! [`micro::dot8`]**, the portable contract-defining dot product. Under
+//! the engine-wide fixed-lane contract the optimized kernels must
+//! reproduce this kernel's results *bit for bit* (not approximately),
+//! which is what `tests/kernel_parity.rs` asserts; the autotuner can
+//! therefore fall back to it for any op without changing a single bit.
+//!
+//! [`micro::dot8`]: super::micro::dot8
 
+use super::micro::dot8;
 use super::{BlastView, KernelOp, MatmulKernel};
 use crate::tensor::Matrix;
+use std::cell::RefCell;
 
-/// Scalar reference kernel (supports every op).
+thread_local! {
+    /// Per-thread (vcol, z, w) scratch for the BLAST reference path, so
+    /// `run_into` stays allocation-free — the autotuner may legitimately
+    /// pick `naive` for a hot decode shape, and the engine-wide
+    /// zero-allocation guarantee must not depend on which kernel wins.
+    static SCRATCH: RefCell<(Vec<f32>, Vec<f32>, Vec<f32>)> =
+        const { RefCell::new((Vec::new(), Vec::new(), Vec::new())) };
+}
+
+/// Contract-reference kernel (supports every op).
 pub struct NaiveKernel;
 
 impl MatmulKernel for NaiveKernel {
@@ -22,66 +39,74 @@ impl MatmulKernel for NaiveKernel {
     }
 
     fn run(&self, x: &Matrix, op: &KernelOp<'_>) -> Matrix {
+        let mut y = Matrix::zeros(x.rows, op.out_features());
+        self.run_into(x, op, &mut y);
+        y
+    }
+
+    fn run_into(&self, x: &Matrix, op: &KernelOp<'_>, out: &mut Matrix) {
+        out.reset(x.rows, op.out_features());
         match op {
-            KernelOp::DenseNt { w } => dense_nt(x, w),
-            KernelOp::Blast(a) => blast_act(x, a),
+            KernelOp::DenseNt { w } => dense_nt(x, w, out),
+            KernelOp::Blast(a) => blast_act(x, a, out),
         }
     }
 }
 
-fn dense_nt(x: &Matrix, w: &Matrix) -> Matrix {
-    let (batch, k) = x.shape();
+fn dense_nt(x: &Matrix, w: &Matrix, y: &mut Matrix) {
+    let (batch, _k) = x.shape();
     let out = w.rows;
-    let mut y = Matrix::zeros(batch, out);
     for t in 0..batch {
         for o in 0..out {
-            let mut acc = 0.0f32;
-            for c in 0..k {
-                acc += x.at(t, c) * w.at(o, c);
-            }
-            y.set(t, o, acc);
+            y.set(t, o, dot8(x.row(t), w.row(o)));
         }
     }
-    y
 }
 
-/// Algorithm 1, one block at a time, one token at a time.
-fn blast_act(x: &Matrix, a: &BlastView<'_>) -> Matrix {
+/// Algorithm 1, one block at a time, one token at a time. Stage 1 dots
+/// run over an explicitly gathered `V_j` column so the contraction order
+/// (ascending position within the block, 8-lane strided) matches the
+/// packed fused kernel exactly.
+fn blast_act(x: &Matrix, a: &BlastView<'_>, y: &mut Matrix) {
     let (p, q, b, r) = (a.p(), a.q(), a.b, a.r);
     let batch = x.rows;
-    let mut y = Matrix::zeros(batch, a.m);
-    for t in 0..batch {
-        let xrow = x.row(t);
-        // Stage 1: z_j = V_jᵀ x_j, column-major access into V (naive).
-        let mut z = vec![0.0f32; b * r];
-        for j in 0..b {
-            for k in 0..r {
-                let mut acc = 0.0f32;
-                for c in 0..q {
-                    acc += xrow[j * q + c] * a.v[j].at(c, k);
-                }
-                z[j * r + k] = acc;
-            }
-        }
-        // Stages 2+3 per output block row.
-        for i in 0..b {
-            let mut w = vec![0.0f32; r];
+    SCRATCH.with(|cell| {
+        let mut scratch = cell.borrow_mut();
+        let (vcol, z, w) = &mut *scratch;
+        vcol.clear();
+        vcol.resize(q, 0.0);
+        z.clear();
+        z.resize(b * r, 0.0);
+        w.clear();
+        w.resize(r, 0.0);
+        for t in 0..batch {
+            let xrow = x.row(t);
+            // Stage 1: z_j[k] = dot8(x_j, V_j[:, k]).
             for j in 0..b {
-                let s = a.s_row(i, j);
+                let vj = a.v(j);
+                let xj = &xrow[j * q..(j + 1) * q];
                 for k in 0..r {
-                    w[k] += s[k] * z[j * r + k];
+                    for (c, slot) in vcol.iter_mut().enumerate() {
+                        *slot = vj.at(c, k);
+                    }
+                    z[j * r + k] = dot8(xj, vcol);
                 }
             }
-            for c in 0..p {
-                let mut acc = 0.0f32;
-                for k in 0..r {
-                    acc += a.u[i].at(c, k) * w[k];
+            // Stage 2 (ascending j, per element) + stage 3 per block row.
+            for i in 0..b {
+                w.iter_mut().for_each(|v| *v = 0.0);
+                for j in 0..b {
+                    let s = a.s_row(i, j);
+                    for k in 0..r {
+                        w[k] += s[k] * z[j * r + k];
+                    }
                 }
-                y.set(t, i * p + c, acc);
+                for c in 0..p {
+                    y.set(t, i * p + c, dot8(a.u(i).row(c), w));
+                }
             }
         }
-    }
-    y
+    });
 }
 
 #[cfg(test)]

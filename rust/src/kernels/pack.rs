@@ -1,0 +1,345 @@
+//! B-panel packing for the SIMD microkernel, with a process-wide cache.
+//!
+//! The microkernel streams its weight operand from a **packed panel**:
+//! for each tile of `NR` output rows, the rows' 8-wide k-chunks are
+//! interleaved (`chunk 0` of rows `j0..j0+NR`, then `chunk 1`, …) so the
+//! inner loop reads one forward-moving contiguous stream instead of `NR`
+//! strided row cursors. Short tiles and ragged k-tails are zero-padded
+//! to full `NR × LANES` groups — the zeros fall out of the fixed-lane
+//! contract's padded-tail semantics, so padding never changes a bit.
+//!
+//! Weights are packed **once per (weights, shape)** and cached in the
+//! process-wide [`PackCache`]: the key is the weight buffer's address +
+//! shape, validated on every hit by a content fingerprint — full FNV
+//! for buffers of ≤ [`FULL_HASH_LIMIT`] elements, head/tail/strided
+//! sampling above that (see [`fingerprint`]'s docs for the exact
+//! detection contract and its deliberate blind spot for surgical
+//! single-element edits of large weights). Serving-path weights are
+//! immutable after load; the fingerprint is a safety net for
+//! whole-tensor in-place updates (optimizer steps, factor sweeps),
+//! which always touch sampled elements. Entries are dropped wholesale
+//! when the cache exceeds [`PACK_CACHE_CAP`] weights — packing is
+//! O(n·k), so a rare global re-pack beats tracking LRU order on the
+//! hot path.
+
+use super::micro::{LANES, NR};
+use crate::tensor::Matrix;
+use std::collections::HashMap;
+use std::sync::{Arc, OnceLock, RwLock};
+
+/// Maximum cached packed weights before the cache is cleared.
+pub const PACK_CACHE_CAP: usize = 1024;
+
+/// A weight matrix repacked into microkernel panels.
+pub struct PackedPanels {
+    /// Output rows represented (un-padded).
+    pub n: usize,
+    /// Shared (contraction) dimension (un-padded).
+    pub k: usize,
+    /// Number of 8-wide k-chunks (`k.div_ceil(LANES)`).
+    pub kc: usize,
+    /// Panel data: `tiles × kc × NR × LANES`, fully zero-padded.
+    pub data: Vec<f32>,
+}
+
+impl PackedPanels {
+    /// Number of `NR`-row tiles.
+    #[inline]
+    pub fn tiles(&self) -> usize {
+        self.n.div_ceil(NR)
+    }
+
+    /// The packed panel for one tile (`kc · NR · LANES` floats).
+    #[inline]
+    pub fn panel(&self, tile: usize) -> &[f32] {
+        let stride = self.kc * NR * LANES;
+        &self.data[tile * stride..(tile + 1) * stride]
+    }
+
+    fn empty(n: usize, k: usize) -> PackedPanels {
+        let kc = k.div_ceil(LANES);
+        let tiles = n.div_ceil(NR);
+        PackedPanels { n, k, kc, data: vec![0.0; tiles * kc * NR * LANES] }
+    }
+
+    /// Pack the rows of `w` (for `Y = X · Wᵀ`: output `o` is `w.row(o)`).
+    pub fn pack_rows(w: &Matrix) -> PackedPanels {
+        let mut p = PackedPanels::empty(w.rows, w.cols);
+        for o in 0..w.rows {
+            p.write_row(o, w.row(o));
+        }
+        p
+    }
+
+    /// Pack the **columns** of `v` (for `z = Vᵀ x`: output `o` is
+    /// `v.col(o)`, gathered without materializing the transpose).
+    pub fn pack_cols(v: &Matrix) -> PackedPanels {
+        let mut p = PackedPanels::empty(v.cols, v.rows);
+        let stride = p.kc * NR * LANES;
+        for o in 0..v.cols {
+            let tile = o / NR;
+            let jj = o % NR;
+            let base = tile * stride + jj * LANES;
+            for c in 0..v.rows {
+                p.data[base + (c / LANES) * NR * LANES + (c % LANES)] = v.at(c, o);
+            }
+        }
+        p
+    }
+
+    fn write_row(&mut self, o: usize, row: &[f32]) {
+        let stride = self.kc * NR * LANES;
+        let tile = o / NR;
+        let jj = o % NR;
+        let base = tile * stride + jj * LANES;
+        for (c, &v) in row.iter().enumerate() {
+            self.data[base + (c / LANES) * NR * LANES + (c % LANES)] = v;
+        }
+    }
+
+    /// Recover packed row `o` (tests / diagnostics).
+    pub fn unpack_row(&self, o: usize) -> Vec<f32> {
+        let stride = self.kc * NR * LANES;
+        let tile = o / NR;
+        let jj = o % NR;
+        let base = tile * stride + jj * LANES;
+        (0..self.k).map(|c| self.data[base + (c / LANES) * NR * LANES + (c % LANES)]).collect()
+    }
+}
+
+/// Cache key: buffer identity + shape + pack orientation.
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+struct PackKey {
+    ptr: usize,
+    rows: usize,
+    cols: usize,
+    cols_packed: bool,
+}
+
+struct PackEntry {
+    fingerprint: u64,
+    panels: Arc<PackedPanels>,
+}
+
+/// Process-wide packed-weight cache (see the module docs).
+pub struct PackCache {
+    entries: RwLock<HashMap<PackKey, PackEntry>>,
+}
+
+impl PackCache {
+    pub fn new() -> Self {
+        PackCache { entries: RwLock::new(HashMap::new()) }
+    }
+
+    /// Packed rows of `w`, from cache when the fingerprint still matches.
+    pub fn rows(&self, w: &Matrix) -> Arc<PackedPanels> {
+        self.get(w, false)
+    }
+
+    /// Packed columns of `v`, from cache when the fingerprint matches.
+    pub fn cols(&self, v: &Matrix) -> Arc<PackedPanels> {
+        self.get(v, true)
+    }
+
+    fn get(&self, w: &Matrix, cols_packed: bool) -> Arc<PackedPanels> {
+        let key = PackKey {
+            ptr: w.data.as_ptr() as usize,
+            rows: w.rows,
+            cols: w.cols,
+            cols_packed,
+        };
+        let fp = fingerprint(&w.data);
+        {
+            let entries = self.entries.read().unwrap();
+            if let Some(e) = entries.get(&key) {
+                if e.fingerprint == fp {
+                    return Arc::clone(&e.panels);
+                }
+            }
+        }
+        let panels = Arc::new(if cols_packed {
+            PackedPanels::pack_cols(w)
+        } else {
+            PackedPanels::pack_rows(w)
+        });
+        let mut entries = self.entries.write().unwrap();
+        if entries.len() >= PACK_CACHE_CAP {
+            entries.clear();
+        }
+        entries.insert(key, PackEntry { fingerprint: fp, panels: Arc::clone(&panels) });
+        panels
+    }
+
+    /// Number of cached weights (diagnostics / tests).
+    pub fn len(&self) -> usize {
+        self.entries.read().unwrap().len()
+    }
+
+    /// True when no weights are cached.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl Default for PackCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// The process-wide pack cache.
+pub fn pack_cache() -> &'static PackCache {
+    static CACHE: OnceLock<PackCache> = OnceLock::new();
+    CACHE.get_or_init(PackCache::new)
+}
+
+/// Buffers up to this many elements are fully hashed by
+/// [`fingerprint`]; larger ones are sampled. Every weight in the test
+/// models (and any factor matrix up to 32×32) sits below it, so
+/// single-element mutations of those are always detected.
+pub const FULL_HASH_LIMIT: usize = 1024;
+
+/// FNV-1a content fingerprint, run on every cache lookup.
+///
+/// Buffers of ≤ [`FULL_HASH_LIMIT`] elements are hashed in full —
+/// **any** in-place mutation invalidates. Larger buffers hash the
+/// first 64, the last 64, and 128 evenly strided interior elements:
+/// whole-tensor updates (optimizer steps, factor sweeps, checkpoint
+/// loads) always touch sampled elements and are detected, but a
+/// surgical edit of a single unsampled element of a large cached
+/// weight would not be. That trade keeps hit validation O(1) at
+/// serving sizes; serving-path weights are immutable after load, and
+/// the mutation-heavy paths (factorization, attention scores) use the
+/// unpacked kernels, which never consult this cache. Code that does
+/// fine-grained in-place edits of large weights must route them
+/// through a fresh buffer (or the allocating `Matrix` ops) rather
+/// than relying on sampled detection.
+fn fingerprint(data: &[f32]) -> u64 {
+    const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+    const FNV_PRIME: u64 = 0x100000001b3;
+    let mut h = FNV_OFFSET ^ (data.len() as u64);
+    // Word-wise FNV (one xor+mul per f32, not per byte): this runs on
+    // every cache hit, so validation must stay a small fraction of the
+    // product it guards even for batch-1 dispatches on small weights.
+    let mut eat = |v: f32| {
+        h ^= u64::from(v.to_bits());
+        h = h.wrapping_mul(FNV_PRIME);
+    };
+    let n = data.len();
+    if n <= FULL_HASH_LIMIT {
+        for &v in data {
+            eat(v);
+        }
+        return h;
+    }
+    for &v in &data[..64] {
+        eat(v);
+    }
+    for &v in &data[n - 64..] {
+        eat(v);
+    }
+    let stride = (n - 128).max(1) / 128 + 1;
+    let mut i = 64;
+    while i < n - 64 {
+        eat(data[i]);
+        i += stride;
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn pack_rows_round_trip() {
+        let mut rng = Rng::new(870);
+        for &(n, k) in &[(1usize, 1usize), (3, 8), (4, 9), (5, 17), (13, 31)] {
+            let w = rng.gaussian_matrix(n, k, 1.0);
+            let p = PackedPanels::pack_rows(&w);
+            assert_eq!(p.n, n);
+            assert_eq!(p.k, k);
+            for o in 0..n {
+                assert_eq!(p.unpack_row(o), w.row(o), "n={n} k={k} row {o}");
+            }
+        }
+    }
+
+    #[test]
+    fn pack_cols_round_trip() {
+        let mut rng = Rng::new(871);
+        for &(rows, cols) in &[(1usize, 1usize), (8, 3), (9, 4), (17, 5), (31, 13)] {
+            let v = rng.gaussian_matrix(rows, cols, 1.0);
+            let p = PackedPanels::pack_cols(&v);
+            assert_eq!(p.n, cols);
+            assert_eq!(p.k, rows);
+            for o in 0..cols {
+                assert_eq!(p.unpack_row(o), v.col(o), "rows={rows} cols={cols} col {o}");
+            }
+        }
+    }
+
+    #[test]
+    fn padding_regions_are_zero() {
+        let mut rng = Rng::new(872);
+        let w = rng.gaussian_matrix(5, 9, 1.0); // ragged tile AND ragged k
+        let p = PackedPanels::pack_rows(&w);
+        // Tile 1 holds row 4 plus three padding rows; chunk 1 holds one
+        // real k element plus seven padding lanes per row.
+        let stride = p.kc * NR * LANES;
+        for tile in 0..p.tiles() {
+            for jj in 0..NR {
+                let o = tile * NR + jj;
+                for c in 0..p.kc * LANES {
+                    let v = p.data[tile * stride + (c / LANES) * NR * LANES + jj * LANES + (c % LANES)];
+                    if o >= p.n || c >= p.k {
+                        assert_eq!(v, 0.0, "padding at tile={tile} jj={jj} c={c}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cache_hits_and_invalidates_on_mutation() {
+        let cache = PackCache::new();
+        let mut rng = Rng::new(873);
+        let mut w = rng.gaussian_matrix(6, 10, 1.0);
+        let p1 = cache.rows(&w);
+        let p2 = cache.rows(&w);
+        assert!(Arc::ptr_eq(&p1, &p2), "second lookup must hit the cache");
+        assert_eq!(cache.len(), 1);
+
+        // In-place weight mutation (the matrix is small enough that the
+        // fingerprint hashes every element): the stale panel must not be
+        // served.
+        w.set(3, 7, w.at(3, 7) + 1.0);
+        let p3 = cache.rows(&w);
+        assert!(!Arc::ptr_eq(&p1, &p3), "mutated weight must repack");
+        assert_eq!(p3.unpack_row(3), w.row(3));
+
+        // Row-pack and col-pack of the same buffer are distinct entries.
+        let pc = cache.cols(&w);
+        assert_eq!(pc.n, w.cols);
+        assert!(cache.len() >= 2);
+    }
+
+    #[test]
+    fn fingerprint_sensitive_to_strided_interior_sample() {
+        // Large buffer: only sampled elements are hashed; mutating a
+        // sampled interior element must change the fingerprint.
+        let mut data = vec![0.5f32; 10_000];
+        let f0 = fingerprint(&data);
+        data[0] = 1.0; // head sample
+        let f1 = fingerprint(&data);
+        assert_ne!(f0, f1);
+        data[9_999] = 2.0; // tail sample
+        let f2 = fingerprint(&data);
+        assert_ne!(f1, f2);
+        let mut other = vec![0.5f32; 10_001]; // length folds into the hash
+        other[0] = 1.0;
+        other[10_000] = 2.0;
+        assert_ne!(fingerprint(&other), f2);
+    }
+}

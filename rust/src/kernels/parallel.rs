@@ -1,19 +1,22 @@
-//! Thread-parallel dense kernel: the tiled row micro-kernel fanned out
-//! over `util::par`'s scoped-thread pool.
+//! Thread-parallel dense kernel: the packed microkernel fanned out over
+//! `util::par`'s scoped-thread pool.
 //!
-//! The output is partitioned into contiguous row chunks (one per worker);
-//! each worker runs `tiled::dense_nt_rows` on its chunk, so workers share
-//! read-only `x`/`W` and own disjoint slices of `Y` — no locks, no false
-//! sharing beyond chunk boundaries. For a single-row batch the chunking
-//! degenerates to one chunk and `par_chunks_mut` runs it inline, so the
-//! kernel is safe (if pointless) at decode shapes; the autotuner is what
-//! keeps it off them.
+//! The weight panels come from the same process-wide pack cache as the
+//! single-threaded kernel (packed once, shared read-only across
+//! workers). The output is partitioned into contiguous row chunks (one
+//! per worker); each worker runs `micro::nt_rows_packed` on its chunk,
+//! so workers share read-only `x`/panels and own disjoint slices of `Y`
+//! — no locks, no false sharing beyond chunk boundaries. Per-row
+//! arithmetic is exactly the single-thread routine, so the fan-out is
+//! bit-identical to `dense_tiled` (the engine's fixed-lane contract).
 
-use super::{tiled, KernelOp, MatmulKernel};
+use super::micro;
+use super::pack;
+use super::{KernelOp, MatmulKernel};
 use crate::tensor::Matrix;
 use crate::util::par;
 
-/// Row-parallel tiled dense kernel.
+/// Row-parallel packed-microkernel dense kernel.
 pub struct ParallelKernel;
 
 impl MatmulKernel for ParallelKernel {
@@ -26,28 +29,42 @@ impl MatmulKernel for ParallelKernel {
     }
 
     fn run(&self, x: &Matrix, op: &KernelOp<'_>) -> Matrix {
+        let mut y = Matrix::zeros(x.rows, op.out_features());
+        self.run_into_buf(x, op, &mut y.data);
+        y
+    }
+
+    fn run_into(&self, x: &Matrix, op: &KernelOp<'_>, out: &mut Matrix) {
+        out.reset(x.rows, op.out_features());
+        self.run_into_buf(x, op, &mut out.data);
+    }
+}
+
+impl ParallelKernel {
+    fn run_into_buf(&self, x: &Matrix, op: &KernelOp<'_>, out: &mut [f32]) {
         let KernelOp::DenseNt { w } = op else {
             unreachable!("ParallelKernel only supports DenseNt (checked via supports)")
         };
         let batch = x.rows;
         let n = w.rows;
-        let mut y = Matrix::zeros(batch, n);
         if batch == 0 || n == 0 {
-            return y;
+            return;
         }
+        let panels = pack::pack_cache().rows(w);
+        let mode = micro::simd_mode();
         let chunk_rows = batch.div_ceil(par::num_threads()).max(1);
-        par::par_chunks_mut(&mut y.data, chunk_rows * n, |ci, chunk| {
+        par::par_chunks_mut(out, chunk_rows * n, |ci, chunk| {
             let t0 = ci * chunk_rows;
             let rows = chunk.len() / n;
-            tiled::dense_nt_rows(x, w, t0, rows, chunk);
+            micro::nt_rows_packed(mode, x, &panels, t0, rows, chunk);
         });
-        y
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kernels::TiledKernel;
     use crate::tensor::Rng;
 
     #[test]
@@ -62,6 +79,20 @@ mod tests {
                 y.sub(&y_ref).fro_norm() < 1e-3 * (1.0 + y_ref.fro_norm()),
                 "mismatch at batch={batch} k={k} n={n}"
             );
+        }
+    }
+
+    #[test]
+    fn bit_identical_to_single_thread() {
+        let mut rng = Rng::new(831);
+        for &(batch, k, n) in &[(1, 9, 5), (17, 33, 20), (64, 100, 31)] {
+            let x = rng.gaussian_matrix(batch, k, 1.0);
+            let w = rng.gaussian_matrix(n, k, 1.0);
+            let y_par = ParallelKernel.run(&x, &KernelOp::DenseNt { w: &w });
+            let y_one = TiledKernel.run(&x, &KernelOp::DenseNt { w: &w });
+            for (i, (a, b)) in y_par.data.iter().zip(&y_one.data).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "batch={batch} k={k} n={n} elem {i}");
+            }
         }
     }
 }

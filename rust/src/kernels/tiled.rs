@@ -1,28 +1,30 @@
-//! Cache-blocked dense `Y = X · Wᵀ` kernel.
+//! Packed-microkernel dense `Y = X · Wᵀ` kernel.
 //!
-//! Blocking scheme (single-threaded; `parallel::ParallelKernel` reuses
-//! the same row micro-kernel across threads):
+//! The weight is repacked once into microkernel B-panels (cached
+//! process-wide by `pack::PackCache`, so serving-path layer weights pay
+//! the pack exactly once) and the product runs as `MR×NR` register
+//! blocks of 8-lane SIMD partial sums (`micro::nt_rows_packed`).
+//! `parallel::ParallelKernel` reuses the same routine across threads,
+//! one disjoint output-row chunk per worker.
 //!
-//! * output columns are processed in `NR`-wide register tiles: one pass
-//!   over an activation row feeds `NR` simultaneous dot-product
-//!   accumulators, so each loaded `x` value is reused `NR` times;
-//! * within a column tile the batch loop is outermost per tile, so the
-//!   `NR` weight rows stay cache-hot across the activation rows;
-//! * every inner product is a single sequential ascending-`k` sum over
-//!   contiguous slices — no shared-dimension panel splitting. This is
-//!   the engine-wide **bit-stability invariant**: all dense kernels
-//!   accumulate each output element in the same order, so the
-//!   autotuner's per-(shape, batch) kernel choice can never change
-//!   results by a single bit (the prefill/decode identity in
-//!   `nn::gpt::prefill` depends on this).
+//! Every output element follows the engine-wide **fixed-lane
+//! accumulation contract** (see `micro`): 8-lane strided partials over
+//! ascending k-chunks, zero-padded tail, fixed-tree reduction. The
+//! packed, unpacked, portable, and AVX2 paths all produce identical
+//! bits, so the autotuner's per-(shape, batch) kernel choice never
+//! changes a result (the prefill/decode identity in `nn::gpt::prefill`
+//! depends on this).
+//!
+//! [`dense_nt_rows_unpacked`] is the cache-free variant for transient
+//! activation×activation products (attention scores, factorization
+//! sweeps): same bits, no panel reuse to exploit, no pack-cache churn.
 
+use super::micro::{self, SimdMode};
+use super::pack;
 use super::{KernelOp, MatmulKernel};
 use crate::tensor::Matrix;
 
-/// Output-column register-tile width.
-const NR: usize = 8;
-
-/// Cache-blocked dense kernel.
+/// Packed-microkernel dense kernel.
 pub struct TiledKernel;
 
 impl MatmulKernel for TiledKernel {
@@ -35,19 +37,61 @@ impl MatmulKernel for TiledKernel {
     }
 
     fn run(&self, x: &Matrix, op: &KernelOp<'_>) -> Matrix {
-        let KernelOp::DenseNt { w } = op else {
-            unreachable!("TiledKernel only supports DenseNt (checked via supports)")
-        };
-        let mut y = Matrix::zeros(x.rows, w.rows);
-        dense_nt_rows(x, w, 0, x.rows, &mut y.data);
+        let mut y = Matrix::zeros(x.rows, op.out_features());
+        self.run_into_buf(x, op, &mut y.data);
         y
+    }
+
+    fn run_into(&self, x: &Matrix, op: &KernelOp<'_>, out: &mut Matrix) {
+        out.reset(x.rows, op.out_features());
+        self.run_into_buf(x, op, &mut out.data);
     }
 }
 
-/// Compute rows `t0 .. t0+rows` of `Y = X · Wᵀ` into `out` (a
-/// `rows × w.rows` row-major slice). Shared with the parallel kernel,
-/// which hands each worker a disjoint output-row chunk.
-pub(crate) fn dense_nt_rows(x: &Matrix, w: &Matrix, t0: usize, rows: usize, out: &mut [f32]) {
+impl TiledKernel {
+    fn run_into_buf(&self, x: &Matrix, op: &KernelOp<'_>, out: &mut [f32]) {
+        let KernelOp::DenseNt { w } = op else {
+            unreachable!("TiledKernel only supports DenseNt (checked via supports)")
+        };
+        let panels = pack::pack_cache().rows(w);
+        micro::nt_rows_packed(micro::simd_mode(), x, &panels, 0, x.rows, out);
+    }
+}
+
+/// Rows `t0 .. t0+rows` of `Y = X · Wᵀ` into `out` without packing:
+/// per-element `dot8_with` over the raw weight rows (weight row held
+/// hot across the batch). Bit-identical to the packed path.
+pub(crate) fn dense_nt_rows_unpacked(
+    mode: SimdMode,
+    x: &Matrix,
+    w: &Matrix,
+    t0: usize,
+    rows: usize,
+    out: &mut [f32],
+) {
+    let n = w.rows;
+    debug_assert_eq!(out.len(), rows * n);
+    for o in 0..n {
+        let wrow = w.row(o);
+        for tt in 0..rows {
+            out[tt * n + o] = micro::dot8_with(mode, x.row(t0 + tt), wrow);
+        }
+    }
+}
+
+/// The pre-SIMD (PR-3) scalar inner loop: one sequential ascending-k
+/// accumulator per output element, 8-wide output-column register tiles.
+/// Kept **only** as the benchmark baseline for the microkernel speedup
+/// gate (`benches/blast_matmul.rs`) — it does *not* satisfy the
+/// fixed-lane contract and must never be registered as a kernel.
+pub fn dense_nt_rows_scalar_baseline(
+    x: &Matrix,
+    w: &Matrix,
+    t0: usize,
+    rows: usize,
+    out: &mut [f32],
+) {
+    const NR: usize = 8;
     let k = x.cols;
     let n = w.rows;
     debug_assert_eq!(out.len(), rows * n);
@@ -60,8 +104,6 @@ pub(crate) fn dense_nt_rows(x: &Matrix, w: &Matrix, t0: usize, rows: usize, out:
             for (jj, j) in (j0..j1).enumerate() {
                 let wrow = w.row(j);
                 let mut s = 0.0f32;
-                // Single sequential ascending-k pass over contiguous
-                // slices (see the bit-stability invariant above).
                 for c in 0..k {
                     s += xrow[c] * wrow[c];
                 }
@@ -81,9 +123,12 @@ mod tests {
     #[test]
     fn matches_reference_across_awkward_shapes() {
         let mut rng = Rng::new(820);
-        // Shapes straddling the NR register-tile boundary and large-k cases.
+        // Shapes straddling the NR/MR register blocks, the 8-lane chunk
+        // boundary, and large-k cases.
         for &(batch, k, n) in &[
             (1, 1, 1),
+            (1, 9, 3),
+            (2, 8, 4),
             (3, 7, 5),
             (2, 255, 9),
             (4, 256, 8),
@@ -99,12 +144,52 @@ mod tests {
                 y.sub(&y_ref).fro_norm() < 1e-3 * (1.0 + y_ref.fro_norm()),
                 "mismatch at batch={batch} k={k} n={n}"
             );
+            // Bit-identical to the contract reference.
+            let naive = super::super::NaiveKernel.run(&x, &KernelOp::DenseNt { w: &w });
+            for (i, (a, b)) in y.data.iter().zip(&naive.data).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "contract violation at batch={batch} k={k} n={n} elem {i}"
+                );
+            }
         }
     }
 
     #[test]
-    fn declines_blast_ops() {
+    fn unpacked_matches_packed_bitwise() {
         let mut rng = Rng::new(821);
+        for &(batch, k, n) in &[(1, 5, 3), (3, 31, 9), (4, 64, 12), (2, 129, 7)] {
+            let x = rng.gaussian_matrix(batch, k, 1.0);
+            let w = rng.gaussian_matrix(n, k, 1.0);
+            let packed = TiledKernel.run(&x, &KernelOp::DenseNt { w: &w });
+            let mut unpacked = vec![0.0f32; batch * n];
+            dense_nt_rows_unpacked(micro::simd_mode(), &x, &w, 0, batch, &mut unpacked);
+            for (i, (a, b)) in packed.data.iter().zip(&unpacked).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "batch={batch} k={k} n={n} elem {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn run_into_reuses_buffer_and_matches_run() {
+        let mut rng = Rng::new(822);
+        let x = rng.gaussian_matrix(3, 20, 1.0);
+        let w = rng.gaussian_matrix(7, 20, 1.0);
+        let op = KernelOp::DenseNt { w: &w };
+        let y = TiledKernel.run(&x, &op);
+        let mut out = Matrix::zeros(3, 7);
+        let cap = out.data.capacity();
+        let ptr = out.data.as_ptr();
+        TiledKernel.run_into(&x, &op, &mut out);
+        assert_eq!(out.data, y.data);
+        assert_eq!(out.data.capacity(), cap);
+        assert_eq!(out.data.as_ptr(), ptr, "same-size run_into must not reallocate");
+    }
+
+    #[test]
+    fn declines_blast_ops() {
+        let mut rng = Rng::new(823);
         let a = crate::blast::BlastMatrix::random_init(4, 4, 2, 2, 1.0, &mut rng);
         let view = super::super::BlastView::from_matrix(&a);
         assert!(!TiledKernel.supports(&KernelOp::Blast(view), 1));

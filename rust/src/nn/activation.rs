@@ -13,6 +13,12 @@ pub fn gelu_scalar(x: f32) -> f32 {
     0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
 }
 
+/// In-place GELU (the decode hot path's allocation-free variant;
+/// bit-identical to [`gelu`]).
+pub fn gelu_inplace(x: &mut Matrix) {
+    x.map_inplace(gelu_scalar);
+}
+
 /// d/dx gelu(x).
 #[inline]
 pub fn gelu_grad_scalar(x: f32) -> f32 {

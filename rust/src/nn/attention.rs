@@ -11,6 +11,7 @@ use super::kvcache::LayerKv;
 use super::linear::{Linear, LinearCache};
 use super::param::PTensor;
 use crate::tensor::{Matrix, Rng};
+use crate::util::arena::ScratchArena;
 
 /// Which structure a model's linear layers use (from-scratch training).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -253,13 +254,26 @@ impl Attention {
     /// (which must start zeroed). Shared verbatim by the single-token,
     /// batched, and prefill decode paths — one code path is what keeps
     /// them bit-identical.
-    fn decode_attend(&self, qkv_row: &[f32], kv: &LayerKv, len: usize, ctx_row: &mut [f32]) {
+    ///
+    /// `scores` is caller-owned scratch (resized, never shrunk): the
+    /// batched decode path hands in an arena buffer so the per-step
+    /// `vec![0.0; len]` allocation this loop used to make per head is
+    /// gone from the hot path.
+    fn decode_attend(
+        &self,
+        qkv_row: &[f32],
+        kv: &LayerKv,
+        len: usize,
+        ctx_row: &mut [f32],
+        scores: &mut Vec<f32>,
+    ) {
         let hd = self.head_dim;
         let scale = 1.0 / (hd as f32).sqrt();
+        scores.clear();
+        scores.resize(len, 0.0);
         for h in 0..self.n_heads {
             let q = &qkv_row[h * hd..(h + 1) * hd];
             // Scores over the cached keys.
-            let mut scores = vec![0.0f32; len];
             let mut max = f32::NEG_INFINITY;
             for u in 0..len {
                 let krow = &kv.k.row(u)[h * hd..(h + 1) * hd];
@@ -296,7 +310,8 @@ impl Attention {
         let row = qkv.row(0);
         kv.append(&row[d..2 * d], &row[2 * d..3 * d]);
         let mut ctx = Matrix::zeros(1, d);
-        self.decode_attend(row, kv, kv.len, ctx.row_mut(0));
+        let mut scores = Vec::new();
+        self.decode_attend(row, kv, kv.len, ctx.row_mut(0), &mut scores);
         self.wo.forward(&ctx)
     }
 
@@ -311,17 +326,54 @@ impl Attention {
     /// and every row is bit-identical to a lone `forward_decode` on the
     /// same slot.
     pub fn forward_decode_batch(&self, x: &Matrix, kv: &mut [LayerKv], slots: &[usize]) -> Matrix {
+        let mut arena = crate::util::arena::ScratchArena::new();
+        let mut out = Matrix::zeros(0, 0);
+        self.forward_decode_batch_into(x, kv, slots, &mut out, &mut arena);
+        out
+    }
+
+    /// Allocation-free [`forward_decode_batch`]: all temporaries (QKV,
+    /// context, per-head attention scores, the output projection) come
+    /// from `arena` or the kernels' pooled scratch, so a warm steady
+    /// state call performs zero heap allocations. Bit-identical to the
+    /// allocating wrapper.
+    ///
+    /// [`forward_decode_batch`]: Attention::forward_decode_batch
+    pub fn forward_decode_batch_into(
+        &self,
+        x: &Matrix,
+        kv: &mut [LayerKv],
+        slots: &[usize],
+        out: &mut Matrix,
+        arena: &mut ScratchArena,
+    ) {
         assert_eq!(x.rows, slots.len(), "one activation row per active slot");
         let d = self.d_model;
-        let qkv = self.wqkv.forward(x); // n_active×3d, batched
-        let mut ctx = Matrix::zeros(x.rows, d);
+        // Taken at the exact output shape so the kernel's `reset` stays
+        // within the pooled buffer's capacity (no reallocation).
+        let mut qkv = arena.take_matrix(x.rows, self.wqkv.out_features);
+        self.wqkv.forward_into(x, &mut qkv, arena); // n_active×3d, batched
+        let mut ctx = arena.take_matrix(x.rows, d);
+        // Score scratch sized by slot *capacity* (not current length):
+        // capacities only change on rare KV growth, so the arena class
+        // this take maps to is stable across steps and decode_attend's
+        // per-slot resize always stays within the pooled buffer.
+        let max_len = slots
+            .iter()
+            .map(|&s| kv[s].capacity().max(kv[s].len + 1))
+            .max()
+            .unwrap_or(0);
+        let mut scores = arena.take(max_len);
         for (t, &slot) in slots.iter().enumerate() {
             let row = qkv.row(t);
             let lkv = &mut kv[slot];
             lkv.append(&row[d..2 * d], &row[2 * d..3 * d]);
-            self.decode_attend(row, lkv, lkv.len, ctx.row_mut(t));
+            self.decode_attend(row, lkv, lkv.len, ctx.row_mut(t), &mut scores);
         }
-        self.wo.forward(&ctx) // n_active×d, batched
+        self.wo.forward_into(&ctx, out, arena); // n_active×d, batched
+        arena.recycle(scores);
+        arena.recycle_matrix(ctx);
+        arena.recycle_matrix(qkv);
     }
 
     /// Batched prefill: ingest `x (seq×d)` in one pass, appending every
@@ -343,9 +395,10 @@ impl Attention {
             kv.append(&row[d..2 * d], &row[2 * d..3 * d]);
         }
         let mut ctx = Matrix::zeros(seq, d);
+        let mut scores = Vec::with_capacity(base + seq);
         for t in 0..seq {
             // Causal: position base+t attends to positions 0..=base+t.
-            self.decode_attend(qkv.row(t), kv, base + t + 1, ctx.row_mut(t));
+            self.decode_attend(qkv.row(t), kv, base + t + 1, ctx.row_mut(t), &mut scores);
         }
         self.wo.forward(&ctx) // seq×d, batched
     }

@@ -1,13 +1,14 @@
 //! Pre-LN transformer block: `x + Attn(LN(x))`, `x + MLP(LN(x))`, with the
 //! MLP's two linears also structured.
 
-use super::activation::{gelu, gelu_backward};
+use super::activation::{gelu, gelu_backward, gelu_inplace};
 use super::attention::{AttnCache, Attention, StructureKind};
 use super::kvcache::LayerKv;
 use super::layernorm::{LayerNorm, LnCache};
 use super::linear::{Linear, LinearCache};
 use super::param::PTensor;
 use crate::tensor::{Matrix, Rng};
+use crate::util::arena::ScratchArena;
 
 /// One transformer block.
 #[derive(Clone, Debug)]
@@ -135,11 +136,53 @@ impl Block {
     /// linears run as batched kernel dispatches, so each row is
     /// bit-identical to a lone `forward_decode` on that slot.
     pub fn forward_decode_batch(&self, x: &Matrix, kv: &mut [LayerKv], slots: &[usize]) -> Matrix {
-        let a = self.attn.forward_decode_batch(&self.ln1.forward(x), kv, slots);
-        let x_mid = x.add(&a);
-        let h = gelu(&self.fc1.forward(&self.ln2.forward(&x_mid)));
-        let m = self.fc2.forward(&h);
-        x_mid.add(&m)
+        let mut arena = crate::util::arena::ScratchArena::new();
+        let mut out = Matrix::zeros(x.rows, self.d_model);
+        self.forward_decode_batch_into(x, kv, slots, &mut out, &mut arena);
+        out
+    }
+
+    /// Allocation-free [`forward_decode_batch`]: every intermediate
+    /// (LN outputs, attention output, MLP hidden) comes from `arena`,
+    /// residuals are added in place, and `out` must be caller-owned
+    /// (ideally arena-backed) — a warm call never touches the
+    /// allocator. Bit-identical to the allocating wrapper.
+    ///
+    /// [`forward_decode_batch`]: Block::forward_decode_batch
+    pub fn forward_decode_batch_into(
+        &self,
+        x: &Matrix,
+        kv: &mut [LayerKv],
+        slots: &[usize],
+        out: &mut Matrix,
+        arena: &mut ScratchArena,
+    ) {
+        let rows = x.rows;
+        let d = self.d_model;
+        let mut ln1_out = arena.take_matrix(rows, d);
+        self.ln1.forward_into(x, &mut ln1_out);
+        let mut a = arena.take_matrix(rows, d);
+        self.attn.forward_decode_batch_into(&ln1_out, kv, slots, &mut a, arena);
+        arena.recycle_matrix(ln1_out);
+        // x_mid = x + a, in place over the attention output (same
+        // element order as `x.add(&a)`).
+        for (av, xv) in a.data.iter_mut().zip(&x.data) {
+            *av = *xv + *av;
+        }
+        let x_mid = a;
+        let mut ln2_out = arena.take_matrix(rows, d);
+        self.ln2.forward_into(&x_mid, &mut ln2_out);
+        let mut h = arena.take_matrix(rows, self.fc1.out_features);
+        self.fc1.forward_into(&ln2_out, &mut h, arena);
+        arena.recycle_matrix(ln2_out);
+        gelu_inplace(&mut h);
+        self.fc2.forward_into(&h, out, arena);
+        arena.recycle_matrix(h);
+        // y = x_mid + m, in place over the MLP output.
+        for (ov, xv) in out.data.iter_mut().zip(&x_mid.data) {
+            *ov = *xv + *ov;
+        }
+        arena.recycle_matrix(x_mid);
     }
 
     /// KV-cached batched prefill over `x (seq×d)`: every non-attention

@@ -13,6 +13,7 @@ use super::linear::{Linear, LinearCache};
 use super::param::PTensor;
 use crate::tensor::io::TensorBundle;
 use crate::tensor::{Matrix, Rng};
+use crate::util::arena::ScratchArena;
 use anyhow::Result;
 
 /// Model configuration.
@@ -307,12 +308,38 @@ impl TinyLM {
         pool: &mut KvPool,
         slots: &[usize],
     ) -> Matrix {
+        let mut arena = ScratchArena::new();
+        let mut logits = Matrix::zeros(0, self.cfg.vocab);
+        self.decode_step_batch_into(toks, pool, slots, &mut arena, &mut logits);
+        logits
+    }
+
+    /// Allocation-free [`decode_step_batch`]: the embedded batch, every
+    /// block's intermediates, and the final LayerNorm come from
+    /// `arena`; the logits land in the caller-owned `logits` buffer
+    /// (reshaped in place). Once the arena, the kernel plan table, the
+    /// packed-panel cache, and the kernels' thread-local scratch are
+    /// warm at a given batch shape, a steady-state iteration performs
+    /// **zero heap allocations** (`tests/decode_alloc.rs` asserts this
+    /// with a counting allocator). Bit-identical to the allocating
+    /// wrapper.
+    ///
+    /// [`decode_step_batch`]: TinyLM::decode_step_batch
+    pub fn decode_step_batch_into(
+        &self,
+        toks: &[usize],
+        pool: &mut KvPool,
+        slots: &[usize],
+        arena: &mut ScratchArena,
+        logits: &mut Matrix,
+    ) {
         assert_eq!(toks.len(), slots.len(), "one token per active slot");
         if slots.is_empty() {
-            return Matrix::zeros(0, self.cfg.vocab);
+            logits.reset(0, self.cfg.vocab);
+            return;
         }
         let d = self.cfg.d_model;
-        let mut x = Matrix::zeros(toks.len(), d);
+        let mut x = arena.take_matrix(toks.len(), d);
         for (t, (&tok, &slot)) in toks.iter().zip(slots).enumerate() {
             assert!(tok < self.cfg.vocab, "token {tok} out of vocab");
             let e = self.tok_embed.v.row(tok);
@@ -322,10 +349,17 @@ impl TinyLM {
                 row[c] = e[c] + p[c];
             }
         }
+        let mut y = arena.take_matrix(toks.len(), d);
         for (l, blk) in self.blocks.iter().enumerate() {
-            x = blk.forward_decode_batch(&x, pool.layer_mut(l), slots);
+            blk.forward_decode_batch_into(&x, pool.layer_mut(l), slots, &mut y, arena);
+            std::mem::swap(&mut x, &mut y);
         }
-        self.head.forward(&self.ln_f.forward(&x))
+        let mut ln_out = arena.take_matrix(toks.len(), d);
+        self.ln_f.forward_into(&x, &mut ln_out);
+        self.head.forward_into(&ln_out, logits, arena);
+        arena.recycle_matrix(ln_out);
+        arena.recycle_matrix(y);
+        arena.recycle_matrix(x);
     }
 
     pub fn new_kv_cache(&self) -> KvCache {

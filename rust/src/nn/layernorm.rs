@@ -41,6 +41,28 @@ impl LayerNorm {
         (y, c.unwrap())
     }
 
+    /// Allocation-free inference forward into a caller-owned output
+    /// (bit-identical to [`forward`]; the decode hot path's variant).
+    ///
+    /// [`forward`]: LayerNorm::forward
+    pub fn forward_into(&self, x: &Matrix, out: &mut Matrix) {
+        assert_eq!(x.cols, self.dim);
+        out.reset(x.rows, x.cols);
+        let g = self.gamma.v.row(0);
+        let b = self.beta.v.row(0);
+        for i in 0..x.rows {
+            let row = x.row(i);
+            let mean = row.iter().sum::<f32>() / self.dim as f32;
+            let var =
+                row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / self.dim as f32;
+            let inv_std = 1.0 / (var + self.eps).sqrt();
+            let o = out.row_mut(i);
+            for j in 0..self.dim {
+                o[j] = (row[j] - mean) * inv_std * g[j] + b[j];
+            }
+        }
+    }
+
     fn forward_impl(&self, x: &Matrix, keep: bool) -> (Matrix, Option<LnCache>) {
         assert_eq!(x.cols, self.dim);
         let mut y = Matrix::zeros(x.rows, x.cols);

@@ -9,9 +9,10 @@
 
 use super::param::PTensor;
 use crate::blast::BlastMatrix;
-use crate::kernels::{engine, BlastView, KernelOp};
+use crate::kernels::{engine, BlastView, Couplings, Factors, KernelOp};
 use crate::tensor::io::TensorBundle;
 use crate::tensor::{matmul, matmul_nt, matmul_tn, Matrix, Rng};
+use crate::util::arena::ScratchArena;
 use anyhow::{bail, Result};
 
 /// The trainable weight representation of a linear layer.
@@ -266,6 +267,54 @@ impl Linear {
         y
     }
 
+    /// Allocation-free inference forward: `y = x W^T + bias` written
+    /// into the caller-owned `out`, temporaries drawn from `arena`.
+    ///
+    /// Dense and BLAST weights (the serving structures) run entirely
+    /// through pooled buffers and the kernels' `run_into` overrides, so
+    /// a warm call touches the allocator zero times; Low-Rank routes
+    /// its rank intermediate through the arena; Monarch/Block-Diagonal
+    /// fall back to [`forward`] (allocating) and move the result into
+    /// `out`. Bit-identical to [`forward`] in every case.
+    ///
+    /// [`forward`]: Linear::forward
+    pub fn forward_into(&self, x: &Matrix, out: &mut Matrix, arena: &mut ScratchArena) {
+        assert_eq!(x.cols, self.in_features, "linear input mismatch");
+        match &self.weight {
+            LinearWeight::Dense { w } => engine().matmul_nt_into(x, &w.v, out),
+            LinearWeight::Blast { b, r, out: o, inp, u, v, s } => {
+                let view = BlastView::new(
+                    *o,
+                    *inp,
+                    *b,
+                    *r,
+                    Factors::Params(u),
+                    Factors::Params(v),
+                    Couplings::Packed(&s.v),
+                );
+                engine().dispatch_into(x, &KernelOp::Blast(view), out);
+            }
+            LinearWeight::LowRank { p, q } => {
+                let mut z = arena.take_matrix(x.rows, q.v.cols);
+                crate::tensor::gemm(1.0, x, &q.v, 0.0, &mut z);
+                engine().matmul_nt_into(&z, &p.v, out);
+                arena.recycle_matrix(z);
+            }
+            LinearWeight::Monarch { .. } | LinearWeight::BlockDiag { .. } => {
+                *out = self.forward(x);
+                return; // forward() already added the bias
+            }
+        }
+        if let Some(bias) = &self.bias {
+            for t in 0..out.rows {
+                let row = out.row_mut(t);
+                for (yv, bv) in row.iter_mut().zip(bias.v.row(0)) {
+                    *yv += bv;
+                }
+            }
+        }
+    }
+
     /// Training forward: returns output and the cache for `backward`.
     pub fn forward_t(&self, x: &Matrix) -> (Matrix, LinearCache) {
         let (y, cache) = self.forward_impl(x, true);
@@ -289,16 +338,18 @@ impl Linear {
                 if !keep {
                     // Inference hot path: one fused, autotuned
                     // Algorithm-1 dispatch — no per-block submatrix
-                    // copies, no cache materialization.
-                    let view = BlastView {
-                        m: *out,
-                        n: *inp,
-                        b: *b,
-                        r: *r,
-                        u: u.iter().map(|t| &t.v).collect(),
-                        v: v.iter().map(|t| &t.v).collect(),
-                        s: (0..b * b).map(|k| s.v.row(k)).collect(),
-                    };
+                    // copies, no cache materialization, and the view
+                    // itself borrows the parameter storage directly
+                    // (no per-call Vec of references).
+                    let view = BlastView::new(
+                        *out,
+                        *inp,
+                        *b,
+                        *r,
+                        Factors::Params(u),
+                        Factors::Params(v),
+                        Couplings::Packed(&s.v),
+                    );
                     let y = engine().dispatch(x, &KernelOp::Blast(view));
                     (y, None)
                 } else {
@@ -821,6 +872,28 @@ mod tests {
     fn blockdiag_grads() {
         let mut rng = Rng::new(308);
         check_layer(Linear::block_diag(6, 8, 2, 2, 0.3, &mut rng), 309);
+    }
+
+    #[test]
+    fn forward_into_bit_matches_forward_all_structures() {
+        let mut rng = Rng::new(314);
+        let layers = [
+            Linear::dense(6, 8, 0.3, &mut rng),
+            Linear::low_rank(6, 8, 3, 0.3, &mut rng),
+            Linear::blast(6, 8, 2, 3, 0.3, &mut rng),
+            Linear::monarch(6, 8, 2, 2, 0.3, &mut rng),
+            Linear::block_diag(6, 8, 2, 2, 0.3, &mut rng),
+        ];
+        let mut arena = crate::util::arena::ScratchArena::new();
+        for (k, layer) in layers.iter().enumerate() {
+            let x = rng.gaussian_matrix(3, 8, 1.0);
+            let y = layer.forward(&x);
+            let mut out = Matrix::zeros(0, 0);
+            layer.forward_into(&x, &mut out, &mut arena);
+            assert_eq!(out.shape(), y.shape(), "case {k}");
+            assert_eq!(out.data, y.data, "case {k}: forward_into diverged");
+            assert_eq!(arena.outstanding(), 0, "case {k}: arena leak");
+        }
     }
 
     #[test]

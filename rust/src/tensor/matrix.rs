@@ -110,6 +110,26 @@ impl Matrix {
         self.data.is_empty()
     }
 
+    /// Reshape in place to `rows × cols`, **reusing the existing buffer**
+    /// when its capacity suffices — the primitive the kernel `run_into`
+    /// paths use to keep the steady-state decode step allocation-free.
+    ///
+    /// Contents after the call are unspecified: a same-size buffer keeps
+    /// its old values (no redundant memset on the hot path — every
+    /// `run_into` kernel overwrites all `rows·cols` elements), while a
+    /// size change zero-fills. Callers that need a zeroed buffer to
+    /// accumulate into should use `ScratchArena::take_matrix` or
+    /// [`Matrix::zeros`].
+    pub fn reset(&mut self, rows: usize, cols: usize) {
+        let len = rows * cols;
+        self.rows = rows;
+        self.cols = cols;
+        if self.data.len() != len {
+            self.data.clear();
+            self.data.resize(len, 0.0);
+        }
+    }
+
     /// Transposed copy.
     pub fn transpose(&self) -> Matrix {
         let mut t = Matrix::zeros(self.cols, self.rows);
@@ -338,6 +358,24 @@ mod tests {
         assert_eq!(m.at(1, 0), 4.0);
         assert_eq!(m.row(1), &[4., 5., 6.]);
         assert_eq!(m.col(1), vec![2., 5.]);
+    }
+
+    #[test]
+    fn reset_reuses_buffer_and_zero_fills_on_size_change() {
+        let mut m = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let ptr = m.data.as_ptr();
+        // Same total size: buffer (and contents) retained, shape changes.
+        m.reset(3, 2);
+        assert_eq!(m.shape(), (3, 2));
+        assert_eq!(m.data.as_ptr(), ptr);
+        // Shrink within capacity: zero-filled, no reallocation.
+        m.reset(1, 2);
+        assert_eq!(m.data, vec![0.0, 0.0]);
+        assert_eq!(m.data.as_ptr(), ptr);
+        // Grow back within capacity: zero-filled, no reallocation.
+        m.reset(2, 3);
+        assert!(m.data.iter().all(|&v| v == 0.0));
+        assert_eq!(m.data.as_ptr(), ptr);
     }
 
     #[test]

@@ -1,0 +1,179 @@
+//! Per-worker scratch arena: pooled `f32` buffers for the decode hot
+//! path.
+//!
+//! Every serving worker (and any other steady-state loop) owns one
+//! `ScratchArena` and routes its per-step temporaries — embedded
+//! activations, LayerNorm outputs, attention QKV/context/score buffers,
+//! MLP intermediates — through it. Buffers are pooled by
+//! power-of-two capacity class: `take`/`take_matrix` pop a buffer of
+//! sufficient capacity (allocating only when the class is empty) and
+//! `recycle`/`recycle_matrix` push it back. After one warm step at a
+//! given batch shape, every take is a pop — a steady-state
+//! `decode_step_batch` iteration performs **zero heap allocations**
+//! (asserted by `tests/decode_alloc.rs` with a counting allocator).
+//!
+//! The arena is deliberately not `Sync`: it models *per-worker* scratch.
+//! Cross-thread kernel scratch lives in the kernels' own thread-locals.
+
+use crate::tensor::Matrix;
+
+/// Pooled scratch buffers, bucketed by power-of-two capacity.
+pub struct ScratchArena {
+    /// `pools[c]` holds buffers with capacity exactly `1 << c`.
+    pools: Vec<Vec<Vec<f32>>>,
+    /// Buffers currently handed out (diagnostics; leak detection).
+    outstanding: usize,
+}
+
+/// Capacity class of a request: buffers are allocated at the next
+/// power of two so repeat takes of nearby sizes share a pool.
+#[inline]
+fn class_of(len: usize) -> usize {
+    len.max(1).next_power_of_two().trailing_zeros() as usize
+}
+
+impl ScratchArena {
+    pub fn new() -> Self {
+        ScratchArena { pools: Vec::new(), outstanding: 0 }
+    }
+
+    /// A zeroed buffer of exactly `len` elements (capacity is the
+    /// power-of-two class, so recycling round-trips losslessly).
+    pub fn take(&mut self, len: usize) -> Vec<f32> {
+        let class = class_of(len);
+        if self.pools.len() <= class {
+            self.pools.resize_with(class + 1, Vec::new);
+        }
+        self.outstanding += 1;
+        match self.pools[class].pop() {
+            Some(mut buf) => {
+                buf.clear();
+                buf.resize(len, 0.0);
+                buf
+            }
+            None => {
+                let mut buf = Vec::with_capacity(1 << class);
+                buf.resize(len, 0.0);
+                buf
+            }
+        }
+    }
+
+    /// Return a buffer to its capacity class. Only buffers whose
+    /// capacity is exactly a power of two (i.e. buffers this arena
+    /// handed out and that were not grown) are pooled; anything else is
+    /// silently dropped — re-pooling it would make the next `take` of
+    /// its class re-allocate on resize, defeating the steady-state
+    /// guarantee. Callers that grow an arena buffer past its class
+    /// should treat that as a warmup-path event, not steady state.
+    pub fn recycle(&mut self, buf: Vec<f32>) {
+        if buf.capacity() == 0 {
+            return;
+        }
+        let class = class_of(buf.capacity());
+        // Only pool buffers whose capacity is exactly a class size —
+        // anything else would make `take` re-allocate on reuse.
+        if buf.capacity() != (1 << class) {
+            self.outstanding = self.outstanding.saturating_sub(1);
+            return;
+        }
+        if self.pools.len() <= class {
+            self.pools.resize_with(class + 1, Vec::new);
+        }
+        self.outstanding = self.outstanding.saturating_sub(1);
+        self.pools[class].push(buf);
+    }
+
+    /// A zeroed `rows × cols` matrix backed by a pooled buffer.
+    pub fn take_matrix(&mut self, rows: usize, cols: usize) -> Matrix {
+        Matrix::from_vec(rows, cols, self.take(rows * cols))
+    }
+
+    /// Return a matrix's buffer to the pool.
+    pub fn recycle_matrix(&mut self, m: Matrix) {
+        self.recycle(m.data);
+    }
+
+    /// Buffers currently checked out (should return to 0 between steps).
+    pub fn outstanding(&self) -> usize {
+        self.outstanding
+    }
+
+    /// Total pooled buffers across all classes.
+    pub fn pooled(&self) -> usize {
+        self.pools.iter().map(|p| p.len()).sum()
+    }
+}
+
+impl Default for ScratchArena {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_recycle_reuses_buffer() {
+        let mut arena = ScratchArena::new();
+        let buf = arena.take(100);
+        assert_eq!(buf.len(), 100);
+        assert_eq!(buf.capacity(), 128);
+        let ptr = buf.as_ptr();
+        arena.recycle(buf);
+        assert_eq!(arena.pooled(), 1);
+        // Same class (any len in 65..=128) reuses the same buffer.
+        let again = arena.take(128);
+        assert_eq!(again.as_ptr(), ptr, "same-class take must pop the pooled buffer");
+        assert!(again.iter().all(|&v| v == 0.0), "recycled buffer must be re-zeroed");
+        arena.recycle(again);
+    }
+
+    #[test]
+    fn matrix_round_trip() {
+        let mut arena = ScratchArena::new();
+        let mut m = arena.take_matrix(3, 5);
+        assert_eq!(m.shape(), (3, 5));
+        m.set(2, 4, 7.0);
+        let ptr = m.data.as_ptr();
+        arena.recycle_matrix(m);
+        let m2 = arena.take_matrix(4, 4);
+        assert_eq!(m2.data.as_ptr(), ptr, "16-element class is shared");
+        assert_eq!(m2.at(0, 0), 0.0);
+        assert_eq!(arena.outstanding(), 1);
+        arena.recycle_matrix(m2);
+        assert_eq!(arena.outstanding(), 0);
+    }
+
+    #[test]
+    fn distinct_classes_do_not_alias() {
+        let mut arena = ScratchArena::new();
+        let a = arena.take(10); // class 16
+        let b = arena.take(100); // class 128
+        arena.recycle(a);
+        arena.recycle(b);
+        let c = arena.take(100);
+        assert_eq!(c.capacity(), 128);
+        arena.recycle(c);
+        assert_eq!(arena.pooled(), 2);
+    }
+
+    #[test]
+    fn zero_len_take_is_fine() {
+        let mut arena = ScratchArena::new();
+        let buf = arena.take(0);
+        assert!(buf.is_empty());
+        arena.recycle(buf);
+    }
+
+    #[test]
+    fn foreign_capacity_buffers_are_dropped_not_pooled() {
+        let mut arena = ScratchArena::new();
+        let mut v = Vec::with_capacity(100); // not a power of two
+        v.resize(100, 1.0f32);
+        arena.recycle(v);
+        assert_eq!(arena.pooled(), 0);
+    }
+}

@@ -2,6 +2,8 @@
 //! offline, so everything beyond `xla`/`anyhow` is implemented here).
 //!
 //! * [`par`] — scoped-thread data parallelism (rayon-lite).
+//! * [`arena`] — pooled per-worker scratch buffers (the decode hot
+//!   path's zero-allocation backing store).
 //! * [`json`] — minimal JSON value model + parser/serializer for the
 //!   artifact manifest and experiment reports.
 //! * [`cli`] — flag/positional argument parsing for the `blast` binary.
@@ -9,6 +11,7 @@
 //!   (criterion-lite: warmup, repeated timed runs, mean/p50/p95).
 //! * [`check`] — seeded random-input property testing (proptest-lite).
 
+pub mod arena;
 pub mod par;
 pub mod json;
 pub mod cli;

@@ -1,0 +1,115 @@
+//! Zero-allocation regression test for the decode hot path.
+//!
+//! A counting global allocator wraps `System`; after warming the arena,
+//! the kernel plan table, the packed-panel cache, and the kernels'
+//! thread-local scratch, a steady-state `decode_step_batch_into`
+//! iteration must perform **zero** heap allocations (alloc + realloc;
+//! frees are irrelevant). This pins down the PR's no-alloc contract —
+//! including the old per-step `vec![0.0; len]` attention-score
+//! allocation, which now routes through the scratch arena.
+//!
+//! The whole file is one `#[test]` so the counting window can't race
+//! another test's allocations, and `BLAST_NUM_THREADS=1` keeps the
+//! row-parallel kernels from spawning scoped threads (thread spawns
+//! allocate; single-thread execution is the realistic decode
+//! configuration and is bit-identical by the engine contract).
+
+use blast_repro::nn::attention::StructureKind;
+use blast_repro::nn::gpt::{LmConfig, TinyLM};
+use blast_repro::tensor::{Matrix, Rng};
+use blast_repro::util::arena::ScratchArena;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+struct CountingAlloc;
+
+static ALLOC_EVENTS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn alloc_events() -> u64 {
+    ALLOC_EVENTS.load(Ordering::Relaxed)
+}
+
+fn run_steady_state(structure: StructureKind, seed: u64) {
+    let mut rng = Rng::new(seed);
+    let lm = TinyLM::new(LmConfig::tiny(structure), &mut rng);
+    let mut pool = lm.new_kv_pool(3);
+    let slots: Vec<usize> = (0..3).map(|_| pool.alloc().unwrap()).collect();
+    for (i, &s) in slots.iter().enumerate() {
+        let _ = lm.prefill_slot(&[1 + i, 2, 3], &mut pool, s).unwrap();
+    }
+    let mut arena = ScratchArena::new();
+    let mut logits = Matrix::zeros(0, lm.cfg.vocab);
+    let toks = [4usize, 5, 6];
+
+    // Warm everything: plan table (tuning probes), pack cache, arena
+    // classes, kernel thread-locals, the logits buffer.
+    for _ in 0..5 {
+        lm.decode_step_batch_into(&toks, &mut pool, &slots, &mut arena, &mut logits);
+    }
+    assert_eq!(arena.outstanding(), 0, "arena leak during warmup");
+
+    // Correctness guard: after the same five steps on a twin pool, the
+    // allocating reference path must produce bit-identical logits to
+    // the no-alloc path's current state. (Runs before the counting
+    // window; it allocates.)
+    let mut ref_pool = lm.new_kv_pool(3);
+    let ref_slots: Vec<usize> = (0..3).map(|_| ref_pool.alloc().unwrap()).collect();
+    for (i, &s) in ref_slots.iter().enumerate() {
+        let _ = lm.prefill_slot(&[1 + i, 2, 3], &mut ref_pool, s).unwrap();
+    }
+    let mut ref_logits = Matrix::zeros(0, 0);
+    for _ in 0..5 {
+        ref_logits = lm.decode_step_batch(&toks, &mut ref_pool, &ref_slots);
+    }
+    assert_eq!(
+        ref_logits.data, logits.data,
+        "no-alloc decode path diverged from the allocating path ({structure:?})"
+    );
+
+    let before = alloc_events();
+    for _ in 0..10 {
+        lm.decode_step_batch_into(&toks, &mut pool, &slots, &mut arena, &mut logits);
+    }
+    let after = alloc_events();
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state decode_step_batch allocated {} times in 10 iterations ({structure:?})",
+        after - before
+    );
+    assert_eq!(logits.shape(), (3, lm.cfg.vocab));
+    assert!(!logits.has_nonfinite());
+    assert_eq!(arena.outstanding(), 0, "arena leak during measurement");
+}
+
+#[test]
+fn steady_state_decode_is_allocation_free() {
+    // Single-thread kernel configuration (see module docs); set before
+    // the first `util::par::num_threads()` call caches the value.
+    std::env::set_var("BLAST_NUM_THREADS", "1");
+    // Dense covers the packed dense microkernel path (QKV/MLP/head);
+    // BLAST covers the fused Algorithm-1 path with packed factor
+    // panels — both must hold the zero-allocation contract, which also
+    // covers the attention-score scratch (formerly a per-step vec!).
+    run_steady_state(StructureKind::Dense, 9100);
+    run_steady_state(StructureKind::Blast { b: 2, r: 4 }, 9101);
+}

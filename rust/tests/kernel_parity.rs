@@ -1,13 +1,18 @@
-//! Kernel parity property tests: every optimized kernel in the engine
-//! must be element-wise close to the naive reference kernel (and to the
-//! dense reconstruction of the weight) across random shapes, block
-//! counts `b`, ranks `r`, and batch sizes — including the low-rank /
-//! block-diagonal / Monarch special-case embeddings of `blast::special`.
+//! Kernel parity property tests under the fixed-lane accumulation
+//! contract: every optimized kernel in the engine must be
+//! **bit-identical** to the naive reference kernel (and element-wise
+//! close to the dense reconstruction of the weight) across random
+//! shapes, block counts `b`, ranks `r`, and batch sizes — including
+//! the low-rank / block-diagonal / Monarch special-case embeddings of
+//! `blast::special`, awkward shapes (k not a multiple of the 8-lane
+//! width, n below the NR tile, m below the MR block, batch 1), and
+//! both `BLAST_SIMD` paths (the CI `simd-parity` job runs this suite
+//! under `portable` and `auto`).
 
 use blast_repro::blast::BlastMatrix;
 use blast_repro::kernels::{
-    engine, BlastView, FusedBlastKernel, KernelOp, MatmulKernel, NaiveKernel, ParallelKernel,
-    TiledKernel,
+    engine, micro, BlastView, FusedBlastKernel, KernelOp, MatmulKernel, NaiveKernel,
+    PackedPanels, ParallelKernel, SimdMode, TiledKernel,
 };
 use blast_repro::tensor::{matmul_nt, Matrix, Rng};
 use blast_repro::util::check::{property, PropGen};
@@ -23,6 +28,18 @@ fn assert_close(got: &Matrix, want: &Matrix, what: &str) {
     }
 }
 
+/// The contract assertion: exact bit equality with the reference.
+fn assert_bits(got: &Matrix, want: &Matrix, what: &str) {
+    assert_eq!(got.shape(), want.shape(), "{what}: shape mismatch");
+    for (i, (a, b)) in got.data.iter().zip(&want.data).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "{what}: element {i} bit-differs: {a} vs {b}"
+        );
+    }
+}
+
 fn blast_kernels() -> Vec<Box<dyn MatmulKernel>> {
     vec![
         Box::new(FusedBlastKernel::sequential()),
@@ -34,8 +51,10 @@ fn dense_kernels() -> Vec<Box<dyn MatmulKernel>> {
     vec![Box::new(TiledKernel), Box::new(ParallelKernel)]
 }
 
-/// Run every BLAST-capable kernel on (a, x) and compare against both the
-/// naive reference and the dense reconstruction.
+/// Run every BLAST-capable kernel on (a, x); every optimized kernel
+/// (and the engine's tuned dispatch, and the `run_into` variants) must
+/// be bit-identical to the naive reference, which itself must be close
+/// to the dense reconstruction.
 fn check_blast_parity(a: &BlastMatrix, x: &Matrix, what: &str) {
     let reference = NaiveKernel.run(x, &KernelOp::Blast(BlastView::from_matrix(a)));
     let dense = matmul_nt(x, &a.to_dense());
@@ -44,18 +63,22 @@ fn check_blast_parity(a: &BlastMatrix, x: &Matrix, what: &str) {
         let op = KernelOp::Blast(BlastView::from_matrix(a));
         assert!(kernel.supports(&op, x.rows));
         let y = kernel.run(x, &op);
-        assert_close(&y, &reference, &format!("{what}: {} vs naive", kernel.name()));
+        assert_bits(&y, &reference, &format!("{what}: {} vs naive", kernel.name()));
+        let mut out = Matrix::zeros(0, 0);
+        let op2 = KernelOp::Blast(BlastView::from_matrix(a));
+        kernel.run_into(x, &op2, &mut out);
+        assert_bits(&out, &reference, &format!("{what}: {} run_into vs naive", kernel.name()));
     }
     // The engine's tuned dispatch must agree with whatever it picked.
     let y = engine().blast_act(x, a);
-    assert_close(&y, &reference, &format!("{what}: engine vs naive"));
+    assert_bits(&y, &reference, &format!("{what}: engine vs naive"));
 }
 
 #[test]
 fn dense_kernels_match_naive_across_random_shapes() {
     property(40, |g: &mut PropGen| {
         let batch = g.usize_in(1, 16);
-        // Straddle the KC=256 panel boundary and the NR=8 column tile.
+        // Straddle the 8-lane chunk boundary and the NR column tile.
         let k = g.usize_in(1, 300);
         let n = g.usize_in(1, 40);
         let x = g.matrix(batch, k);
@@ -65,15 +88,107 @@ fn dense_kernels_match_naive_across_random_shapes() {
         for kernel in dense_kernels() {
             assert!(kernel.supports(&op, batch));
             let y = kernel.run(&x, &op);
-            assert_close(
+            assert_bits(
                 &y,
                 &reference,
                 &format!("dense {}x{k} out={n} kernel={}", batch, kernel.name()),
             );
+            let mut out = Matrix::zeros(0, 0);
+            kernel.run_into(&x, &op, &mut out);
+            assert_bits(
+                &out,
+                &reference,
+                &format!("dense {}x{k} out={n} kernel={} run_into", batch, kernel.name()),
+            );
         }
         let y = engine().matmul_nt(&x, &w);
-        assert_close(&y, &reference, "dense engine dispatch");
+        assert_bits(&y, &reference, "dense engine dispatch");
+        // The static and serial (unpacked) paths share the contract.
+        assert_bits(&engine().matmul_nt_static(&x, &w), &reference, "static path");
+        assert_bits(&engine().matmul_nt_serial(&x, &w), &reference, "serial path");
+        // And the dense reconstruction stays within tolerance.
+        assert_close(&y, &matmul_nt(&x, &w), "dense engine vs tensor");
     });
+}
+
+#[test]
+fn dense_kernels_awkward_shapes_exact() {
+    // Deterministic corners: k not a multiple of LANES, n < NR, m < MR,
+    // batch 1, single element.
+    let mut rng = Rng::new(7100);
+    for &(batch, k, n) in &[
+        (1usize, 1usize, 1usize),
+        (1, 7, 1),
+        (1, 8, 1),
+        (1, 9, 2),
+        (1, 17, 3),  // n < NR
+        (2, 31, 4),  // k % 8 = 7
+        (3, 33, 5),  // m > MR, k % 8 = 1
+        (1, 64, 40), // exact chunks
+        (5, 127, 11),
+    ] {
+        let x = rng.gaussian_matrix(batch, k, 1.0);
+        let w = rng.gaussian_matrix(n, k, 1.0);
+        let op = KernelOp::DenseNt { w: &w };
+        let reference = NaiveKernel.run(&x, &op);
+        for kernel in dense_kernels() {
+            let y = kernel.run(&x, &op);
+            assert_bits(
+                &y,
+                &reference,
+                &format!("awkward batch={batch} k={k} n={n} kernel={}", kernel.name()),
+            );
+        }
+    }
+}
+
+#[test]
+fn simd_paths_bit_identical_when_avx2_detected() {
+    // The packed microkernel must produce the same bits in portable and
+    // AVX2 mode. (`BLAST_SIMD` selects the process-wide default; here
+    // the explicit-mode API pins both paths regardless of env.)
+    if !micro::avx2_detected() {
+        eprintln!("avx2 not detected; portable path is the only path — skipping");
+        return;
+    }
+    let mut rng = Rng::new(7200);
+    for &(batch, k, n) in &[(1usize, 9usize, 3usize), (4, 64, 16), (7, 251, 19), (2, 8, 4)] {
+        let x = rng.gaussian_matrix(batch, k, 1.0);
+        let w = rng.gaussian_matrix(n, k, 1.0);
+        let panels = PackedPanels::pack_rows(&w);
+        let mut portable = vec![0.0f32; batch * n];
+        let mut avx2 = vec![0.0f32; batch * n];
+        micro::nt_rows_packed(SimdMode::Portable, &x, &panels, 0, batch, &mut portable);
+        micro::nt_rows_packed(SimdMode::Avx2, &x, &panels, 0, batch, &mut avx2);
+        for (i, (a, b)) in portable.iter().zip(&avx2).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "batch={batch} k={k} n={n} elem {i}: portable {a} vs avx2 {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn pack_cache_invalidation_preserves_parity_after_weight_mutation() {
+    // Dispatch through the engine (which uses the process-wide pack
+    // cache), mutate the weight in place, dispatch again: the second
+    // result must reflect the new weights (stale-panel detection).
+    let mut rng = Rng::new(7300);
+    let x = rng.gaussian_matrix(3, 24, 1.0);
+    let mut w = rng.gaussian_matrix(10, 24, 1.0);
+    let y1 = engine().matmul_nt(&x, &w);
+    assert_bits(&y1, &NaiveKernel.run(&x, &KernelOp::DenseNt { w: &w }), "pre-mutation");
+    for v in w.row_mut(4) {
+        *v += 0.5;
+    }
+    let y2 = engine().matmul_nt(&x, &w);
+    assert_bits(&y2, &NaiveKernel.run(&x, &KernelOp::DenseNt { w: &w }), "post-mutation");
+    assert!(
+        y1.row(0)[4] != y2.row(0)[4],
+        "mutated weight row must change the product"
+    );
 }
 
 #[test]
@@ -90,6 +205,17 @@ fn blast_kernels_match_naive_across_random_structures() {
         let x = g.matrix(batch, n);
         check_blast_parity(&a, &x, &format!("blast m={m} n={n} b={b} r={r} batch={batch}"));
     });
+}
+
+#[test]
+fn blast_decode_shape_batch_one_exact() {
+    // The decode hot shape: batch 1, q and r off the lane width.
+    let mut rng = Rng::new(7400);
+    for &(m, n, b, r) in &[(12usize, 12usize, 2usize, 3usize), (18, 27, 3, 9), (8, 8, 1, 5)] {
+        let a = BlastMatrix::random_init(m, n, b, r, 1.0, &mut rng);
+        let x = rng.gaussian_matrix(1, n, 1.0);
+        check_blast_parity(&a, &x, &format!("decode blast m={m} n={n} b={b} r={r}"));
+    }
 }
 
 #[test]
@@ -152,13 +278,14 @@ fn matvec_and_matmul_act_agree_with_kernel_dispatch() {
         let reference = NaiveKernel.run(&xm, &KernelOp::Blast(BlastView::from_matrix(&a)));
         assert_eq!(y.len(), m);
         for (i, (got, want)) in y.iter().zip(reference.row(0)).enumerate() {
-            assert!(
-                (got - want).abs() <= 1e-3 * (1.0 + want.abs()),
+            assert_eq!(
+                got.to_bits(),
+                want.to_bits(),
                 "matvec[{i}]: {got} vs {want}"
             );
         }
         let xb = g.matrix(3, n);
-        assert_close(
+        assert_bits(
             &a.matmul_act(&xb),
             &NaiveKernel.run(&xb, &KernelOp::Blast(BlastView::from_matrix(&a))),
             "matmul_act vs naive",

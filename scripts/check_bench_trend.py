@@ -19,6 +19,7 @@ import sys
 METRICS = [
     ("BENCH_serving.json", ("continuous", "tokens_per_sec"), "serving tokens/sec"),
     ("BENCH_factorize.json", ("precgd", "iters_per_sec"), "factorize PrecGD iters/sec"),
+    ("BENCH_kernels.json", ("dense", "autotuned_gflops"), "dense GEMM GFLOP/s"),
 ]
 THRESHOLD = 0.20
 
