@@ -10,11 +10,16 @@
 //!      autotuned ≥ 2× scalar at the prefill shape on ≥8-lane FMA
 //!      hardware (warn-only under `BLAST_BENCH_FAST` or without AVX2).
 //!   2. Kernel shoot-out on the acceptance shape (1024×1024 BLAST,
-//!      b=8, r=32): naive reference vs every registered kernel vs the
+//!      b=8, r=32): naive reference vs the plan executors vs the
 //!      autotuned engine dispatch, at decode (batch 1) and prefill
 //!      (batch 8) shapes, with the ≥2× autotuned-vs-naive gate.
 //!   3. Algorithm 1 vs dense matvec across sizes at 50% compression.
 //!   4. Activation-batch matmul at the transformer layer shape.
+//!   5. Per-structure shoot-out: the structure-plan path vs the
+//!      pre-refactor per-structure loop nests (submatrix copies +
+//!      per-block engine dispatches) for Low-Rank, Monarch, and
+//!      Block-Diagonal, with GFLOP/s per structure recorded in
+//!      `BENCH_kernels.json`.
 //!
 //! Always writes the machine-readable `BENCH_kernels.json` (repo root;
 //! override with `BLAST_KERNELS_BENCH_OUT`) so `scripts/
@@ -22,7 +27,9 @@
 //! `BLAST_AUTOTUNE_CACHE=<path>` to also persist the plan table.
 
 use blast_repro::blast::{blast_rank_for_ratio, BlastMatrix};
-use blast_repro::kernels::{engine, micro, tiled, BlastView, KernelOp, PlanKey};
+use blast_repro::kernels::{
+    engine, micro, tiled, Factors, KernelOp, PlanKey, PlanOperands, StructPlan,
+};
 use blast_repro::tensor::{gemv, Matrix, Rng};
 use blast_repro::util::bench::BenchSuite;
 use blast_repro::util::json::{obj, Json};
@@ -94,6 +101,7 @@ fn main() {
     // ------------------------------------------------------------------
     let (n, b, r) = (1024usize, 8usize, 32usize);
     let a = BlastMatrix::random_init(n, n, b, r, 0.02, &mut rng);
+    let a_plan = a.plan();
     let flops = a.matvec_flops() as f64;
     let mut blast_speedups = Vec::new();
     for &batch in &[1usize, 8] {
@@ -102,15 +110,15 @@ fn main() {
         {
             let kernel = engine().kernel_named("naive").expect("naive registered");
             suite.bench_throughput(&naive_name, flops * batch as f64, "mult", || {
-                let op = KernelOp::Blast(BlastView::from_matrix(&a));
+                let op = KernelOp::Plan { plan: &a_plan, ops: a.plan_operands() };
                 std::hint::black_box(kernel.run(&x, &op));
             });
         }
-        for name in ["blast_fused", "blast_fused_par"] {
+        for name in ["plan_seq", "plan_par"] {
             let kernel = engine().kernel_named(name).expect("kernel registered");
             let case = format!("blast {n}x{n} b={b} r={r} batch={batch} [{name}]");
             suite.bench_throughput(&case, flops * batch as f64, "mult", || {
-                let op = KernelOp::Blast(BlastView::from_matrix(&a));
+                let op = KernelOp::Plan { plan: &a_plan, ops: a.plan_operands() };
                 std::hint::black_box(kernel.run(&x, &op));
             });
             suite.report_speedup(&naive_name, &case);
@@ -121,7 +129,10 @@ fn main() {
             std::hint::black_box(engine().blast_act(&x, &a));
         });
         suite.report_speedup(&naive_name, &tuned_name);
-        let key = PlanKey::for_op(&KernelOp::Blast(BlastView::from_matrix(&a)), batch);
+        let key = PlanKey::for_op(
+            &KernelOp::Plan { plan: &a_plan, ops: a.plan_operands() },
+            batch,
+        );
         println!(
             "    plan[{}, m={}, n={}, batch-bucket={}] -> {}",
             key.op.to_tag_string(),
@@ -203,6 +214,141 @@ fn main() {
     );
 
     // ------------------------------------------------------------------
+    // 5. Per-structure shoot-out: structure plans vs the pre-refactor
+    //    per-structure loop nests.
+    // ------------------------------------------------------------------
+    //
+    // The baselines reproduce what `nn::linear::forward` used to run
+    // before the plan refactor: per-block submatrix copies + one engine
+    // dense dispatch per factor product (LowRank additionally paid a
+    // tensor-level stage-1 GEMM). The plan path runs the same math as
+    // one autotuned stage program over packed factor panels.
+    let (sm, sb) = (1024usize, 8usize);
+    let mut structure_json: Vec<(&'static str, Json)> = Vec::new();
+    for &batch in &[8usize] {
+        let x = rng.gaussian_matrix(batch, sm, 1.0);
+
+        // --- Low-Rank (r = 256, the 50% compression rank) ---
+        let lr_r = 256usize;
+        let lp = rng.gaussian_matrix(sm, lr_r, 0.02);
+        let lq = rng.gaussian_matrix(sm, lr_r, 0.02);
+        // 2·(multiply-adds), matching the dense section's FLOP units so
+        // the JSON gflops fields are comparable across sections.
+        let lr_flops = (2 * (sm + sm) * lr_r * batch) as f64;
+        let base_name = format!("lowrank {sm}x{sm} r={lr_r} batch={batch} [pre-plan loops]");
+        suite.bench_throughput(&base_name, lr_flops, "flop", || {
+            let z = blast_repro::tensor::matmul(&x, &lq);
+            std::hint::black_box(engine().matmul_nt(&z, &lp));
+        });
+        let plan = StructPlan::low_rank(sm, sm, lr_r);
+        let ops = PlanOperands {
+            g0: Factors::Mats(std::slice::from_ref(&lq)),
+            g1: Factors::Mats(std::slice::from_ref(&lp)),
+            s: None,
+        };
+        let plan_name = format!("lowrank {sm}x{sm} r={lr_r} batch={batch} [plan]");
+        suite.bench_throughput(&plan_name, lr_flops, "flop", || {
+            std::hint::black_box(engine().plan_act(&x, &plan, &ops));
+        });
+        suite.report_speedup(&base_name, &plan_name);
+        let base_t = suite.mean_of(&base_name).unwrap().as_secs_f64();
+        let plan_t = suite.mean_of(&plan_name).unwrap().as_secs_f64();
+        structure_json.push((
+            "lowrank",
+            obj(vec![
+                ("baseline_gflops", Json::from(lr_flops / base_t / 1e9)),
+                ("plan_gflops", Json::from(lr_flops / plan_t / 1e9)),
+                ("speedup_vs_baseline", Json::from(base_t / plan_t)),
+            ]),
+        ));
+
+        // --- Monarch (b = 8, t = 64) ---
+        let (mb, mt) = (sb, 64usize);
+        let (mp, mq) = (sm / mb, sm / mb);
+        let rb: Vec<Matrix> = (0..mb).map(|_| rng.gaussian_matrix(mt, mq, 0.02)).collect();
+        let ml: Vec<Matrix> =
+            (0..mb * mb).map(|_| rng.gaussian_matrix(mp, mt, 0.02)).collect();
+        let mo_flops = (2 * (sm * mt + sm * mb * mt) * batch) as f64;
+        let base_name = format!("monarch {sm}x{sm} b={mb} t={mt} batch={batch} [pre-plan loops]");
+        suite.bench_throughput(&base_name, mo_flops, "flop", || {
+            let z: Vec<Matrix> = (0..mb)
+                .map(|j| {
+                    let xj = x.submatrix(0, batch, j * mq, (j + 1) * mq);
+                    engine().matmul_nt(&xj, &rb[j])
+                })
+                .collect();
+            let mut y = Matrix::zeros(batch, sm);
+            for i in 0..mb {
+                for j in 0..mb {
+                    let contrib = engine().matmul_nt(&z[j], &ml[i * mb + j]);
+                    for t in 0..batch {
+                        let yrow = &mut y.row_mut(t)[i * mp..(i + 1) * mp];
+                        for (yv, cv) in yrow.iter_mut().zip(contrib.row(t)) {
+                            *yv += cv;
+                        }
+                    }
+                }
+            }
+            std::hint::black_box(y);
+        });
+        let plan = StructPlan::monarch(sm, sm, mb, mt);
+        let ops = PlanOperands { g0: Factors::Mats(&rb), g1: Factors::Mats(&ml), s: None };
+        let plan_name = format!("monarch {sm}x{sm} b={mb} t={mt} batch={batch} [plan]");
+        suite.bench_throughput(&plan_name, mo_flops, "flop", || {
+            std::hint::black_box(engine().plan_act(&x, &plan, &ops));
+        });
+        suite.report_speedup(&base_name, &plan_name);
+        let base_t = suite.mean_of(&base_name).unwrap().as_secs_f64();
+        let plan_t = suite.mean_of(&plan_name).unwrap().as_secs_f64();
+        structure_json.push((
+            "monarch",
+            obj(vec![
+                ("baseline_gflops", Json::from(mo_flops / base_t / 1e9)),
+                ("plan_gflops", Json::from(mo_flops / plan_t / 1e9)),
+                ("speedup_vs_baseline", Json::from(base_t / plan_t)),
+            ]),
+        ));
+
+        // --- Block-Diagonal (b = 8, t = 64) ---
+        let (db, dt) = (sb, 64usize);
+        let (dp, dq) = (sm / db, sm / db);
+        let pd: Vec<Matrix> = (0..db).map(|_| rng.gaussian_matrix(dp, dt, 0.02)).collect();
+        let qd: Vec<Matrix> = (0..db).map(|_| rng.gaussian_matrix(dq, dt, 0.02)).collect();
+        let bd_flops = (2 * (sm + sm) * dt * batch) as f64;
+        let base_name =
+            format!("blockdiag {sm}x{sm} b={db} t={dt} batch={batch} [pre-plan loops]");
+        suite.bench_throughput(&base_name, bd_flops, "flop", || {
+            let mut y = Matrix::zeros(batch, sm);
+            for i in 0..db {
+                let xi = x.submatrix(0, batch, i * dq, (i + 1) * dq);
+                let z = blast_repro::tensor::matmul(&xi, &qd[i]);
+                let yi = engine().matmul_nt(&z, &pd[i]);
+                for t in 0..batch {
+                    y.row_mut(t)[i * dp..(i + 1) * dp].copy_from_slice(yi.row(t));
+                }
+            }
+            std::hint::black_box(y);
+        });
+        let plan = StructPlan::block_diag(sm, sm, db, dt);
+        let ops = PlanOperands { g0: Factors::Mats(&qd), g1: Factors::Mats(&pd), s: None };
+        let plan_name = format!("blockdiag {sm}x{sm} b={db} t={dt} batch={batch} [plan]");
+        suite.bench_throughput(&plan_name, bd_flops, "flop", || {
+            std::hint::black_box(engine().plan_act(&x, &plan, &ops));
+        });
+        suite.report_speedup(&base_name, &plan_name);
+        let base_t = suite.mean_of(&base_name).unwrap().as_secs_f64();
+        let plan_t = suite.mean_of(&plan_name).unwrap().as_secs_f64();
+        structure_json.push((
+            "blockdiag",
+            obj(vec![
+                ("baseline_gflops", Json::from(bd_flops / base_t / 1e9)),
+                ("plan_gflops", Json::from(bd_flops / plan_t / 1e9)),
+                ("speedup_vs_baseline", Json::from(base_t / plan_t)),
+            ]),
+        ));
+    }
+
+    // ------------------------------------------------------------------
     // Machine-readable output for the bench-trend gate.
     // ------------------------------------------------------------------
     let out_path = std::env::var("BLAST_KERNELS_BENCH_OUT")
@@ -235,6 +381,7 @@ fn main() {
             ]),
         ),
         ("blast", Json::Arr(blast_json)),
+        ("structures", obj(structure_json)),
         (
             "gate",
             obj(vec![

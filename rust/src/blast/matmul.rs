@@ -12,9 +12,38 @@
 //! "computed once and shared" property the paper calls out.
 
 use super::matrix::BlastMatrix;
+use crate::kernels::{plan_cache, Couplings, Factors, PlanOperands, StructPlan};
 use crate::tensor::{matmul, matmul_tn, Matrix};
+use std::sync::Arc;
 
 impl BlastMatrix {
+    /// This matrix's [`StructPlan`] — the lowered Algorithm-1 stage
+    /// program — from the process-wide structural plan cache. Plans
+    /// hold no weight values, so the handle stays valid across factor
+    /// sweeps (only shape changes would require a different plan, and
+    /// shapes are fixed at construction).
+    pub fn plan(&self) -> Arc<StructPlan> {
+        plan_cache().get(
+            crate::kernels::PlanSig {
+                kind: crate::kernels::PlanKind::Blast,
+                b: self.b as u32,
+                r: self.r as u32,
+            },
+            self.m,
+            self.n,
+        )
+    }
+
+    /// Borrowed plan operands over this matrix's factor storage
+    /// (allocation-free; group 0 is `V`, group 1 is `U`, couplings are
+    /// the nested `s` table).
+    pub fn plan_operands(&self) -> PlanOperands<'_> {
+        PlanOperands {
+            g0: Factors::Mats(&self.v),
+            g1: Factors::Mats(&self.u),
+            s: Some(Couplings::Nested(&self.s)),
+        }
+    }
     /// `y = A · x` (Algorithm 1), dispatched through the kernel engine.
     ///
     /// A single vector is a batch-1 activation row (`y = A x` ⟺
@@ -74,9 +103,12 @@ impl BlastMatrix {
     /// `Y = X · A^T` for row-major activations `X ∈ R^{batch×n}` — the
     /// layout used by the linear layers (`y = W x` per row with `W = A`,
     /// i.e. PyTorch's `x @ W.T`). This is the inference hot path; it
-    /// dispatches through the kernel engine, which autotunes between the
-    /// naive reference and the fused (stage-batched) Algorithm-1 kernels
-    /// per (shape, batch) and caches the plan.
+    /// lowers to this matrix's [`StructPlan`] (see [`plan`]) and
+    /// dispatches through the kernel engine, which autotunes between
+    /// the naive reference and the packed plan executors per (plan
+    /// signature, shape, batch-bucket) and caches the choice.
+    ///
+    /// [`plan`]: BlastMatrix::plan
     pub fn matmul_act(&self, x: &Matrix) -> Matrix {
         assert_eq!(x.cols, self.n, "matmul_act shape mismatch: x cols {} vs n {}", x.cols, self.n);
         crate::kernels::engine().blast_act(x, self)

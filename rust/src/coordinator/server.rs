@@ -291,9 +291,12 @@ fn worker_loop(
     metrics: Arc<Metrics>,
 ) {
     let slots = cfg.slots.max(1);
-    // Warm the kernel autotuner before taking traffic: decode at batch
-    // 1 and at full pool width, plus the longest prefill this model
-    // accepts, so tuning probes run at model-load time rather than
+    // Warm the execution caches before taking traffic: pretune builds
+    // every layer's StructPlan (cached on the layer — Monarch/BlockDiag/
+    // LowRank models serve through the same plan path as Dense/BLAST),
+    // then tunes decode at batch 1 and at full pool width plus the
+    // longest prefill this model accepts, so plan builds, tuning probes,
+    // and factor-panel packing all run at model-load time rather than
     // inside the first request.
     model.pretune(&[1, slots, model.cfg.max_seq - 1]);
     let mut pool = model.new_kv_pool(slots);

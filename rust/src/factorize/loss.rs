@@ -8,27 +8,46 @@
 //! * `∇s_{i,j} = ((U_i^T U_i) ⊙ (V_j^T V_j)) s_{i,j}
 //!               − diag(U_i^T A_{i,j} V_j)`                     (Eq. 15)
 //!
-//! Every O(p·n·r)-class product here dispatches through the kernel
-//! engine's **serial** dense path ([`KernelEngine::matmul_nt_serial`]):
-//! factor shapes repeat thousands of times per solve, so the engine's
-//! cache-blocked kernel pays off, while the serial (never
-//! thread-spawning, non-probing) dispatch guarantees no nested workers
-//! when the `b×b` grid itself runs across the thread pool — the grid
-//! (and the pipeline's layer queue above it) own all thread-level
-//! parallelism. Thanks to the kernels' shared bit-stability invariant
-//! (one sequential ascending-k sum per output element — the same order
-//! the tensor-level GEMMs use) this routing does not change results by
-//! a bit. The `A·B`-shaped products go through `matmul_serial`, which
-//! transposes the tall-thin right operand once per call — an O(1/r)
-//! overhead relative to the product, accepted to keep every dispatch on
-//! the one NT kernel form.
+//! Every O(p·n·r)-class product here is **plan construction + engine
+//! dispatch**: the `A·Bᵀ` reconstructions build a cached
+//! [`StructPlan::dense`] and the `A·B` forms a
+//! [`StructPlan::dense_t`] (columns gathered once per call into the
+//! executor's reused thread-local scratch — the pre-plan code
+//! allocated a fresh transpose on every call), both executed through
+//! [`KernelEngine::plan_act_serial`] — the same structure-plan layer
+//! the serving path runs, on its serial reference executor. Serial
+//! matters twice here: it never spawns worker threads (the `b×b`
+//! factor grid — and the pipeline's layer queue above it — own all
+//! thread-level parallelism, so a nested parallel dispatch would
+//! oversubscribe the machine), and it never touches the pack cache
+//! (these factors mutate every sweep iteration; packing them would
+//! churn panels that can never be reused). By the engine's fixed-lane
+//! contract this routing is bit-identical to every other dispatch
+//! path.
 //!
-//! [`KernelEngine::matmul_nt_serial`]: crate::kernels::KernelEngine::matmul_nt_serial
+//! [`StructPlan::dense`]: crate::kernels::StructPlan::dense
+//! [`StructPlan::dense_t`]: crate::kernels::StructPlan::dense_t
+//! [`KernelEngine::plan_act_serial`]: crate::kernels::KernelEngine::plan_act_serial
 
 use crate::blast::BlastMatrix;
-use crate::kernels::engine;
+use crate::kernels::{engine, plan_cache, PlanOperands};
 use crate::tensor::{matmul_tn, Matrix};
 use crate::util::par;
+
+/// `A · Bᵀ` as a dense structure plan on the serial executor — the
+/// factorization-side entry to the engine's plan path.
+fn nt_planned(a: &Matrix, b: &Matrix) -> Matrix {
+    let plan = plan_cache().dense(b.rows, b.cols);
+    engine().plan_act_serial(a, &plan, &PlanOperands::single(b))
+}
+
+/// `A · B` as a col-gathered dense-transpose plan on the serial
+/// executor (bit-identical to `nt_planned(a, &b.transpose())`, without
+/// the transpose).
+fn mm_planned(a: &Matrix, b: &Matrix) -> Matrix {
+    let plan = plan_cache().dense_t(b.cols, b.rows);
+    engine().plan_act_serial(a, &plan, &PlanOperands::single(b))
+}
 
 /// Eq. 4 evaluated over the full matrix: `½ ‖A − BLAST‖_F²`.
 ///
@@ -53,7 +72,7 @@ pub fn blast_loss_with(target: &Matrix, x: &BlastMatrix, parallel: bool) -> f64 
 
 /// `½ ‖A_{i,j} − U_i diag(s_{i,j}) V_j^T‖_F²` — one block's share of Eq. 4.
 fn block_loss_term(target: &Matrix, x: &BlastMatrix, i: usize, j: usize) -> f64 {
-    let rec = engine().matmul_nt_serial(&x.u_scaled(i, j), &x.v[j]); // p×q
+    let rec = nt_planned(&x.u_scaled(i, j), &x.v[j]); // p×q
     let a = target.block(i, j, x.b, x.b);
     0.5 * a.sub(&rec).fro_norm_sq()
 }
@@ -62,16 +81,16 @@ fn block_loss_term(target: &Matrix, x: &BlastMatrix, i: usize, j: usize) -> f64 
 pub fn grad_u(target: &Matrix, x: &BlastMatrix, i: usize) -> Matrix {
     let v_bar = x.v_bar(i); // n×r
     let a_row = target.block_row(i, x.b); // p×n
-    let resid = engine().matmul_nt_serial(&x.u[i], &v_bar).sub(&a_row); // p×n
-    engine().matmul_serial(&resid, &v_bar) // p×r
+    let resid = nt_planned(&x.u[i], &v_bar).sub(&a_row); // p×n
+    mm_planned(&resid, &v_bar) // p×r
 }
 
 /// Gradient w.r.t. `V_j` (Eq. 11): `(Ū_j V_j^T − A_{*,j})^T Ū_j`.
 pub fn grad_v(target: &Matrix, x: &BlastMatrix, j: usize) -> Matrix {
     let u_bar = x.u_bar(j); // m×r
     let a_col = target.block_col(j, x.b); // m×q
-    let resid = engine().matmul_nt_serial(&u_bar, &x.v[j]).sub(&a_col); // m×q
-    engine().matmul_serial(&resid.transpose(), &u_bar) // q×r
+    let resid = nt_planned(&u_bar, &x.v[j]).sub(&a_col); // m×q
+    mm_planned(&resid.transpose(), &u_bar) // q×r
 }
 
 /// Gradient w.r.t. `s_{i,j}` (Eq. 15):
@@ -95,7 +114,7 @@ pub fn gram_hadamard(u: &Matrix, v: &Matrix) -> Matrix {
 /// `diag(U^T A V)` computed without forming the full r×r product:
 /// entry `k` is `u_k^T A v_k`.
 pub fn diag_utav(u: &Matrix, a: &Matrix, v: &Matrix) -> Vec<f32> {
-    let av = engine().matmul_serial(a, v); // p×r
+    let av = mm_planned(a, v); // p×r
     let r = u.cols;
     let mut out = vec![0.0f32; r];
     for k in 0..r {

@@ -310,6 +310,10 @@ impl CompressionPipeline {
             let compressed = outcome.weight.is_some();
             if let Some(w) = outcome.weight {
                 layer.weight = w; // bias is preserved
+                // The weight structure changed in place: drop the
+                // layer's cached execution plan so the next dispatch
+                // lowers the new structure.
+                layer.plan = Default::default();
             }
             layers.push(LayerReport {
                 name: task.name.clone(),
@@ -442,6 +446,7 @@ fn weight_params(w: &LinearWeight) -> usize {
         bias: None,
         out_features: 0,
         in_features: 0,
+        plan: Default::default(),
     }
     .num_params()
 }
@@ -686,6 +691,7 @@ impl CheckpointCtx {
                 bias: None,
                 out_features: task.out,
                 in_features: task.inp,
+                plan: Default::default(),
             };
             let mut bundle = TensorBundle::new();
             carrier.write_into(&mut bundle, "layer");
@@ -750,6 +756,8 @@ pub fn compress_linears_parallel(
         match outcome.weight {
             Some(w) => {
                 layer.weight = w;
+                // New structure, stale plan: reset the layer's cell.
+                layer.plan = Default::default();
                 errs.push(Some(outcome.rel_error));
             }
             None => errs.push(None),

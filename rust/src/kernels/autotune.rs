@@ -26,7 +26,7 @@ use std::time::Instant;
 /// built on every engine dispatch.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct PlanKey {
-    /// Structure tag (serialized as `"dense"` / `"blast(b=8,r=32)"`).
+    /// Structure tag (serialized as `"dense"` / `"plan:blast(b=8,r=32)"`).
     pub op: OpTag,
     /// Output features.
     pub m: usize,
@@ -225,7 +225,7 @@ fn time_kernel(kernel: &dyn MatmulKernel, x: &Matrix, op: &KernelOp<'_>) -> f64 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::kernels::{FusedBlastKernel, NaiveKernel, ParallelKernel, TiledKernel};
+    use crate::kernels::{NaiveKernel, ParallelKernel, PlanKernel, PlanKind, PlanSig, TiledKernel};
     use crate::tensor::Rng;
 
     fn kernel_set() -> Vec<Box<dyn MatmulKernel>> {
@@ -233,19 +233,30 @@ mod tests {
             Box::new(NaiveKernel),
             Box::new(TiledKernel),
             Box::new(ParallelKernel),
-            Box::new(FusedBlastKernel::sequential()),
-            Box::new(FusedBlastKernel::row_parallel()),
+            Box::new(PlanKernel::sequential()),
+            Box::new(PlanKernel::row_parallel()),
         ]
     }
 
     #[test]
     fn op_tag_string_round_trip() {
-        for tag in [OpTag::Dense, OpTag::Blast { b: 8, r: 32 }, OpTag::Blast { b: 1, r: 1 }] {
+        for tag in [
+            OpTag::Dense,
+            OpTag::Plan(PlanSig { kind: PlanKind::Blast, b: 8, r: 32 }),
+            OpTag::Plan(PlanSig { kind: PlanKind::Monarch, b: 2, r: 4 }),
+            OpTag::Plan(PlanSig { kind: PlanKind::LowRank, b: 1, r: 16 }),
+            OpTag::Plan(PlanSig { kind: PlanKind::Dense, b: 1, r: 0 }),
+        ] {
             assert_eq!(OpTag::parse(&tag.to_tag_string()), Some(tag));
         }
-        assert_eq!(OpTag::parse("blast(b=8,r=32)"), Some(OpTag::Blast { b: 8, r: 32 }));
+        assert_eq!(
+            OpTag::parse("plan:blast(b=8,r=32)"),
+            Some(OpTag::Plan(PlanSig { kind: PlanKind::Blast, b: 8, r: 32 }))
+        );
+        // The retired pre-plan tag form is rejected (old files re-tune).
+        assert!(OpTag::parse("blast(b=8,r=32)").is_none());
         assert!(OpTag::parse("monarch(b=2)").is_none());
-        assert!(OpTag::parse("blast(b=x,r=2)").is_none());
+        assert!(OpTag::parse("plan:blast(b=x,r=2)").is_none());
     }
 
     #[test]

@@ -196,10 +196,11 @@ unsafe fn dot8_avx2(a: &[f32], b: &[f32]) -> f32 {
 }
 
 /// `y[o] = dot8(x, W.row(o))` for every packed output row, without
-/// going through a `Matrix` — the BLAST fused kernel's stage-1/stage-3
-/// primitive (`x` is one activation row or one coupling-weighted `w_i`).
-/// `y.len()` may be shorter than the padded tile grid; extra (padding)
-/// rows are computed into the register block and discarded.
+/// going through a `Matrix` — the single-row slice form of
+/// [`nt_block_packed`] (`x` is one activation row or one
+/// coupling-weighted stage vector). `y.len()` may be shorter than the
+/// padded tile grid; extra (padding) rows are computed into the
+/// register block and discarded.
 pub fn nt_row_packed(mode: SimdMode, x: &[f32], panels: &PackedPanels, y: &mut [f32]) {
     debug_assert_eq!(x.len(), panels.k);
     debug_assert_eq!(y.len(), panels.n);
@@ -283,8 +284,43 @@ pub fn nt_rows_packed(
     out: &mut [f32],
 ) {
     debug_assert_eq!(x.cols, panels.k);
+    debug_assert_eq!(out.len(), rows * panels.n);
+    nt_block_packed(mode, &x.data, x.cols, t0, 0, panels, rows, out, panels.n, 0, false);
+}
+
+/// The structure-plan generalization of [`nt_rows_packed`]: a packed
+/// `X · Wᵀ` over a *column window* of a strided source buffer, written
+/// into a *column window* of a strided destination buffer, optionally
+/// accumulating (`dst += …`, sequential adds in block-dispatch order —
+/// the plan executor's Monarch aggregation stage relies on this order
+/// being deterministic).
+///
+/// Source row `tt` is `src[(src_t0+tt)·src_stride + src_col ..][..k]`;
+/// destination row `tt` is
+/// `dst[tt·dst_stride + dst_col ..][..panels.n]` (destination rows are
+/// chunk-local, matching the parallel kernels' disjoint-chunk
+/// convention). Per-element arithmetic is the fixed-lane contract
+/// exactly — `dst = / += reduce_lanes(8-lane strided partials)` — so
+/// this routine is bit-identical to per-element [`dot8`] whatever the
+/// windowing.
+#[allow(clippy::too_many_arguments)]
+pub fn nt_block_packed(
+    mode: SimdMode,
+    src: &[f32],
+    src_stride: usize,
+    src_t0: usize,
+    src_col: usize,
+    panels: &PackedPanels,
+    rows: usize,
+    dst: &mut [f32],
+    dst_stride: usize,
+    dst_col: usize,
+    accumulate: bool,
+) {
+    let k = panels.k;
     let n = panels.n;
-    debug_assert_eq!(out.len(), rows * n);
+    debug_assert!(src_col + k <= src_stride.max(k));
+    debug_assert!(dst_col + n <= dst_stride.max(n));
     let use_avx2 = mode.use_avx2();
     for tile in 0..panels.tiles() {
         let j0 = tile * NR;
@@ -295,37 +331,37 @@ pub fn nt_rows_packed(
         let panel = panels.panel(tile);
         let mut t = 0usize;
         while t + MR <= rows {
-            let xa = x.row(t0 + t);
-            let xb = x.row(t0 + t + 1);
+            let xa = &src[(src_t0 + t) * src_stride + src_col..][..k];
+            let xb = &src[(src_t0 + t + 1) * src_stride + src_col..][..k];
             let mut acc = [[[0.0f32; LANES]; NR]; MR];
             mk_2xnr(use_avx2, xa, xb, panel, panels.kc, &mut acc);
-            write_block(&acc, t, j0, jn, n, out);
+            for (tt, row_acc) in acc.iter().enumerate() {
+                for (jj, j) in (j0..jn).enumerate() {
+                    let slot = &mut dst[(t + tt) * dst_stride + dst_col + j];
+                    let v = reduce_lanes(&row_acc[jj]);
+                    if accumulate {
+                        *slot += v;
+                    } else {
+                        *slot = v;
+                    }
+                }
+            }
             t += MR;
         }
         while t < rows {
-            let xa = x.row(t0 + t);
+            let xa = &src[(src_t0 + t) * src_stride + src_col..][..k];
             let mut acc = [[0.0f32; LANES]; NR];
             mk_1xnr(use_avx2, xa, panel, panels.kc, &mut acc);
             for (jj, j) in (j0..jn).enumerate() {
-                out[t * n + j] = reduce_lanes(&acc[jj]);
+                let slot = &mut dst[t * dst_stride + dst_col + j];
+                let v = reduce_lanes(&acc[jj]);
+                if accumulate {
+                    *slot += v;
+                } else {
+                    *slot = v;
+                }
             }
             t += 1;
-        }
-    }
-}
-
-#[inline(always)]
-fn write_block(
-    acc: &[[[f32; LANES]; NR]; MR],
-    t: usize,
-    j0: usize,
-    jn: usize,
-    n: usize,
-    out: &mut [f32],
-) {
-    for (tt, row_acc) in acc.iter().enumerate() {
-        for (jj, j) in (j0..jn).enumerate() {
-            out[(t + tt) * n + j] = reduce_lanes(&row_acc[jj]);
         }
     }
 }
@@ -575,6 +611,90 @@ mod tests {
                         "batch={batch} n={n} k={k} t={t} o={o}"
                     );
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn block_packed_windows_match_dot8_bitwise() {
+        // Column-windowed source/destination with strides (the plan
+        // executor's block-gather/scatter form) must match per-element
+        // dot8 on the gathered slices exactly, in both write and
+        // accumulate modes.
+        let mut rng = Rng::new(865);
+        let (rows, src_stride, src_col, k, n, dst_stride, dst_col) = (5usize, 20, 3, 9, 6, 15, 4);
+        let src = rng.gaussian_matrix(rows, src_stride, 1.0);
+        let w = rng.gaussian_matrix(n, k, 1.0);
+        let panels = PackedPanels::pack_rows(&w);
+        let mut dst = vec![0.0f32; rows * dst_stride];
+        nt_block_packed(
+            SimdMode::Portable,
+            &src.data,
+            src_stride,
+            0,
+            src_col,
+            &panels,
+            rows,
+            &mut dst,
+            dst_stride,
+            dst_col,
+            false,
+        );
+        for t in 0..rows {
+            let xs = &src.row(t)[src_col..src_col + k];
+            for o in 0..n {
+                let want = dot8(xs, w.row(o));
+                assert_eq!(
+                    dst[t * dst_stride + dst_col + o].to_bits(),
+                    want.to_bits(),
+                    "write mode t={t} o={o}"
+                );
+            }
+        }
+        // Accumulate mode: run again, expect exactly the sequential sum
+        // of the two identical contributions.
+        let before = dst.clone();
+        nt_block_packed(
+            SimdMode::Portable,
+            &src.data,
+            src_stride,
+            0,
+            src_col,
+            &panels,
+            rows,
+            &mut dst,
+            dst_stride,
+            dst_col,
+            true,
+        );
+        for t in 0..rows {
+            for o in 0..n {
+                let idx = t * dst_stride + dst_col + o;
+                let want = before[idx] + dot8(&src.row(t)[src_col..src_col + k], w.row(o));
+                assert_eq!(dst[idx].to_bits(), want.to_bits(), "accumulate mode t={t} o={o}");
+            }
+        }
+        // Untouched destination columns stay zero.
+        for t in 0..rows {
+            for c in 0..dst_col {
+                assert_eq!(dst[t * dst_stride + c], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn block_packed_src_t0_offset_selects_rows() {
+        let mut rng = Rng::new(866);
+        let x = rng.gaussian_matrix(6, 10, 1.0);
+        let w = rng.gaussian_matrix(4, 10, 1.0);
+        let panels = PackedPanels::pack_rows(&w);
+        // Compute rows 2..5 into a chunk-local buffer.
+        let mut chunk = vec![0.0f32; 3 * 4];
+        nt_block_packed(SimdMode::Portable, &x.data, 10, 2, 0, &panels, 3, &mut chunk, 4, 0, false);
+        for tt in 0..3 {
+            for o in 0..4 {
+                let want = dot8(x.row(2 + tt), w.row(o));
+                assert_eq!(chunk[tt * 4 + o].to_bits(), want.to_bits(), "tt={tt} o={o}");
             }
         }
     }

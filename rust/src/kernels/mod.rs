@@ -1,11 +1,12 @@
-//! Kernel engine: packed SIMD microkernel GEMM + fused BLAST kernels
-//! with a per-shape autotuner.
+//! Kernel engine: packed SIMD microkernel GEMM + structure-plan
+//! execution with a per-(plan, shape) autotuner.
 //!
-//! Every inference-time matrix product in the repo — the dense
-//! `Y = X · Wᵀ` of `nn::linear`, the attention score/context products,
-//! and the BLAST Algorithm-1 product of `blast::matmul` — dispatches
-//! through this subsystem instead of calling a fixed loop nest. The
-//! pieces:
+//! Every inference-time matrix product in the repo — the structured
+//! `Y = X · Wᵀ` of `nn::linear` (Dense, Low-Rank, Monarch,
+//! Block-Diagonal, and BLAST weights alike), the attention score/context
+//! products, and the BLAST Algorithm-1 product of `blast::matmul` —
+//! dispatches through this subsystem instead of calling a fixed loop
+//! nest. The pieces:
 //!
 //! * [`micro`] — the BLIS-style packed microkernel and the engine's
 //!   **fixed-lane accumulation contract**: every contraction is an
@@ -16,20 +17,28 @@
 //!   `std::arch` AVX2 path is controlled by `BLAST_SIMD=auto|avx2|
 //!   portable` (default `auto`; both paths are bit-identical).
 //! * [`pack`] — B-panel packing: weights are repacked once per
-//!   (weights, shape) into microkernel panels and cached process-wide,
-//!   with sampled-fingerprint invalidation on in-place mutation.
+//!   (weights, shape) into microkernel panels and cached process-wide
+//!   with sampled-fingerprint invalidation on in-place mutation and
+//!   byte-bounded LRU eviction (`BLAST_PACK_CACHE_MB`).
+//! * [`plan`] — the **structure-plan IR**: every weight structure
+//!   lowers to a short sequence of packed-microkernel stages
+//!   (block-windowed `Gemm` over cached factor panels, the BLAST
+//!   coupling stage) with thread-local inter-stage scratch. One tuned
+//!   execution path serves all five structures — the paper's
+//!   one-abstraction claim (§3, Table 1) realized at the execution
+//!   layer.
 //! * [`naive::NaiveKernel`] — the contract reference (no blocking, no
-//!   packing, no SIMD dispatch, no threads). Every other kernel must
-//!   match it **bit for bit** (`tests/kernel_parity.rs`).
-//! * [`tiled::TiledKernel`] — single-threaded packed-microkernel dense
-//!   kernel.
-//! * [`parallel::ParallelKernel`] — the same microkernel fanned out over
-//!   `util::par`'s scoped-thread pool, one disjoint output-row chunk per
-//!   worker.
-//! * [`fused::FusedBlastKernel`] — Algorithm 1 with stages 1 and 3 as
-//!   microkernel calls over the packed `V`/`U` factor panels and
-//!   thread-local stage scratch. Sequential and row-parallel variants
-//!   are registered.
+//!   packing, no SIMD dispatch, no threads; plans run per element with
+//!   gathered columns). Every other kernel must match it **bit for
+//!   bit** (`tests/kernel_parity.rs`).
+//! * [`tiled::TiledKernel`] / [`parallel::ParallelKernel`] — the packed
+//!   dense kernels for raw `DenseNt` ops (attention activations and
+//!   other weight-agnostic products).
+//! * [`plan::PlanKernel`] — the packed structure-plan executor,
+//!   registered in sequential (`plan_seq`) and batch-row-parallel
+//!   (`plan_par`) variants; the autotuner picks per (plan signature,
+//!   shape, batch-bucket), so Monarch/BlockDiag/LowRank shapes get
+//!   tuned execution instead of hardcoded loops.
 //! * [`autotune::Autotuner`] — benchmarks the candidate kernels the
 //!   first time each `(structure, shape, batch-bucket)` key is seen,
 //!   caches the winner in-process, and (optionally) persists the plan
@@ -40,51 +49,62 @@
 //! ## Dispatch
 //!
 //! [`engine()`] returns the process-wide [`KernelEngine`]. Hot paths
-//! call [`KernelEngine::matmul_nt`] / [`KernelEngine::blast_act`] (or
+//! call [`KernelEngine::matmul_nt`] / [`KernelEngine::plan_act`] (or
 //! their allocation-free `*_into` variants, which write into a
 //! caller-owned output matrix and are what the zero-allocation decode
 //! path uses); the engine resolves the plan (tuning on a miss) and runs
-//! the chosen kernel.
+//! the chosen kernel. Layers resolve their [`plan::StructPlan`] from a
+//! per-layer [`plan::PlanCell`] (built at model load by
+//! `TinyLM::pretune`), so a steady-state structured `forward_into` is
+//! allocation-free for **every** structure.
 //!
 //! Environment knobs:
 //!
 //! * `BLAST_KERNEL=<name>` — force one kernel (e.g. `naive`,
-//!   `dense_tiled`, `dense_parallel`, `blast_fused`, `blast_fused_par`)
-//!   for every op it supports; used by the benches to compare kernels.
+//!   `dense_tiled`, `dense_parallel`, `plan_seq`, `plan_par`) for every
+//!   op it supports; used by the benches to compare kernels.
 //! * `BLAST_SIMD=auto|avx2|portable` — SIMD path selection (see above).
+//! * `BLAST_PACK_CACHE_MB=<mib>` — packed-panel cache budget.
 //! * `BLAST_AUTOTUNE_CACHE=<path>` — load the plan table from `<path>`
 //!   at startup and re-persist it after each new tuning decision.
 //!
-//! ## Plan format
+//! ## Plan-table format
 //!
 //! ```json
 //! {
 //!   "version": 1,
 //!   "plans": [
-//!     {"op": "blast(b=8,r=32)", "m": 1024, "n": 1024, "batch": 8,
-//!      "kernel": "blast_fused_par"}
+//!     {"op": "plan:blast(b=8,r=32)", "m": 1024, "n": 1024, "batch": 8,
+//!      "kernel": "plan_par"}
 //!   ]
 //! }
 //! ```
 //!
-//! `batch` is the bucket ceiling (1, 8, 64, 4096), so decode (batch=1)
-//! and prefill (batch≫1) tune independently. Regenerate a plan file with
+//! `op` is the structure-plan signature (`"dense"` for raw dense ops;
+//! `"plan:dense"`, `"plan:lowrank(r=…)"`, `"plan:monarch(b=…,t=…)"`,
+//! `"plan:blockdiag(b=…,t=…)"`, `"plan:blast(b=…,r=…)"` for plan ops),
+//! and `batch` is the bucket ceiling (1, 8, 64, 4096), so decode
+//! (batch=1) and prefill (batch≫1) tune independently. Entries with
+//! unknown tags or kernel names (e.g. the pre-plan `"blast(b=…)"` tags)
+//! are skipped and simply re-tuned. Regenerate a plan file with
 //! `BLAST_AUTOTUNE_CACHE=plans.json cargo bench --bench blast_matmul`.
 
 pub mod autotune;
-pub mod fused;
 pub mod micro;
 pub mod naive;
 pub mod pack;
 pub mod parallel;
+pub mod plan;
 pub mod tiled;
 
 pub use autotune::{Autotuner, PlanKey};
-pub use fused::FusedBlastKernel;
 pub use micro::{SimdMode, LANES, MR, NR};
 pub use naive::NaiveKernel;
 pub use pack::{PackCache, PackedPanels};
 pub use parallel::ParallelKernel;
+pub use plan::{
+    plan_cache, PlanCache, PlanCell, PlanKernel, PlanKind, PlanOperands, PlanSig, StructPlan,
+};
 pub use tiled::TiledKernel;
 
 use crate::blast::BlastMatrix;
@@ -93,13 +113,14 @@ use crate::tensor::Matrix;
 use crate::util::par;
 use std::sync::OnceLock;
 
-/// Where a [`BlastView`]'s factor matrices live. Borrowed, so building
-/// a view is allocation-free — this runs on every decode dispatch.
+/// Where a [`PlanOperands`] factor group's matrices live. Borrowed, so
+/// building operands is allocation-free — this runs on every decode
+/// dispatch.
 #[derive(Clone, Copy)]
 pub enum Factors<'a> {
-    /// Plain matrices (`BlastMatrix::u` / `::v`).
+    /// Plain matrices (`BlastMatrix::u` / `::v`, transient factors).
     Mats(&'a [Matrix]),
-    /// Trainable parameters (`nn::linear::LinearWeight::Blast`).
+    /// Trainable parameters (`nn::linear::LinearWeight` factor lists).
     Params(&'a [PTensor]),
 }
 
@@ -111,17 +132,9 @@ impl<'a> Factors<'a> {
             Factors::Params(p) => &p[i].v,
         }
     }
-
-    #[inline]
-    fn len(&self) -> usize {
-        match self {
-            Factors::Mats(m) => m.len(),
-            Factors::Params(p) => p.len(),
-        }
-    }
 }
 
-/// Where a [`BlastView`]'s coupling table lives (also borrowed).
+/// Where a plan's coupling table lives (also borrowed).
 #[derive(Clone, Copy)]
 pub enum Couplings<'a> {
     /// `BlastMatrix::s` — nested `[i][j] -> Vec<f32>` of length `r`.
@@ -130,128 +143,15 @@ pub enum Couplings<'a> {
     Packed(&'a Matrix),
 }
 
-/// Borrowed view of a BLAST weight, shared by `BlastMatrix` and the
-/// trainable `nn::linear::LinearWeight::Blast` layout so kernels are
-/// agnostic to where the factors live. Construction never allocates.
-pub struct BlastView<'a> {
-    /// Logical output features (rows of the represented matrix).
-    pub m: usize,
-    /// Logical input features (cols of the represented matrix).
-    pub n: usize,
-    /// Blocks per side.
-    pub b: usize,
-    /// Rank parameter.
-    pub r: usize,
-    u: Factors<'a>,
-    v: Factors<'a>,
-    s: Couplings<'a>,
-}
-
-impl<'a> BlastView<'a> {
-    /// View over explicit factor/coupling storage.
-    pub fn new(
-        m: usize,
-        n: usize,
-        b: usize,
-        r: usize,
-        u: Factors<'a>,
-        v: Factors<'a>,
-        s: Couplings<'a>,
-    ) -> Self {
-        BlastView { m, n, b, r, u, v, s }
-    }
-
-    /// View over a `BlastMatrix`.
-    pub fn from_matrix(a: &'a BlastMatrix) -> Self {
-        BlastView {
-            m: a.m,
-            n: a.n,
-            b: a.b,
-            r: a.r,
-            u: Factors::Mats(&a.u),
-            v: Factors::Mats(&a.v),
-            s: Couplings::Nested(&a.s),
-        }
-    }
-
-    /// Block height `p = m/b`.
-    #[inline]
-    pub fn p(&self) -> usize {
-        self.m / self.b
-    }
-
-    /// Block width `q = n/b`.
-    #[inline]
-    pub fn q(&self) -> usize {
-        self.n / self.b
-    }
-
-    /// Left factor `U_i` (`p × r`).
-    #[inline]
-    pub fn u(&self, i: usize) -> &'a Matrix {
-        self.u.get(i)
-    }
-
-    /// Right factor `V_j` (`q × r`).
-    #[inline]
-    pub fn v(&self, j: usize) -> &'a Matrix {
-        self.v.get(j)
-    }
-
-    /// Coupling vector `s_{i,j}` (length `r`).
-    #[inline]
-    pub fn s_row(&self, i: usize, j: usize) -> &'a [f32] {
-        match self.s {
-            Couplings::Nested(s) => &s[i][j],
-            Couplings::Packed(s) => s.row(i * self.b + j),
-        }
-    }
-
-    fn validate(&self, x: &Matrix) {
-        assert_eq!(x.cols, self.n, "blast_act input mismatch: x cols {} vs n {}", x.cols, self.n);
-        assert_eq!(
-            self.u.len(),
-            self.b,
-            "blast view: {} left factors for b={}",
-            self.u.len(),
-            self.b
-        );
-        assert_eq!(
-            self.v.len(),
-            self.b,
-            "blast view: {} right factors for b={}",
-            self.v.len(),
-            self.b
-        );
-        match self.s {
-            Couplings::Nested(s) => {
-                assert_eq!(s.len(), self.b, "blast view: coupling rows");
-                for (i, row) in s.iter().enumerate() {
-                    assert_eq!(
-                        row.len(),
-                        self.b,
-                        "blast view: coupling row {i} has {} entries for b={}",
-                        row.len(),
-                        self.b
-                    );
-                }
-            }
-            Couplings::Packed(s) => {
-                assert_eq!(s.rows, self.b * self.b, "blast view: coupling table size");
-                assert_eq!(s.cols, self.r, "blast view: coupling width");
-            }
-        }
-    }
-}
-
 /// One dispatchable operation over a row-major activation batch
 /// `X (batch × in_features)`.
 pub enum KernelOp<'a> {
-    /// `Y = X · Wᵀ` with a dense weight `W (out × in)` — the linear-layer
-    /// and attention-score primitive.
+    /// `Y = X · Wᵀ` with a raw dense weight `W (out × in)` — the
+    /// attention-score / weight-agnostic primitive.
     DenseNt { w: &'a Matrix },
-    /// `Y = X · Aᵀ` via BLAST Algorithm 1.
-    Blast(BlastView<'a>),
+    /// A lowered weight structure: `Y = X · Aᵀ` executed as the plan's
+    /// packed-microkernel stages over `ops`' factor storage.
+    Plan { plan: &'a StructPlan, ops: PlanOperands<'a> },
 }
 
 /// Allocation-free structure identity of an op — the hot-path half of a
@@ -260,30 +160,29 @@ pub enum KernelOp<'a> {
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum OpTag {
     Dense,
-    Blast { b: u32, r: u32 },
+    Plan(PlanSig),
 }
 
 impl OpTag {
     /// Stable textual form used in the JSON plan file
-    /// (`"dense"` / `"blast(b=8,r=32)"`).
+    /// (`"dense"` / `"plan:blast(b=8,r=32)"`).
     pub fn to_tag_string(self) -> String {
         match self {
             OpTag::Dense => "dense".to_string(),
-            OpTag::Blast { b, r } => format!("blast(b={b},r={r})"),
+            OpTag::Plan(sig) => sig.to_tag_string(),
         }
     }
 
     /// Inverse of [`to_tag_string`]; `None` on unknown tags (old or
-    /// hand-edited plan files).
+    /// hand-edited plan files — including the pre-plan `"blast(b=…)"`
+    /// form, which is deliberately retired and re-tunes).
     ///
     /// [`to_tag_string`]: OpTag::to_tag_string
     pub fn parse(tag: &str) -> Option<Self> {
         if tag == "dense" {
             return Some(OpTag::Dense);
         }
-        let inner = tag.strip_prefix("blast(b=")?.strip_suffix(')')?;
-        let (b, r) = inner.split_once(",r=")?;
-        Some(OpTag::Blast { b: b.parse().ok()?, r: r.parse().ok()? })
+        PlanSig::parse(tag).map(OpTag::Plan)
     }
 }
 
@@ -292,7 +191,7 @@ impl KernelOp<'_> {
     pub fn out_features(&self) -> usize {
         match self {
             KernelOp::DenseNt { w } => w.rows,
-            KernelOp::Blast(a) => a.m,
+            KernelOp::Plan { plan, .. } => plan.m,
         }
     }
 
@@ -300,7 +199,7 @@ impl KernelOp<'_> {
     pub fn in_features(&self) -> usize {
         match self {
             KernelOp::DenseNt { w } => w.cols,
-            KernelOp::Blast(a) => a.n,
+            KernelOp::Plan { plan, .. } => plan.n,
         }
     }
 
@@ -308,7 +207,7 @@ impl KernelOp<'_> {
     pub fn tag(&self) -> OpTag {
         match self {
             KernelOp::DenseNt { .. } => OpTag::Dense,
-            KernelOp::Blast(a) => OpTag::Blast { b: a.b as u32, r: a.r as u32 },
+            KernelOp::Plan { plan, .. } => OpTag::Plan(plan.sig),
         }
     }
 }
@@ -356,8 +255,8 @@ impl KernelEngine {
             Box::new(NaiveKernel),
             Box::new(TiledKernel),
             Box::new(ParallelKernel),
-            Box::new(FusedBlastKernel::sequential()),
-            Box::new(FusedBlastKernel::row_parallel()),
+            Box::new(PlanKernel::sequential()),
+            Box::new(PlanKernel::row_parallel()),
         ];
         let tuner = Autotuner::from_env();
         let forced = std::env::var("BLAST_KERNEL")
@@ -446,10 +345,14 @@ impl KernelEngine {
         y
     }
 
-    /// `C = A · B` via [`matmul_nt_serial`]: `B` is transposed once
-    /// (O(rows·cols), a ≤1/r fraction of the O(m·n·r) product for the
-    /// tall-thin factor shapes this serves) and dispatched as
-    /// `A · (Bᵀ)ᵀ`.
+    /// `C = A · B` as a [`StructPlan::dense_t`] plan on the serial
+    /// reference executor: `B`'s columns are gathered once per call
+    /// into reused thread-local scratch (never allocating a `Bᵀ` — the
+    /// pre-plan implementation transposed `B` afresh on every call),
+    /// dispatched with the same fixed-lane contract, so the result is
+    /// bit-identical to `matmul_nt_serial(a, Bᵀ)`. Serial and
+    /// pack-cache-free like [`matmul_nt_serial`], for the same
+    /// scheduling reasons.
     ///
     /// [`matmul_nt_serial`]: KernelEngine::matmul_nt_serial
     pub fn matmul_serial(&self, a: &Matrix, b: &Matrix) -> Matrix {
@@ -460,19 +363,66 @@ impl KernelEngine {
             a.shape(),
             b.shape()
         );
-        self.matmul_nt_serial(a, &b.transpose())
+        let plan = plan_cache().dense_t(b.cols, b.rows);
+        self.plan_act_serial(a, &plan, &PlanOperands::single(b))
     }
 
-    /// BLAST Algorithm-1 activation product through the tuned kernel.
+    /// A structured product `Y = X · Aᵀ` through the tuned kernel for
+    /// this (plan signature, shape, batch-bucket).
+    pub fn plan_act(&self, x: &Matrix, plan: &StructPlan, ops: &PlanOperands<'_>) -> Matrix {
+        self.dispatch(x, &KernelOp::Plan { plan, ops: *ops })
+    }
+
+    /// [`plan_act`] into a caller-owned output — the allocation-free
+    /// structured hot path.
+    ///
+    /// [`plan_act`]: KernelEngine::plan_act
+    pub fn plan_act_into(
+        &self,
+        x: &Matrix,
+        plan: &StructPlan,
+        ops: &PlanOperands<'_>,
+        out: &mut Matrix,
+    ) {
+        self.dispatch_into(x, &KernelOp::Plan { plan, ops: *ops }, out);
+    }
+
+    /// Execute a plan on the serial reference path: per-element
+    /// contract arithmetic, no worker threads, no autotuner probe, and
+    /// — critically for the factorization sweeps, whose factors mutate
+    /// every iteration — **no pack-cache traffic**. Bit-identical to
+    /// the tuned [`plan_act`] by the fixed-lane contract.
+    ///
+    /// [`plan_act`]: KernelEngine::plan_act
+    pub fn plan_act_serial(
+        &self,
+        x: &Matrix,
+        plan: &StructPlan,
+        ops: &PlanOperands<'_>,
+    ) -> Matrix {
+        ops.validate(plan, x);
+        let mut y = Matrix::zeros(x.rows, plan.m);
+        if x.rows > 0 {
+            plan::execute_reference(micro::simd_mode(), x, plan, ops, &mut y.data);
+        }
+        y
+    }
+
+    /// BLAST Algorithm-1 activation product through the tuned kernel
+    /// (the `BlastMatrix` convenience wrapper over [`plan_act`]).
+    ///
+    /// [`plan_act`]: KernelEngine::plan_act
     pub fn blast_act(&self, x: &Matrix, a: &BlastMatrix) -> Matrix {
-        self.dispatch(x, &KernelOp::Blast(BlastView::from_matrix(a)))
+        let plan = a.plan();
+        self.plan_act(x, &plan, &a.plan_operands())
     }
 
     /// [`blast_act`] into a caller-owned output.
     ///
     /// [`blast_act`]: KernelEngine::blast_act
     pub fn blast_act_into(&self, x: &Matrix, a: &BlastMatrix, out: &mut Matrix) {
-        self.dispatch_into(x, &KernelOp::Blast(BlastView::from_matrix(a)), out);
+        let plan = a.plan();
+        self.plan_act_into(x, &plan, &a.plan_operands(), out);
     }
 
     /// Dispatch an op, tuning on a plan miss.
@@ -501,10 +451,12 @@ impl KernelEngine {
     }
 
     /// Shared plan resolution: validate, short-circuit empty batches
-    /// (`None`), apply `BLAST_KERNEL` forcing, tune on a miss.
+    /// (`None`), apply `BLAST_KERNEL` forcing, tune on a miss. A cached
+    /// choice that does not support the op (a stale or hand-edited plan
+    /// file) is re-tuned rather than trusted.
     fn resolve(&self, x: &Matrix, op: &KernelOp<'_>) -> Option<usize> {
-        if let KernelOp::Blast(view) = op {
-            view.validate(x);
+        if let KernelOp::Plan { plan, ops } = op {
+            ops.validate(plan, x);
         }
         if x.rows == 0 {
             return None;
@@ -516,8 +468,8 @@ impl KernelEngine {
         }
         let key = PlanKey::for_op(op, x.rows);
         Some(match self.tuner.lookup(&key, &self.kernels) {
-            Some(i) => i,
-            None => self.tuner.tune(&key, x, op, &self.kernels),
+            Some(i) if self.kernels[i].supports(op, x.rows) => i,
+            _ => self.tuner.tune(&key, x, op, &self.kernels),
         })
     }
 
@@ -621,9 +573,9 @@ mod tests {
         let y_ref = crate::tensor::matmul(&a, &b);
         assert_eq!(y.shape(), (7, 9));
         assert!(y.sub(&y_ref).fro_norm() < 1e-4 * (1.0 + y_ref.fro_norm()));
-
-        let nt = engine().matmul_nt_serial(&a, &rng.gaussian_matrix(5, 12, 1.0));
-        assert_eq!(nt.shape(), (7, 5));
+        // Bit-identical to the transpose-then-NT form it replaced.
+        let nt = engine().matmul_nt_serial(&a, &b.transpose());
+        assert_eq!(y.data, nt.data, "col-gathered plan diverged from transpose-then-NT");
     }
 
     #[test]
@@ -635,6 +587,10 @@ mod tests {
         let mut out = Matrix::zeros(3, 3);
         engine().matmul_nt_into(&x, &w, &mut out);
         assert_eq!(out.shape(), (0, 4));
+
+        let plan = StructPlan::dense(4, 6);
+        let y = engine().plan_act(&x, &plan, &PlanOperands::single(&w));
+        assert_eq!(y.shape(), (0, 4));
     }
 
     #[test]
@@ -649,13 +605,33 @@ mod tests {
     }
 
     #[test]
-    fn view_from_matrix_is_consistent() {
+    fn plan_ops_tune_separately_from_raw_dense() {
+        // A dense *plan* op and a raw DenseNt op at the same shape use
+        // distinct tuner keys (distinct tags), so a cached choice for
+        // one can never be applied to the other.
         let mut rng = Rng::new(803);
-        let a = BlastMatrix::random_init(8, 8, 2, 3, 1.0, &mut rng);
-        let view = BlastView::from_matrix(&a);
-        assert_eq!(view.p(), 4);
-        assert_eq!(view.q(), 4);
-        assert_eq!(view.s_row(1, 0), a.s[1][0].as_slice());
-        assert_eq!(view.u(1).shape(), (4, 3));
+        let x = rng.gaussian_matrix(2, 16, 1.0);
+        let w = rng.gaussian_matrix(8, 16, 1.0);
+        let plan = plan_cache().dense(8, 16);
+        let y_plan = engine().plan_act(&x, &plan, &PlanOperands::single(&w));
+        let y_raw = engine().matmul_nt(&x, &w);
+        assert_eq!(y_plan.data, y_raw.data, "both tags share the contract bits");
+        let raw_key = PlanKey::for_op(&KernelOp::DenseNt { w: &w }, 2);
+        let plan_key =
+            PlanKey::for_op(&KernelOp::Plan { plan: &plan, ops: PlanOperands::single(&w) }, 2);
+        assert_ne!(raw_key, plan_key);
+        assert!(engine().plan_for(&plan_key).is_some(), "plan op tuned under its own key");
+    }
+
+    #[test]
+    fn plan_act_serial_bit_matches_tuned_plan_act() {
+        let mut rng = Rng::new(807);
+        let a = BlastMatrix::random_init(12, 12, 3, 4, 1.0, &mut rng);
+        let x = rng.gaussian_matrix(4, 12, 1.0);
+        let plan = a.plan();
+        let ops = a.plan_operands();
+        let tuned = engine().plan_act(&x, &plan, &ops);
+        let serial = engine().plan_act_serial(&x, &plan, &ops);
+        assert_eq!(tuned.data, serial.data, "serial plan path diverged from tuned");
     }
 }

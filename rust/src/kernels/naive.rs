@@ -2,29 +2,22 @@
 //! out with no blocking, no packing, no threading, and no SIMD.
 //!
 //! Deliberately the slowest correct implementation — it mirrors the
-//! textbook structure of each op (dense `y_{t,o} = x_t · w_o`; BLAST
-//! Algorithm 1 block by block) while computing **every contraction with
-//! [`micro::dot8`]**, the portable contract-defining dot product. Under
-//! the engine-wide fixed-lane contract the optimized kernels must
-//! reproduce this kernel's results *bit for bit* (not approximately),
-//! which is what `tests/kernel_parity.rs` asserts; the autotuner can
-//! therefore fall back to it for any op without changing a single bit.
+//! textbook structure of each op (dense `y_{t,o} = x_t · w_o`;
+//! structure plans stage by stage, one row and one element at a time,
+//! with col-packed factors explicitly gathered) while computing **every
+//! contraction with [`micro::dot8`]**, the portable contract-defining
+//! dot product. Under the engine-wide fixed-lane contract the optimized
+//! kernels must reproduce this kernel's results *bit for bit* (not
+//! approximately), which is what `tests/kernel_parity.rs` asserts; the
+//! autotuner can therefore fall back to it for any op without changing
+//! a single bit.
 //!
 //! [`micro::dot8`]: super::micro::dot8
 
 use super::micro::dot8;
-use super::{BlastView, KernelOp, MatmulKernel};
+use super::plan;
+use super::{KernelOp, MatmulKernel, SimdMode};
 use crate::tensor::Matrix;
-use std::cell::RefCell;
-
-thread_local! {
-    /// Per-thread (vcol, z, w) scratch for the BLAST reference path, so
-    /// `run_into` stays allocation-free — the autotuner may legitimately
-    /// pick `naive` for a hot decode shape, and the engine-wide
-    /// zero-allocation guarantee must not depend on which kernel wins.
-    static SCRATCH: RefCell<(Vec<f32>, Vec<f32>, Vec<f32>)> =
-        const { RefCell::new((Vec::new(), Vec::new(), Vec::new())) };
-}
 
 /// Contract-reference kernel (supports every op).
 pub struct NaiveKernel;
@@ -48,7 +41,12 @@ impl MatmulKernel for NaiveKernel {
         out.reset(x.rows, op.out_features());
         match op {
             KernelOp::DenseNt { w } => dense_nt(x, w, out),
-            KernelOp::Blast(a) => blast_act(x, a, out),
+            // The reference executor keeps its per-row scratch in
+            // thread-locals, so this stays allocation-free when the
+            // autotuner picks `naive` for a hot decode shape.
+            KernelOp::Plan { plan, ops } => {
+                plan::execute_reference(SimdMode::Portable, x, plan, ops, &mut out.data)
+            }
         }
     }
 }
@@ -61,52 +59,6 @@ fn dense_nt(x: &Matrix, w: &Matrix, y: &mut Matrix) {
             y.set(t, o, dot8(x.row(t), w.row(o)));
         }
     }
-}
-
-/// Algorithm 1, one block at a time, one token at a time. Stage 1 dots
-/// run over an explicitly gathered `V_j` column so the contraction order
-/// (ascending position within the block, 8-lane strided) matches the
-/// packed fused kernel exactly.
-fn blast_act(x: &Matrix, a: &BlastView<'_>, y: &mut Matrix) {
-    let (p, q, b, r) = (a.p(), a.q(), a.b, a.r);
-    let batch = x.rows;
-    SCRATCH.with(|cell| {
-        let mut scratch = cell.borrow_mut();
-        let (vcol, z, w) = &mut *scratch;
-        vcol.clear();
-        vcol.resize(q, 0.0);
-        z.clear();
-        z.resize(b * r, 0.0);
-        w.clear();
-        w.resize(r, 0.0);
-        for t in 0..batch {
-            let xrow = x.row(t);
-            // Stage 1: z_j[k] = dot8(x_j, V_j[:, k]).
-            for j in 0..b {
-                let vj = a.v(j);
-                let xj = &xrow[j * q..(j + 1) * q];
-                for k in 0..r {
-                    for (c, slot) in vcol.iter_mut().enumerate() {
-                        *slot = vj.at(c, k);
-                    }
-                    z[j * r + k] = dot8(xj, vcol);
-                }
-            }
-            // Stage 2 (ascending j, per element) + stage 3 per block row.
-            for i in 0..b {
-                w.iter_mut().for_each(|v| *v = 0.0);
-                for j in 0..b {
-                    let s = a.s_row(i, j);
-                    for k in 0..r {
-                        w[k] += s[k] * z[j * r + k];
-                    }
-                }
-                for c in 0..p {
-                    y.set(t, i * p + c, dot8(a.u(i).row(c), w));
-                }
-            }
-        }
-    });
 }
 
 #[cfg(test)]
@@ -126,12 +78,12 @@ mod tests {
     }
 
     #[test]
-    fn blast_matches_dense_reconstruction() {
+    fn blast_plan_matches_dense_reconstruction() {
         let mut rng = Rng::new(811);
         let a = BlastMatrix::random_init(10, 15, 5, 3, 1.0, &mut rng);
         let x = rng.gaussian_matrix(3, 15, 1.0);
-        let view = super::super::BlastView::from_matrix(&a);
-        let y = NaiveKernel.run(&x, &KernelOp::Blast(view));
+        let plan = a.plan();
+        let y = NaiveKernel.run(&x, &KernelOp::Plan { plan: &plan, ops: a.plan_operands() });
         let y_ref = crate::tensor::matmul_nt(&x, &a.to_dense());
         assert!(y.sub(&y_ref).fro_norm() < 1e-3 * (1.0 + y_ref.fro_norm()));
     }

@@ -17,18 +17,28 @@
 //! single-element edits of large weights). Serving-path weights are
 //! immutable after load; the fingerprint is a safety net for
 //! whole-tensor in-place updates (optimizer steps, factor sweeps),
-//! which always touch sampled elements. Entries are dropped wholesale
-//! when the cache exceeds [`PACK_CACHE_CAP`] weights — packing is
-//! O(n·k), so a rare global re-pack beats tracking LRU order on the
-//! hot path.
+//! which always touch sampled elements.
+//!
+//! The cache is **byte-bounded**: packed panels are evicted in
+//! least-recently-used order whenever the total packed bytes exceed the
+//! capacity (`BLAST_PACK_CACHE_MB`, default
+//! [`DEFAULT_PACK_CACHE_MB`] MiB), so long-lived serving processes
+//! holding many models cannot grow packed panels without limit. Hit
+//! recency is a relaxed atomic tick (no lock, no allocation on the hot
+//! path); eviction runs only on insert. An evicted weight simply
+//! repacks on next use — eviction can never change results, only
+//! re-pay the O(n·k) pack (asserted by the in-module eviction-parity
+//! test).
 
 use super::micro::{LANES, NR};
 use crate::tensor::Matrix;
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, OnceLock, RwLock};
 
-/// Maximum cached packed weights before the cache is cleared.
-pub const PACK_CACHE_CAP: usize = 1024;
+/// Default [`PackCache`] capacity in MiB when `BLAST_PACK_CACHE_MB` is
+/// unset.
+pub const DEFAULT_PACK_CACHE_MB: usize = 512;
 
 /// A weight matrix repacked into microkernel panels.
 pub struct PackedPanels {
@@ -119,16 +129,50 @@ struct PackKey {
 struct PackEntry {
     fingerprint: u64,
     panels: Arc<PackedPanels>,
+    /// Packed bytes this entry holds (panel data only).
+    bytes: usize,
+    /// Recency tick of the last hit (relaxed: approximate order is
+    /// enough for eviction, and the hot path must stay lock-free).
+    last_used: AtomicU64,
+}
+
+/// The map plus its running byte total (kept together so both are
+/// guarded by one lock).
+#[derive(Default)]
+struct PackInner {
+    map: HashMap<PackKey, PackEntry>,
+    bytes: usize,
 }
 
 /// Process-wide packed-weight cache (see the module docs).
 pub struct PackCache {
-    entries: RwLock<HashMap<PackKey, PackEntry>>,
+    entries: RwLock<PackInner>,
+    capacity_bytes: usize,
+    tick: AtomicU64,
 }
 
 impl PackCache {
+    /// Cache bounded by `BLAST_PACK_CACHE_MB` (default
+    /// [`DEFAULT_PACK_CACHE_MB`]).
     pub fn new() -> Self {
-        PackCache { entries: RwLock::new(HashMap::new()) }
+        let mb = std::env::var("BLAST_PACK_CACHE_MB")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .filter(|&mb| mb > 0)
+            .unwrap_or(DEFAULT_PACK_CACHE_MB);
+        Self::with_capacity_bytes(mb.saturating_mul(1024 * 1024))
+    }
+
+    /// Cache with an explicit byte budget (tests exercise eviction with
+    /// tiny budgets; production uses [`new`]).
+    ///
+    /// [`new`]: PackCache::new
+    pub fn with_capacity_bytes(capacity_bytes: usize) -> Self {
+        PackCache {
+            entries: RwLock::new(PackInner::default()),
+            capacity_bytes: capacity_bytes.max(1),
+            tick: AtomicU64::new(1),
+        }
     }
 
     /// Packed rows of `w`, from cache when the fingerprint still matches.
@@ -150,9 +194,10 @@ impl PackCache {
         };
         let fp = fingerprint(&w.data);
         {
-            let entries = self.entries.read().unwrap();
-            if let Some(e) = entries.get(&key) {
+            let inner = self.entries.read().unwrap();
+            if let Some(e) = inner.map.get(&key) {
                 if e.fingerprint == fp {
+                    e.last_used.store(self.tick.fetch_add(1, Ordering::Relaxed), Ordering::Relaxed);
                     return Arc::clone(&e.panels);
                 }
             }
@@ -162,22 +207,60 @@ impl PackCache {
         } else {
             PackedPanels::pack_rows(w)
         });
-        let mut entries = self.entries.write().unwrap();
-        if entries.len() >= PACK_CACHE_CAP {
-            entries.clear();
+        let bytes = panels.data.len() * std::mem::size_of::<f32>();
+        let mut inner = self.entries.write().unwrap();
+        if let Some(old) = inner.map.remove(&key) {
+            // Stale entry for a mutated weight: replace, reclaim bytes.
+            inner.bytes -= old.bytes;
         }
-        entries.insert(key, PackEntry { fingerprint: fp, panels: Arc::clone(&panels) });
+        inner.map.insert(
+            key,
+            PackEntry {
+                fingerprint: fp,
+                panels: Arc::clone(&panels),
+                bytes,
+                last_used: AtomicU64::new(self.tick.fetch_add(1, Ordering::Relaxed)),
+            },
+        );
+        inner.bytes += bytes;
+        // LRU eviction down to the byte budget. The entry just inserted
+        // carries the freshest tick, so it survives unless it alone
+        // exceeds the budget — in which case it is still returned to the
+        // caller (Arc-owned) and simply not retained.
+        while inner.bytes > self.capacity_bytes && !inner.map.is_empty() {
+            let Some(victim) = inner
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.last_used.load(Ordering::Relaxed))
+                .map(|(k, _)| *k)
+            else {
+                break;
+            };
+            if let Some(e) = inner.map.remove(&victim) {
+                inner.bytes -= e.bytes;
+            }
+        }
         panels
     }
 
     /// Number of cached weights (diagnostics / tests).
     pub fn len(&self) -> usize {
-        self.entries.read().unwrap().len()
+        self.entries.read().unwrap().map.len()
     }
 
     /// True when no weights are cached.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Total packed bytes currently held (diagnostics / tests).
+    pub fn bytes(&self) -> usize {
+        self.entries.read().unwrap().bytes
+    }
+
+    /// The configured byte budget.
+    pub fn capacity_bytes(&self) -> usize {
+        self.capacity_bytes
     }
 }
 
@@ -299,6 +382,60 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn lru_eviction_stays_within_budget_and_preserves_parity() {
+        // Budget fits roughly two packed 8x8 weights (panel data for an
+        // 8x8: tiles(8)=2, kc(8)=1 -> 2*1*4*8 = 64 floats = 256 bytes).
+        let cache = PackCache::with_capacity_bytes(600);
+        let mut rng = Rng::new(875);
+        let ws: Vec<crate::tensor::Matrix> =
+            (0..5).map(|_| rng.gaussian_matrix(8, 8, 1.0)).collect();
+        for w in &ws {
+            let p = cache.rows(w);
+            assert_eq!(p.unpack_row(0), w.row(0));
+        }
+        assert!(cache.bytes() <= cache.capacity_bytes(), "eviction must keep the byte budget");
+        assert!(cache.len() < ws.len(), "five weights cannot all fit in a two-weight budget");
+        // An evicted weight repacks correctly on demand (parity after
+        // eviction), and the repack re-enters the cache.
+        let p0 = cache.rows(&ws[0]);
+        for o in 0..8 {
+            assert_eq!(p0.unpack_row(o), ws[0].row(o), "evicted weight must repack identically");
+        }
+        assert!(cache.bytes() <= cache.capacity_bytes());
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used_first() {
+        let cache = PackCache::with_capacity_bytes(600);
+        let mut rng = Rng::new(876);
+        let a = rng.gaussian_matrix(8, 8, 1.0);
+        let b = rng.gaussian_matrix(8, 8, 1.0);
+        let pa = cache.rows(&a);
+        let _pb = cache.rows(&b);
+        // Touch `a` so `b` is the LRU entry, then insert a third weight
+        // to force an eviction.
+        let pa2 = cache.rows(&a);
+        assert!(Arc::ptr_eq(&pa, &pa2));
+        let c = rng.gaussian_matrix(8, 8, 1.0);
+        let _pc = cache.rows(&c);
+        // `a` must have survived (recently used): the next lookup is a
+        // hit on the same Arc.
+        let pa3 = cache.rows(&a);
+        assert!(Arc::ptr_eq(&pa, &pa3), "recently-used entry must survive eviction");
+        assert!(cache.bytes() <= cache.capacity_bytes());
+    }
+
+    #[test]
+    fn oversized_entry_is_returned_but_not_retained() {
+        let cache = PackCache::with_capacity_bytes(64);
+        let mut rng = Rng::new(877);
+        let w = rng.gaussian_matrix(16, 16, 1.0);
+        let p = cache.rows(&w);
+        assert_eq!(p.unpack_row(3), w.row(3), "caller still gets usable panels");
+        assert!(cache.bytes() <= cache.capacity_bytes());
     }
 
     #[test]

@@ -1,0 +1,1224 @@
+//! `StructPlan` — the structure-plan IR: every weight structure lowered
+//! to a short sequence of packed-microkernel stages.
+//!
+//! The paper's core claim (§3, Table 1) is that one block-level
+//! abstraction subsumes Low-Rank, Monarch, and Block-Diagonal weights.
+//! This module is that claim realized at the execution layer: a
+//! [`StructPlan`] lowers each structure into at most three stages over
+//! four buffers (`Input`, two scratch buffers, `Output`):
+//!
+//! | structure | stages |
+//! |---|---|
+//! | Dense | `Gemm(Input→Output)` — one full-width row-packed panel |
+//! | Low-Rank (`W = P Qᵀ`) | `Gemm(Input→S0)` over col-packed `Q`, `Gemm(S0→Output)` over row-packed `P` |
+//! | Block-Diagonal | block-gathered `Gemm(Input→S0)` over col-packed `Q_i`, block-scattered `Gemm(S0→Output)` over row-packed `P_i` |
+//! | Monarch | block-gathered `Gemm(Input→S0)` over row-packed `R_j`, *accumulating* `Gemm(S0→Output)` over row-packed `L_{i,j}` (ascending `j` within each `i`) |
+//! | BLAST | block-gathered `Gemm(Input→S0)` over col-packed `V_j`, `Couple(S0→S1)` (the `s_{i,j}` scale-and-add), `Gemm(S1→Output)` over row-packed `U_i` |
+//!
+//! Every `Gemm` stage runs [`micro::nt_block_packed`] over
+//! [`pack::PackCache`]d factor panels, so all five structures share one
+//! tuned execution path — the same microkernel, the same packed-panel
+//! cache, the same fixed-lane accumulation contract as the dense and
+//! BLAST kernels of PR 4. [`execute_reference`] is the contract
+//! spelled out per element with [`micro::dot8_with`] (gathered columns
+//! for col-packed factors); the packed executor must reproduce it **bit
+//! for bit** (`tests/kernel_parity.rs`).
+//!
+//! Plans are pure *structure*: they hold block offsets, widths, and
+//! factor indices — never weight values — so a plan survives in-place
+//! weight updates and is built **once per (structure, shape)**, cached
+//! process-wide by [`PlanCache`] and per-layer by [`PlanCell`]
+//! (`nn::linear` builds each layer's plan at model load via
+//! `TinyLM::pretune`). Execution resolves the actual factor matrices
+//! through a borrowed [`PlanOperands`] view (allocation-free to
+//! construct, like the old `BlastView`), which is what keeps
+//! `Linear::forward_into` allocation-free for **all** structures.
+
+use super::micro::{self, SimdMode};
+use super::pack::{self, PackedPanels};
+use super::{Couplings, Factors, KernelOp, MatmulKernel};
+use crate::tensor::Matrix;
+use crate::util::par;
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::sync::{Arc, OnceLock, RwLock};
+
+// ----------------------------------------------------------------------
+// Plan signature (the autotuner-key half of a plan)
+// ----------------------------------------------------------------------
+
+/// Which structure a plan realizes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PlanKind {
+    /// Dense `W (m×n)`, row-packed.
+    Dense,
+    /// Dense `A·B` form: the factor is `n×m` and col-packed (no
+    /// transpose materialized) — the serial factorization paths use it.
+    DenseT,
+    /// `W = P Qᵀ` with rank `r`.
+    LowRank,
+    /// Monarch with `b` blocks and inner width `t`.
+    Monarch,
+    /// Block-diagonal with `b` blocks of rank `t`.
+    BlockDiag,
+    /// BLAST with `b` blocks and rank `r`.
+    Blast,
+}
+
+/// Compact, allocation-free structure identity: the plan half of an
+/// autotuner key, so Monarch/BlockDiag/LowRank shapes get their own
+/// tuned kernel choice instead of hardcoded loops. `b` is blocks per
+/// side (1 when the structure has no blocks), `r` the inner width
+/// (rank `r`, Monarch/BlockDiag `t`; 0 for dense).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct PlanSig {
+    pub kind: PlanKind,
+    pub b: u32,
+    pub r: u32,
+}
+
+impl PlanSig {
+    /// Stable textual form used in the JSON plan file
+    /// (`"plan:blast(b=8,r=32)"`, `"plan:dense"`, …).
+    pub fn to_tag_string(self) -> String {
+        match self.kind {
+            PlanKind::Dense => "plan:dense".to_string(),
+            PlanKind::DenseT => "plan:dense_t".to_string(),
+            PlanKind::LowRank => format!("plan:lowrank(r={})", self.r),
+            PlanKind::Monarch => format!("plan:monarch(b={},t={})", self.b, self.r),
+            PlanKind::BlockDiag => format!("plan:blockdiag(b={},t={})", self.b, self.r),
+            PlanKind::Blast => format!("plan:blast(b={},r={})", self.b, self.r),
+        }
+    }
+
+    /// Inverse of [`to_tag_string`]; `None` on unknown tags.
+    ///
+    /// [`to_tag_string`]: PlanSig::to_tag_string
+    pub fn parse(tag: &str) -> Option<Self> {
+        let body = tag.strip_prefix("plan:")?;
+        if body == "dense" {
+            return Some(PlanSig { kind: PlanKind::Dense, b: 1, r: 0 });
+        }
+        if body == "dense_t" {
+            return Some(PlanSig { kind: PlanKind::DenseT, b: 1, r: 0 });
+        }
+        if let Some(inner) = body.strip_prefix("lowrank(r=").and_then(|s| s.strip_suffix(')')) {
+            return Some(PlanSig { kind: PlanKind::LowRank, b: 1, r: inner.parse().ok()? });
+        }
+        let two = |prefix: &str, kind: PlanKind, mid: &str| -> Option<PlanSig> {
+            let inner = body.strip_prefix(prefix)?.strip_suffix(')')?;
+            let (b, r) = inner.split_once(mid)?;
+            Some(PlanSig { kind, b: b.parse().ok()?, r: r.parse().ok()? })
+        };
+        two("monarch(b=", PlanKind::Monarch, ",t=")
+            .or_else(|| two("blockdiag(b=", PlanKind::BlockDiag, ",t="))
+            .or_else(|| two("blast(b=", PlanKind::Blast, ",r="))
+    }
+}
+
+// ----------------------------------------------------------------------
+// The IR
+// ----------------------------------------------------------------------
+
+/// One of the executor's four buffers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BufRef {
+    /// The activation batch `X (batch × n)`.
+    Input,
+    /// First inter-stage scratch (width [`StructPlan::s0`] per row).
+    S0,
+    /// Second inter-stage scratch (width [`StructPlan::s1`] per row).
+    S1,
+    /// The result `Y (batch × m)`.
+    Output,
+}
+
+/// How a factor is packed into microkernel panels.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PackKind {
+    /// Output `o` of the block is the factor's row `o` (`X · Fᵀ`).
+    Rows,
+    /// Output `o` is the factor's column `o` (`X · F`, gathered —
+    /// no transpose is ever materialized).
+    Cols,
+}
+
+/// One packed-microkernel product inside a [`PlanStage::Gemm`]:
+/// `dst[:, dst_col..dst_col+n_out] (+)= src[:, src_col..src_col+k] ·
+/// factorᵀ` (factor resolved through [`PlanOperands`]).
+#[derive(Clone, Copy, Debug)]
+pub struct GemmBlock {
+    /// Operand group (0 or 1, see [`PlanOperands`]).
+    pub group: u8,
+    /// Factor index within the group.
+    pub index: u32,
+    /// Panel orientation.
+    pub pack: PackKind,
+    /// First source column of the block's input window.
+    pub src_col: u32,
+    /// Contraction width.
+    pub k: u32,
+    /// First destination column.
+    pub dst_col: u32,
+    /// Output width.
+    pub n_out: u32,
+}
+
+/// One executable stage.
+#[derive(Clone, Debug)]
+pub enum PlanStage {
+    /// A set of block-windowed packed products. With `accumulate`, the
+    /// destination is zeroed once and the blocks add in declaration
+    /// order (the Monarch ascending-`j` aggregation); without it the
+    /// blocks must jointly cover the destination.
+    Gemm { src: BufRef, dst: BufRef, accumulate: bool, blocks: Vec<GemmBlock> },
+    /// BLAST stage 2: `dst[:, i·r..] = Σ_j s_{i,j} ⊙ src[:, j·r..]`,
+    /// ascending `j` — the coupling scale-and-add.
+    Couple { src: BufRef, dst: BufRef, b: u32, r: u32 },
+}
+
+/// A lowered structure: the full stage program plus scratch widths.
+/// Pure structure — no weight values — so one plan serves every layer
+/// of the same (structure, shape) and survives in-place weight updates.
+#[derive(Clone, Debug)]
+pub struct StructPlan {
+    pub sig: PlanSig,
+    /// Output features.
+    pub m: usize,
+    /// Input features.
+    pub n: usize,
+    /// Per-row width of scratch `S0` (0 = unused).
+    pub s0: usize,
+    /// Per-row width of scratch `S1` (0 = unused).
+    pub s1: usize,
+    pub stages: Vec<PlanStage>,
+}
+
+impl StructPlan {
+    /// Dense `W (m×n)`: one full-width row-packed stage.
+    pub fn dense(m: usize, n: usize) -> StructPlan {
+        StructPlan {
+            sig: PlanSig { kind: PlanKind::Dense, b: 1, r: 0 },
+            m,
+            n,
+            s0: 0,
+            s1: 0,
+            stages: vec![PlanStage::Gemm {
+                src: BufRef::Input,
+                dst: BufRef::Output,
+                accumulate: false,
+                blocks: vec![GemmBlock {
+                    group: 0,
+                    index: 0,
+                    pack: PackKind::Rows,
+                    src_col: 0,
+                    k: n as u32,
+                    dst_col: 0,
+                    n_out: m as u32,
+                }],
+            }],
+        }
+    }
+
+    /// Dense `A·B` form: the factor is an `n×m` matrix, col-packed, so
+    /// `Y = X · F` without materializing `Fᵀ`.
+    pub fn dense_t(m: usize, n: usize) -> StructPlan {
+        let mut p = StructPlan::dense(m, n);
+        p.sig = PlanSig { kind: PlanKind::DenseT, b: 1, r: 0 };
+        if let PlanStage::Gemm { blocks, .. } = &mut p.stages[0] {
+            blocks[0].pack = PackKind::Cols;
+        }
+        p
+    }
+
+    /// Low-Rank `W = P Qᵀ` (`P: m×r`, `Q: n×r`): `S0 = X·Q` (cols),
+    /// `Y = S0·Pᵀ` (rows). Group 0 is `Q`, group 1 is `P`.
+    pub fn low_rank(m: usize, n: usize, r: usize) -> StructPlan {
+        StructPlan {
+            sig: PlanSig { kind: PlanKind::LowRank, b: 1, r: r as u32 },
+            m,
+            n,
+            s0: r,
+            s1: 0,
+            stages: vec![
+                PlanStage::Gemm {
+                    src: BufRef::Input,
+                    dst: BufRef::S0,
+                    accumulate: false,
+                    blocks: vec![GemmBlock {
+                        group: 0,
+                        index: 0,
+                        pack: PackKind::Cols,
+                        src_col: 0,
+                        k: n as u32,
+                        dst_col: 0,
+                        n_out: r as u32,
+                    }],
+                },
+                PlanStage::Gemm {
+                    src: BufRef::S0,
+                    dst: BufRef::Output,
+                    accumulate: false,
+                    blocks: vec![GemmBlock {
+                        group: 1,
+                        index: 0,
+                        pack: PackKind::Rows,
+                        src_col: 0,
+                        k: r as u32,
+                        dst_col: 0,
+                        n_out: m as u32,
+                    }],
+                },
+            ],
+        }
+    }
+
+    /// Block-diagonal (`P_i: p×t`, `Q_i: q×t` per diagonal block):
+    /// block-gathered rank stage, block-scattered output stage. Group 0
+    /// is the `Q_i` list, group 1 the `P_i` list.
+    pub fn block_diag(m: usize, n: usize, b: usize, t: usize) -> StructPlan {
+        assert!(b > 0 && m % b == 0 && n % b == 0, "block_diag plan: b={b} must divide {m}x{n}");
+        let p = m / b;
+        let q = n / b;
+        let stage1 = (0..b)
+            .map(|i| GemmBlock {
+                group: 0,
+                index: i as u32,
+                pack: PackKind::Cols,
+                src_col: (i * q) as u32,
+                k: q as u32,
+                dst_col: (i * t) as u32,
+                n_out: t as u32,
+            })
+            .collect();
+        let stage2 = (0..b)
+            .map(|i| GemmBlock {
+                group: 1,
+                index: i as u32,
+                pack: PackKind::Rows,
+                src_col: (i * t) as u32,
+                k: t as u32,
+                dst_col: (i * p) as u32,
+                n_out: p as u32,
+            })
+            .collect();
+        StructPlan {
+            sig: PlanSig { kind: PlanKind::BlockDiag, b: b as u32, r: t as u32 },
+            m,
+            n,
+            s0: b * t,
+            s1: 0,
+            stages: vec![
+                PlanStage::Gemm {
+                    src: BufRef::Input,
+                    dst: BufRef::S0,
+                    accumulate: false,
+                    blocks: stage1,
+                },
+                PlanStage::Gemm {
+                    src: BufRef::S0,
+                    dst: BufRef::Output,
+                    accumulate: false,
+                    blocks: stage2,
+                },
+            ],
+        }
+    }
+
+    /// Monarch (`R_j: t×q` shared right bases, `L_{i,j}: p×t` couplings
+    /// stored row-major as `l[i·b+j]`): shared-basis stage, then an
+    /// accumulating output stage ascending `j` within each block row
+    /// `i`. Group 0 is the `R_j` list, group 1 the `L_{i,j}` list.
+    pub fn monarch(m: usize, n: usize, b: usize, t: usize) -> StructPlan {
+        assert!(b > 0 && m % b == 0 && n % b == 0, "monarch plan: b={b} must divide {m}x{n}");
+        let p = m / b;
+        let q = n / b;
+        let stage1 = (0..b)
+            .map(|j| GemmBlock {
+                group: 0,
+                index: j as u32,
+                pack: PackKind::Rows,
+                src_col: (j * q) as u32,
+                k: q as u32,
+                dst_col: (j * t) as u32,
+                n_out: t as u32,
+            })
+            .collect();
+        let mut stage2 = Vec::with_capacity(b * b);
+        for i in 0..b {
+            for j in 0..b {
+                stage2.push(GemmBlock {
+                    group: 1,
+                    index: (i * b + j) as u32,
+                    pack: PackKind::Rows,
+                    src_col: (j * t) as u32,
+                    k: t as u32,
+                    dst_col: (i * p) as u32,
+                    n_out: p as u32,
+                });
+            }
+        }
+        StructPlan {
+            sig: PlanSig { kind: PlanKind::Monarch, b: b as u32, r: t as u32 },
+            m,
+            n,
+            s0: b * t,
+            s1: 0,
+            stages: vec![
+                PlanStage::Gemm {
+                    src: BufRef::Input,
+                    dst: BufRef::S0,
+                    accumulate: false,
+                    blocks: stage1,
+                },
+                PlanStage::Gemm {
+                    src: BufRef::S0,
+                    dst: BufRef::Output,
+                    accumulate: true,
+                    blocks: stage2,
+                },
+            ],
+        }
+    }
+
+    /// BLAST (`U_i: p×r`, `V_j: q×r`, couplings `s_{i,j}`): Algorithm 1
+    /// as right-factor stage, coupling stage, left-factor stage. Group 0
+    /// is the `V_j` list, group 1 the `U_i` list; the coupling table
+    /// rides in [`PlanOperands::s`].
+    pub fn blast(m: usize, n: usize, b: usize, r: usize) -> StructPlan {
+        assert!(b > 0 && m % b == 0 && n % b == 0, "blast plan: b={b} must divide {m}x{n}");
+        let p = m / b;
+        let q = n / b;
+        let stage1 = (0..b)
+            .map(|j| GemmBlock {
+                group: 0,
+                index: j as u32,
+                pack: PackKind::Cols,
+                src_col: (j * q) as u32,
+                k: q as u32,
+                dst_col: (j * r) as u32,
+                n_out: r as u32,
+            })
+            .collect();
+        let stage3 = (0..b)
+            .map(|i| GemmBlock {
+                group: 1,
+                index: i as u32,
+                pack: PackKind::Rows,
+                src_col: (i * r) as u32,
+                k: r as u32,
+                dst_col: (i * p) as u32,
+                n_out: p as u32,
+            })
+            .collect();
+        StructPlan {
+            sig: PlanSig { kind: PlanKind::Blast, b: b as u32, r: r as u32 },
+            m,
+            n,
+            s0: b * r,
+            s1: b * r,
+            stages: vec![
+                PlanStage::Gemm {
+                    src: BufRef::Input,
+                    dst: BufRef::S0,
+                    accumulate: false,
+                    blocks: stage1,
+                },
+                PlanStage::Couple {
+                    src: BufRef::S0,
+                    dst: BufRef::S1,
+                    b: b as u32,
+                    r: r as u32,
+                },
+                PlanStage::Gemm {
+                    src: BufRef::S1,
+                    dst: BufRef::Output,
+                    accumulate: false,
+                    blocks: stage3,
+                },
+            ],
+        }
+    }
+
+    /// Rebuild a plan from its signature and shape (the [`PlanCache`]
+    /// constructor — a signature plus `(m, n)` fully determines a plan).
+    pub fn build(sig: PlanSig, m: usize, n: usize) -> StructPlan {
+        match sig.kind {
+            PlanKind::Dense => StructPlan::dense(m, n),
+            PlanKind::DenseT => StructPlan::dense_t(m, n),
+            PlanKind::LowRank => StructPlan::low_rank(m, n, sig.r as usize),
+            PlanKind::Monarch => StructPlan::monarch(m, n, sig.b as usize, sig.r as usize),
+            PlanKind::BlockDiag => StructPlan::block_diag(m, n, sig.b as usize, sig.r as usize),
+            PlanKind::Blast => StructPlan::blast(m, n, sig.b as usize, sig.r as usize),
+        }
+    }
+
+    /// Total multiplies per activation row (the structure FLOPs the
+    /// paper counts; benches use it for GFLOP/s).
+    pub fn flops_per_row(&self) -> usize {
+        self.stages
+            .iter()
+            .map(|st| match st {
+                PlanStage::Gemm { blocks, .. } => {
+                    blocks.iter().map(|b| (b.k * b.n_out) as usize).sum()
+                }
+                PlanStage::Couple { b, r, .. } => (*b as usize) * (*b as usize) * (*r as usize),
+            })
+            .sum()
+    }
+}
+
+// ----------------------------------------------------------------------
+// Operands
+// ----------------------------------------------------------------------
+
+/// Borrowed factor storage for one plan execution. Two factor groups
+/// (each a [`Factors`] slice view over `Matrix` or `PTensor` storage)
+/// plus the optional coupling table; construction never allocates —
+/// this is built on every decode dispatch.
+#[derive(Clone, Copy)]
+pub struct PlanOperands<'a> {
+    pub g0: Factors<'a>,
+    pub g1: Factors<'a>,
+    pub s: Option<Couplings<'a>>,
+}
+
+impl<'a> PlanOperands<'a> {
+    /// Operands for a [`StructPlan::dense`] / [`StructPlan::dense_t`]
+    /// plan over one plain matrix.
+    pub fn single(w: &'a Matrix) -> Self {
+        PlanOperands {
+            g0: Factors::Mats(std::slice::from_ref(w)),
+            g1: Factors::Mats(&[]),
+            s: None,
+        }
+    }
+
+    /// The factor behind a [`GemmBlock`].
+    #[inline]
+    pub fn factor(&self, group: u8, index: usize) -> &'a Matrix {
+        match group {
+            0 => self.g0.get(index),
+            _ => self.g1.get(index),
+        }
+    }
+
+    /// Coupling vector `s_{i,j}` (length `r`).
+    #[inline]
+    fn s_row(&self, i: usize, j: usize, b: usize) -> &'a [f32] {
+        match self.s.expect("plan has a Couple stage but operands carry no couplings") {
+            Couplings::Nested(s) => &s[i][j],
+            Couplings::Packed(s) => s.row(i * b + j),
+        }
+    }
+
+    /// Shape-check the operands against `plan` and the activation `x`.
+    /// Called once per dispatch (the plan-op analogue of the old
+    /// `BlastView::validate`).
+    pub fn validate(&self, plan: &StructPlan, x: &Matrix) {
+        assert_eq!(x.cols, plan.n, "plan input mismatch: x cols {} vs n {}", x.cols, plan.n);
+        for stage in &plan.stages {
+            match stage {
+                PlanStage::Gemm { blocks, .. } => {
+                    for blk in blocks {
+                        let f = self.factor(blk.group, blk.index as usize);
+                        let (rows, cols) = match blk.pack {
+                            PackKind::Rows => (blk.n_out, blk.k),
+                            PackKind::Cols => (blk.k, blk.n_out),
+                        };
+                        assert_eq!(
+                            f.shape(),
+                            (rows as usize, cols as usize),
+                            "plan factor g{}[{}] shape mismatch",
+                            blk.group,
+                            blk.index
+                        );
+                    }
+                }
+                PlanStage::Couple { b, r, .. } => {
+                    let (b, r) = (*b as usize, *r as usize);
+                    match self.s.expect("Couple stage needs couplings") {
+                        Couplings::Nested(s) => {
+                            assert_eq!(s.len(), b, "plan coupling rows");
+                            for row in s {
+                                assert_eq!(row.len(), b, "plan coupling row width");
+                            }
+                        }
+                        Couplings::Packed(s) => {
+                            assert_eq!(s.rows, b * b, "plan coupling table size");
+                            assert_eq!(s.cols, r, "plan coupling width");
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ----------------------------------------------------------------------
+// Packed executor
+// ----------------------------------------------------------------------
+
+/// Per-thread plan-execution scratch: the two inter-stage buffers plus
+/// the packed-panel handles for the call's factors, all reused across
+/// calls (capacities persist, so a warm call never allocates; clearing
+/// the panel vec only drops `Arc` refcounts).
+#[derive(Default)]
+struct PlanScratch {
+    s0: Vec<f32>,
+    s1: Vec<f32>,
+    panels: Vec<Arc<PackedPanels>>,
+}
+
+thread_local! {
+    static SCRATCH: RefCell<PlanScratch> = RefCell::new(PlanScratch::default());
+}
+
+/// Execute output rows `t0 .. t0+rows` of `plan` on the packed
+/// microkernel path, writing into `out` (a chunk-local `rows × plan.m`
+/// row-major slice). Inter-stage scratch is arena-owned per thread;
+/// factor panels are fetched from the process-wide pack cache once per
+/// call. Bit-identical to [`execute_reference`] by the fixed-lane
+/// contract.
+pub(crate) fn execute_packed(
+    mode: SimdMode,
+    x: &Matrix,
+    plan: &StructPlan,
+    ops: &PlanOperands<'_>,
+    t0: usize,
+    rows: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), rows * plan.m);
+    SCRATCH.with(|cell| {
+        let mut scratch = cell.borrow_mut();
+        let PlanScratch { s0, s1, panels } = &mut *scratch;
+        s0.clear();
+        s0.resize(rows * plan.s0, 0.0);
+        s1.clear();
+        s1.resize(rows * plan.s1, 0.0);
+        // Fetch every factor's packed panels once per call (one cache
+        // lookup + fingerprint each), in stage-block order.
+        let cache = pack::pack_cache();
+        panels.clear();
+        for stage in &plan.stages {
+            if let PlanStage::Gemm { blocks, .. } = stage {
+                for blk in blocks {
+                    let f = ops.factor(blk.group, blk.index as usize);
+                    panels.push(match blk.pack {
+                        PackKind::Rows => cache.rows(f),
+                        PackKind::Cols => cache.cols(f),
+                    });
+                }
+            }
+        }
+        let mut pi = 0usize;
+        for stage in &plan.stages {
+            match stage {
+                PlanStage::Gemm { src, dst, accumulate, blocks } => {
+                    let stage_panels = &panels[pi..pi + blocks.len()];
+                    pi += blocks.len();
+                    // Resolve the (src, dst) buffer pair. Only the
+                    // pairs the lowerings emit are supported; scratch
+                    // reads are chunk-local (src_t0 = 0).
+                    match (src, dst) {
+                        (BufRef::Input, BufRef::Output) => gemm_stage(
+                            mode, &x.data, x.cols, t0, out, plan.m, rows, *accumulate, blocks,
+                            stage_panels,
+                        ),
+                        (BufRef::Input, BufRef::S0) => gemm_stage(
+                            mode, &x.data, x.cols, t0, s0, plan.s0, rows, *accumulate, blocks,
+                            stage_panels,
+                        ),
+                        (BufRef::S0, BufRef::Output) => gemm_stage(
+                            mode, s0, plan.s0, 0, out, plan.m, rows, *accumulate, blocks,
+                            stage_panels,
+                        ),
+                        (BufRef::S0, BufRef::S1) => gemm_stage(
+                            mode, s0, plan.s0, 0, s1, plan.s1, rows, *accumulate, blocks,
+                            stage_panels,
+                        ),
+                        (BufRef::S1, BufRef::Output) => gemm_stage(
+                            mode, s1, plan.s1, 0, out, plan.m, rows, *accumulate, blocks,
+                            stage_panels,
+                        ),
+                        _ => unreachable!("unsupported plan buffer pair {src:?} -> {dst:?}"),
+                    }
+                }
+                PlanStage::Couple { src, dst, b, r } => match (src, dst) {
+                    (BufRef::S0, BufRef::S1) => {
+                        couple_stage(s0, plan.s0, s1, plan.s1, rows, *b as usize, *r as usize, ops)
+                    }
+                    _ => unreachable!("unsupported couple buffer pair {src:?} -> {dst:?}"),
+                },
+            }
+        }
+    });
+}
+
+/// One packed `Gemm` stage over `rows` chunk-local destination rows.
+#[allow(clippy::too_many_arguments)]
+fn gemm_stage(
+    mode: SimdMode,
+    src: &[f32],
+    src_stride: usize,
+    src_t0: usize,
+    dst: &mut [f32],
+    dst_stride: usize,
+    rows: usize,
+    accumulate: bool,
+    blocks: &[GemmBlock],
+    panels: &[Arc<PackedPanels>],
+) {
+    if accumulate {
+        // Accumulating stages add into a zeroed destination (`Matrix::
+        // reset` leaves buffer contents unspecified, and scratch carries
+        // the previous call's values).
+        dst[..rows * dst_stride].fill(0.0);
+    }
+    for (blk, p) in blocks.iter().zip(panels) {
+        micro::nt_block_packed(
+            mode,
+            src,
+            src_stride,
+            src_t0,
+            blk.src_col as usize,
+            p,
+            rows,
+            dst,
+            dst_stride,
+            blk.dst_col as usize,
+            accumulate,
+        );
+    }
+}
+
+/// The BLAST coupling stage over `rows` chunk-local rows: ascending-`j`
+/// scale-and-add per block row `i`, exactly the fixed stage-2 recipe of
+/// the reference executor.
+#[allow(clippy::too_many_arguments)]
+fn couple_stage(
+    src: &[f32],
+    src_stride: usize,
+    dst: &mut [f32],
+    dst_stride: usize,
+    rows: usize,
+    b: usize,
+    r: usize,
+    ops: &PlanOperands<'_>,
+) {
+    for t in 0..rows {
+        let zrow = &src[t * src_stride..t * src_stride + b * r];
+        let wrow = &mut dst[t * dst_stride..t * dst_stride + b * r];
+        for i in 0..b {
+            let wi = &mut wrow[i * r..(i + 1) * r];
+            wi.fill(0.0);
+            for j in 0..b {
+                let s = ops.s_row(i, j, b);
+                let zj = &zrow[j * r..(j + 1) * r];
+                for k in 0..r {
+                    wi[k] += s[k] * zj[k];
+                }
+            }
+        }
+    }
+}
+
+// ----------------------------------------------------------------------
+// Reference executor (the per-element contract)
+// ----------------------------------------------------------------------
+
+thread_local! {
+    /// Per-thread (gathered-columns buffer, per-block gather offsets,
+    /// s0, s1) scratch for the reference executor, so it stays
+    /// allocation-free once warm — the autotuner may legitimately pick
+    /// `naive` for a hot decode shape.
+    static REF_SCRATCH: RefCell<(Vec<f32>, Vec<usize>, Vec<f32>, Vec<f32>)> =
+        const { RefCell::new((Vec::new(), Vec::new(), Vec::new(), Vec::new())) };
+}
+
+/// Execute `plan` one row and one element at a time with
+/// [`micro::dot8_with`]: the fixed-lane contract spelled out with no
+/// packing, blocking, or threads. Col-packed factors are gathered into
+/// row-major scratch **once per call** (not per row — the serial
+/// factorization paths run multi-row batches through this executor),
+/// which leaves the per-element bits identical to a per-row gather
+/// since the gathered slice contents are the same. This is both the
+/// parity reference (`NaiveKernel` runs it in `Portable` mode) and the
+/// engine's never-thread-spawning, pack-cache-free serial path for
+/// mutation-heavy factorization callers.
+pub(crate) fn execute_reference(
+    mode: SimdMode,
+    x: &Matrix,
+    plan: &StructPlan,
+    ops: &PlanOperands<'_>,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), x.rows * plan.m);
+    REF_SCRATCH.with(|cell| {
+        let mut scratch = cell.borrow_mut();
+        let (gather, gofs, s0, s1) = &mut *scratch;
+        s0.clear();
+        s0.resize(plan.s0, 0.0);
+        s1.clear();
+        s1.resize(plan.s1, 0.0);
+        // Gather every col-packed factor's columns once per call
+        // (`gofs[block]` is the block's base offset into `gather`, or
+        // `usize::MAX` for row-packed blocks, in stage-block order).
+        gather.clear();
+        gofs.clear();
+        for stage in &plan.stages {
+            if let PlanStage::Gemm { blocks, .. } = stage {
+                for blk in blocks {
+                    if blk.pack == PackKind::Cols {
+                        let f = ops.factor(blk.group, blk.index as usize);
+                        gofs.push(gather.len());
+                        for o in 0..f.cols {
+                            for c in 0..f.rows {
+                                gather.push(f.at(c, o));
+                            }
+                        }
+                    } else {
+                        gofs.push(usize::MAX);
+                    }
+                }
+            }
+        }
+        for t in 0..x.rows {
+            let xrow = x.row(t);
+            let orow_range = t * plan.m..(t + 1) * plan.m;
+            let mut bi = 0usize;
+            for stage in &plan.stages {
+                match stage {
+                    PlanStage::Gemm { src, dst, accumulate, blocks } => {
+                        let stage_gofs = &gofs[bi..bi + blocks.len()];
+                        bi += blocks.len();
+                        match (src, dst) {
+                            (BufRef::Input, BufRef::Output) => ref_gemm_row(
+                                mode, xrow, &mut out[orow_range.clone()], *accumulate, blocks,
+                                stage_gofs, gather, ops,
+                            ),
+                            (BufRef::Input, BufRef::S0) => ref_gemm_row(
+                                mode, xrow, s0, *accumulate, blocks, stage_gofs, gather, ops,
+                            ),
+                            (BufRef::S0, BufRef::Output) => ref_gemm_row(
+                                mode, s0, &mut out[orow_range.clone()], *accumulate, blocks,
+                                stage_gofs, gather, ops,
+                            ),
+                            (BufRef::S0, BufRef::S1) => ref_gemm_row(
+                                mode, s0, s1, *accumulate, blocks, stage_gofs, gather, ops,
+                            ),
+                            (BufRef::S1, BufRef::Output) => ref_gemm_row(
+                                mode, s1, &mut out[orow_range.clone()], *accumulate, blocks,
+                                stage_gofs, gather, ops,
+                            ),
+                            _ => unreachable!("unsupported plan buffer pair {src:?} -> {dst:?}"),
+                        }
+                    }
+                    PlanStage::Couple { src, dst, b, r } => match (src, dst) {
+                        (BufRef::S0, BufRef::S1) => {
+                            couple_stage(s0, plan.s0, s1, plan.s1, 1, *b as usize, *r as usize, ops)
+                        }
+                        _ => unreachable!("unsupported couple buffer pair {src:?} -> {dst:?}"),
+                    },
+                }
+            }
+        }
+    });
+}
+
+/// One reference `Gemm` stage over a single row. `gofs`/`gather` carry
+/// the call-level column gathers (see [`execute_reference`]).
+#[allow(clippy::too_many_arguments)]
+fn ref_gemm_row(
+    mode: SimdMode,
+    src_row: &[f32],
+    dst_row: &mut [f32],
+    accumulate: bool,
+    blocks: &[GemmBlock],
+    gofs: &[usize],
+    gather: &[f32],
+    ops: &PlanOperands<'_>,
+) {
+    if accumulate {
+        dst_row.fill(0.0);
+    }
+    for (blk, &gof) in blocks.iter().zip(gofs) {
+        let k = blk.k as usize;
+        let xs = &src_row[blk.src_col as usize..blk.src_col as usize + k];
+        let f = ops.factor(blk.group, blk.index as usize);
+        for o in 0..blk.n_out as usize {
+            let val = match blk.pack {
+                PackKind::Rows => micro::dot8_with(mode, xs, f.row(o)),
+                PackKind::Cols => {
+                    micro::dot8_with(mode, xs, &gather[gof + o * k..gof + (o + 1) * k])
+                }
+            };
+            let slot = &mut dst_row[blk.dst_col as usize + o];
+            if accumulate {
+                *slot += val;
+            } else {
+                *slot = val;
+            }
+        }
+    }
+}
+
+// ----------------------------------------------------------------------
+// The registered plan kernels
+// ----------------------------------------------------------------------
+
+/// The packed structure-plan executor, registered with the engine in
+/// sequential (`plan_seq`) and batch-row-parallel (`plan_par`)
+/// variants. The sequential variant wins at decode shapes (batch 1)
+/// where thread fan-out costs more than the product; the parallel
+/// variant hands disjoint output-row chunks to `util::par` workers,
+/// each running the full stage program over its rows with its own
+/// thread-local scratch. The autotuner picks per (plan signature,
+/// shape, batch-bucket); by the fixed-lane contract the choice never
+/// changes a bit.
+pub struct PlanKernel {
+    row_parallel: bool,
+}
+
+impl PlanKernel {
+    /// Single-threaded variant — the decode-path (batch 1) choice.
+    pub fn sequential() -> Self {
+        PlanKernel { row_parallel: false }
+    }
+
+    /// Batch-row-parallel variant — the prefill/training-batch choice.
+    pub fn row_parallel() -> Self {
+        PlanKernel { row_parallel: true }
+    }
+}
+
+impl MatmulKernel for PlanKernel {
+    fn name(&self) -> &'static str {
+        if self.row_parallel {
+            "plan_par"
+        } else {
+            "plan_seq"
+        }
+    }
+
+    fn supports(&self, op: &KernelOp<'_>, _batch: usize) -> bool {
+        matches!(op, KernelOp::Plan { .. })
+    }
+
+    fn run(&self, x: &Matrix, op: &KernelOp<'_>) -> Matrix {
+        let KernelOp::Plan { plan, ops } = op else {
+            unreachable!("PlanKernel only supports Plan ops (checked via supports)")
+        };
+        let mut y = Matrix::zeros(x.rows, plan.m);
+        self.run_into_buf(x, plan, ops, &mut y.data);
+        y
+    }
+
+    fn run_into(&self, x: &Matrix, op: &KernelOp<'_>, out: &mut Matrix) {
+        let KernelOp::Plan { plan, ops } = op else {
+            unreachable!("PlanKernel only supports Plan ops (checked via supports)")
+        };
+        out.reset(x.rows, plan.m);
+        self.run_into_buf(x, plan, ops, &mut out.data);
+    }
+}
+
+impl PlanKernel {
+    fn run_into_buf(&self, x: &Matrix, plan: &StructPlan, ops: &PlanOperands<'_>, out: &mut [f32]) {
+        let batch = x.rows;
+        if batch == 0 {
+            return;
+        }
+        let mode = micro::simd_mode();
+        if self.row_parallel && batch > 1 {
+            let chunk_rows = batch.div_ceil(par::num_threads()).max(1);
+            par::par_chunks_mut(out, chunk_rows * plan.m, |ci, chunk| {
+                let rows = chunk.len() / plan.m;
+                execute_packed(mode, x, plan, ops, ci * chunk_rows, rows, chunk);
+            });
+        } else {
+            execute_packed(mode, x, plan, ops, 0, batch, out);
+        }
+    }
+}
+
+// ----------------------------------------------------------------------
+// Process-wide plan cache + per-layer plan cell
+// ----------------------------------------------------------------------
+
+/// Process-wide structural plan cache keyed on `(signature, m, n)`. A
+/// signature plus shape fully determines a plan, and plans hold no
+/// weight values, so entries never invalidate — unlike the pack cache,
+/// no fingerprint is needed.
+pub struct PlanCache {
+    plans: RwLock<HashMap<(PlanSig, usize, usize), Arc<StructPlan>>>,
+}
+
+impl PlanCache {
+    pub fn new() -> Self {
+        PlanCache { plans: RwLock::new(HashMap::new()) }
+    }
+
+    /// The plan for `(sig, m, n)`, built on first request.
+    pub fn get(&self, sig: PlanSig, m: usize, n: usize) -> Arc<StructPlan> {
+        {
+            let plans = self.plans.read().unwrap();
+            if let Some(p) = plans.get(&(sig, m, n)) {
+                return Arc::clone(p);
+            }
+        }
+        let built = Arc::new(StructPlan::build(sig, m, n));
+        let mut plans = self.plans.write().unwrap();
+        Arc::clone(plans.entry((sig, m, n)).or_insert(built))
+    }
+
+    /// Cached [`StructPlan::dense`] (the serial factorization paths'
+    /// `X·Wᵀ` form).
+    pub fn dense(&self, m: usize, n: usize) -> Arc<StructPlan> {
+        self.get(PlanSig { kind: PlanKind::Dense, b: 1, r: 0 }, m, n)
+    }
+
+    /// Cached [`StructPlan::dense_t`] (the `A·B` form).
+    pub fn dense_t(&self, m: usize, n: usize) -> Arc<StructPlan> {
+        self.get(PlanSig { kind: PlanKind::DenseT, b: 1, r: 0 }, m, n)
+    }
+
+    /// Number of cached plans (diagnostics / tests).
+    pub fn len(&self) -> usize {
+        self.plans.read().unwrap().len()
+    }
+
+    /// True when no plans are cached.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl Default for PlanCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// The process-wide [`PlanCache`].
+pub fn plan_cache() -> &'static PlanCache {
+    static CACHE: OnceLock<PlanCache> = OnceLock::new();
+    CACHE.get_or_init(PlanCache::new)
+}
+
+/// A layer-held plan slot: built once (at model load via
+/// `TinyLM::pretune`, or lazily on first dispatch) and shared through
+/// the process-wide cache. Lives directly on `nn::linear::Linear`, so a
+/// steady-state `forward_into` resolves its plan with one atomic load —
+/// no lock, no hash, no allocation.
+#[derive(Clone, Debug, Default)]
+pub struct PlanCell(OnceLock<Arc<StructPlan>>);
+
+impl PlanCell {
+    pub fn new() -> Self {
+        PlanCell(OnceLock::new())
+    }
+
+    /// The cached plan, building it through [`plan_cache`] on first use.
+    pub fn get_or_build(&self, sig: PlanSig, m: usize, n: usize) -> &Arc<StructPlan> {
+        self.0.get_or_init(|| plan_cache().get(sig, m, n))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    fn ref_vs_packed(plan: &StructPlan, ops: &PlanOperands<'_>, x: &Matrix) {
+        ops.validate(plan, x);
+        let mut reference = vec![0.0f32; x.rows * plan.m];
+        execute_reference(SimdMode::Portable, x, plan, ops, &mut reference);
+        let mut packed = vec![0.0f32; x.rows * plan.m];
+        execute_packed(SimdMode::Portable, x, plan, ops, 0, x.rows, &mut packed);
+        for (i, (a, b)) in packed.iter().zip(&reference).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "{:?} elem {i}: packed {a} vs reference {b}",
+                plan.sig
+            );
+        }
+    }
+
+    #[test]
+    fn sig_tag_round_trip() {
+        for sig in [
+            PlanSig { kind: PlanKind::Dense, b: 1, r: 0 },
+            PlanSig { kind: PlanKind::DenseT, b: 1, r: 0 },
+            PlanSig { kind: PlanKind::LowRank, b: 1, r: 7 },
+            PlanSig { kind: PlanKind::Monarch, b: 4, r: 2 },
+            PlanSig { kind: PlanKind::BlockDiag, b: 2, r: 3 },
+            PlanSig { kind: PlanKind::Blast, b: 8, r: 32 },
+        ] {
+            assert_eq!(PlanSig::parse(&sig.to_tag_string()), Some(sig));
+        }
+        assert!(PlanSig::parse("dense").is_none(), "bare dense is the raw-op tag");
+        assert!(PlanSig::parse("plan:nope(b=1)").is_none());
+    }
+
+    #[test]
+    fn dense_plan_matches_tensor_matmul_nt() {
+        let mut rng = Rng::new(900);
+        for &(batch, m, n) in &[(1usize, 3usize, 9usize), (4, 16, 33), (2, 1, 1)] {
+            let w = rng.gaussian_matrix(m, n, 1.0);
+            let x = rng.gaussian_matrix(batch, n, 1.0);
+            let plan = StructPlan::dense(m, n);
+            let ops = PlanOperands::single(&w);
+            ref_vs_packed(&plan, &ops, &x);
+            let mut y = vec![0.0f32; batch * m];
+            execute_packed(SimdMode::Portable, &x, &plan, &ops, 0, batch, &mut y);
+            let y_ref = crate::tensor::matmul_nt(&x, &w);
+            for (a, b) in y.iter().zip(&y_ref.data) {
+                assert!((a - b).abs() < 1e-3 * (1.0 + b.abs()));
+            }
+        }
+    }
+
+    #[test]
+    fn dense_t_plan_matches_tensor_matmul() {
+        let mut rng = Rng::new(901);
+        let a = rng.gaussian_matrix(5, 12, 1.0);
+        let b = rng.gaussian_matrix(12, 9, 1.0);
+        let plan = StructPlan::dense_t(9, 12);
+        let ops = PlanOperands::single(&b);
+        ref_vs_packed(&plan, &ops, &a);
+        let mut y = vec![0.0f32; 5 * 9];
+        execute_reference(SimdMode::Portable, &a, &plan, &ops, &mut y);
+        let y_ref = crate::tensor::matmul(&a, &b);
+        for (got, want) in y.iter().zip(&y_ref.data) {
+            assert!((got - want).abs() < 1e-3 * (1.0 + want.abs()));
+        }
+    }
+
+    #[test]
+    fn low_rank_plan_matches_dense_reconstruction() {
+        let mut rng = Rng::new(902);
+        for &(batch, m, n, r) in &[(1usize, 6usize, 8usize, 3usize), (5, 9, 17, 2)] {
+            let p = rng.gaussian_matrix(m, r, 1.0);
+            let q = rng.gaussian_matrix(n, r, 1.0);
+            let x = rng.gaussian_matrix(batch, n, 1.0);
+            let plan = StructPlan::low_rank(m, n, r);
+            let ops = PlanOperands {
+                g0: Factors::Mats(std::slice::from_ref(&q)),
+                g1: Factors::Mats(std::slice::from_ref(&p)),
+                s: None,
+            };
+            ref_vs_packed(&plan, &ops, &x);
+            let mut y = vec![0.0f32; batch * m];
+            execute_packed(SimdMode::Portable, &x, &plan, &ops, 0, batch, &mut y);
+            let y_ref = crate::tensor::matmul_nt(&x, &crate::tensor::matmul_nt(&p, &q));
+            for (got, want) in y.iter().zip(&y_ref.data) {
+                assert!((got - want).abs() < 1e-3 * (1.0 + want.abs()), "m={m} n={n} r={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn monarch_plan_matches_block_reconstruction() {
+        let mut rng = Rng::new(903);
+        for &(batch, b, p, q, t) in &[(1usize, 2usize, 3usize, 4usize, 2usize), (3, 3, 2, 3, 2)] {
+            let (m, n) = (b * p, b * q);
+            let rb: Vec<Matrix> = (0..b).map(|_| rng.gaussian_matrix(t, q, 1.0)).collect();
+            let l: Vec<Matrix> = (0..b * b).map(|_| rng.gaussian_matrix(p, t, 1.0)).collect();
+            let x = rng.gaussian_matrix(batch, n, 1.0);
+            let plan = StructPlan::monarch(m, n, b, t);
+            let ops = PlanOperands { g0: Factors::Mats(&rb), g1: Factors::Mats(&l), s: None };
+            ref_vs_packed(&plan, &ops, &x);
+            // Dense reconstruction: block (i,j) = L_{i,j} · R_j.
+            let mut w = Matrix::zeros(m, n);
+            for i in 0..b {
+                for j in 0..b {
+                    let blk = crate::tensor::matmul(&l[i * b + j], &rb[j]);
+                    w.set_submatrix(i * p, j * q, &blk);
+                }
+            }
+            let mut y = vec![0.0f32; batch * m];
+            execute_packed(SimdMode::Portable, &x, &plan, &ops, 0, batch, &mut y);
+            let y_ref = crate::tensor::matmul_nt(&x, &w);
+            for (got, want) in y.iter().zip(&y_ref.data) {
+                assert!((got - want).abs() < 1e-3 * (1.0 + want.abs()), "b={b} p={p} t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn block_diag_plan_matches_block_reconstruction() {
+        let mut rng = Rng::new(904);
+        for &(batch, b, p, q, t) in &[(1usize, 1usize, 4usize, 3usize, 2usize), (4, 3, 2, 2, 1)] {
+            let (m, n) = (b * p, b * q);
+            let pd: Vec<Matrix> = (0..b).map(|_| rng.gaussian_matrix(p, t, 1.0)).collect();
+            let qd: Vec<Matrix> = (0..b).map(|_| rng.gaussian_matrix(q, t, 1.0)).collect();
+            let x = rng.gaussian_matrix(batch, n, 1.0);
+            let plan = StructPlan::block_diag(m, n, b, t);
+            let ops = PlanOperands { g0: Factors::Mats(&qd), g1: Factors::Mats(&pd), s: None };
+            ref_vs_packed(&plan, &ops, &x);
+            let mut w = Matrix::zeros(m, n);
+            for i in 0..b {
+                let blk = crate::tensor::matmul_nt(&pd[i], &qd[i]);
+                w.set_submatrix(i * p, i * q, &blk);
+            }
+            let mut y = vec![0.0f32; batch * m];
+            execute_packed(SimdMode::Portable, &x, &plan, &ops, 0, batch, &mut y);
+            let y_ref = crate::tensor::matmul_nt(&x, &w);
+            for (got, want) in y.iter().zip(&y_ref.data) {
+                assert!((got - want).abs() < 1e-3 * (1.0 + want.abs()), "b={b} p={p} t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn blast_plan_matches_dense_reconstruction() {
+        let mut rng = Rng::new(905);
+        let a = crate::blast::BlastMatrix::random_init(12, 18, 3, 4, 1.0, &mut rng);
+        let x = rng.gaussian_matrix(5, 18, 1.0);
+        let plan = StructPlan::blast(12, 18, 3, 4);
+        let ops = PlanOperands {
+            g0: Factors::Mats(&a.v),
+            g1: Factors::Mats(&a.u),
+            s: Some(Couplings::Nested(&a.s)),
+        };
+        ref_vs_packed(&plan, &ops, &x);
+        let mut y = vec![0.0f32; 5 * 12];
+        execute_packed(SimdMode::Portable, &x, &plan, &ops, 0, 5, &mut y);
+        let y_ref = crate::tensor::matmul_nt(&x, &a.to_dense());
+        for (got, want) in y.iter().zip(&y_ref.data) {
+            assert!((got - want).abs() < 1e-3 * (1.0 + want.abs()));
+        }
+    }
+
+    #[test]
+    fn plan_cache_dedupes_and_cell_reuses() {
+        let cache = PlanCache::new();
+        let sig = PlanSig { kind: PlanKind::Blast, b: 2, r: 4 };
+        let p1 = cache.get(sig, 8, 8);
+        let p2 = cache.get(sig, 8, 8);
+        assert!(Arc::ptr_eq(&p1, &p2));
+        assert_eq!(cache.len(), 1);
+        let p3 = cache.get(sig, 16, 8);
+        assert!(!Arc::ptr_eq(&p1, &p3));
+
+        let cell = PlanCell::new();
+        let a = Arc::clone(cell.get_or_build(sig, 8, 8));
+        let b = Arc::clone(cell.get_or_build(sig, 8, 8));
+        assert!(Arc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn flops_per_row_formulas() {
+        // BLAST: (m + n + b²)·r — the paper's Algorithm-1 count.
+        let p = StructPlan::blast(64, 64, 4, 8);
+        assert_eq!(p.flops_per_row(), (64 + 64 + 16) * 8);
+        // Monarch: n·t + m·b·t.
+        let p = StructPlan::monarch(64, 64, 4, 8);
+        assert_eq!(p.flops_per_row(), 64 * 8 + 64 * 4 * 8);
+        // Dense: m·n.
+        assert_eq!(StructPlan::dense(16, 24).flops_per_row(), 16 * 24);
+    }
+}

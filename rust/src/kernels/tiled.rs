@@ -188,10 +188,11 @@ mod tests {
     }
 
     #[test]
-    fn declines_blast_ops() {
+    fn declines_plan_ops() {
         let mut rng = Rng::new(823);
         let a = crate::blast::BlastMatrix::random_init(4, 4, 2, 2, 1.0, &mut rng);
-        let view = super::super::BlastView::from_matrix(&a);
-        assert!(!TiledKernel.supports(&KernelOp::Blast(view), 1));
+        let plan = a.plan();
+        let op = KernelOp::Plan { plan: &plan, ops: a.plan_operands() };
+        assert!(!TiledKernel.supports(&op, 1));
     }
 }

@@ -5,9 +5,11 @@
 //! Kim — NeurIPS 2024) as a three-layer Rust + JAX + Pallas stack.
 //!
 //! * [`tensor`] / [`linalg`] — dense numeric substrate (from scratch).
-//! * [`kernels`] — the matmul kernel engine: naive/tiled/parallel/fused
-//!   implementations behind one trait, selected per shape by an
-//!   autotuner; every inference hot path dispatches through it.
+//! * [`kernels`] — the matmul kernel engine: packed-microkernel dense
+//!   kernels plus the structure-plan executor (every weight structure
+//!   lowered to microkernel stages) behind one trait, selected per
+//!   (plan signature, shape, batch) by an autotuner; every inference
+//!   hot path dispatches through it.
 //! * [`blast`] — the BLAST matrix type and Algorithm 1 products.
 //! * [`factorize`] — Algorithm 2 (preconditioned GD factorization, with
 //!   block-parallel sweeps through the kernel engine), the Low-Rank /

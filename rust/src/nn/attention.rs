@@ -352,7 +352,7 @@ impl Attention {
         // Taken at the exact output shape so the kernel's `reset` stays
         // within the pooled buffer's capacity (no reallocation).
         let mut qkv = arena.take_matrix(x.rows, self.wqkv.out_features);
-        self.wqkv.forward_into(x, &mut qkv, arena); // n_active×3d, batched
+        self.wqkv.forward_into(x, &mut qkv); // n_active×3d, batched
         let mut ctx = arena.take_matrix(x.rows, d);
         // Score scratch sized by slot *capacity* (not current length):
         // capacities only change on rare KV growth, so the arena class
@@ -370,7 +370,7 @@ impl Attention {
             lkv.append(&row[d..2 * d], &row[2 * d..3 * d]);
             self.decode_attend(row, lkv, lkv.len, ctx.row_mut(t), &mut scores);
         }
-        self.wo.forward_into(&ctx, out, arena); // n_active×d, batched
+        self.wo.forward_into(&ctx, out); // n_active×d, batched
         arena.recycle(scores);
         arena.recycle_matrix(ctx);
         arena.recycle_matrix(qkv);

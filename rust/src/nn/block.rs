@@ -173,10 +173,10 @@ impl Block {
         let mut ln2_out = arena.take_matrix(rows, d);
         self.ln2.forward_into(&x_mid, &mut ln2_out);
         let mut h = arena.take_matrix(rows, self.fc1.out_features);
-        self.fc1.forward_into(&ln2_out, &mut h, arena);
+        self.fc1.forward_into(&ln2_out, &mut h);
         arena.recycle_matrix(ln2_out);
         gelu_inplace(&mut h);
-        self.fc2.forward_into(&h, out, arena);
+        self.fc2.forward_into(&h, out);
         arena.recycle_matrix(h);
         // y = x_mid + m, in place over the MLP output.
         for (ov, xv) in out.data.iter_mut().zip(&x_mid.data) {

@@ -262,11 +262,32 @@ impl TinyLM {
         Some(self.head.forward(&self.ln_f.forward(&last)))
     }
 
-    /// Warm the kernel autotuner for this model's serving shapes before
-    /// taking traffic: one forward per requested batch size touches every
-    /// structured linear at that (shape, batch) key, so tuning probes run
-    /// at model-load time instead of inside the first user request.
+    /// Visit every structured linear in the model (each block's QKV,
+    /// output projection, and MLP pair, plus the LM head).
+    pub fn for_each_linear(&self, mut f: impl FnMut(&Linear)) {
+        for blk in &self.blocks {
+            f(&blk.attn.wqkv);
+            f(&blk.attn.wo);
+            f(&blk.fc1);
+            f(&blk.fc2);
+        }
+        f(&self.head);
+    }
+
+    /// Warm the execution caches for this model's serving shapes before
+    /// taking traffic: first build every layer's [`StructPlan`] (cached
+    /// on the layer, so decode dispatches resolve plans with one atomic
+    /// load), then run one forward per requested batch size, which
+    /// touches every structured linear at that (plan signature, shape,
+    /// batch-bucket) autotuner key and packs its factor panels — tuning
+    /// probes and packing run at model-load time instead of inside the
+    /// first user request.
+    ///
+    /// [`StructPlan`]: crate::kernels::StructPlan
     pub fn pretune(&self, batches: &[usize]) {
+        self.for_each_linear(|lin| {
+            let _ = lin.plan();
+        });
         for &bsz in batches {
             let n = bsz.clamp(1, self.cfg.max_seq.saturating_sub(1).max(1));
             let tokens = vec![0usize; n];
@@ -356,7 +377,7 @@ impl TinyLM {
         }
         let mut ln_out = arena.take_matrix(toks.len(), d);
         self.ln_f.forward_into(&x, &mut ln_out);
-        self.head.forward_into(&ln_out, logits, arena);
+        self.head.forward_into(&ln_out, logits);
         arena.recycle_matrix(ln_out);
         arena.recycle_matrix(y);
         arena.recycle_matrix(x);

@@ -9,11 +9,13 @@
 
 use super::param::PTensor;
 use crate::blast::BlastMatrix;
-use crate::kernels::{engine, BlastView, Couplings, Factors, KernelOp};
+use crate::kernels::{
+    engine, Couplings, Factors, PlanCell, PlanKind, PlanOperands, PlanSig, StructPlan,
+};
 use crate::tensor::io::TensorBundle;
 use crate::tensor::{matmul, matmul_nt, matmul_tn, Matrix, Rng};
-use crate::util::arena::ScratchArena;
 use anyhow::{bail, Result};
+use std::sync::Arc;
 
 /// The trainable weight representation of a linear layer.
 #[derive(Clone, Debug)]
@@ -54,12 +56,20 @@ pub enum LinearWeight {
 }
 
 /// A linear layer (structured weight + optional bias).
+///
+/// Every structure's forward lowers to a [`StructPlan`] — the shared
+/// packed-microkernel stage program of the kernel engine — cached on
+/// the layer in `plan` (built at model load by `TinyLM::pretune`, or
+/// lazily on first dispatch). The plan is pure structure, so in-place
+/// weight updates never invalidate it.
 #[derive(Clone, Debug)]
 pub struct Linear {
     pub weight: LinearWeight,
     pub bias: Option<PTensor>,
     pub out_features: usize,
     pub in_features: usize,
+    /// Layer-held [`StructPlan`] slot (see [`Linear::plan`]).
+    pub plan: PlanCell,
 }
 
 /// Forward cache for backward.
@@ -83,6 +93,7 @@ impl Linear {
             bias: Some(PTensor::new_nodecay(Matrix::zeros(1, out))),
             out_features: out,
             in_features: inp,
+            plan: PlanCell::new(),
         }
     }
 
@@ -95,6 +106,7 @@ impl Linear {
             bias: Some(PTensor::new_nodecay(Matrix::zeros(1, out))),
             out_features: out,
             in_features: inp,
+            plan: PlanCell::new(),
         }
     }
 
@@ -112,6 +124,7 @@ impl Linear {
             bias: Some(PTensor::new_nodecay(Matrix::zeros(1, out))),
             out_features: out,
             in_features: inp,
+            plan: PlanCell::new(),
         }
     }
 
@@ -126,6 +139,7 @@ impl Linear {
             bias: Some(PTensor::new_nodecay(Matrix::zeros(1, out))),
             out_features: out,
             in_features: inp,
+            plan: PlanCell::new(),
         }
     }
 
@@ -140,6 +154,7 @@ impl Linear {
             bias: Some(PTensor::new_nodecay(Matrix::zeros(1, out))),
             out_features: out,
             in_features: inp,
+            plan: PlanCell::new(),
         }
     }
 
@@ -151,6 +166,7 @@ impl Linear {
             bias: Some(PTensor::new_nodecay(Matrix::zeros(1, out))),
             out_features: out,
             in_features: inp,
+            plan: PlanCell::new(),
         }
     }
 
@@ -170,6 +186,7 @@ impl Linear {
             bias: Some(PTensor::new_nodecay(Matrix::zeros(1, out))),
             out_features: out,
             in_features: inp,
+            plan: PlanCell::new(),
         }
     }
 
@@ -190,7 +207,81 @@ impl Linear {
         }
     }
 
-    /// Dense reconstruction of whatever structure we hold.
+    // ------------------------------------------------------------------
+    // Structure-plan lowering
+    // ------------------------------------------------------------------
+
+    /// The [`PlanSig`] this weight lowers to (the autotuner-key half of
+    /// the layer's plan).
+    pub fn plan_sig(&self) -> PlanSig {
+        match &self.weight {
+            LinearWeight::Dense { .. } => PlanSig { kind: PlanKind::Dense, b: 1, r: 0 },
+            LinearWeight::LowRank { p, .. } => {
+                PlanSig { kind: PlanKind::LowRank, b: 1, r: p.v.cols as u32 }
+            }
+            LinearWeight::Blast { b, r, .. } => {
+                PlanSig { kind: PlanKind::Blast, b: *b as u32, r: *r as u32 }
+            }
+            LinearWeight::Monarch { b, t, .. } => {
+                PlanSig { kind: PlanKind::Monarch, b: *b as u32, r: *t as u32 }
+            }
+            LinearWeight::BlockDiag { b, pd, .. } => {
+                PlanSig { kind: PlanKind::BlockDiag, b: *b as u32, r: pd[0].v.cols as u32 }
+            }
+        }
+    }
+
+    /// This layer's [`StructPlan`], built on first use (model load calls
+    /// this from `TinyLM::pretune`, so serving dispatches resolve it
+    /// with one atomic load and an `Arc` bump) and cached on the layer.
+    ///
+    /// The cached plan is validated against the *current* weight's
+    /// signature on every call: the compression flows replace `weight`
+    /// in place (resetting the cell), but a layer cloned before
+    /// compression may still carry a stale cell — in that case the
+    /// plan is re-resolved from the process-wide cache instead of
+    /// dispatching a mismatched stage program.
+    pub fn plan(&self) -> Arc<StructPlan> {
+        let sig = self.plan_sig();
+        let cached = self.plan.get_or_build(sig, self.out_features, self.in_features);
+        if cached.sig == sig && cached.m == self.out_features && cached.n == self.in_features {
+            return Arc::clone(cached);
+        }
+        crate::kernels::plan_cache().get(sig, self.out_features, self.in_features)
+    }
+
+    /// Borrowed plan operands over this layer's parameter storage
+    /// (allocation-free; built on every dispatch).
+    pub fn plan_operands(&self) -> PlanOperands<'_> {
+        match &self.weight {
+            LinearWeight::Dense { w } => PlanOperands {
+                g0: Factors::Params(std::slice::from_ref(w)),
+                g1: Factors::Mats(&[]),
+                s: None,
+            },
+            LinearWeight::LowRank { p, q } => PlanOperands {
+                g0: Factors::Params(std::slice::from_ref(q)),
+                g1: Factors::Params(std::slice::from_ref(p)),
+                s: None,
+            },
+            LinearWeight::Blast { u, v, s, .. } => PlanOperands {
+                g0: Factors::Params(v),
+                g1: Factors::Params(u),
+                s: Some(Couplings::Packed(&s.v)),
+            },
+            LinearWeight::Monarch { rb, l, .. } => {
+                PlanOperands { g0: Factors::Params(rb), g1: Factors::Params(l), s: None }
+            }
+            LinearWeight::BlockDiag { pd, qd, .. } => {
+                PlanOperands { g0: Factors::Params(qd), g1: Factors::Params(pd), s: None }
+            }
+        }
+    }
+
+    /// Dense reconstruction of whatever structure we hold (direct
+    /// factor products — the compression flows call this per layer, so
+    /// it stays on the O(m·n·r) closed forms rather than routing an
+    /// identity batch through the plan executor).
     pub fn dense_weight(&self) -> Matrix {
         match &self.weight {
             LinearWeight::Dense { w } => w.v.clone(),
@@ -268,43 +359,21 @@ impl Linear {
     }
 
     /// Allocation-free inference forward: `y = x W^T + bias` written
-    /// into the caller-owned `out`, temporaries drawn from `arena`.
+    /// into the caller-owned `out`.
     ///
-    /// Dense and BLAST weights (the serving structures) run entirely
-    /// through pooled buffers and the kernels' `run_into` overrides, so
-    /// a warm call touches the allocator zero times; Low-Rank routes
-    /// its rank intermediate through the arena; Monarch/Block-Diagonal
-    /// fall back to [`forward`] (allocating) and move the result into
-    /// `out`. Bit-identical to [`forward`] in every case.
+    /// **Every** structure — Dense, Low-Rank, Monarch, Block-Diagonal,
+    /// BLAST — dispatches its cached [`StructPlan`] through the kernel
+    /// engine's `run_into` path: inter-stage scratch is thread-local to
+    /// the executor, factor panels come from the process-wide pack
+    /// cache, and `out`'s buffer is reused, so a warm call touches the
+    /// allocator zero times (asserted for all structures by
+    /// `tests/decode_alloc.rs`). Bit-identical to [`forward`].
     ///
     /// [`forward`]: Linear::forward
-    pub fn forward_into(&self, x: &Matrix, out: &mut Matrix, arena: &mut ScratchArena) {
+    pub fn forward_into(&self, x: &Matrix, out: &mut Matrix) {
         assert_eq!(x.cols, self.in_features, "linear input mismatch");
-        match &self.weight {
-            LinearWeight::Dense { w } => engine().matmul_nt_into(x, &w.v, out),
-            LinearWeight::Blast { b, r, out: o, inp, u, v, s } => {
-                let view = BlastView::new(
-                    *o,
-                    *inp,
-                    *b,
-                    *r,
-                    Factors::Params(u),
-                    Factors::Params(v),
-                    Couplings::Packed(&s.v),
-                );
-                engine().dispatch_into(x, &KernelOp::Blast(view), out);
-            }
-            LinearWeight::LowRank { p, q } => {
-                let mut z = arena.take_matrix(x.rows, q.v.cols);
-                crate::tensor::gemm(1.0, x, &q.v, 0.0, &mut z);
-                engine().matmul_nt_into(&z, &p.v, out);
-                arena.recycle_matrix(z);
-            }
-            LinearWeight::Monarch { .. } | LinearWeight::BlockDiag { .. } => {
-                *out = self.forward(x);
-                return; // forward() already added the bias
-            }
-        }
+        let plan = self.plan();
+        engine().plan_act_into(x, &plan, &self.plan_operands(), out);
         if let Some(bias) = &self.bias {
             for t in 0..out.rows {
                 let row = out.row_mut(t);
@@ -324,39 +393,41 @@ impl Linear {
     fn forward_impl(&self, x: &Matrix, keep: bool) -> (Matrix, Option<LinearCache>) {
         assert_eq!(x.cols, self.in_features, "linear input mismatch");
         let tokens = x.rows;
-        let (mut y, cache) = match &self.weight {
-            LinearWeight::Dense { w } => {
-                let y = engine().matmul_nt(x, &w.v);
-                (y, keep.then(|| LinearCache::Dense { x: x.clone() }))
-            }
-            LinearWeight::LowRank { p, q } => {
-                let z = matmul(x, &q.v); // tokens×r
-                let y = engine().matmul_nt(&z, &p.v); // tokens×out
-                (y, keep.then(|| LinearCache::LowRank { x: x.clone(), z }))
-            }
-            LinearWeight::Blast { b, r, out, inp, u, v, s } => {
-                if !keep {
-                    // Inference hot path: one fused, autotuned
-                    // Algorithm-1 dispatch — no per-block submatrix
-                    // copies, no cache materialization, and the view
-                    // itself borrows the parameter storage directly
-                    // (no per-call Vec of references).
-                    let view = BlastView::new(
-                        *out,
-                        *inp,
-                        *b,
-                        *r,
-                        Factors::Params(u),
-                        Factors::Params(v),
-                        Couplings::Packed(&s.v),
-                    );
-                    let y = engine().dispatch(x, &KernelOp::Blast(view));
-                    (y, None)
-                } else {
+        let (mut y, cache) = if !keep {
+            // Inference: one autotuned structure-plan dispatch for every
+            // weight variant — the five per-structure forward loops this
+            // module used to carry are gone; the plan IR (see
+            // `kernels::plan`) is the single place each structure's
+            // execution is spelled out. The operand view borrows the
+            // parameter storage directly (no per-call Vec of
+            // references), and the plan handle is cached on the layer.
+            let plan = self.plan();
+            let y = engine().plan_act(x, &plan, &self.plan_operands());
+            (y, None)
+        } else {
+            // Training forward keeps the per-stage intermediates the
+            // backward pass consumes (`z_j`, `w_i`, …); these mirror the
+            // plan's stage structure but materialize per-stage matrices
+            // instead of streaming through executor scratch. Products
+            // run on the *unpacked* static path: training weights
+            // mutate every optimizer step, so a packing kernel would
+            // fingerprint-miss and re-pay the O(out·in) pack per layer
+            // per step (and churn the shared pack cache) — the same
+            // reasoning the factorization sweeps follow. Bit-identical
+            // to the tuned dispatch by the fixed-lane contract.
+            match &self.weight {
+                LinearWeight::Dense { w } => {
+                    let y = engine().matmul_nt_static(x, &w.v);
+                    (y, Some(LinearCache::Dense { x: x.clone() }))
+                }
+                LinearWeight::LowRank { p, q } => {
+                    let z = matmul(x, &q.v); // tokens×r
+                    let y = engine().matmul_nt_static(&z, &p.v); // tokens×out
+                    (y, Some(LinearCache::LowRank { x: x.clone(), z }))
+                }
+                LinearWeight::Blast { b, r, out, inp, u, v, s } => {
                     let p = out / b;
                     let q = inp / b;
-                    // Training forward keeps the per-stage intermediates
-                    // (z_j, w_i) that `backward` consumes.
                     // Stage 1: z_j = x_j V_j (tokens×r) — shared across i.
                     let z: Vec<Matrix> = (0..*b)
                         .map(|j| {
@@ -388,47 +459,45 @@ impl Linear {
                     }
                     (y, Some(LinearCache::Blast { x: x.clone(), z, w: ws }))
                 }
-            }
-            LinearWeight::Monarch { b, out, inp, rb, l, .. } => {
-                let p = out / b;
-                let q = inp / b;
-                let z: Vec<Matrix> = (0..*b)
-                    .map(|j| {
-                        let xj = x.submatrix(0, tokens, j * q, (j + 1) * q);
-                        engine().matmul_nt(&xj, &rb[j].v) // tokens×t
-                    })
-                    .collect();
-                let mut y = Matrix::zeros(tokens, *out);
-                for i in 0..*b {
-                    for j in 0..*b {
-                        let contrib = engine().matmul_nt(&z[j], &l[i * b + j].v); // tokens×p
-                        for t in 0..tokens {
-                            let yrow = &mut y.row_mut(t)[i * p..(i + 1) * p];
-                            for (yv, cv) in yrow.iter_mut().zip(contrib.row(t)) {
-                                *yv += cv;
+                LinearWeight::Monarch { b, out, inp, rb, l, .. } => {
+                    let p = out / b;
+                    let q = inp / b;
+                    let z: Vec<Matrix> = (0..*b)
+                        .map(|j| {
+                            let xj = x.submatrix(0, tokens, j * q, (j + 1) * q);
+                            engine().matmul_nt_static(&xj, &rb[j].v) // tokens×t
+                        })
+                        .collect();
+                    let mut y = Matrix::zeros(tokens, *out);
+                    for i in 0..*b {
+                        for j in 0..*b {
+                            let contrib = engine().matmul_nt_static(&z[j], &l[i * b + j].v); // tokens×p
+                            for t in 0..tokens {
+                                let yrow = &mut y.row_mut(t)[i * p..(i + 1) * p];
+                                for (yv, cv) in yrow.iter_mut().zip(contrib.row(t)) {
+                                    *yv += cv;
+                                }
                             }
                         }
                     }
+                    (y, Some(LinearCache::Monarch { x: x.clone(), z }))
                 }
-                (y, keep.then(|| LinearCache::Monarch { x: x.clone(), z }))
-            }
-            LinearWeight::BlockDiag { b, out, inp, pd, qd } => {
-                let p = out / b;
-                let q = inp / b;
-                let mut y = Matrix::zeros(tokens, *out);
-                let mut zs = Vec::with_capacity(*b);
-                for i in 0..*b {
-                    let xi = x.submatrix(0, tokens, i * q, (i + 1) * q);
-                    let z = matmul(&xi, &qd[i].v); // tokens×t
-                    let yi = engine().matmul_nt(&z, &pd[i].v); // tokens×p
-                    for t in 0..tokens {
-                        y.row_mut(t)[i * p..(i + 1) * p].copy_from_slice(yi.row(t));
-                    }
-                    if keep {
+                LinearWeight::BlockDiag { b, out, inp, pd, qd } => {
+                    let p = out / b;
+                    let q = inp / b;
+                    let mut y = Matrix::zeros(tokens, *out);
+                    let mut zs = Vec::with_capacity(*b);
+                    for i in 0..*b {
+                        let xi = x.submatrix(0, tokens, i * q, (i + 1) * q);
+                        let z = matmul(&xi, &qd[i].v); // tokens×t
+                        let yi = engine().matmul_nt_static(&z, &pd[i].v); // tokens×p
+                        for t in 0..tokens {
+                            y.row_mut(t)[i * p..(i + 1) * p].copy_from_slice(yi.row(t));
+                        }
                         zs.push(z);
                     }
+                    (y, Some(LinearCache::BlockDiag { x: x.clone(), z: zs }))
                 }
-                (y, keep.then(|| LinearCache::BlockDiag { x: x.clone(), z: zs }))
             }
         };
         if let Some(bias) = &self.bias {
@@ -716,7 +785,7 @@ impl Linear {
             .entries
             .get(&format!("{prefix}.bias"))
             .map(|m| PTensor::new_nodecay(m.clone()));
-        Ok(Linear { weight, bias, out_features: out, in_features: inp })
+        Ok(Linear { weight, bias, out_features: out, in_features: inp, plan: PlanCell::new() })
     }
 
     /// Collect all trainable parameters (for the optimizer).
@@ -884,16 +953,47 @@ mod tests {
             Linear::monarch(6, 8, 2, 2, 0.3, &mut rng),
             Linear::block_diag(6, 8, 2, 2, 0.3, &mut rng),
         ];
-        let mut arena = crate::util::arena::ScratchArena::new();
         for (k, layer) in layers.iter().enumerate() {
             let x = rng.gaussian_matrix(3, 8, 1.0);
             let y = layer.forward(&x);
             let mut out = Matrix::zeros(0, 0);
-            layer.forward_into(&x, &mut out, &mut arena);
+            layer.forward_into(&x, &mut out);
             assert_eq!(out.shape(), y.shape(), "case {k}");
             assert_eq!(out.data, y.data, "case {k}: forward_into diverged");
-            assert_eq!(arena.outstanding(), 0, "case {k}: arena leak");
         }
+    }
+
+    #[test]
+    fn plan_sigs_and_shapes_per_structure() {
+        let mut rng = Rng::new(315);
+        let dense = Linear::dense(6, 8, 0.3, &mut rng);
+        assert_eq!(dense.plan_sig(), PlanSig { kind: PlanKind::Dense, b: 1, r: 0 });
+        let lr = Linear::low_rank(6, 8, 3, 0.3, &mut rng);
+        assert_eq!(lr.plan_sig(), PlanSig { kind: PlanKind::LowRank, b: 1, r: 3 });
+        let bl = Linear::blast(6, 8, 2, 3, 0.3, &mut rng);
+        assert_eq!(bl.plan_sig(), PlanSig { kind: PlanKind::Blast, b: 2, r: 3 });
+        let mo = Linear::monarch(6, 8, 2, 2, 0.3, &mut rng);
+        assert_eq!(mo.plan_sig(), PlanSig { kind: PlanKind::Monarch, b: 2, r: 2 });
+        let bd = Linear::block_diag(6, 8, 2, 2, 0.3, &mut rng);
+        assert_eq!(bd.plan_sig(), PlanSig { kind: PlanKind::BlockDiag, b: 2, r: 2 });
+        for layer in [&dense, &lr, &bl, &mo, &bd] {
+            let plan = layer.plan();
+            assert_eq!((plan.m, plan.n), (6, 8));
+            // The layer-held cell returns the same Arc on every call.
+            assert!(Arc::ptr_eq(&plan, &layer.plan()));
+            // FLOPs accounting agrees between the plan and the layer.
+            assert_eq!(plan.flops_per_row(), layer.flops_per_token());
+        }
+
+        // A stale cell (weight replaced in place on a clone that had
+        // already built its plan) must not dispatch a mismatched plan.
+        let mut swapped = dense.clone();
+        swapped.weight = bl.weight.clone();
+        let plan = swapped.plan();
+        assert_eq!(plan.sig, swapped.plan_sig(), "stale cell must re-resolve");
+        let x = rng.gaussian_matrix(2, 8, 1.0);
+        let y = swapped.forward(&x);
+        assert_eq!(y.shape(), (2, 6));
     }
 
     #[test]

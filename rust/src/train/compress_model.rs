@@ -91,6 +91,11 @@ pub fn compress_linear(
     let compressed = compressor.compress(&dense, structure, ratio)?;
     let rel = compressed.rel_error(&dense);
     layer.weight = linear_weight_from_compressed(compressed, dense.rows, dense.cols);
+    // The weight structure changed in place: drop the cached execution
+    // plan so the next dispatch lowers the new structure (Linear::plan
+    // also self-validates, but resetting here keeps the layer-cache
+    // hit path).
+    layer.plan = Default::default();
     Some(rel)
 }
 

@@ -106,10 +106,19 @@ fn steady_state_decode_is_allocation_free() {
     // Single-thread kernel configuration (see module docs); set before
     // the first `util::par::num_threads()` call caches the value.
     std::env::set_var("BLAST_NUM_THREADS", "1");
-    // Dense covers the packed dense microkernel path (QKV/MLP/head);
-    // BLAST covers the fused Algorithm-1 path with packed factor
-    // panels — both must hold the zero-allocation contract, which also
-    // covers the attention-score scratch (formerly a per-step vec!).
+    // Every weight structure now routes through the structure-plan
+    // executor (`kernels::plan`), so the zero-allocation contract holds
+    // for all five — not just the Dense/BLAST pair the pre-plan engine
+    // special-cased (Monarch/BlockDiag used to fall back to an
+    // allocating forward, and LowRank drew its rank intermediate from
+    // the arena). Dense covers the packed dense path (QKV/MLP/head);
+    // BLAST covers Algorithm 1 with the coupling stage; the other three
+    // cover the block-gather/scatter and accumulating stages. The
+    // attention-score scratch (formerly a per-step vec!) is covered by
+    // every case.
     run_steady_state(StructureKind::Dense, 9100);
     run_steady_state(StructureKind::Blast { b: 2, r: 4 }, 9101);
+    run_steady_state(StructureKind::LowRank { r: 8 }, 9102);
+    run_steady_state(StructureKind::Monarch { b: 2, t: 4 }, 9103);
+    run_steady_state(StructureKind::BlockDiag { b: 2, t: 4 }, 9104);
 }

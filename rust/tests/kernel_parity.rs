@@ -3,16 +3,18 @@
 //! **bit-identical** to the naive reference kernel (and element-wise
 //! close to the dense reconstruction of the weight) across random
 //! shapes, block counts `b`, ranks `r`, and batch sizes — including
-//! the low-rank / block-diagonal / Monarch special-case embeddings of
+//! **every structure plan** (Dense, Low-Rank, Monarch, Block-Diagonal,
+//! BLAST lowered through `kernels::plan`), the low-rank /
+//! block-diagonal / Monarch special-case embeddings of
 //! `blast::special`, awkward shapes (k not a multiple of the 8-lane
-//! width, n below the NR tile, m below the MR block, batch 1), and
-//! both `BLAST_SIMD` paths (the CI `simd-parity` job runs this suite
-//! under `portable` and `auto`).
+//! width, n below the NR tile, b=1, batch 1), and both `BLAST_SIMD`
+//! paths (the CI `simd-parity` job runs this suite under `portable`
+//! and `auto`).
 
 use blast_repro::blast::BlastMatrix;
 use blast_repro::kernels::{
-    engine, micro, BlastView, FusedBlastKernel, KernelOp, MatmulKernel, NaiveKernel,
-    PackedPanels, ParallelKernel, SimdMode, TiledKernel,
+    engine, micro, plan_cache, Couplings, Factors, KernelOp, MatmulKernel, NaiveKernel,
+    PackedPanels, ParallelKernel, PlanKernel, PlanOperands, SimdMode, StructPlan, TiledKernel,
 };
 use blast_repro::tensor::{matmul_nt, Matrix, Rng};
 use blast_repro::util::check::{property, PropGen};
@@ -40,10 +42,10 @@ fn assert_bits(got: &Matrix, want: &Matrix, what: &str) {
     }
 }
 
-fn blast_kernels() -> Vec<Box<dyn MatmulKernel>> {
+fn plan_kernels() -> Vec<Box<dyn MatmulKernel>> {
     vec![
-        Box::new(FusedBlastKernel::sequential()),
-        Box::new(FusedBlastKernel::row_parallel()),
+        Box::new(PlanKernel::sequential()),
+        Box::new(PlanKernel::row_parallel()),
     ]
 }
 
@@ -51,27 +53,41 @@ fn dense_kernels() -> Vec<Box<dyn MatmulKernel>> {
     vec![Box::new(TiledKernel), Box::new(ParallelKernel)]
 }
 
-/// Run every BLAST-capable kernel on (a, x); every optimized kernel
-/// (and the engine's tuned dispatch, and the `run_into` variants) must
-/// be bit-identical to the naive reference, which itself must be close
-/// to the dense reconstruction.
-fn check_blast_parity(a: &BlastMatrix, x: &Matrix, what: &str) {
-    let reference = NaiveKernel.run(x, &KernelOp::Blast(BlastView::from_matrix(a)));
-    let dense = matmul_nt(x, &a.to_dense());
-    assert_close(&reference, &dense, &format!("{what}: naive vs dense"));
-    for kernel in blast_kernels() {
-        let op = KernelOp::Blast(BlastView::from_matrix(a));
+/// Run every plan-capable kernel on (plan, ops, x); every optimized
+/// kernel (and the engine's tuned dispatch, the serial plan path, and
+/// the `run_into` variants) must be bit-identical to the naive
+/// reference.
+fn check_plan_parity(plan: &StructPlan, ops: &PlanOperands<'_>, x: &Matrix, what: &str) {
+    let op = KernelOp::Plan { plan, ops: *ops };
+    let reference = NaiveKernel.run(x, &op);
+    for kernel in plan_kernels() {
         assert!(kernel.supports(&op, x.rows));
         let y = kernel.run(x, &op);
         assert_bits(&y, &reference, &format!("{what}: {} vs naive", kernel.name()));
         let mut out = Matrix::zeros(0, 0);
-        let op2 = KernelOp::Blast(BlastView::from_matrix(a));
-        kernel.run_into(x, &op2, &mut out);
+        kernel.run_into(x, &op, &mut out);
         assert_bits(&out, &reference, &format!("{what}: {} run_into vs naive", kernel.name()));
     }
-    // The engine's tuned dispatch must agree with whatever it picked.
-    let y = engine().blast_act(x, a);
+    // The engine's tuned dispatch must agree with whatever it picked,
+    // and the serial (unpacked, never-threading) path shares the bits.
+    let y = engine().plan_act(x, plan, ops);
     assert_bits(&y, &reference, &format!("{what}: engine vs naive"));
+    let serial = engine().plan_act_serial(x, plan, ops);
+    assert_bits(&serial, &reference, &format!("{what}: serial plan path vs naive"));
+}
+
+/// BLAST-structure convenience wrapper (plan + operands from the
+/// matrix), with a closeness check against the dense reconstruction.
+fn check_blast_parity(a: &BlastMatrix, x: &Matrix, what: &str) {
+    let plan = a.plan();
+    let ops = a.plan_operands();
+    let reference = NaiveKernel.run(x, &KernelOp::Plan { plan: &plan, ops });
+    let dense = matmul_nt(x, &a.to_dense());
+    assert_close(&reference, &dense, &format!("{what}: naive vs dense"));
+    check_plan_parity(&plan, &ops, x, what);
+    // The public BlastMatrix entry point routes through the same plan.
+    let y = engine().blast_act(x, a);
+    assert_bits(&y, &reference, &format!("{what}: blast_act vs naive"));
 }
 
 #[test]
@@ -106,6 +122,15 @@ fn dense_kernels_match_naive_across_random_shapes() {
         // The static and serial (unpacked) paths share the contract.
         assert_bits(&engine().matmul_nt_static(&x, &w), &reference, "static path");
         assert_bits(&engine().matmul_nt_serial(&x, &w), &reference, "serial path");
+        // The dense *structure plan* shares the bits too (a Dense layer
+        // dispatching through its plan is identical to raw DenseNt).
+        let plan = plan_cache().dense(n, k);
+        check_plan_parity(&plan, &PlanOperands::single(&w), &x, "dense plan");
+        assert_bits(
+            &engine().plan_act(&x, &plan, &PlanOperands::single(&w)),
+            &reference,
+            "dense plan vs raw DenseNt",
+        );
         // And the dense reconstruction stays within tolerance.
         assert_close(&y, &matmul_nt(&x, &w), "dense engine vs tensor");
     });
@@ -140,6 +165,122 @@ fn dense_kernels_awkward_shapes_exact() {
             );
         }
     }
+}
+
+#[test]
+fn low_rank_plan_parity_awkward_shapes() {
+    // k ∤ 8, n < NR, r off the lane width, batch 1.
+    let mut rng = Rng::new(7500);
+    for &(batch, m, n, r) in &[
+        (1usize, 3usize, 9usize, 1usize),
+        (1, 2, 7, 3),
+        (4, 17, 31, 5),
+        (2, 40, 64, 9), // r > LANES
+        (3, 1, 1, 1),
+    ] {
+        let p = rng.gaussian_matrix(m, r, 1.0);
+        let q = rng.gaussian_matrix(n, r, 1.0);
+        let x = rng.gaussian_matrix(batch, n, 1.0);
+        let plan = StructPlan::low_rank(m, n, r);
+        let ops = PlanOperands {
+            g0: Factors::Mats(std::slice::from_ref(&q)),
+            g1: Factors::Mats(std::slice::from_ref(&p)),
+            s: None,
+        };
+        check_plan_parity(&plan, &ops, &x, &format!("lowrank m={m} n={n} r={r} batch={batch}"));
+        let y = NaiveKernel.run(&x, &KernelOp::Plan { plan: &plan, ops });
+        assert_close(
+            &y,
+            &matmul_nt(&x, &matmul_nt(&p, &q)),
+            &format!("lowrank m={m} n={n} r={r}: naive vs dense"),
+        );
+    }
+}
+
+#[test]
+fn monarch_plan_parity_awkward_shapes() {
+    // b=1 degenerate, k ∤ 8, p < NR, batch 1.
+    let mut rng = Rng::new(7501);
+    for &(batch, b, p, q, t) in &[
+        (1usize, 1usize, 3usize, 5usize, 2usize), // b=1
+        (1, 2, 3, 7, 2),                          // q ∤ 8
+        (5, 3, 2, 3, 4),                          // p < NR
+        (2, 2, 9, 8, 3),
+    ] {
+        let (m, n) = (b * p, b * q);
+        let rb: Vec<Matrix> = (0..b).map(|_| rng.gaussian_matrix(t, q, 1.0)).collect();
+        let l: Vec<Matrix> = (0..b * b).map(|_| rng.gaussian_matrix(p, t, 1.0)).collect();
+        let x = rng.gaussian_matrix(batch, n, 1.0);
+        let plan = StructPlan::monarch(m, n, b, t);
+        let ops = PlanOperands { g0: Factors::Mats(&rb), g1: Factors::Mats(&l), s: None };
+        check_plan_parity(&plan, &ops, &x, &format!("monarch b={b} p={p} q={q} t={t} batch={batch}"));
+    }
+}
+
+#[test]
+fn block_diag_plan_parity_awkward_shapes() {
+    let mut rng = Rng::new(7502);
+    for &(batch, b, p, q, t) in &[
+        (1usize, 1usize, 5usize, 3usize, 2usize), // b=1
+        (1, 2, 3, 7, 1),                          // t=1, q ∤ 8
+        (4, 4, 2, 2, 2),                          // p < NR
+        (2, 3, 9, 11, 4),
+    ] {
+        let (m, n) = (b * p, b * q);
+        let pd: Vec<Matrix> = (0..b).map(|_| rng.gaussian_matrix(p, t, 1.0)).collect();
+        let qd: Vec<Matrix> = (0..b).map(|_| rng.gaussian_matrix(q, t, 1.0)).collect();
+        let x = rng.gaussian_matrix(batch, n, 1.0);
+        let plan = StructPlan::block_diag(m, n, b, t);
+        let ops = PlanOperands { g0: Factors::Mats(&qd), g1: Factors::Mats(&pd), s: None };
+        check_plan_parity(
+            &plan,
+            &ops,
+            &x,
+            &format!("blockdiag b={b} p={p} q={q} t={t} batch={batch}"),
+        );
+    }
+}
+
+#[test]
+fn blast_plan_parity_awkward_shapes() {
+    // The decode hot shape and lane-unaligned corners: batch 1, q and r
+    // off the lane width, b=1.
+    let mut rng = Rng::new(7400);
+    for &(m, n, b, r) in &[
+        (12usize, 12usize, 2usize, 3usize),
+        (18, 27, 3, 9), // r > LANES, q ∤ 8
+        (8, 8, 1, 5),   // b=1
+        (3, 5, 1, 2),   // n < LANES
+    ] {
+        let a = BlastMatrix::random_init(m, n, b, r, 1.0, &mut rng);
+        let x = rng.gaussian_matrix(1, n, 1.0);
+        check_blast_parity(&a, &x, &format!("decode blast m={m} n={n} b={b} r={r}"));
+    }
+}
+
+#[test]
+fn trainable_coupling_layout_matches_nested_layout() {
+    // The packed `(b·b)×r` coupling table (the trainable nn::linear
+    // layout) must produce the same bits as the nested BlastMatrix
+    // layout for the same values.
+    let mut rng = Rng::new(7600);
+    let a = BlastMatrix::random_init(12, 8, 2, 3, 1.0, &mut rng);
+    let x = rng.gaussian_matrix(4, 8, 1.0);
+    let mut s_packed = Matrix::zeros(4, 3);
+    for i in 0..2 {
+        for j in 0..2 {
+            s_packed.row_mut(i * 2 + j).copy_from_slice(&a.s[i][j]);
+        }
+    }
+    let plan = a.plan();
+    let nested = engine().plan_act(&x, &plan, &a.plan_operands());
+    let packed_ops = PlanOperands {
+        g0: Factors::Mats(&a.v),
+        g1: Factors::Mats(&a.u),
+        s: Some(Couplings::Packed(&s_packed)),
+    };
+    let packed = engine().plan_act(&x, &plan, &packed_ops);
+    assert_bits(&packed, &nested, "packed coupling table vs nested");
 }
 
 #[test]
@@ -208,17 +349,6 @@ fn blast_kernels_match_naive_across_random_structures() {
 }
 
 #[test]
-fn blast_decode_shape_batch_one_exact() {
-    // The decode hot shape: batch 1, q and r off the lane width.
-    let mut rng = Rng::new(7400);
-    for &(m, n, b, r) in &[(12usize, 12usize, 2usize, 3usize), (18, 27, 3, 9), (8, 8, 1, 5)] {
-        let a = BlastMatrix::random_init(m, n, b, r, 1.0, &mut rng);
-        let x = rng.gaussian_matrix(1, n, 1.0);
-        check_blast_parity(&a, &x, &format!("decode blast m={m} n={n} b={b} r={r}"));
-    }
-}
-
-#[test]
 fn blast_kernels_handle_low_rank_special_case() {
     property(15, |g: &mut PropGen| {
         let r = g.usize_in(1, 4);
@@ -275,7 +405,9 @@ fn matvec_and_matmul_act_agree_with_kernel_dispatch() {
         let x: Vec<f32> = (0..n).map(|i| ((i * 13 + 7) as f32 * 0.1).sin()).collect();
         let y = a.matvec(&x);
         let xm = Matrix::from_vec(1, n, x.clone());
-        let reference = NaiveKernel.run(&xm, &KernelOp::Blast(BlastView::from_matrix(&a)));
+        let plan = a.plan();
+        let reference =
+            NaiveKernel.run(&xm, &KernelOp::Plan { plan: &plan, ops: a.plan_operands() });
         assert_eq!(y.len(), m);
         for (i, (got, want)) in y.iter().zip(reference.row(0)).enumerate() {
             assert_eq!(
@@ -287,7 +419,7 @@ fn matvec_and_matmul_act_agree_with_kernel_dispatch() {
         let xb = g.matrix(3, n);
         assert_bits(
             &a.matmul_act(&xb),
-            &NaiveKernel.run(&xb, &KernelOp::Blast(BlastView::from_matrix(&a))),
+            &NaiveKernel.run(&xb, &KernelOp::Plan { plan: &plan, ops: a.plan_operands() }),
             "matmul_act vs naive",
         );
     });

@@ -20,6 +20,11 @@ METRICS = [
     ("BENCH_serving.json", ("continuous", "tokens_per_sec"), "serving tokens/sec"),
     ("BENCH_factorize.json", ("precgd", "iters_per_sec"), "factorize PrecGD iters/sec"),
     ("BENCH_kernels.json", ("dense", "autotuned_gflops"), "dense GEMM GFLOP/s"),
+    # Per-structure plan-path throughput (the structure-plan execution
+    # layer: every weight structure lowered to packed microkernel stages).
+    ("BENCH_kernels.json", ("structures", "lowrank", "plan_gflops"), "lowrank plan GFLOP/s"),
+    ("BENCH_kernels.json", ("structures", "monarch", "plan_gflops"), "monarch plan GFLOP/s"),
+    ("BENCH_kernels.json", ("structures", "blockdiag", "plan_gflops"), "blockdiag plan GFLOP/s"),
 ]
 THRESHOLD = 0.20
 
