@@ -391,6 +391,9 @@ fn main() {
                 ("fast_mode", Json::from(fast_mode)),
             ]),
         ),
+        // Observability snapshot of the whole bench run: pack-cache
+        // hit rate and per-plan-signature GFLOP/s feed the trend gate.
+        ("obs", blast_repro::obs::MetricsSnapshot::collect().into_json()),
     ]);
     match std::fs::write(&out_path, root.to_string_pretty()) {
         Ok(()) => println!("wrote {out_path}"),

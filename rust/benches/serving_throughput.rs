@@ -89,12 +89,14 @@ fn run_sequential(model: &TinyLM, workload: &[Arrival]) -> (f64, Vec<Duration>, 
 }
 
 /// The continuous-batching path: same trace submitted to a coordinator
-/// with `slots` concurrent KV slots.
+/// with `slots` concurrent KV slots. The last tuple element is the
+/// coordinator's serving-metrics snapshot (captured before shutdown),
+/// embedded under `obs.serving` in the bench JSON.
 fn run_continuous(
     model: TinyLM,
     workload: &[Arrival],
     slots: usize,
-) -> (f64, Vec<Duration>, usize) {
+) -> (f64, Vec<Duration>, usize, Json) {
     let coord = Coordinator::new(
         vec![("m".into(), model)],
         CoordinatorConfig { batcher: BatcherConfig::default(), slots },
@@ -121,8 +123,9 @@ fn run_continuous(
     // its counts are the timed workload + 1 (the JSON uses the
     // client-side samples above, which exclude it).
     println!("continuous metrics (incl. 1 warm-up request): {}", coord.metrics.report());
+    let serving = coord.metrics.snapshot_json();
     coord.shutdown();
-    (tps, ttfts, total)
+    (tps, ttfts, total, serving)
 }
 
 /// (mean ms, p95 ms) of a latency sample set.
@@ -180,7 +183,8 @@ fn main() {
          ({seq_tokens} tokens)"
     );
 
-    let (cont_tps, cont_ttft, cont_tokens) = run_continuous(model, &workload, slots);
+    let (cont_tps, cont_ttft, cont_tokens, serving_snapshot) =
+        run_continuous(model, &workload, slots);
     let (cont_mean, cont_p95) = latency_stats_ms(&cont_ttft);
     println!(
         "continuous : {cont_tps:>9.1} tok/s  ttft mean {cont_mean:.2}ms p95 {cont_p95:.2}ms  \
@@ -218,6 +222,15 @@ fn main() {
                 ("min_speedup", Json::from(1.5)),
                 ("pass", Json::from(speedup >= 1.5)),
             ]),
+        ),
+        // Full observability snapshot (pack-cache hit rate, per-plan
+        // GFLOP/s, KV occupancy) with the continuous run's serving
+        // section — check_bench_trend.py gates on obs.pack_cache.hit_rate.
+        (
+            "obs",
+            blast_repro::obs::MetricsSnapshot::collect()
+                .with_serving(serving_snapshot)
+                .into_json(),
         ),
     ]);
     match std::fs::write(&out_path, root.to_string_pretty()) {

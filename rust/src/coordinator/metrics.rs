@@ -1,6 +1,7 @@
 //! Serving metrics: counters, queue-depth gauge, and fixed-bucket
-//! latency histograms (p50/p95/p99), lock-protected and cheap to clone
-//! snapshots out of.
+//! latency histograms (p50/p95/p99), built on the crate-wide [`obs`]
+//! primitives — every field is a relaxed atomic, so recording from the
+//! worker fleet takes no lock and performs no allocation.
 //!
 //! Tracked per worker fleet:
 //!
@@ -10,104 +11,38 @@
 //!   peak), maintained by `record_enqueued`/`record_admitted`;
 //! * latency histograms — queue wait, end-to-end, **TTFT** (enqueue →
 //!   first generated token) and **TPOT** (mean inter-token latency per
-//!   request), all as fixed log-linear bucket tables with no
-//!   dependencies and p50/p95/p99 in the report.
+//!   request), as the shared log-linear [`Histogram`] (which lives in
+//!   [`obs`] since the observability PR; re-exported here so
+//!   `coordinator::Histogram` keeps working) with p50/p95/p99 in the
+//!   report.
+//!
+//! [`obs`]: crate::obs
 
-use std::sync::Mutex;
+pub use crate::obs::Histogram;
+
+use crate::obs::{Counter, Gauge};
+use crate::util::json::{obj, Json};
 use std::time::Duration;
 
-/// Log-linear latency histogram (microseconds): each power-of-two
-/// octave splits into [`SUB_BUCKETS`] linear sub-buckets, so percentile
-/// reads are bounded to ~25 % relative error (vs. ~100 % for plain
-/// power-of-two buckets) while the table stays a fixed, tiny `Vec<u64>`
-/// — no samples retained, no dependencies.
-#[derive(Clone, Debug, Default)]
-pub struct Histogram {
-    buckets: Vec<u64>,
-    count: u64,
-    sum_us: u64,
-    max_us: u64,
-}
-
-/// Linear sub-buckets per power-of-two octave.
-const SUB_BUCKETS: u64 = 4;
-
-/// Bucket index for a microsecond value.
-fn bucket_index(us: u64) -> usize {
-    // Clamp so the sub-bucket arithmetic cannot overflow (2^60 µs is
-    // ~36 000 years; nothing real lands there).
-    let us = us.clamp(1, 1 << 60);
-    let oct = 63 - u64::from(us.leading_zeros());
-    let base = 1u64 << oct;
-    let sub = ((us - base) * SUB_BUCKETS) >> oct;
-    (oct * SUB_BUCKETS + sub) as usize
-}
-
-/// Inclusive upper bound (µs) of bucket `idx`.
-fn bucket_upper_us(idx: usize) -> u64 {
-    let oct = idx as u64 / SUB_BUCKETS;
-    let sub = idx as u64 % SUB_BUCKETS;
-    let base = 1u64 << oct;
-    base + ((sub + 1) * base) / SUB_BUCKETS
-}
-
-impl Histogram {
-    pub fn record(&mut self, d: Duration) {
-        let us = d.as_micros().min(u128::from(u64::MAX)) as u64;
-        let idx = bucket_index(us);
-        if self.buckets.len() <= idx {
-            self.buckets.resize(idx + 1, 0);
-        }
-        self.buckets[idx] += 1;
-        self.count += 1;
-        self.sum_us += us;
-        self.max_us = self.max_us.max(us);
-    }
-
-    pub fn count(&self) -> u64 {
-        self.count
-    }
-
-    pub fn mean(&self) -> Duration {
-        if self.count == 0 {
-            return Duration::ZERO;
-        }
-        Duration::from_micros(self.sum_us / self.count)
-    }
-
-    pub fn max(&self) -> Duration {
-        Duration::from_micros(self.max_us)
-    }
-
-    /// Upper bound of the bucket containing the p-th percentile
-    /// (capped at the observed max).
-    pub fn percentile(&self, p: f64) -> Duration {
-        if self.count == 0 {
-            return Duration::ZERO;
-        }
-        let target = (((self.count as f64) * p / 100.0).ceil() as u64).max(1);
-        let mut seen = 0u64;
-        for (i, &c) in self.buckets.iter().enumerate() {
-            seen += c;
-            if seen >= target {
-                return Duration::from_micros(bucket_upper_us(i).min(self.max_us));
-            }
-        }
-        self.max()
-    }
-
-    /// The (p50, p95, p99) triple every snapshot consumer wants.
-    pub fn percentiles(&self) -> (Duration, Duration, Duration) {
-        (self.percentile(50.0), self.percentile(95.0), self.percentile(99.0))
-    }
-}
-
-/// Aggregate serving metrics.
+/// Aggregate serving metrics. All-atomic: recorders on the hot step
+/// loop and snapshot readers never contend on a lock.
 #[derive(Debug, Default)]
 pub struct Metrics {
-    inner: Mutex<MetricsInner>,
+    requests: Counter,
+    cancelled: Counter,
+    tokens_generated: Counter,
+    batches: Counter,
+    batch_size_sum: Counter,
+    queue_depth: Gauge,
+    queue_depth_peak: Gauge,
+    queue_latency: Histogram,
+    e2e_latency: Histogram,
+    ttft: Histogram,
+    tpot: Histogram,
 }
 
+/// A point-in-time copy of [`Metrics`] (plain values, cheap to move
+/// around and assert on).
 #[derive(Clone, Debug, Default)]
 pub struct MetricsInner {
     pub requests: u64,
@@ -142,37 +77,35 @@ impl Metrics {
 
     /// A request entered a variant queue.
     pub fn record_enqueued(&self) {
-        let mut m = self.inner.lock().unwrap();
-        m.queue_depth += 1;
-        m.queue_depth_peak = m.queue_depth_peak.max(m.queue_depth);
+        self.queue_depth.add(1);
+        // Peak maintenance races concurrent admissions by design — the
+        // gauge pair is advisory, and `set_max` keeps it monotone.
+        self.queue_depth_peak.set_max(self.queue_depth.get());
     }
 
     /// A request failed to enqueue after `record_enqueued` (the worker
     /// shut down): undo the gauge.
     pub fn record_enqueue_aborted(&self) {
-        let mut m = self.inner.lock().unwrap();
-        m.queue_depth = m.queue_depth.saturating_sub(1);
+        self.queue_depth.sub(1);
     }
 
     /// A request left the queue for a KV slot after waiting `queue`.
     pub fn record_admitted(&self, queue: Duration) {
-        let mut m = self.inner.lock().unwrap();
         // Saturating: enqueue accounting races admission by design (the
         // gauge is advisory), so never underflow.
-        m.queue_depth = m.queue_depth.saturating_sub(1);
-        m.queue_latency.record(queue);
+        self.queue_depth.sub(1);
+        self.queue_latency.record(queue);
     }
 
     /// One decode iteration advanced `batch_size` sequences.
     pub fn record_batch(&self, batch_size: usize) {
-        let mut m = self.inner.lock().unwrap();
-        m.batches += 1;
-        m.batch_size_sum += batch_size as u64;
+        self.batches.inc();
+        self.batch_size_sum.add(batch_size as u64);
     }
 
     /// A request produced its first token `d` after being enqueued.
     pub fn record_ttft(&self, d: Duration) {
-        self.inner.lock().unwrap().ttft.record(d);
+        self.ttft.record(d);
     }
 
     /// A request retired: `tokens` generated, end-to-end latency `e2e`,
@@ -188,21 +121,56 @@ impl Metrics {
         tpot: Option<Duration>,
         cancelled: bool,
     ) {
-        let mut m = self.inner.lock().unwrap();
-        m.requests += 1;
-        m.tokens_generated += tokens as u64;
+        self.requests.inc();
+        self.tokens_generated.add(tokens as u64);
         if cancelled {
-            m.cancelled += 1;
+            self.cancelled.inc();
             return;
         }
-        m.e2e_latency.record(e2e);
+        self.e2e_latency.record(e2e);
         if let Some(t) = tpot {
-            m.tpot.record(t);
+            self.tpot.record(t);
         }
     }
 
     pub fn snapshot(&self) -> MetricsInner {
-        self.inner.lock().unwrap().clone()
+        MetricsInner {
+            requests: self.requests.get(),
+            cancelled: self.cancelled.get(),
+            tokens_generated: self.tokens_generated.get(),
+            batches: self.batches.get(),
+            batch_size_sum: self.batch_size_sum.get(),
+            queue_depth: self.queue_depth.get(),
+            queue_depth_peak: self.queue_depth_peak.get(),
+            queue_latency: self.queue_latency.clone(),
+            e2e_latency: self.e2e_latency.clone(),
+            ttft: self.ttft.clone(),
+            tpot: self.tpot.clone(),
+        }
+    }
+
+    /// The serving section of the metrics snapshot
+    /// (`obs::MetricsSnapshot::with_serving`).
+    pub fn snapshot_json(&self) -> Json {
+        let m = self.snapshot();
+        let mean_batch = if m.batches > 0 {
+            m.batch_size_sum as f64 / m.batches as f64
+        } else {
+            0.0
+        };
+        obj(vec![
+            ("requests", Json::from(m.requests as usize)),
+            ("cancelled", Json::from(m.cancelled as usize)),
+            ("tokens_generated", Json::from(m.tokens_generated as usize)),
+            ("steps", Json::from(m.batches as usize)),
+            ("mean_step_width", Json::from(mean_batch)),
+            ("queue_depth", Json::from(m.queue_depth as usize)),
+            ("queue_depth_peak", Json::from(m.queue_depth_peak as usize)),
+            ("queue_latency", m.queue_latency.to_json()),
+            ("e2e_latency", m.e2e_latency.to_json()),
+            ("ttft", m.ttft.to_json()),
+            ("tpot", m.tpot.to_json()),
+        ])
     }
 
     pub fn report(&self) -> String {
@@ -237,59 +205,10 @@ impl Metrics {
 
 #[cfg(test)]
 mod tests {
+    // The Histogram unit tests (percentile ordering, log-linear error
+    // bound, bucket-index/upper consistency) moved with the type to
+    // `obs::tests`; what stays here covers the serving aggregation.
     use super::*;
-
-    #[test]
-    fn histogram_percentiles_ordered() {
-        let mut h = Histogram::default();
-        for us in [10u64, 20, 40, 80, 160, 320, 640, 1280, 2560, 100_000] {
-            h.record(Duration::from_micros(us));
-        }
-        assert_eq!(h.count(), 10);
-        assert!(h.percentile(50.0) <= h.percentile(95.0));
-        assert!(h.percentile(95.0) <= h.percentile(99.0));
-        assert!(h.percentile(99.0) <= h.max());
-        assert!(h.mean() > Duration::from_micros(100));
-    }
-
-    #[test]
-    fn log_linear_buckets_bound_percentile_error() {
-        // Uniform 1..=1000 µs: the sub-bucketed table must place p50
-        // within 25 % of the true median (plain pow-2 buckets give
-        // 512→1024, i.e. up to ~100 % off).
-        let mut h = Histogram::default();
-        for us in 1..=1000u64 {
-            h.record(Duration::from_micros(us));
-        }
-        let p50 = h.percentile(50.0).as_micros() as f64;
-        assert!(
-            (400.0..=640.0).contains(&p50),
-            "p50 {p50}µs too far from true median 500µs"
-        );
-        let p99 = h.percentile(99.0).as_micros() as f64;
-        assert!((940.0..=1000.0).contains(&p99), "p99 {p99}µs off");
-    }
-
-    #[test]
-    fn bucket_index_and_upper_are_consistent() {
-        for us in [1u64, 2, 3, 5, 9, 100, 1023, 1024, 1025, 1 << 20, u64::MAX] {
-            let idx = bucket_index(us);
-            assert!(
-                bucket_upper_us(idx) >= us.clamp(1, 1 << 60),
-                "upper({idx}) < {us}"
-            );
-            if idx > 0 {
-                assert!(bucket_upper_us(idx - 1) <= bucket_upper_us(idx));
-            }
-        }
-        // Monotone: larger values never land in earlier buckets.
-        let mut prev = 0usize;
-        for us in 1..4096u64 {
-            let idx = bucket_index(us);
-            assert!(idx >= prev, "bucket order broke at {us}µs");
-            prev = idx;
-        }
-    }
 
     #[test]
     fn metrics_aggregate() {
@@ -351,5 +270,24 @@ mod tests {
         assert_eq!(s.e2e_latency.mean(), Duration::ZERO);
         assert_eq!(s.ttft.percentile(99.0), Duration::ZERO);
         assert!(!m.report().is_empty());
+    }
+
+    #[test]
+    fn snapshot_json_mirrors_report() {
+        let m = Metrics::new();
+        m.record_batch(3);
+        m.record_enqueued();
+        m.record_admitted(Duration::from_micros(40));
+        m.record_ttft(Duration::from_micros(200));
+        m.record_request(5, Duration::from_millis(2), Some(Duration::from_micros(90)), false);
+        let j = m.snapshot_json();
+        assert_eq!(j.get("requests").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("tokens_generated").unwrap().as_usize(), Some(5));
+        assert_eq!(j.get("steps").unwrap().as_usize(), Some(1));
+        assert_eq!(
+            j.get("ttft").unwrap().get("count").unwrap().as_usize(),
+            Some(1)
+        );
+        assert!(j.get("e2e_latency").unwrap().get("p99_us").unwrap().as_usize().unwrap() > 0);
     }
 }

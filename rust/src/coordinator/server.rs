@@ -36,6 +36,7 @@ use super::request::{
 };
 use crate::nn::gpt::{argmax, TinyLM};
 use crate::nn::kvcache::KvPool;
+use crate::obs::trace;
 use crate::tensor::Matrix;
 use crate::util::arena::ScratchArena;
 use anyhow::{bail, Result};
@@ -137,6 +138,7 @@ impl Coordinator {
         }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = channel();
+        trace::serve_point("enqueue", id);
         // Count the enqueue before sending: the worker may admit (and
         // decrement the gauge) the instant the request lands.
         self.metrics.record_enqueued();
@@ -224,6 +226,7 @@ fn admit(
 ) -> ActiveSeq {
     let queue_time = req.enqueued_at.elapsed();
     metrics.record_admitted(queue_time);
+    trace::serve_point("admit", req.id);
     let slot = pool.alloc().expect("admission is capped by pool.free_count()");
     let admitted_at = Instant::now();
     // Ingest the WHOLE prompt, exactly like `TinyLM::generate`'s
@@ -233,6 +236,7 @@ fn admit(
     // over-long prompts yield the same single token as direct
     // generation.
     let logits = model.prefill_slot(&req.prompt, pool, slot);
+    trace::serve_point("prefill", req.id);
     // The prompt buffer becomes the sequence's token list (nothing
     // reads req.prompt after prefill) — no second copy per slot.
     let tokens = std::mem::take(&mut req.prompt);
@@ -250,9 +254,12 @@ fn admit(
     }
 }
 
-/// Retire a sequence: free its slot, record metrics, send `Done`.
+/// Retire a sequence: free its slot, record metrics, send `Done`; under
+/// `BLAST_TRACE=serve` also dump the request's lifecycle timeline.
 fn retire(seq: ActiveSeq, pool: &mut KvPool, metrics: &Metrics) {
+    let id = seq.req.id;
     pool.release(seq.slot);
+    trace::serve_point("retire", id);
     let compute_time = seq.admitted_at.elapsed();
     let ttft = seq.ttft;
     let tpot = seq.first_token_at.and_then(|t| {
@@ -275,6 +282,13 @@ fn retire(seq: ActiveSeq, pool: &mut KvPool, metrics: &Metrics) {
             ttft,
         }));
         // `req` (and its sender) drops here, closing the client stream.
+    }
+    // Timeline dump on Done: the format/println cost only exists when
+    // the operator asked for it.
+    if trace::enabled(trace::TraceMode::Serve) {
+        if let Some(line) = trace::format_timeline(id) {
+            println!("{line}");
+        }
     }
 }
 
@@ -374,6 +388,7 @@ fn worker_loop(
                 // reached the client — a request cancelled before
                 // delivery must not contribute a latency sample.
                 metrics.record_ttft(seq.ttft.expect("set above"));
+                trace::serve_point("first_token", seq.req.id);
             }
             let pos = seq.tokens.len() - 1;
             let done = seq.cancelled

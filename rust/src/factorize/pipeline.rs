@@ -262,6 +262,7 @@ impl CompressionPipeline {
         let slots: Vec<Mutex<Option<LayerOutcome>>> =
             (0..total).map(|_| Mutex::new(None)).collect();
         let cursor = AtomicUsize::new(0);
+        let done = AtomicUsize::new(outcomes.iter().filter(|o| o.is_some()).count());
         let worker_err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
         std::thread::scope(|scope| {
             for _ in 0..jobs {
@@ -272,6 +273,19 @@ impl CompressionPipeline {
                     let dense = views[task_idx].1.dense_weight();
                     let outcome = self.compress_one(task, &dense, grid_parallel);
                     drop(dense);
+                    // Per-layer observability: duration histogram,
+                    // last-layer Eq.-4 loss, and the progress heartbeat
+                    // (stderr, so piped report output stays clean).
+                    let reg = crate::obs::registry();
+                    reg.counter("factorize_layers_done").inc();
+                    reg.gauge_f64("factorize_last_rel_error").set(outcome.rel_error);
+                    reg.histogram("factorize_layer_seconds")
+                        .record_us((outcome.seconds * 1e6) as u64);
+                    let k = done.fetch_add(1, Ordering::Relaxed) + 1;
+                    eprintln!(
+                        "[compress] layer {k}/{total} {} -> {} rel_err={:.4} in {:.1}s",
+                        task.name, outcome.structure, outcome.rel_error, outcome.seconds
+                    );
                     if let Some(c) = &ckpt {
                         if let Err(e) = c.record(task, &outcome) {
                             *worker_err.lock().unwrap() = Some(e);
@@ -332,6 +346,13 @@ impl CompressionPipeline {
             params_after: model.num_params(),
             completed,
         };
+        // Final Eq.-4 loss over the whole run, as a gauge the snapshot
+        // surfaces next to the per-layer histogram.
+        if !report.layers.is_empty() {
+            let mean = report.layers.iter().map(|l| l.rel_error).sum::<f64>()
+                / report.layers.len() as f64;
+            crate::obs::registry().gauge_f64("factorize_mean_rel_error").set(mean);
+        }
         if completed {
             if let Some(c) = &ckpt {
                 std::fs::write(
@@ -402,6 +423,9 @@ impl CompressionPipeline {
         };
         let mut best: Option<(Structure, CompressedWeight, f64)> = None;
         for s in self.opts.policy.candidates() {
+            // One sweep = one candidate factorization attempt (Auto
+            // tries four per layer, Fixed one).
+            crate::obs::registry().counter("factorize_sweeps").inc();
             if let Some(w) = comp.compress(dense, s, self.opts.ratio) {
                 let err = w.rel_error(dense);
                 let better = match &best {

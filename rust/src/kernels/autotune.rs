@@ -91,7 +91,11 @@ impl Autotuner {
     pub fn lookup(&self, key: &PlanKey, kernels: &[Box<dyn MatmulKernel>]) -> Option<usize> {
         let plans = self.plans.read().unwrap();
         let name = plans.get(key)?;
-        kernels.iter().position(|k| k.name() == name.as_str())
+        let idx = kernels.iter().position(|k| k.name() == name.as_str())?;
+        // Cached handle → the table hit is one relaxed fetch_add (this
+        // sits on every engine dispatch, including batch-1 decode).
+        crate::obs::well_known::autotune_table_hits().inc();
+        Some(idx)
     }
 
     /// The cached kernel name for `key` (diagnostics / benches).
@@ -124,6 +128,13 @@ impl Autotuner {
             }
         }
         let (_, idx) = best.expect("no kernel supports this op (naive must)");
+        // Tuning is rare (once per key per process) and already times
+        // kernel runs, so the labelled bump's allocation is fine here.
+        crate::obs::well_known::autotune_tune_events().inc();
+        crate::obs::registry().bump_labeled(
+            "autotune_selected",
+            &format!("{}|{}", key.op.to_tag_string(), kernels[idx].name()),
+        );
         {
             let mut plans = self.plans.write().unwrap();
             plans.insert(*key, kernels[idx].name().to_string());

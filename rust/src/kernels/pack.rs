@@ -31,6 +31,7 @@
 //! test).
 
 use super::micro::{LANES, NR};
+use crate::obs::{Counter, Gauge};
 use crate::tensor::Matrix;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -144,11 +145,32 @@ struct PackInner {
     bytes: usize,
 }
 
+/// Per-cache observability counters (all relaxed atomics; the hit-path
+/// increment adds one `fetch_add` inside the read-critical section and
+/// nothing else). Surfaced process-wide through
+/// `obs::MetricsSnapshot::collect`, which reads [`pack_cache()`]'s
+/// instance.
+#[derive(Debug, Default)]
+pub struct PackStats {
+    /// Lookups served from cache (fingerprint validated).
+    pub hits: Counter,
+    /// Lookups that packed fresh panels (cold, evicted, or mutated).
+    pub misses: Counter,
+    /// Entries removed by the LRU byte-budget sweep.
+    pub evictions: Counter,
+    /// Hits rejected because the content fingerprint changed (in-place
+    /// weight mutation detected); each also counts as a miss.
+    pub fingerprint_mismatches: Counter,
+    /// High-water mark of resident packed bytes.
+    pub bytes_high_water: Gauge,
+}
+
 /// Process-wide packed-weight cache (see the module docs).
 pub struct PackCache {
     entries: RwLock<PackInner>,
     capacity_bytes: usize,
     tick: AtomicU64,
+    stats: PackStats,
 }
 
 impl PackCache {
@@ -172,7 +194,13 @@ impl PackCache {
             entries: RwLock::new(PackInner::default()),
             capacity_bytes: capacity_bytes.max(1),
             tick: AtomicU64::new(1),
+            stats: PackStats::default(),
         }
+    }
+
+    /// This cache's observability counters.
+    pub fn stats(&self) -> &PackStats {
+        &self.stats
     }
 
     /// Packed rows of `w`, from cache when the fingerprint still matches.
@@ -198,10 +226,13 @@ impl PackCache {
             if let Some(e) = inner.map.get(&key) {
                 if e.fingerprint == fp {
                     e.last_used.store(self.tick.fetch_add(1, Ordering::Relaxed), Ordering::Relaxed);
+                    self.stats.hits.inc();
                     return Arc::clone(&e.panels);
                 }
+                self.stats.fingerprint_mismatches.inc();
             }
         }
+        self.stats.misses.inc();
         let panels = Arc::new(if cols_packed {
             PackedPanels::pack_cols(w)
         } else {
@@ -223,6 +254,7 @@ impl PackCache {
             },
         );
         inner.bytes += bytes;
+        self.stats.bytes_high_water.set_max(inner.bytes as u64);
         // LRU eviction down to the byte budget. The entry just inserted
         // carries the freshest tick, so it survives unless it alone
         // exceeds the budget — in which case it is still returned to the
@@ -238,6 +270,7 @@ impl PackCache {
             };
             if let Some(e) = inner.map.remove(&victim) {
                 inner.bytes -= e.bytes;
+                self.stats.evictions.inc();
             }
         }
         panels
@@ -426,6 +459,54 @@ mod tests {
         let pa3 = cache.rows(&a);
         assert!(Arc::ptr_eq(&pa, &pa3), "recently-used entry must survive eviction");
         assert!(cache.bytes() <= cache.capacity_bytes());
+    }
+
+    #[test]
+    fn stats_counters_match_eviction_parity_scenario() {
+        // Mirror of `lru_eviction_stays_within_budget_and_preserves_parity`
+        // on a fresh instance, asserting the observability counters:
+        // a two-weight budget fed five 8x8 weights (256 packed bytes
+        // each) — five cold misses, three evictions, no hits.
+        let cache = PackCache::with_capacity_bytes(600);
+        let mut rng = Rng::new(878);
+        let ws: Vec<crate::tensor::Matrix> =
+            (0..5).map(|_| rng.gaussian_matrix(8, 8, 1.0)).collect();
+        for w in &ws {
+            let _ = cache.rows(w);
+        }
+        let s = cache.stats();
+        assert_eq!(s.misses.get(), 5, "five cold inserts");
+        assert_eq!(s.hits.get(), 0);
+        assert_eq!(s.fingerprint_mismatches.get(), 0);
+        // Every insert beyond the two that fit evicted exactly one LRU
+        // entry; in general evictions == inserts − resident entries.
+        assert_eq!(s.evictions.get(), 5 - cache.len() as u64);
+        // High-water saw the transient over-budget state right after an
+        // insert, before the LRU sweep brought it back down.
+        assert!(s.bytes_high_water.get() as usize > cache.capacity_bytes());
+        assert!(cache.bytes() <= cache.capacity_bytes());
+
+        // The most recent weight survived: a hit, no new packing.
+        let _ = cache.rows(&ws[4]);
+        assert_eq!(cache.stats().hits.get(), 1);
+        assert_eq!(cache.stats().misses.get(), 5);
+
+        // An evicted weight repacks: a miss (plus one more eviction to
+        // make room), never a fingerprint mismatch.
+        let _ = cache.rows(&ws[0]);
+        let s = cache.stats();
+        assert_eq!(s.misses.get(), 6);
+        assert_eq!(s.evictions.get(), 6 - cache.len() as u64);
+        assert_eq!(s.fingerprint_mismatches.get(), 0);
+
+        // In-place mutation: detected as a mismatch AND counted a miss.
+        let mut w = rng.gaussian_matrix(8, 8, 1.0);
+        let _ = cache.rows(&w);
+        w.set(0, 0, w.at(0, 0) + 1.0);
+        let _ = cache.rows(&w);
+        let s = cache.stats();
+        assert_eq!(s.fingerprint_mismatches.get(), 1);
+        assert_eq!(s.misses.get(), 8, "mutation repack counts as a miss");
     }
 
     #[test]

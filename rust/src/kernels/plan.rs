@@ -930,6 +930,18 @@ impl PlanKernel {
         if batch == 0 {
             return;
         }
+        // Executor profile: count every call; time (and accumulate the
+        // executed FLOPs of) one call in every `BLAST_PROF_SAMPLE` so
+        // the snapshot can derive GFLOP/s per plan signature. The
+        // profile entry is interned on the first call per signature
+        // (model warmup), so on the steady-state decode path this is a
+        // read-locked hash probe plus relaxed counter ops — no
+        // allocation, honoring the zero-alloc decode contract.
+        let prof = crate::obs::plan_profile(plan.sig);
+        prof.calls.inc();
+        let every = crate::obs::prof_sample_every();
+        let t0 = (every > 0 && prof.calls.get() % every == 0).then(std::time::Instant::now);
+        crate::obs::trace::all_enter(self.name(), 0);
         let mode = micro::simd_mode();
         if self.row_parallel && batch > 1 {
             let chunk_rows = batch.div_ceil(par::num_threads()).max(1);
@@ -939,6 +951,12 @@ impl PlanKernel {
             });
         } else {
             execute_packed(mode, x, plan, ops, 0, batch, out);
+        }
+        crate::obs::trace::all_exit(self.name(), 0);
+        if let Some(t0) = t0 {
+            prof.sampled.inc();
+            prof.wall_ns.add(t0.elapsed().as_nanos().min(u128::from(u64::MAX)) as u64);
+            prof.flops.add((plan.flops_per_row() * batch) as u64);
         }
     }
 }

@@ -23,8 +23,11 @@
 //!   responses, and iteration-level continuous batching over a slotted
 //!   KV pool.
 //! * [`experiments`] — one harness per paper table/figure.
+//! * [`obs`] — crate-wide observability: metrics registry, plan-stage
+//!   profiler, request tracer, and the snapshot/exposition surfaces.
 
 pub mod util;
+pub mod obs;
 pub mod tensor;
 pub mod linalg;
 pub mod kernels;

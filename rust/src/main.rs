@@ -9,6 +9,8 @@
 //!                    `.bmx` checkpoint the pipeline can consume)
 //!   serve            start the coordinator and run a request load
 //!                    (--model serves a compressed checkpoint)
+//!   stats            short self-drive, then pretty-print the metrics
+//!                    snapshot (pack cache, plan GFLOP/s, serving)
 //!   generate         one-off generation through a trained model
 //!   experiment <id>  run a paper table/figure harness (or `all`)
 //!   bench-runtime    Table-4 matvec sweep at Llama shapes
@@ -33,7 +35,7 @@ fn main() {
 }
 
 fn usage() -> &'static str {
-    "usage: blast <factorize|compress|train|serve|generate|experiment|bench-runtime|info> [flags]\n\
+    "usage: blast <factorize|compress|train|serve|stats|generate|experiment|bench-runtime|info> [flags]\n\
      flags are --name value; examples:\n\
        blast experiment fig3 --scale 1\n\
        blast experiment all --scale 0\n\
@@ -42,6 +44,7 @@ fn usage() -> &'static str {
                       --ckpt-dir compress_ckpt --jobs 0   # resumes from ckpt-dir\n\
        blast compress --ratio 0.5 --structure auto        # trains a demo model first\n\
        blast serve --model blast.bmx --requests 32 --slots 8\n\
+       blast stats --model blast.bmx --requests 12        # metrics snapshot\n\
        blast generate --model blast.bmx --tokens 20\n\
        blast bench-runtime --reps 5"
 }
@@ -73,6 +76,7 @@ fn run() -> Result<()> {
         "compress" => cmd_compress(&args),
         "train" => cmd_train(&args),
         "serve" => cmd_serve(&args),
+        "stats" => cmd_stats(&args),
         "generate" => cmd_generate(&args),
         "experiment" => {
             let id = args
@@ -319,6 +323,67 @@ fn cmd_serve(args: &Args) -> Result<()> {
         tokens as f64 / dt.as_secs_f64()
     );
     println!("metrics: {}", coord.metrics.report());
+    // Observability surfaces: the Prometheus-style exposition next to
+    // the classic report, and the JSON snapshot to BLAST_METRICS_OUT
+    // when the operator set it.
+    let snap = blast_repro::obs::MetricsSnapshot::collect()
+        .with_serving(coord.metrics.snapshot_json());
+    println!("--- metrics exposition ---\n{}", snap.to_prometheus());
+    if let Some(path) = snap.write_env_out()? {
+        println!("metrics snapshot written to {path}");
+    }
+    coord.shutdown();
+    Ok(())
+}
+
+/// `blast stats`: drive a short synthetic load through the coordinator,
+/// then pretty-print the full metrics snapshot (pack-cache hit/miss,
+/// per-signature plan GFLOP/s, KV occupancy, serving latencies) and the
+/// text exposition. Honors `BLAST_METRICS_OUT` like `serve` does.
+fn cmd_stats(args: &Args) -> Result<()> {
+    let n_requests = args.get_usize("requests", 12)?;
+    let slots = args.get_usize("slots", 4)?;
+    let new_tokens = args.get_usize("tokens", 8)?;
+    let models = if let Some(path) = args.get("model") {
+        let lm = TinyLM::load(path)?;
+        println!(
+            "loaded {} ({} params, structure {})",
+            path,
+            lm.num_params(),
+            lm.cfg.structure.name()
+        );
+        vec![("model".to_string(), lm)]
+    } else {
+        let mut rng = Rng::new(args.get_u64("seed", 0)?);
+        vec![(
+            "blast".to_string(),
+            TinyLM::new(LmConfig::tiny(StructureKind::Blast { b: 4, r: 8 }), &mut rng),
+        )]
+    };
+    let vocab = models[0].1.cfg.vocab;
+    let coord = Coordinator::new(
+        models,
+        CoordinatorConfig { batcher: Default::default(), slots },
+    );
+    let variants = coord.variants();
+    println!("self-drive: {n_requests} requests x {new_tokens} tokens...");
+    let mut handles = Vec::new();
+    for i in 0..n_requests {
+        let variant = &variants[i % variants.len()];
+        let prompt = vec![1 + i % vocab.saturating_sub(2).max(1), 2, 3];
+        let (_, rx) = coord.submit(variant, prompt, new_tokens)?;
+        handles.push(rx);
+    }
+    for rx in handles {
+        let _ = rx.recv()?;
+    }
+    let snap = blast_repro::obs::MetricsSnapshot::collect()
+        .with_serving(coord.metrics.snapshot_json());
+    println!("{}", snap.to_pretty());
+    println!("--- metrics exposition ---\n{}", snap.to_prometheus());
+    if let Some(path) = snap.write_env_out()? {
+        println!("metrics snapshot written to {path}");
+    }
     coord.shutdown();
     Ok(())
 }

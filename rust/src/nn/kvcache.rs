@@ -124,6 +124,10 @@ impl KvPool {
     /// Pool with `slots` sequence slots, each pre-sized for `capacity`
     /// positions of `width` features across `n_layers` layers.
     pub fn new(n_layers: usize, slots: usize, capacity: usize, width: usize) -> Self {
+        // High-water semantics for the process-wide gauge: pools are
+        // `Clone` and have no drop hook, so "largest pool constructed"
+        // is the honest global statement.
+        crate::obs::well_known::kv_slots_total().set_max(slots as u64);
         KvPool {
             layers: (0..n_layers)
                 .map(|_| (0..slots).map(|_| LayerKv::with_capacity(capacity, width)).collect())
@@ -158,6 +162,10 @@ impl KvPool {
             layer[slot].clear();
         }
         self.in_use[slot] = true;
+        // Admission accounting: counter + occupancy gauge (relaxed
+        // atomics; alloc happens once per request, not per token).
+        crate::obs::well_known::kv_admitted().inc();
+        crate::obs::well_known::kv_slots_active().add(1);
         Some(slot)
     }
 
@@ -166,6 +174,8 @@ impl KvPool {
         assert!(self.in_use[slot], "release of slot {slot} that is not in use");
         self.in_use[slot] = false;
         self.free.push(slot);
+        crate::obs::well_known::kv_retired().inc();
+        crate::obs::well_known::kv_slots_active().sub(1);
     }
 
     /// Sequence length currently stored in `slot`.

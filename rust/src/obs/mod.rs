@@ -1,0 +1,873 @@
+//! Crate-wide observability: metrics registry, plan-stage profiler, and
+//! request tracing.
+//!
+//! The paper's claims are throughput claims, so every perf-relevant
+//! subsystem reports through this module instead of keeping private
+//! ad-hoc counters:
+//!
+//! * **Primitives** — [`Counter`], [`Gauge`], [`GaugeF64`] are relaxed
+//!   atomics (one `fetch_add`/`fetch_max` on the hot path, no locks, no
+//!   allocation), and [`Histogram`] is the serving stack's log-linear
+//!   latency histogram, moved here from `coordinator::metrics` and made
+//!   lock-free: a **fixed** 244-slot atomic bucket table (61 power-of-two
+//!   octaves × 4 linear sub-buckets), so `record` never resizes and the
+//!   zero-allocation decode contract of `tests/decode_alloc.rs` holds
+//!   with metrics enabled.
+//! * **Registry** — [`registry()`] interns named metrics process-wide.
+//!   Call sites cache the returned `&'static` handle in a `OnceLock` so
+//!   the steady state is a single relaxed atomic op; the snapshot and
+//!   exposition surfaces enumerate everything ever registered.
+//! * **Plan profiler** — [`plan_profile`] keeps per-[`PlanSig`] call
+//!   counts and (sampled every `BLAST_PROF_SAMPLE` calls, default
+//!   [`DEFAULT_PROF_SAMPLE`]; `0` disables) wall time plus executed
+//!   FLOPs, from which the snapshot derives GFLOP/s per plan signature.
+//! * **Tracer** — [`trace`] is a fixed-capacity ring of timestamped
+//!   events gated by `BLAST_TRACE=off|serve|all` (see its docs).
+//! * **Export** — [`MetricsSnapshot::collect`] gathers every subsystem
+//!   into one `util::json` tree ([`MetricsSnapshot::to_json`]); the same
+//!   tree renders as a Prometheus-style text exposition
+//!   ([`MetricsSnapshot::to_prometheus`]) and is written to
+//!   `BLAST_METRICS_OUT` when that is set
+//!   ([`MetricsSnapshot::write_env_out`]).
+//!
+//! Everything here is dependency-free (std only), like the rest of the
+//! crate.
+
+pub mod trace;
+
+use crate::kernels::PlanSig;
+use crate::util::json::{obj, Json};
+use std::collections::BTreeMap;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{OnceLock, RwLock};
+use std::time::Duration;
+
+// ----------------------------------------------------------------------
+// Primitives
+// ----------------------------------------------------------------------
+
+/// Monotone event counter (relaxed atomic).
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub const fn new() -> Self {
+        Counter(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Up/down instantaneous value (relaxed atomic, saturating decrement).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub const fn new() -> Self {
+        Gauge(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Saturating decrement: gauges are advisory and race their
+    /// counterpart increments by design, so never underflow.
+    #[inline]
+    pub fn sub(&self, n: u64) {
+        let _ = self
+            .0
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| Some(v.saturating_sub(n)));
+    }
+
+    /// High-water update: keep the maximum ever seen.
+    #[inline]
+    pub fn set_max(&self, v: u64) {
+        self.0.fetch_max(v, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// An `f64`-valued gauge (bit-stored in an atomic, last write wins) for
+/// quantities like the pipeline's final Eq.-4 relative error.
+#[derive(Debug, Default)]
+pub struct GaugeF64(AtomicU64);
+
+impl GaugeF64 {
+    pub const fn new() -> Self {
+        GaugeF64(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+// ----------------------------------------------------------------------
+// Log-linear histogram (moved here from coordinator::metrics)
+// ----------------------------------------------------------------------
+
+/// Linear sub-buckets per power-of-two octave.
+const SUB_BUCKETS: u64 = 4;
+
+/// Octaves covered by the fixed table. [`bucket_index`] clamps values to
+/// `1 << 60` µs (~36 000 years), so octave 60 is the last one reachable.
+const OCTAVES: usize = 61;
+
+/// Fixed bucket-table size: no `record` can ever index past it, so the
+/// table never grows — a `record` is pure relaxed atomics.
+const NUM_BUCKETS: usize = OCTAVES * SUB_BUCKETS as usize;
+
+/// Bucket index for a microsecond value.
+fn bucket_index(us: u64) -> usize {
+    // Clamp so the sub-bucket arithmetic cannot overflow (2^60 µs is
+    // ~36 000 years; nothing real lands there).
+    let us = us.clamp(1, 1 << 60);
+    let oct = 63 - u64::from(us.leading_zeros());
+    let base = 1u64 << oct;
+    let sub = ((us - base) * SUB_BUCKETS) >> oct;
+    (oct * SUB_BUCKETS + sub) as usize
+}
+
+/// Inclusive upper bound (µs) of bucket `idx`.
+///
+/// Total over all of `usize`: indices past the table clamp to the last
+/// real bucket. The unclamped arithmetic would overflow u64 from octave
+/// 62 (`(sub + 1) * base`) and hit an overflowing shift from octave 64
+/// (`1u64 << oct`); after the clamp, octave ≤ 60 keeps every
+/// intermediate ≤ 2^62.
+fn bucket_upper_us(idx: usize) -> u64 {
+    let idx = idx.min(NUM_BUCKETS - 1) as u64;
+    let oct = idx / SUB_BUCKETS;
+    let sub = idx % SUB_BUCKETS;
+    let base = 1u64 << oct;
+    base + ((sub + 1) * base) / SUB_BUCKETS
+}
+
+/// Log-linear latency histogram (microseconds): each power-of-two
+/// octave splits into [`SUB_BUCKETS`] linear sub-buckets, so percentile
+/// reads are bounded to ~25 % relative error (vs. ~100 % for plain
+/// power-of-two buckets) while the table stays fixed-size — no samples
+/// retained, no dependencies, and (since the move into `obs`) no locks:
+/// buckets are relaxed atomics, so concurrent recorders never contend
+/// and a reader sees an approximate-but-safe view.
+pub struct Histogram {
+    buckets: [AtomicU64; NUM_BUCKETS],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            buckets: [const { AtomicU64::new(0) }; NUM_BUCKETS],
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record(&self, d: Duration) {
+        let us = d.as_micros().min(u128::from(u64::MAX)) as u64;
+        self.record_us(us);
+    }
+
+    /// Record a raw microsecond value (registry histograms that are not
+    /// fed from `Duration`s use this directly).
+    pub fn record_us(&self, us: u64) {
+        let idx = bucket_index(us);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> Duration {
+        let count = self.count();
+        if count == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_micros(self.sum_us.load(Ordering::Relaxed) / count)
+    }
+
+    pub fn max(&self) -> Duration {
+        Duration::from_micros(self.max_us.load(Ordering::Relaxed))
+    }
+
+    /// Upper bound of the bucket containing the p-th percentile
+    /// (capped at the observed max).
+    pub fn percentile(&self, p: f64) -> Duration {
+        let count = self.count();
+        if count == 0 {
+            return Duration::ZERO;
+        }
+        let target = (((count as f64) * p / 100.0).ceil() as u64).max(1);
+        let max_us = self.max_us.load(Ordering::Relaxed);
+        let mut seen = 0u64;
+        for (i, c) in self.buckets.iter().enumerate() {
+            seen += c.load(Ordering::Relaxed);
+            if seen >= target {
+                return Duration::from_micros(bucket_upper_us(i).min(max_us));
+            }
+        }
+        self.max()
+    }
+
+    /// The (p50, p95, p99) triple every snapshot consumer wants.
+    pub fn percentiles(&self) -> (Duration, Duration, Duration) {
+        (self.percentile(50.0), self.percentile(95.0), self.percentile(99.0))
+    }
+
+    /// JSON summary (count + mean/percentile/max in µs).
+    pub fn to_json(&self) -> Json {
+        let (p50, p95, p99) = self.percentiles();
+        obj(vec![
+            ("count", Json::from(self.count() as usize)),
+            ("mean_us", Json::from(self.mean().as_micros() as usize)),
+            ("p50_us", Json::from(p50.as_micros() as usize)),
+            ("p95_us", Json::from(p95.as_micros() as usize)),
+            ("p99_us", Json::from(p99.as_micros() as usize)),
+            ("max_us", Json::from(self.max().as_micros() as usize)),
+        ])
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clone for Histogram {
+    fn clone(&self) -> Self {
+        let h = Histogram::new();
+        for (dst, src) in h.buckets.iter().zip(&self.buckets) {
+            dst.store(src.load(Ordering::Relaxed), Ordering::Relaxed);
+        }
+        h.count.store(self.count(), Ordering::Relaxed);
+        h.sum_us.store(self.sum_us.load(Ordering::Relaxed), Ordering::Relaxed);
+        h.max_us.store(self.max_us.load(Ordering::Relaxed), Ordering::Relaxed);
+        h
+    }
+}
+
+impl std::fmt::Debug for Histogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Histogram")
+            .field("count", &self.count())
+            .field("mean", &self.mean())
+            .field("max", &self.max())
+            .finish()
+    }
+}
+
+// ----------------------------------------------------------------------
+// Registry
+// ----------------------------------------------------------------------
+
+/// Process-wide named-metric registry. Metrics are interned on first
+/// request and live for the process (`Box::leak`: the set of metric
+/// names is small and fixed, so the leak is bounded); enumeration is
+/// sorted, so the exposition output is deterministic.
+#[derive(Default)]
+pub struct Registry {
+    counters: RwLock<BTreeMap<&'static str, &'static Counter>>,
+    gauges: RwLock<BTreeMap<&'static str, &'static Gauge>>,
+    gauges_f64: RwLock<BTreeMap<&'static str, &'static GaugeF64>>,
+    histograms: RwLock<BTreeMap<&'static str, &'static Histogram>>,
+    /// `(family, label) → count` for low-rate labelled counters (e.g.
+    /// chosen-kernel counts per plan signature). Bumping takes the write
+    /// lock and may allocate the label, so hot paths must not use it —
+    /// tuning events and the like are fine.
+    labeled: RwLock<BTreeMap<(&'static str, String), u64>>,
+}
+
+macro_rules! intern {
+    ($map:expr, $name:expr, $ty:ty) => {{
+        // Copy the `&'static` out of the guarded map (`*`): the returned
+        // handle must not borrow from the lock guard.
+        if let Some(m) = $map.read().unwrap().get($name) {
+            return *m;
+        }
+        let mut w = $map.write().unwrap();
+        *w.entry($name).or_insert_with(|| &*Box::leak(Box::new(<$ty>::new())))
+    }};
+}
+
+impl Registry {
+    /// The counter named `name` (interned on first use). Hot paths
+    /// should cache the returned reference in a `OnceLock`.
+    pub fn counter(&self, name: &'static str) -> &'static Counter {
+        intern!(self.counters, name, Counter)
+    }
+
+    pub fn gauge(&self, name: &'static str) -> &'static Gauge {
+        intern!(self.gauges, name, Gauge)
+    }
+
+    pub fn gauge_f64(&self, name: &'static str) -> &'static GaugeF64 {
+        intern!(self.gauges_f64, name, GaugeF64)
+    }
+
+    pub fn histogram(&self, name: &'static str) -> &'static Histogram {
+        intern!(self.histograms, name, Histogram)
+    }
+
+    /// Bump a labelled counter (allocates; keep off hot paths).
+    pub fn bump_labeled(&self, family: &'static str, label: &str) {
+        let mut w = self.labeled.write().unwrap();
+        match w.get_mut(&(family, label.to_string())) {
+            Some(v) => *v += 1,
+            None => {
+                w.insert((family, label.to_string()), 1);
+            }
+        }
+    }
+
+    /// All labels of one family, as a JSON object.
+    pub fn labeled_json(&self, family: &'static str) -> Json {
+        let r = self.labeled.read().unwrap();
+        Json::Obj(
+            r.iter()
+                .filter(|((f, _), _)| *f == family)
+                .map(|((_, label), v)| (label.clone(), Json::from(*v as usize)))
+                .collect(),
+        )
+    }
+
+    fn counters_json(&self) -> Json {
+        let r = self.counters.read().unwrap();
+        Json::Obj(r.iter().map(|(k, c)| (k.to_string(), Json::from(c.get() as usize))).collect())
+    }
+
+    fn gauges_json(&self) -> Json {
+        let r = self.gauges.read().unwrap();
+        let mut map: std::collections::BTreeMap<String, Json> =
+            r.iter().map(|(k, g)| (k.to_string(), Json::from(g.get() as usize))).collect();
+        for (k, g) in self.gauges_f64.read().unwrap().iter() {
+            map.insert(k.to_string(), Json::from(g.get()));
+        }
+        Json::Obj(map)
+    }
+
+    fn histograms_json(&self) -> Json {
+        let r = self.histograms.read().unwrap();
+        Json::Obj(r.iter().map(|(k, h)| (k.to_string(), h.to_json())).collect())
+    }
+}
+
+/// The process-wide [`Registry`].
+pub fn registry() -> &'static Registry {
+    static REGISTRY: OnceLock<Registry> = OnceLock::new();
+    REGISTRY.get_or_init(Registry::default)
+}
+
+// ----------------------------------------------------------------------
+// Plan-stage profiler
+// ----------------------------------------------------------------------
+
+/// Default sampling period for the plan executor profile when
+/// `BLAST_PROF_SAMPLE` is unset: one timed call in every 32.
+pub const DEFAULT_PROF_SAMPLE: u64 = 32;
+
+/// Per-plan-signature execution profile. `calls` counts every executor
+/// invocation; the wall-time/FLOP pair accumulates only on sampled
+/// calls (every [`prof_sample_every`]-th), so the derived GFLOP/s is an
+/// unbiased estimate while the un-sampled decode path pays one relaxed
+/// `fetch_add` and one modulo.
+#[derive(Debug, Default)]
+pub struct PlanProf {
+    pub calls: Counter,
+    pub sampled: Counter,
+    pub wall_ns: Counter,
+    pub flops: Counter,
+}
+
+impl PlanProf {
+    /// Derived GFLOP/s over the sampled calls (0 until something was
+    /// sampled).
+    pub fn gflops(&self) -> f64 {
+        let ns = self.wall_ns.get();
+        if ns == 0 {
+            return 0.0;
+        }
+        self.flops.get() as f64 / ns as f64
+    }
+
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("calls", Json::from(self.calls.get() as usize)),
+            ("sampled", Json::from(self.sampled.get() as usize)),
+            ("wall_ns", Json::from(self.wall_ns.get() as usize)),
+            ("flops", Json::from(self.flops.get() as usize)),
+            ("gflops", Json::from(self.gflops())),
+        ])
+    }
+}
+
+fn plan_profiles() -> &'static RwLock<HashMap<PlanSig, &'static PlanProf>> {
+    static PROFILES: OnceLock<RwLock<HashMap<PlanSig, &'static PlanProf>>> = OnceLock::new();
+    PROFILES.get_or_init(|| RwLock::new(HashMap::new()))
+}
+
+/// The profile for one plan signature. The entry is created on the
+/// *first* call per signature (model warmup), so steady-state lookups
+/// are a read-lock + hash probe — no allocation on the decode path.
+pub fn plan_profile(sig: PlanSig) -> &'static PlanProf {
+    if let Some(p) = plan_profiles().read().unwrap().get(&sig) {
+        return *p;
+    }
+    let mut w = plan_profiles().write().unwrap();
+    *w.entry(sig).or_insert_with(|| &*Box::leak(Box::default()))
+}
+
+/// `BLAST_PROF_SAMPLE`: profile one plan-executor call in every N
+/// (default [`DEFAULT_PROF_SAMPLE`]; `0` disables sampling entirely).
+/// Parsed once.
+pub fn prof_sample_every() -> u64 {
+    static EVERY: OnceLock<u64> = OnceLock::new();
+    *EVERY.get_or_init(|| {
+        std::env::var("BLAST_PROF_SAMPLE")
+            .ok()
+            .and_then(|s| s.parse::<u64>().ok())
+            .unwrap_or(DEFAULT_PROF_SAMPLE)
+    })
+}
+
+fn plan_profile_json() -> Json {
+    let r = plan_profiles().read().unwrap();
+    let mut entries: Vec<(String, Json)> =
+        r.iter().map(|(sig, p)| (sig.to_tag_string(), p.to_json())).collect();
+    entries.sort_by(|a, b| a.0.cmp(&b.0));
+    Json::Obj(entries.into_iter().collect())
+}
+
+// ----------------------------------------------------------------------
+// Snapshot + export surfaces
+// ----------------------------------------------------------------------
+
+/// One JSON tree over every instrumented subsystem; the single source
+/// for the pretty snapshot, the Prometheus-style exposition, and the
+/// `BLAST_METRICS_OUT` file.
+pub struct MetricsSnapshot {
+    root: Json,
+}
+
+impl MetricsSnapshot {
+    /// Gather the process-wide sections: pack cache, autotuner, plan
+    /// profiles, registry counters/gauges/histograms, and tracer state.
+    /// The serving section is per-coordinator — attach it with
+    /// [`with_serving`].
+    ///
+    /// [`with_serving`]: MetricsSnapshot::with_serving
+    pub fn collect() -> Self {
+        let pc = crate::kernels::pack::pack_cache();
+        let ps = pc.stats();
+        let (hits, misses) = (ps.hits.get(), ps.misses.get());
+        let lookups = hits + misses;
+        let hit_rate = if lookups > 0 { hits as f64 / lookups as f64 } else { 0.0 };
+        let pack_cache = obj(vec![
+            ("hits", Json::from(hits as usize)),
+            ("misses", Json::from(misses as usize)),
+            ("evictions", Json::from(ps.evictions.get() as usize)),
+            ("fingerprint_mismatches", Json::from(ps.fingerprint_mismatches.get() as usize)),
+            ("entries", Json::from(pc.len())),
+            ("resident_bytes", Json::from(pc.bytes())),
+            ("resident_bytes_high_water", Json::from(ps.bytes_high_water.get() as usize)),
+            ("capacity_bytes", Json::from(pc.capacity_bytes())),
+            ("hit_rate", Json::from(hit_rate)),
+        ]);
+        let autotune = obj(vec![
+            ("tune_events", Json::from(well_known::autotune_tune_events().get() as usize)),
+            ("table_hits", Json::from(well_known::autotune_table_hits().get() as usize)),
+            ("selected", registry().labeled_json("autotune_selected")),
+        ]);
+        let root = obj(vec![
+            ("pack_cache", pack_cache),
+            ("autotune", autotune),
+            ("plan_profile", plan_profile_json()),
+            ("counters", registry().counters_json()),
+            ("gauges", registry().gauges_json()),
+            ("histograms", registry().histograms_json()),
+            ("trace", trace::stats_json()),
+        ]);
+        MetricsSnapshot { root }
+    }
+
+    /// Attach a coordinator's serving section (see
+    /// `coordinator::Metrics::snapshot_json`).
+    pub fn with_serving(mut self, serving: Json) -> Self {
+        self.insert("serving", serving);
+        self
+    }
+
+    /// Insert/replace a top-level section.
+    pub fn insert(&mut self, key: &str, v: Json) {
+        if let Json::Obj(map) = &mut self.root {
+            map.insert(key.to_string(), v);
+        }
+    }
+
+    pub fn to_json(&self) -> &Json {
+        &self.root
+    }
+
+    pub fn into_json(self) -> Json {
+        self.root
+    }
+
+    pub fn to_pretty(&self) -> String {
+        self.root.to_string_pretty()
+    }
+
+    /// Prometheus-style text exposition: one `blast_<path> <value>` line
+    /// per numeric leaf of the snapshot tree (bools as 0/1; strings and
+    /// arrays are skipped — they are diagnostics, not series).
+    pub fn to_prometheus(&self) -> String {
+        fn sanitize(s: &str) -> String {
+            let mut out = String::with_capacity(s.len());
+            let mut last_us = false;
+            for ch in s.chars() {
+                if ch.is_ascii_alphanumeric() {
+                    out.push(ch.to_ascii_lowercase());
+                    last_us = false;
+                } else if !last_us {
+                    out.push('_');
+                    last_us = true;
+                }
+            }
+            out.trim_matches('_').to_string()
+        }
+        fn walk(prefix: &str, j: &Json, out: &mut String) {
+            match j {
+                Json::Obj(map) => {
+                    for (k, v) in map {
+                        walk(&format!("{prefix}_{}", sanitize(k)), v, out);
+                    }
+                }
+                Json::Num(n) => {
+                    out.push_str(prefix);
+                    out.push(' ');
+                    if n.fract() == 0.0 && n.abs() < 1e15 {
+                        out.push_str(&format!("{}", *n as i64));
+                    } else {
+                        out.push_str(&format!("{n}"));
+                    }
+                    out.push('\n');
+                }
+                Json::Bool(b) => {
+                    out.push_str(&format!("{prefix} {}\n", u8::from(*b)));
+                }
+                Json::Null | Json::Str(_) | Json::Arr(_) => {}
+            }
+        }
+        let mut out = String::new();
+        walk("blast", &self.root, &mut out);
+        out
+    }
+
+    /// Write the JSON snapshot to `BLAST_METRICS_OUT` when set. Returns
+    /// the path written to (None when the variable is unset).
+    pub fn write_env_out(&self) -> std::io::Result<Option<String>> {
+        match std::env::var("BLAST_METRICS_OUT") {
+            Ok(path) if !path.is_empty() => {
+                std::fs::write(&path, self.root.to_string_pretty())?;
+                Ok(Some(path))
+            }
+            _ => Ok(None),
+        }
+    }
+}
+
+// ----------------------------------------------------------------------
+// Well-known metric handles
+// ----------------------------------------------------------------------
+
+/// Cached `&'static` handles for the metrics the instrumented
+/// subsystems bump on (or near) hot paths: the `OnceLock` makes each a
+/// one-time registry lookup, after which an update is one relaxed
+/// atomic op.
+pub mod well_known {
+    use super::{registry, Counter, Gauge};
+    use std::sync::OnceLock;
+
+    macro_rules! counter_fn {
+        ($(#[$doc:meta])* $fn_name:ident, $metric:expr) => {
+            $(#[$doc])*
+            pub fn $fn_name() -> &'static Counter {
+                static H: OnceLock<&'static Counter> = OnceLock::new();
+                H.get_or_init(|| registry().counter($metric))
+            }
+        };
+    }
+
+    macro_rules! gauge_fn {
+        ($(#[$doc:meta])* $fn_name:ident, $metric:expr) => {
+            $(#[$doc])*
+            pub fn $fn_name() -> &'static Gauge {
+                static H: OnceLock<&'static Gauge> = OnceLock::new();
+                H.get_or_init(|| registry().gauge($metric))
+            }
+        };
+    }
+
+    counter_fn!(
+        /// Autotuner table hits (one per dispatch that found a plan).
+        autotune_table_hits,
+        "autotune_table_hits"
+    );
+    counter_fn!(
+        /// Autotuner tuning probes (one per new `(op, shape, bucket)` key).
+        autotune_tune_events,
+        "autotune_tune_events"
+    );
+    counter_fn!(
+        /// Scratch-arena pool misses (a `take` that had to allocate).
+        arena_misses,
+        "arena_pool_misses"
+    );
+    counter_fn!(
+        /// Bytes ever allocated into scratch arenas.
+        arena_allocated_bytes,
+        "arena_allocated_bytes"
+    );
+    counter_fn!(
+        /// KV-pool slot admissions (`KvPool::alloc`).
+        kv_admitted,
+        "kv_slots_admitted"
+    );
+    counter_fn!(
+        /// KV-pool slot retirements (`KvPool::release`).
+        kv_retired,
+        "kv_slots_retired"
+    );
+    gauge_fn!(
+        /// Pooled bytes high-water across all scratch arenas.
+        arena_pooled_bytes_high_water,
+        "arena_pooled_bytes_high_water"
+    );
+    gauge_fn!(
+        /// KV slots currently holding live sequences (all pools).
+        kv_slots_active,
+        "kv_slots_active"
+    );
+    gauge_fn!(
+        /// Largest KV pool constructed (slot capacity).
+        kv_slots_total,
+        "kv_slots_total"
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    // ---- histogram tests (migrated from coordinator::metrics) ----
+
+    #[test]
+    fn histogram_percentiles_ordered() {
+        let h = Histogram::default();
+        for us in [10u64, 20, 40, 80, 160, 320, 640, 1280, 2560, 100_000] {
+            h.record(Duration::from_micros(us));
+        }
+        assert_eq!(h.count(), 10);
+        assert!(h.percentile(50.0) <= h.percentile(95.0));
+        assert!(h.percentile(95.0) <= h.percentile(99.0));
+        assert!(h.percentile(99.0) <= h.max());
+        assert!(h.mean() > Duration::from_micros(100));
+    }
+
+    #[test]
+    fn log_linear_buckets_bound_percentile_error() {
+        // Uniform 1..=1000 µs: the sub-bucketed table must place p50
+        // within 25 % of the true median (plain pow-2 buckets give
+        // 512→1024, i.e. up to ~100 % off).
+        let h = Histogram::default();
+        for us in 1..=1000u64 {
+            h.record(Duration::from_micros(us));
+        }
+        let p50 = h.percentile(50.0).as_micros() as f64;
+        assert!(
+            (400.0..=640.0).contains(&p50),
+            "p50 {p50}µs too far from true median 500µs"
+        );
+        let p99 = h.percentile(99.0).as_micros() as f64;
+        assert!((940.0..=1000.0).contains(&p99), "p99 {p99}µs off");
+    }
+
+    #[test]
+    fn bucket_index_and_upper_are_consistent() {
+        for us in [1u64, 2, 3, 5, 9, 100, 1023, 1024, 1025, 1 << 20, u64::MAX] {
+            let idx = bucket_index(us);
+            assert!(
+                bucket_upper_us(idx) >= us.clamp(1, 1 << 60),
+                "upper({idx}) < {us}"
+            );
+            if idx > 0 {
+                assert!(bucket_upper_us(idx - 1) <= bucket_upper_us(idx));
+            }
+        }
+        // Monotone: larger values never land in earlier buckets.
+        let mut prev = 0usize;
+        for us in 1..4096u64 {
+            let idx = bucket_index(us);
+            assert!(idx >= prev, "bucket order broke at {us}µs");
+            prev = idx;
+        }
+    }
+
+    #[test]
+    fn bucket_upper_never_overflows() {
+        // Regression: the pre-obs implementation computed
+        // `(sub + 1) * (1 << oct)`, which overflows u64 from octave 62
+        // and hits an overflowing shift from octave 64. The function
+        // must now be total over usize and clamp to the table edge.
+        let top = bucket_upper_us(NUM_BUCKETS - 1);
+        assert!(top >= 1 << 60, "last real bucket must cover the clamp point");
+        for idx in [NUM_BUCKETS - 1, NUM_BUCKETS, NUM_BUCKETS + 7, 1000, usize::MAX] {
+            assert_eq!(bucket_upper_us(idx), top, "out-of-table idx {idx} must clamp");
+        }
+        // Every recordable value stays inside the table.
+        assert!(bucket_index(u64::MAX) < NUM_BUCKETS);
+        // Monotone non-decreasing across the whole (clamped) domain.
+        let mut prev = 0u64;
+        for idx in 0..NUM_BUCKETS + 8 {
+            let up = bucket_upper_us(idx);
+            assert!(up >= prev, "upper bound decreased at idx {idx}");
+            prev = up;
+        }
+    }
+
+    #[test]
+    fn percentiles_monotone_in_q_and_bounded_by_max() {
+        // Property test over seeded random sample sets: percentile
+        // estimates must be monotone in q and bounded by max().
+        let mut rng = Rng::new(4071);
+        for case in 0..50 {
+            let h = Histogram::new();
+            let n = 1 + rng.below(200);
+            for _ in 0..n {
+                // Spread across many octaves, including sub-µs and huge.
+                let base = 1u64 << rng.below(40);
+                h.record(Duration::from_micros(base + rng.below(1000) as u64));
+            }
+            let qs = [1.0, 10.0, 25.0, 50.0, 75.0, 90.0, 95.0, 99.0, 100.0];
+            let mut prev = Duration::ZERO;
+            for q in qs {
+                let v = h.percentile(q);
+                assert!(v >= prev, "case {case}: percentile not monotone at q={q}");
+                assert!(v <= h.max(), "case {case}: p{q} exceeds max");
+                prev = v;
+            }
+        }
+    }
+
+    // ---- registry / snapshot ----
+
+    #[test]
+    fn registry_interns_and_counts() {
+        let c1 = registry().counter("obs_test_counter");
+        let c2 = registry().counter("obs_test_counter");
+        assert!(std::ptr::eq(c1, c2), "same name must intern to one counter");
+        let before = c1.get();
+        c2.add(3);
+        assert_eq!(c1.get(), before + 3);
+
+        let g = registry().gauge("obs_test_gauge");
+        g.set(7);
+        g.sub(100); // saturating
+        assert_eq!(g.get(), 0);
+        g.set_max(42);
+        g.set_max(10);
+        assert_eq!(g.get(), 42);
+
+        let gf = registry().gauge_f64("obs_test_gauge_f64");
+        gf.set(0.125);
+        assert_eq!(gf.get(), 0.125);
+
+        registry().histogram("obs_test_hist").record_us(100);
+        assert!(registry().histogram("obs_test_hist").count() >= 1);
+    }
+
+    #[test]
+    fn labeled_counters_group_by_family() {
+        registry().bump_labeled("obs_test_family", "a");
+        registry().bump_labeled("obs_test_family", "a");
+        registry().bump_labeled("obs_test_family", "b");
+        let j = registry().labeled_json("obs_test_family");
+        assert_eq!(j.get("a").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("b").unwrap().as_usize(), Some(1));
+    }
+
+    #[test]
+    fn snapshot_has_required_sections_and_exposition_lines() {
+        registry().counter("obs_test_snapshot_counter").inc();
+        let snap = MetricsSnapshot::collect()
+            .with_serving(obj(vec![("requests", Json::from(3usize))]));
+        let j = snap.to_json();
+        for key in ["pack_cache", "autotune", "plan_profile", "counters", "gauges", "serving"] {
+            assert!(j.get(key).is_ok(), "snapshot missing section {key}");
+        }
+        assert!(j.get("pack_cache").unwrap().get("hit_rate").unwrap().as_f64().is_some());
+
+        let text = snap.to_prometheus();
+        assert!(text.contains("blast_pack_cache_hits "));
+        assert!(text.contains("blast_serving_requests 3"));
+        assert!(text.lines().all(|l| l.is_empty() || l.split(' ').count() == 2));
+        // Round trip: the snapshot JSON must parse.
+        let parsed = Json::parse(&snap.to_pretty()).expect("snapshot must be valid JSON");
+        assert!(parsed.get("autotune").is_ok());
+    }
+
+    #[test]
+    fn plan_profile_tracks_gflops() {
+        use crate::kernels::{PlanKind, PlanSig};
+        let sig = PlanSig { kind: PlanKind::LowRank, b: 1, r: 63 }; // test-only sig
+        let p = plan_profile(sig);
+        assert!(std::ptr::eq(p, plan_profile(sig)), "profile must intern per sig");
+        p.calls.inc();
+        p.sampled.inc();
+        p.wall_ns.add(1_000);
+        p.flops.add(2_000);
+        assert!((p.gflops() - 2.0).abs() < 1e-9);
+        let j = plan_profile_json();
+        let entry = j.get("plan:lowrank(r=63)").expect("sig tag present");
+        assert!(entry.get("calls").unwrap().as_usize().unwrap() >= 1);
+    }
+}

@@ -23,6 +23,13 @@ pub struct ScratchArena {
     pools: Vec<Vec<Vec<f32>>>,
     /// Buffers currently handed out (diagnostics; leak detection).
     outstanding: usize,
+    /// Pool misses: `take` calls that had to allocate (warmup / shape
+    /// growth — zero per steady-state step).
+    misses: usize,
+    /// Bytes currently parked in the pools.
+    pooled_bytes: usize,
+    /// High-water mark of `pooled_bytes` over this arena's lifetime.
+    high_water_bytes: usize,
 }
 
 /// Capacity class of a request: buffers are allocated at the next
@@ -34,7 +41,13 @@ fn class_of(len: usize) -> usize {
 
 impl ScratchArena {
     pub fn new() -> Self {
-        ScratchArena { pools: Vec::new(), outstanding: 0 }
+        ScratchArena {
+            pools: Vec::new(),
+            outstanding: 0,
+            misses: 0,
+            pooled_bytes: 0,
+            high_water_bytes: 0,
+        }
     }
 
     /// A zeroed buffer of exactly `len` elements (capacity is the
@@ -47,11 +60,20 @@ impl ScratchArena {
         self.outstanding += 1;
         match self.pools[class].pop() {
             Some(mut buf) => {
+                self.pooled_bytes -= buf.capacity() * std::mem::size_of::<f32>();
                 buf.clear();
                 buf.resize(len, 0.0);
                 buf
             }
             None => {
+                // Cold path (warmup / shape growth): account the miss
+                // locally and process-wide. The global counters are
+                // relaxed atomics, but they only run here — a
+                // steady-state take is always a pop.
+                self.misses += 1;
+                let bytes = (1usize << class) * std::mem::size_of::<f32>();
+                crate::obs::well_known::arena_misses().inc();
+                crate::obs::well_known::arena_allocated_bytes().add(bytes as u64);
                 let mut buf = Vec::with_capacity(1 << class);
                 buf.resize(len, 0.0);
                 buf
@@ -81,6 +103,14 @@ impl ScratchArena {
             self.pools.resize_with(class + 1, Vec::new);
         }
         self.outstanding = self.outstanding.saturating_sub(1);
+        self.pooled_bytes += buf.capacity() * std::mem::size_of::<f32>();
+        if self.pooled_bytes > self.high_water_bytes {
+            // High-water only moves during warmup/growth, so the global
+            // gauge update stays off the steady-state recycle path.
+            self.high_water_bytes = self.pooled_bytes;
+            crate::obs::well_known::arena_pooled_bytes_high_water()
+                .set_max(self.pooled_bytes as u64);
+        }
         self.pools[class].push(buf);
     }
 
@@ -102,6 +132,21 @@ impl ScratchArena {
     /// Total pooled buffers across all classes.
     pub fn pooled(&self) -> usize {
         self.pools.iter().map(|p| p.len()).sum()
+    }
+
+    /// `take` calls that had to allocate (zero per steady-state step).
+    pub fn misses(&self) -> usize {
+        self.misses
+    }
+
+    /// Bytes currently parked in the pools.
+    pub fn pooled_bytes(&self) -> usize {
+        self.pooled_bytes
+    }
+
+    /// Most bytes this arena ever had pooled at once.
+    pub fn high_water_bytes(&self) -> usize {
+        self.high_water_bytes
     }
 }
 
@@ -166,6 +211,24 @@ mod tests {
         let buf = arena.take(0);
         assert!(buf.is_empty());
         arena.recycle(buf);
+    }
+
+    #[test]
+    fn stats_track_misses_and_pooled_bytes() {
+        let mut arena = ScratchArena::new();
+        let a = arena.take(100); // class 128: cold -> miss
+        assert_eq!(arena.misses(), 1);
+        assert_eq!(arena.pooled_bytes(), 0);
+        arena.recycle(a);
+        assert_eq!(arena.pooled_bytes(), 128 * 4);
+        assert_eq!(arena.high_water_bytes(), 128 * 4);
+        // Steady state: the pop re-uses the buffer, no new miss, and
+        // pooled bytes drop while the buffer is checked out.
+        let b = arena.take(128);
+        assert_eq!(arena.misses(), 1);
+        assert_eq!(arena.pooled_bytes(), 0);
+        arena.recycle(b);
+        assert_eq!(arena.high_water_bytes(), 128 * 4, "high water is monotone");
     }
 
     #[test]

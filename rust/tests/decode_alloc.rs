@@ -106,6 +106,17 @@ fn steady_state_decode_is_allocation_free() {
     // Single-thread kernel configuration (see module docs); set before
     // the first `util::par::num_threads()` call caches the value.
     std::env::set_var("BLAST_NUM_THREADS", "1");
+    // Observability ON: serve-level tracing plus an aggressive profiler
+    // sampling period, set before the obs OnceLocks parse them. The
+    // observability layer must not regress the zero-alloc contract —
+    // metric updates are relaxed atomics, histogram buckets are a fixed
+    // table, profile entries are interned during warmup, and the trace
+    // ring is pre-allocated. (Serve-level points don't fire inside
+    // decode, but the mode check itself runs on the instrumented paths;
+    // with PROF_SAMPLE=4, several of the 10 counted decode steps take
+    // timed profile samples.)
+    std::env::set_var("BLAST_TRACE", "serve");
+    std::env::set_var("BLAST_PROF_SAMPLE", "4");
     // Every weight structure now routes through the structure-plan
     // executor (`kernels::plan`), so the zero-allocation contract holds
     // for all five — not just the Dense/BLAST pair the pre-plan engine

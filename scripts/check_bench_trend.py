@@ -28,6 +28,16 @@ METRICS = [
 ]
 THRESHOLD = 0.20
 
+# Observability ratios carried in the benches' "obs" snapshot section.
+# Compared as absolute deltas (they're already in [0, 1]) and always
+# warn-only: cache behaviour on tiny smoke workloads is advisory, but a
+# large drop is an early smell of a pack-keying or eviction regression.
+OBS_RATIOS = [
+    ("BENCH_kernels.json", ("obs", "pack_cache", "hit_rate"), "kernels pack-cache hit rate"),
+    ("BENCH_serving.json", ("obs", "pack_cache", "hit_rate"), "serving pack-cache hit rate"),
+]
+OBS_DROP_THRESHOLD = 0.10
+
 
 def load_metric(path, keys):
     try:
@@ -65,6 +75,18 @@ def main():
         if change < -THRESHOLD:
             failures.append(
                 f"{label} regressed {-change:.1%} (threshold {THRESHOLD:.0%})"
+            )
+    for fname, keys, label in OBS_RATIOS:
+        curr = load_metric(os.path.join(curr_dir, fname), keys)
+        prev = load_metric(os.path.join(prev_dir, fname), keys)
+        if curr is None or prev is None:
+            continue
+        drop = prev - curr
+        print(f"[trend] {label}: prev {prev:.3f} -> curr {curr:.3f}")
+        if drop > OBS_DROP_THRESHOLD:
+            print(
+                f"[trend] WARNING: {label} dropped {drop:.2f} "
+                f"(> {OBS_DROP_THRESHOLD:.2f} absolute) — check pack keying/eviction"
             )
     if failures:
         for f in failures:
