@@ -20,6 +20,12 @@
 //!      per-block engine dispatches) for Low-Rank, Monarch, and
 //!      Block-Diagonal, with GFLOP/s per structure recorded in
 //!      `BENCH_kernels.json`.
+//!   6. Quantized shoot-out: int8 packed panels (`plan_seq_i8`) vs the
+//!      f32 packed path (`plan_seq`) through the same plan programs,
+//!      per structure, plus the int8 bytes-per-weight footprint and
+//!      resident pack-cache bytes. Acceptance gate: int8 ≥ 1.5× f32 at
+//!      8×1024×1024 dense and on the BLAST plan (warn-only under
+//!      `BLAST_BENCH_FAST` or without AVX2).
 //!
 //! Always writes the machine-readable `BENCH_kernels.json` (repo root;
 //! override with `BLAST_KERNELS_BENCH_OUT`) so `scripts/
@@ -28,7 +34,8 @@
 
 use blast_repro::blast::{blast_rank_for_ratio, BlastMatrix};
 use blast_repro::kernels::{
-    engine, micro, tiled, Factors, KernelOp, PlanKey, PlanOperands, StructPlan,
+    engine, micro, pack_cache, plan_cache, tiled, Factors, KernelOp, PlanKey, PlanOperands,
+    QuantPanels, StructPlan,
 };
 use blast_repro::tensor::{gemv, Matrix, Rng};
 use blast_repro::util::bench::BenchSuite;
@@ -349,6 +356,209 @@ fn main() {
     }
 
     // ------------------------------------------------------------------
+    // 6. Quantized shoot-out: int8 packed panels vs f32 packed panels
+    //    through the same plan programs. Weight-only quantization —
+    //    activations quantize per-row on the fly inside the i8 kernels
+    //    and the BLAST coupling stage stays f32, so the comparison is
+    //    plan-for-plan on identical math. Single-thread executors
+    //    (`plan_seq` vs `plan_seq_i8`) keep the ratio a clean
+    //    per-kernel number, free of thread-spawn noise.
+    // ------------------------------------------------------------------
+    let mut quant_json: Vec<(&'static str, Json)> = Vec::new();
+    let qbatch = 8usize;
+
+    // Footprint side of the shoot-out: int8 pack bytes (values + scales
+    // + tile padding) over the raw weight count. Couplings are never
+    // packed (they stay f32), so only GEMM-stage factors count.
+    let bytes_per_weight = |mats: &[&Matrix]| -> f64 {
+        let (mut bytes, mut weights) = (0usize, 0usize);
+        for m in mats {
+            bytes += QuantPanels::pack_rows(m).bytes();
+            weights += m.rows * m.cols;
+        }
+        bytes as f64 / weights.max(1) as f64
+    };
+
+    // --- dense 8×1024×1024 (the acceptance shape) ---
+    let qx = rng.gaussian_matrix(qbatch, dk, 1.0);
+    let dplan = StructPlan::dense(dn, dk);
+    let dplan_q = plan_cache().get(dplan.sig.quantized(), dplan.m, dplan.n);
+    let dflops = (2 * qbatch * dk * dn) as f64;
+    let (dq_f32, dq_i8, dq_speedup) = quant_shootout(
+        &mut suite,
+        &format!("quant dense {dk}x{dn} batch={qbatch}"),
+        &qx,
+        &dplan,
+        &dplan_q,
+        PlanOperands::single(&dense_w),
+        dflops,
+    );
+    // Numerics sanity under bench conditions: int8 must stay inside the
+    // documented bounded-error envelope of the f32 reference (the
+    // strict per-structure ≤1e-2 contract is asserted by
+    // tests/quant_parity.rs on uniform data; gaussian bench weights get
+    // a looser 2e-2 guard).
+    {
+        let i8_kernel = engine().kernel_named("plan_seq_i8").expect("registered");
+        let op = KernelOp::Plan { plan: &dplan_q, ops: PlanOperands::single(&dense_w) };
+        let y_q = i8_kernel.run(&qx, &op);
+        let y_f = engine().matmul_nt(&qx, &dense_w);
+        let rel = y_q.sub(&y_f).fro_norm() / y_f.fro_norm().max(f32::MIN_POSITIVE);
+        assert!(rel < 2e-2, "int8 bench numerics drifted: rel={rel}");
+    }
+    quant_json.push((
+        "dense",
+        obj(vec![
+            ("f32_gflops", Json::from(dq_f32)),
+            ("i8_gflops", Json::from(dq_i8)),
+            ("speedup", Json::from(dq_speedup)),
+            ("bytes_per_weight", Json::from(bytes_per_weight(&[&dense_w]))),
+        ]),
+    ));
+    println!("    acceptance: int8 dense plan is {dq_speedup:.2}x the f32 packed path");
+    if dq_speedup < 1.5 {
+        let msg = format!(
+            "int8 packed path must be >= 1.5x the f32 packed path at {dk}x{dn} \
+             batch={qbatch}, got {dq_speedup:.2}x"
+        );
+        assert!(fast_mode || !avx2, "{msg}");
+        println!("    WARNING (not fatal: fast-mode/no-AVX2): {msg}");
+    }
+
+    // --- BLAST (the section-2 acceptance shape) ---
+    let qxb = rng.gaussian_matrix(qbatch, n, 1.0);
+    let a_plan_q = plan_cache().get(a_plan.sig.quantized(), a_plan.m, a_plan.n);
+    let bflops = 2.0 * a.matvec_flops() as f64 * qbatch as f64;
+    let (bq_f32, bq_i8, bq_speedup) = quant_shootout(
+        &mut suite,
+        &format!("quant blast {n}x{n} b={b} r={r} batch={qbatch}"),
+        &qxb,
+        &a_plan,
+        &a_plan_q,
+        a.plan_operands(),
+        bflops,
+    );
+    let blast_factors: Vec<&Matrix> = a.u.iter().chain(a.v.iter()).collect();
+    quant_json.push((
+        "blast",
+        obj(vec![
+            ("f32_gflops", Json::from(bq_f32)),
+            ("i8_gflops", Json::from(bq_i8)),
+            ("speedup", Json::from(bq_speedup)),
+            ("bytes_per_weight", Json::from(bytes_per_weight(&blast_factors))),
+        ]),
+    ));
+    println!("    acceptance: int8 BLAST plan is {bq_speedup:.2}x the f32 packed path");
+    if bq_speedup < 1.5 {
+        let msg = format!(
+            "int8 packed path must be >= 1.5x the f32 packed path on blast {n}x{n} \
+             b={b} r={r} batch={qbatch}, got {bq_speedup:.2}x"
+        );
+        assert!(fast_mode || !avx2, "{msg}");
+        println!("    WARNING (not fatal: fast-mode/no-AVX2): {msg}");
+    }
+
+    // --- Low-Rank / Monarch / Block-Diagonal (recorded, no gate: the
+    //     small per-stage GEMMs amortize the activation-quant pass less
+    //     than the two gated shapes do) ---
+    {
+        let lr_r = 256usize;
+        let lp = rng.gaussian_matrix(sm, lr_r, 0.02);
+        let lq = rng.gaussian_matrix(sm, lr_r, 0.02);
+        let lx = rng.gaussian_matrix(qbatch, sm, 1.0);
+        let lplan = StructPlan::low_rank(sm, sm, lr_r);
+        let lplan_q = plan_cache().get(lplan.sig.quantized(), lplan.m, lplan.n);
+        let lr_flops = (2 * (sm + sm) * lr_r * qbatch) as f64;
+        let lops = PlanOperands {
+            g0: Factors::Mats(std::slice::from_ref(&lq)),
+            g1: Factors::Mats(std::slice::from_ref(&lp)),
+            s: None,
+        };
+        let (g_f32, g_i8, sp) = quant_shootout(
+            &mut suite,
+            &format!("quant lowrank {sm}x{sm} r={lr_r} batch={qbatch}"),
+            &lx,
+            &lplan,
+            &lplan_q,
+            lops,
+            lr_flops,
+        );
+        quant_json.push((
+            "lowrank",
+            obj(vec![
+                ("f32_gflops", Json::from(g_f32)),
+                ("i8_gflops", Json::from(g_i8)),
+                ("speedup", Json::from(sp)),
+                ("bytes_per_weight", Json::from(bytes_per_weight(&[&lp, &lq]))),
+            ]),
+        ));
+    }
+    {
+        let (mb, mt) = (sb, 64usize);
+        let (mp, mq) = (sm / mb, sm / mb);
+        let rb: Vec<Matrix> = (0..mb).map(|_| rng.gaussian_matrix(mt, mq, 0.02)).collect();
+        let ml: Vec<Matrix> =
+            (0..mb * mb).map(|_| rng.gaussian_matrix(mp, mt, 0.02)).collect();
+        let mx = rng.gaussian_matrix(qbatch, sm, 1.0);
+        let mplan = StructPlan::monarch(sm, sm, mb, mt);
+        let mplan_q = plan_cache().get(mplan.sig.quantized(), mplan.m, mplan.n);
+        let mo_flops = (2 * (sm * mt + sm * mb * mt) * qbatch) as f64;
+        let mops = PlanOperands { g0: Factors::Mats(&rb), g1: Factors::Mats(&ml), s: None };
+        let (g_f32, g_i8, sp) = quant_shootout(
+            &mut suite,
+            &format!("quant monarch {sm}x{sm} b={mb} t={mt} batch={qbatch}"),
+            &mx,
+            &mplan,
+            &mplan_q,
+            mops,
+            mo_flops,
+        );
+        let factors: Vec<&Matrix> = rb.iter().chain(ml.iter()).collect();
+        quant_json.push((
+            "monarch",
+            obj(vec![
+                ("f32_gflops", Json::from(g_f32)),
+                ("i8_gflops", Json::from(g_i8)),
+                ("speedup", Json::from(sp)),
+                ("bytes_per_weight", Json::from(bytes_per_weight(&factors))),
+            ]),
+        ));
+    }
+    {
+        let (db, dt) = (sb, 64usize);
+        let (dp, dq) = (sm / db, sm / db);
+        let pd: Vec<Matrix> = (0..db).map(|_| rng.gaussian_matrix(dp, dt, 0.02)).collect();
+        let qd: Vec<Matrix> = (0..db).map(|_| rng.gaussian_matrix(dq, dt, 0.02)).collect();
+        let bx = rng.gaussian_matrix(qbatch, sm, 1.0);
+        let bplan = StructPlan::block_diag(sm, sm, db, dt);
+        let bplan_q = plan_cache().get(bplan.sig.quantized(), bplan.m, bplan.n);
+        let bd_flops = (2 * (sm + sm) * dt * qbatch) as f64;
+        let bops = PlanOperands { g0: Factors::Mats(&qd), g1: Factors::Mats(&pd), s: None };
+        let (g_f32, g_i8, sp) = quant_shootout(
+            &mut suite,
+            &format!("quant blockdiag {sm}x{sm} b={db} t={dt} batch={qbatch}"),
+            &bx,
+            &bplan,
+            &bplan_q,
+            bops,
+            bd_flops,
+        );
+        let factors: Vec<&Matrix> = pd.iter().chain(qd.iter()).collect();
+        quant_json.push((
+            "blockdiag",
+            obj(vec![
+                ("f32_gflops", Json::from(g_f32)),
+                ("i8_gflops", Json::from(g_i8)),
+                ("speedup", Json::from(sp)),
+                ("bytes_per_weight", Json::from(bytes_per_weight(&factors))),
+            ]),
+        ));
+    }
+    // Resident packed bytes (f32 + int8 entries, scales included in the
+    // LRU budget) after the full shoot-out.
+    quant_json.push(("pack_cache_resident_bytes", Json::from(pack_cache().bytes())));
+
+    // ------------------------------------------------------------------
     // Machine-readable output for the bench-trend gate.
     // ------------------------------------------------------------------
     let out_path = std::env::var("BLAST_KERNELS_BENCH_OUT")
@@ -382,11 +592,16 @@ fn main() {
         ),
         ("blast", Json::Arr(blast_json)),
         ("structures", obj(structure_json)),
+        // Section 6: f32-packed vs int8-packed GFLOP/s per structure,
+        // the int8 bytes-per-weight footprint, and the resident
+        // pack-cache bytes after the shoot-out.
+        ("quantized", obj(quant_json)),
         (
             "gate",
             obj(vec![
                 ("min_dense_speedup", Json::from(2.0)),
                 ("min_blast_speedup", Json::from(2.0)),
+                ("min_quant_speedup", Json::from(1.5)),
                 ("enforced", Json::from(!fast_mode && avx2)),
                 ("fast_mode", Json::from(fast_mode)),
             ]),
@@ -405,4 +620,37 @@ fn main() {
         println!("autotune plans persisted to {path}");
     }
     let _ = Matrix::zeros(1, 1);
+}
+
+/// Bench one plan program both ways — f32 packed panels via `plan_seq`
+/// against int8 packed panels via `plan_seq_i8` — and return
+/// `(f32_gflops, i8_gflops, speedup)`. Both runs share `ops` (the i8
+/// kernel quantizes the same f32 factors at pack time) and the
+/// single-thread executors, so the ratio isolates the int8 microkernel
+/// + halved panel traffic from threading effects.
+fn quant_shootout(
+    suite: &mut BenchSuite,
+    label: &str,
+    x: &Matrix,
+    plan_f32: &StructPlan,
+    plan_i8: &StructPlan,
+    ops: PlanOperands<'_>,
+    flops: f64,
+) -> (f64, f64, f64) {
+    let f32_kernel = engine().kernel_named("plan_seq").expect("plan_seq registered");
+    let i8_kernel = engine().kernel_named("plan_seq_i8").expect("plan_seq_i8 registered");
+    let f32_name = format!("{label} [f32 packed 1-thread]");
+    suite.bench_throughput(&f32_name, flops, "flop", || {
+        let op = KernelOp::Plan { plan: plan_f32, ops };
+        std::hint::black_box(f32_kernel.run(x, &op));
+    });
+    let i8_name = format!("{label} [int8 packed 1-thread]");
+    suite.bench_throughput(&i8_name, flops, "flop", || {
+        let op = KernelOp::Plan { plan: plan_i8, ops };
+        std::hint::black_box(i8_kernel.run(x, &op));
+    });
+    suite.report_speedup(&f32_name, &i8_name);
+    let f32_t = suite.mean_of(&f32_name).unwrap().as_secs_f64();
+    let i8_t = suite.mean_of(&i8_name).unwrap().as_secs_f64();
+    (flops / f32_t / 1e9, flops / i8_t / 1e9, f32_t / i8_t)
 }

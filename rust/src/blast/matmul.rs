@@ -28,6 +28,7 @@ impl BlastMatrix {
                 kind: crate::kernels::PlanKind::Blast,
                 b: self.b as u32,
                 r: self.r as u32,
+                q: crate::kernels::QuantMode::F32,
             },
             self.m,
             self.n,

@@ -36,6 +36,7 @@
 //! serving coordinator.
 
 use super::compressor::{CompressedWeight, Compressor, Structure};
+use crate::kernels::QuantMode;
 use crate::nn::gpt::TinyLM;
 use crate::nn::linear::{Linear, LinearWeight};
 use crate::tensor::io::TensorBundle;
@@ -102,6 +103,11 @@ pub struct PipelineOptions {
     /// Test knob: stop after this many *newly compressed* layers, as if
     /// the process had been killed mid-run. `None` in production.
     pub max_layers: Option<usize>,
+    /// Inference weight precision stamped on every processed layer at
+    /// apply time (`--quantize int8`). Factor values are computed and
+    /// checkpointed in f32 either way — quantization happens at pack
+    /// time in the kernel engine, so the mode is pure metadata here.
+    pub quantize: QuantMode,
 }
 
 impl Default for PipelineOptions {
@@ -112,6 +118,7 @@ impl Default for PipelineOptions {
             jobs: 0,
             checkpoint_dir: None,
             max_layers: None,
+            quantize: QuantMode::F32,
         }
     }
 }
@@ -141,6 +148,8 @@ pub struct PipelineReport {
     pub params_after: usize,
     /// False only under the `max_layers` test knob.
     pub completed: bool,
+    /// Weight precision stamped on the output model's layers.
+    pub quantize: QuantMode,
 }
 
 impl PipelineReport {
@@ -181,6 +190,7 @@ impl PipelineReport {
             ("achieved_ratio", Json::from(self.achieved_ratio())),
             ("mean_rel_error", Json::from(self.mean_rel_error())),
             ("completed", Json::from(self.completed)),
+            ("quantize", Json::from(self.quantize.name().to_string())),
         ])
     }
 }
@@ -329,6 +339,9 @@ impl CompressionPipeline {
                 // lowers the new structure.
                 layer.plan = Default::default();
             }
+            // Stamp the run's weight precision (dense-kept layers too:
+            // int8 panels apply to any structure, dense included).
+            layer.set_quant(self.opts.quantize);
             layers.push(LayerReport {
                 name: task.name.clone(),
                 structure: outcome.structure,
@@ -345,6 +358,7 @@ impl CompressionPipeline {
             params_before: params_before_model,
             params_after: model.num_params(),
             completed,
+            quantize: self.opts.quantize,
         };
         // Final Eq.-4 loss over the whole run, as a gauge the snapshot
         // surfaces next to the per-layer histogram.
@@ -403,6 +417,7 @@ impl CompressionPipeline {
         obj(vec![
             ("policy", Json::from(self.opts.policy.name())),
             ("ratio", Json::from(self.opts.ratio)),
+            ("quantize", Json::from(self.opts.quantize.name().to_string())),
             ("blast_iters", Json::from(self.compressor.blast_iters)),
             ("delta0", Json::from(self.compressor.delta0 as f64)),
             ("seed", Json::from(self.compressor.seed as usize)),
@@ -470,6 +485,7 @@ fn weight_params(w: &LinearWeight) -> usize {
         bias: None,
         out_features: 0,
         in_features: 0,
+        quant: QuantMode::F32,
         plan: Default::default(),
     }
     .num_params()
@@ -710,11 +726,15 @@ impl CheckpointCtx {
     /// a progress record pointing at missing factors.
     fn record(&self, task: &LayerTask, outcome: &LayerOutcome) -> Result<()> {
         if let Some(w) = &outcome.weight {
+            // Factors checkpoint in f32 regardless of the run's quant
+            // mode; the mode is re-stamped at apply time, so a resumed
+            // run and a fresh run produce the same model.
             let carrier = Linear {
                 weight: w.clone(),
                 bias: None,
                 out_features: task.out,
                 in_features: task.inp,
+                quant: QuantMode::F32,
                 plan: Default::default(),
             };
             let mut bundle = TensorBundle::new();
@@ -852,6 +872,24 @@ mod tests {
         }
         let tokens = vec![5usize, 6, 7];
         assert_eq!(a.forward(&tokens).data, b.forward(&tokens).data);
+    }
+
+    #[test]
+    fn quantized_run_stamps_layers_and_manifest() {
+        let mut lm = small_dense_lm(903);
+        let mut pipe = quick_pipeline(StructurePolicy::Fixed(Structure::Blast { b: 4 }), None);
+        pipe.opts.quantize = QuantMode::I8;
+        let report = pipe.compress_model(&mut lm).unwrap();
+        assert!(report.completed);
+        let m = report.manifest_json();
+        assert_eq!(m.get("quantize").unwrap().as_str(), Some("int8"));
+        for (_, layer) in layer_views(&lm) {
+            assert_eq!(layer.quant, QuantMode::I8);
+            assert_eq!(layer.plan_sig().q, QuantMode::I8);
+        }
+        // The quantized model still generates.
+        let out = lm.generate(&[1, 2, 3], 4);
+        assert_eq!(out.len(), 7);
     }
 
     #[test]

@@ -236,7 +236,9 @@ fn time_kernel(kernel: &dyn MatmulKernel, x: &Matrix, op: &KernelOp<'_>) -> f64 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::kernels::{NaiveKernel, ParallelKernel, PlanKernel, PlanKind, PlanSig, TiledKernel};
+    use crate::kernels::{
+        NaiveKernel, ParallelKernel, PlanKernel, PlanKind, PlanSig, QuantMode, TiledKernel,
+    };
     use crate::tensor::Rng;
 
     fn kernel_set() -> Vec<Box<dyn MatmulKernel>> {
@@ -246,23 +248,33 @@ mod tests {
             Box::new(ParallelKernel),
             Box::new(PlanKernel::sequential()),
             Box::new(PlanKernel::row_parallel()),
+            Box::new(PlanKernel::sequential_i8()),
+            Box::new(PlanKernel::row_parallel_i8()),
         ]
     }
 
     #[test]
     fn op_tag_string_round_trip() {
+        let f32_sig = |kind, b, r| PlanSig { kind, b, r, q: QuantMode::F32 };
         for tag in [
             OpTag::Dense,
-            OpTag::Plan(PlanSig { kind: PlanKind::Blast, b: 8, r: 32 }),
-            OpTag::Plan(PlanSig { kind: PlanKind::Monarch, b: 2, r: 4 }),
-            OpTag::Plan(PlanSig { kind: PlanKind::LowRank, b: 1, r: 16 }),
-            OpTag::Plan(PlanSig { kind: PlanKind::Dense, b: 1, r: 0 }),
+            OpTag::Plan(f32_sig(PlanKind::Blast, 8, 32)),
+            OpTag::Plan(f32_sig(PlanKind::Monarch, 2, 4)),
+            OpTag::Plan(f32_sig(PlanKind::LowRank, 1, 16)),
+            OpTag::Plan(f32_sig(PlanKind::Dense, 1, 0)),
+            OpTag::Plan(f32_sig(PlanKind::Blast, 8, 32).quantized()),
+            OpTag::Plan(f32_sig(PlanKind::Dense, 1, 0).quantized()),
         ] {
             assert_eq!(OpTag::parse(&tag.to_tag_string()), Some(tag));
         }
         assert_eq!(
             OpTag::parse("plan:blast(b=8,r=32)"),
-            Some(OpTag::Plan(PlanSig { kind: PlanKind::Blast, b: 8, r: 32 }))
+            Some(OpTag::Plan(f32_sig(PlanKind::Blast, 8, 32)))
+        );
+        // Quantized signatures carry a `q=i8` suffix and tune separately.
+        assert_eq!(
+            OpTag::parse("plan:blast(b=8,r=32,q=i8)"),
+            Some(OpTag::Plan(f32_sig(PlanKind::Blast, 8, 32).quantized()))
         );
         // The retired pre-plan tag form is rejected (old files re-tune).
         assert!(OpTag::parse("blast(b=8,r=32)").is_none());

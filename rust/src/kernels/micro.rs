@@ -51,9 +51,40 @@
 //! `NR=4` panel rows keeps `MR·NR = 8` vector accumulators plus the
 //! operand loads inside the 16 ymm registers of AVX2.
 //!
+//! ## The int8 path
+//!
+//! [`qnt_block_packed`] is the quantized sibling of [`nt_block_packed`]:
+//! int8 weights from a [`pack::QuantPanels`] (per-packed-row symmetric
+//! scales, same 8-wide k-chunk interleave) against int8 activations
+//! produced per stage by [`quantize_row_i8`] (per-row symmetric,
+//! always scalar, so activation bits never depend on the SIMD mode).
+//! Its accumulation contract is *stronger* than the f32 one: products
+//! and sums live in **i32, which is exact**, so the portable scalar
+//! loop and the AVX2 `maddubs`/`madd` pipeline agree **bit-for-bit in
+//! i32 by construction** — no fixed lane assignment or reduction tree
+//! is needed. The only rounding happens in the shared scalar finish,
+//! `acc as f32 * (x_scale * w_scale)`, which both paths execute
+//! identically. Two guardrails make the AVX2 path exact rather than
+//! saturating:
+//!
+//! * quantized values are clamped to `[-127, 127]` (never −128), so a
+//!   `maddubs` pair sum is at most `2·127·127 = 32258 < i16::MAX` — the
+//!   saturating instruction never saturates;
+//! * the sign of each activation byte is transferred onto the weight
+//!   byte (`sign_epi8`) so `maddubs`'s unsigned×signed operands are
+//!   `|x| · (w·sign(x))`, whose i16/i32 totals equal the signed scalar
+//!   products exactly. i32 accumulation overflows only past
+//!   `k ≈ 2.6·10⁵·8` — far beyond any layer here.
+//!
+//! Quantized results carry a **bounded-error** guarantee against the
+//! f32 contract (≤1e-2 relative, tested per structure), not a bit
+//! guarantee; within the int8 family, portable vs AVX2 and sequential
+//! vs row-parallel remain bit-identical.
+//!
 //! [`pack::PackedPanels`]: super::pack::PackedPanels
+//! [`pack::QuantPanels`]: super::pack::QuantPanels
 
-use super::pack::PackedPanels;
+use super::pack::{PackedPanels, QuantPanels};
 use std::sync::OnceLock;
 
 /// SIMD vector width in f32 lanes. Fixed by the accumulation contract —
@@ -363,6 +394,269 @@ pub fn nt_block_packed(
             }
             t += 1;
         }
+    }
+}
+
+/// Quantize one activation row to int8 with a symmetric per-row scale.
+///
+/// `out` must be at least `x.len()` long; every byte past `x.len()` is
+/// zeroed, so callers can size `out` to a full k-chunk grid and let the
+/// quantized kernels read whole chunks without a padded-tail special
+/// case (padding bytes multiply against zero weight padding — exact
+/// zero in i32). Returns the scale `max|x| / 127` (`0.0` for all-zero
+/// or non-finite rows, which quantize to all zeros).
+///
+/// Always scalar: activation bits must not depend on `BLAST_SIMD`.
+/// Values are clamped to `[-127, 127]` — never −128 — which is what
+/// keeps the AVX2 `maddubs` path saturation-free (see module docs).
+pub fn quantize_row_i8(x: &[f32], out: &mut [i8]) -> f32 {
+    debug_assert!(out.len() >= x.len());
+    let max_abs = x.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+    if max_abs == 0.0 || !max_abs.is_finite() {
+        out.fill(0);
+        return 0.0;
+    }
+    let inv = 127.0 / max_abs;
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o = (v * inv).round().clamp(-127.0, 127.0) as i8;
+    }
+    out[x.len()..].fill(0);
+    max_abs / 127.0
+}
+
+/// Quantized sibling of [`nt_block_packed`]: `dst = / += dequant(Xq · Wqᵀ)`
+/// over a column window of a strided **int8** source buffer against a
+/// [`QuantPanels`] weight, finishing each i32 accumulator with the
+/// single shared scalar multiply `acc as f32 * (x_scale * w_scale)`.
+///
+/// Unlike the f32 routine there is no padded-tail path: source row `tt`
+/// must expose `panels.kc * LANES` readable bytes starting at
+/// `src[(src_t0+tt)·src_stride + src_col]`, i.e. the activation buffer
+/// is padded past the widest window (see [`quantize_row_i8`]). Bytes at
+/// k-positions ≥ `panels.k` meet zero weight padding and contribute
+/// exact zero. `src_scales[src_t0 + tt]` is row `tt`'s activation
+/// scale; windowing never re-scales, because the scale is a whole-row
+/// property.
+///
+/// Portable and AVX2 agree bit-for-bit (i32 accumulation is exact; the
+/// f32 finish is shared), so `BLAST_SIMD` never changes quantized
+/// results either.
+#[allow(clippy::too_many_arguments)]
+pub fn qnt_block_packed(
+    mode: SimdMode,
+    src: &[i8],
+    src_scales: &[f32],
+    src_stride: usize,
+    src_t0: usize,
+    src_col: usize,
+    panels: &QuantPanels,
+    rows: usize,
+    dst: &mut [f32],
+    dst_stride: usize,
+    dst_col: usize,
+    accumulate: bool,
+) {
+    let n = panels.n;
+    let kb = panels.kc * LANES;
+    debug_assert!(
+        src_col + kb <= src_stride.max(kb),
+        "int8 source rows must be padded to a full k-chunk past the window"
+    );
+    debug_assert!(dst_col + n <= dst_stride.max(n));
+    let use_avx2 = mode.use_avx2();
+    for tile in 0..panels.tiles() {
+        let j0 = tile * NR;
+        let jn = (j0 + NR).min(n);
+        if j0 >= n {
+            break;
+        }
+        let panel = panels.panel(tile);
+        let wscales = panels.tile_scales(tile);
+        let mut t = 0usize;
+        while t + MR <= rows {
+            let xa = &src[(src_t0 + t) * src_stride + src_col..][..kb];
+            let xb = &src[(src_t0 + t + 1) * src_stride + src_col..][..kb];
+            let mut acc = [[0i32; NR]; MR];
+            mk_q_2xnr(use_avx2, xa, xb, panel, panels.kc, &mut acc);
+            for (tt, row_acc) in acc.iter().enumerate() {
+                let xs = src_scales[src_t0 + t + tt];
+                for (jj, j) in (j0..jn).enumerate() {
+                    let slot = &mut dst[(t + tt) * dst_stride + dst_col + j];
+                    let v = row_acc[jj] as f32 * (xs * wscales[jj]);
+                    if accumulate {
+                        *slot += v;
+                    } else {
+                        *slot = v;
+                    }
+                }
+            }
+            t += MR;
+        }
+        while t < rows {
+            let xa = &src[(src_t0 + t) * src_stride + src_col..][..kb];
+            let mut acc = [0i32; NR];
+            mk_q_1xnr(use_avx2, xa, panel, panels.kc, &mut acc);
+            let xs = src_scales[src_t0 + t];
+            for (jj, j) in (j0..jn).enumerate() {
+                let slot = &mut dst[t * dst_stride + dst_col + j];
+                let v = acc[jj] as f32 * (xs * wscales[jj]);
+                if accumulate {
+                    *slot += v;
+                } else {
+                    *slot = v;
+                }
+            }
+            t += 1;
+        }
+    }
+}
+
+/// 1×NR int8 microkernel dispatch.
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn mk_q_1xnr(use_avx2: bool, x: &[i8], panel: &[i8], kc: usize, acc: &mut [i32; NR]) {
+    if use_avx2 {
+        // SAFETY: avx2 detected (checked by SimdMode::use_avx2).
+        unsafe { mk_q_1xnr_avx2(x, panel, kc, acc) }
+    } else {
+        mk_q_1xnr_portable(x, panel, kc, acc)
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+#[inline]
+fn mk_q_1xnr(_use_avx2: bool, x: &[i8], panel: &[i8], kc: usize, acc: &mut [i32; NR]) {
+    mk_q_1xnr_portable(x, panel, kc, acc)
+}
+
+/// MR×NR int8 microkernel dispatch.
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn mk_q_2xnr(
+    use_avx2: bool,
+    xa: &[i8],
+    xb: &[i8],
+    panel: &[i8],
+    kc: usize,
+    acc: &mut [[i32; NR]; MR],
+) {
+    if use_avx2 {
+        // SAFETY: avx2 detected (checked by SimdMode::use_avx2).
+        unsafe { mk_q_2xnr_avx2(xa, xb, panel, kc, acc) }
+    } else {
+        mk_q_2xnr_portable(xa, xb, panel, kc, acc)
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+#[inline]
+fn mk_q_2xnr(
+    _use_avx2: bool,
+    xa: &[i8],
+    xb: &[i8],
+    panel: &[i8],
+    kc: usize,
+    acc: &mut [[i32; NR]; MR],
+) {
+    mk_q_2xnr_portable(xa, xb, panel, kc, acc)
+}
+
+fn mk_q_1xnr_portable(x: &[i8], panel: &[i8], kc: usize, acc: &mut [i32; NR]) {
+    debug_assert!(x.len() >= kc * LANES);
+    for c in 0..kc {
+        let xc = &x[c * LANES..(c + 1) * LANES];
+        let base = c * NR * LANES;
+        for (j, aj) in acc.iter_mut().enumerate() {
+            let pj = &panel[base + j * LANES..base + (j + 1) * LANES];
+            let mut s = 0i32;
+            for l in 0..LANES {
+                s += xc[l] as i32 * pj[l] as i32;
+            }
+            *aj += s;
+        }
+    }
+}
+
+fn mk_q_2xnr_portable(xa: &[i8], xb: &[i8], panel: &[i8], kc: usize, acc: &mut [[i32; NR]; MR]) {
+    let (a0, a1) = {
+        let (h, t) = acc.split_at_mut(1);
+        (&mut h[0], &mut t[0])
+    };
+    mk_q_1xnr_portable(xa, panel, kc, a0);
+    mk_q_1xnr_portable(xb, panel, kc, a1);
+}
+
+// ----------------------------------------------------------------------
+// AVX2 int8 microkernels
+// ----------------------------------------------------------------------
+//
+// One k-chunk of one tile is exactly NR·LANES = 32 int8 values — one
+// __m256i whose 64-bit lane j holds weight row j's 8 bytes. The 8
+// activation bytes are broadcast across all four 64-bit lanes, the
+// activation sign is transferred onto the weight bytes (`sign_epi8`),
+// and `maddubs` (u8·i8 pair sums, non-saturating here — see module
+// docs) + `madd`(·1) yield 8 i32 lanes where row j = lane 2j + 2j+1.
+// Everything is exact in i32, so this matches the portable scalar loop
+// bit-for-bit with no ordering discipline required.
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn mk_q_1xnr_avx2(x: &[i8], panel: &[i8], kc: usize, acc: &mut [i32; NR]) {
+    use std::arch::x86_64::*;
+    debug_assert!(x.len() >= kc * LANES);
+    let ones = _mm256_set1_epi16(1);
+    let mut vacc = _mm256_setzero_si256();
+    let pp = panel.as_ptr();
+    let xp = x.as_ptr();
+    for c in 0..kc {
+        let bits = (xp.add(c * LANES) as *const i64).read_unaligned();
+        let vx = _mm256_set1_epi64x(bits);
+        let vw = _mm256_loadu_si256(pp.add(c * NR * LANES) as *const __m256i);
+        let ax = _mm256_sign_epi8(vx, vx);
+        let sw = _mm256_sign_epi8(vw, vx);
+        let p16 = _mm256_maddubs_epi16(ax, sw);
+        vacc = _mm256_add_epi32(vacc, _mm256_madd_epi16(p16, ones));
+    }
+    let mut lanes = [0i32; LANES];
+    _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, vacc);
+    for (j, aj) in acc.iter_mut().enumerate() {
+        *aj += lanes[2 * j] + lanes[2 * j + 1];
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn mk_q_2xnr_avx2(
+    xa: &[i8],
+    xb: &[i8],
+    panel: &[i8],
+    kc: usize,
+    acc: &mut [[i32; NR]; MR],
+) {
+    use std::arch::x86_64::*;
+    debug_assert!(xa.len() >= kc * LANES && xb.len() >= kc * LANES);
+    let ones = _mm256_set1_epi16(1);
+    let mut vacc0 = _mm256_setzero_si256();
+    let mut vacc1 = _mm256_setzero_si256();
+    let pp = panel.as_ptr();
+    let pa = xa.as_ptr();
+    let pb = xb.as_ptr();
+    for c in 0..kc {
+        let vw = _mm256_loadu_si256(pp.add(c * NR * LANES) as *const __m256i);
+        let va = _mm256_set1_epi64x((pa.add(c * LANES) as *const i64).read_unaligned());
+        let vb = _mm256_set1_epi64x((pb.add(c * LANES) as *const i64).read_unaligned());
+        let p16a = _mm256_maddubs_epi16(_mm256_sign_epi8(va, va), _mm256_sign_epi8(vw, va));
+        let p16b = _mm256_maddubs_epi16(_mm256_sign_epi8(vb, vb), _mm256_sign_epi8(vw, vb));
+        vacc0 = _mm256_add_epi32(vacc0, _mm256_madd_epi16(p16a, ones));
+        vacc1 = _mm256_add_epi32(vacc1, _mm256_madd_epi16(p16b, ones));
+    }
+    let mut l0 = [0i32; LANES];
+    let mut l1 = [0i32; LANES];
+    _mm256_storeu_si256(l0.as_mut_ptr() as *mut __m256i, vacc0);
+    _mm256_storeu_si256(l1.as_mut_ptr() as *mut __m256i, vacc1);
+    for j in 0..NR {
+        acc[0][j] += l0[2 * j] + l0[2 * j + 1];
+        acc[1][j] += l1[2 * j] + l1[2 * j + 1];
     }
 }
 
@@ -752,6 +1046,198 @@ mod tests {
         assert_eq!(SimdMode::parse("auto"), SimdMode::Auto);
         assert_eq!(SimdMode::parse("garbage"), SimdMode::Auto);
         assert!(!SimdMode::Portable.use_avx2());
+    }
+
+    /// Dequantized int8 value of weight row `o`, k-index `c`.
+    fn qw_at(p: &QuantPanels, o: usize, c: usize) -> i32 {
+        let panel = p.panel(o / NR);
+        panel[(c / LANES) * NR * LANES + (o % NR) * LANES + (c % LANES)] as i32
+    }
+
+    #[test]
+    fn quantize_row_i8_scale_padding_and_clamp() {
+        let x = [1.0f32, -2.0, 0.5, -4.0];
+        let mut q = [7i8; 8]; // oversized: padding must be zeroed
+        let s = quantize_row_i8(&x, &mut q);
+        assert_eq!(s, 4.0 / 127.0);
+        assert_eq!(q[..4], [32, -64, 16, -127]);
+        assert_eq!(q[4..], [0, 0, 0, 0]);
+        // All-zero row: zero scale, zero bytes.
+        let s0 = quantize_row_i8(&[0.0, -0.0], &mut q[..4]);
+        assert_eq!(s0, 0.0);
+        assert_eq!(q[..4], [0, 0, 0, 0]);
+        // −128 is never produced, whatever the data.
+        let mut rng = Rng::new(890);
+        let row: Vec<f32> = (0..257).map(|_| rng.gaussian() * 10.0).collect();
+        let mut qr = vec![0i8; 264];
+        quantize_row_i8(&row, &mut qr);
+        assert!(qr.iter().all(|&v| v != i8::MIN), "clamp must exclude -128");
+    }
+
+    #[test]
+    fn qnt_block_packed_matches_integer_reference_bitwise() {
+        // The quantized kernel's contract: an exact i32 dot of the
+        // quantized operands, then one shared f32 finish. Check it
+        // bitwise against a scalar reconstruction — portable mode.
+        let mut rng = Rng::new(891);
+        for &(rows, n, k) in &[(1usize, 3usize, 9usize), (2, 4, 8), (3, 5, 7), (5, 13, 31), (4, 2, 40)] {
+            let w = rng.gaussian_matrix(n, k, 1.0);
+            let x = rng.gaussian_matrix(rows, k, 1.0);
+            let panels = QuantPanels::pack_rows(&w);
+            let kb = panels.kc * LANES;
+            let mut srcq = vec![0i8; rows * kb];
+            let mut scales = vec![0.0f32; rows];
+            for t in 0..rows {
+                scales[t] = quantize_row_i8(x.row(t), &mut srcq[t * kb..(t + 1) * kb]);
+            }
+            let mut out = vec![0.0f32; rows * n];
+            qnt_block_packed(
+                SimdMode::Portable, &srcq, &scales, kb, 0, 0, &panels, rows, &mut out, n, 0, false,
+            );
+            for t in 0..rows {
+                for o in 0..n {
+                    let acc: i32 = (0..k)
+                        .map(|c| srcq[t * kb + c] as i32 * qw_at(&panels, o, c))
+                        .sum();
+                    let want = acc as f32 * (scales[t] * panels.tile_scales(o / NR)[o % NR]);
+                    assert_eq!(
+                        out[t * n + o].to_bits(),
+                        want.to_bits(),
+                        "rows={rows} n={n} k={k} t={t} o={o}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn qnt_block_packed_window_and_accumulate() {
+        // Column-windowed strided source with src_t0 offset, plus
+        // accumulate mode — the plan executor's gather/scatter form.
+        let mut rng = Rng::new(892);
+        let (rows, k, n, src_col, dst_col, dst_stride) = (5usize, 9usize, 6usize, 3, 4, 15);
+        let w = rng.gaussian_matrix(n, k, 1.0);
+        let panels = QuantPanels::pack_rows(&w);
+        let kb = panels.kc * LANES;
+        // Row payload is wider than the window; stride leaves a full
+        // k-chunk readable past src_col (the padding requirement).
+        let stride = src_col + kb + 2;
+        let x = rng.gaussian_matrix(rows + 2, stride, 1.0);
+        let mut srcq = vec![0i8; (rows + 2) * stride];
+        let mut scales = vec![0.0f32; rows + 2];
+        for t in 0..rows + 2 {
+            scales[t] = quantize_row_i8(&x.row(t)[..stride], &mut srcq[t * stride..(t + 1) * stride]);
+        }
+        let mut dst = vec![0.0f32; rows * dst_stride];
+        qnt_block_packed(
+            SimdMode::Portable, &srcq, &scales, stride, 2, src_col, &panels, rows, &mut dst,
+            dst_stride, dst_col, false,
+        );
+        let expect_one = |t: usize, o: usize| -> f32 {
+            // Window bytes past k are real quantized activations, but
+            // the weight padding there is zero — exact zero products.
+            let acc: i32 = (0..k)
+                .map(|c| srcq[(2 + t) * stride + src_col + c] as i32 * qw_at(&panels, o, c))
+                .sum();
+            acc as f32 * (scales[2 + t] * panels.tile_scales(o / NR)[o % NR])
+        };
+        for t in 0..rows {
+            for o in 0..n {
+                let got = dst[t * dst_stride + dst_col + o];
+                assert_eq!(got.to_bits(), expect_one(t, o).to_bits(), "write t={t} o={o}");
+            }
+        }
+        let before = dst.clone();
+        qnt_block_packed(
+            SimdMode::Portable, &srcq, &scales, stride, 2, src_col, &panels, rows, &mut dst,
+            dst_stride, dst_col, true,
+        );
+        for t in 0..rows {
+            for o in 0..n {
+                let idx = t * dst_stride + dst_col + o;
+                let want = before[idx] + expect_one(t, o);
+                assert_eq!(dst[idx].to_bits(), want.to_bits(), "accumulate t={t} o={o}");
+            }
+        }
+        for t in 0..rows {
+            for c in 0..dst_col {
+                assert_eq!(dst[t * dst_stride + c], 0.0, "untouched dst column");
+            }
+        }
+    }
+
+    #[test]
+    fn qnt_avx2_bit_identical_to_portable_when_detected() {
+        if !avx2_detected() {
+            eprintln!("avx2 not detected; skipping int8 SIMD bit-identity check");
+            return;
+        }
+        let mut rng = Rng::new(893);
+        for &(rows, n, k) in
+            &[(1usize, 3usize, 9usize), (2, 8, 64), (5, 13, 31), (7, 40, 129), (4, 4, 8)]
+        {
+            let w = rng.gaussian_matrix(n, k, 1.0);
+            let x = rng.gaussian_matrix(rows, k, 1.0);
+            let panels = QuantPanels::pack_rows(&w);
+            let kb = panels.kc * LANES;
+            let mut srcq = vec![0i8; rows * kb];
+            let mut scales = vec![0.0f32; rows];
+            for t in 0..rows {
+                scales[t] = quantize_row_i8(x.row(t), &mut srcq[t * kb..(t + 1) * kb]);
+            }
+            let mut a = vec![0.0f32; rows * n];
+            let mut b = vec![0.0f32; rows * n];
+            qnt_block_packed(
+                SimdMode::Portable, &srcq, &scales, kb, 0, 0, &panels, rows, &mut a, n, 0, false,
+            );
+            qnt_block_packed(
+                SimdMode::Avx2, &srcq, &scales, kb, 0, 0, &panels, rows, &mut b, n, 0, false,
+            );
+            for (i, (pa, pb)) in a.iter().zip(&b).enumerate() {
+                assert_eq!(
+                    pa.to_bits(),
+                    pb.to_bits(),
+                    "rows={rows} n={n} k={k} elem {i}: portable {pa} vs avx2 {pb}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn qnt_error_within_deterministic_quantization_bound() {
+        // |y_q − y| ≤ (s_w/2)·‖x‖₁ + (s_x/2)·‖w‖₁ + k·s_x·s_w/4 — the
+        // worst-case round-to-nearest bound, plus f32 rounding slop.
+        let mut rng = Rng::new(894);
+        for &(rows, n, k) in &[(3usize, 5usize, 17usize), (2, 8, 64), (1, 13, 100)] {
+            let w = rng.gaussian_matrix(n, k, 1.0);
+            let x = rng.gaussian_matrix(rows, k, 1.0);
+            let panels = QuantPanels::pack_rows(&w);
+            let kb = panels.kc * LANES;
+            let mut srcq = vec![0i8; rows * kb];
+            let mut scales = vec![0.0f32; rows];
+            for t in 0..rows {
+                scales[t] = quantize_row_i8(x.row(t), &mut srcq[t * kb..(t + 1) * kb]);
+            }
+            let mut out = vec![0.0f32; rows * n];
+            qnt_block_packed(
+                SimdMode::Portable, &srcq, &scales, kb, 0, 0, &panels, rows, &mut out, n, 0, false,
+            );
+            for t in 0..rows {
+                let x1: f32 = x.row(t).iter().map(|v| v.abs()).sum();
+                for o in 0..n {
+                    let want = dot_ref(x.row(t), w.row(o));
+                    let w1: f32 = w.row(o).iter().map(|v| v.abs()).sum();
+                    let (sx, sw) = (scales[t], panels.tile_scales(o / NR)[o % NR]);
+                    let tol =
+                        0.5 * (sw * x1 + sx * w1) + 0.25 * k as f32 * sx * sw + 1e-4 * (1.0 + want.abs());
+                    let got = out[t * n + o];
+                    assert!(
+                        (got - want).abs() <= tol,
+                        "rows={rows} n={n} k={k} t={t} o={o}: {got} vs {want} (tol {tol})"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -38,7 +38,12 @@
 //!   registered in sequential (`plan_seq`) and batch-row-parallel
 //!   (`plan_par`) variants; the autotuner picks per (plan signature,
 //!   shape, batch-bucket), so Monarch/BlockDiag/LowRank shapes get
-//!   tuned execution instead of hardcoded loops.
+//!   tuned execution instead of hardcoded loops. Int8 variants
+//!   (`plan_seq_i8` / `plan_par_i8`) run quantized weight panels
+//!   through the i32-exact int8 microkernels; they only support
+//!   `q=i8` plan signatures, while the f32 variants support every
+//!   plan — so a quantized signature gets a genuine f32-vs-int8
+//!   shoot-out at tuning time.
 //! * [`autotune::Autotuner`] — benchmarks the candidate kernels the
 //!   first time each `(structure, shape, batch-bucket)` key is seen,
 //!   caches the winner in-process, and (optionally) persists the plan
@@ -61,8 +66,9 @@
 //! Environment knobs:
 //!
 //! * `BLAST_KERNEL=<name>` — force one kernel (e.g. `naive`,
-//!   `dense_tiled`, `dense_parallel`, `plan_seq`, `plan_par`) for every
-//!   op it supports; used by the benches to compare kernels.
+//!   `dense_tiled`, `dense_parallel`, `plan_seq`, `plan_par`,
+//!   `plan_seq_i8`, `plan_par_i8`) for every op it supports; used by
+//!   the benches to compare kernels.
 //! * `BLAST_SIMD=auto|avx2|portable` — SIMD path selection (see above).
 //! * `BLAST_PACK_CACHE_MB=<mib>` — packed-panel cache budget.
 //! * `BLAST_AUTOTUNE_CACHE=<path>` — load the plan table from `<path>`
@@ -82,11 +88,14 @@
 //!
 //! `op` is the structure-plan signature (`"dense"` for raw dense ops;
 //! `"plan:dense"`, `"plan:lowrank(r=…)"`, `"plan:monarch(b=…,t=…)"`,
-//! `"plan:blockdiag(b=…,t=…)"`, `"plan:blast(b=…,r=…)"` for plan ops),
-//! and `batch` is the bucket ceiling (1, 8, 64, 4096), so decode
-//! (batch=1) and prefill (batch≫1) tune independently. Entries with
-//! unknown tags or kernel names (e.g. the pre-plan `"blast(b=…)"` tags)
-//! are skipped and simply re-tuned. Regenerate a plan file with
+//! `"plan:blockdiag(b=…,t=…)"`, `"plan:blast(b=…,r=…)"` for plan ops;
+//! int8-quantized plans carry a `q=i8` suffix inside the parens, e.g.
+//! `"plan:blast(b=…,r=…,q=i8)"` / `"plan:dense(q=i8)"`, and tune
+//! independently of their f32 twins), and `batch` is the bucket ceiling
+//! (1, 8, 64, 4096), so decode (batch=1) and prefill (batch≫1) tune
+//! independently. Entries with unknown tags or kernel names (e.g. the
+//! pre-plan `"blast(b=…)"` tags) are skipped and simply re-tuned.
+//! Regenerate a plan file with
 //! `BLAST_AUTOTUNE_CACHE=plans.json cargo bench --bench blast_matmul`.
 
 pub mod autotune;
@@ -100,10 +109,11 @@ pub mod tiled;
 pub use autotune::{Autotuner, PlanKey};
 pub use micro::{SimdMode, LANES, MR, NR};
 pub use naive::NaiveKernel;
-pub use pack::{PackCache, PackedPanels};
+pub use pack::{pack_cache, PackCache, PackedPanels, QuantPanels};
 pub use parallel::ParallelKernel;
 pub use plan::{
-    plan_cache, PlanCache, PlanCell, PlanKernel, PlanKind, PlanOperands, PlanSig, StructPlan,
+    plan_cache, PlanCache, PlanCell, PlanKernel, PlanKind, PlanOperands, PlanSig, QuantMode,
+    StructPlan,
 };
 pub use tiled::TiledKernel;
 
@@ -257,6 +267,8 @@ impl KernelEngine {
             Box::new(ParallelKernel),
             Box::new(PlanKernel::sequential()),
             Box::new(PlanKernel::row_parallel()),
+            Box::new(PlanKernel::sequential_i8()),
+            Box::new(PlanKernel::row_parallel_i8()),
         ];
         let tuner = Autotuner::from_env();
         let forced = std::env::var("BLAST_KERNEL")

@@ -11,13 +11,21 @@
 //! Weights are packed **once per (weights, shape)** and cached in the
 //! process-wide [`PackCache`]: the key is the weight buffer's address +
 //! shape, validated on every hit by a content fingerprint — full FNV
-//! for buffers of ≤ [`FULL_HASH_LIMIT`] elements, head/tail/strided
-//! sampling above that (see [`fingerprint`]'s docs for the exact
-//! detection contract and its deliberate blind spot for surgical
+//! for buffers of ≤ [`FULL_HASH_LIMIT`] elements, head/tail/center/
+//! strided sampling above that (see [`fingerprint`]'s docs for the
+//! exact detection contract and its deliberate blind spot for surgical
 //! single-element edits of large weights). Serving-path weights are
 //! immutable after load; the fingerprint is a safety net for
 //! whole-tensor in-place updates (optimizer steps, factor sweeps),
 //! which always touch sampled elements.
+//!
+//! Alongside the f32 [`PackedPanels`], [`QuantPanels`] holds the same
+//! panel layout quantized to **int8 with per-panel-row symmetric
+//! scales** (one f32 scale per packed output row, stored grouped by
+//! `NR`-row panel so the microkernel's dequant reads are as local as
+//! its value reads). Quantized panels are first-class cache entries:
+//! same key space (plus a quant bit), same fingerprint validation, and
+//! their scale bytes count toward the LRU byte budget.
 //!
 //! The cache is **byte-bounded**: packed panels are evicted in
 //! least-recently-used order whenever the total packed bytes exceed the
@@ -118,19 +126,146 @@ impl PackedPanels {
     }
 }
 
-/// Cache key: buffer identity + shape + pack orientation.
+/// A weight matrix repacked into int8 microkernel panels with
+/// per-packed-row symmetric scales.
+///
+/// Same tile/k-chunk interleaving as [`PackedPanels`] (element
+/// `(row o, k-index c)` lives at
+/// `tile·stride + (c/LANES)·NR·LANES + (o%NR)·LANES + c%LANES`, with
+/// `stride = kc·NR·LANES`), values quantized as
+/// `q = round(v / s)` clamped to `[-127, 127]` with
+/// `s = max|row| / 127` — the value `-128` is never produced, which is
+/// what keeps the AVX2 `maddubs` pair-sums exact (see
+/// `micro`'s int8 contract). Scales are stored panel-grouped:
+/// `scales[tile·NR + jj]` is the scale of packed row `tile·NR + jj`;
+/// padding rows carry scale `0.0` (their quantized values are all
+/// zero, so they can never contribute).
+pub struct QuantPanels {
+    /// Output rows represented (un-padded).
+    pub n: usize,
+    /// Shared (contraction) dimension (un-padded).
+    pub k: usize,
+    /// Number of 8-wide k-chunks (`k.div_ceil(LANES)`).
+    pub kc: usize,
+    /// Panel data: `tiles × kc × NR × LANES` int8, fully zero-padded.
+    pub data: Vec<i8>,
+    /// Per-packed-row dequant scales, `tiles × NR` entries.
+    pub scales: Vec<f32>,
+}
+
+impl QuantPanels {
+    /// Number of `NR`-row tiles.
+    #[inline]
+    pub fn tiles(&self) -> usize {
+        self.n.div_ceil(NR)
+    }
+
+    /// The packed panel for one tile (`kc · NR · LANES` int8 values).
+    #[inline]
+    pub fn panel(&self, tile: usize) -> &[i8] {
+        let stride = self.kc * NR * LANES;
+        &self.data[tile * stride..(tile + 1) * stride]
+    }
+
+    /// The `NR` dequant scales for one tile's packed rows.
+    #[inline]
+    pub fn tile_scales(&self, tile: usize) -> &[f32] {
+        &self.scales[tile * NR..(tile + 1) * NR]
+    }
+
+    /// Resident bytes (values + scales) — what the cache budget counts.
+    pub fn bytes(&self) -> usize {
+        self.data.len() + self.scales.len() * std::mem::size_of::<f32>()
+    }
+
+    fn empty(n: usize, k: usize) -> QuantPanels {
+        let kc = k.div_ceil(LANES);
+        let tiles = n.div_ceil(NR);
+        QuantPanels {
+            n,
+            k,
+            kc,
+            data: vec![0; tiles * kc * NR * LANES],
+            scales: vec![0.0; tiles * NR],
+        }
+    }
+
+    /// Quantize-and-pack the rows of `w` (for `Y = X · Wᵀ`).
+    pub fn pack_rows(w: &Matrix) -> QuantPanels {
+        let mut p = QuantPanels::empty(w.rows, w.cols);
+        for o in 0..w.rows {
+            p.write_row(o, w.row(o).iter().copied());
+        }
+        p
+    }
+
+    /// Quantize-and-pack the **columns** of `v` (for `z = Vᵀ x`,
+    /// gathered without materializing the transpose).
+    pub fn pack_cols(v: &Matrix) -> QuantPanels {
+        let mut p = QuantPanels::empty(v.cols, v.rows);
+        for o in 0..v.cols {
+            p.write_row(o, (0..v.rows).map(|c| v.at(c, o)));
+        }
+        p
+    }
+
+    fn write_row(&mut self, o: usize, row: impl Iterator<Item = f32> + Clone) {
+        let max_abs = row.clone().fold(0.0f32, |m, v| m.max(v.abs()));
+        if max_abs == 0.0 || !max_abs.is_finite() {
+            // All-zero (or non-finite) row: scale 0.0, values stay 0.
+            return;
+        }
+        let scale = max_abs / 127.0;
+        self.scales[o] = scale;
+        let inv = 127.0 / max_abs;
+        let stride = self.kc * NR * LANES;
+        let tile = o / NR;
+        let jj = o % NR;
+        let base = tile * stride + jj * LANES;
+        for (c, v) in row.enumerate() {
+            let q = (v * inv).round().clamp(-127.0, 127.0) as i8;
+            self.data[base + (c / LANES) * NR * LANES + (c % LANES)] = q;
+        }
+    }
+
+    /// Dequantized packed row `o` (tests / diagnostics).
+    pub fn unpack_row(&self, o: usize) -> Vec<f32> {
+        let stride = self.kc * NR * LANES;
+        let tile = o / NR;
+        let jj = o % NR;
+        let base = tile * stride + jj * LANES;
+        let s = self.scales[o];
+        (0..self.k)
+            .map(|c| {
+                self.data[base + (c / LANES) * NR * LANES + (c % LANES)] as f32 * s
+            })
+            .collect()
+    }
+}
+
+/// Cache key: buffer identity + shape + pack orientation + precision.
 #[derive(Clone, Copy, PartialEq, Eq, Hash)]
 struct PackKey {
     ptr: usize,
     rows: usize,
     cols: usize,
     cols_packed: bool,
+    quant: bool,
+}
+
+/// Either precision's panels — one map holds both, so f32 and int8
+/// entries share the byte budget and the LRU order.
+#[derive(Clone)]
+enum PanelData {
+    F32(Arc<PackedPanels>),
+    I8(Arc<QuantPanels>),
 }
 
 struct PackEntry {
     fingerprint: u64,
-    panels: Arc<PackedPanels>,
-    /// Packed bytes this entry holds (panel data only).
+    panels: PanelData,
+    /// Packed bytes this entry holds (panel data, plus scale bytes for
+    /// quantized entries).
     bytes: usize,
     /// Recency tick of the last hit (relaxed: approximate order is
     /// enough for eviction, and the hot path must stay lock-free).
@@ -205,20 +340,44 @@ impl PackCache {
 
     /// Packed rows of `w`, from cache when the fingerprint still matches.
     pub fn rows(&self, w: &Matrix) -> Arc<PackedPanels> {
-        self.get(w, false)
+        match self.get(w, false, false) {
+            PanelData::F32(p) => p,
+            PanelData::I8(_) => unreachable!("f32 lookup returned quant panels"),
+        }
     }
 
     /// Packed columns of `v`, from cache when the fingerprint matches.
     pub fn cols(&self, v: &Matrix) -> Arc<PackedPanels> {
-        self.get(v, true)
+        match self.get(v, true, false) {
+            PanelData::F32(p) => p,
+            PanelData::I8(_) => unreachable!("f32 lookup returned quant panels"),
+        }
     }
 
-    fn get(&self, w: &Matrix, cols_packed: bool) -> Arc<PackedPanels> {
+    /// Int8-quantized packed rows of `w` (distinct cache entry from the
+    /// f32 packing of the same buffer).
+    pub fn rows_q(&self, w: &Matrix) -> Arc<QuantPanels> {
+        match self.get(w, false, true) {
+            PanelData::I8(p) => p,
+            PanelData::F32(_) => unreachable!("quant lookup returned f32 panels"),
+        }
+    }
+
+    /// Int8-quantized packed columns of `v`.
+    pub fn cols_q(&self, v: &Matrix) -> Arc<QuantPanels> {
+        match self.get(v, true, true) {
+            PanelData::I8(p) => p,
+            PanelData::F32(_) => unreachable!("quant lookup returned f32 panels"),
+        }
+    }
+
+    fn get(&self, w: &Matrix, cols_packed: bool, quant: bool) -> PanelData {
         let key = PackKey {
             ptr: w.data.as_ptr() as usize,
             rows: w.rows,
             cols: w.cols,
             cols_packed,
+            quant,
         };
         let fp = fingerprint(&w.data);
         {
@@ -227,18 +386,29 @@ impl PackCache {
                 if e.fingerprint == fp {
                     e.last_used.store(self.tick.fetch_add(1, Ordering::Relaxed), Ordering::Relaxed);
                     self.stats.hits.inc();
-                    return Arc::clone(&e.panels);
+                    return e.panels.clone();
                 }
                 self.stats.fingerprint_mismatches.inc();
             }
         }
         self.stats.misses.inc();
-        let panels = Arc::new(if cols_packed {
-            PackedPanels::pack_cols(w)
+        let (panels, bytes) = if quant {
+            let p = Arc::new(if cols_packed {
+                QuantPanels::pack_cols(w)
+            } else {
+                QuantPanels::pack_rows(w)
+            });
+            let bytes = p.bytes();
+            (PanelData::I8(p), bytes)
         } else {
-            PackedPanels::pack_rows(w)
-        });
-        let bytes = panels.data.len() * std::mem::size_of::<f32>();
+            let p = Arc::new(if cols_packed {
+                PackedPanels::pack_cols(w)
+            } else {
+                PackedPanels::pack_rows(w)
+            });
+            let bytes = p.data.len() * std::mem::size_of::<f32>();
+            (PanelData::F32(p), bytes)
+        };
         let mut inner = self.entries.write().unwrap();
         if let Some(old) = inner.map.remove(&key) {
             // Stale entry for a mutated weight: replace, reclaim bytes.
@@ -248,7 +418,7 @@ impl PackCache {
             key,
             PackEntry {
                 fingerprint: fp,
-                panels: Arc::clone(&panels),
+                panels: panels.clone(),
                 bytes,
                 last_used: AtomicU64::new(self.tick.fetch_add(1, Ordering::Relaxed)),
             },
@@ -319,17 +489,25 @@ pub const FULL_HASH_LIMIT: usize = 1024;
 ///
 /// Buffers of ≤ [`FULL_HASH_LIMIT`] elements are hashed in full —
 /// **any** in-place mutation invalidates. Larger buffers hash the
-/// first 64, the last 64, and 128 evenly strided interior elements:
-/// whole-tensor updates (optimizer steps, factor sweeps, checkpoint
-/// loads) always touch sampled elements and are detected, but a
-/// surgical edit of a single unsampled element of a large cached
-/// weight would not be. That trade keeps hit validation O(1) at
-/// serving sizes; serving-path weights are immutable after load, and
-/// the mutation-heavy paths (factorization, attention scores) use the
-/// unpacked kernels, which never consult this cache. Code that does
-/// fine-grained in-place edits of large weights must route them
-/// through a fresh buffer (or the allocating `Matrix` ops) rather
-/// than relying on sampled detection.
+/// first 64, the last 64, a contiguous 64-element window straddling
+/// the buffer midpoint, and 128 evenly strided interior elements. The
+/// strided sample has a fixed phase (it starts at index 64), so before
+/// the center window was added a localized mid-buffer edit — one
+/// rewritten block of a block-structured factor, say — could land
+/// entirely between strides; the dense center window closes the most
+/// likely such gap. Whole-tensor updates (optimizer steps, factor
+/// sweeps, checkpoint loads) always touch sampled elements and are
+/// detected, but a surgical edit of a single unsampled element of a
+/// large cached weight still would not be. That trade keeps hit
+/// validation O(1) at serving sizes; serving-path weights are
+/// immutable after load, and the mutation-heavy paths (factorization,
+/// attention scores) use the unpacked kernels, which never consult
+/// this cache. Code that does fine-grained in-place edits of large
+/// weights must route them through a fresh buffer (or the allocating
+/// `Matrix` ops) rather than relying on sampled detection. Quantized
+/// panel entries make silent stale reuse costlier — one stale scale
+/// corrupts a whole panel — which is why the sample got denser rather
+/// than sparser.
 fn fingerprint(data: &[f32]) -> u64 {
     const FNV_OFFSET: u64 = 0xcbf29ce484222325;
     const FNV_PRIME: u64 = 0x100000001b3;
@@ -352,6 +530,14 @@ fn fingerprint(data: &[f32]) -> u64 {
         eat(v);
     }
     for &v in &data[n - 64..] {
+        eat(v);
+    }
+    // Deterministic center window: 64 contiguous elements straddling
+    // the midpoint (clamped inside the interior, so it never re-reads
+    // the head/tail samples). n > FULL_HASH_LIMIT here, so the
+    // interior is always at least 896 elements wide.
+    let mid = (n / 2).saturating_sub(32).clamp(64, n - 128);
+    for &v in &data[mid..mid + 64] {
         eat(v);
     }
     let stride = (n - 128).max(1) / 128 + 1;
@@ -559,5 +745,101 @@ mod tests {
         other[0] = 1.0;
         other[10_000] = 2.0;
         assert_ne!(fingerprint(&other), f2);
+    }
+
+    #[test]
+    fn fingerprint_center_window_catches_phase_missed_edit() {
+        // n = 10_000 -> stride = (10_000-128)/128 + 1 = 78, strided
+        // samples at 64 + 78k. Index 4979 sits inside the center window
+        // [4968, 5032) but is not 64 + 78k for any k (4978 is the
+        // nearest strided sample) — before the center window, this edit
+        // was invisible to the sampled fingerprint.
+        let mut data = vec![0.5f32; 10_000];
+        let f0 = fingerprint(&data);
+        data[4979] = 9.0;
+        assert_ne!(fingerprint(&data), f0, "center-window sample must see the edit");
+    }
+
+    #[test]
+    fn quant_pack_rows_round_trip_within_scale_step() {
+        let mut rng = Rng::new(880);
+        for &(n, k) in &[(1usize, 1usize), (3, 8), (4, 9), (5, 17), (13, 31)] {
+            let w = rng.gaussian_matrix(n, k, 1.0);
+            let p = QuantPanels::pack_rows(&w);
+            assert_eq!(p.n, n);
+            assert_eq!(p.k, k);
+            assert_eq!(p.scales.len(), p.tiles() * NR);
+            for o in 0..n {
+                let deq = p.unpack_row(o);
+                let max_abs = w.row(o).iter().fold(0.0f32, |m, v| m.max(v.abs()));
+                // Symmetric round-to-nearest: error per element is at
+                // most half a quantization step.
+                let tol = max_abs / 127.0 * 0.5 + 1e-7;
+                for (c, (&got, &want)) in deq.iter().zip(w.row(o)).enumerate() {
+                    assert!(
+                        (got - want).abs() <= tol,
+                        "n={n} k={k} row {o} col {c}: {got} vs {want} (tol {tol})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quant_pack_cols_matches_transposed_pack_rows() {
+        let mut rng = Rng::new(881);
+        let v = rng.gaussian_matrix(17, 5, 1.0);
+        let pc = QuantPanels::pack_cols(&v);
+        let pr = QuantPanels::pack_rows(&v.transpose());
+        assert_eq!(pc.data, pr.data, "col-pack must equal row-pack of the transpose");
+        assert_eq!(pc.scales, pr.scales);
+    }
+
+    #[test]
+    fn quant_padding_rows_have_zero_scale_and_values() {
+        let mut rng = Rng::new(882);
+        let w = rng.gaussian_matrix(5, 9, 1.0); // ragged tile AND ragged k
+        let p = QuantPanels::pack_rows(&w);
+        let stride = p.kc * NR * LANES;
+        for tile in 0..p.tiles() {
+            for jj in 0..NR {
+                let o = tile * NR + jj;
+                if o >= p.n {
+                    assert_eq!(p.scales[o], 0.0, "padding row {o} must have zero scale");
+                }
+                for c in 0..p.kc * LANES {
+                    let v = p.data[tile * stride + (c / LANES) * NR * LANES + jj * LANES + (c % LANES)];
+                    if o >= p.n || c >= p.k {
+                        assert_eq!(v, 0, "padding at tile={tile} jj={jj} c={c}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quant_entries_are_distinct_and_budgeted() {
+        let cache = PackCache::with_capacity_bytes(1 << 20);
+        let mut rng = Rng::new(883);
+        let mut w = rng.gaussian_matrix(8, 8, 1.0);
+        let pf = cache.rows(&w);
+        let pq = cache.rows_q(&w);
+        assert_eq!(cache.len(), 2, "f32 and int8 packings are separate entries");
+        // Scale bytes are part of the resident accounting: the quant
+        // entry is values (64 i8) + scales (8 f32) = 96 bytes, the f32
+        // entry 64 f32 = 256 bytes.
+        assert_eq!(cache.bytes(), pq.bytes() + pf.data.len() * 4);
+        // Both hit on re-lookup.
+        assert!(Arc::ptr_eq(&pq, &cache.rows_q(&w)));
+        assert_eq!(cache.stats().hits.get(), 1);
+        // In-place mutation invalidates the quant entry too.
+        w.set(2, 3, w.at(2, 3) + 1.0);
+        let pq2 = cache.rows_q(&w);
+        assert!(!Arc::ptr_eq(&pq, &pq2), "mutated weight must requantize");
+        assert_eq!(cache.stats().fingerprint_mismatches.get(), 1);
+        // Col-quant is yet another entry (the repack above replaced the
+        // stale row-quant entry under its existing key).
+        let _ = cache.cols_q(&w);
+        assert_eq!(cache.len(), 3);
     }
 }

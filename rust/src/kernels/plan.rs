@@ -35,7 +35,7 @@
 //! `Linear::forward_into` allocation-free for **all** structures.
 
 use super::micro::{self, SimdMode};
-use super::pack::{self, PackedPanels};
+use super::pack::{self, PackedPanels, QuantPanels};
 use super::{Couplings, Factors, KernelOp, MatmulKernel};
 use crate::tensor::Matrix;
 use crate::util::par;
@@ -65,29 +65,84 @@ pub enum PlanKind {
     Blast,
 }
 
+/// Numeric precision of a plan's weight panels. Activations and
+/// inter-stage scratch are always f32; `I8` means the *weights* are
+/// int8-quantized at pack time and each stage dynamically quantizes its
+/// f32 input rows (see `micro::quantize_row_i8`). `F32` is the default
+/// and the accuracy reference: a quantized plan's results carry a
+/// bounded-error guarantee (≤1e-2 relative per structure, tested)
+/// against the same plan run in f32, not a bit guarantee.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum QuantMode {
+    #[default]
+    F32,
+    I8,
+}
+
+impl QuantMode {
+    /// CLI / manifest spelling (`"f32"` / `"int8"`).
+    pub fn name(self) -> &'static str {
+        match self {
+            QuantMode::F32 => "f32",
+            QuantMode::I8 => "int8",
+        }
+    }
+
+    /// Inverse of [`name`]; also accepts `"i8"`. `None` on unknown
+    /// spellings, so the CLI can reject rather than default.
+    ///
+    /// [`name`]: QuantMode::name
+    pub fn parse(token: &str) -> Option<QuantMode> {
+        match token {
+            "f32" | "fp32" => Some(QuantMode::F32),
+            "int8" | "i8" => Some(QuantMode::I8),
+            _ => None,
+        }
+    }
+}
+
 /// Compact, allocation-free structure identity: the plan half of an
 /// autotuner key, so Monarch/BlockDiag/LowRank shapes get their own
 /// tuned kernel choice instead of hardcoded loops. `b` is blocks per
 /// side (1 when the structure has no blocks), `r` the inner width
-/// (rank `r`, Monarch/BlockDiag `t`; 0 for dense).
+/// (rank `r`, Monarch/BlockDiag `t`; 0 for dense). `q` is the weight
+/// precision — a first-class part of the identity, so the autotuner
+/// races the f32 kernels against the int8 ones per quantized
+/// (signature, shape, batch-bucket).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct PlanSig {
     pub kind: PlanKind,
     pub b: u32,
     pub r: u32,
+    pub q: QuantMode,
 }
 
 impl PlanSig {
+    /// This signature with int8 weight panels.
+    pub fn quantized(self) -> PlanSig {
+        PlanSig { q: QuantMode::I8, ..self }
+    }
+
     /// Stable textual form used in the JSON plan file
-    /// (`"plan:blast(b=8,r=32)"`, `"plan:dense"`, …).
+    /// (`"plan:blast(b=8,r=32)"`, `"plan:blast(b=8,r=32,q=i8)"`,
+    /// `"plan:dense"`, `"plan:dense(q=i8)"`, …). The `q=i8` suffix only
+    /// appears for quantized plans, so every pre-quantization tag keeps
+    /// its exact historical spelling.
     pub fn to_tag_string(self) -> String {
-        match self.kind {
+        let base = match self.kind {
             PlanKind::Dense => "plan:dense".to_string(),
             PlanKind::DenseT => "plan:dense_t".to_string(),
             PlanKind::LowRank => format!("plan:lowrank(r={})", self.r),
             PlanKind::Monarch => format!("plan:monarch(b={},t={})", self.b, self.r),
             PlanKind::BlockDiag => format!("plan:blockdiag(b={},t={})", self.b, self.r),
             PlanKind::Blast => format!("plan:blast(b={},r={})", self.b, self.r),
+        };
+        match self.q {
+            QuantMode::F32 => base,
+            QuantMode::I8 => match base.strip_suffix(')') {
+                Some(open) => format!("{open},q=i8)"),
+                None => format!("{base}(q=i8)"),
+            },
         }
     }
 
@@ -96,23 +151,35 @@ impl PlanSig {
     /// [`to_tag_string`]: PlanSig::to_tag_string
     pub fn parse(tag: &str) -> Option<Self> {
         let body = tag.strip_prefix("plan:")?;
-        if body == "dense" {
-            return Some(PlanSig { kind: PlanKind::Dense, b: 1, r: 0 });
-        }
-        if body == "dense_t" {
-            return Some(PlanSig { kind: PlanKind::DenseT, b: 1, r: 0 });
-        }
-        if let Some(inner) = body.strip_prefix("lowrank(r=").and_then(|s| s.strip_suffix(')')) {
-            return Some(PlanSig { kind: PlanKind::LowRank, b: 1, r: inner.parse().ok()? });
-        }
-        let two = |prefix: &str, kind: PlanKind, mid: &str| -> Option<PlanSig> {
-            let inner = body.strip_prefix(prefix)?.strip_suffix(')')?;
-            let (b, r) = inner.split_once(mid)?;
-            Some(PlanSig { kind, b: b.parse().ok()?, r: r.parse().ok()? })
+        // Peel the quant suffix first, restoring the closing paren for
+        // the parenthesized forms.
+        let (body, q) = if let Some(core) = body.strip_suffix(",q=i8)") {
+            (format!("{core})"), QuantMode::I8)
+        } else if let Some(core) = body.strip_suffix("(q=i8)") {
+            (core.to_string(), QuantMode::I8)
+        } else {
+            (body.to_string(), QuantMode::F32)
         };
-        two("monarch(b=", PlanKind::Monarch, ",t=")
-            .or_else(|| two("blockdiag(b=", PlanKind::BlockDiag, ",t="))
-            .or_else(|| two("blast(b=", PlanKind::Blast, ",r="))
+        let body = body.as_str();
+        let sig = if body == "dense" {
+            Some(PlanSig { kind: PlanKind::Dense, b: 1, r: 0, q })
+        } else if body == "dense_t" {
+            Some(PlanSig { kind: PlanKind::DenseT, b: 1, r: 0, q })
+        } else if let Some(inner) =
+            body.strip_prefix("lowrank(r=").and_then(|s| s.strip_suffix(')'))
+        {
+            Some(PlanSig { kind: PlanKind::LowRank, b: 1, r: inner.parse().ok()?, q })
+        } else {
+            let two = |prefix: &str, kind: PlanKind, mid: &str| -> Option<PlanSig> {
+                let inner = body.strip_prefix(prefix)?.strip_suffix(')')?;
+                let (b, r) = inner.split_once(mid)?;
+                Some(PlanSig { kind, b: b.parse().ok()?, r: r.parse().ok()?, q })
+            };
+            two("monarch(b=", PlanKind::Monarch, ",t=")
+                .or_else(|| two("blockdiag(b=", PlanKind::BlockDiag, ",t="))
+                .or_else(|| two("blast(b=", PlanKind::Blast, ",r="))
+        };
+        sig
     }
 }
 
@@ -198,7 +265,7 @@ impl StructPlan {
     /// Dense `W (m×n)`: one full-width row-packed stage.
     pub fn dense(m: usize, n: usize) -> StructPlan {
         StructPlan {
-            sig: PlanSig { kind: PlanKind::Dense, b: 1, r: 0 },
+            sig: PlanSig { kind: PlanKind::Dense, b: 1, r: 0, q: QuantMode::F32 },
             m,
             n,
             s0: 0,
@@ -224,7 +291,7 @@ impl StructPlan {
     /// `Y = X · F` without materializing `Fᵀ`.
     pub fn dense_t(m: usize, n: usize) -> StructPlan {
         let mut p = StructPlan::dense(m, n);
-        p.sig = PlanSig { kind: PlanKind::DenseT, b: 1, r: 0 };
+        p.sig = PlanSig { kind: PlanKind::DenseT, b: 1, r: 0, q: QuantMode::F32 };
         if let PlanStage::Gemm { blocks, .. } = &mut p.stages[0] {
             blocks[0].pack = PackKind::Cols;
         }
@@ -235,7 +302,7 @@ impl StructPlan {
     /// `Y = S0·Pᵀ` (rows). Group 0 is `Q`, group 1 is `P`.
     pub fn low_rank(m: usize, n: usize, r: usize) -> StructPlan {
         StructPlan {
-            sig: PlanSig { kind: PlanKind::LowRank, b: 1, r: r as u32 },
+            sig: PlanSig { kind: PlanKind::LowRank, b: 1, r: r as u32, q: QuantMode::F32 },
             m,
             n,
             s0: r,
@@ -303,7 +370,7 @@ impl StructPlan {
             })
             .collect();
         StructPlan {
-            sig: PlanSig { kind: PlanKind::BlockDiag, b: b as u32, r: t as u32 },
+            sig: PlanSig { kind: PlanKind::BlockDiag, b: b as u32, r: t as u32, q: QuantMode::F32 },
             m,
             n,
             s0: b * t,
@@ -359,7 +426,7 @@ impl StructPlan {
             }
         }
         StructPlan {
-            sig: PlanSig { kind: PlanKind::Monarch, b: b as u32, r: t as u32 },
+            sig: PlanSig { kind: PlanKind::Monarch, b: b as u32, r: t as u32, q: QuantMode::F32 },
             m,
             n,
             s0: b * t,
@@ -412,7 +479,7 @@ impl StructPlan {
             })
             .collect();
         StructPlan {
-            sig: PlanSig { kind: PlanKind::Blast, b: b as u32, r: r as u32 },
+            sig: PlanSig { kind: PlanKind::Blast, b: b as u32, r: r as u32, q: QuantMode::F32 },
             m,
             n,
             s0: b * r,
@@ -442,15 +509,19 @@ impl StructPlan {
 
     /// Rebuild a plan from its signature and shape (the [`PlanCache`]
     /// constructor — a signature plus `(m, n)` fully determines a plan).
+    /// The quant mode rides on the signature only: the stage program is
+    /// identical, and the executor picks f32 or int8 panels from it.
     pub fn build(sig: PlanSig, m: usize, n: usize) -> StructPlan {
-        match sig.kind {
+        let mut p = match sig.kind {
             PlanKind::Dense => StructPlan::dense(m, n),
             PlanKind::DenseT => StructPlan::dense_t(m, n),
             PlanKind::LowRank => StructPlan::low_rank(m, n, sig.r as usize),
             PlanKind::Monarch => StructPlan::monarch(m, n, sig.b as usize, sig.r as usize),
             PlanKind::BlockDiag => StructPlan::block_diag(m, n, sig.b as usize, sig.r as usize),
             PlanKind::Blast => StructPlan::blast(m, n, sig.b as usize, sig.r as usize),
-        }
+        };
+        p.sig.q = sig.q;
+        p
     }
 
     /// Total multiplies per activation row (the structure FLOPs the
@@ -725,6 +796,159 @@ fn couple_stage(
 }
 
 // ----------------------------------------------------------------------
+// Quantized packed executor
+// ----------------------------------------------------------------------
+
+/// Per-thread scratch for the int8 executor: the f32 inter-stage
+/// buffers (unchanged from the f32 path — quantization is stage-local),
+/// one reusable int8 row buffer + per-row scale vector for the current
+/// stage's dynamically quantized input, and the quant-panel handles.
+/// Same reuse discipline as [`PlanScratch`]: capacities persist, so a
+/// warm decode call never allocates.
+#[derive(Default)]
+struct QuantScratch {
+    s0: Vec<f32>,
+    s1: Vec<f32>,
+    xq: Vec<i8>,
+    xs: Vec<f32>,
+    panels: Vec<Arc<QuantPanels>>,
+}
+
+thread_local! {
+    static QSCRATCH: RefCell<QuantScratch> = RefCell::new(QuantScratch::default());
+}
+
+/// Int8 sibling of [`execute_packed`]: the same stage program with
+/// [`micro::qnt_block_packed`] over [`pack::PackCache`] quant entries.
+/// Each `Gemm` stage quantizes its f32 source rows (whole-row symmetric
+/// scales, always scalar) into the reusable int8 buffer, runs the int8
+/// microkernels, and writes f32 — so `Couple` stages and inter-stage
+/// dataflow are untouched. Rows are quantized independently, which
+/// makes the result invariant to row chunking: sequential and
+/// row-parallel quantized execution are bit-identical (tested), while
+/// accuracy versus the f32 plan is a bounded-error guarantee.
+pub(crate) fn execute_packed_i8(
+    mode: SimdMode,
+    x: &Matrix,
+    plan: &StructPlan,
+    ops: &PlanOperands<'_>,
+    t0: usize,
+    rows: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), rows * plan.m);
+    QSCRATCH.with(|cell| {
+        let mut scratch = cell.borrow_mut();
+        let QuantScratch { s0, s1, xq, xs, panels } = &mut *scratch;
+        s0.clear();
+        s0.resize(rows * plan.s0, 0.0);
+        s1.clear();
+        s1.resize(rows * plan.s1, 0.0);
+        let cache = pack::pack_cache();
+        panels.clear();
+        for stage in &plan.stages {
+            if let PlanStage::Gemm { blocks, .. } = stage {
+                for blk in blocks {
+                    let f = ops.factor(blk.group, blk.index as usize);
+                    panels.push(match blk.pack {
+                        PackKind::Rows => cache.rows_q(f),
+                        PackKind::Cols => cache.cols_q(f),
+                    });
+                }
+            }
+        }
+        let mut pi = 0usize;
+        for stage in &plan.stages {
+            match stage {
+                PlanStage::Gemm { src, dst, accumulate, blocks } => {
+                    let stage_panels = &panels[pi..pi + blocks.len()];
+                    pi += blocks.len();
+                    match (src, dst) {
+                        (BufRef::Input, BufRef::Output) => gemm_stage_i8(
+                            mode, &x.data, x.cols, t0, out, plan.m, rows, *accumulate, blocks,
+                            stage_panels, xq, xs,
+                        ),
+                        (BufRef::Input, BufRef::S0) => gemm_stage_i8(
+                            mode, &x.data, x.cols, t0, s0, plan.s0, rows, *accumulate, blocks,
+                            stage_panels, xq, xs,
+                        ),
+                        (BufRef::S0, BufRef::Output) => gemm_stage_i8(
+                            mode, s0, plan.s0, 0, out, plan.m, rows, *accumulate, blocks,
+                            stage_panels, xq, xs,
+                        ),
+                        (BufRef::S0, BufRef::S1) => gemm_stage_i8(
+                            mode, s0, plan.s0, 0, s1, plan.s1, rows, *accumulate, blocks,
+                            stage_panels, xq, xs,
+                        ),
+                        (BufRef::S1, BufRef::Output) => gemm_stage_i8(
+                            mode, s1, plan.s1, 0, out, plan.m, rows, *accumulate, blocks,
+                            stage_panels, xq, xs,
+                        ),
+                        _ => unreachable!("unsupported plan buffer pair {src:?} -> {dst:?}"),
+                    }
+                }
+                PlanStage::Couple { src, dst, b, r } => match (src, dst) {
+                    (BufRef::S0, BufRef::S1) => {
+                        couple_stage(s0, plan.s0, s1, plan.s1, rows, *b as usize, *r as usize, ops)
+                    }
+                    _ => unreachable!("unsupported couple buffer pair {src:?} -> {dst:?}"),
+                },
+            }
+        }
+    });
+}
+
+/// One int8 `Gemm` stage: dynamically quantize the stage's source rows,
+/// then run every block's quantized microkernel product. Rows are laid
+/// out at stride `src_stride + LANES` in the int8 buffer — the extra
+/// zeroed chunk lets [`micro::qnt_block_packed`] read whole k-chunks
+/// at any block window without a tail special case.
+#[allow(clippy::too_many_arguments)]
+fn gemm_stage_i8(
+    mode: SimdMode,
+    src: &[f32],
+    src_stride: usize,
+    src_t0: usize,
+    dst: &mut [f32],
+    dst_stride: usize,
+    rows: usize,
+    accumulate: bool,
+    blocks: &[GemmBlock],
+    panels: &[Arc<QuantPanels>],
+    xq: &mut Vec<i8>,
+    xs: &mut Vec<f32>,
+) {
+    let qstride = src_stride + micro::LANES;
+    xq.clear();
+    xq.resize(rows * qstride, 0);
+    xs.clear();
+    xs.resize(rows, 0.0);
+    for t in 0..rows {
+        let row = &src[(src_t0 + t) * src_stride..][..src_stride];
+        xs[t] = micro::quantize_row_i8(row, &mut xq[t * qstride..(t + 1) * qstride]);
+    }
+    if accumulate {
+        dst[..rows * dst_stride].fill(0.0);
+    }
+    for (blk, p) in blocks.iter().zip(panels) {
+        micro::qnt_block_packed(
+            mode,
+            xq,
+            xs,
+            qstride,
+            0,
+            blk.src_col as usize,
+            p,
+            rows,
+            dst,
+            dst_stride,
+            blk.dst_col as usize,
+            accumulate,
+        );
+    }
+}
+
+// ----------------------------------------------------------------------
 // Reference executor (the per-element contract)
 // ----------------------------------------------------------------------
 
@@ -879,31 +1103,51 @@ fn ref_gemm_row(
 /// changes a bit.
 pub struct PlanKernel {
     row_parallel: bool,
+    quant: bool,
 }
 
 impl PlanKernel {
     /// Single-threaded variant — the decode-path (batch 1) choice.
     pub fn sequential() -> Self {
-        PlanKernel { row_parallel: false }
+        PlanKernel { row_parallel: false, quant: false }
     }
 
     /// Batch-row-parallel variant — the prefill/training-batch choice.
     pub fn row_parallel() -> Self {
-        PlanKernel { row_parallel: true }
+        PlanKernel { row_parallel: true, quant: false }
+    }
+
+    /// Int8 single-threaded variant. Only supports `q=i8` plans; the
+    /// f32 variants support those too (running them in full f32, which
+    /// trivially satisfies the bounded-error guarantee), so the
+    /// autotuner's f32-vs-int8 shoot-out is a genuine race.
+    pub fn sequential_i8() -> Self {
+        PlanKernel { row_parallel: false, quant: true }
+    }
+
+    /// Int8 batch-row-parallel variant.
+    pub fn row_parallel_i8() -> Self {
+        PlanKernel { row_parallel: true, quant: true }
     }
 }
 
 impl MatmulKernel for PlanKernel {
     fn name(&self) -> &'static str {
-        if self.row_parallel {
-            "plan_par"
-        } else {
-            "plan_seq"
+        match (self.quant, self.row_parallel) {
+            (false, false) => "plan_seq",
+            (false, true) => "plan_par",
+            (true, false) => "plan_seq_i8",
+            (true, true) => "plan_par_i8",
         }
     }
 
     fn supports(&self, op: &KernelOp<'_>, _batch: usize) -> bool {
-        matches!(op, KernelOp::Plan { .. })
+        match op {
+            // Int8 kernels require int8 panels; f32 kernels run any
+            // plan (a q=i8 plan in f32 is the accuracy reference).
+            KernelOp::Plan { plan, .. } => !self.quant || plan.sig.q == QuantMode::I8,
+            _ => false,
+        }
     }
 
     fn run(&self, x: &Matrix, op: &KernelOp<'_>) -> Matrix {
@@ -943,14 +1187,15 @@ impl PlanKernel {
         let t0 = (every > 0 && prof.calls.get() % every == 0).then(std::time::Instant::now);
         crate::obs::trace::all_enter(self.name(), 0);
         let mode = micro::simd_mode();
+        let exec = if self.quant { execute_packed_i8 } else { execute_packed };
         if self.row_parallel && batch > 1 {
             let chunk_rows = batch.div_ceil(par::num_threads()).max(1);
             par::par_chunks_mut(out, chunk_rows * plan.m, |ci, chunk| {
                 let rows = chunk.len() / plan.m;
-                execute_packed(mode, x, plan, ops, ci * chunk_rows, rows, chunk);
+                exec(mode, x, plan, ops, ci * chunk_rows, rows, chunk);
             });
         } else {
-            execute_packed(mode, x, plan, ops, 0, batch, out);
+            exec(mode, x, plan, ops, 0, batch, out);
         }
         crate::obs::trace::all_exit(self.name(), 0);
         if let Some(t0) = t0 {
@@ -994,12 +1239,12 @@ impl PlanCache {
     /// Cached [`StructPlan::dense`] (the serial factorization paths'
     /// `X·Wᵀ` form).
     pub fn dense(&self, m: usize, n: usize) -> Arc<StructPlan> {
-        self.get(PlanSig { kind: PlanKind::Dense, b: 1, r: 0 }, m, n)
+        self.get(PlanSig { kind: PlanKind::Dense, b: 1, r: 0, q: QuantMode::F32 }, m, n)
     }
 
     /// Cached [`StructPlan::dense_t`] (the `A·B` form).
     pub fn dense_t(&self, m: usize, n: usize) -> Arc<StructPlan> {
-        self.get(PlanSig { kind: PlanKind::DenseT, b: 1, r: 0 }, m, n)
+        self.get(PlanSig { kind: PlanKind::DenseT, b: 1, r: 0, q: QuantMode::F32 }, m, n)
     }
 
     /// Number of cached plans (diagnostics / tests).
@@ -1068,15 +1313,28 @@ mod tests {
     #[test]
     fn sig_tag_round_trip() {
         for sig in [
-            PlanSig { kind: PlanKind::Dense, b: 1, r: 0 },
-            PlanSig { kind: PlanKind::DenseT, b: 1, r: 0 },
-            PlanSig { kind: PlanKind::LowRank, b: 1, r: 7 },
-            PlanSig { kind: PlanKind::Monarch, b: 4, r: 2 },
-            PlanSig { kind: PlanKind::BlockDiag, b: 2, r: 3 },
-            PlanSig { kind: PlanKind::Blast, b: 8, r: 32 },
+            PlanSig { kind: PlanKind::Dense, b: 1, r: 0, q: QuantMode::F32 },
+            PlanSig { kind: PlanKind::DenseT, b: 1, r: 0, q: QuantMode::F32 },
+            PlanSig { kind: PlanKind::LowRank, b: 1, r: 7, q: QuantMode::F32 },
+            PlanSig { kind: PlanKind::Monarch, b: 4, r: 2, q: QuantMode::F32 },
+            PlanSig { kind: PlanKind::BlockDiag, b: 2, r: 3, q: QuantMode::F32 },
+            PlanSig { kind: PlanKind::Blast, b: 8, r: 32, q: QuantMode::F32 },
         ] {
             assert_eq!(PlanSig::parse(&sig.to_tag_string()), Some(sig));
+            // And the int8 flavor of each.
+            let qsig = sig.quantized();
+            assert_eq!(PlanSig::parse(&qsig.to_tag_string()), Some(qsig));
         }
+        // Quantized tags append q=i8 inside (or create) the parens.
+        assert_eq!(
+            PlanSig { kind: PlanKind::Blast, b: 8, r: 32, q: QuantMode::I8 }.to_tag_string(),
+            "plan:blast(b=8,r=32,q=i8)"
+        );
+        assert_eq!(
+            PlanSig { kind: PlanKind::Dense, b: 1, r: 0, q: QuantMode::I8 }.to_tag_string(),
+            "plan:dense(q=i8)"
+        );
+        assert!(PlanSig::parse("plan:dense(q=i4)").is_none());
         assert!(PlanSig::parse("dense").is_none(), "bare dense is the raw-op tag");
         assert!(PlanSig::parse("plan:nope(b=1)").is_none());
     }
@@ -1214,7 +1472,7 @@ mod tests {
     #[test]
     fn plan_cache_dedupes_and_cell_reuses() {
         let cache = PlanCache::new();
-        let sig = PlanSig { kind: PlanKind::Blast, b: 2, r: 4 };
+        let sig = PlanSig { kind: PlanKind::Blast, b: 2, r: 4, q: QuantMode::F32 };
         let p1 = cache.get(sig, 8, 8);
         let p2 = cache.get(sig, 8, 8);
         assert!(Arc::ptr_eq(&p1, &p2));
@@ -1226,6 +1484,107 @@ mod tests {
         let a = Arc::clone(cell.get_or_build(sig, 8, 8));
         let b = Arc::clone(cell.get_or_build(sig, 8, 8));
         assert!(Arc::ptr_eq(&a, &b));
+    }
+
+    /// Uniform [-1, 1) entries: bounded max/rms ratio keeps the int8
+    /// round-off comfortably inside the tested 1e-2 relative bound
+    /// (gaussian tails push per-row scales, and with them the error,
+    /// right up against it).
+    fn uniform_matrix(rng: &mut Rng, rows: usize, cols: usize) -> Matrix {
+        let data = (0..rows * cols).map(|_| rng.uniform_range(-1.0, 1.0)).collect();
+        Matrix::from_vec(rows, cols, data)
+    }
+
+    fn frobenius_rel_err(got: &[f32], want: &[f32]) -> f32 {
+        let err: f32 = got.iter().zip(want).map(|(a, b)| (a - b) * (a - b)).sum();
+        let den: f32 = want.iter().map(|v| v * v).sum();
+        (err / den.max(f32::MIN_POSITIVE)).sqrt()
+    }
+
+    #[test]
+    fn quantized_blast_plan_bounded_error_and_chunk_invariant() {
+        let mut rng = Rng::new(910);
+        let (batch, m, n, b, r) = (5usize, 12usize, 18usize, 3usize, 4usize);
+        let u: Vec<Matrix> = (0..b).map(|_| uniform_matrix(&mut rng, m / b, r)).collect();
+        let v: Vec<Matrix> = (0..b).map(|_| uniform_matrix(&mut rng, n / b, r)).collect();
+        let s: Vec<Vec<Vec<f32>>> = (0..b)
+            .map(|_| (0..b).map(|_| (0..r).map(|_| rng.uniform_range(-1.0, 1.0)).collect()).collect())
+            .collect();
+        let x = uniform_matrix(&mut rng, batch, n);
+        let plan = StructPlan::build(
+            PlanSig { kind: PlanKind::Blast, b: b as u32, r: r as u32, q: QuantMode::I8 },
+            m,
+            n,
+        );
+        assert_eq!(plan.sig.q, QuantMode::I8, "build must propagate the quant mode");
+        let ops = PlanOperands {
+            g0: Factors::Mats(&v),
+            g1: Factors::Mats(&u),
+            s: Some(Couplings::Nested(&s)),
+        };
+        let mut f32_out = vec![0.0f32; batch * m];
+        execute_packed(SimdMode::Portable, &x, &plan, &ops, 0, batch, &mut f32_out);
+        let mut i8_out = vec![0.0f32; batch * m];
+        execute_packed_i8(SimdMode::Portable, &x, &plan, &ops, 0, batch, &mut i8_out);
+        let rel = frobenius_rel_err(&i8_out, &f32_out);
+        assert!(rel <= 1e-2, "blast int8 vs f32 relative error {rel} > 1e-2");
+        assert!(rel > 0.0, "int8 path suspiciously exact — is it running f32?");
+        // Per-row quantization makes the result invariant to row
+        // chunking: split execution is bit-identical to one call, which
+        // is what makes plan_seq_i8 and plan_par_i8 interchangeable.
+        let mut chunked = vec![0.0f32; batch * m];
+        execute_packed_i8(SimdMode::Portable, &x, &plan, &ops, 0, 2, &mut chunked[..2 * m]);
+        execute_packed_i8(SimdMode::Portable, &x, &plan, &ops, 2, 3, &mut chunked[2 * m..]);
+        for (i, (a, c)) in i8_out.iter().zip(&chunked).enumerate() {
+            assert_eq!(a.to_bits(), c.to_bits(), "elem {i}: whole {a} vs chunked {c}");
+        }
+    }
+
+    #[test]
+    fn quantized_low_rank_plan_bounded_error() {
+        let mut rng = Rng::new(911);
+        let (batch, m, n, r) = (3usize, 9usize, 17usize, 4usize);
+        let p = uniform_matrix(&mut rng, m, r);
+        let q = uniform_matrix(&mut rng, n, r);
+        let x = uniform_matrix(&mut rng, batch, n);
+        let plan = StructPlan::build(
+            PlanSig { kind: PlanKind::LowRank, b: 1, r: r as u32, q: QuantMode::I8 },
+            m,
+            n,
+        );
+        let ops = PlanOperands {
+            g0: Factors::Mats(std::slice::from_ref(&q)),
+            g1: Factors::Mats(std::slice::from_ref(&p)),
+            s: None,
+        };
+        let mut f32_out = vec![0.0f32; batch * m];
+        execute_packed(SimdMode::Portable, &x, &plan, &ops, 0, batch, &mut f32_out);
+        let mut i8_out = vec![0.0f32; batch * m];
+        execute_packed_i8(SimdMode::Portable, &x, &plan, &ops, 0, batch, &mut i8_out);
+        let rel = frobenius_rel_err(&i8_out, &f32_out);
+        assert!(rel <= 1e-2, "lowrank int8 vs f32 relative error {rel} > 1e-2");
+    }
+
+    #[test]
+    fn plan_kernel_i8_variants_support_only_quant_plans() {
+        let f32_plan = StructPlan::dense(4, 8);
+        let i8_plan =
+            StructPlan::build(StructPlan::dense(4, 8).sig.quantized(), 4, 8);
+        let w = Matrix::zeros(4, 8);
+        let ops = PlanOperands::single(&w);
+        let f32_op = KernelOp::Plan { plan: &f32_plan, ops };
+        let i8_op = KernelOp::Plan { plan: &i8_plan, ops };
+        for (k, f32_ok) in [
+            (PlanKernel::sequential(), true),
+            (PlanKernel::row_parallel(), true),
+            (PlanKernel::sequential_i8(), false),
+            (PlanKernel::row_parallel_i8(), false),
+        ] {
+            assert_eq!(k.supports(&f32_op, 1), f32_ok, "{} on f32 plan", k.name());
+            assert!(k.supports(&i8_op, 1), "{} must support i8 plans", k.name());
+        }
+        assert_eq!(PlanKernel::sequential_i8().name(), "plan_seq_i8");
+        assert_eq!(PlanKernel::row_parallel_i8().name(), "plan_par_i8");
     }
 
     #[test]

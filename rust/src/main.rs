@@ -43,6 +43,7 @@ fn usage() -> &'static str {
        blast compress --in dense.bmx --out blast.bmx --structure blast --ratio 0.5 \\\n\
                       --ckpt-dir compress_ckpt --jobs 0   # resumes from ckpt-dir\n\
        blast compress --ratio 0.5 --structure auto        # trains a demo model first\n\
+       blast compress --in dense.bmx --out q.bmx --quantize int8   # int8 weight panels\n\
        blast serve --model blast.bmx --requests 32 --slots 8\n\
        blast stats --model blast.bmx --requests 12        # metrics snapshot\n\
        blast generate --model blast.bmx --tokens 20\n\
@@ -154,6 +155,9 @@ fn cmd_compress(args: &Args) -> Result<()> {
         std::fs::remove_dir_all(&ckpt_dir)?;
         println!("--fresh: cleared {}", ckpt_dir.display());
     }
+    let quantize_tok = args.get_or("quantize", "f32");
+    let quantize = blast_repro::kernels::QuantMode::parse(quantize_tok)
+        .ok_or_else(|| anyhow::anyhow!("unknown --quantize mode `{quantize_tok}` (f32|int8)"))?;
     let compressor = Compressor {
         blast_iters: args.get_usize("iters", 120)?,
         seed: args.get_u64("seed", 0)?,
@@ -167,6 +171,7 @@ fn cmd_compress(args: &Args) -> Result<()> {
             jobs: args.get_usize("jobs", 0)?,
             checkpoint_dir: Some(ckpt_dir.clone()),
             max_layers: None,
+            quantize,
         },
     );
 
@@ -232,6 +237,9 @@ fn cmd_compress(args: &Args) -> Result<()> {
         resumed,
         report.layers.len()
     );
+    if report.quantize == blast_repro::kernels::QuantMode::I8 {
+        println!("weights stamped int8 (weight-only packed panels; activations stay f32)");
+    }
     println!(
         "wrote {out}; manifest at {}",
         ckpt_dir.join("manifest.json").display()

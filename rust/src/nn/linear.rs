@@ -10,7 +10,7 @@
 use super::param::PTensor;
 use crate::blast::BlastMatrix;
 use crate::kernels::{
-    engine, Couplings, Factors, PlanCell, PlanKind, PlanOperands, PlanSig, StructPlan,
+    engine, Couplings, Factors, PlanCell, PlanKind, PlanOperands, PlanSig, QuantMode, StructPlan,
 };
 use crate::tensor::io::TensorBundle;
 use crate::tensor::{matmul, matmul_nt, matmul_tn, Matrix, Rng};
@@ -68,6 +68,12 @@ pub struct Linear {
     pub bias: Option<PTensor>,
     pub out_features: usize,
     pub in_features: usize,
+    /// Inference weight precision. `F32` (the default) is the reference
+    /// path; `I8` routes this layer's plan dispatches through int8
+    /// quantized weight panels (weight-only — activations and biases
+    /// stay f32, and training always runs the f32 path). Set via
+    /// [`Linear::set_quant`]; persisted by [`Linear::write_into`].
+    pub quant: QuantMode,
     /// Layer-held [`StructPlan`] slot (see [`Linear::plan`]).
     pub plan: PlanCell,
 }
@@ -93,6 +99,7 @@ impl Linear {
             bias: Some(PTensor::new_nodecay(Matrix::zeros(1, out))),
             out_features: out,
             in_features: inp,
+            quant: QuantMode::F32,
             plan: PlanCell::new(),
         }
     }
@@ -106,6 +113,7 @@ impl Linear {
             bias: Some(PTensor::new_nodecay(Matrix::zeros(1, out))),
             out_features: out,
             in_features: inp,
+            quant: QuantMode::F32,
             plan: PlanCell::new(),
         }
     }
@@ -124,6 +132,7 @@ impl Linear {
             bias: Some(PTensor::new_nodecay(Matrix::zeros(1, out))),
             out_features: out,
             in_features: inp,
+            quant: QuantMode::F32,
             plan: PlanCell::new(),
         }
     }
@@ -139,6 +148,7 @@ impl Linear {
             bias: Some(PTensor::new_nodecay(Matrix::zeros(1, out))),
             out_features: out,
             in_features: inp,
+            quant: QuantMode::F32,
             plan: PlanCell::new(),
         }
     }
@@ -154,6 +164,7 @@ impl Linear {
             bias: Some(PTensor::new_nodecay(Matrix::zeros(1, out))),
             out_features: out,
             in_features: inp,
+            quant: QuantMode::F32,
             plan: PlanCell::new(),
         }
     }
@@ -166,6 +177,7 @@ impl Linear {
             bias: Some(PTensor::new_nodecay(Matrix::zeros(1, out))),
             out_features: out,
             in_features: inp,
+            quant: QuantMode::F32,
             plan: PlanCell::new(),
         }
     }
@@ -186,6 +198,7 @@ impl Linear {
             bias: Some(PTensor::new_nodecay(Matrix::zeros(1, out))),
             out_features: out,
             in_features: inp,
+            quant: QuantMode::F32,
             plan: PlanCell::new(),
         }
     }
@@ -212,22 +225,36 @@ impl Linear {
     // ------------------------------------------------------------------
 
     /// The [`PlanSig`] this weight lowers to (the autotuner-key half of
-    /// the layer's plan).
+    /// the layer's plan). The layer's quant mode is part of the
+    /// signature, so an int8 layer tunes and profiles under its own
+    /// `plan:*(…,q=i8)` tag, separately from its f32 twin.
     pub fn plan_sig(&self) -> PlanSig {
+        let q = self.quant;
         match &self.weight {
-            LinearWeight::Dense { .. } => PlanSig { kind: PlanKind::Dense, b: 1, r: 0 },
+            LinearWeight::Dense { .. } => PlanSig { kind: PlanKind::Dense, b: 1, r: 0, q },
             LinearWeight::LowRank { p, .. } => {
-                PlanSig { kind: PlanKind::LowRank, b: 1, r: p.v.cols as u32 }
+                PlanSig { kind: PlanKind::LowRank, b: 1, r: p.v.cols as u32, q }
             }
             LinearWeight::Blast { b, r, .. } => {
-                PlanSig { kind: PlanKind::Blast, b: *b as u32, r: *r as u32 }
+                PlanSig { kind: PlanKind::Blast, b: *b as u32, r: *r as u32, q }
             }
             LinearWeight::Monarch { b, t, .. } => {
-                PlanSig { kind: PlanKind::Monarch, b: *b as u32, r: *t as u32 }
+                PlanSig { kind: PlanKind::Monarch, b: *b as u32, r: *t as u32, q }
             }
             LinearWeight::BlockDiag { b, pd, .. } => {
-                PlanSig { kind: PlanKind::BlockDiag, b: *b as u32, r: pd[0].v.cols as u32 }
+                PlanSig { kind: PlanKind::BlockDiag, b: *b as u32, r: pd[0].v.cols as u32, q }
             }
+        }
+    }
+
+    /// Switch this layer's inference weight precision. Resets the
+    /// layer-held plan cell so the next dispatch resolves a plan whose
+    /// signature carries the new mode (the process-wide plan cache makes
+    /// this a hash lookup, not a rebuild, when the plan already exists).
+    pub fn set_quant(&mut self, quant: QuantMode) {
+        if self.quant != quant {
+            self.quant = quant;
+            self.plan = PlanCell::new();
         }
     }
 
@@ -705,6 +732,11 @@ impl Linear {
         if let Some(bias) = &self.bias {
             bundle.insert(format!("{prefix}.bias"), bias.v.clone());
         }
+        // Quant mode rides along as a 1×1 marker tensor so the `.bmx`
+        // container needs no format change; absent ⇒ f32 (old files).
+        if self.quant == QuantMode::I8 {
+            bundle.insert(format!("{prefix}.qmode"), Matrix::from_vec(1, 1, vec![8.0]));
+        }
     }
 
     /// Inverse of [`write_into`]: probe the kind-tagged tensor names
@@ -785,7 +817,18 @@ impl Linear {
             .entries
             .get(&format!("{prefix}.bias"))
             .map(|m| PTensor::new_nodecay(m.clone()));
-        Ok(Linear { weight, bias, out_features: out, in_features: inp, plan: PlanCell::new() })
+        let quant = match bundle.entries.get(&format!("{prefix}.qmode")) {
+            Some(m) if m.data.first() == Some(&8.0) => QuantMode::I8,
+            _ => QuantMode::F32,
+        };
+        Ok(Linear {
+            weight,
+            bias,
+            out_features: out,
+            in_features: inp,
+            quant,
+            plan: PlanCell::new(),
+        })
     }
 
     /// Collect all trainable parameters (for the optimizer).
@@ -966,16 +1009,17 @@ mod tests {
     #[test]
     fn plan_sigs_and_shapes_per_structure() {
         let mut rng = Rng::new(315);
+        let q = QuantMode::F32;
         let dense = Linear::dense(6, 8, 0.3, &mut rng);
-        assert_eq!(dense.plan_sig(), PlanSig { kind: PlanKind::Dense, b: 1, r: 0 });
+        assert_eq!(dense.plan_sig(), PlanSig { kind: PlanKind::Dense, b: 1, r: 0, q });
         let lr = Linear::low_rank(6, 8, 3, 0.3, &mut rng);
-        assert_eq!(lr.plan_sig(), PlanSig { kind: PlanKind::LowRank, b: 1, r: 3 });
+        assert_eq!(lr.plan_sig(), PlanSig { kind: PlanKind::LowRank, b: 1, r: 3, q });
         let bl = Linear::blast(6, 8, 2, 3, 0.3, &mut rng);
-        assert_eq!(bl.plan_sig(), PlanSig { kind: PlanKind::Blast, b: 2, r: 3 });
+        assert_eq!(bl.plan_sig(), PlanSig { kind: PlanKind::Blast, b: 2, r: 3, q });
         let mo = Linear::monarch(6, 8, 2, 2, 0.3, &mut rng);
-        assert_eq!(mo.plan_sig(), PlanSig { kind: PlanKind::Monarch, b: 2, r: 2 });
+        assert_eq!(mo.plan_sig(), PlanSig { kind: PlanKind::Monarch, b: 2, r: 2, q });
         let bd = Linear::block_diag(6, 8, 2, 2, 0.3, &mut rng);
-        assert_eq!(bd.plan_sig(), PlanSig { kind: PlanKind::BlockDiag, b: 2, r: 2 });
+        assert_eq!(bd.plan_sig(), PlanSig { kind: PlanKind::BlockDiag, b: 2, r: 2, q });
         for layer in [&dense, &lr, &bl, &mo, &bd] {
             let plan = layer.plan();
             assert_eq!((plan.m, plan.n), (6, 8));
@@ -1040,6 +1084,55 @@ mod tests {
             let x = rng.gaussian_matrix(3, 8, 1.0);
             assert_eq!(layer.forward(&x).data, back.forward(&x).data, "case {k}");
         }
+    }
+
+    #[test]
+    fn set_quant_reroutes_plan_and_stays_close_to_f32() {
+        let mut rng = Rng::new(316);
+        let layers = [
+            Linear::dense(6, 8, 0.3, &mut rng),
+            Linear::low_rank(6, 8, 3, 0.3, &mut rng),
+            Linear::blast(6, 8, 2, 3, 0.3, &mut rng),
+            Linear::monarch(6, 8, 2, 2, 0.3, &mut rng),
+            Linear::block_diag(6, 8, 2, 2, 0.3, &mut rng),
+        ];
+        for (k, mut layer) in layers.into_iter().enumerate() {
+            let x = rng.uniform_matrix(4, 8, -1.0, 1.0);
+            let y32 = layer.forward(&x);
+            layer.set_quant(QuantMode::I8);
+            assert_eq!(layer.plan_sig().q, QuantMode::I8, "case {k}");
+            assert_eq!(layer.plan().sig.q, QuantMode::I8, "case {k}");
+            let y8 = layer.forward(&x);
+            // Loose sanity bound only (gaussian weights); the strict
+            // per-structure ≤1e-2 contract is asserted by
+            // tests/quant_parity.rs on the kernel path directly.
+            let rel = y8.sub(&y32).fro_norm() / (1.0 + y32.fro_norm());
+            assert!(rel < 2e-2, "case {k}: int8 drifted {rel}");
+            // Round trip back to f32 is bit-exact with the original.
+            layer.set_quant(QuantMode::F32);
+            assert_eq!(layer.forward(&x).data, y32.data, "case {k}");
+        }
+    }
+
+    #[test]
+    fn qmode_survives_checkpoint_round_trip() {
+        let mut rng = Rng::new(317);
+        let mut layer = Linear::blast(6, 8, 2, 3, 0.3, &mut rng);
+        layer.set_quant(QuantMode::I8);
+        let mut bundle = TensorBundle::new();
+        layer.write_into(&mut bundle, "l");
+        assert!(bundle.entries.contains_key("l.qmode"));
+        let back = Linear::read_from(&bundle, "l").unwrap();
+        assert_eq!(back.quant, QuantMode::I8);
+        let x = rng.uniform_matrix(3, 8, -1.0, 1.0);
+        assert_eq!(layer.forward(&x).data, back.forward(&x).data);
+
+        // f32 layers write no marker and read back as f32.
+        let f32_layer = Linear::dense(4, 4, 0.3, &mut rng);
+        let mut b2 = TensorBundle::new();
+        f32_layer.write_into(&mut b2, "d");
+        assert!(!b2.entries.contains_key("d.qmode"));
+        assert_eq!(Linear::read_from(&b2, "d").unwrap().quant, QuantMode::F32);
     }
 
     #[test]

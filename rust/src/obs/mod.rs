@@ -857,8 +857,8 @@ mod tests {
 
     #[test]
     fn plan_profile_tracks_gflops() {
-        use crate::kernels::{PlanKind, PlanSig};
-        let sig = PlanSig { kind: PlanKind::LowRank, b: 1, r: 63 }; // test-only sig
+        use crate::kernels::{PlanKind, PlanSig, QuantMode};
+        let sig = PlanSig { kind: PlanKind::LowRank, b: 1, r: 63, q: QuantMode::F32 }; // test-only sig
         let p = plan_profile(sig);
         assert!(std::ptr::eq(p, plan_profile(sig)), "profile must intern per sig");
         p.calls.inc();

@@ -14,6 +14,7 @@
 //! allocate; single-thread execution is the realistic decode
 //! configuration and is bit-identical by the engine contract).
 
+use blast_repro::kernels::QuantMode;
 use blast_repro::nn::attention::StructureKind;
 use blast_repro::nn::gpt::{LmConfig, TinyLM};
 use blast_repro::tensor::{Matrix, Rng};
@@ -48,9 +49,22 @@ fn alloc_events() -> u64 {
     ALLOC_EVENTS.load(Ordering::Relaxed)
 }
 
-fn run_steady_state(structure: StructureKind, seed: u64) {
+fn run_steady_state(structure: StructureKind, quant: QuantMode, seed: u64) {
     let mut rng = Rng::new(seed);
-    let lm = TinyLM::new(LmConfig::tiny(structure), &mut rng);
+    let mut lm = TinyLM::new(LmConfig::tiny(structure), &mut rng);
+    if quant == QuantMode::I8 {
+        // Stamp the transformer linears int8 (what `compress --quantize
+        // int8` produces); embeddings and head stay f32, as in the
+        // pipeline. The i8 executor's activation-quantization buffers
+        // are thread-local and sized during warmup, so the steady-state
+        // contract is the same zero.
+        for blk in &mut lm.blocks {
+            blk.attn.wqkv.set_quant(QuantMode::I8);
+            blk.attn.wo.set_quant(QuantMode::I8);
+            blk.fc1.set_quant(QuantMode::I8);
+            blk.fc2.set_quant(QuantMode::I8);
+        }
+    }
     let mut pool = lm.new_kv_pool(3);
     let slots: Vec<usize> = (0..3).map(|_| pool.alloc().unwrap()).collect();
     for (i, &s) in slots.iter().enumerate() {
@@ -127,9 +141,16 @@ fn steady_state_decode_is_allocation_free() {
     // cover the block-gather/scatter and accumulating stages. The
     // attention-score scratch (formerly a per-step vec!) is covered by
     // every case.
-    run_steady_state(StructureKind::Dense, 9100);
-    run_steady_state(StructureKind::Blast { b: 2, r: 4 }, 9101);
-    run_steady_state(StructureKind::LowRank { r: 8 }, 9102);
-    run_steady_state(StructureKind::Monarch { b: 2, t: 4 }, 9103);
-    run_steady_state(StructureKind::BlockDiag { b: 2, t: 4 }, 9104);
+    run_steady_state(StructureKind::Dense, QuantMode::F32, 9100);
+    run_steady_state(StructureKind::Blast { b: 2, r: 4 }, QuantMode::F32, 9101);
+    run_steady_state(StructureKind::LowRank { r: 8 }, QuantMode::F32, 9102);
+    run_steady_state(StructureKind::Monarch { b: 2, t: 4 }, QuantMode::F32, 9103);
+    run_steady_state(StructureKind::BlockDiag { b: 2, t: 4 }, QuantMode::F32, 9104);
+    // Quantized models share the contract: dynamic activation
+    // quantization runs in thread-local buffers and int8 panels come
+    // from the same pack cache, so a warm int8 decode also touches the
+    // allocator zero times. Dense covers the single-GEMM plan, BLAST
+    // covers the multi-stage program with the f32 coupling stage.
+    run_steady_state(StructureKind::Dense, QuantMode::I8, 9105);
+    run_steady_state(StructureKind::Blast { b: 2, r: 4 }, QuantMode::I8, 9106);
 }

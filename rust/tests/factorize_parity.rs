@@ -100,6 +100,7 @@ fn quick_pipeline(dir: Option<PathBuf>, max_layers: Option<usize>) -> Compressio
             jobs: 0,
             checkpoint_dir: dir,
             max_layers,
+            ..Default::default()
         },
     )
 }
@@ -175,6 +176,7 @@ fn checkpoint_dir_from_different_run_is_rejected() {
             jobs: 0,
             checkpoint_dir: Some(dir.clone()),
             max_layers: None,
+            ..Default::default()
         },
     );
     let mut lm2 = template.clone();
@@ -270,6 +272,7 @@ fn compressed_checkpoint_serves_through_coordinator() {
             jobs: 0,
             checkpoint_dir: Some(dir.join("ckpt")),
             max_layers: None,
+            ..Default::default()
         },
     );
     let (model, report) = pipe.compress_checkpoint(&dense_path, &out_path).unwrap();

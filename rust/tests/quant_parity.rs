@@ -1,0 +1,268 @@
+//! Int8 quantized-plan parity suite. The tested guarantee is
+//! **bounded error, not bit equality**: for every structure plan
+//! (Dense, Low-Rank, Monarch, Block-Diagonal, BLAST) at the same
+//! awkward shapes `kernel_parity` uses (k not a multiple of the 8-lane
+//! width, n below the NR tile, b=1, batch 1), the int8 plan kernels
+//! must land within 1e-2 relative Frobenius error of the f32 reference
+//! executor on the same operands. What *is* bit-exact: `plan_seq_i8`
+//! vs `plan_par_i8` (per-row activation quantization makes results
+//! row-chunking invariant), `run_into` vs `run`, and the portable vs
+//! AVX2 int8 microkernels (i32 accumulation is exact). The CI
+//! `simd-parity` job runs this suite under both `BLAST_SIMD=portable`
+//! and `=auto`.
+//!
+//! Weights and activations are drawn uniform in [-1, 1): a bounded
+//! max/rms ratio keeps the int8 round-off comfortably inside the
+//! asserted bound, where gaussian tails would push per-row scales (and
+//! with them the error) right up against it.
+
+use blast_repro::kernels::{
+    engine, micro, plan_cache, Couplings, Factors, KernelOp, MatmulKernel, NaiveKernel,
+    PlanKernel, PlanOperands, QuantMode, QuantPanels, SimdMode, StructPlan,
+};
+use blast_repro::nn::attention::StructureKind;
+use blast_repro::nn::gpt::{LmConfig, TinyLM};
+use blast_repro::tensor::{Matrix, Rng};
+
+fn rel_err(got: &Matrix, want: &Matrix) -> f32 {
+    assert_eq!(got.shape(), want.shape());
+    let err: f32 = got.data.iter().zip(&want.data).map(|(a, b)| (a - b) * (a - b)).sum();
+    let den: f32 = want.data.iter().map(|v| v * v).sum();
+    (err / den.max(f32::MIN_POSITIVE)).sqrt()
+}
+
+/// The quantized-plan contract: ≤1e-2 relative error vs the f32
+/// reference on the same operands, `plan_seq_i8` ≡ `plan_par_i8` ≡
+/// `run_into` bitwise, and the engine's tuned dispatch inside the same
+/// bound regardless of which side of the f32-vs-int8 shoot-out won.
+fn check_quant_parity(f32_plan: &StructPlan, ops: &PlanOperands<'_>, x: &Matrix, what: &str) {
+    assert_eq!(f32_plan.sig.q, QuantMode::F32, "{what}: reference plan must be f32");
+    let q_plan = plan_cache().get(f32_plan.sig.quantized(), f32_plan.m, f32_plan.n);
+    let reference = NaiveKernel.run(x, &KernelOp::Plan { plan: f32_plan, ops: *ops });
+    let op_q = KernelOp::Plan { plan: &q_plan, ops: *ops };
+
+    let seq = PlanKernel::sequential_i8();
+    let par = PlanKernel::row_parallel_i8();
+    assert!(seq.supports(&op_q, x.rows), "{what}: plan_seq_i8 must support q=i8");
+    assert!(par.supports(&op_q, x.rows), "{what}: plan_par_i8 must support q=i8");
+
+    let y_seq = seq.run(x, &op_q);
+    let rel = rel_err(&y_seq, &reference);
+    assert!(rel <= 1e-2, "{what}: int8 rel err {rel} > 1e-2");
+
+    let y_par = par.run(x, &op_q);
+    for (i, (a, b)) in y_seq.data.iter().zip(&y_par.data).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{what}: elem {i} plan_seq_i8 vs plan_par_i8");
+    }
+    let mut out = Matrix::zeros(0, 0);
+    seq.run_into(x, &op_q, &mut out);
+    assert_eq!(out.data, y_seq.data, "{what}: run_into vs run");
+
+    let y_eng = engine().plan_act(x, &q_plan, ops);
+    let rel = rel_err(&y_eng, &reference);
+    assert!(rel <= 1e-2, "{what}: engine dispatch rel err {rel} > 1e-2");
+}
+
+#[test]
+fn quantized_dense_plan_bounded_error() {
+    let mut rng = Rng::new(7800);
+    for &(batch, k, n) in &[(1usize, 7usize, 3usize), (4, 32, 12), (2, 17, 5), (1, 64, 40)] {
+        let x = rng.uniform_matrix(batch, k, -1.0, 1.0);
+        let w = rng.uniform_matrix(n, k, -1.0, 1.0);
+        let plan = StructPlan::dense(n, k);
+        check_quant_parity(
+            &plan,
+            &PlanOperands::single(&w),
+            &x,
+            &format!("dense batch={batch} k={k} n={n}"),
+        );
+    }
+}
+
+#[test]
+fn quantized_low_rank_plan_bounded_error_awkward_shapes() {
+    let mut rng = Rng::new(7801);
+    for &(batch, m, n, r) in &[
+        (1usize, 3usize, 9usize, 1usize),
+        (1, 2, 7, 3),
+        (4, 17, 31, 5),
+        (2, 40, 64, 9), // r > LANES
+        (3, 1, 1, 1),
+    ] {
+        let p = rng.uniform_matrix(m, r, -1.0, 1.0);
+        let q = rng.uniform_matrix(n, r, -1.0, 1.0);
+        let x = rng.uniform_matrix(batch, n, -1.0, 1.0);
+        let plan = StructPlan::low_rank(m, n, r);
+        let ops = PlanOperands {
+            g0: Factors::Mats(std::slice::from_ref(&q)),
+            g1: Factors::Mats(std::slice::from_ref(&p)),
+            s: None,
+        };
+        check_quant_parity(&plan, &ops, &x, &format!("lowrank m={m} n={n} r={r} batch={batch}"));
+    }
+}
+
+#[test]
+fn quantized_monarch_plan_bounded_error_awkward_shapes() {
+    let mut rng = Rng::new(7802);
+    for &(batch, b, p, q, t) in &[
+        (1usize, 1usize, 3usize, 5usize, 2usize), // b=1
+        (1, 2, 3, 7, 2),                          // q ∤ 8
+        (5, 3, 2, 3, 4),                          // p < NR
+        (2, 2, 9, 8, 3),
+    ] {
+        let (m, n) = (b * p, b * q);
+        let rb: Vec<Matrix> = (0..b).map(|_| rng.uniform_matrix(t, q, -1.0, 1.0)).collect();
+        let l: Vec<Matrix> = (0..b * b).map(|_| rng.uniform_matrix(p, t, -1.0, 1.0)).collect();
+        let x = rng.uniform_matrix(batch, n, -1.0, 1.0);
+        let plan = StructPlan::monarch(m, n, b, t);
+        let ops = PlanOperands { g0: Factors::Mats(&rb), g1: Factors::Mats(&l), s: None };
+        check_quant_parity(
+            &plan,
+            &ops,
+            &x,
+            &format!("monarch b={b} p={p} q={q} t={t} batch={batch}"),
+        );
+    }
+}
+
+#[test]
+fn quantized_block_diag_plan_bounded_error_awkward_shapes() {
+    let mut rng = Rng::new(7803);
+    for &(batch, b, p, q, t) in &[
+        (1usize, 1usize, 5usize, 3usize, 2usize), // b=1
+        (1, 2, 3, 7, 1),                          // t=1, q ∤ 8
+        (4, 4, 2, 2, 2),                          // p < NR
+        (2, 3, 9, 11, 4),
+    ] {
+        let (m, n) = (b * p, b * q);
+        let pd: Vec<Matrix> = (0..b).map(|_| rng.uniform_matrix(p, t, -1.0, 1.0)).collect();
+        let qd: Vec<Matrix> = (0..b).map(|_| rng.uniform_matrix(q, t, -1.0, 1.0)).collect();
+        let x = rng.uniform_matrix(batch, n, -1.0, 1.0);
+        let plan = StructPlan::block_diag(m, n, b, t);
+        let ops = PlanOperands { g0: Factors::Mats(&qd), g1: Factors::Mats(&pd), s: None };
+        check_quant_parity(
+            &plan,
+            &ops,
+            &x,
+            &format!("blockdiag b={b} p={p} q={q} t={t} batch={batch}"),
+        );
+    }
+}
+
+#[test]
+fn quantized_blast_plan_bounded_error_decode_shapes() {
+    // Batch 1 throughout: the decode hot shape.
+    let mut rng = Rng::new(7804);
+    for &(m, n, b, r) in &[
+        (12usize, 12usize, 2usize, 3usize),
+        (18, 27, 3, 9), // r > LANES, q ∤ 8
+        (8, 8, 1, 5),   // b=1
+        (3, 5, 1, 2),   // n < LANES
+    ] {
+        let u: Vec<Matrix> = (0..b).map(|_| rng.uniform_matrix(m / b, r, -1.0, 1.0)).collect();
+        let v: Vec<Matrix> = (0..b).map(|_| rng.uniform_matrix(n / b, r, -1.0, 1.0)).collect();
+        let s = rng.uniform_matrix(b * b, r, -1.0, 1.0);
+        let x = rng.uniform_matrix(1, n, -1.0, 1.0);
+        let plan = StructPlan::blast(m, n, b, r);
+        let ops = PlanOperands {
+            g0: Factors::Mats(&v),
+            g1: Factors::Mats(&u),
+            s: Some(Couplings::Packed(&s)),
+        };
+        check_quant_parity(&plan, &ops, &x, &format!("decode blast m={m} n={n} b={b} r={r}"));
+    }
+}
+
+#[test]
+fn int8_microkernel_portable_avx2_bit_identical() {
+    // i32 accumulation is exact, so the AVX2 `maddubs`/`madd` path must
+    // agree with the portable path bit-for-bit — before *and* after the
+    // single f32 scale-multiply.
+    if !micro::avx2_detected() {
+        eprintln!("avx2 not detected; portable path is the only path — skipping");
+        return;
+    }
+    let mut rng = Rng::new(7805);
+    for &(batch, k, n) in &[(1usize, 9usize, 3usize), (4, 64, 16), (7, 251, 19), (2, 8, 4)] {
+        let x = rng.uniform_matrix(batch, k, -1.0, 1.0);
+        let w = rng.uniform_matrix(n, k, -1.0, 1.0);
+        let panels = QuantPanels::pack_rows(&w);
+        let kb = panels.kc * micro::LANES;
+        let mut xq = vec![0i8; batch * kb];
+        let mut xs = vec![0.0f32; batch];
+        for t in 0..batch {
+            xs[t] = micro::quantize_row_i8(x.row(t), &mut xq[t * kb..(t + 1) * kb]);
+        }
+        let mut portable = vec![0.0f32; batch * n];
+        let mut avx2 = vec![0.0f32; batch * n];
+        micro::qnt_block_packed(
+            SimdMode::Portable,
+            &xq,
+            &xs,
+            kb,
+            0,
+            0,
+            &panels,
+            batch,
+            &mut portable,
+            n,
+            0,
+            false,
+        );
+        micro::qnt_block_packed(
+            SimdMode::Avx2,
+            &xq,
+            &xs,
+            kb,
+            0,
+            0,
+            &panels,
+            batch,
+            &mut avx2,
+            n,
+            0,
+            false,
+        );
+        for (i, (a, b)) in portable.iter().zip(&avx2).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "batch={batch} k={k} n={n} elem {i}: portable {a} vs avx2 {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn qmode_round_trips_through_model_checkpoint() {
+    // Whole-model `.bmx` round trip of the quant metadata: every
+    // transformer linear stamped int8 must come back int8 and generate
+    // the same tokens (same weights + same mode ⇒ same quantized
+    // panels ⇒ deterministic decode).
+    let mut rng = Rng::new(7806);
+    let mut lm = TinyLM::new(LmConfig::tiny(StructureKind::Blast { b: 4, r: 8 }), &mut rng);
+    for blk in &mut lm.blocks {
+        blk.attn.wqkv.set_quant(QuantMode::I8);
+        blk.attn.wo.set_quant(QuantMode::I8);
+        blk.fc1.set_quant(QuantMode::I8);
+        blk.fc2.set_quant(QuantMode::I8);
+    }
+    let dir = std::env::temp_dir().join(format!("blast-quant-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("q.bmx");
+    lm.save(&path).unwrap();
+    let back = TinyLM::load(&path).unwrap();
+    for blk in &back.blocks {
+        assert_eq!(blk.attn.wqkv.quant, QuantMode::I8);
+        assert_eq!(blk.attn.wo.quant, QuantMode::I8);
+        assert_eq!(blk.fc1.quant, QuantMode::I8);
+        assert_eq!(blk.fc2.quant, QuantMode::I8);
+        assert_eq!(blk.fc1.plan_sig().q, QuantMode::I8);
+    }
+    // Head and embeddings were left f32 (the pipeline only stamps
+    // transformer linears) and must read back f32.
+    assert_eq!(back.head.quant, QuantMode::F32);
+    assert_eq!(lm.generate(&[1, 2, 3], 6), back.generate(&[1, 2, 3], 6));
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -25,8 +25,22 @@ METRICS = [
     ("BENCH_kernels.json", ("structures", "lowrank", "plan_gflops"), "lowrank plan GFLOP/s"),
     ("BENCH_kernels.json", ("structures", "monarch", "plan_gflops"), "monarch plan GFLOP/s"),
     ("BENCH_kernels.json", ("structures", "blockdiag", "plan_gflops"), "blockdiag plan GFLOP/s"),
+    # Int8 quantized packed path (weight-only; activations quantize on
+    # the fly). The dense/blast shapes are the bench's ≥1.5× gate pair.
+    ("BENCH_kernels.json", ("quantized", "dense", "i8_gflops"), "int8 dense GFLOP/s"),
+    ("BENCH_kernels.json", ("quantized", "blast", "i8_gflops"), "int8 blast GFLOP/s"),
 ]
 THRESHOLD = 0.20
+
+# Int8 pack footprint in bytes per weight (values + per-row scales +
+# tile padding). Lower is better, and it is layout-determined rather
+# than timing-determined, so growth is warn-only: a jump means the
+# panel layout or scale storage changed, not that a runner was noisy.
+BYTES_PER_WEIGHT = [
+    ("BENCH_kernels.json", ("quantized", "dense", "bytes_per_weight"), "int8 dense bytes/weight"),
+    ("BENCH_kernels.json", ("quantized", "blast", "bytes_per_weight"), "int8 blast bytes/weight"),
+]
+BYTES_GROWTH_THRESHOLD = 0.10
 
 # Observability ratios carried in the benches' "obs" snapshot section.
 # Compared as absolute deltas (they're already in [0, 1]) and always
@@ -75,6 +89,18 @@ def main():
         if change < -THRESHOLD:
             failures.append(
                 f"{label} regressed {-change:.1%} (threshold {THRESHOLD:.0%})"
+            )
+    for fname, keys, label in BYTES_PER_WEIGHT:
+        curr = load_metric(os.path.join(curr_dir, fname), keys)
+        prev = load_metric(os.path.join(prev_dir, fname), keys)
+        if curr is None or prev is None or prev <= 0:
+            continue
+        growth = (curr - prev) / prev
+        print(f"[trend] {label}: prev {prev:.3f} -> curr {curr:.3f} ({growth:+.1%})")
+        if growth > BYTES_GROWTH_THRESHOLD:
+            print(
+                f"[trend] WARNING: {label} grew {growth:.1%} "
+                f"(> {BYTES_GROWTH_THRESHOLD:.0%}) — check panel/scale layout"
             )
     for fname, keys, label in OBS_RATIOS:
         curr = load_metric(os.path.join(curr_dir, fname), keys)
