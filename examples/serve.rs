@@ -7,7 +7,7 @@
 //! Run: `cargo run --release --example serve`
 
 use blast_repro::coordinator::{
-    BatcherConfig, Coordinator, CoordinatorConfig, ResponseEvent,
+    BatcherConfig, Coordinator, CoordinatorConfig, EngineConfig, ResponseEvent,
 };
 use blast_repro::nn::attention::StructureKind;
 use blast_repro::nn::gpt::{LmConfig, TinyLM};
@@ -34,7 +34,7 @@ fn main() {
         vec![("dense".into(), dense), ("blast".into(), blast)],
         CoordinatorConfig {
             batcher: BatcherConfig { max_batch: 8, ..Default::default() },
-            slots: 8,
+            engine: EngineConfig { max_seqs: 8, ..EngineConfig::global().clone() },
         },
     ));
 
@@ -52,7 +52,7 @@ fn main() {
                 // decode work is shared across live sequences, so
                 // client-side TTFT / end-to-end are the meaningful
                 // per-request numbers (a sum of compute_time would
-                // count each batched iteration up to `slots` times).
+                // count each batched iteration up to `max_seqs` times).
                 let mut ttft_sum = std::time::Duration::ZERO;
                 let mut e2e_sum = std::time::Duration::ZERO;
                 for i in 0..per_client {

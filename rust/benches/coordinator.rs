@@ -2,7 +2,7 @@
 //! request latency vs direct model calls (DESIGN.md §8 L3 target:
 //! coordinator adds < 5 % at batch 8).
 
-use blast_repro::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig};
+use blast_repro::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, EngineConfig};
 use blast_repro::nn::attention::StructureKind;
 use blast_repro::nn::gpt::{LmConfig, TinyLM};
 use blast_repro::tensor::Rng;
@@ -28,7 +28,7 @@ fn main() {
                 max_batch: 8,
                 max_wait: std::time::Duration::from_micros(200),
             },
-            slots: 8,
+            engine: EngineConfig { max_seqs: 8, ..EngineConfig::default() },
         },
     );
     suite.bench_throughput("coordinator generate L=16", l as f64, "tok", || {

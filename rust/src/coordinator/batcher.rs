@@ -9,7 +9,7 @@
 //! `max_batch` within `max_wait`) is kept for request-granularity
 //! callers and tests.
 
-use super::request::GenerateRequest;
+use super::request::WorkItem;
 use std::sync::mpsc::{Receiver, TryRecvError};
 use std::time::{Duration, Instant};
 
@@ -24,7 +24,8 @@ pub struct BatcherConfig {
 
 impl Default for BatcherConfig {
     fn default() -> Self {
-        BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(2) }
+        let max_batch = crate::util::config::EngineConfig::global().max_batch;
+        BatcherConfig { max_batch, max_wait: Duration::from_millis(2) }
     }
 }
 
@@ -34,11 +35,11 @@ impl Default for BatcherConfig {
 /// order.)
 pub struct DynamicBatcher {
     pub cfg: BatcherConfig,
-    rx: Receiver<GenerateRequest>,
+    rx: Receiver<WorkItem>,
 }
 
 impl DynamicBatcher {
-    pub fn new(rx: Receiver<GenerateRequest>, cfg: BatcherConfig) -> Self {
+    pub fn new(rx: Receiver<WorkItem>, cfg: BatcherConfig) -> Self {
         DynamicBatcher { cfg, rx }
     }
 
@@ -46,7 +47,7 @@ impl DynamicBatcher {
     /// FIFO order, returning immediately with whatever is available
     /// (possibly nothing). The continuous-batching step loop calls this
     /// with the number of free KV-pool slots between decode iterations.
-    pub fn try_admit(&mut self, limit: usize) -> Vec<GenerateRequest> {
+    pub fn try_admit(&mut self, limit: usize) -> Vec<WorkItem> {
         let mut out = Vec::new();
         while out.len() < limit {
             match self.rx.try_recv() {
@@ -59,13 +60,13 @@ impl DynamicBatcher {
 
     /// Block for a single request — used to park an idle worker.
     /// Returns `None` when the channel is closed and drained.
-    pub fn recv_one(&mut self) -> Option<GenerateRequest> {
+    pub fn recv_one(&mut self) -> Option<WorkItem> {
         self.rx.recv().ok()
     }
 
     /// Block for the next batch. Returns `None` when the channel is
     /// closed and drained.
-    pub fn next_batch(&mut self) -> Option<Vec<GenerateRequest>> {
+    pub fn next_batch(&mut self) -> Option<Vec<WorkItem>> {
         let mut batch = Vec::with_capacity(self.cfg.max_batch);
         // Block for the first request.
         match self.rx.recv() {
@@ -97,12 +98,10 @@ mod tests {
     fn req(
         id: u64,
         tx: &std::sync::mpsc::Sender<super::super::request::ResponseEvent>,
-    ) -> GenerateRequest {
-        GenerateRequest {
+    ) -> WorkItem {
+        WorkItem {
             id,
-            variant: "v".into(),
-            prompt: vec![1],
-            max_new_tokens: 1,
+            req: super::super::request::GenerateRequest::new(vec![1], 1),
             respond_to: tx.clone(),
             enqueued_at: Instant::now(),
         }

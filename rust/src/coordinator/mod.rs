@@ -1,34 +1,40 @@
 //! L3 coordinator: the serving system around the compressed models.
 //!
-//! Architecture (vLLM-style iteration-level continuous batching;
-//! std::thread + mpsc — the build is offline so no tokio, and the
-//! request path is synchronous channel passing):
+//! Architecture (vLLM-style iteration-level continuous batching with
+//! paged KV + prefix caching; std::thread + mpsc — the build is offline
+//! so no tokio, and the request path is synchronous channel passing):
 //!
 //! ```text
 //!   clients ──> Router ──> per-variant queue ──> DynamicBatcher
-//!                                                    │ try_admit(free slots)
+//!                                                    │ try_admit → pending FIFO
 //!                                                    v
 //!                                            Worker step loop
-//!                                     ┌─ admit → prefill into KvPool slot
+//!                                     ┌─ admit → reserve KV blocks, prefill
+//!                                     │  only past the cached prefix
 //!                                     ├─ sample 1 token/sequence, stream it
-//!                                     ├─ retire finished → free slot
+//!                                     ├─ retire finished → free private
+//!                                     │  blocks, keep prefix blocks cached
 //!                                     └─ ONE batched decode step (batch =
-//!                                        active slots through the kernels)
+//!                                        active sequences through the kernels)
 //!                                                    │
 //!   clients <── Token / Done event streams <─────────┘
 //! ```
 //!
-//! Requests are admitted *between decode iterations* into free slots of
-//! a fixed [`nn::kvcache::KvPool`](crate::nn::kvcache::KvPool), so new
-//! arrivals never stall live sequences and a finished sequence's slot
-//! is reused one iteration later. Tokens stream to clients as
-//! [`ResponseEvent::Token`] the moment they are sampled;
-//! [`Coordinator::generate`] stays as the blocking convenience wrapper.
-//! The paper's contribution lives in the *weights* (L1/L2); the
-//! coordinator is the production harness that turns the compressed
-//! model into a service and measures the Table-4 runtime story end to
-//! end — batched decode is what lets BLAST's Algorithm-1 products
-//! amortize across concurrent users.
+//! Requests are admitted *between decode iterations* once the
+//! [`nn::kvcache::KvBlockManager`](crate::nn::kvcache::KvBlockManager)
+//! can reserve their block budget, so new arrivals never stall live
+//! sequences and a finished sequence's blocks are reusable one
+//! iteration later. Prompt prefixes are content-addressed: a request
+//! whose prompt shares a full-block prefix with an earlier one reuses
+//! the cached K/V rows and skips prefill over the shared span. Tokens
+//! stream to clients as [`ResponseEvent::Token`] the moment they are
+//! sampled; [`Coordinator::generate`] stays as the blocking convenience
+//! wrapper over [`GenerateRequest`] + [`SamplingParams`]. The paper's
+//! contribution lives in the *weights* (L1/L2); the coordinator is the
+//! production harness that turns the compressed model into a service
+//! and measures the Table-4 runtime story end to end — batched decode
+//! is what lets BLAST's Algorithm-1 products amortize across concurrent
+//! users.
 
 pub mod request;
 pub mod batcher;
@@ -38,6 +44,9 @@ pub mod server;
 pub use batcher::{BatcherConfig, DynamicBatcher};
 pub use metrics::{Histogram, Metrics};
 pub use request::{
-    GenerateRequest, GenerateResponse, RequestId, ResponseEvent, ResponseHandle,
+    GenerateRequest, GenerateRequestBuilder, GenerateResponse, RequestId, ResponseEvent,
+    ResponseHandle, SamplingParams, WorkItem,
 };
 pub use server::{Coordinator, CoordinatorConfig};
+
+pub use crate::util::config::EngineConfig;

@@ -1,5 +1,12 @@
 //! Request/response types crossing the coordinator boundary.
 //!
+//! A [`GenerateRequest`] is plain data: the prompt plus its
+//! [`SamplingParams`]. Build one directly, via [`GenerateRequest::new`],
+//! or through the [`builder`](GenerateRequest::builder); the coordinator
+//! wraps it into an internal [`WorkItem`] (id, response channel, queue
+//! timestamp) at submission time, so request *content* and transport
+//! *bookkeeping* stay separate types.
+//!
 //! Responses stream: the worker emits one [`ResponseEvent::Token`] per
 //! generated token as soon as it is sampled (continuous batching
 //! produces tokens incrementally, so clients can render them live) and
@@ -13,14 +20,77 @@ use std::time::Duration;
 /// Monotonically increasing request identifier.
 pub type RequestId = u64;
 
-/// A text-generation request.
-#[derive(Debug)]
-pub struct GenerateRequest {
-    pub id: RequestId,
-    /// Which model variant serves this request ("dense", "blast_50", …).
-    pub variant: String,
-    pub prompt: Vec<usize>,
+/// Per-request sampling/termination knobs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SamplingParams {
+    /// Generation stops after this many new tokens (0 = prompt only).
     pub max_new_tokens: usize,
+    /// Generation stops early once this token is sampled. The stop
+    /// token itself is still emitted (and counted), matching what a
+    /// client scanning the stream for it would observe.
+    pub stop_token: Option<usize>,
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        SamplingParams { max_new_tokens: 16, stop_token: None }
+    }
+}
+
+/// A text-generation request: prompt + sampling parameters.
+#[derive(Clone, Debug)]
+pub struct GenerateRequest {
+    pub prompt: Vec<usize>,
+    pub params: SamplingParams,
+}
+
+impl GenerateRequest {
+    /// Request with default params except `max_new_tokens`.
+    pub fn new(prompt: Vec<usize>, max_new_tokens: usize) -> Self {
+        GenerateRequest {
+            prompt,
+            params: SamplingParams { max_new_tokens, ..SamplingParams::default() },
+        }
+    }
+
+    /// Fluent construction: `GenerateRequest::builder(prompt)
+    /// .max_tokens(32).stop_token(0).build()`.
+    pub fn builder(prompt: Vec<usize>) -> GenerateRequestBuilder {
+        GenerateRequestBuilder { prompt, params: SamplingParams::default() }
+    }
+}
+
+/// Builder returned by [`GenerateRequest::builder`].
+#[derive(Clone, Debug)]
+pub struct GenerateRequestBuilder {
+    prompt: Vec<usize>,
+    params: SamplingParams,
+}
+
+impl GenerateRequestBuilder {
+    pub fn max_tokens(mut self, n: usize) -> Self {
+        self.params.max_new_tokens = n;
+        self
+    }
+
+    pub fn stop_token(mut self, tok: usize) -> Self {
+        self.params.stop_token = Some(tok);
+        self
+    }
+
+    pub fn build(self) -> GenerateRequest {
+        GenerateRequest { prompt: self.prompt, params: self.params }
+    }
+}
+
+/// One queued unit of work inside the coordinator: the client's request
+/// plus the transport bookkeeping the worker needs (assigned id, event
+/// channel, enqueue timestamp). Constructed at the submit boundary —
+/// client code never builds one.
+#[derive(Debug)]
+pub struct WorkItem {
+    pub id: RequestId,
+    pub req: GenerateRequest,
     /// Channel the worker streams events on.
     pub respond_to: Sender<ResponseEvent>,
     /// Enqueue timestamp (for latency accounting).
@@ -102,18 +172,28 @@ mod tests {
     }
 
     #[test]
-    fn request_response_round_trip() {
+    fn builder_and_new_agree_on_defaults() {
+        let a = GenerateRequest::new(vec![1, 2], 9);
+        let b = GenerateRequest::builder(vec![1, 2]).max_tokens(9).build();
+        assert_eq!(a.prompt, b.prompt);
+        assert_eq!(a.params, b.params);
+        assert_eq!(a.params.stop_token, None);
+        let c = GenerateRequest::builder(vec![3]).stop_token(0).build();
+        assert_eq!(c.params.max_new_tokens, SamplingParams::default().max_new_tokens);
+        assert_eq!(c.params.stop_token, Some(0));
+    }
+
+    #[test]
+    fn work_item_response_round_trip() {
         let (tx, rx) = channel();
-        let req = GenerateRequest {
+        let item = WorkItem {
             id: 7,
-            variant: "blast".into(),
-            prompt: vec![1, 2, 3],
-            max_new_tokens: 4,
+            req: GenerateRequest::new(vec![1, 2, 3], 4),
             respond_to: tx,
             enqueued_at: std::time::Instant::now(),
         };
-        req.respond_to.send(done(req.id, vec![1, 2, 3, 9], 1)).unwrap();
-        drop(req);
+        item.respond_to.send(done(item.id, vec![1, 2, 3, 9], 1)).unwrap();
+        drop(item);
         let handle = ResponseHandle::new(rx);
         let resp = handle.recv().unwrap();
         assert_eq!(resp.id, 7);

@@ -3,61 +3,82 @@
 //!
 //! Each registered model variant gets its own request queue, admission
 //! policy ([`DynamicBatcher`]), and worker thread running an
-//! **iteration-level continuous-batching** step loop over a slotted
-//! [`KvPool`]:
+//! **iteration-level continuous-batching** step loop over a paged
+//! [`KvBlockManager`]:
 //!
 //! ```text
 //!        ┌──────────────────────── step loop ────────────────────────┐
-//!        │ 1. admit: drain queue into free KV slots (prefill on      │
-//!        │    admit, at most `max_batch` per iteration)              │
+//!        │ 1. admit: drain queue; admit from the head while KV       │
+//!        │    blocks allow (prefix-cache hits skip prefill over the  │
+//!        │    cached span; at most `max_batch` prefills/iteration)   │
 //!        │ 2. sample: one token per active sequence, streamed to the │
-//!        │    client immediately; finished sequences retire and free │
-//!        │    their slot in the same iteration                       │
+//!        │    client immediately; finished sequences retire, free    │
+//!        │    their private blocks, and leave their prompt's prefix  │
+//!        │    blocks cached for future requests                      │
 //!        │ 3. decode: ONE batched decode step advances every live    │
-//!        │    slot (batch = active sequences through the kernels)    │
+//!        │    sequence (batch = active sequences through the kernels)│
 //!        └───────────────────────────────────────────────────────────┘
 //! ```
 //!
 //! Sequences never wait for each other: a request admitted mid-flight
-//! joins the next iteration, and a finished sequence's slot is reusable
-//! one iteration later. Decode math is bit-identical to per-request
-//! `TinyLM::generate` for every accepted prompt (see
-//! `tests/serving_parity.rs`), so continuous batching is purely a
-//! throughput/latency change. The submit boundary rejects out-of-vocab
-//! tokens and prompts longer than the context window (both would hurt
-//! the whole variant, not just the offending request); empty prompts
-//! are accepted but generate zero tokens rather than reproducing
-//! `generate`'s quirk of sampling from a zeroed logits row.
+//! joins the next iteration, and a finished sequence's blocks are
+//! reusable one iteration later. Decode math is bit-identical to
+//! per-request `TinyLM::generate` for every accepted prompt (see
+//! `tests/serving_parity.rs`) — including prefix-cache hits, which read
+//! the exact K/V rows the original prefill wrote — so continuous
+//! batching and prefix caching are purely throughput/latency changes.
+//! The submit boundary rejects out-of-vocab tokens and prompts longer
+//! than the context window (both would hurt the whole variant, not just
+//! the offending request); empty prompts are accepted but generate zero
+//! tokens rather than reproducing `generate`'s quirk of sampling from a
+//! zeroed logits row.
+//!
+//! [`KvBlockManager`]: crate::nn::kvcache::KvBlockManager
 
 use super::batcher::{BatcherConfig, DynamicBatcher};
 use super::metrics::Metrics;
 use super::request::{
-    GenerateRequest, GenerateResponse, RequestId, ResponseEvent, ResponseHandle,
+    GenerateRequest, GenerateResponse, RequestId, ResponseEvent, ResponseHandle, WorkItem,
 };
 use crate::nn::gpt::{argmax, TinyLM};
-use crate::nn::kvcache::KvPool;
+use crate::nn::kvcache::KvBlockManager;
 use crate::obs::trace;
 use crate::tensor::Matrix;
 use crate::util::arena::ScratchArena;
+use crate::util::config::EngineConfig;
 use anyhow::{bail, Result};
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-/// Coordinator configuration.
-#[derive(Clone, Copy, Debug)]
+/// Coordinator configuration: batching policy plus the engine-level
+/// knobs each worker sizes its KV block manager from
+/// ([`EngineConfig::max_seqs`] concurrent sequences,
+/// [`EngineConfig::kv_block_size`] positions per block,
+/// [`EngineConfig::kv_cache_blocks`] of prefix-cache headroom).
+#[derive(Clone, Debug)]
 pub struct CoordinatorConfig {
     pub batcher: BatcherConfig,
-    /// KV-pool slots per worker: the maximum number of sequences
-    /// decoding concurrently. Admission waits for a free slot.
-    pub slots: usize,
+    pub engine: EngineConfig,
 }
 
 impl Default for CoordinatorConfig {
     fn default() -> Self {
-        CoordinatorConfig { batcher: BatcherConfig::default(), slots: 8 }
+        CoordinatorConfig {
+            batcher: BatcherConfig::default(),
+            engine: EngineConfig::global().clone(),
+        }
+    }
+}
+
+impl CoordinatorConfig {
+    /// Default config with `n` concurrent sequences per worker.
+    pub fn with_max_seqs(n: usize) -> Self {
+        let mut cfg = Self::default();
+        cfg.engine.max_seqs = n;
+        cfg
     }
 }
 
@@ -65,10 +86,9 @@ impl Default for CoordinatorConfig {
 /// validate prompts at the submission boundary — the model asserts on
 /// out-of-vocab tokens (a worker panic would kill the variant), and an
 /// unbounded prompt would stall every live sequence behind an O(n²)
-/// prefill while growing the slot's KV buffers past their pooled
-/// capacity for good.
+/// prefill while blowing past the sequence's admitted block budget.
 struct Route {
-    queue: Sender<GenerateRequest>,
+    queue: Sender<WorkItem>,
     vocab: usize,
     max_seq: usize,
 }
@@ -88,29 +108,29 @@ impl Coordinator {
         let mut routes = HashMap::new();
         let mut workers = Vec::new();
         for (name, model) in models {
-            let (tx, rx) = channel::<GenerateRequest>();
+            let (tx, rx) = channel::<WorkItem>();
             routes.insert(
                 name.clone(),
                 Route { queue: tx, vocab: model.cfg.vocab, max_seq: model.cfg.max_seq },
             );
             let m = Arc::clone(&metrics);
+            let wcfg = cfg.clone();
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("worker-{name}"))
-                    .spawn(move || worker_loop(model, rx, cfg, m))
+                    .spawn(move || worker_loop(model, rx, wcfg, m))
                     .expect("spawn worker"),
             );
         }
         Coordinator { routes, workers, metrics, next_id: AtomicU64::new(1) }
     }
 
-    /// Submit a generation request; returns the id and a streaming
+    /// Submit a [`GenerateRequest`]; returns the id and a streaming
     /// [`ResponseHandle`] (per-token `Token` events, then `Done`).
-    pub fn submit(
+    pub fn submit_request(
         &self,
         variant: &str,
-        prompt: Vec<usize>,
-        max_new_tokens: usize,
+        req: GenerateRequest,
     ) -> Result<(RequestId, ResponseHandle)> {
         let Some(route) = self.routes.get(variant) else {
             bail!(
@@ -122,15 +142,15 @@ impl Coordinator {
         // panic (and kill) the variant's worker thread, and a prompt
         // longer than the context window would stall live sequences
         // behind an O(n²) prefill. Capping at max_seq also means a
-        // slot's K/V buffers never grow past their pooled capacity.
-        if prompt.len() > route.max_seq {
+        // sequence never outgrows the block budget it was admitted with.
+        if req.prompt.len() > route.max_seq {
             bail!(
                 "prompt of {} tokens exceeds variant `{variant}`'s context window ({})",
-                prompt.len(),
+                req.prompt.len(),
                 route.max_seq
             );
         }
-        if let Some(&bad) = prompt.iter().find(|&&t| t >= route.vocab) {
+        if let Some(&bad) = req.prompt.iter().find(|&&t| t >= route.vocab) {
             bail!(
                 "prompt token {bad} out of vocab (variant `{variant}` has vocab {})",
                 route.vocab
@@ -142,11 +162,9 @@ impl Coordinator {
         // Count the enqueue before sending: the worker may admit (and
         // decrement the gauge) the instant the request lands.
         self.metrics.record_enqueued();
-        let sent = route.queue.send(GenerateRequest {
+        let sent = route.queue.send(WorkItem {
             id,
-            variant: variant.to_string(),
-            prompt,
-            max_new_tokens,
+            req,
             respond_to: tx,
             enqueued_at: Instant::now(),
         });
@@ -157,6 +175,29 @@ impl Coordinator {
         Ok((id, ResponseHandle::new(rx)))
     }
 
+    /// Thin wrapper over [`submit_request`] keeping the original
+    /// `(prompt, max_new_tokens)` call shape.
+    ///
+    /// [`submit_request`]: Coordinator::submit_request
+    pub fn submit(
+        &self,
+        variant: &str,
+        prompt: Vec<usize>,
+        max_new_tokens: usize,
+    ) -> Result<(RequestId, ResponseHandle)> {
+        self.submit_request(variant, GenerateRequest::new(prompt, max_new_tokens))
+    }
+
+    /// Submit a [`GenerateRequest`] and block for the final summary.
+    pub fn generate_request(
+        &self,
+        variant: &str,
+        req: GenerateRequest,
+    ) -> Result<GenerateResponse> {
+        let (_, handle) = self.submit_request(variant, req)?;
+        handle.recv().map_err(|_| anyhow::anyhow!("worker dropped the response"))
+    }
+
     /// Convenience: submit and block for the final summary.
     pub fn generate(
         &self,
@@ -164,8 +205,7 @@ impl Coordinator {
         prompt: Vec<usize>,
         max_new_tokens: usize,
     ) -> Result<GenerateResponse> {
-        let (_, handle) = self.submit(variant, prompt, max_new_tokens)?;
-        handle.recv().map_err(|_| anyhow::anyhow!("worker dropped the response"))
+        self.generate_request(variant, GenerateRequest::new(prompt, max_new_tokens))
     }
 
     pub fn variants(&self) -> Vec<String> {
@@ -192,11 +232,11 @@ impl Drop for Coordinator {
     }
 }
 
-/// One in-flight sequence: its request, KV-pool slot, token state, and
-/// the pending logits its next token will be sampled from.
+/// One in-flight sequence: its work item, KV sequence handle, token
+/// state, and the pending logits its next token will be sampled from.
 struct ActiveSeq {
-    req: GenerateRequest,
-    slot: usize,
+    item: WorkItem,
+    handle: crate::nn::kvcache::SeqHandle,
     /// Prompt + generated tokens.
     tokens: Vec<usize>,
     generated: usize,
@@ -217,32 +257,47 @@ struct ActiveSeq {
     cancelled: bool,
 }
 
-/// Admit one request: claim a KV slot and prefill the prompt into it.
+/// Try to admit one work item: reserve a block budget for the whole
+/// generation, then prefill the part of the prompt the prefix cache
+/// does not already hold. `Err` hands the item back when the manager
+/// cannot reserve enough blocks this iteration (head-of-line FIFO: the
+/// caller retries once live sequences retire).
 fn admit(
     model: &TinyLM,
-    pool: &mut KvPool,
+    mgr: &mut KvBlockManager,
     metrics: &Metrics,
-    mut req: GenerateRequest,
-) -> ActiveSeq {
-    let queue_time = req.enqueued_at.elapsed();
+    mut item: WorkItem,
+) -> Result<ActiveSeq, WorkItem> {
+    // Reserve capacity for prompt + full generation up front (clamped
+    // to the context window, past which decode stops anyway) so the
+    // decode path can never run out of blocks mid-sequence.
+    let max_total = if item.req.prompt.is_empty() {
+        0
+    } else {
+        (item.req.prompt.len() + item.req.params.max_new_tokens).min(model.cfg.max_seq)
+    };
+    let Some(adm) = mgr.admit(&item.req.prompt, max_total) else {
+        return Err(item);
+    };
+    let queue_time = item.enqueued_at.elapsed();
     metrics.record_admitted(queue_time);
-    trace::serve_point("admit", req.id);
-    let slot = pool.alloc().expect("admission is capped by pool.free_count()");
+    trace::serve_point("admit", item.id);
     let admitted_at = Instant::now();
-    // Ingest the WHOLE prompt, exactly like `TinyLM::generate`'s
-    // token-by-token loop does (position embeddings clamp inside the
-    // model; the slot's K/V grows past its capacity if needed). The
-    // step loop then stops at the context edge before any decode, so
-    // over-long prompts yield the same single token as direct
-    // generation.
-    let logits = model.prefill_slot(&req.prompt, pool, slot);
-    trace::serve_point("prefill", req.id);
+    // Prefill ONLY the suffix the prefix cache does not cover; the
+    // cached span's K/V rows are shared with the request that wrote
+    // them, so the math (and every token out) is bit-identical to a
+    // cold prefill of the whole prompt.
+    let logits = model.prefill_seq(&item.req.prompt[adm.cached_tokens..], mgr, adm.handle);
+    trace::serve_point("prefill", item.id);
     // The prompt buffer becomes the sequence's token list (nothing
-    // reads req.prompt after prefill) — no second copy per slot.
-    let tokens = std::mem::take(&mut req.prompt);
-    ActiveSeq {
-        req,
-        slot,
+    // reads item.req.prompt after prefill) — no second copy per seq.
+    let tokens = std::mem::take(&mut item.req.prompt);
+    // Publish the prompt's full blocks into the prefix cache so the
+    // NEXT request sharing this prompt prefix skips prefill over it.
+    mgr.cache_prefix(adm.handle, &tokens);
+    Ok(ActiveSeq {
+        item,
+        handle: adm.handle,
         tokens,
         generated: 0,
         logits,
@@ -251,14 +306,16 @@ fn admit(
         first_token_at: None,
         ttft: None,
         cancelled: false,
-    }
+    })
 }
 
-/// Retire a sequence: free its slot, record metrics, send `Done`; under
-/// `BLAST_TRACE=serve` also dump the request's lifecycle timeline.
-fn retire(seq: ActiveSeq, pool: &mut KvPool, metrics: &Metrics) {
-    let id = seq.req.id;
-    pool.release(seq.slot);
+/// Retire a sequence: release its handle (private blocks return to the
+/// free list; prompt-prefix blocks stay cached for future hits), record
+/// metrics, send `Done`; under `BLAST_TRACE=serve` also dump the
+/// request's lifecycle timeline.
+fn retire(seq: ActiveSeq, mgr: &mut KvBlockManager, metrics: &Metrics) {
+    let id = seq.item.id;
+    mgr.free(seq.handle);
     trace::serve_point("retire", id);
     let compute_time = seq.admitted_at.elapsed();
     let ttft = seq.ttft;
@@ -272,16 +329,16 @@ fn retire(seq: ActiveSeq, pool: &mut KvPool, metrics: &Metrics) {
         seq.cancelled,
     );
     if !seq.cancelled {
-        let ActiveSeq { req, tokens, generated, queue_time, .. } = seq;
-        let _ = req.respond_to.send(ResponseEvent::Done(GenerateResponse {
-            id: req.id,
+        let ActiveSeq { item, tokens, generated, queue_time, .. } = seq;
+        let _ = item.respond_to.send(ResponseEvent::Done(GenerateResponse {
+            id: item.id,
             tokens,
             generated,
             queue_time,
             compute_time,
             ttft,
         }));
-        // `req` (and its sender) drops here, closing the client stream.
+        // `item` (and its sender) drops here, closing the client stream.
     }
     // Timeline dump on Done: the format/println cost only exists when
     // the operator asked for it.
@@ -300,30 +357,39 @@ fn retire(seq: ActiveSeq, pool: &mut KvPool, metrics: &Metrics) {
 /// `decode_step` per row) produces the next logits.
 fn worker_loop(
     model: TinyLM,
-    rx: Receiver<GenerateRequest>,
+    rx: Receiver<WorkItem>,
     cfg: CoordinatorConfig,
     metrics: Arc<Metrics>,
 ) {
-    let slots = cfg.slots.max(1);
+    let max_seqs = cfg.engine.max_seqs.max(1);
     // Warm the execution caches before taking traffic: pretune builds
     // every layer's StructPlan (cached on the layer — Monarch/BlockDiag/
     // LowRank models serve through the same plan path as Dense/BLAST),
-    // then tunes decode at batch 1 and at full pool width plus the
+    // then tunes decode at batch 1 and at full concurrency plus the
     // longest prefill this model accepts, so plan builds, tuning probes,
     // and factor-panel packing all run at model-load time rather than
     // inside the first request.
-    model.pretune(&[1, slots, model.cfg.max_seq - 1]);
-    let mut pool = model.new_kv_pool(slots);
+    model.pretune(&[1, max_seqs, model.cfg.max_seq - 1]);
+    let mut mgr = model.new_kv_manager_with(
+        max_seqs,
+        cfg.engine.kv_block_size,
+        cfg.engine.kv_cache_blocks,
+    );
     let mut batcher = DynamicBatcher::new(rx, cfg.batcher);
     let mut active: Vec<ActiveSeq> = Vec::new();
+    // Requests pulled off the queue but not yet admitted (waiting for
+    // KV blocks). FIFO: the head blocks everything behind it, so a big
+    // request cannot be starved by small ones slipping past.
+    let mut pending: VecDeque<WorkItem> = VecDeque::new();
     // Steady-state decode scratch: one arena per worker plus reusable
     // step buffers, so an iteration with no admissions or retirements
     // performs zero heap allocations (the prefill on admission is the
     // one allowed allocator — it is not steady state).
     let mut arena = ScratchArena::new();
-    let mut step_toks: Vec<usize> = Vec::with_capacity(slots);
-    let mut step_slots: Vec<usize> = Vec::with_capacity(slots);
-    let mut next_active: Vec<ActiveSeq> = Vec::with_capacity(slots);
+    let mut step_toks: Vec<usize> = Vec::with_capacity(max_seqs);
+    let mut step_handles: Vec<crate::nn::kvcache::SeqHandle> =
+        Vec::with_capacity(max_seqs);
+    let mut next_active: Vec<ActiveSeq> = Vec::with_capacity(max_seqs);
     // Logits of the previous decode step (valid when `have_logits`):
     // row `i` belongs to `active[i]` (retired sequences were filtered
     // out of `active` before the step ran, and admissions only append,
@@ -331,29 +397,39 @@ fn worker_loop(
     let mut step_logits = Matrix::zeros(0, model.cfg.vocab);
     let mut have_logits = false;
     loop {
-        // ---- 1. Admission: fill free slots from the queue. ----
-        let mut admitted = 0usize;
-        if active.is_empty() {
+        // ---- 1. Admission: drain the queue, admit while blocks last. ----
+        if active.is_empty() && pending.is_empty() {
             // Idle: park until work arrives (None = queue closed).
-            let Some(req) = batcher.recv_one() else { break };
-            active.push(admit(&model, &mut pool, &metrics, req));
-            admitted = 1;
+            let Some(item) = batcher.recv_one() else { break };
+            pending.push_back(item);
         }
-        // `max_batch` caps prefills per iteration (including an
-        // idle-wake admission above); free slots cap concurrency.
-        let burst = pool
-            .free_count()
-            .min(cfg.batcher.max_batch.saturating_sub(admitted));
-        for req in batcher.try_admit(burst) {
-            active.push(admit(&model, &mut pool, &metrics, req));
+        pending.extend(batcher.try_admit(usize::MAX));
+        // `max_batch` caps prefills per iteration; the manager's block
+        // budget caps concurrency. Head-of-line FIFO: when the front
+        // item cannot reserve its blocks, it waits for retirements
+        // rather than letting later requests jump the queue.
+        let mut admitted = 0usize;
+        while admitted < cfg.batcher.max_batch.max(1) && active.len() < max_seqs {
+            let Some(item) = pending.pop_front() else { break };
+            match admit(&model, &mut mgr, &metrics, item) {
+                Ok(seq) => {
+                    active.push(seq);
+                    admitted += 1;
+                }
+                Err(item) => {
+                    pending.push_front(item);
+                    break;
+                }
+            }
         }
 
         // ---- 2. Sample one token per sequence; stream + retire. ----
         let prev_live = if have_logits { step_logits.rows } else { 0 };
         step_toks.clear();
-        step_slots.clear();
+        step_handles.clear();
         for (idx, mut seq) in active.drain(..).enumerate() {
-            let sampled = if seq.generated >= seq.req.max_new_tokens {
+            let params = seq.item.req.params;
+            let sampled = if seq.generated >= params.max_new_tokens {
                 None // max_new_tokens exhausted (or zero).
             } else if idx < prev_live {
                 // Continuing sequence: its row of the last decode step.
@@ -364,7 +440,7 @@ fn worker_loop(
                 seq.logits.as_ref().map(|l| argmax(l.row(0)))
             };
             let Some(next) = sampled else {
-                retire(seq, &mut pool, &metrics);
+                retire(seq, &mut mgr, &metrics);
                 continue;
             };
             seq.tokens.push(next);
@@ -376,49 +452,51 @@ fn worker_loop(
                 seq.ttft = Some(seq.queue_time + now.duration_since(seq.admitted_at));
             }
             let event = ResponseEvent::Token {
-                id: seq.req.id,
+                id: seq.item.id,
                 token: next,
                 index: seq.generated - 1,
             };
-            if seq.req.respond_to.send(event).is_err() {
-                // Client went away: free the slot instead of decoding on.
+            if seq.item.respond_to.send(event).is_err() {
+                // Client went away: free the blocks instead of decoding on.
                 seq.cancelled = true;
             } else if first {
                 // Record TTFT only once the first token actually
                 // reached the client — a request cancelled before
                 // delivery must not contribute a latency sample.
                 metrics.record_ttft(seq.ttft.expect("set above"));
-                trace::serve_point("first_token", seq.req.id);
+                trace::serve_point("first_token", seq.item.id);
             }
             let pos = seq.tokens.len() - 1;
             let done = seq.cancelled
-                || seq.generated >= seq.req.max_new_tokens
-                || pos + 1 >= model.cfg.max_seq;
+                || seq.generated >= params.max_new_tokens
+                || pos + 1 >= model.cfg.max_seq
+                || params.stop_token == Some(next);
             if done {
-                retire(seq, &mut pool, &metrics);
+                retire(seq, &mut mgr, &metrics);
             } else {
                 // The prefill logits (if any) are spent; from here on
                 // the sequence samples from the shared step matrix.
                 seq.logits = None;
                 step_toks.push(next);
-                step_slots.push(seq.slot);
+                step_handles.push(seq.handle);
                 next_active.push(seq);
             }
         }
         std::mem::swap(&mut active, &mut next_active); // next_active is now empty
 
-        // ---- 3. One batched decode step over every live slot. ----
+        // ---- 3. One batched decode step over every live sequence. ----
         // Row `i` of the result is `active[i]`'s next-token logits,
         // written into the worker's reusable logits buffer through the
-        // arena-backed zero-allocation path.
+        // arena-backed zero-allocation path (KV rows land in blocks
+        // reserved at admission — never the heap).
         if step_toks.is_empty() {
             have_logits = false;
         } else {
             metrics.record_batch(step_toks.len());
             model.decode_step_batch_into(
                 &step_toks,
-                &mut pool,
-                &step_slots,
+                &mut mgr,
+                &step_handles,
                 &mut arena,
                 &mut step_logits,
             );
@@ -437,6 +515,13 @@ mod tests {
     fn tiny_model(seed: u64, s: StructureKind) -> TinyLM {
         let mut rng = Rng::new(seed);
         TinyLM::new(LmConfig::tiny(s), &mut rng)
+    }
+
+    /// Deterministic test config: fixed geometry regardless of BLAST_*
+    /// env in the test environment.
+    fn test_cfg(max_seqs: usize) -> CoordinatorConfig {
+        let engine = EngineConfig { max_seqs, ..EngineConfig::default() };
+        CoordinatorConfig { batcher: BatcherConfig::default(), engine }
     }
 
     #[test]
@@ -499,9 +584,11 @@ mod tests {
     }
 
     #[test]
-    fn slot_churn_more_requests_than_slots() {
-        // 2 slots, 10 concurrent requests: admission must recycle slots
-        // mid-flight without corrupting any sequence.
+    fn seq_churn_more_requests_than_capacity() {
+        // 2 concurrent sequences, 10 concurrent requests: admission
+        // must recycle KV blocks mid-flight without corrupting any
+        // sequence (prefix-cache hits between the shared prompts are
+        // exercised too — same prompts recur across requests).
         let model = tiny_model(905, StructureKind::Blast { b: 2, r: 4 });
         let expectations: Vec<(Vec<usize>, Vec<usize>)> = (0..10usize)
             .map(|i| {
@@ -511,10 +598,7 @@ mod tests {
             .collect();
         let coord = Arc::new(Coordinator::new(
             vec![("m".into(), model)],
-            CoordinatorConfig {
-                batcher: BatcherConfig::default(),
-                slots: 2,
-            },
+            test_cfg(2),
         ));
         let mut joins = Vec::new();
         for (i, (prompt, expected)) in expectations.into_iter().enumerate() {
@@ -529,8 +613,33 @@ mod tests {
         }
         let snap = coord.metrics.snapshot();
         assert_eq!(snap.requests, 10);
-        // With only 2 slots, steps can never be wider than 2.
+        // With only 2 sequences, steps can never be wider than 2.
         assert!(snap.batch_size_sum <= snap.batches * 2);
+    }
+
+    #[test]
+    fn stop_token_ends_generation_early_inclusive() {
+        let model = tiny_model(910, StructureKind::Dense);
+        let prompt = vec![2usize, 5];
+        let direct = model.generate(&prompt, 8);
+        // Pick the third generated token as the stop token; the served
+        // stream must stop at its FIRST occurrence, still emitting it.
+        let stop = direct[prompt.len() + 2];
+        let first_hit = direct[prompt.len()..]
+            .iter()
+            .position(|&t| t == stop)
+            .expect("stop token is generated");
+        let expected: Vec<usize> = direct[..prompt.len() + first_hit + 1].to_vec();
+        let coord =
+            Coordinator::new(vec![("m".into(), model)], CoordinatorConfig::default());
+        let req = GenerateRequest::builder(prompt)
+            .max_tokens(8)
+            .stop_token(stop)
+            .build();
+        let resp = coord.generate_request("m", req).unwrap();
+        assert_eq!(resp.tokens, expected);
+        assert_eq!(resp.generated, first_hit + 1);
+        coord.shutdown();
     }
 
     #[test]

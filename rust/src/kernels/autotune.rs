@@ -77,7 +77,7 @@ impl Autotuner {
     /// exists; tuning decisions are re-persisted to it).
     pub fn from_env() -> Self {
         let tuner = Autotuner::new();
-        if let Ok(path) = std::env::var("BLAST_AUTOTUNE_CACHE") {
+        if let Some(path) = &crate::util::config::EngineConfig::global().autotune_cache {
             let path = PathBuf::from(path);
             let _ = tuner.load(&path); // best effort; absent file is fine
             // Safety note: persist_to is only read after construction.

@@ -138,11 +138,15 @@ pub fn avx2_detected() -> bool {
     }
 }
 
-/// Process-wide dispatch mode from `BLAST_SIMD` (resolved once).
+/// Process-wide dispatch mode from `BLAST_SIMD` (resolved once through
+/// [`EngineConfig`](crate::util::config::EngineConfig)).
 pub fn simd_mode() -> SimdMode {
+    use crate::util::config::{EngineConfig, SimdPref};
     static MODE: OnceLock<SimdMode> = OnceLock::new();
-    *MODE.get_or_init(|| {
-        std::env::var("BLAST_SIMD").map(|s| SimdMode::parse(&s)).unwrap_or(SimdMode::Auto)
+    *MODE.get_or_init(|| match EngineConfig::global().simd {
+        SimdPref::Auto => SimdMode::Auto,
+        SimdPref::Avx2 => SimdMode::Avx2,
+        SimdPref::Portable => SimdMode::Portable,
     })
 }
 

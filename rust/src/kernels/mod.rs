@@ -271,8 +271,9 @@ impl KernelEngine {
             Box::new(PlanKernel::row_parallel_i8()),
         ];
         let tuner = Autotuner::from_env();
-        let forced = std::env::var("BLAST_KERNEL")
-            .ok()
+        let forced = crate::util::config::EngineConfig::global()
+            .kernel_force
+            .as_deref()
             .and_then(|name| kernels.iter().position(|k| k.name() == name));
         KernelEngine { kernels, tuner, forced }
     }

@@ -312,9 +312,8 @@ impl PackCache {
     /// Cache bounded by `BLAST_PACK_CACHE_MB` (default
     /// [`DEFAULT_PACK_CACHE_MB`]).
     pub fn new() -> Self {
-        let mb = std::env::var("BLAST_PACK_CACHE_MB")
-            .ok()
-            .and_then(|s| s.parse::<usize>().ok())
+        let mb = crate::util::config::EngineConfig::global()
+            .pack_cache_mb
             .filter(|&mb| mb > 0)
             .unwrap_or(DEFAULT_PACK_CACHE_MB);
         Self::with_capacity_bytes(mb.saturating_mul(1024 * 1024))

@@ -20,8 +20,8 @@
 //! * [`data`] / [`eval`] — synthetic workloads and the paper's metrics.
 //! * [`runtime`] — PJRT executor for AOT-compiled JAX/Pallas artifacts.
 //! * [`coordinator`] — the L3 serving system: router, streaming
-//!   responses, and iteration-level continuous batching over a slotted
-//!   KV pool.
+//!   responses, and iteration-level continuous batching over a paged
+//!   KV block manager with radix-tree prefix caching.
 //! * [`experiments`] — one harness per paper table/figure.
 //! * [`obs`] — crate-wide observability: metrics registry, plan-stage
 //!   profiler, request tracer, and the snapshot/exposition surfaces.

@@ -7,7 +7,7 @@
 //! `wqkv` here is a single structured `Linear` of shape `3d × d`.
 
 use super::activation::{softmax_backward, softmax_rows};
-use super::kvcache::LayerKv;
+use super::kvcache::{KvLayerCtx, KvView, LayerKv, SeqHandle};
 use super::linear::{Linear, LinearCache};
 use super::param::PTensor;
 use crate::tensor::{Matrix, Rng};
@@ -248,12 +248,14 @@ impl Attention {
         self.wqkv.backward(&cache.qkv_cache, &dqkv)
     }
 
-    /// Attention for one position whose K/V rows are already in `kv`:
+    /// Attention for one position whose K/V rows are already stored:
     /// per head, softmax the query slice of `qkv_row` against the first
     /// `len` cached positions and accumulate the context into `ctx_row`
     /// (which must start zeroed). Shared verbatim by the single-token,
-    /// batched, and prefill decode paths — one code path is what keeps
-    /// them bit-identical.
+    /// batched, prefill, and paged decode paths — one code path is what
+    /// keeps them bit-identical: [`KvView`] only changes how a logical
+    /// position resolves to an arena row (identity for private caches,
+    /// block-table gather for the paged manager), never the arithmetic.
     ///
     /// `scores` is caller-owned scratch (resized, never shrunk): the
     /// batched decode path hands in an arena buffer so the per-step
@@ -262,7 +264,7 @@ impl Attention {
     fn decode_attend(
         &self,
         qkv_row: &[f32],
-        kv: &LayerKv,
+        kv: &KvView<'_>,
         len: usize,
         ctx_row: &mut [f32],
         scores: &mut Vec<f32>,
@@ -276,7 +278,7 @@ impl Attention {
             // Scores over the cached keys.
             let mut max = f32::NEG_INFINITY;
             for u in 0..len {
-                let krow = &kv.k.row(u)[h * hd..(h + 1) * hd];
+                let krow = &kv.k_row(u)[h * hd..(h + 1) * hd];
                 let mut acc = 0.0f32;
                 for c in 0..hd {
                     acc += q[c] * krow[c];
@@ -293,7 +295,7 @@ impl Attention {
             let crow = &mut ctx_row[h * hd..(h + 1) * hd];
             for u in 0..len {
                 let w = scores[u] * inv;
-                let vrow = &kv.v.row(u)[h * hd..(h + 1) * hd];
+                let vrow = &kv.v_row(u)[h * hd..(h + 1) * hd];
                 for c in 0..hd {
                     crow[c] += w * vrow[c];
                 }
@@ -311,24 +313,34 @@ impl Attention {
         kv.append(&row[d..2 * d], &row[2 * d..3 * d]);
         let mut ctx = Matrix::zeros(1, d);
         let mut scores = Vec::new();
-        self.decode_attend(row, kv, kv.len, ctx.row_mut(0), &mut scores);
+        self.decode_attend(row, &kv.view(), kv.len, ctx.row_mut(0), &mut scores);
         self.wo.forward(&ctx)
     }
 
     /// Batched incremental decode for continuous batching: row `t` of
-    /// `x (n_active×d)` is the next token of pool slot `slots[t]` in
-    /// `kv` (one `LayerKv` per slot, this layer). The Q/K/V and output
+    /// `x (n_active×d)` is the next token of sequence `seqs[t]` in the
+    /// block manager's layer context `kv`. The Q/K/V and output
     /// projections run as single batched products over all active rows
     /// — that is the throughput win over per-sequence `forward_decode`
     /// — while each row's attention runs the shared per-position
-    /// softmax over its own slot's prefix, so ragged sequence lengths
-    /// get their causal masking implicitly from each slot's K/V length
-    /// and every row is bit-identical to a lone `forward_decode` on the
-    /// same slot.
-    pub fn forward_decode_batch(&self, x: &Matrix, kv: &mut [LayerKv], slots: &[usize]) -> Matrix {
+    /// softmax over its own sequence's prefix (resolved through its
+    /// block table), so ragged sequence lengths get their causal
+    /// masking implicitly from each sequence's length and every row is
+    /// bit-identical to a lone `forward_decode` on a private cache with
+    /// the same history.
+    ///
+    /// The caller drives the manager's append protocol: positions for
+    /// this step must be reserved (`prepare_append`) before the layer
+    /// loop and published (`commit_append`) after it.
+    pub fn forward_decode_batch(
+        &self,
+        x: &Matrix,
+        kv: &mut KvLayerCtx<'_>,
+        seqs: &[SeqHandle],
+    ) -> Matrix {
         let mut arena = crate::util::arena::ScratchArena::new();
         let mut out = Matrix::zeros(0, 0);
-        self.forward_decode_batch_into(x, kv, slots, &mut out, &mut arena);
+        self.forward_decode_batch_into(x, kv, seqs, &mut out, &mut arena);
         out
     }
 
@@ -342,33 +354,35 @@ impl Attention {
     pub fn forward_decode_batch_into(
         &self,
         x: &Matrix,
-        kv: &mut [LayerKv],
-        slots: &[usize],
+        kv: &mut KvLayerCtx<'_>,
+        seqs: &[SeqHandle],
         out: &mut Matrix,
         arena: &mut ScratchArena,
     ) {
-        assert_eq!(x.rows, slots.len(), "one activation row per active slot");
+        assert_eq!(x.rows, seqs.len(), "one activation row per live sequence");
         let d = self.d_model;
         // Taken at the exact output shape so the kernel's `reset` stays
         // within the pooled buffer's capacity (no reallocation).
         let mut qkv = arena.take_matrix(x.rows, self.wqkv.out_features);
         self.wqkv.forward_into(x, &mut qkv); // n_active×3d, batched
         let mut ctx = arena.take_matrix(x.rows, d);
-        // Score scratch sized by slot *capacity* (not current length):
-        // capacities only change on rare KV growth, so the arena class
-        // this take maps to is stable across steps and decode_attend's
-        // per-slot resize always stays within the pooled buffer.
-        let max_len = slots
+        // Score scratch sized by each sequence's *budgeted* capacity
+        // (not current length): the budget is fixed at admission, so
+        // the arena class this take maps to is stable across steps —
+        // crossing a block boundary mid-decode must not change the
+        // take size, or the class switch would allocate.
+        let max_len = seqs
             .iter()
-            .map(|&s| kv[s].capacity().max(kv[s].len + 1))
+            .map(|&h| kv.score_capacity(h).max(kv.len(h) + 1))
             .max()
             .unwrap_or(0);
         let mut scores = arena.take(max_len);
-        for (t, &slot) in slots.iter().enumerate() {
+        for (t, &h) in seqs.iter().enumerate() {
             let row = qkv.row(t);
-            let lkv = &mut kv[slot];
-            lkv.append(&row[d..2 * d], &row[2 * d..3 * d]);
-            self.decode_attend(row, lkv, lkv.len, ctx.row_mut(t), &mut scores);
+            let len = kv.len(h);
+            kv.write_row(h, len, &row[d..2 * d], &row[2 * d..3 * d]);
+            let view = kv.view(h);
+            self.decode_attend(row, &view, len + 1, ctx.row_mut(t), &mut scores);
         }
         self.wo.forward_into(&ctx, out); // n_active×d, batched
         arena.recycle(scores);
@@ -398,7 +412,40 @@ impl Attention {
         let mut scores = Vec::with_capacity(base + seq);
         for t in 0..seq {
             // Causal: position base+t attends to positions 0..=base+t.
-            self.decode_attend(qkv.row(t), kv, base + t + 1, ctx.row_mut(t), &mut scores);
+            self.decode_attend(qkv.row(t), &kv.view(), base + t + 1, ctx.row_mut(t), &mut scores);
+        }
+        self.wo.forward(&ctx) // seq×d, batched
+    }
+
+    /// [`forward_prefill`] against the paged block manager: writes the
+    /// `seq` new positions of sequence `h` starting at its current
+    /// length and attends through the block table. Caller reserves the
+    /// positions (`prepare_append`) first and commits after all layers.
+    /// Numerically identical to the contiguous prefill — both feed
+    /// [`KvView`]s into the shared `decode_attend`.
+    ///
+    /// [`forward_prefill`]: Attention::forward_prefill
+    pub fn forward_prefill_paged(
+        &self,
+        x: &Matrix,
+        kv: &mut KvLayerCtx<'_>,
+        h: SeqHandle,
+    ) -> Matrix {
+        assert!(self.causal, "prefill is only defined for causal attention");
+        let seq = x.rows;
+        let d = self.d_model;
+        let qkv = self.wqkv.forward(x); // seq×3d, batched
+        let base = kv.len(h);
+        for t in 0..seq {
+            let row = qkv.row(t);
+            kv.write_row(h, base + t, &row[d..2 * d], &row[2 * d..3 * d]);
+        }
+        let mut ctx = Matrix::zeros(seq, d);
+        let mut scores = Vec::with_capacity(base + seq);
+        let view = kv.view(h);
+        for t in 0..seq {
+            // Causal: position base+t attends to positions 0..=base+t.
+            self.decode_attend(qkv.row(t), &view, base + t + 1, ctx.row_mut(t), &mut scores);
         }
         self.wo.forward(&ctx) // seq×d, batched
     }
@@ -544,43 +591,80 @@ mod tests {
 
     #[test]
     fn batched_decode_bit_identical_to_sequential_ragged_lengths() {
-        // Three slots with different prefix lengths advanced in one
-        // batched step must match three independent forward_decode
-        // calls exactly (not just approximately).
+        // Three paged sequences with different prefix lengths advanced
+        // in one batched step must match three independent
+        // forward_decode calls on private contiguous caches exactly
+        // (not just approximately) — the block-table gather must be
+        // invisible to the arithmetic.
+        use super::super::kvcache::KvBlockManager;
         let mut rng = Rng::new(345);
         for structure in [StructureKind::Dense, StructureKind::Blast { b: 2, r: 3 }] {
             let attn = Attention::new(8, 2, structure, &mut rng);
-            // Ragged prefixes: slot 0 has 3 positions, slot 1 none,
-            // slot 2 one.
+            // One layer, block size 4 — prefixes will straddle blocks.
+            let mut mgr = KvBlockManager::new(1, 16, 4, 8);
+            // Ragged prefixes: sequence 0 has 3 positions, 1 none, 2 one.
             let prefix_lens = [3usize, 0, 1];
-            let mut pool: Vec<LayerKv> =
-                (0..3).map(|_| LayerKv::with_capacity(8, 8)).collect();
+            let handles: Vec<_> =
+                (0..3).map(|_| mgr.admit(&[], 8).unwrap().handle).collect();
             let mut refs: Vec<LayerKv> =
                 (0..3).map(|_| LayerKv::with_capacity(8, 8)).collect();
             for (s, &plen) in prefix_lens.iter().enumerate() {
                 for _ in 0..plen {
                     let xt = rng.gaussian_matrix(1, 8, 1.0);
-                    let _ = attn.forward_decode(&xt, &mut pool[s]);
+                    mgr.prepare_append(handles[s], 1);
+                    let mut ctx = mgr.layer_ctx(0);
+                    let _ = attn.forward_decode_batch(&xt, &mut ctx, &handles[s..s + 1]);
+                    mgr.commit_append(handles[s], 1);
                     let _ = attn.forward_decode(&xt, &mut refs[s]);
                 }
             }
-            // One batched step over slots [2, 0, 1] (order ≠ slot id).
+            // One batched step over sequences [2, 0, 1] (order ≠ id).
             let x = rng.gaussian_matrix(3, 8, 1.0);
-            let slots = [2usize, 0, 1];
-            let y = attn.forward_decode_batch(&x, &mut pool, &slots);
-            for (t, &slot) in slots.iter().enumerate() {
+            let seqs = [handles[2], handles[0], handles[1]];
+            for &h in &seqs {
+                mgr.prepare_append(h, 1);
+            }
+            let y = {
+                let mut ctx = mgr.layer_ctx(0);
+                attn.forward_decode_batch(&x, &mut ctx, &seqs)
+            };
+            for &h in &seqs {
+                mgr.commit_append(h, 1);
+            }
+            for (t, &slot) in [2usize, 0, 1].iter().enumerate() {
                 let xt = x.submatrix(t, t + 1, 0, 8);
                 let yt = attn.forward_decode(&xt, &mut refs[slot]);
                 for c in 0..8 {
                     assert_eq!(
                         y.at(t, c),
                         yt.at(0, c),
-                        "{structure:?} slot {slot} row {t} col {c}"
+                        "{structure:?} seq {slot} row {t} col {c}"
                     );
                 }
-                assert_eq!(pool[slot].len, refs[slot].len);
+                assert_eq!(mgr.seq_len(handles[slot]), refs[slot].len);
             }
         }
+    }
+
+    #[test]
+    fn paged_prefill_matches_contiguous_prefill() {
+        use super::super::kvcache::KvBlockManager;
+        let mut rng = Rng::new(346);
+        let attn = Attention::new(8, 2, StructureKind::Blast { b: 2, r: 3 }, &mut rng);
+        let x = rng.gaussian_matrix(6, 8, 1.0);
+        // Contiguous reference.
+        let mut kv_ref = LayerKv::with_capacity(8, 8);
+        let y_ref = attn.forward_prefill(&x, &mut kv_ref);
+        // Paged: block size 4 so the 6 positions span two blocks.
+        let mut mgr = KvBlockManager::new(1, 4, 4, 8);
+        let h = mgr.admit(&[], 8).unwrap().handle;
+        mgr.prepare_append(h, 6);
+        let y = {
+            let mut ctx = mgr.layer_ctx(0);
+            attn.forward_prefill_paged(&x, &mut ctx, h)
+        };
+        mgr.commit_append(h, 6);
+        assert_eq!(y.data, y_ref.data, "paged prefill must be bit-identical");
     }
 
     #[test]

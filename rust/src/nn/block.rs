@@ -3,7 +3,7 @@
 
 use super::activation::{gelu, gelu_backward, gelu_inplace};
 use super::attention::{AttnCache, Attention, StructureKind};
-use super::kvcache::LayerKv;
+use super::kvcache::{KvLayerCtx, LayerKv, SeqHandle};
 use super::layernorm::{LayerNorm, LnCache};
 use super::linear::{Linear, LinearCache};
 use super::param::PTensor;
@@ -131,14 +131,20 @@ impl Block {
     }
 
     /// Batched KV-cached decode for continuous batching: row `t` of `x`
-    /// advances pool slot `slots[t]` (one `LayerKv` per slot in `kv`).
-    /// LayerNorm/GELU/residuals are row-wise and the four structured
-    /// linears run as batched kernel dispatches, so each row is
-    /// bit-identical to a lone `forward_decode` on that slot.
-    pub fn forward_decode_batch(&self, x: &Matrix, kv: &mut [LayerKv], slots: &[usize]) -> Matrix {
+    /// advances sequence `seqs[t]` through this layer's block-manager
+    /// context. LayerNorm/GELU/residuals are row-wise and the four
+    /// structured linears run as batched kernel dispatches, so each row
+    /// is bit-identical to a lone `forward_decode` on a private cache
+    /// with the same history.
+    pub fn forward_decode_batch(
+        &self,
+        x: &Matrix,
+        kv: &mut KvLayerCtx<'_>,
+        seqs: &[SeqHandle],
+    ) -> Matrix {
         let mut arena = crate::util::arena::ScratchArena::new();
         let mut out = Matrix::zeros(x.rows, self.d_model);
-        self.forward_decode_batch_into(x, kv, slots, &mut out, &mut arena);
+        self.forward_decode_batch_into(x, kv, seqs, &mut out, &mut arena);
         out
     }
 
@@ -152,8 +158,8 @@ impl Block {
     pub fn forward_decode_batch_into(
         &self,
         x: &Matrix,
-        kv: &mut [LayerKv],
-        slots: &[usize],
+        kv: &mut KvLayerCtx<'_>,
+        seqs: &[SeqHandle],
         out: &mut Matrix,
         arena: &mut ScratchArena,
     ) {
@@ -162,7 +168,7 @@ impl Block {
         let mut ln1_out = arena.take_matrix(rows, d);
         self.ln1.forward_into(x, &mut ln1_out);
         let mut a = arena.take_matrix(rows, d);
-        self.attn.forward_decode_batch_into(&ln1_out, kv, slots, &mut a, arena);
+        self.attn.forward_decode_batch_into(&ln1_out, kv, seqs, &mut a, arena);
         arena.recycle_matrix(ln1_out);
         // x_mid = x + a, in place over the attention output (same
         // element order as `x.add(&a)`).
@@ -194,6 +200,24 @@ impl Block {
         let x_mid = x.add(&a);
         let h = gelu(&self.fc1.forward(&self.ln2.forward(&x_mid)));
         let m = self.fc2.forward(&h);
+        x_mid.add(&m)
+    }
+
+    /// [`forward_prefill`] against the paged block manager (sequence
+    /// `h` in this layer's context). Same bit-identity argument: only
+    /// attention's position→row mapping differs.
+    ///
+    /// [`forward_prefill`]: Block::forward_prefill
+    pub fn forward_prefill_paged(
+        &self,
+        x: &Matrix,
+        kv: &mut KvLayerCtx<'_>,
+        h: SeqHandle,
+    ) -> Matrix {
+        let a = self.attn.forward_prefill_paged(&self.ln1.forward(x), kv, h);
+        let x_mid = x.add(&a);
+        let hid = gelu(&self.fc1.forward(&self.ln2.forward(&x_mid)));
+        let m = self.fc2.forward(&hid);
         x_mid.add(&m)
     }
 

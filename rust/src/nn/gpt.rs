@@ -7,7 +7,7 @@
 
 use super::attention::{Attention, StructureKind};
 use super::block::{Block, BlockCache};
-use super::kvcache::{KvCache, KvPool, LayerKv};
+use super::kvcache::{KvBlockManager, KvCache, LayerKv, SeqHandle};
 use super::layernorm::{LayerNorm, LnCache};
 use super::linear::{Linear, LinearCache};
 use super::param::PTensor;
@@ -220,19 +220,45 @@ impl TinyLM {
         self.prefill_impl(tokens, pos0, kv.layers.iter_mut())
     }
 
-    /// Prefill into a [`KvPool`] slot — the continuous-batching
-    /// admission path. Identical to [`prefill`] except the per-layer
-    /// K/V lives in the pool's `slot` instead of a private cache.
+    /// Prefill into a [`KvBlockManager`] sequence — the
+    /// continuous-batching admission path. Identical to [`prefill`]
+    /// except the per-layer K/V lands in the sequence's block table
+    /// instead of a private contiguous cache, and positions start at
+    /// the sequence's current length — so a prefix-cache hit is served
+    /// by prefilling only the uncovered suffix. Bit-identical to
+    /// [`prefill`] on the same full token history.
     ///
     /// [`prefill`]: TinyLM::prefill
-    pub fn prefill_slot(
+    pub fn prefill_seq(
         &self,
         tokens: &[usize],
-        pool: &mut KvPool,
-        slot: usize,
+        mgr: &mut KvBlockManager,
+        h: SeqHandle,
     ) -> Option<Matrix> {
-        let pos0 = pool.seq_len(slot);
-        self.prefill_impl(tokens, pos0, pool.slot_layers_mut(slot))
+        if tokens.is_empty() {
+            return None;
+        }
+        let pos0 = mgr.seq_len(h);
+        let d = self.cfg.d_model;
+        let mut x = Matrix::zeros(tokens.len(), d);
+        for (t, &tok) in tokens.iter().enumerate() {
+            assert!(tok < self.cfg.vocab, "token {tok} out of vocab");
+            let e = self.tok_embed.v.row(tok);
+            let p = self.pos_embed.v.row((pos0 + t).min(self.cfg.max_seq - 1));
+            let row = x.row_mut(t);
+            for c in 0..d {
+                row[c] = e[c] + p[c];
+            }
+        }
+        mgr.prepare_append(h, tokens.len());
+        for (l, blk) in self.blocks.iter().enumerate() {
+            let mut kv = mgr.layer_ctx(l);
+            x = blk.forward_prefill_paged(&x, &mut kv, h);
+        }
+        mgr.commit_append(h, tokens.len());
+        mgr.note_prefilled(tokens.len());
+        let last = x.submatrix(x.rows - 1, x.rows, 0, d);
+        Some(self.head.forward(&self.ln_f.forward(&last)))
     }
 
     fn prefill_impl<'a>(
@@ -314,31 +340,34 @@ impl TinyLM {
     }
 
     /// One continuous-batching decode iteration: `toks[t]` is the next
-    /// token for pool slot `slots[t]`, fed at that slot's current
-    /// sequence position. Every layer's Q/K/V, attention-output, and
-    /// MLP products run at batch = active slots through the kernel
-    /// engine (instead of `slots.len()` independent matvecs); the
-    /// returned logits matrix has one row per entry of `slots`, each
+    /// token for sequence `handles[t]`, fed at that sequence's current
+    /// length. Every layer's Q/K/V, attention-output, and MLP products
+    /// run at batch = active sequences through the kernel engine
+    /// (instead of `handles.len()` independent matvecs); the returned
+    /// logits matrix has one row per entry of `handles`, each
     /// bit-identical to [`decode_step`] on a private cache holding the
-    /// same prefix. `slots` must not contain duplicates.
+    /// same prefix. `handles` must not contain duplicates.
     ///
     /// [`decode_step`]: TinyLM::decode_step
     pub fn decode_step_batch(
         &self,
         toks: &[usize],
-        pool: &mut KvPool,
-        slots: &[usize],
+        mgr: &mut KvBlockManager,
+        handles: &[SeqHandle],
     ) -> Matrix {
         let mut arena = ScratchArena::new();
         let mut logits = Matrix::zeros(0, self.cfg.vocab);
-        self.decode_step_batch_into(toks, pool, slots, &mut arena, &mut logits);
+        self.decode_step_batch_into(toks, mgr, handles, &mut arena, &mut logits);
         logits
     }
 
     /// Allocation-free [`decode_step_batch`]: the embedded batch, every
     /// block's intermediates, and the final LayerNorm come from
     /// `arena`; the logits land in the caller-owned `logits` buffer
-    /// (reshaped in place). Once the arena, the kernel plan table, the
+    /// (reshaped in place). KV rows for the new tokens go to blocks
+    /// reserved at admission time ([`KvBlockManager::prepare_append`]
+    /// pops the free list or evicts an unreferenced cached block —
+    /// never the heap), so once the arena, the kernel plan table, the
     /// packed-panel cache, and the kernels' thread-local scratch are
     /// warm at a given batch shape, a steady-state iteration performs
     /// **zero heap allocations** (`tests/decode_alloc.rs` asserts this
@@ -349,31 +378,38 @@ impl TinyLM {
     pub fn decode_step_batch_into(
         &self,
         toks: &[usize],
-        pool: &mut KvPool,
-        slots: &[usize],
+        mgr: &mut KvBlockManager,
+        handles: &[SeqHandle],
         arena: &mut ScratchArena,
         logits: &mut Matrix,
     ) {
-        assert_eq!(toks.len(), slots.len(), "one token per active slot");
-        if slots.is_empty() {
+        assert_eq!(toks.len(), handles.len(), "one token per active sequence");
+        if handles.is_empty() {
             logits.reset(0, self.cfg.vocab);
             return;
         }
         let d = self.cfg.d_model;
         let mut x = arena.take_matrix(toks.len(), d);
-        for (t, (&tok, &slot)) in toks.iter().zip(slots).enumerate() {
+        for (t, (&tok, &h)) in toks.iter().zip(handles).enumerate() {
             assert!(tok < self.cfg.vocab, "token {tok} out of vocab");
             let e = self.tok_embed.v.row(tok);
-            let p = self.pos_embed.v.row(pool.seq_len(slot).min(self.cfg.max_seq - 1));
+            let p = self.pos_embed.v.row(mgr.seq_len(h).min(self.cfg.max_seq - 1));
             let row = x.row_mut(t);
             for c in 0..d {
                 row[c] = e[c] + p[c];
             }
         }
+        for &h in handles {
+            mgr.prepare_append(h, 1);
+        }
         let mut y = arena.take_matrix(toks.len(), d);
         for (l, blk) in self.blocks.iter().enumerate() {
-            blk.forward_decode_batch_into(&x, pool.layer_mut(l), slots, &mut y, arena);
+            let mut kv = mgr.layer_ctx(l);
+            blk.forward_decode_batch_into(&x, &mut kv, handles, &mut y, arena);
             std::mem::swap(&mut x, &mut y);
+        }
+        for &h in handles {
+            mgr.commit_append(h, 1);
         }
         let mut ln_out = arena.take_matrix(toks.len(), d);
         self.ln_f.forward_into(&x, &mut ln_out);
@@ -387,10 +423,32 @@ impl TinyLM {
         KvCache::new(self.cfg.n_layers, self.cfg.max_seq, self.cfg.d_model)
     }
 
-    /// A [`KvPool`] sized for this model: `slots` concurrent sequences,
-    /// each with `max_seq` positions of per-layer K/V capacity.
-    pub fn new_kv_pool(&self, slots: usize) -> KvPool {
-        KvPool::new(self.cfg.n_layers, slots, self.cfg.max_seq, self.cfg.d_model)
+    /// A [`KvBlockManager`] sized for this model from the engine
+    /// config's block geometry: enough blocks for `max_seqs` concurrent
+    /// sequences of `max_seq` positions each, plus
+    /// [`EngineConfig::kv_cache_blocks`] extra blocks of prefix-cache
+    /// headroom.
+    ///
+    /// [`EngineConfig::kv_cache_blocks`]: crate::util::config::EngineConfig
+    pub fn new_kv_manager(&self, max_seqs: usize) -> KvBlockManager {
+        let cfg = crate::util::config::EngineConfig::global();
+        self.new_kv_manager_with(max_seqs, cfg.kv_block_size, cfg.kv_cache_blocks)
+    }
+
+    /// [`new_kv_manager`] with explicit geometry: `block_size` positions
+    /// per KV block and `cache_blocks` extra blocks reserved as
+    /// prefix-cache headroom beyond the `max_seqs × max_seq` worst case.
+    ///
+    /// [`new_kv_manager`]: TinyLM::new_kv_manager
+    pub fn new_kv_manager_with(
+        &self,
+        max_seqs: usize,
+        block_size: usize,
+        cache_blocks: usize,
+    ) -> KvBlockManager {
+        let bs = block_size.max(1);
+        let blocks = max_seqs.max(1) * self.cfg.max_seq.div_ceil(bs) + cache_blocks;
+        KvBlockManager::new(self.cfg.n_layers, blocks, bs, self.cfg.d_model)
     }
 
     // ------------------------------------------------------------------
@@ -627,9 +685,9 @@ mod tests {
     }
 
     #[test]
-    fn pool_decode_bit_identical_to_private_caches() {
-        // Three sequences with different prompts, prefilled into pool
-        // slots and advanced with batched decode steps, must match
+    fn paged_decode_bit_identical_to_private_caches() {
+        // Three sequences with different prompts, prefilled into block
+        // tables and advanced with batched decode steps, must match
         // per-sequence prefill + decode_step exactly.
         let mut rng = Rng::new(407);
         for s in [StructureKind::Dense, StructureKind::Blast { b: 2, r: 4 }] {
@@ -642,20 +700,24 @@ mod tests {
                 .zip(&mut kvs)
                 .map(|(p, kv)| lm.prefill(p, kv).unwrap())
                 .collect();
-            // Pool: prefill each prompt into its own slot.
-            let mut pool = lm.new_kv_pool(3);
-            let slots: Vec<usize> =
-                prompts.iter().map(|_| pool.alloc().unwrap()).collect();
-            let mut pool_logits: Vec<Matrix> = prompts
+            // Manager: prefill each prompt into its own sequence. A
+            // small block size forces every sequence across block
+            // boundaries during the decode steps.
+            let mut mgr = lm.new_kv_manager_with(3, 4, 2);
+            let handles: Vec<SeqHandle> = prompts
                 .iter()
-                .zip(&slots)
-                .map(|(p, &slot)| lm.prefill_slot(p, &mut pool, slot).unwrap())
+                .map(|p| mgr.admit(p, 16).unwrap().handle)
+                .collect();
+            let mut mgr_logits: Vec<Matrix> = prompts
+                .iter()
+                .zip(&handles)
+                .map(|(p, &h)| lm.prefill_seq(p, &mut mgr, h).unwrap())
                 .collect();
             for step in 0..4 {
                 for i in 0..3 {
                     for c in 0..lm.cfg.vocab {
                         assert_eq!(
-                            pool_logits[i].at(0, c),
+                            mgr_logits[i].at(0, c),
                             ref_logits[i].at(0, c),
                             "{s:?} step {step} seq {i} col {c}"
                         );
@@ -663,10 +725,10 @@ mod tests {
                 }
                 // Greedy-advance every sequence; batched vs private.
                 let toks: Vec<usize> =
-                    pool_logits.iter().map(|l| argmax(l.row(0))).collect();
-                let batched = lm.decode_step_batch(&toks, &mut pool, &slots);
+                    mgr_logits.iter().map(|l| argmax(l.row(0))).collect();
+                let batched = lm.decode_step_batch(&toks, &mut mgr, &handles);
                 for i in 0..3 {
-                    pool_logits[i] = batched.submatrix(i, i + 1, 0, batched.cols);
+                    mgr_logits[i] = batched.submatrix(i, i + 1, 0, batched.cols);
                     let pos = kvs[i].seq_len();
                     ref_logits[i] = lm.decode_step(toks[i], pos, &mut kvs[i]);
                 }
@@ -675,22 +737,65 @@ mod tests {
     }
 
     #[test]
-    fn pool_prefill_matches_private_prefill_after_churn() {
-        // Reusing a released slot must behave like a fresh cache.
+    fn paged_prefill_matches_private_prefill_after_churn() {
+        // Reusing freed blocks must behave like a fresh cache.
         let mut rng = Rng::new(408);
         let lm = TinyLM::new(LmConfig::tiny(StructureKind::Blast { b: 2, r: 4 }), &mut rng);
-        let mut pool = lm.new_kv_pool(1);
-        let s0 = pool.alloc().unwrap();
-        let _ = lm.prefill_slot(&[1, 2, 3, 4], &mut pool, s0).unwrap();
-        pool.release(s0);
-        let s1 = pool.alloc().unwrap();
-        let logits = lm.prefill_slot(&[7, 8], &mut pool, s1).unwrap();
+        let mut mgr = lm.new_kv_manager_with(1, 4, 0);
+        let a = mgr.admit(&[1, 2, 3, 4], 8).unwrap();
+        let _ = lm.prefill_seq(&[1, 2, 3, 4], &mut mgr, a.handle).unwrap();
+        mgr.free(a.handle);
+        let b = mgr.admit(&[7, 8], 8).unwrap();
+        assert_eq!(b.cached_tokens, 0);
+        let logits = lm.prefill_seq(&[7, 8], &mut mgr, b.handle).unwrap();
         let mut kv = lm.new_kv_cache();
         let expected = lm.prefill(&[7, 8], &mut kv).unwrap();
         for c in 0..lm.cfg.vocab {
             assert_eq!(logits.at(0, c), expected.at(0, c));
         }
-        assert_eq!(pool.seq_len(s1), 2);
+        assert_eq!(mgr.seq_len(b.handle), 2);
+    }
+
+    #[test]
+    fn prefix_cache_hit_skips_prefill_bit_identically() {
+        // Request A prefilled + cached; request B with the same prompt
+        // prefills only the uncovered suffix, yet its logits and decode
+        // continuation are bit-identical to a cold private cache.
+        let mut rng = Rng::new(411);
+        let lm = TinyLM::new(LmConfig::tiny(StructureKind::Blast { b: 2, r: 4 }), &mut rng);
+        let prompt: Vec<usize> = vec![3, 9, 27, 17, 5, 1, 2, 8, 44, 12];
+        let mut mgr = lm.new_kv_manager_with(2, 4, 8);
+        let a = mgr.admit(&prompt, 16).unwrap();
+        assert_eq!(a.cached_tokens, 0);
+        let _ = lm.prefill_seq(&prompt, &mut mgr, a.handle).unwrap();
+        mgr.cache_prefix(a.handle, &prompt);
+        mgr.free(a.handle);
+
+        let before = mgr.stats();
+        let b = mgr.admit(&prompt, 16).unwrap();
+        // 10 tokens, block size 4 → the first two blocks (8 tokens) are
+        // served from the prefix cache; a hit never covers the whole
+        // prompt, so the last position is always prefilled for logits.
+        assert_eq!(b.cached_tokens, 8);
+        let suffix = &prompt[b.cached_tokens..];
+        let logits = lm.prefill_seq(suffix, &mut mgr, b.handle).unwrap();
+        let after = mgr.stats();
+        assert_eq!(after.prefix_hit_tokens - before.prefix_hit_tokens, 8);
+        assert_eq!(after.prefilled_tokens - before.prefilled_tokens, 2);
+
+        let mut kv = lm.new_kv_cache();
+        let expected = lm.prefill(&prompt, &mut kv).unwrap();
+        assert_eq!(logits.data, expected.data, "prefix-hit logits must be exact");
+        // The decode continuation over shared + private blocks stays exact.
+        let mut tok = argmax(logits.row(0));
+        let handles = [b.handle];
+        for _ in 0..4 {
+            let pos = kv.seq_len();
+            let l_ref = lm.decode_step(tok, pos, &mut kv);
+            let l_paged = lm.decode_step_batch(&[tok], &mut mgr, &handles);
+            assert_eq!(l_paged.data, l_ref.data);
+            tok = argmax(l_ref.row(0));
+        }
     }
 
     #[test]

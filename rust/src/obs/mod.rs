@@ -462,10 +462,7 @@ pub fn plan_profile(sig: PlanSig) -> &'static PlanProf {
 pub fn prof_sample_every() -> u64 {
     static EVERY: OnceLock<u64> = OnceLock::new();
     *EVERY.get_or_init(|| {
-        std::env::var("BLAST_PROF_SAMPLE")
-            .ok()
-            .and_then(|s| s.parse::<u64>().ok())
-            .unwrap_or(DEFAULT_PROF_SAMPLE)
+        crate::util::config::EngineConfig::global().prof_sample.unwrap_or(DEFAULT_PROF_SAMPLE)
     })
 }
 
@@ -604,12 +601,12 @@ impl MetricsSnapshot {
     /// Write the JSON snapshot to `BLAST_METRICS_OUT` when set. Returns
     /// the path written to (None when the variable is unset).
     pub fn write_env_out(&self) -> std::io::Result<Option<String>> {
-        match std::env::var("BLAST_METRICS_OUT") {
-            Ok(path) if !path.is_empty() => {
-                std::fs::write(&path, self.root.to_string_pretty())?;
-                Ok(Some(path))
+        match &crate::util::config::EngineConfig::global().metrics_out {
+            Some(path) => {
+                std::fs::write(path, self.root.to_string_pretty())?;
+                Ok(Some(path.clone()))
             }
-            _ => Ok(None),
+            None => Ok(None),
         }
     }
 }
@@ -623,7 +620,7 @@ impl MetricsSnapshot {
 /// one-time registry lookup, after which an update is one relaxed
 /// atomic op.
 pub mod well_known {
-    use super::{registry, Counter, Gauge};
+    use super::{registry, Counter, Gauge, GaugeF64};
     use std::sync::OnceLock;
 
     macro_rules! counter_fn {
@@ -642,6 +639,16 @@ pub mod well_known {
             pub fn $fn_name() -> &'static Gauge {
                 static H: OnceLock<&'static Gauge> = OnceLock::new();
                 H.get_or_init(|| registry().gauge($metric))
+            }
+        };
+    }
+
+    macro_rules! gauge_f64_fn {
+        ($(#[$doc:meta])* $fn_name:ident, $metric:expr) => {
+            $(#[$doc])*
+            pub fn $fn_name() -> &'static GaugeF64 {
+                static H: OnceLock<&'static GaugeF64> = OnceLock::new();
+                H.get_or_init(|| registry().gauge_f64($metric))
             }
         };
     }
@@ -667,14 +674,38 @@ pub mod well_known {
         "arena_allocated_bytes"
     );
     counter_fn!(
-        /// KV-pool slot admissions (`KvPool::alloc`).
+        /// Sequence admissions (`KvBlockManager::admit`).
         kv_admitted,
-        "kv_slots_admitted"
+        "kv_seqs_admitted"
     );
     counter_fn!(
-        /// KV-pool slot retirements (`KvPool::release`).
+        /// Sequence retirements (`KvBlockManager::free`).
         kv_retired,
-        "kv_slots_retired"
+        "kv_seqs_retired"
+    );
+    counter_fn!(
+        /// Prompt tokens satisfied from cached prefix blocks (the
+        /// prefill skipped over them).
+        kv_prefix_hit_tokens,
+        "kv_prefix_hit_tokens"
+    );
+    counter_fn!(
+        /// Prompt tokens actually prefilled (the hit-rate denominator
+        /// is hits + prefilled).
+        kv_prefilled_tokens,
+        "kv_prefilled_tokens"
+    );
+    counter_fn!(
+        /// Cached prefix blocks evicted (LRU, leaf-first) to satisfy
+        /// block allocation.
+        kv_blocks_evicted,
+        "kv_blocks_evicted"
+    );
+    counter_fn!(
+        /// Invalid `KvBlockManager::free` calls (double free, stale or
+        /// out-of-range handle). Debug builds also assert.
+        kv_bad_frees,
+        "kv_bad_frees"
     );
     gauge_fn!(
         /// Pooled bytes high-water across all scratch arenas.
@@ -682,14 +713,33 @@ pub mod well_known {
         "arena_pooled_bytes_high_water"
     );
     gauge_fn!(
-        /// KV slots currently holding live sequences (all pools).
-        kv_slots_active,
-        "kv_slots_active"
+        /// Sequences currently live in KV block managers.
+        kv_seqs_active,
+        "kv_seqs_active"
     );
     gauge_fn!(
-        /// Largest KV pool constructed (slot capacity).
-        kv_slots_total,
-        "kv_slots_total"
+        /// KV blocks referenced by live sequences (excludes the
+        /// unreferenced cached pool).
+        kv_blocks_active,
+        "kv_blocks_active"
+    );
+    gauge_fn!(
+        /// KV blocks registered in the radix prefix cache.
+        kv_blocks_cached,
+        "kv_blocks_cached"
+    );
+    gauge_fn!(
+        /// Largest KV block arena constructed (blocks).
+        kv_blocks_total,
+        "kv_blocks_total"
+    );
+    gauge_f64_fn!(
+        /// KV bytes held per live token, sampled at live-token
+        /// high-water (the slotted pool's equivalent was a constant
+        /// `slots × max_seq / live` — paging drives this toward the
+        /// per-token row footprint).
+        kv_bytes_per_live_token,
+        "kv_bytes_per_live_token"
     );
 }
 

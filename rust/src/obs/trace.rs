@@ -33,14 +33,16 @@ pub enum TraceMode {
     All = 2,
 }
 
-/// The process trace mode (`BLAST_TRACE=off|serve|all`, default off;
+/// The process trace mode (`BLAST_TRACE=off|serve|all` through
+/// [`EngineConfig`](crate::util::config::EngineConfig), default off;
 /// unknown values fall back to off).
 pub fn mode() -> TraceMode {
+    use crate::util::config::{EngineConfig, TracePref};
     static MODE: OnceLock<TraceMode> = OnceLock::new();
-    *MODE.get_or_init(|| match std::env::var("BLAST_TRACE").as_deref() {
-        Ok("serve") => TraceMode::Serve,
-        Ok("all") => TraceMode::All,
-        _ => TraceMode::Off,
+    *MODE.get_or_init(|| match EngineConfig::global().trace {
+        TracePref::Off => TraceMode::Off,
+        TracePref::Serve => TraceMode::Serve,
+        TracePref::All => TraceMode::All,
     })
 }
 

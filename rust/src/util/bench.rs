@@ -66,8 +66,8 @@ pub struct BenchConfig {
 
 impl Default for BenchConfig {
     fn default() -> Self {
-        // Honors BLAST_BENCH_FAST=1 for CI-speed runs.
-        let fast = std::env::var("BLAST_BENCH_FAST").is_ok_and(|v| v == "1");
+        // Honors BLAST_BENCH_FAST=1 (via EngineConfig) for CI-speed runs.
+        let fast = super::config::EngineConfig::global().bench_fast;
         if fast {
             BenchConfig {
                 warmup_iters: 1,

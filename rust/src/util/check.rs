@@ -51,10 +51,7 @@ impl PropGen {
 /// Captured state is wrapped in `AssertUnwindSafe`: a failing property
 /// aborts the test anyway, so observing torn captures is not a concern.
 pub fn property(cases: usize, f: impl Fn(&mut PropGen)) {
-    let base = std::env::var("BLAST_PROP_SEED")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(0xB1A57u64);
+    let base = super::config::EngineConfig::global().prop_seed.unwrap_or(0xB1A57u64);
     for case in 0..cases {
         let seed = base.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {

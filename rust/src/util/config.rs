@@ -1,0 +1,205 @@
+//! Typed engine configuration (`EngineConfig`).
+//!
+//! Every runtime knob the engine reads used to be an ad-hoc
+//! `std::env::var("BLAST_*")` parse scattered across the subsystems
+//! (threading in `util::par`, SIMD selection in `kernels::micro`, trace
+//! mode in `obs::trace`, ...). `EngineConfig` centralizes them: the
+//! struct's `Default` holds the code defaults, [`EngineConfig::from_env`]
+//! applies the `BLAST_*` environment overrides on top, and
+//! [`EngineConfig::global`] resolves that once per process and hands out
+//! a `'static` reference. The env variables still win — they are now an
+//! *override layer* over one typed struct rather than ten independent
+//! parsers — and the serving tier can carry an explicitly constructed
+//! `EngineConfig` through `CoordinatorConfig` (tests do this to pin KV
+//! block geometry without touching the process environment).
+//!
+//! `global()` is resolved lazily at first access, so tests that set env
+//! vars in `main`/ctor code before touching the engine keep working.
+//! The full knob table lives in the README ("Engine configuration").
+
+use std::sync::OnceLock;
+
+/// SIMD path preference (`BLAST_SIMD`). Mapped onto
+/// `kernels::micro::SimdMode` by the microkernel at startup.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdPref {
+    /// Use the widest path the CPU supports (default).
+    Auto,
+    /// Force the AVX2 path (panics at dispatch if unsupported).
+    Avx2,
+    /// Force the portable fixed-lane path.
+    Portable,
+}
+
+/// Request-trace mode (`BLAST_TRACE`). Mapped onto `obs::trace`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TracePref {
+    /// No tracing (default).
+    Off,
+    /// Trace serving requests (enqueue/admit/prefill/step/retire).
+    Serve,
+    /// Trace everything the subsystems emit.
+    All,
+}
+
+/// All engine knobs, resolved once. Fields use `Option` where `None`
+/// means "subsystem default" so a default-constructed config never has
+/// to know constants owned elsewhere (e.g. the pack-cache budget).
+#[derive(Clone, Debug, PartialEq)]
+pub struct EngineConfig {
+    /// Worker threads for data-parallel kernels; `0` = one per core
+    /// (`BLAST_NUM_THREADS`).
+    pub num_threads: usize,
+    /// SIMD path selection (`BLAST_SIMD`).
+    pub simd: SimdPref,
+    /// Force a specific matmul kernel by name, bypassing the autotuner
+    /// (`BLAST_KERNEL`).
+    pub kernel_force: Option<String>,
+    /// Pack-cache budget in MiB; `None` = built-in default
+    /// (`BLAST_PACK_CACHE_MB`).
+    pub pack_cache_mb: Option<usize>,
+    /// Autotune-table persistence path (`BLAST_AUTOTUNE_CACHE`).
+    pub autotune_cache: Option<String>,
+    /// Request tracing mode (`BLAST_TRACE`).
+    pub trace: TracePref,
+    /// Plan-profiler sampling period; `None` = built-in default
+    /// (`BLAST_PROF_SAMPLE`).
+    pub prof_sample: Option<u64>,
+    /// Metrics JSON snapshot path written on bench/CLI exit
+    /// (`BLAST_METRICS_OUT`).
+    pub metrics_out: Option<String>,
+    /// Shrink bench workloads to CI-smoke size (`BLAST_BENCH_FAST=1`).
+    pub bench_fast: bool,
+    /// Base seed for the property-test harness; `None` = built-in
+    /// default (`BLAST_PROP_SEED`).
+    pub prop_seed: Option<u64>,
+    /// Maximum concurrently active sequences per serving worker
+    /// (`BLAST_SLOTS`; the name survives from the slotted-pool era).
+    pub max_seqs: usize,
+    /// Admission burst width per scheduling step (`BLAST_MAX_BATCH`).
+    pub max_batch: usize,
+    /// Tokens per KV block in the paged block manager (`BLAST_KV_BLOCK`).
+    pub kv_block_size: usize,
+    /// Extra KV blocks kept beyond `max_seqs × ceil(max_seq/block)` as
+    /// prefix-cache headroom (`BLAST_KV_CACHE_BLOCKS`).
+    pub kv_cache_blocks: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            num_threads: 0,
+            simd: SimdPref::Auto,
+            kernel_force: None,
+            pack_cache_mb: None,
+            autotune_cache: None,
+            trace: TracePref::Off,
+            prof_sample: None,
+            metrics_out: None,
+            bench_fast: false,
+            prop_seed: None,
+            max_seqs: 8,
+            max_batch: 8,
+            kv_block_size: 16,
+            kv_cache_blocks: 32,
+        }
+    }
+}
+
+fn env_nonempty(name: &str) -> Option<String> {
+    std::env::var(name).ok().filter(|s| !s.is_empty())
+}
+
+fn env_parse<T: std::str::FromStr>(name: &str) -> Option<T> {
+    env_nonempty(name).and_then(|s| s.parse().ok())
+}
+
+impl EngineConfig {
+    /// Code defaults with `BLAST_*` environment overrides applied.
+    /// Unparseable values fall back to the default for that knob (the
+    /// same forgiving behaviour the old per-site parsers had).
+    pub fn from_env() -> Self {
+        let mut cfg = EngineConfig::default();
+        if let Some(n) = env_parse::<usize>("BLAST_NUM_THREADS") {
+            cfg.num_threads = n;
+        }
+        if let Some(s) = env_nonempty("BLAST_SIMD") {
+            cfg.simd = match s.as_str() {
+                "avx2" => SimdPref::Avx2,
+                "portable" | "scalar" => SimdPref::Portable,
+                _ => SimdPref::Auto,
+            };
+        }
+        cfg.kernel_force = env_nonempty("BLAST_KERNEL");
+        cfg.pack_cache_mb = env_parse::<usize>("BLAST_PACK_CACHE_MB");
+        cfg.autotune_cache = env_nonempty("BLAST_AUTOTUNE_CACHE");
+        if let Some(s) = env_nonempty("BLAST_TRACE") {
+            cfg.trace = match s.as_str() {
+                "serve" => TracePref::Serve,
+                "all" => TracePref::All,
+                _ => TracePref::Off,
+            };
+        }
+        cfg.prof_sample = env_parse::<u64>("BLAST_PROF_SAMPLE");
+        cfg.metrics_out = env_nonempty("BLAST_METRICS_OUT");
+        cfg.bench_fast = env_nonempty("BLAST_BENCH_FAST").as_deref() == Some("1");
+        cfg.prop_seed = env_parse::<u64>("BLAST_PROP_SEED");
+        if let Some(n) = env_parse::<usize>("BLAST_SLOTS") {
+            cfg.max_seqs = n.max(1);
+        }
+        if let Some(n) = env_parse::<usize>("BLAST_MAX_BATCH") {
+            cfg.max_batch = n.max(1);
+        }
+        if let Some(n) = env_parse::<usize>("BLAST_KV_BLOCK") {
+            cfg.kv_block_size = n.max(1);
+        }
+        if let Some(n) = env_parse::<usize>("BLAST_KV_CACHE_BLOCKS") {
+            cfg.kv_cache_blocks = n;
+        }
+        cfg
+    }
+
+    /// The process-wide config: resolved from the environment on first
+    /// access, then immutable. Subsystems that keep their own cached
+    /// copies (thread count, SIMD mode, trace mode) read through this,
+    /// so env vars must be set before the engine is first touched —
+    /// the same contract the old per-site `OnceLock`s enforced.
+    pub fn global() -> &'static EngineConfig {
+        static G: OnceLock<EngineConfig> = OnceLock::new();
+        G.get_or_init(EngineConfig::from_env)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane() {
+        let cfg = EngineConfig::default();
+        assert_eq!(cfg.num_threads, 0);
+        assert_eq!(cfg.simd, SimdPref::Auto);
+        assert_eq!(cfg.trace, TracePref::Off);
+        assert!(cfg.kernel_force.is_none());
+        assert!(cfg.pack_cache_mb.is_none());
+        assert!(cfg.max_seqs >= 1 && cfg.max_batch >= 1);
+        assert!(cfg.kv_block_size >= 1);
+    }
+
+    #[test]
+    fn explicit_override_is_plain_data() {
+        // Tests pin geometry by building the struct directly — no env.
+        let cfg = EngineConfig { kv_block_size: 4, max_seqs: 2, ..EngineConfig::default() };
+        assert_eq!(cfg.kv_block_size, 4);
+        assert_eq!(cfg.max_seqs, 2);
+        assert_eq!(cfg.kv_cache_blocks, EngineConfig::default().kv_cache_blocks);
+    }
+
+    #[test]
+    fn global_is_stable() {
+        let a = EngineConfig::global();
+        let b = EngineConfig::global();
+        assert!(std::ptr::eq(a, b));
+        assert_eq!(a, b);
+    }
+}

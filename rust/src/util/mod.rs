@@ -10,8 +10,11 @@
 //! * [`bench`] — measurement harness used by `cargo bench` targets
 //!   (criterion-lite: warmup, repeated timed runs, mean/p50/p95).
 //! * [`check`] — seeded random-input property testing (proptest-lite).
+//! * [`config`] — typed engine configuration (`EngineConfig`): one
+//!   struct holding every `BLAST_*` knob, resolved once at startup.
 
 pub mod arena;
+pub mod config;
 pub mod par;
 pub mod json;
 pub mod cli;

@@ -15,13 +15,12 @@ pub fn num_threads() -> usize {
     if v != 0 {
         return v;
     }
-    let n = std::env::var("BLAST_NUM_THREADS")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or_else(|| {
-            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-        })
-        .max(1);
+    let cfg = super::config::EngineConfig::global();
+    let n = match cfg.num_threads {
+        0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        n => n,
+    }
+    .max(1);
     CACHED.store(n, Ordering::Relaxed);
     n
 }

@@ -1,9 +1,10 @@
 //! Property-based tests on coordinator invariants: batching never
 //! exceeds limits, FIFO is preserved, request↔response pairing survives
-//! arbitrary interleavings, KV slots never leak across requests.
+//! arbitrary interleavings, KV blocks never leak across requests.
 
 use blast_repro::coordinator::{
-    BatcherConfig, Coordinator, CoordinatorConfig, DynamicBatcher, GenerateRequest,
+    BatcherConfig, Coordinator, CoordinatorConfig, DynamicBatcher, EngineConfig,
+    GenerateRequest, WorkItem,
 };
 use blast_repro::nn::attention::StructureKind;
 use blast_repro::nn::gpt::{LmConfig, TinyLM};
@@ -15,12 +16,10 @@ use std::time::Duration;
 fn mk_req(
     id: u64,
     rtx: &std::sync::mpsc::Sender<blast_repro::coordinator::ResponseEvent>,
-) -> GenerateRequest {
-    GenerateRequest {
+) -> WorkItem {
+    WorkItem {
         id,
-        variant: "m".into(),
-        prompt: vec![1],
-        max_new_tokens: 1,
+        req: GenerateRequest::new(vec![1], 1),
         respond_to: rtx.clone(),
         enqueued_at: std::time::Instant::now(),
     }
@@ -62,7 +61,7 @@ fn prop_request_response_pairing() {
         vec![("m".into(), model)],
         CoordinatorConfig {
             batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_micros(500) },
-            slots: 4,
+            engine: EngineConfig { max_seqs: 4, ..EngineConfig::default() },
         },
     ));
     property(6, |g: &mut PropGen| {

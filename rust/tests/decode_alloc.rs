@@ -65,10 +65,21 @@ fn run_steady_state(structure: StructureKind, quant: QuantMode, seed: u64) {
             blk.fc2.set_quant(QuantMode::I8);
         }
     }
-    let mut pool = lm.new_kv_pool(3);
-    let slots: Vec<usize> = (0..3).map(|_| pool.alloc().unwrap()).collect();
-    for (i, &s) in slots.iter().enumerate() {
-        let _ = lm.prefill_slot(&[1 + i, 2, 3], &mut pool, s).unwrap();
+    // Paged KV: 16-position blocks, sequences admitted with a budget
+    // covering the whole run (prompt + warmup + counted steps), so
+    // `prepare_append` only ever pops pre-reserved blocks — the decode
+    // path never touches the heap for KV growth, and the attention
+    // score scratch stays in one arena class for the sequence lifetime.
+    let mut mgr = lm.new_kv_manager_with(3, 16, 8);
+    let handles: Vec<_> = (0..3usize)
+        .map(|i| {
+            let adm = mgr.admit(&[1 + i, 2, 3], lm.cfg.max_seq).unwrap();
+            assert_eq!(adm.cached_tokens, 0, "fresh manager: no prefix hits");
+            adm.handle
+        })
+        .collect();
+    for (i, &h) in handles.iter().enumerate() {
+        let _ = lm.prefill_seq(&[1 + i, 2, 3], &mut mgr, h).unwrap();
     }
     let mut arena = ScratchArena::new();
     let mut logits = Matrix::zeros(0, lm.cfg.vocab);
@@ -77,22 +88,24 @@ fn run_steady_state(structure: StructureKind, quant: QuantMode, seed: u64) {
     // Warm everything: plan table (tuning probes), pack cache, arena
     // classes, kernel thread-locals, the logits buffer.
     for _ in 0..5 {
-        lm.decode_step_batch_into(&toks, &mut pool, &slots, &mut arena, &mut logits);
+        lm.decode_step_batch_into(&toks, &mut mgr, &handles, &mut arena, &mut logits);
     }
     assert_eq!(arena.outstanding(), 0, "arena leak during warmup");
 
-    // Correctness guard: after the same five steps on a twin pool, the
-    // allocating reference path must produce bit-identical logits to
-    // the no-alloc path's current state. (Runs before the counting
+    // Correctness guard: after the same five steps on a twin manager,
+    // the allocating reference path must produce bit-identical logits
+    // to the no-alloc path's current state. (Runs before the counting
     // window; it allocates.)
-    let mut ref_pool = lm.new_kv_pool(3);
-    let ref_slots: Vec<usize> = (0..3).map(|_| ref_pool.alloc().unwrap()).collect();
-    for (i, &s) in ref_slots.iter().enumerate() {
-        let _ = lm.prefill_slot(&[1 + i, 2, 3], &mut ref_pool, s).unwrap();
+    let mut ref_mgr = lm.new_kv_manager_with(3, 16, 8);
+    let ref_handles: Vec<_> = (0..3usize)
+        .map(|i| ref_mgr.admit(&[1 + i, 2, 3], lm.cfg.max_seq).unwrap().handle)
+        .collect();
+    for (i, &h) in ref_handles.iter().enumerate() {
+        let _ = lm.prefill_seq(&[1 + i, 2, 3], &mut ref_mgr, h).unwrap();
     }
     let mut ref_logits = Matrix::zeros(0, 0);
     for _ in 0..5 {
-        ref_logits = lm.decode_step_batch(&toks, &mut ref_pool, &ref_slots);
+        ref_logits = lm.decode_step_batch(&toks, &mut ref_mgr, &ref_handles);
     }
     assert_eq!(
         ref_logits.data, logits.data,
@@ -101,7 +114,7 @@ fn run_steady_state(structure: StructureKind, quant: QuantMode, seed: u64) {
 
     let before = alloc_events();
     for _ in 0..10 {
-        lm.decode_step_batch_into(&toks, &mut pool, &slots, &mut arena, &mut logits);
+        lm.decode_step_batch_into(&toks, &mut mgr, &handles, &mut arena, &mut logits);
     }
     let after = alloc_events();
     assert_eq!(

@@ -290,7 +290,13 @@ fn compressed_checkpoint_serves_through_coordinator() {
     // same greedy decode.
     let coord = Coordinator::new(
         vec![("blast".to_string(), loaded)],
-        CoordinatorConfig { batcher: BatcherConfig::default(), slots: 2 },
+        CoordinatorConfig {
+            batcher: BatcherConfig::default(),
+            engine: blast_repro::coordinator::EngineConfig {
+                max_seqs: 2,
+                ..Default::default()
+            },
+        },
     );
     let resp = coord.generate("blast", prompt.clone(), 6).unwrap();
     assert_eq!(resp.tokens, reference);

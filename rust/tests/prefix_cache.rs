@@ -1,0 +1,98 @@
+//! Prefix-cache acceptance test (ISSUE PR 8): a second request sharing
+//! an N-token prefix with an earlier one performs **zero prefill work
+//! over the shared span**, asserted via the engine-wide observability
+//! counters (`kv_prefix_hit_tokens` / `kv_prefilled_tokens`), while its
+//! generated tokens stay bit-identical to direct generation.
+//!
+//! This file is its own integration-test binary on purpose: the obs
+//! registry is process-global, so counter deltas are only meaningful
+//! when no other test's serving traffic is interleaved.
+
+use blast_repro::coordinator::{
+    BatcherConfig, Coordinator, CoordinatorConfig, EngineConfig,
+};
+use blast_repro::nn::attention::StructureKind;
+use blast_repro::nn::gpt::{LmConfig, TinyLM};
+use blast_repro::obs::well_known as wk;
+use blast_repro::tensor::Rng;
+
+#[test]
+fn shared_prefix_skips_prefill_and_stays_bit_identical() {
+    let mut rng = Rng::new(8800);
+    let model = TinyLM::new(LmConfig::tiny(StructureKind::Blast { b: 2, r: 4 }), &mut rng);
+    let reference = model.clone();
+    // 4-position KV blocks: a 14-token prompt spans 3 full blocks (12
+    // tokens) + 2 in a partial block, so the cacheable span is 12.
+    let coord = Coordinator::new(
+        vec![("m".into(), model)],
+        CoordinatorConfig {
+            batcher: BatcherConfig::default(),
+            engine: EngineConfig {
+                max_seqs: 2,
+                kv_block_size: 4,
+                kv_cache_blocks: 16,
+                ..EngineConfig::default()
+            },
+        },
+    );
+    let prompt: Vec<usize> = (0..14).map(|i| (i * 5 + 7) % 64).collect();
+    let direct = reference.generate(&prompt, 6);
+
+    // Request A: cold — the whole 14-token prompt is prefilled.
+    let hits0 = wk::kv_prefix_hit_tokens().get();
+    let prefilled0 = wk::kv_prefilled_tokens().get();
+    let resp_a = coord.generate("m", prompt.clone(), 6).unwrap();
+    assert_eq!(resp_a.tokens, direct, "request A must match direct generation");
+    assert_eq!(
+        wk::kv_prefix_hit_tokens().get() - hits0,
+        0,
+        "nothing cached yet: A cannot hit"
+    );
+    assert_eq!(
+        wk::kv_prefilled_tokens().get() - prefilled0,
+        14,
+        "A prefills its whole prompt"
+    );
+
+    // Request B: same prompt, submitted after A's Done (A has retired
+    // and left its prompt's full blocks in the prefix cache). The
+    // shared 12-token span is served from cached K/V rows — ZERO
+    // prefill over it; only the 2-token partial-block tail is
+    // prefilled (a hit never covers the whole prompt: the last
+    // position is always computed fresh for next-token logits).
+    let hits1 = wk::kv_prefix_hit_tokens().get();
+    let prefilled1 = wk::kv_prefilled_tokens().get();
+    let resp_b = coord.generate("m", prompt.clone(), 6).unwrap();
+    assert_eq!(
+        resp_b.tokens, direct,
+        "prefix-cache hit must not change a single token"
+    );
+    assert_eq!(
+        wk::kv_prefix_hit_tokens().get() - hits1,
+        12,
+        "B's shared span (3 full blocks) comes from the cache"
+    );
+    assert_eq!(
+        wk::kv_prefilled_tokens().get() - prefilled1,
+        2,
+        "B prefills only the uncovered tail"
+    );
+
+    // A third request extending the shared prefix with a different
+    // tail also hits, and diverges from `direct` only after the span
+    // it shares.
+    let mut longer = prompt.clone();
+    longer.extend([9usize, 3]);
+    let direct_longer = reference.generate(&longer, 4);
+    let hits2 = wk::kv_prefix_hit_tokens().get();
+    let resp_c = coord.generate("m", longer.clone(), 4).unwrap();
+    assert_eq!(resp_c.tokens, direct_longer);
+    assert!(
+        wk::kv_prefix_hit_tokens().get() - hits2 >= 12,
+        "C shares at least A/B's cached span"
+    );
+
+    assert_eq!(wk::kv_bad_frees().get(), 0, "no double/invalid frees");
+    assert_eq!(wk::kv_seqs_active().get(), 0, "all sequences retired");
+    coord.shutdown();
+}

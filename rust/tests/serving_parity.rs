@@ -1,18 +1,20 @@
 //! Serving parity: the continuous-batching worker must produce tokens
 //! **bit-identical** to direct `TinyLM::generate` for every request
 //! with a nonempty prompt — under mixed prompt lengths, staggered
-//! arrivals, and slot churn (admit/retire mid-flight with fewer slots
-//! than requests). This is the acceptance property of the
-//! iteration-level scheduler: batching is a throughput optimization,
-//! never a numerics change. (Deliberate boundary exceptions, covered
-//! by `coordinator::server`'s unit tests and the last test here:
+//! arrivals, sequence churn (admit/retire mid-flight with less KV
+//! capacity than requests), and prefix-cache hits (requests sharing a
+//! long system prompt reuse cached K/V blocks). This is the acceptance
+//! property of the iteration-level scheduler: batching, paging, and
+//! prefix caching are throughput optimizations, never a numerics
+//! change. (Deliberate boundary exceptions, covered by
+//! `coordinator::server`'s unit tests and the last test here:
 //! empty prompts generate zero tokens instead of reproducing
 //! `generate`'s sampling from a zeroed logits row, and prompts longer
 //! than the context window or containing out-of-vocab tokens are
 //! rejected at submit.)
 
 use blast_repro::coordinator::{
-    BatcherConfig, Coordinator, CoordinatorConfig, ResponseEvent,
+    BatcherConfig, Coordinator, CoordinatorConfig, EngineConfig, ResponseEvent,
 };
 use blast_repro::nn::attention::StructureKind;
 use blast_repro::nn::gpt::{LmConfig, TinyLM};
@@ -21,12 +23,14 @@ use blast_repro::util::check::{property, PropGen};
 use std::sync::Arc;
 use std::time::Duration;
 
-fn coord_with(model: TinyLM, slots: usize, max_batch: usize) -> Coordinator {
+fn coord_with(model: TinyLM, max_seqs: usize, max_batch: usize) -> Coordinator {
     Coordinator::new(
         vec![("m".into(), model)],
         CoordinatorConfig {
             batcher: BatcherConfig { max_batch, max_wait: Duration::from_micros(200) },
-            slots,
+            // EngineConfig::default() (not global()) keeps the test
+            // geometry fixed regardless of BLAST_* env in CI.
+            engine: EngineConfig { max_seqs, ..EngineConfig::default() },
         },
     )
 }
@@ -37,7 +41,7 @@ fn prop_continuous_batching_bit_identical_to_direct_generate() {
     for structure in [StructureKind::Dense, StructureKind::Blast { b: 2, r: 4 }] {
         let model = TinyLM::new(LmConfig::tiny(structure), &mut rng);
         let reference = model.clone();
-        // 2 slots vs up to 10 requests forces slot churn mid-flight.
+        // 2 sequences vs up to 10 requests forces churn mid-flight.
         let coord = Arc::new(coord_with(model, 2, 2));
         property(6, |g: &mut PropGen| {
             let k = g.usize_in(2, 10);
@@ -69,8 +73,36 @@ fn prop_continuous_batching_bit_identical_to_direct_generate() {
 }
 
 #[test]
+fn shared_system_prompt_served_bit_identically_via_prefix_cache() {
+    // The prefix-cache acceptance property: many requests sharing one
+    // long system prompt (plus distinct user tails) are served with
+    // cached K/V blocks for the shared span — and every token out is
+    // still bit-identical to direct generation. Sequential submission
+    // guarantees the first request has retired (and published its
+    // prefix blocks) before the next one admits.
+    let mut rng = Rng::new(4500);
+    for structure in [StructureKind::Dense, StructureKind::Blast { b: 2, r: 4 }] {
+        let model = TinyLM::new(LmConfig::tiny(structure), &mut rng);
+        let reference = model.clone();
+        let coord = coord_with(model, 2, 2);
+        let system: Vec<usize> = (0..40).map(|i| (i * 11 + 3) % 64).collect();
+        for tail in 0..6usize {
+            let mut prompt = system.clone();
+            prompt.extend([(tail * 13 + 1) % 64, (tail * 7 + 2) % 64]);
+            let resp = coord.generate("m", prompt.clone(), 6).unwrap();
+            assert_eq!(
+                resp.tokens,
+                reference.generate(&prompt, 6),
+                "{structure:?} tail {tail}"
+            );
+        }
+        coord.shutdown();
+    }
+}
+
+#[test]
 fn parity_under_concurrent_submission_and_churn() {
-    // Threaded clients with jittered start times against a 3-slot pool:
+    // Threaded clients with jittered start times against 3 sequences:
     // arbitrary interleavings of admission and retirement must leave
     // every response bit-identical to the reference.
     let mut rng = Rng::new(4200);

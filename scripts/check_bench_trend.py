@@ -18,6 +18,9 @@ import sys
 # (file, path-into-json, human label) — higher is better for all of them.
 METRICS = [
     ("BENCH_serving.json", ("continuous", "tokens_per_sec"), "serving tokens/sec"),
+    # Shared-system-prompt scenario through the paged KV block manager:
+    # throughput with the radix prefix cache absorbing the shared span.
+    ("BENCH_serving.json", ("prefix", "tokens_per_sec"), "prefix-cache serving tokens/sec"),
     ("BENCH_factorize.json", ("precgd", "iters_per_sec"), "factorize PrecGD iters/sec"),
     ("BENCH_kernels.json", ("dense", "autotuned_gflops"), "dense GEMM GFLOP/s"),
     # Per-structure plan-path throughput (the structure-plan execution
@@ -49,6 +52,10 @@ BYTES_GROWTH_THRESHOLD = 0.10
 OBS_RATIOS = [
     ("BENCH_kernels.json", ("obs", "pack_cache", "hit_rate"), "kernels pack-cache hit rate"),
     ("BENCH_serving.json", ("obs", "pack_cache", "hit_rate"), "serving pack-cache hit rate"),
+    # Fraction of prompt tokens served from cached KV blocks in the
+    # shared-prefix scenario. A drop means requests are re-prefilling
+    # spans the radix cache should absorb (eviction or keying bug).
+    ("BENCH_serving.json", ("prefix", "hit_rate"), "serving prefix-cache hit rate"),
 ]
 OBS_DROP_THRESHOLD = 0.10
 
