@@ -30,7 +30,8 @@ fn main() {
             },
             engine: EngineConfig { max_seqs: 8, ..EngineConfig::default() },
         },
-    );
+    )
+    .unwrap();
     suite.bench_throughput("coordinator generate L=16", l as f64, "tok", || {
         std::hint::black_box(coord.generate("m", vec![1, 2, 3], l).unwrap());
     });

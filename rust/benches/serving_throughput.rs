@@ -1,9 +1,11 @@
 //! Bench: serving throughput — request-granularity sequential decode
 //! (the pre-continuous-batching worker) vs iteration-level continuous
 //! batching, under a Poisson-ish arrival process with mixed prompt and
-//! output lengths. Reports tokens/sec and TTFT for both paths and
-//! writes the machine-readable `BENCH_serving.json` so later PRs can
-//! track the trajectory.
+//! output lengths, plus a prefix-cache scenario and an overload
+//! scenario (burst past the pending bound into an undersized KV arena:
+//! shed rate, preemptions, survivor TTFT). Reports tokens/sec and TTFT
+//! and writes the machine-readable `BENCH_serving.json` so later PRs
+//! can track the trajectory.
 //!
 //! Acceptance gate: continuous batching must reach ≥ 1.5× the
 //! sequential tokens/sec at concurrency ≥ 4 on the tiny serving model.
@@ -104,7 +106,7 @@ fn run_continuous(
     workload: &[Arrival],
     max_seqs: usize,
 ) -> (f64, Vec<Duration>, usize, Json) {
-    let coord = Coordinator::new(vec![("m".into(), model)], coord_config(max_seqs));
+    let coord = Coordinator::new(vec![("m".into(), model)], coord_config(max_seqs)).unwrap();
     // Warm the worker (pretune runs on its thread) before the clock.
     let _ = coord.generate("m", vec![1, 2, 3], 4).unwrap();
     let t0 = Instant::now();
@@ -148,7 +150,7 @@ fn run_prefix(
 ) -> (f64, f64, u64, f64) {
     use blast_repro::obs::well_known as wk;
     let vocab = model.cfg.vocab;
-    let coord = Coordinator::new(vec![("m".into(), model)], coord_config(4));
+    let coord = Coordinator::new(vec![("m".into(), model)], coord_config(4)).unwrap();
     // Warm the worker (pretune runs on its thread) before the clock.
     let _ = coord.generate("m", vec![1, 2, 3], 4).unwrap();
     let system: Vec<usize> = (0..system_len).map(|i| (i * 11 + 3) % vocab).collect();
@@ -175,6 +177,78 @@ fn run_prefix(
     let bytes_per_tok = wk::kv_bytes_per_live_token().get();
     coord.shutdown();
     (tps, hit_rate, hits, bytes_per_tok)
+}
+
+/// Overload/robustness scenario: a no-gap burst far beyond the pending
+/// bound into a deliberately undersized KV arena with preemption
+/// enabled. This measures the fault-tolerance tier rather than raw
+/// throughput: how much load was shed at admission, how often KV
+/// pressure preempted an active sequence, and the TTFT of the requests
+/// that survived. Every handle must terminate with `Done` or a typed
+/// error — a hang here is the class of bug `tests/chaos.rs` guards.
+fn run_overload(model: TinyLM, n: usize, new_tokens: usize) -> Json {
+    use blast_repro::coordinator::ServeError;
+    let max_pending = 8usize;
+    let vocab = model.cfg.vocab;
+    let mut engine = EngineConfig { max_seqs: 4, ..EngineConfig::global().clone() };
+    engine.kv_block_size = 4;
+    // ~2 worst-case sequences' worth of blocks (budget ≤ 8 for the
+    // prompts below): admission starves while 4 slots are configured,
+    // so the preemption path actually runs.
+    engine.kv_total_blocks = Some(20);
+    engine.max_pending = max_pending;
+    engine.preempt_after = 2;
+    let coord = Coordinator::new(
+        vec![("m".into(), model)],
+        CoordinatorConfig { batcher: BatcherConfig::default(), engine },
+    )
+    .unwrap();
+    // Warm the worker (pretune runs on its thread) before the clock.
+    let _ = coord.generate("m", vec![1, 2, 3], 4).unwrap();
+    let t0 = Instant::now();
+    let mut handles = Vec::with_capacity(n);
+    for i in 0..n {
+        let prompt: Vec<usize> =
+            (0..(2 + i % 7)).map(|k| (i * 5 + k * 3 + 1) % vocab).collect();
+        handles.push(coord.submit("m", prompt, new_tokens).unwrap().1);
+    }
+    let mut served = 0usize;
+    let mut shed = 0usize;
+    let mut ttfts = Vec::new();
+    for h in handles {
+        match h.recv() {
+            Ok(resp) => {
+                served += 1;
+                if let Some(t) = resp.ttft {
+                    ttfts.push(t);
+                }
+            }
+            Err(ServeError::Overloaded { .. }) => shed += 1,
+            Err(e) => panic!("unexpected serve error under overload: {e}"),
+        }
+    }
+    let elapsed = t0.elapsed();
+    let snap = coord.metrics.snapshot();
+    coord.shutdown();
+    let (ttft_mean, ttft_p95) = latency_stats_ms(&ttfts);
+    let shed_rate = shed as f64 / n as f64;
+    println!(
+        "overload   : {served}/{n} served, {shed} shed ({:.1}%), {} preemptions, \
+         survivor ttft mean {ttft_mean:.2}ms p95 {ttft_p95:.2}ms in {:.1}ms",
+        shed_rate * 100.0,
+        snap.preempted,
+        elapsed.as_secs_f64() * 1e3
+    );
+    obj(vec![
+        ("n_requests", Json::from(n)),
+        ("max_pending", Json::from(max_pending)),
+        ("requests_served", Json::from(served)),
+        ("requests_shed", Json::from(shed)),
+        ("shed_rate", Json::from(shed_rate)),
+        ("preemptions", Json::from(snap.preempted as usize)),
+        ("ttft_ms_mean_survivors", Json::from(ttft_mean)),
+        ("ttft_ms_p95_survivors", Json::from(ttft_p95)),
+    ])
 }
 
 /// (mean ms, p95 ms) of a latency sample set.
@@ -263,6 +337,14 @@ fn main() {
         px_hit_rate * 100.0
     );
 
+    // Overload scenario: burst far beyond pending + KV capacity.
+    let ov_requests = if fast { 32 } else { 64 };
+    let mut rng_o = Rng::new(4244);
+    let mut cfg_o = LmConfig::tiny(StructureKind::Blast { b: 4, r: 8 });
+    cfg_o.max_seq = 96;
+    let model_o = TinyLM::new(cfg_o, &mut rng_o);
+    let overload = run_overload(model_o, ov_requests, new_tokens / 2);
+
     let out_path = std::env::var("BLAST_SERVING_BENCH_OUT")
         .unwrap_or_else(|_| concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serving.json").into());
     let root = obj(vec![
@@ -290,6 +372,7 @@ fn main() {
                 ("kv_bytes_per_live_token", Json::from(px_bytes_per_tok)),
             ]),
         ),
+        ("overload", overload),
         ("speedup", Json::from(speedup)),
         (
             "gate",

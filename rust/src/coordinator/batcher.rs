@@ -104,6 +104,7 @@ mod tests {
             req: super::super::request::GenerateRequest::new(vec![1], 1),
             respond_to: tx.clone(),
             enqueued_at: Instant::now(),
+            resume: None,
         }
     }
 

@@ -30,6 +30,10 @@ use std::time::Duration;
 pub struct Metrics {
     requests: Counter,
     cancelled: Counter,
+    shed: Counter,
+    expired: Counter,
+    poisoned: Counter,
+    preempted: Counter,
     tokens_generated: Counter,
     batches: Counter,
     batch_size_sum: Counter,
@@ -54,6 +58,24 @@ pub struct MetricsInner {
     /// token was actually delivered, so a mid-stream cancel keeps its
     /// TTFT.
     pub cancelled: u64,
+    /// Requests rejected without serving: pending queue at its bound
+    /// (`Overloaded`) or a KV budget exceeding the whole arena
+    /// (`TooLarge`). Not counted in `requests` and excluded from every
+    /// latency histogram.
+    pub shed: u64,
+    /// Requests terminated by a deadline/queue-timeout expiry (queued
+    /// or mid-decode). Not counted in `requests`, excluded from the
+    /// latency histograms.
+    pub expired: u64,
+    /// Requests quarantined after a worker panic touched them (blocks
+    /// freed, `ServeError::Poisoned` delivered). Not counted in
+    /// `requests`.
+    pub poisoned: u64,
+    /// KV-pressure preemptions (sequence evicted mid-decode and
+    /// re-enqueued for recompute-resume). A per-event counter, not a
+    /// request outcome: a preempted request that later finishes still
+    /// lands in `requests`.
+    pub preempted: u64,
     pub tokens_generated: u64,
     /// Decode iterations of the continuous-batching step loop.
     pub batches: u64,
@@ -97,6 +119,46 @@ impl Metrics {
         self.queue_latency.record(queue);
     }
 
+    /// A queued request was shed (`Overloaded` at the pending bound, or
+    /// `TooLarge` for the arena): it leaves the queue without serving.
+    pub fn record_shed(&self) {
+        self.shed.inc();
+        self.queue_depth.sub(1);
+    }
+
+    /// A *queued* request's deadline/queue-timeout expired: it leaves
+    /// the queue without serving.
+    pub fn record_expired_queued(&self) {
+        self.expired.inc();
+        self.queue_depth.sub(1);
+    }
+
+    /// An *active* request's deadline expired mid-decode (it already
+    /// left the queue at admission — no gauge movement).
+    pub fn record_expired_active(&self) {
+        self.expired.inc();
+    }
+
+    /// An active request was quarantined after a worker panic.
+    pub fn record_poisoned(&self) {
+        self.poisoned.inc();
+    }
+
+    /// An active sequence was preempted for KV pressure and re-entered
+    /// the pending queue (so the depth gauge goes back up by one).
+    pub fn record_preempted(&self) {
+        self.preempted.inc();
+        self.queue_depth.add(1);
+        self.queue_depth_peak.set_max(self.queue_depth.get());
+    }
+
+    /// A preempted sequence was re-admitted. Gauge-only: its queue wait
+    /// was already recorded at first admission, and a second histogram
+    /// sample would double-count the request.
+    pub fn record_readmitted(&self) {
+        self.queue_depth.sub(1);
+    }
+
     /// One decode iteration advanced `batch_size` sequences.
     pub fn record_batch(&self, batch_size: usize) {
         self.batches.inc();
@@ -137,6 +199,10 @@ impl Metrics {
         MetricsInner {
             requests: self.requests.get(),
             cancelled: self.cancelled.get(),
+            shed: self.shed.get(),
+            expired: self.expired.get(),
+            poisoned: self.poisoned.get(),
+            preempted: self.preempted.get(),
             tokens_generated: self.tokens_generated.get(),
             batches: self.batches.get(),
             batch_size_sum: self.batch_size_sum.get(),
@@ -161,6 +227,10 @@ impl Metrics {
         obj(vec![
             ("requests", Json::from(m.requests as usize)),
             ("cancelled", Json::from(m.cancelled as usize)),
+            ("shed", Json::from(m.shed as usize)),
+            ("expired", Json::from(m.expired as usize)),
+            ("poisoned", Json::from(m.poisoned as usize)),
+            ("preempted", Json::from(m.preempted as usize)),
             ("tokens_generated", Json::from(m.tokens_generated as usize)),
             ("steps", Json::from(m.batches as usize)),
             ("mean_step_width", Json::from(mean_batch)),
@@ -185,7 +255,8 @@ impl Metrics {
         let (t50, t95, t99) = m.ttft.percentiles();
         let (p50, p95, p99) = m.tpot.percentiles();
         format!(
-            "requests={} (cancelled {}) tokens={} steps={} mean_step_width={:.2} \
+            "requests={} (cancelled {}) shed={} expired={} poisoned={} preempted={} \
+             tokens={} steps={} mean_step_width={:.2} \
              queue_depth={} (peak {}) \
              queue(p50={q50:?} p95={q95:?} p99={q99:?}) \
              e2e(p50={e50:?} p95={e95:?} p99={e99:?} max={:?}) \
@@ -193,6 +264,10 @@ impl Metrics {
              tpot(p50={p50:?} p95={p95:?} p99={p99:?})",
             m.requests,
             m.cancelled,
+            m.shed,
+            m.expired,
+            m.poisoned,
+            m.preempted,
             m.tokens_generated,
             m.batches,
             mean_batch,
@@ -253,6 +328,49 @@ mod tests {
         assert_eq!(s.tokens_generated, 7);
         assert_eq!(s.e2e_latency.count(), 1, "cancelled excluded from e2e");
         assert!(m.report().contains("cancelled 1"));
+    }
+
+    #[test]
+    fn every_queue_exit_path_balances_the_depth_gauge() {
+        let m = Metrics::new();
+        // Five enqueues leave by five different paths; the gauge must
+        // return to zero (the chaos suite's leak invariant).
+        for _ in 0..5 {
+            m.record_enqueued();
+        }
+        m.record_admitted(Duration::from_micros(10)); // served
+        m.record_shed(); // overloaded
+        m.record_expired_queued(); // deadline in queue
+        m.record_enqueue_aborted(); // worker gone at submit
+        m.record_admitted(Duration::from_micros(10)); // will be preempted
+        assert_eq!(m.snapshot().queue_depth, 0);
+        // Preemption re-enters the queue; re-admission drains it again
+        // without a second queue-latency sample.
+        m.record_preempted();
+        assert_eq!(m.snapshot().queue_depth, 1);
+        m.record_readmitted();
+        let s = m.snapshot();
+        assert_eq!(s.queue_depth, 0);
+        assert_eq!(s.queue_latency.count(), 2, "readmission adds no histogram sample");
+        assert_eq!((s.shed, s.expired, s.preempted), (1, 1, 1));
+    }
+
+    #[test]
+    fn failure_outcomes_stay_out_of_request_counters() {
+        let m = Metrics::new();
+        m.record_poisoned();
+        m.record_expired_active();
+        m.record_shed();
+        let s = m.snapshot();
+        assert_eq!(s.requests, 0, "failed requests are not 'served'");
+        assert_eq!((s.poisoned, s.expired, s.shed), (1, 1, 1));
+        assert_eq!(s.e2e_latency.count(), 0);
+        let j = m.snapshot_json();
+        assert_eq!(j.get("poisoned").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("expired").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("shed").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("preempted").unwrap().as_usize(), Some(0));
+        assert!(m.report().contains("poisoned=1"));
     }
 
     #[test]

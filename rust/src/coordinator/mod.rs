@@ -35,6 +35,14 @@
 //! and measures the Table-4 runtime story end to end — batched decode
 //! is what lets BLAST's Algorithm-1 products amortize across concurrent
 //! users.
+//!
+//! Failure semantics (see [`server`] module docs for the full story):
+//! every submitted request terminates with `Done` or a typed
+//! [`ResponseEvent::Error`] carrying a [`ServeError`] — the pending
+//! queue is bounded with load shedding, deadlines are enforced in the
+//! queue and between decode steps, panics in model code poison only the
+//! offending sequence, and KV pressure preempts the youngest active
+//! sequence for a bit-identical recompute-resume.
 
 pub mod request;
 pub mod batcher;
@@ -45,7 +53,7 @@ pub use batcher::{BatcherConfig, DynamicBatcher};
 pub use metrics::{Histogram, Metrics};
 pub use request::{
     GenerateRequest, GenerateRequestBuilder, GenerateResponse, RequestId, ResponseEvent,
-    ResponseHandle, SamplingParams, WorkItem,
+    ResponseHandle, ResumeState, SamplingParams, ServeError, WorkItem,
 };
 pub use server::{Coordinator, CoordinatorConfig};
 

@@ -13,12 +13,77 @@
 //! a final [`ResponseEvent::Done`] summary. [`ResponseHandle`] wraps the
 //! event channel; its [`recv`](ResponseHandle::recv) drains to the
 //! summary, so blocking callers keep the pre-streaming call shape.
+//!
+//! **Every stream terminates.** A request that cannot complete ends
+//! with [`ResponseEvent::Error`] carrying a [`ServeError`] (shed,
+//! expired, poisoned by a panic, ...), and a worker dying outright
+//! closes the channel, which [`recv`](ResponseHandle::recv) maps to
+//! [`ServeError::WorkerGone`] — `recv` can never block forever on a
+//! request the engine has abandoned.
 
-use std::sync::mpsc::{Receiver, RecvError, Sender};
-use std::time::Duration;
+use std::sync::mpsc::{Receiver, RecvError, RecvTimeoutError, Sender};
+use std::time::{Duration, Instant};
 
 /// Monotonically increasing request identifier.
 pub type RequestId = u64;
+
+/// Why a request terminated without a completed generation. Carried by
+/// [`ResponseEvent::Error`]; also what [`ResponseHandle::recv`] returns
+/// when the worker vanished without sending a terminal event.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// A panic inside this request's model work (prefill or its slice
+    /// of a decode step) was caught; the sequence was quarantined and
+    /// its blocks freed. Carries the panic message.
+    Poisoned(String),
+    /// The request was shed at admission: the pending queue was at its
+    /// `max_pending` bound.
+    Overloaded {
+        /// The bound that was hit.
+        limit: usize,
+    },
+    /// `SamplingParams::queue_timeout` elapsed before first admission.
+    QueueTimeout,
+    /// `SamplingParams::deadline` elapsed (queued or mid-decode).
+    DeadlineExceeded,
+    /// The request can never fit: its KV budget exceeds the whole
+    /// block arena.
+    TooLarge {
+        /// Blocks the request would need reserved.
+        budget_blocks: usize,
+        /// Blocks the arena has in total.
+        arena_blocks: usize,
+    },
+    /// The worker's event channel disconnected with no terminal event.
+    WorkerGone,
+    /// Client-side receive deadline elapsed
+    /// ([`ResponseHandle::recv_deadline`]); the request may still be
+    /// running.
+    RecvTimeout,
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Poisoned(msg) => {
+                write!(f, "request poisoned by a worker panic: {msg}")
+            }
+            ServeError::Overloaded { limit } => {
+                write!(f, "shed at admission: pending queue at its bound ({limit})")
+            }
+            ServeError::QueueTimeout => write!(f, "queue timeout elapsed before admission"),
+            ServeError::DeadlineExceeded => write!(f, "request deadline exceeded"),
+            ServeError::TooLarge { budget_blocks, arena_blocks } => write!(
+                f,
+                "request KV budget ({budget_blocks} blocks) exceeds the arena ({arena_blocks})"
+            ),
+            ServeError::WorkerGone => write!(f, "serving worker gone (channel closed)"),
+            ServeError::RecvTimeout => write!(f, "client receive deadline elapsed"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
 
 /// Per-request sampling/termination knobs.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -29,11 +94,25 @@ pub struct SamplingParams {
     /// token itself is still emitted (and counted), matching what a
     /// client scanning the stream for it would observe.
     pub stop_token: Option<usize>,
+    /// End-to-end deadline measured from enqueue. Checked at admission
+    /// and between decode steps; on expiry the request terminates with
+    /// [`ServeError::DeadlineExceeded`]. `None` = no deadline.
+    pub deadline: Option<Duration>,
+    /// Maximum time the request may wait in the pending queue before
+    /// its *first* admission (a preempted-then-requeued sequence is
+    /// exempt — it already started). On expiry:
+    /// [`ServeError::QueueTimeout`]. `None` = wait indefinitely.
+    pub queue_timeout: Option<Duration>,
 }
 
 impl Default for SamplingParams {
     fn default() -> Self {
-        SamplingParams { max_new_tokens: 16, stop_token: None }
+        SamplingParams {
+            max_new_tokens: 16,
+            stop_token: None,
+            deadline: None,
+            queue_timeout: None,
+        }
     }
 }
 
@@ -78,6 +157,18 @@ impl GenerateRequestBuilder {
         self
     }
 
+    /// End-to-end deadline from enqueue (admission + decode).
+    pub fn deadline(mut self, d: Duration) -> Self {
+        self.params.deadline = Some(d);
+        self
+    }
+
+    /// Maximum queue wait before first admission.
+    pub fn queue_timeout(mut self, d: Duration) -> Self {
+        self.params.queue_timeout = Some(d);
+        self
+    }
+
     pub fn build(self) -> GenerateRequest {
         GenerateRequest { prompt: self.prompt, params: self.params }
     }
@@ -95,6 +186,32 @@ pub struct WorkItem {
     pub respond_to: Sender<ResponseEvent>,
     /// Enqueue timestamp (for latency accounting).
     pub enqueued_at: std::time::Instant,
+    /// Present iff this item is a preempted sequence re-enqueued for
+    /// recompute-resume; `None` for fresh client submissions.
+    pub resume: Option<ResumeState>,
+}
+
+/// Progress carried across a KV-pressure preemption. The worker freed
+/// the sequence's blocks but kept its tokens: on re-admission the
+/// prompt + generated tokens are re-prefilled (usually mostly from the
+/// prefix cache) and decoding continues at `generated` — bit-identical
+/// to never having been preempted, since prefill ≡ decode by the parity
+/// contract.
+#[derive(Clone, Copy, Debug)]
+pub struct ResumeState {
+    /// Tokens already generated (streamed token indices continue here).
+    pub generated: usize,
+    /// Queue wait accumulated before the preemption.
+    pub queue_time: Duration,
+    /// Active compute time accumulated before the preemption.
+    pub compute_before: Duration,
+    /// First-token timestamp, if the first token was already delivered.
+    pub first_token_at: Option<Instant>,
+    /// TTFT, if already measured (it does not change on resume).
+    pub ttft: Option<Duration>,
+    /// When the preemption happened (requeue wait accounts as queue
+    /// time from here).
+    pub preempted_at: Instant,
 }
 
 /// One streamed serving event.
@@ -105,6 +222,9 @@ pub enum ResponseEvent {
     Token { id: RequestId, token: usize, index: usize },
     /// Final summary; always the last event of a request's stream.
     Done(GenerateResponse),
+    /// Terminal failure; always the last event of a failed request's
+    /// stream (no `Done` follows).
+    Error { id: RequestId, error: ServeError },
 }
 
 /// The completed generation.
@@ -138,12 +258,35 @@ impl ResponseHandle {
     }
 
     /// Blocking convenience: drain the stream to the final summary.
-    /// Call-compatible with the pre-streaming
-    /// `Receiver<GenerateResponse>::recv`.
-    pub fn recv(&self) -> Result<GenerateResponse, RecvError> {
+    /// Terminal outcomes map to `Err`: a streamed
+    /// [`ResponseEvent::Error`] yields its [`ServeError`], and a channel
+    /// that closes with no terminal event yields
+    /// [`ServeError::WorkerGone`] — this can never block forever on an
+    /// abandoned request.
+    pub fn recv(&self) -> Result<GenerateResponse, ServeError> {
         loop {
-            if let ResponseEvent::Done(resp) = self.rx.recv()? {
-                return Ok(resp);
+            match self.rx.recv().map_err(|_| ServeError::WorkerGone)? {
+                ResponseEvent::Done(resp) => return Ok(resp),
+                ResponseEvent::Error { error, .. } => return Err(error),
+                ResponseEvent::Token { .. } => {}
+            }
+        }
+    }
+
+    /// Like [`recv`](Self::recv) with a client-side wall-clock bound:
+    /// past `deadline` it returns [`ServeError::RecvTimeout`] without a
+    /// terminal event having arrived (the request may still complete —
+    /// this is the caller giving up, not the engine). The chaos suite
+    /// uses this to assert "no handle ever hangs" with a finite budget.
+    pub fn recv_deadline(&self, deadline: Instant) -> Result<GenerateResponse, ServeError> {
+        loop {
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            match self.rx.recv_timeout(remaining) {
+                Ok(ResponseEvent::Done(resp)) => return Ok(resp),
+                Ok(ResponseEvent::Error { error, .. }) => return Err(error),
+                Ok(ResponseEvent::Token { .. }) => {}
+                Err(RecvTimeoutError::Timeout) => return Err(ServeError::RecvTimeout),
+                Err(RecvTimeoutError::Disconnected) => return Err(ServeError::WorkerGone),
             }
         }
     }
@@ -191,6 +334,7 @@ mod tests {
             req: GenerateRequest::new(vec![1, 2, 3], 4),
             respond_to: tx,
             enqueued_at: std::time::Instant::now(),
+            resume: None,
         };
         item.respond_to.send(done(item.id, vec![1, 2, 3, 9], 1)).unwrap();
         drop(item);
@@ -225,5 +369,69 @@ mod tests {
         tx.send(done(2, vec![3], 1)).unwrap();
         let handle = ResponseHandle::new(rx);
         assert_eq!(handle.recv().unwrap().generated, 1);
+    }
+
+    #[test]
+    fn recv_maps_terminal_error_event() {
+        let (tx, rx) = channel();
+        tx.send(ResponseEvent::Token { id: 3, token: 5, index: 0 }).unwrap();
+        tx.send(ResponseEvent::Error { id: 3, error: ServeError::DeadlineExceeded })
+            .unwrap();
+        drop(tx);
+        let handle = ResponseHandle::new(rx);
+        assert_eq!(handle.recv(), Err(ServeError::DeadlineExceeded));
+    }
+
+    #[test]
+    fn recv_maps_disconnect_to_worker_gone() {
+        let (tx, rx) = channel::<ResponseEvent>();
+        drop(tx);
+        let handle = ResponseHandle::new(rx);
+        assert_eq!(handle.recv(), Err(ServeError::WorkerGone));
+    }
+
+    #[test]
+    fn recv_deadline_times_out_then_still_delivers() {
+        let (tx, rx) = channel();
+        let handle = ResponseHandle::new(rx);
+        let soon = Instant::now() + Duration::from_millis(5);
+        assert_eq!(handle.recv_deadline(soon), Err(ServeError::RecvTimeout));
+        // The request wasn't abandoned — a late Done is still readable.
+        tx.send(done(4, vec![9], 1)).unwrap();
+        let far = Instant::now() + Duration::from_secs(5);
+        assert_eq!(handle.recv_deadline(far).unwrap().id, 4);
+    }
+
+    #[test]
+    fn builder_sets_deadline_knobs() {
+        let r = GenerateRequest::builder(vec![1])
+            .deadline(Duration::from_millis(50))
+            .queue_timeout(Duration::from_millis(10))
+            .build();
+        assert_eq!(r.params.deadline, Some(Duration::from_millis(50)));
+        assert_eq!(r.params.queue_timeout, Some(Duration::from_millis(10)));
+        // Defaults stay unbounded.
+        assert_eq!(SamplingParams::default().deadline, None);
+        assert_eq!(SamplingParams::default().queue_timeout, None);
+    }
+
+    #[test]
+    fn serve_error_displays_are_distinct() {
+        let errs = [
+            ServeError::Poisoned("boom".into()),
+            ServeError::Overloaded { limit: 8 },
+            ServeError::QueueTimeout,
+            ServeError::DeadlineExceeded,
+            ServeError::TooLarge { budget_blocks: 9, arena_blocks: 4 },
+            ServeError::WorkerGone,
+            ServeError::RecvTimeout,
+        ];
+        let texts: Vec<String> = errs.iter().map(|e| e.to_string()).collect();
+        for (i, a) in texts.iter().enumerate() {
+            assert!(!a.is_empty());
+            for b in texts.iter().skip(i + 1) {
+                assert_ne!(a, b);
+            }
+        }
     }
 }

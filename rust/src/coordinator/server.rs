@@ -8,9 +8,10 @@
 //!
 //! ```text
 //!        ┌──────────────────────── step loop ────────────────────────┐
-//!        │ 1. admit: drain queue; admit from the head while KV       │
-//!        │    blocks allow (prefix-cache hits skip prefill over the  │
-//!        │    cached span; at most `max_batch` prefills/iteration)   │
+//!        │ 1. admit: drain arrivals (shedding past the pending       │
+//!        │    bound), expire dead requests, admit from the head      │
+//!        │    while KV blocks allow; preempt the youngest active     │
+//!        │    sequence when the head starves too long                │
 //!        │ 2. sample: one token per active sequence, streamed to the │
 //!        │    client immediately; finished sequences retire, free    │
 //!        │    their private blocks, and leave their prompt's prefix  │
@@ -33,12 +34,51 @@
 //! tokens rather than reproducing `generate`'s quirk of sampling from a
 //! zeroed logits row.
 //!
+//! ## Failure semantics
+//!
+//! **Every submitted request terminates** with exactly one of `Done` or
+//! `Error` — no [`ResponseHandle`] ever hangs:
+//!
+//! * The pending queue is bounded ([`EngineConfig::max_pending`]);
+//!   arrivals past the bound are shed with [`ServeError::Overloaded`],
+//!   and a request whose KV budget exceeds the whole arena is shed with
+//!   [`ServeError::TooLarge`] instead of starving the FIFO head forever.
+//! * [`SamplingParams::deadline`] / `queue_timeout` expiries terminate
+//!   with [`ServeError::DeadlineExceeded`] / [`ServeError::QueueTimeout`],
+//!   checked both in the queue and between decode steps.
+//! * A panic inside per-request model work (prefill, or the batched
+//!   decode step) is caught with `catch_unwind`; the poisoned sequence
+//!   is quarantined — blocks freed via its generation-tagged handle,
+//!   [`ServeError::Poisoned`] delivered — while every other sequence
+//!   replays the step in isolation and continues bit-identically
+//!   (`prepare_append` is idempotent until `commit_append`, and KV row
+//!   writes land in place, so a replay cannot double-append).
+//! * Worker death or queue close sends a terminal event to everything
+//!   still queued or in flight, and a closed channel surfaces as
+//!   [`ServeError::WorkerGone`] from [`ResponseHandle::recv`].
+//!
+//! **KV-pressure preemption**: when the queue head starves on blocks
+//! for [`EngineConfig::preempt_after`] consecutive steps, the
+//! youngest-by-admission active sequence is preempted — blocks freed,
+//! prompt + generated tokens re-enqueued as a resume item. On
+//! re-admission it re-prefills (usually mostly from the prefix cache)
+//! and continues decoding **bit-identically** to an uninterrupted run,
+//! because prefill ≡ decode by the serving parity contract. With the
+//! default derived arena sizing the head can never starve; preemption
+//! becomes reachable when [`EngineConfig::kv_total_blocks`] undersizes
+//! the arena.
+//!
 //! [`KvBlockManager`]: crate::nn::kvcache::KvBlockManager
+//! [`EngineConfig::max_pending`]: crate::util::config::EngineConfig::max_pending
+//! [`EngineConfig::preempt_after`]: crate::util::config::EngineConfig::preempt_after
+//! [`EngineConfig::kv_total_blocks`]: crate::util::config::EngineConfig::kv_total_blocks
+//! [`SamplingParams::deadline`]: super::request::SamplingParams::deadline
 
 use super::batcher::{BatcherConfig, DynamicBatcher};
 use super::metrics::Metrics;
 use super::request::{
-    GenerateRequest, GenerateResponse, RequestId, ResponseEvent, ResponseHandle, WorkItem,
+    GenerateRequest, GenerateResponse, RequestId, ResponseEvent, ResponseHandle, ResumeState,
+    ServeError, WorkItem,
 };
 use crate::nn::gpt::{argmax, TinyLM};
 use crate::nn::kvcache::KvBlockManager;
@@ -48,16 +88,25 @@ use crate::util::arena::ScratchArena;
 use crate::util::config::EngineConfig;
 use anyhow::{bail, Result};
 use std::collections::{HashMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+/// Arrivals are drained from the channel in chunks of this size so a
+/// burst is shed incrementally against the pending bound instead of
+/// being materialized into one unbounded `Vec` first.
+const ARRIVAL_CHUNK: usize = 32;
+
 /// Coordinator configuration: batching policy plus the engine-level
 /// knobs each worker sizes its KV block manager from
 /// ([`EngineConfig::max_seqs`] concurrent sequences,
 /// [`EngineConfig::kv_block_size`] positions per block,
-/// [`EngineConfig::kv_cache_blocks`] of prefix-cache headroom).
+/// [`EngineConfig::kv_cache_blocks`] of prefix-cache headroom — or a
+/// hard [`EngineConfig::kv_total_blocks`] arena override) and runs its
+/// robustness policy from ([`EngineConfig::max_pending`] queue bound,
+/// [`EngineConfig::preempt_after`] starvation threshold).
 #[derive(Clone, Debug)]
 pub struct CoordinatorConfig {
     pub batcher: BatcherConfig,
@@ -103,30 +152,44 @@ pub struct Coordinator {
 
 impl Coordinator {
     /// Build a coordinator serving the given (name, model) variants.
-    pub fn new(models: Vec<(String, TinyLM)>, cfg: CoordinatorConfig) -> Self {
+    /// A worker-thread spawn failure tears down the workers already
+    /// started and reports the error instead of panicking.
+    pub fn new(models: Vec<(String, TinyLM)>, cfg: CoordinatorConfig) -> Result<Self> {
         let metrics = Arc::new(Metrics::new());
-        let mut routes = HashMap::new();
+        let mut routes: HashMap<String, Route> = HashMap::new();
         let mut workers = Vec::new();
         for (name, model) in models {
             let (tx, rx) = channel::<WorkItem>();
-            routes.insert(
-                name.clone(),
-                Route { queue: tx, vocab: model.cfg.vocab, max_seq: model.cfg.max_seq },
-            );
+            let (vocab, max_seq) = (model.cfg.vocab, model.cfg.max_seq);
             let m = Arc::clone(&metrics);
             let wcfg = cfg.clone();
-            workers.push(
-                std::thread::Builder::new()
-                    .name(format!("worker-{name}"))
-                    .spawn(move || worker_loop(model, rx, wcfg, m))
-                    .expect("spawn worker"),
-            );
+            let spawned = std::thread::Builder::new()
+                .name(format!("worker-{name}"))
+                .spawn(move || worker_loop(model, rx, wcfg, m));
+            match spawned {
+                Ok(handle) => {
+                    workers.push(handle);
+                    routes.insert(name.clone(), Route { queue: tx, vocab, max_seq });
+                }
+                Err(e) => {
+                    // Unwind: dropping the routes (and this variant's
+                    // `tx`) closes every queue; the spawned workers
+                    // drain and exit before we report.
+                    drop(tx);
+                    routes.clear();
+                    for w in workers {
+                        let _ = w.join();
+                    }
+                    bail!("failed to spawn worker thread for variant `{name}`: {e}");
+                }
+            }
         }
-        Coordinator { routes, workers, metrics, next_id: AtomicU64::new(1) }
+        Ok(Coordinator { routes, workers, metrics, next_id: AtomicU64::new(1) })
     }
 
     /// Submit a [`GenerateRequest`]; returns the id and a streaming
-    /// [`ResponseHandle`] (per-token `Token` events, then `Done`).
+    /// [`ResponseHandle`] (per-token `Token` events, then `Done` — or a
+    /// terminal `Error`).
     pub fn submit_request(
         &self,
         variant: &str,
@@ -139,10 +202,11 @@ impl Coordinator {
             );
         };
         // Validate untrusted input here: an out-of-vocab token would
-        // panic (and kill) the variant's worker thread, and a prompt
-        // longer than the context window would stall live sequences
-        // behind an O(n²) prefill. Capping at max_seq also means a
-        // sequence never outgrows the block budget it was admitted with.
+        // panic the variant's worker (caught there, but pointlessly),
+        // and a prompt longer than the context window would stall live
+        // sequences behind an O(n²) prefill. Capping at max_seq also
+        // means a sequence never outgrows the block budget it was
+        // admitted with.
         if req.prompt.len() > route.max_seq {
             bail!(
                 "prompt of {} tokens exceeds variant `{variant}`'s context window ({})",
@@ -167,6 +231,7 @@ impl Coordinator {
             req,
             respond_to: tx,
             enqueued_at: Instant::now(),
+            resume: None,
         });
         if sent.is_err() {
             self.metrics.record_enqueue_aborted();
@@ -189,13 +254,15 @@ impl Coordinator {
     }
 
     /// Submit a [`GenerateRequest`] and block for the final summary.
+    /// Serving failures surface as the typed [`ServeError`] through the
+    /// anyhow chain.
     pub fn generate_request(
         &self,
         variant: &str,
         req: GenerateRequest,
     ) -> Result<GenerateResponse> {
         let (_, handle) = self.submit_request(variant, req)?;
-        handle.recv().map_err(|_| anyhow::anyhow!("worker dropped the response"))
+        Ok(handle.recv()?)
     }
 
     /// Convenience: submit and block for the final summary.
@@ -240,14 +307,23 @@ struct ActiveSeq {
     /// Prompt + generated tokens.
     tokens: Vec<usize>,
     generated: usize,
-    /// Logits (1×vocab) of the last prefill position; `None` when the
-    /// prompt was empty (nothing to sample from). Consumed by the
-    /// sequence's first sampling step — afterwards the worker samples
-    /// straight from the shared step-logits matrix (one row per live
-    /// sequence), so the hot loop never copies logits around.
+    /// Logits (1×vocab) the next token samples from when the sequence
+    /// has no row in the shared step matrix: the last prefill position
+    /// after (re-)admission, or an isolation-replay result after a
+    /// batched-step panic. `None` when the prompt was empty (nothing to
+    /// sample from). Consumed by the next sampling step — steady-state
+    /// sequences sample straight from the shared step-logits matrix
+    /// (one row per live sequence), so the hot loop never copies
+    /// logits around.
     logits: Option<Matrix>,
+    /// Queue wait (first admission wait + any post-preemption requeue
+    /// wait).
     queue_time: Duration,
+    /// Most recent admission.
     admitted_at: Instant,
+    /// Active compute accumulated in earlier admissions (non-zero only
+    /// after a preemption).
+    compute_before: Duration,
     /// Set when the first token is sampled (drives TPOT at retire).
     first_token_at: Option<Instant>,
     /// Enqueue → first token, computed once at sampling time; the
@@ -257,37 +333,120 @@ struct ActiveSeq {
     cancelled: bool,
 }
 
+/// What one admission attempt did.
+enum AdmitOutcome {
+    /// Budget reserved, prompt (re-)prefilled: the sequence is live.
+    Admitted(ActiveSeq),
+    /// The arena cannot reserve the budget *right now*: the item goes
+    /// back to the queue head (FIFO) and retries after retirements —
+    /// or triggers preemption if it starves too long.
+    Retry(WorkItem),
+    /// The item terminated here (`TooLarge` shed, or a prefill panic
+    /// poisoned it): its terminal event and metrics are already
+    /// recorded.
+    Rejected,
+}
+
+/// Best-effort panic-payload extraction for [`ServeError::Poisoned`].
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Deliver a terminal [`ResponseEvent::Error`] (ignoring a gone client
+/// — the *engine*-side obligation is met either way).
+fn fail_item(item: &WorkItem, error: ServeError) {
+    let _ = item.respond_to.send(ResponseEvent::Error { id: item.id, error });
+}
+
 /// Try to admit one work item: reserve a block budget for the whole
-/// generation, then prefill the part of the prompt the prefix cache
-/// does not already hold. `Err` hands the item back when the manager
-/// cannot reserve enough blocks this iteration (head-of-line FIFO: the
-/// caller retries once live sequences retire).
+/// (remaining) generation, then prefill the part of the prompt the
+/// prefix cache does not already hold. Resume items restore their
+/// carried progress instead of starting over.
 fn admit(
     model: &TinyLM,
     mgr: &mut KvBlockManager,
     metrics: &Metrics,
     mut item: WorkItem,
-) -> Result<ActiveSeq, WorkItem> {
-    // Reserve capacity for prompt + full generation up front (clamped
-    // to the context window, past which decode stops anyway) so the
-    // decode path can never run out of blocks mid-sequence.
+) -> AdmitOutcome {
+    // Reserve capacity for prompt + the remaining generation up front
+    // (clamped to the context window, past which decode stops anyway)
+    // so the decode path can never run out of blocks mid-sequence. For
+    // a resume item the prompt already contains the generated tokens,
+    // so the reservation equals the uninterrupted request's.
+    let pre_gen = item.resume.map_or(0, |r| r.generated);
+    let remaining = item.req.params.max_new_tokens.saturating_sub(pre_gen);
     let max_total = if item.req.prompt.is_empty() {
         0
     } else {
-        (item.req.prompt.len() + item.req.params.max_new_tokens).min(model.cfg.max_seq)
+        (item.req.prompt.len() + remaining).min(model.cfg.max_seq)
     };
+    let budget = max_total.div_ceil(mgr.block_size().max(1));
+    if budget > mgr.num_blocks() {
+        // Can never fit, not even into an idle arena: shed immediately
+        // rather than blocking the FIFO head on impossible capacity.
+        trace::serve_point("shed", item.id);
+        fail_item(
+            &item,
+            ServeError::TooLarge { budget_blocks: budget, arena_blocks: mgr.num_blocks() },
+        );
+        metrics.record_shed();
+        return AdmitOutcome::Rejected;
+    }
     let Some(adm) = mgr.admit(&item.req.prompt, max_total) else {
-        return Err(item);
+        return AdmitOutcome::Retry(item);
     };
-    let queue_time = item.enqueued_at.elapsed();
-    metrics.record_admitted(queue_time);
+    let (queue_time, compute_before, first_token_at, ttft) = match item.resume {
+        Some(r) => {
+            // The requeue wait after the preemption is queue time too;
+            // the queue-latency histogram already sampled this request
+            // at first admission, so only the gauge moves.
+            metrics.record_readmitted();
+            (
+                r.queue_time + r.preempted_at.elapsed(),
+                r.compute_before,
+                r.first_token_at,
+                r.ttft,
+            )
+        }
+        None => {
+            let q = item.enqueued_at.elapsed();
+            metrics.record_admitted(q);
+            (q, Duration::ZERO, None, None)
+        }
+    };
     trace::serve_point("admit", item.id);
     let admitted_at = Instant::now();
     // Prefill ONLY the suffix the prefix cache does not cover; the
     // cached span's K/V rows are shared with the request that wrote
     // them, so the math (and every token out) is bit-identical to a
-    // cold prefill of the whole prompt.
-    let logits = model.prefill_seq(&item.req.prompt[adm.cached_tokens..], mgr, adm.handle);
+    // cold prefill of the whole prompt. A resume item's "prompt" is
+    // prompt + generated: re-prefilling it reconstructs exactly the
+    // logits an uninterrupted decode would be holding (prefill ≡
+    // decode), which is what makes preemption bit-exact.
+    //
+    // catch_unwind: a panic in model code must poison only this
+    // request, not the variant's worker thread.
+    let prefill = catch_unwind(AssertUnwindSafe(|| {
+        model.prefill_seq(&item.req.prompt[adm.cached_tokens..], mgr, adm.handle)
+    }));
+    let logits = match prefill {
+        Ok(logits) => logits,
+        Err(payload) => {
+            // Quarantine: the sequence's blocks hold partially written
+            // rows; the generation-tagged free returns them safely.
+            mgr.free(adm.handle);
+            trace::serve_point("poisoned", item.id);
+            fail_item(&item, ServeError::Poisoned(panic_message(&*payload)));
+            metrics.record_poisoned();
+            return AdmitOutcome::Rejected;
+        }
+    };
     trace::serve_point("prefill", item.id);
     // The prompt buffer becomes the sequence's token list (nothing
     // reads item.req.prompt after prefill) — no second copy per seq.
@@ -295,18 +454,60 @@ fn admit(
     // Publish the prompt's full blocks into the prefix cache so the
     // NEXT request sharing this prompt prefix skips prefill over it.
     mgr.cache_prefix(adm.handle, &tokens);
-    Ok(ActiveSeq {
+    item.resume = None;
+    AdmitOutcome::Admitted(ActiveSeq {
         item,
         handle: adm.handle,
         tokens,
-        generated: 0,
+        generated: pre_gen,
         logits,
         queue_time,
         admitted_at,
-        first_token_at: None,
-        ttft: None,
+        compute_before,
+        first_token_at,
+        ttft,
         cancelled: false,
     })
+}
+
+/// Preempt an active sequence for KV pressure: free its blocks, carry
+/// its progress into a [`ResumeState`], and re-enqueue it at the back
+/// of the pending queue (the starving head admits first on the freed
+/// blocks; re-queueing at the front would just thrash).
+fn preempt(
+    seq: ActiveSeq,
+    mgr: &mut KvBlockManager,
+    metrics: &Metrics,
+    pending: &mut VecDeque<WorkItem>,
+) {
+    let ActiveSeq {
+        mut item,
+        handle,
+        tokens,
+        generated,
+        queue_time,
+        admitted_at,
+        compute_before,
+        first_token_at,
+        ttft,
+        ..
+    } = seq;
+    mgr.free(handle);
+    trace::serve_point("preempt", item.id);
+    let now = Instant::now();
+    // The re-prefill prompt is everything generated so far; streamed
+    // token indices continue from `generated` after resume.
+    item.req.prompt = tokens;
+    item.resume = Some(ResumeState {
+        generated,
+        queue_time,
+        compute_before: compute_before + now.duration_since(admitted_at),
+        first_token_at,
+        ttft,
+        preempted_at: now,
+    });
+    metrics.record_preempted();
+    pending.push_back(item);
 }
 
 /// Retire a sequence: release its handle (private blocks return to the
@@ -317,7 +518,7 @@ fn retire(seq: ActiveSeq, mgr: &mut KvBlockManager, metrics: &Metrics) {
     let id = seq.item.id;
     mgr.free(seq.handle);
     trace::serve_point("retire", id);
-    let compute_time = seq.admitted_at.elapsed();
+    let compute_time = seq.compute_before + seq.admitted_at.elapsed();
     let ttft = seq.ttft;
     let tpot = seq.first_token_at.and_then(|t| {
         (seq.generated >= 2).then(|| t.elapsed() / (seq.generated as u32 - 1))
@@ -362,6 +563,7 @@ fn worker_loop(
     metrics: Arc<Metrics>,
 ) {
     let max_seqs = cfg.engine.max_seqs.max(1);
+    let max_pending = cfg.engine.max_pending.max(1);
     // Warm the execution caches before taking traffic: pretune builds
     // every layer's StructPlan (cached on the layer — Monarch/BlockDiag/
     // LowRank models serve through the same plan path as Dense/BLAST),
@@ -370,16 +572,29 @@ fn worker_loop(
     // and factor-panel packing all run at model-load time rather than
     // inside the first request.
     model.pretune(&[1, max_seqs, model.cfg.max_seq - 1]);
-    let mut mgr = model.new_kv_manager_with(
-        max_seqs,
-        cfg.engine.kv_block_size,
-        cfg.engine.kv_cache_blocks,
-    );
+    // Arena sizing: derived (worst case per sequence + cache headroom,
+    // under which admission can always eventually reserve) unless
+    // `kv_total_blocks` pins an explicit — possibly undersized, KV
+    // pressure is a real deployment state — total.
+    let mut mgr = match cfg.engine.kv_total_blocks {
+        Some(n) => KvBlockManager::new(
+            model.cfg.n_layers,
+            n.max(1),
+            cfg.engine.kv_block_size.max(1),
+            model.cfg.d_model,
+        ),
+        None => model.new_kv_manager_with(
+            max_seqs,
+            cfg.engine.kv_block_size,
+            cfg.engine.kv_cache_blocks,
+        ),
+    };
     let mut batcher = DynamicBatcher::new(rx, cfg.batcher);
     let mut active: Vec<ActiveSeq> = Vec::new();
     // Requests pulled off the queue but not yet admitted (waiting for
     // KV blocks). FIFO: the head blocks everything behind it, so a big
-    // request cannot be starved by small ones slipping past.
+    // request cannot be starved by small ones slipping past. Bounded:
+    // arrivals past `max_pending` shed at the drain below.
     let mut pending: VecDeque<WorkItem> = VecDeque::new();
     // Steady-state decode scratch: one arena per worker plus reusable
     // step buffers, so an iteration with no admissions or retirements
@@ -396,31 +611,106 @@ fn worker_loop(
     // so the prefix-index correspondence is stable across iterations).
     let mut step_logits = Matrix::zeros(0, model.cfg.vocab);
     let mut have_logits = false;
+    // Consecutive iterations the queue head failed to reserve blocks
+    // while sequences were active (feeds the preemption trigger).
+    let mut starved_steps = 0usize;
     loop {
-        // ---- 1. Admission: drain the queue, admit while blocks last. ----
+        // ---- 1a. Arrivals: drain the channel against the bound. ----
         if active.is_empty() && pending.is_empty() {
             // Idle: park until work arrives (None = queue closed).
             let Some(item) = batcher.recv_one() else { break };
             pending.push_back(item);
         }
-        pending.extend(batcher.try_admit(usize::MAX));
+        // Chunked drain: a burst beyond `max_pending` is shed with
+        // `Overloaded` as it is pulled, so neither the pending queue
+        // nor any transient batch buffer grows without bound.
+        loop {
+            let batch = batcher.try_admit(ARRIVAL_CHUNK);
+            if batch.is_empty() {
+                break;
+            }
+            for item in batch {
+                if pending.len() < max_pending {
+                    pending.push_back(item);
+                } else {
+                    trace::serve_point("shed", item.id);
+                    fail_item(&item, ServeError::Overloaded { limit: max_pending });
+                    metrics.record_shed();
+                }
+            }
+        }
+
+        // ---- 1b. Expire dead requests while they are still queued. ----
+        pending.retain(|item| {
+            let waited = item.enqueued_at.elapsed();
+            let params = item.req.params;
+            let expired = if params.deadline.is_some_and(|d| waited > d) {
+                Some(ServeError::DeadlineExceeded)
+            } else if item.resume.is_none()
+                && params.queue_timeout.is_some_and(|t| waited > t)
+            {
+                // queue_timeout guards time-to-first-admission only: a
+                // preempted sequence already started, so it is exempt
+                // (its end-to-end deadline still applies).
+                Some(ServeError::QueueTimeout)
+            } else {
+                None
+            };
+            match expired {
+                Some(error) => {
+                    trace::serve_point("expire", item.id);
+                    fail_item(item, error);
+                    metrics.record_expired_queued();
+                    false
+                }
+                None => true,
+            }
+        });
+
+        // ---- 1c. Admission: head-of-line FIFO while blocks last. ----
         // `max_batch` caps prefills per iteration; the manager's block
-        // budget caps concurrency. Head-of-line FIFO: when the front
-        // item cannot reserve its blocks, it waits for retirements
-        // rather than letting later requests jump the queue.
+        // budget caps concurrency. When the front item cannot reserve
+        // its blocks it waits for retirements rather than letting later
+        // requests jump the queue.
         let mut admitted = 0usize;
+        let mut head_blocked = false;
         while admitted < cfg.batcher.max_batch.max(1) && active.len() < max_seqs {
             let Some(item) = pending.pop_front() else { break };
             match admit(&model, &mut mgr, &metrics, item) {
-                Ok(seq) => {
+                AdmitOutcome::Admitted(seq) => {
                     active.push(seq);
                     admitted += 1;
                 }
-                Err(item) => {
+                AdmitOutcome::Rejected => {}
+                AdmitOutcome::Retry(item) => {
                     pending.push_front(item);
+                    head_blocked = true;
                     break;
                 }
             }
+        }
+
+        // ---- 1d. KV-pressure preemption. ----
+        // The head starving `preempt_after` consecutive steps while
+        // sequences hold blocks means retirements alone are not freeing
+        // capacity fast enough: preempt the youngest admission (least
+        // compute to redo, and FIFO fairness favors the oldest). The
+        // victim is only *marked* here — the sample loop below preempts
+        // it in place of sampling, which keeps every other sequence's
+        // row index into the shared step-logits matrix intact.
+        let mut preempt_idx: Option<usize> = None;
+        if head_blocked && !active.is_empty() && cfg.engine.preempt_after > 0 {
+            starved_steps += 1;
+            if starved_steps >= cfg.engine.preempt_after {
+                preempt_idx = active
+                    .iter()
+                    .enumerate()
+                    .max_by_key(|(_, s)| s.admitted_at)
+                    .map(|(i, _)| i);
+                starved_steps = 0;
+            }
+        } else {
+            starved_steps = 0;
         }
 
         // ---- 2. Sample one token per sequence; stream + retire. ----
@@ -428,15 +718,29 @@ fn worker_loop(
         step_toks.clear();
         step_handles.clear();
         for (idx, mut seq) in active.drain(..).enumerate() {
+            if preempt_idx == Some(idx) {
+                preempt(seq, &mut mgr, &metrics, &mut pending);
+                continue;
+            }
             let params = seq.item.req.params;
+            // Between-steps deadline check: a sequence past its
+            // deadline stops consuming decode capacity immediately.
+            if params.deadline.is_some_and(|d| seq.item.enqueued_at.elapsed() > d) {
+                trace::serve_point("expire", seq.item.id);
+                mgr.free(seq.handle);
+                fail_item(&seq.item, ServeError::DeadlineExceeded);
+                metrics.record_expired_active();
+                continue;
+            }
             let sampled = if seq.generated >= params.max_new_tokens {
                 None // max_new_tokens exhausted (or zero).
             } else if idx < prev_live {
                 // Continuing sequence: its row of the last decode step.
                 Some(argmax(step_logits.row(idx)))
             } else {
-                // Freshly admitted: the prefill logits (None = empty
-                // prompt, nothing to sample from).
+                // Freshly (re-)admitted or isolation-replayed: its
+                // private logits (None = empty prompt, nothing to
+                // sample from).
                 seq.logits.as_ref().map(|l| argmax(l.row(0)))
             };
             let Some(next) = sampled else {
@@ -449,14 +753,22 @@ fn worker_loop(
             if first {
                 let now = Instant::now();
                 seq.first_token_at = Some(now);
-                seq.ttft = Some(seq.queue_time + now.duration_since(seq.admitted_at));
+                seq.ttft = Some(
+                    seq.queue_time
+                        + seq.compute_before
+                        + now.duration_since(seq.admitted_at),
+                );
             }
             let event = ResponseEvent::Token {
                 id: seq.item.id,
                 token: next,
                 index: seq.generated - 1,
             };
-            if seq.item.respond_to.send(event).is_err() {
+            // Chaos site: a dropped/failed delivery must look exactly
+            // like a vanished client (cancellation path).
+            let delivered = !crate::util::failpoint::eval("resp.send")
+                && seq.item.respond_to.send(event).is_ok();
+            if !delivered {
                 // Client went away: free the blocks instead of decoding on.
                 seq.cancelled = true;
             } else if first {
@@ -474,7 +786,7 @@ fn worker_loop(
             if done {
                 retire(seq, &mut mgr, &metrics);
             } else {
-                // The prefill logits (if any) are spent; from here on
+                // The private logits (if any) are spent; from here on
                 // the sequence samples from the shared step matrix.
                 seq.logits = None;
                 step_toks.push(next);
@@ -488,20 +800,89 @@ fn worker_loop(
         // Row `i` of the result is `active[i]`'s next-token logits,
         // written into the worker's reusable logits buffer through the
         // arena-backed zero-allocation path (KV rows land in blocks
-        // reserved at admission — never the heap).
+        // reserved at admission — never the heap). A panic anywhere in
+        // the step is caught and isolated per sequence below.
         if step_toks.is_empty() {
             have_logits = false;
         } else {
             metrics.record_batch(step_toks.len());
-            model.decode_step_batch_into(
-                &step_toks,
-                &mut mgr,
-                &step_handles,
-                &mut arena,
-                &mut step_logits,
-            );
-            have_logits = true;
+            let step = catch_unwind(AssertUnwindSafe(|| {
+                crate::fail_point!("worker.step");
+                model.decode_step_batch_into(
+                    &step_toks,
+                    &mut mgr,
+                    &step_handles,
+                    &mut arena,
+                    &mut step_logits,
+                );
+            }));
+            match step {
+                Ok(()) => have_logits = true,
+                Err(_) => {
+                    // The batched step aborted part-way. Replay each
+                    // sequence alone to find the poisoned one(s): the
+                    // replay is bit-identical because `prepare_append`
+                    // only tops blocks up to the same need and KV row
+                    // writes overwrite in place — nothing the aborted
+                    // batch did can double-apply. Survivors keep their
+                    // logits privately (like a fresh prefill row) and
+                    // the shared step matrix is invalidated.
+                    have_logits = false;
+                    let failed: Vec<ActiveSeq> = std::mem::take(&mut active);
+                    for (i, mut seq) in failed.into_iter().enumerate() {
+                        if mgr.seq_len(seq.handle) >= seq.tokens.len() {
+                            // This sequence's append already committed
+                            // in the aborted batch (the panic hit after
+                            // its commit): a replay would append twice.
+                            // Its KV state is complete but its logits
+                            // are lost — recompute-resume it through
+                            // the preemption path, which is bit-exact.
+                            preempt(seq, &mut mgr, &metrics, &mut pending);
+                            continue;
+                        }
+                        let tok = step_toks[i];
+                        let h = seq.handle;
+                        let mut single = Matrix::zeros(0, model.cfg.vocab);
+                        let replay = catch_unwind(AssertUnwindSafe(|| {
+                            model.decode_step_batch_into(
+                                &[tok],
+                                &mut mgr,
+                                &[h],
+                                &mut arena,
+                                &mut single,
+                            );
+                        }));
+                        match replay {
+                            Ok(()) => {
+                                seq.logits = Some(single);
+                                active.push(seq);
+                            }
+                            Err(payload) => {
+                                // Reproducibly poisoned: quarantine.
+                                trace::serve_point("poisoned", seq.item.id);
+                                mgr.free(seq.handle);
+                                fail_item(
+                                    &seq.item,
+                                    ServeError::Poisoned(panic_message(&*payload)),
+                                );
+                                metrics.record_poisoned();
+                            }
+                        }
+                    }
+                }
+            }
         }
+    }
+    // Queue closed and drained — both sets are normally empty here, but
+    // the no-hang guarantee does not rely on "normally": anything still
+    // queued or live gets its terminal event before the thread exits.
+    for item in pending.drain(..) {
+        fail_item(&item, ServeError::WorkerGone);
+        metrics.record_enqueue_aborted(); // gauge −1, no outcome counter
+    }
+    for seq in active.drain(..) {
+        mgr.free(seq.handle);
+        fail_item(&seq.item, ServeError::WorkerGone);
     }
 }
 
@@ -531,7 +912,8 @@ mod tests {
         let coord = Coordinator::new(
             vec![("blast".into(), model)],
             CoordinatorConfig::default(),
-        );
+        )
+        .unwrap();
         let resp = coord.generate("blast", vec![1, 2, 3], 5).unwrap();
         assert_eq!(resp.tokens, direct);
         assert_eq!(resp.generated, 5);
@@ -548,7 +930,8 @@ mod tests {
         let coord = Coordinator::new(
             vec![("dense".into(), m1), ("blast".into(), m2)],
             CoordinatorConfig::default(),
-        );
+        )
+        .unwrap();
         assert_eq!(coord.generate("dense", vec![5, 6], 4).unwrap().tokens, out1);
         assert_eq!(coord.generate("blast", vec![5, 6], 4).unwrap().tokens, out2);
         assert!(coord.generate("nope", vec![1], 1).is_err());
@@ -558,10 +941,10 @@ mod tests {
     #[test]
     fn concurrent_requests_all_answered() {
         let model = tiny_model(903, StructureKind::Dense);
-        let coord = Arc::new(Coordinator::new(
-            vec![("m".into(), model)],
-            CoordinatorConfig::default(),
-        ));
+        let coord = Arc::new(
+            Coordinator::new(vec![("m".into(), model)], CoordinatorConfig::default())
+                .unwrap(),
+        );
         let mut handles = Vec::new();
         for i in 0..16usize {
             let c = Arc::clone(&coord);
@@ -596,10 +979,9 @@ mod tests {
                 (prompt.clone(), model.generate(&prompt, 4 + i % 5))
             })
             .collect();
-        let coord = Arc::new(Coordinator::new(
-            vec![("m".into(), model)],
-            test_cfg(2),
-        ));
+        let coord = Arc::new(
+            Coordinator::new(vec![("m".into(), model)], test_cfg(2)).unwrap(),
+        );
         let mut joins = Vec::new();
         for (i, (prompt, expected)) in expectations.into_iter().enumerate() {
             let c = Arc::clone(&coord);
@@ -631,7 +1013,8 @@ mod tests {
             .expect("stop token is generated");
         let expected: Vec<usize> = direct[..prompt.len() + first_hit + 1].to_vec();
         let coord =
-            Coordinator::new(vec![("m".into(), model)], CoordinatorConfig::default());
+            Coordinator::new(vec![("m".into(), model)], CoordinatorConfig::default())
+                .unwrap();
         let req = GenerateRequest::builder(prompt)
             .max_tokens(8)
             .stop_token(stop)
@@ -647,7 +1030,8 @@ mod tests {
         let model = tiny_model(906, StructureKind::Dense);
         let direct = model.generate(&[2, 4], 6);
         let coord =
-            Coordinator::new(vec![("m".into(), model)], CoordinatorConfig::default());
+            Coordinator::new(vec![("m".into(), model)], CoordinatorConfig::default())
+                .unwrap();
         let (id, handle) = coord.submit("m", vec![2, 4], 6).unwrap();
         let mut streamed = Vec::new();
         let mut summary = None;
@@ -659,6 +1043,9 @@ mod tests {
                     streamed.push(token);
                 }
                 ResponseEvent::Done(resp) => summary = Some(resp),
+                ResponseEvent::Error { error, .. } => {
+                    panic!("healthy request must not error: {error}")
+                }
             }
         }
         let summary = summary.expect("stream must end with Done");
@@ -671,7 +1058,8 @@ mod tests {
     fn dropped_client_does_not_wedge_the_worker() {
         let model = tiny_model(907, StructureKind::Dense);
         let coord =
-            Coordinator::new(vec![("m".into(), model)], CoordinatorConfig::default());
+            Coordinator::new(vec![("m".into(), model)], CoordinatorConfig::default())
+                .unwrap();
         {
             let (_, handle) = coord.submit("m", vec![1, 2, 3], 50).unwrap();
             drop(handle); // client gives up immediately
@@ -685,7 +1073,9 @@ mod tests {
     #[test]
     fn metrics_populated() {
         let model = tiny_model(904, StructureKind::Dense);
-        let coord = Coordinator::new(vec![("m".into(), model)], CoordinatorConfig::default());
+        let coord =
+            Coordinator::new(vec![("m".into(), model)], CoordinatorConfig::default())
+                .unwrap();
         coord.generate("m", vec![1, 2], 3).unwrap();
         let snap = coord.metrics.snapshot();
         assert_eq!(snap.requests, 1);
@@ -702,7 +1092,8 @@ mod tests {
         let model = tiny_model(909, StructureKind::Dense);
         let vocab = model.cfg.vocab;
         let coord =
-            Coordinator::new(vec![("m".into(), model)], CoordinatorConfig::default());
+            Coordinator::new(vec![("m".into(), model)], CoordinatorConfig::default())
+                .unwrap();
         // Rejected at the boundary, not panicking the worker…
         let err = coord.generate("m", vec![1, vocab, 2], 3).unwrap_err();
         assert!(format!("{err}").contains("out of vocab"), "{err}");
@@ -716,7 +1107,8 @@ mod tests {
     fn zero_new_tokens_and_empty_prompt() {
         let model = tiny_model(908, StructureKind::Dense);
         let coord =
-            Coordinator::new(vec![("m".into(), model)], CoordinatorConfig::default());
+            Coordinator::new(vec![("m".into(), model)], CoordinatorConfig::default())
+                .unwrap();
         let resp = coord.generate("m", vec![4, 5, 6], 0).unwrap();
         assert_eq!(resp.tokens, vec![4, 5, 6]);
         assert_eq!(resp.generated, 0);
@@ -726,6 +1118,59 @@ mod tests {
         let resp = coord.generate("m", vec![], 5).unwrap();
         assert!(resp.tokens.is_empty());
         assert_eq!(resp.generated, 0);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn oversized_request_is_shed_not_head_of_line_blocking() {
+        let model = tiny_model(912, StructureKind::Dense);
+        let mut cfg = test_cfg(2);
+        cfg.engine.kv_block_size = 4;
+        cfg.engine.kv_total_blocks = Some(3); // 12 positions, ever
+        let coord = Coordinator::new(vec![("m".into(), model)], cfg).unwrap();
+        // Budget ceil((3 + 20 capped at max_seq)/4) > 3 blocks: can
+        // never fit — must shed with TooLarge, not block the queue.
+        let (_, h) = coord.submit("m", vec![1, 2, 3], 20).unwrap();
+        match h.recv() {
+            Err(ServeError::TooLarge { budget_blocks, arena_blocks }) => {
+                assert!(budget_blocks > arena_blocks);
+                assert_eq!(arena_blocks, 3);
+            }
+            other => panic!("expected TooLarge, got {other:?}"),
+        }
+        // A request that fits the small arena still serves, proving the
+        // oversized one neither wedged nor leaked anything.
+        let resp = coord.generate("m", vec![1, 2, 3], 2).unwrap();
+        assert_eq!(resp.generated, 2);
+        let snap = coord.metrics.snapshot();
+        assert_eq!(snap.shed, 1);
+        assert_eq!(snap.queue_depth, 0);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn zero_deadline_and_zero_queue_timeout_expire_before_admission() {
+        let model = tiny_model(913, StructureKind::Dense);
+        let coord = Coordinator::new(vec![("m".into(), model)], test_cfg(2)).unwrap();
+        let req = GenerateRequest::builder(vec![1, 2])
+            .max_tokens(4)
+            .deadline(Duration::ZERO)
+            .build();
+        let (_, h) = coord.submit_request("m", req).unwrap();
+        assert!(matches!(h.recv(), Err(ServeError::DeadlineExceeded)));
+        let req = GenerateRequest::builder(vec![1, 2])
+            .max_tokens(4)
+            .queue_timeout(Duration::ZERO)
+            .build();
+        let (_, h) = coord.submit_request("m", req).unwrap();
+        assert!(matches!(h.recv(), Err(ServeError::QueueTimeout)));
+        // The engine stays healthy and the gauge is balanced.
+        let resp = coord.generate("m", vec![1, 2], 3).unwrap();
+        assert_eq!(resp.generated, 3);
+        let snap = coord.metrics.snapshot();
+        assert_eq!(snap.expired, 2);
+        assert_eq!(snap.requests, 1, "expired requests are not 'served'");
+        assert_eq!(snap.queue_depth, 0);
         coord.shutdown();
     }
 }

@@ -302,7 +302,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let vocab = models[0].1.cfg.vocab;
     let mut cfg = CoordinatorConfig::with_max_seqs(slots);
     cfg.batcher.max_batch = max_batch;
-    let coord = Coordinator::new(models, cfg);
+    let coord = Coordinator::new(models, cfg)?;
     let variants = coord.variants();
     println!("serving variants: {variants:?}");
     let t0 = std::time::Instant::now();
@@ -362,7 +362,7 @@ fn cmd_stats(args: &Args) -> Result<()> {
         )]
     };
     let vocab = models[0].1.cfg.vocab;
-    let coord = Coordinator::new(models, CoordinatorConfig::with_max_seqs(slots));
+    let coord = Coordinator::new(models, CoordinatorConfig::with_max_seqs(slots))?;
     let variants = coord.variants();
     println!("self-drive: {n_requests} requests x {new_tokens} tokens...");
     let mut handles = Vec::new();

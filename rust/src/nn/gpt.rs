@@ -238,6 +238,9 @@ impl TinyLM {
         if tokens.is_empty() {
             return None;
         }
+        // Chaos site: a panic here unwinds with the sequence admitted
+        // but unprefilled — the caller must free its blocks.
+        crate::fail_point!("model.prefill");
         let pos0 = mgr.seq_len(h);
         let d = self.cfg.d_model;
         let mut x = Matrix::zeros(tokens.len(), d);
@@ -388,6 +391,10 @@ impl TinyLM {
             logits.reset(0, self.cfg.vocab);
             return;
         }
+        // Chaos site: a panic here unwinds mid-batch. Replaying the
+        // step per sequence is safe: `prepare_append` is idempotent
+        // until `commit_append`, and row writes overwrite in place.
+        crate::fail_point!("model.step");
         let d = self.cfg.d_model;
         let mut x = arena.take_matrix(toks.len(), d);
         for (t, (&tok, &h)) in toks.iter().zip(handles).enumerate() {

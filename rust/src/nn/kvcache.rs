@@ -409,6 +409,10 @@ impl KvBlockManager {
     /// from). Returns `None` (claiming nothing) when the arena cannot
     /// reserve the full budget.
     pub fn admit(&mut self, tokens: &[usize], max_total_len: usize) -> Option<SeqAdmit> {
+        // Chaos site: simulated allocation exhaustion. `None` here is
+        // indistinguishable from a genuinely full arena, so callers'
+        // retry/preemption paths get exercised with zero state claimed.
+        crate::fail_point!("kv.alloc", return None);
         let bs = self.block_size;
         let budget = max_total_len.max(tokens.len()).div_ceil(bs);
         // Phase 1: peek the radix tree (no claims yet).
@@ -591,6 +595,9 @@ impl KvBlockManager {
     /// tail blocks (copy-on-extend), never back into a shared one. Call
     /// once after prefill, passing the full prompt.
     pub fn cache_prefix(&mut self, h: SeqHandle, tokens: &[usize]) {
+        // Chaos site: a lost insert only costs later admissions their
+        // prefix hits — correctness must not depend on cache population.
+        crate::fail_point!("prefix.insert", return);
         debug_assert!(self.handle_ok(h), "cache_prefix on invalid handle {h:?}");
         let idx = h.idx as usize;
         let bs = self.block_size;
@@ -650,6 +657,9 @@ impl KvBlockManager {
     /// refs(child): any unreferenced cached subtree exposes at least one
     /// unreferenced leaf, and repeated eviction reclaims all of it.
     fn evict_one(&mut self) -> Option<u32> {
+        // Chaos site: eviction refusing to yield a block surfaces as
+        // allocation pressure at the call sites above it.
+        crate::fail_point!("prefix.evict", return None);
         let mut best: Option<usize> = None; // node index
         for (b, m) in self.meta.iter().enumerate() {
             let Some(n) = m.node else { continue };
@@ -1095,4 +1105,96 @@ mod tests {
         assert_ne!(b.handle.gen, first.gen, "generation advanced");
         mgr.free(b.handle);
     }
+
+    // ---- preempt / free / resume interleavings (the serving tier's
+    // KV-pressure preemption is exactly this sequence of manager calls:
+    // free mid-decode, re-admit prompt+generated, continue appending) ----
+
+    #[test]
+    fn preempt_free_resume_roundtrip_restores_capacity() {
+        let mut mgr = KvBlockManager::new(2, 6, 4, 2);
+        let prompt: Vec<usize> = (30..39).collect(); // 9 tokens, bs 4
+        let a = mgr.admit(&prompt, 16).unwrap();
+        append_rows(&mut mgr, a.handle, 9, 0.0);
+        mgr.cache_prefix(a.handle, &prompt);
+        // "Decode" three tokens past the prompt, then preempt: free the
+        // handle with the sequence mid-flight.
+        append_rows(&mut mgr, a.handle, 3, 0.0);
+        let stale = a.handle;
+        mgr.free(a.handle);
+        assert_eq!(mgr.active_seqs(), 0);
+        // Resume: prompt + generated re-admitted as one longer prompt.
+        // The cached prompt blocks serve the shared span.
+        let resumed: Vec<usize> = prompt.iter().copied().chain([100, 101, 102]).collect();
+        let b = mgr.admit(&resumed, 16).unwrap();
+        assert_eq!(b.cached_tokens, 8, "preempted seq resumes over its own cached prefix");
+        // Re-prefill the uncached tail, continue decoding, then retire.
+        append_rows(&mut mgr, b.handle, 4, 0.0);
+        check_rows(&mut mgr, b.handle, 8, 0.0);
+        append_rows(&mut mgr, b.handle, 2, 0.0);
+        mgr.free(b.handle);
+        // The stale pre-preemption handle must stay dead even though the
+        // slot was reused (generation tag), without corrupting anything.
+        assert_eq!(mgr.active_seqs(), 0);
+        assert_eq!(
+            mgr.free_blocks() + mgr.reclaimable_blocks(),
+            6,
+            "every block is free or reclaimable after the roundtrip"
+        );
+        let _ = stale;
+        assert_eq!(mgr.stats().bad_frees, 0);
+    }
+
+    #[test]
+    fn freed_preempted_blocks_satisfy_the_starving_admission() {
+        // The scenario preemption exists for: an undersized arena where
+        // the queue head cannot reserve its budget until a victim frees.
+        let mut mgr = KvBlockManager::new(1, 4, 2, 2);
+        let a = mgr.admit(&[1, 2, 3], 8).unwrap(); // 4-block budget
+        append_rows(&mut mgr, a.handle, 3, 0.0);
+        assert!(mgr.admit(&[7, 8], 6).is_none(), "head starves: arena fully reserved");
+        assert!(!mgr.can_admit(6));
+        mgr.free(a.handle); // preempt the victim
+        let b = mgr.admit(&[7, 8], 6).unwrap(); // head admits on freed blocks
+        append_rows(&mut mgr, b.handle, 2, 5.0);
+        check_rows(&mut mgr, b.handle, 2, 5.0);
+        mgr.free(b.handle);
+        assert_eq!(mgr.stats().bad_frees, 0);
+    }
+
+    #[test]
+    fn resume_with_shared_refs_held_by_a_second_sequence() {
+        // Preemption must not disturb another live sequence sharing the
+        // victim's cached prompt blocks.
+        let mut mgr = KvBlockManager::new(1, 10, 4, 2);
+        let prompt: Vec<usize> = (0..9).collect();
+        let a = mgr.admit(&prompt, 16).unwrap();
+        append_rows(&mut mgr, a.handle, 9, 0.0);
+        mgr.cache_prefix(a.handle, &prompt);
+        let b = mgr.admit(&prompt, 12).unwrap();
+        assert_eq!(b.cached_tokens, 8);
+        append_rows(&mut mgr, b.handle, 1, 0.0); // b's private tail
+        let shared = mgr.block_table(a.handle)[0];
+        assert_eq!(mgr.block_refs(shared), 2);
+        // Preempt A mid-decode; B keeps the shared blocks alive.
+        append_rows(&mut mgr, a.handle, 2, 0.0);
+        mgr.free(a.handle);
+        assert_eq!(mgr.block_refs(shared), 1, "B still references the shared prefix");
+        check_rows(&mut mgr, b.handle, 8, 0.0);
+        // A resumes and re-joins the shared chain.
+        let resumed: Vec<usize> = prompt.iter().copied().chain([50, 51]).collect();
+        let a2 = mgr.admit(&resumed, 16).unwrap();
+        assert_eq!(a2.cached_tokens, 8);
+        assert_eq!(mgr.block_refs(shared), 2);
+        mgr.free(a2.handle);
+        mgr.free(b.handle);
+        assert_eq!(mgr.active_seqs(), 0);
+        assert_eq!(mgr.stats().bad_frees, 0);
+    }
+
+    // The armed-failpoint behaviour of the `kv.alloc` / `prefix.*`
+    // sites is covered in `tests/chaos.rs`: the registry is
+    // process-global, so arming it here would race the other lib tests'
+    // serving traffic (the chaos binary runs single-threaded in its own
+    // process).
 }

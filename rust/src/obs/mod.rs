@@ -707,6 +707,12 @@ pub mod well_known {
         kv_bad_frees,
         "kv_bad_frees"
     );
+    counter_fn!(
+        /// Failpoint fires across all sites (`util::failpoint`). Zero
+        /// unless `BLAST_FAILPOINTS` armed fault injection.
+        failpoint_triggers,
+        "failpoint_triggers"
+    );
     gauge_fn!(
         /// Pooled bytes high-water across all scratch arenas.
         arena_pooled_bytes_high_water,

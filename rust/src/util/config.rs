@@ -83,6 +83,25 @@ pub struct EngineConfig {
     /// Extra KV blocks kept beyond `max_seqs × ceil(max_seq/block)` as
     /// prefix-cache headroom (`BLAST_KV_CACHE_BLOCKS`).
     pub kv_cache_blocks: usize,
+    /// Override the **total** KV block arena size, replacing the
+    /// `max_seqs × ceil(max_seq/block) + kv_cache_blocks` sizing rule
+    /// (`BLAST_KV_BLOCKS_TOTAL`). `None` = derived sizing. An
+    /// undersized arena is how KV pressure — and therefore preemption —
+    /// is provoked; the derived sizing can never starve admission.
+    pub kv_total_blocks: Option<usize>,
+    /// Bound on the per-worker pending queue; arrivals beyond it are
+    /// shed with `ServeError::Overloaded` (`BLAST_MAX_PENDING`).
+    pub max_pending: usize,
+    /// Consecutive scheduling steps the queue head may starve on KV
+    /// blocks before the youngest active sequence is preempted to make
+    /// room; `0` disables preemption (`BLAST_PREEMPT_AFTER`).
+    pub preempt_after: usize,
+    /// Failpoint spec, `site=action[prob][count],...`
+    /// (`BLAST_FAILPOINTS`); `None` = fault injection disarmed.
+    pub failpoints: Option<String>,
+    /// Base seed for the deterministic per-site failpoint probability
+    /// streams (`BLAST_FAILPOINT_SEED`).
+    pub failpoint_seed: u64,
 }
 
 impl Default for EngineConfig {
@@ -102,6 +121,11 @@ impl Default for EngineConfig {
             max_batch: 8,
             kv_block_size: 16,
             kv_cache_blocks: 32,
+            kv_total_blocks: None,
+            max_pending: 256,
+            preempt_after: 4,
+            failpoints: None,
+            failpoint_seed: 0xB1A57,
         }
     }
 }
@@ -156,6 +180,19 @@ impl EngineConfig {
         if let Some(n) = env_parse::<usize>("BLAST_KV_CACHE_BLOCKS") {
             cfg.kv_cache_blocks = n;
         }
+        if let Some(n) = env_parse::<usize>("BLAST_KV_BLOCKS_TOTAL") {
+            cfg.kv_total_blocks = Some(n.max(1));
+        }
+        if let Some(n) = env_parse::<usize>("BLAST_MAX_PENDING") {
+            cfg.max_pending = n.max(1);
+        }
+        if let Some(n) = env_parse::<usize>("BLAST_PREEMPT_AFTER") {
+            cfg.preempt_after = n;
+        }
+        cfg.failpoints = env_nonempty("BLAST_FAILPOINTS");
+        if let Some(n) = env_parse::<u64>("BLAST_FAILPOINT_SEED") {
+            cfg.failpoint_seed = n;
+        }
         cfg
     }
 
@@ -184,6 +221,9 @@ mod tests {
         assert!(cfg.pack_cache_mb.is_none());
         assert!(cfg.max_seqs >= 1 && cfg.max_batch >= 1);
         assert!(cfg.kv_block_size >= 1);
+        assert!(cfg.kv_total_blocks.is_none());
+        assert!(cfg.max_pending >= 1);
+        assert!(cfg.failpoints.is_none());
     }
 
     #[test]

@@ -1,0 +1,353 @@
+//! Deterministic fault injection (`fail_point!` sites).
+//!
+//! A failpoint is a named site in engine code — `fail_point!("kv.alloc")`
+//! — that is a **no-op unless armed**: the fast path is one relaxed
+//! atomic load of a process-global `ARMED` flag, so leaving the sites in
+//! release builds costs nothing measurable. Arming happens either from
+//! the environment (`BLAST_FAILPOINTS` through
+//! [`EngineConfig`](crate::util::config::EngineConfig), parsed lazily on
+//! the first site evaluation) or programmatically from tests via
+//! [`configure`] / [`clear`].
+//!
+//! ## Spec grammar
+//!
+//! ```text
+//! BLAST_FAILPOINTS = entry ("," entry)*
+//! entry            = site "=" action [ "[" prob "]" [ "[" count "]" ] ]
+//! action           = "fail" | "panic" | "sleep:" millis
+//! ```
+//!
+//! * `fail` — the site's `fail_point!` evaluates *triggered*: the caller
+//!   runs its failure arm (e.g. `kv.alloc=fail` makes `admit` report
+//!   out-of-blocks).
+//! * `panic` — panic at the site (exercises the worker's `catch_unwind`
+//!   isolation).
+//! * `sleep:MS` — block the site for `MS` milliseconds (deadline and
+//!   queue-timeout testing), then continue untriggered.
+//! * `prob` — fire probability in `[0, 1]` (default `1.0`). The roll is
+//!   a per-site xorshift64 stream seeded from `failpoint_seed` mixed
+//!   with an FNV-1a hash of the site name, so a given
+//!   `(seed, site, call-index)` always rolls the same way — chaos runs
+//!   are reproducible.
+//! * `count` — maximum number of fires (default unlimited); after that
+//!   the site goes quiet.
+//!
+//! Example: `BLAST_FAILPOINTS=kv.alloc=fail[0.5][20],model.step=panic[0.1]`.
+//!
+//! Every fire increments the obs counter `failpoint_triggers` and a
+//! per-site cumulative count readable via [`triggered`] (which survives
+//! [`clear`], so tests can disarm and then assert on what fired).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, Once, OnceLock};
+
+/// What an armed site does when its probability roll fires.
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum Action {
+    /// Report "triggered" to the caller (it runs its failure arm).
+    Fail,
+    /// Panic at the site.
+    Panic,
+    /// Sleep this many milliseconds, then report "not triggered".
+    Sleep(u64),
+}
+
+#[derive(Debug)]
+struct Site {
+    action: Action,
+    /// Fire probability in [0, 1].
+    prob: f64,
+    /// Remaining fires; `None` = unlimited.
+    remaining: Option<u64>,
+    /// Per-site xorshift64 state (deterministic probability stream).
+    rng: u64,
+}
+
+/// Fast-path arm flag: one relaxed load when no failpoints are
+/// configured (the common case — production and every non-chaos test).
+static ARMED: AtomicBool = AtomicBool::new(false);
+
+/// One-time environment arming (`BLAST_FAILPOINTS` via `EngineConfig`).
+static ENV_INIT: Once = Once::new();
+
+fn sites() -> &'static Mutex<HashMap<String, Site>> {
+    static S: OnceLock<Mutex<HashMap<String, Site>>> = OnceLock::new();
+    S.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Cumulative per-site fire counts; survives [`clear`] so tests can
+/// disarm first and assert afterwards.
+fn fired() -> &'static Mutex<HashMap<String, u64>> {
+    static F: OnceLock<Mutex<HashMap<String, u64>>> = OnceLock::new();
+    F.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Lock helper tolerant of poisoning: a panic-action site panics *after*
+/// releasing the lock, but a chaos test thread dying elsewhere while
+/// holding it must not wedge every later evaluation.
+fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// FNV-1a over the site name: mixes the name into the seed so distinct
+/// sites get distinct deterministic probability streams.
+fn fnv1a(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+fn xorshift64(state: &mut u64) -> u64 {
+    let mut x = *state;
+    x ^= x << 13;
+    x ^= x >> 7;
+    x ^= x << 17;
+    *state = x;
+    x
+}
+
+/// Parse one `site=action[prob][count]` entry. Returns `None` (entry
+/// ignored, matching `EngineConfig`'s forgiving parse policy) on
+/// malformed input.
+fn parse_entry(entry: &str, seed: u64) -> Option<(String, Site)> {
+    let (site, rest) = entry.split_once('=')?;
+    let site = site.trim();
+    if site.is_empty() {
+        return None;
+    }
+    let mut rest = rest.trim();
+    // Peel trailing [..] groups off the action, innermost-last:
+    // action[prob][count] | action[prob] | action.
+    let mut brackets: Vec<&str> = Vec::new();
+    while let Some(open) = rest.rfind('[') {
+        if !rest.ends_with(']') {
+            return None;
+        }
+        brackets.push(&rest[open + 1..rest.len() - 1]);
+        rest = rest[..open].trim_end();
+    }
+    brackets.reverse(); // now [prob, count] order
+    if brackets.len() > 2 {
+        return None;
+    }
+    let prob = match brackets.first() {
+        Some(p) => {
+            let p: f64 = p.trim().parse().ok()?;
+            if !(0.0..=1.0).contains(&p) {
+                return None;
+            }
+            p
+        }
+        None => 1.0,
+    };
+    let remaining = match brackets.get(1) {
+        Some(c) => Some(c.trim().parse::<u64>().ok()?),
+        None => None,
+    };
+    let action = if rest == "fail" {
+        Action::Fail
+    } else if rest == "panic" {
+        Action::Panic
+    } else if let Some(ms) = rest.strip_prefix("sleep:") {
+        Action::Sleep(ms.trim().parse().ok()?)
+    } else {
+        return None;
+    };
+    // Seed the per-site stream; xorshift needs nonzero state.
+    let rng = (seed ^ fnv1a(site)) | 1;
+    Some((site.to_string(), Site { action, prob, remaining, rng }))
+}
+
+/// Arm the registry from a spec string (replaces any previous
+/// configuration). Sites are seeded from the engine's `failpoint_seed`,
+/// so the same spec + seed reproduces the same fire pattern.
+pub fn configure(spec: &str) {
+    // Make sure a later first-eval doesn't stomp a test's explicit
+    // configuration with the (empty) environment one.
+    ENV_INIT.call_once(|| {});
+    let seed = crate::util::config::EngineConfig::global().failpoint_seed;
+    let mut map = HashMap::new();
+    for entry in spec.split(',') {
+        let entry = entry.trim();
+        if entry.is_empty() {
+            continue;
+        }
+        if let Some((name, site)) = parse_entry(entry, seed) {
+            map.insert(name, site);
+        }
+    }
+    let armed = !map.is_empty();
+    *lock(sites()) = map;
+    ARMED.store(armed, Ordering::Relaxed);
+}
+
+/// Disarm every site (fire counts are retained — see [`triggered`]).
+pub fn clear() {
+    ENV_INIT.call_once(|| {});
+    lock(sites()).clear();
+    ARMED.store(false, Ordering::Relaxed);
+}
+
+/// Cumulative fires for a site across the process lifetime (including
+/// sites since [`clear`]ed or reconfigured).
+pub fn triggered(site: &str) -> u64 {
+    lock(fired()).get(site).copied().unwrap_or(0)
+}
+
+/// Evaluate a failpoint site. Returns `true` when the site fired with
+/// the `fail` action (callers run their failure arm); `panic` fires
+/// unwind from inside, and `sleep` delays then returns `false`. Not
+/// armed / unknown site / probability roll missed: `false`.
+pub fn eval(site: &str) -> bool {
+    ENV_INIT.call_once(|| {
+        let cfg = crate::util::config::EngineConfig::global();
+        if let Some(spec) = &cfg.failpoints {
+            configure(spec);
+        }
+    });
+    if !ARMED.load(Ordering::Relaxed) {
+        return false;
+    }
+    eval_slow(site)
+}
+
+#[cold]
+fn eval_slow(site: &str) -> bool {
+    let action = {
+        let mut map = lock(sites());
+        let Some(s) = map.get_mut(site) else { return false };
+        if s.remaining == Some(0) {
+            return false;
+        }
+        if s.prob < 1.0 {
+            // 53-bit uniform in [0, 1).
+            let roll = (xorshift64(&mut s.rng) >> 11) as f64 / (1u64 << 53) as f64;
+            if roll >= s.prob {
+                return false;
+            }
+        }
+        if let Some(n) = &mut s.remaining {
+            *n -= 1;
+        }
+        s.action
+        // Lock drops here: panic/sleep must not poison or hold it.
+    };
+    *lock(fired()).entry(site.to_string()).or_insert(0) += 1;
+    crate::obs::well_known::failpoint_triggers().inc();
+    match action {
+        Action::Fail => true,
+        Action::Sleep(ms) => {
+            std::thread::sleep(std::time::Duration::from_millis(ms));
+            false
+        }
+        Action::Panic => panic!("failpoint '{site}' injected panic"),
+    }
+}
+
+/// Evaluate a failpoint site by name. Expands to a plain `eval` call —
+/// the no-op-unless-armed check is one relaxed atomic load. The
+/// two-argument form runs `$on_fail` (e.g. `return None`) when the site
+/// fires with the `fail` action.
+#[macro_export]
+macro_rules! fail_point {
+    ($name:expr) => {
+        $crate::util::failpoint::eval($name);
+    };
+    ($name:expr, $on_fail:expr) => {
+        if $crate::util::failpoint::eval($name) {
+            $on_fail;
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The registry is process-global; serialize these tests against
+    /// each other (other suites never arm these site names).
+    fn guard() -> std::sync::MutexGuard<'static, ()> {
+        static G: OnceLock<Mutex<()>> = OnceLock::new();
+        lock(G.get_or_init(|| Mutex::new(())))
+    }
+
+    #[test]
+    fn unarmed_site_is_noop() {
+        let _g = guard();
+        clear();
+        assert!(!eval("fp.test.unarmed"));
+    }
+
+    #[test]
+    fn fail_action_fires_and_counts() {
+        let _g = guard();
+        configure("fp.test.fail=fail");
+        let before = triggered("fp.test.fail");
+        assert!(eval("fp.test.fail"));
+        assert!(eval("fp.test.fail"));
+        clear();
+        assert_eq!(triggered("fp.test.fail"), before + 2, "counts survive clear");
+        assert!(!eval("fp.test.fail"), "disarmed after clear");
+    }
+
+    #[test]
+    fn count_limit_exhausts() {
+        let _g = guard();
+        configure("fp.test.count=fail[1][3]");
+        let fires = (0..10).filter(|_| eval("fp.test.count")).count();
+        clear();
+        assert_eq!(fires, 3);
+    }
+
+    #[test]
+    fn probability_stream_is_deterministic() {
+        let _g = guard();
+        configure("fp.test.prob=fail[0.5][1000]");
+        let a: Vec<bool> = (0..64).map(|_| eval("fp.test.prob")).collect();
+        // Re-configuring reseeds the site: the same stream replays.
+        configure("fp.test.prob=fail[0.5][1000]");
+        let b: Vec<bool> = (0..64).map(|_| eval("fp.test.prob")).collect();
+        clear();
+        assert_eq!(a, b);
+        let fires = a.iter().filter(|x| **x).count();
+        assert!(fires > 10 && fires < 54, "p=0.5 over 64 rolls fired {fires}");
+    }
+
+    #[test]
+    fn sleep_action_delays_without_firing_caller_arm() {
+        let _g = guard();
+        configure("fp.test.sleep=sleep:5");
+        let t0 = std::time::Instant::now();
+        assert!(!eval("fp.test.sleep"), "sleep evaluates untriggered");
+        clear();
+        assert!(t0.elapsed() >= std::time::Duration::from_millis(5));
+    }
+
+    #[test]
+    fn malformed_entries_are_ignored() {
+        let _g = guard();
+        configure("nonsense,fp.test.bad=explode,=fail,fp.test.badprob=fail[2.0]");
+        assert!(!eval("fp.test.bad"));
+        assert!(!eval("fp.test.badprob"));
+        // A well-formed entry among garbage still arms.
+        configure("garbage,fp.test.ok=fail");
+        assert!(eval("fp.test.ok"));
+        clear();
+    }
+
+    #[test]
+    fn parse_spec_shapes() {
+        let (name, s) = parse_entry("a.b=sleep:25[0.25][7]", 1).unwrap();
+        assert_eq!(name, "a.b");
+        assert_eq!(s.action, Action::Sleep(25));
+        assert!((s.prob - 0.25).abs() < 1e-12);
+        assert_eq!(s.remaining, Some(7));
+        assert!(parse_entry("a.b=fail[0.5][x]", 1).is_none());
+        assert!(parse_entry("a.b=fail[0.5][1][2]", 1).is_none());
+        assert!(parse_entry("a.b", 1).is_none());
+    }
+}

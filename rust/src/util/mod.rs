@@ -12,9 +12,12 @@
 //! * [`check`] — seeded random-input property testing (proptest-lite).
 //! * [`config`] — typed engine configuration (`EngineConfig`): one
 //!   struct holding every `BLAST_*` knob, resolved once at startup.
+//! * [`failpoint`] — deterministic fault injection (`fail_point!`
+//!   sites, armed via `BLAST_FAILPOINTS`; no-op otherwise).
 
 pub mod arena;
 pub mod config;
+pub mod failpoint;
 pub mod par;
 pub mod json;
 pub mod cli;

@@ -1,0 +1,339 @@
+//! Chaos suite: deterministic fault injection against the serving tier.
+//!
+//! Each test arms `util::failpoint` sites (or undersizes the KV arena)
+//! and asserts the fault-tolerance contract:
+//!
+//! * **no handle ever hangs** — every submitted request terminates with
+//!   `Done` or a typed [`ServeError`];
+//! * **no KV leaks** — the queue-depth gauge returns to zero and
+//!   `kv_bad_frees` stays flat across every failure path;
+//! * **faults only delay or fail, never corrupt** — once disarmed (or
+//!   when the fault is survivable, like alloc failures and preemption)
+//!   generated tokens are bit-identical to per-request
+//!   `TinyLM::generate`.
+//!
+//! The failpoint registry is process-global, so the suite serializes
+//! every test behind one mutex AND the CI job runs this binary with
+//! `--test-threads=1`. Armed-site tests live here — never in parallel
+//! lib tests — for exactly that reason.
+
+use blast_repro::coordinator::{
+    BatcherConfig, Coordinator, CoordinatorConfig, EngineConfig, GenerateRequest, ServeError,
+};
+use blast_repro::nn::attention::StructureKind;
+use blast_repro::nn::gpt::{LmConfig, TinyLM};
+use blast_repro::nn::kvcache::KvBlockManager;
+use blast_repro::obs::well_known as wk;
+use blast_repro::tensor::Rng;
+use blast_repro::util::failpoint;
+use std::sync::{Mutex, MutexGuard, OnceLock};
+use std::time::Duration;
+
+/// Serialize tests against the process-global failpoint registry.
+/// Poison-tolerant: a failed assertion in one test must not wedge the
+/// rest of the suite.
+fn guard() -> MutexGuard<'static, ()> {
+    static G: OnceLock<Mutex<()>> = OnceLock::new();
+    G.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+}
+
+fn tiny(seed: u64, s: StructureKind) -> TinyLM {
+    let mut rng = Rng::new(seed);
+    TinyLM::new(LmConfig::tiny(s), &mut rng)
+}
+
+/// EngineConfig::default() (not global()) keeps the test geometry fixed
+/// regardless of BLAST_* env in CI.
+fn engine(max_seqs: usize) -> EngineConfig {
+    EngineConfig { max_seqs, ..EngineConfig::default() }
+}
+
+fn coord(model: TinyLM, engine: EngineConfig) -> Coordinator {
+    Coordinator::new(
+        vec![("m".into(), model)],
+        CoordinatorConfig { batcher: BatcherConfig::default(), engine },
+    )
+    .unwrap()
+}
+
+#[test]
+fn kv_alloc_failpoint_simulates_exhaustion_without_claims() {
+    let _g = guard();
+    failpoint::clear();
+    let mut mgr = KvBlockManager::new(2, 8, 4, 16);
+    let free0 = mgr.free_blocks();
+    failpoint::configure("kv.alloc=fail[1][1]");
+    assert!(
+        mgr.admit(&[1, 2, 3], 8).is_none(),
+        "armed kv.alloc site reports out-of-blocks"
+    );
+    assert_eq!(mgr.free_blocks(), free0, "failed admit claimed nothing");
+    // The site's count is exhausted: the very next admit succeeds.
+    let adm = mgr.admit(&[1, 2, 3], 8).expect("site exhausted after one fire");
+    mgr.free(adm.handle);
+    failpoint::clear();
+    assert_eq!(mgr.free_blocks(), free0);
+    assert!(failpoint::triggered("kv.alloc") >= 1);
+}
+
+#[test]
+fn alloc_faults_delay_admission_but_never_corrupt_output() {
+    let _g = guard();
+    failpoint::clear();
+    let model = tiny(7001, StructureKind::Blast { b: 2, r: 4 });
+    let reference = model.clone();
+    let prompts: Vec<Vec<usize>> =
+        (0..8usize).map(|i| vec![1 + i % 5, 2 + i % 7, 3]).collect();
+    let expected: Vec<Vec<usize>> =
+        prompts.iter().map(|p| reference.generate(p, 5)).collect();
+    let bad0 = wk::kv_bad_frees().get();
+    let c = coord(model, engine(2));
+    // Every other admission reports out-of-blocks for a while: requests
+    // retry (and may be preempted under the injected starvation), but
+    // all of them must finish with exactly the fault-free tokens.
+    failpoint::configure("kv.alloc=fail[0.5][20]");
+    let handles: Vec<_> = prompts
+        .iter()
+        .map(|p| c.submit("m", p.clone(), 5).unwrap().1)
+        .collect();
+    for (i, h) in handles.into_iter().enumerate() {
+        let resp = h.recv().expect("alloc faults only delay admission");
+        assert_eq!(resp.tokens, expected[i], "request {i} bit-identical under alloc faults");
+    }
+    failpoint::clear();
+    assert_eq!(wk::kv_bad_frees().get(), bad0, "no bad frees under alloc faults");
+    assert_eq!(c.metrics.snapshot().queue_depth, 0, "gauge balanced");
+    c.shutdown();
+}
+
+#[test]
+fn step_panics_poison_only_the_offending_requests() {
+    let _g = guard();
+    failpoint::clear();
+    let model = tiny(7002, StructureKind::Dense);
+    let reference = model.clone();
+    let prompts: Vec<Vec<usize>> =
+        (0..10usize).map(|i| vec![1 + i % 6, 4, 2 + i % 3]).collect();
+    let expected: Vec<Vec<usize>> =
+        prompts.iter().map(|p| reference.generate(p, 6)).collect();
+    let bad0 = wk::kv_bad_frees().get();
+    let c = coord(model, engine(4));
+    // The batched decode step panics ~30% of the time (6 fires max).
+    // The worker must catch each panic, replay sequences in isolation,
+    // quarantine any that panic alone, and keep serving.
+    failpoint::configure("model.step=panic[0.3][6]");
+    let handles: Vec<_> = prompts
+        .iter()
+        .map(|p| c.submit("m", p.clone(), 6).unwrap().1)
+        .collect();
+    let mut served = 0usize;
+    let mut poisoned = 0usize;
+    for (i, h) in handles.into_iter().enumerate() {
+        match h.recv() {
+            Ok(resp) => {
+                served += 1;
+                // Survivors of the isolation replay are bit-identical.
+                assert_eq!(resp.tokens, expected[i], "survivor {i} parity");
+            }
+            Err(ServeError::Poisoned(msg)) => {
+                poisoned += 1;
+                assert!(msg.contains("failpoint"), "payload propagated: {msg}");
+            }
+            Err(e) => panic!("unexpected error under step panics: {e}"),
+        }
+    }
+    failpoint::clear();
+    assert_eq!(served + poisoned, 10, "every request terminated");
+    assert!(failpoint::triggered("model.step") >= 1, "at least one panic injected");
+    let snap = c.metrics.snapshot();
+    assert_eq!(snap.poisoned as usize, poisoned);
+    assert_eq!(snap.queue_depth, 0, "gauge balanced across poison paths");
+    assert_eq!(wk::kv_bad_frees().get(), bad0, "quarantine freed cleanly");
+    // The worker survived the chaos: disarmed, it serves the same
+    // prompts bit-identically (no lingering KV corruption).
+    for (i, p) in prompts.iter().enumerate() {
+        let resp = c.generate("m", p.clone(), 6).unwrap();
+        assert_eq!(resp.tokens, expected[i], "post-chaos parity {i}");
+    }
+    c.shutdown();
+}
+
+#[test]
+fn prefill_panic_poisons_exactly_one_request() {
+    let _g = guard();
+    failpoint::clear();
+    let model = tiny(7003, StructureKind::Dense);
+    let reference = model.clone();
+    let expected = reference.generate(&[3, 1, 4], 4);
+    let c = coord(model, engine(2));
+    failpoint::configure("model.prefill=panic[1][1]");
+    let (_, h) = c.submit("m", vec![3, 1, 4], 4).unwrap();
+    assert!(
+        matches!(h.recv(), Err(ServeError::Poisoned(_))),
+        "prefill panic must surface as Poisoned"
+    );
+    // Count 1: the site is spent, the worker is healthy.
+    let resp = c.generate("m", vec![3, 1, 4], 4).unwrap();
+    assert_eq!(resp.tokens, expected);
+    failpoint::clear();
+    let snap = c.metrics.snapshot();
+    assert_eq!(snap.poisoned, 1);
+    assert_eq!(snap.requests, 1, "poisoned requests are not 'served'");
+    assert_eq!(snap.queue_depth, 0);
+    c.shutdown();
+}
+
+#[test]
+fn deadline_expires_mid_decode_under_slow_steps() {
+    let _g = guard();
+    failpoint::clear();
+    let c = coord(tiny(7004, StructureKind::Dense), engine(2));
+    // Each decode iteration stalls 20ms; a 50ms deadline on a 50-token
+    // request must expire between steps, not run to completion.
+    failpoint::configure("worker.step=sleep:20");
+    let req = GenerateRequest::builder(vec![1, 2, 3])
+        .max_tokens(50)
+        .deadline(Duration::from_millis(50))
+        .build();
+    let (_, h) = c.submit_request("m", req).unwrap();
+    assert!(matches!(h.recv(), Err(ServeError::DeadlineExceeded)));
+    failpoint::clear();
+    let resp = c.generate("m", vec![1, 2, 3], 3).unwrap();
+    assert_eq!(resp.generated, 3, "worker healthy after expiry");
+    let snap = c.metrics.snapshot();
+    assert!(snap.expired >= 1);
+    assert_eq!(snap.queue_depth, 0);
+    c.shutdown();
+}
+
+#[test]
+fn queue_timeout_expires_waiting_request_behind_busy_worker() {
+    let _g = guard();
+    failpoint::clear();
+    let c = coord(tiny(7005, StructureKind::Dense), engine(4));
+    failpoint::configure("worker.step=sleep:20");
+    // Plug the step loop, then submit a request that only tolerates
+    // 1ms of queueing: it is drained and swept mid-plug, ≥ one 20ms
+    // step after submission.
+    let plug = c.submit("m", vec![1, 2], 10).unwrap().1;
+    std::thread::sleep(Duration::from_millis(5));
+    let req = GenerateRequest::builder(vec![3, 4])
+        .max_tokens(4)
+        .queue_timeout(Duration::from_millis(1))
+        .build();
+    let (_, h) = c.submit_request("m", req).unwrap();
+    assert!(matches!(h.recv(), Err(ServeError::QueueTimeout)));
+    plug.recv().expect("plug request unaffected");
+    failpoint::clear();
+    let snap = c.metrics.snapshot();
+    assert!(snap.expired >= 1);
+    assert_eq!(snap.queue_depth, 0);
+    c.shutdown();
+}
+
+#[test]
+fn overload_sheds_past_the_pending_bound() {
+    let _g = guard();
+    failpoint::clear();
+    let mut eng = engine(2);
+    eng.max_pending = 2;
+    let c = coord(tiny(7006, StructureKind::Dense), eng);
+    failpoint::configure("worker.step=sleep:5");
+    // Plug the worker, then burst far past the pending bound: the
+    // chunked drain must keep at most 2 queued and shed the rest with
+    // Overloaded — and the shed handles get their terminal event
+    // immediately, not after the plug finishes.
+    let plug = c.submit("m", vec![1, 2], 40).unwrap().1;
+    std::thread::sleep(Duration::from_millis(10));
+    let burst: Vec<_> = (0..30usize)
+        .map(|i| c.submit("m", vec![1 + i % 5], 4).unwrap().1)
+        .collect();
+    let mut ok = 0usize;
+    let mut shed = 0usize;
+    for h in burst {
+        match h.recv() {
+            Ok(_) => ok += 1,
+            Err(ServeError::Overloaded { limit }) => {
+                assert_eq!(limit, 2);
+                shed += 1;
+            }
+            Err(e) => panic!("unexpected error under overload: {e}"),
+        }
+    }
+    plug.recv().expect("plug request unaffected by the shed burst");
+    failpoint::clear();
+    assert_eq!(ok + shed, 30, "every burst request terminated");
+    assert!(shed >= 10, "burst of 30 into bound 2 must shed (shed {shed})");
+    let snap = c.metrics.snapshot();
+    assert_eq!(snap.shed as usize, shed);
+    assert_eq!(snap.queue_depth, 0, "gauge balanced across shed paths");
+    c.shutdown();
+}
+
+#[test]
+fn preemption_under_kv_pressure_is_bit_identical() {
+    let _g = guard();
+    failpoint::clear();
+    let model = tiny(7007, StructureKind::Blast { b: 2, r: 4 });
+    let reference = model.clone();
+    // Undersized arena: 10 blocks of 4 positions, while each request
+    // budgets ceil((plen + 6)/4) = 4 blocks. Two sequences fill 8
+    // blocks, the queue head starves, and after 2 starved steps the
+    // youngest active sequence is preempted (blocks freed, progress
+    // retained, recompute-resumed). With the default derived sizing
+    // this path is unreachable — kv_total_blocks is what makes KV
+    // pressure real.
+    let mut eng = engine(3);
+    eng.kv_block_size = 4;
+    eng.kv_total_blocks = Some(10);
+    eng.preempt_after = 2;
+    let bad0 = wk::kv_bad_frees().get();
+    let c = coord(model, eng);
+    let jobs: Vec<Vec<usize>> = (0..8usize)
+        .map(|i| (0..6 + i % 5).map(|k| (i * 7 + k * 3 + 1) % 64).collect())
+        .collect();
+    let expected: Vec<Vec<usize>> = jobs.iter().map(|p| reference.generate(p, 6)).collect();
+    let handles: Vec<_> = jobs
+        .iter()
+        .map(|p| c.submit("m", p.clone(), 6).unwrap().1)
+        .collect();
+    for (i, h) in handles.into_iter().enumerate() {
+        let resp = h.recv().expect("preemption must never fail a request");
+        assert_eq!(
+            resp.tokens, expected[i],
+            "request {i} bit-identical across preempt/recompute-resume"
+        );
+    }
+    let snap = c.metrics.snapshot();
+    assert!(
+        snap.preempted >= 1,
+        "8 requests through a 10-block arena must preempt (got {})",
+        snap.preempted
+    );
+    assert_eq!(snap.requests, 8, "preempted-then-finished requests count once");
+    assert_eq!(snap.queue_depth, 0, "gauge balanced across preempt/readmit");
+    assert_eq!(wk::kv_bad_frees().get(), bad0, "no bad frees across preemption");
+    c.shutdown();
+}
+
+#[test]
+fn response_send_fault_cancels_like_a_vanished_client() {
+    let _g = guard();
+    failpoint::clear();
+    let c = coord(tiny(7008, StructureKind::Dense), engine(2));
+    failpoint::configure("resp.send=fail[1][1]");
+    let (_, h) = c.submit("m", vec![1, 2, 3], 4).unwrap();
+    // The dropped first-token delivery makes the worker treat the
+    // client as gone: it cancels the sequence and closes the stream
+    // without a terminal event, which recv() surfaces as WorkerGone.
+    assert!(matches!(h.recv(), Err(ServeError::WorkerGone)));
+    failpoint::clear();
+    let resp = c.generate("m", vec![1, 2, 3], 4).unwrap();
+    assert_eq!(resp.generated, 4, "worker healthy after the dropped delivery");
+    let snap = c.metrics.snapshot();
+    assert_eq!(snap.cancelled, 1);
+    assert_eq!(snap.queue_depth, 0);
+    c.shutdown();
+}

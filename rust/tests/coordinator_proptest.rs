@@ -22,6 +22,7 @@ fn mk_req(
         req: GenerateRequest::new(vec![1], 1),
         respond_to: rtx.clone(),
         enqueued_at: std::time::Instant::now(),
+        resume: None,
     }
 }
 
@@ -63,7 +64,8 @@ fn prop_request_response_pairing() {
             batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_micros(500) },
             engine: EngineConfig { max_seqs: 4, ..EngineConfig::default() },
         },
-    ));
+    )
+    .unwrap());
     property(6, |g: &mut PropGen| {
         let k = g.usize_in(1, 8);
         let jobs: Vec<(Vec<usize>, usize)> = (0..k)
@@ -97,10 +99,9 @@ fn prop_generation_deterministic_under_batching() {
     let mut rng = Rng::new(43);
     let model = TinyLM::new(LmConfig::tiny(StructureKind::Dense), &mut rng);
     let reference = model.generate(&[3, 1, 4], 6);
-    let coord = std::sync::Arc::new(Coordinator::new(
-        vec![("m".into(), model)],
-        CoordinatorConfig::default(),
-    ));
+    let coord = std::sync::Arc::new(
+        Coordinator::new(vec![("m".into(), model)], CoordinatorConfig::default()).unwrap(),
+    );
     property(5, |g: &mut PropGen| {
         // Noise requests with random content.
         let mut noise = Vec::new();
@@ -120,7 +121,8 @@ fn prop_generation_deterministic_under_batching() {
 fn prop_metrics_conserve_counts() {
     let mut rng = Rng::new(44);
     let model = TinyLM::new(LmConfig::tiny(StructureKind::Dense), &mut rng);
-    let coord = Coordinator::new(vec![("m".into(), model)], CoordinatorConfig::default());
+    let coord =
+        Coordinator::new(vec![("m".into(), model)], CoordinatorConfig::default()).unwrap();
     let mut total_tokens = 0u64;
     let mut total_requests = 0u64;
     property(4, |g: &mut PropGen| {

@@ -297,7 +297,8 @@ fn compressed_checkpoint_serves_through_coordinator() {
                 ..Default::default()
             },
         },
-    );
+    )
+    .unwrap();
     let resp = coord.generate("blast", prompt.clone(), 6).unwrap();
     assert_eq!(resp.tokens, reference);
     coord.shutdown();

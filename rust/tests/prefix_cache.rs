@@ -34,7 +34,8 @@ fn shared_prefix_skips_prefill_and_stays_bit_identical() {
                 ..EngineConfig::default()
             },
         },
-    );
+    )
+    .unwrap();
     let prompt: Vec<usize> = (0..14).map(|i| (i * 5 + 7) % 64).collect();
     let direct = reference.generate(&prompt, 6);
 

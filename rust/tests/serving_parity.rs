@@ -33,6 +33,7 @@ fn coord_with(model: TinyLM, max_seqs: usize, max_batch: usize) -> Coordinator {
             engine: EngineConfig { max_seqs, ..EngineConfig::default() },
         },
     )
+    .unwrap()
 }
 
 #[test]
@@ -148,6 +149,9 @@ fn streaming_tokens_match_final_summary_and_reference() {
                 streamed.push(token);
             }
             ResponseEvent::Done(resp) => done = Some(resp),
+            ResponseEvent::Error { error, .. } => {
+                panic!("healthy request must not error: {error}")
+            }
         }
     }
     let done = done.expect("stream ends with Done");

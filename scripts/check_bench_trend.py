@@ -59,6 +59,17 @@ OBS_RATIOS = [
 ]
 OBS_DROP_THRESHOLD = 0.10
 
+# Robustness ratios from the overload scenario (burst past the pending
+# bound into an undersized KV arena). Always warn-only and compared as
+# absolute deltas: shed rate on a timing-sensitive burst is advisory,
+# but a large *swing in either direction* is an early smell — up means
+# admission got slower or the drain loop regressed, down means the
+# bound stopped being enforced.
+ROBUSTNESS_RATIOS = [
+    ("BENCH_serving.json", ("overload", "shed_rate"), "overload shed rate"),
+]
+ROBUSTNESS_SWING_THRESHOLD = 0.25
+
 
 def load_metric(path, keys):
     try:
@@ -120,6 +131,19 @@ def main():
             print(
                 f"[trend] WARNING: {label} dropped {drop:.2f} "
                 f"(> {OBS_DROP_THRESHOLD:.2f} absolute) — check pack keying/eviction"
+            )
+    for fname, keys, label in ROBUSTNESS_RATIOS:
+        curr = load_metric(os.path.join(curr_dir, fname), keys)
+        prev = load_metric(os.path.join(prev_dir, fname), keys)
+        if curr is None or prev is None:
+            continue
+        swing = curr - prev
+        print(f"[trend] {label}: prev {prev:.3f} -> curr {curr:.3f}")
+        if abs(swing) > ROBUSTNESS_SWING_THRESHOLD:
+            print(
+                f"[trend] WARNING: {label} swung {swing:+.2f} "
+                f"(> {ROBUSTNESS_SWING_THRESHOLD:.2f} absolute) — check "
+                f"admission drain/shed policy"
             )
     if failures:
         for f in failures:
