@@ -251,6 +251,82 @@ fn run_overload(model: TinyLM, n: usize, new_tokens: usize) -> Json {
     ])
 }
 
+/// Speculative-decoding scenario: one burst served twice through
+/// otherwise-identical coordinators — speculation off, then
+/// self-draft speculation at depth `gamma`. With a self-draft every
+/// proposal matches the target argmax, so the upside is pure
+/// batching: each verify commits up to γ+1 positions in one batched
+/// weight pass instead of γ+1 weight-bound single-row decode steps
+/// (the draft's proposal rows ride the same amortization). Acceptance
+/// rate comes from the engine-wide obs counter deltas, so it reflects
+/// exactly what the worker's verify loop did. Returns the JSON
+/// section and the spec-vs-plain speedup for the gate.
+fn run_spec(n: usize, new_tokens: usize, gamma: usize) -> (Json, f64) {
+    use blast_repro::obs::well_known as wk;
+    let mut rng = Rng::new(4245);
+    let mut cfg = LmConfig::tiny(StructureKind::Blast { b: 4, r: 8 });
+    cfg.max_seq = 96;
+    let model = TinyLM::new(cfg, &mut rng);
+    let vocab = model.cfg.vocab;
+    let run = |g: usize| -> (f64, usize) {
+        let mut engine = EngineConfig { max_seqs: 4, ..EngineConfig::global().clone() };
+        engine.spec_gamma = g;
+        engine.spec_draft = if g > 0 { Some("self".into()) } else { None };
+        let coord = Coordinator::new(
+            vec![("m".into(), model.clone())],
+            CoordinatorConfig { batcher: BatcherConfig::default(), engine },
+        )
+        .unwrap();
+        // Warm the worker (pretune runs on its thread) before the clock.
+        let _ = coord.generate("m", vec![1, 2, 3], 4).unwrap();
+        let t0 = Instant::now();
+        let mut handles = Vec::with_capacity(n);
+        for i in 0..n {
+            let prompt: Vec<usize> =
+                (0..(2 + i % 5)).map(|k| (i * 3 + k + 1) % vocab).collect();
+            handles.push(coord.submit("m", prompt, new_tokens).unwrap().1);
+        }
+        let mut total = 0usize;
+        for h in handles {
+            total += h.recv().unwrap().generated;
+        }
+        let tps = total as f64 / t0.elapsed().as_secs_f64();
+        coord.shutdown();
+        (tps, total)
+    };
+    let (plain_tps, plain_tokens) = run(0);
+    let proposed0 = wk::spec_tokens_proposed().get();
+    let accepted0 = wk::spec_tokens_accepted().get();
+    let (spec_tps, spec_tokens) = run(gamma);
+    let proposed = wk::spec_tokens_proposed().get() - proposed0;
+    let accepted = wk::spec_tokens_accepted().get() - accepted0;
+    assert_eq!(
+        plain_tokens, spec_tokens,
+        "speculative decoding is bit-identical: token counts must match"
+    );
+    let acceptance = accepted as f64 / proposed.max(1) as f64;
+    let speedup = spec_tps / plain_tps;
+    println!(
+        "spec (γ={gamma}): {spec_tps:>9.1} tok/s vs plain {plain_tps:.1} tok/s \
+         ({speedup:.2}x), acceptance {:.1}% ({accepted}/{proposed})",
+        acceptance * 100.0
+    );
+    (
+        obj(vec![
+            ("n_requests", Json::from(n)),
+            ("gamma", Json::from(gamma)),
+            ("tokens_per_sec_plain", Json::from(plain_tps)),
+            ("tokens_per_sec_spec", Json::from(spec_tps)),
+            ("speedup", Json::from(speedup)),
+            ("tokens_proposed", Json::from(proposed as usize)),
+            ("tokens_accepted", Json::from(accepted as usize)),
+            ("acceptance_rate", Json::from(acceptance)),
+            ("tokens_generated", Json::from(spec_tokens)),
+        ]),
+        speedup,
+    )
+}
+
 /// (mean ms, p95 ms) of a latency sample set.
 fn latency_stats_ms(samples: &[Duration]) -> (f64, f64) {
     if samples.is_empty() {
@@ -345,6 +421,11 @@ fn main() {
     let model_o = TinyLM::new(cfg_o, &mut rng_o);
     let overload = run_overload(model_o, ov_requests, new_tokens / 2);
 
+    // Speculative-decoding scenario: self-draft burst, spec vs plain.
+    let spec_requests = if fast { 12 } else { 24 };
+    let spec_gamma = 4usize;
+    let (spec_json, spec_speedup) = run_spec(spec_requests, new_tokens / 2, spec_gamma);
+
     let out_path = std::env::var("BLAST_SERVING_BENCH_OUT")
         .unwrap_or_else(|_| concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serving.json").into());
     let root = obj(vec![
@@ -373,12 +454,15 @@ fn main() {
             ]),
         ),
         ("overload", overload),
+        ("spec", spec_json),
         ("speedup", Json::from(speedup)),
         (
             "gate",
             obj(vec![
                 ("min_speedup", Json::from(1.5)),
                 ("pass", Json::from(speedup >= 1.5)),
+                ("spec_min_speedup", Json::from(1.3)),
+                ("spec_pass", Json::from(spec_speedup >= 1.3)),
             ]),
         ),
         // Full observability snapshot (pack-cache hit rate, per-plan
@@ -410,5 +494,20 @@ fn main() {
         println!("WARNING (not fatal in BLAST_BENCH_FAST mode): {msg}");
     } else {
         println!("gate: continuous >= 1.5x sequential — OK");
+    }
+
+    // Speculative gate: a self-draft at γ=4 must buy >= 1.3x the plain
+    // continuous tokens/sec — the batched verify has to amortize enough
+    // weight traffic to pay for the draft's proposal rows with room to
+    // spare. Same fast-mode policy as the batching gate.
+    if spec_speedup < 1.3 {
+        let msg = format!(
+            "speculative decoding must be >= 1.3x plain continuous decode, \
+             got {spec_speedup:.2}x"
+        );
+        assert!(fast, "acceptance gate: {msg}");
+        println!("WARNING (not fatal in BLAST_BENCH_FAST mode): {msg}");
+    } else {
+        println!("gate: speculative >= 1.3x plain — OK");
     }
 }

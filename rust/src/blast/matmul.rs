@@ -214,11 +214,17 @@ mod tests {
 
     #[test]
     fn matvec_flops_formula_consistent() {
-        // The advertised count assumes stage-1 shared across i — verify
-        // it is (m+n+b^2) r.
+        // Stage 1 (Vᵀx, n·r mults) IS computed once and shared across
+        // every row block i — the plan lowers it as a single Gemm over
+        // the full input — so the advertised count is exactly
+        // (m + n + b²)·r: n·r for stage 1, b²·r for the per-block-pair
+        // coupling, m·r for stage 3.
         let a = BlastMatrix::zeros(256, 256, 16, 8);
         let flops = a.matvec_flops();
-        assert_eq!(flops, (256 + 256 + 256) * 8);
+        assert_eq!(flops, (256 + 256 + 16 * 16) * 8);
+        // The plan IR counts the same lowering op by op; the advertised
+        // formula and the executed plan must never drift apart.
+        assert_eq!(flops, a.plan().flops_per_row());
         // vs dense 65536 mults: ~10.7x fewer.
         assert!(flops < 256 * 256 / 10);
     }

@@ -103,6 +103,12 @@ pub struct SamplingParams {
     /// exempt — it already started). On expiry:
     /// [`ServeError::QueueTimeout`]. `None` = wait indefinitely.
     pub queue_timeout: Option<Duration>,
+    /// Allow speculative decoding for this request (default `true`).
+    /// Only meaningful when the serving worker has a draft model and
+    /// `spec_gamma > 0`; output is bit-identical either way (the target
+    /// verifies every token), so this is a latency/throughput knob —
+    /// e.g. for isolating a request from draft-induced step jitter.
+    pub speculative: bool,
 }
 
 impl Default for SamplingParams {
@@ -112,6 +118,7 @@ impl Default for SamplingParams {
             stop_token: None,
             deadline: None,
             queue_timeout: None,
+            speculative: true,
         }
     }
 }
@@ -166,6 +173,12 @@ impl GenerateRequestBuilder {
     /// Maximum queue wait before first admission.
     pub fn queue_timeout(mut self, d: Duration) -> Self {
         self.params.queue_timeout = Some(d);
+        self
+    }
+
+    /// Opt this request out of (or back into) speculative decoding.
+    pub fn speculative(mut self, on: bool) -> Self {
+        self.params.speculative = on;
         self
     }
 
@@ -413,6 +426,15 @@ mod tests {
         // Defaults stay unbounded.
         assert_eq!(SamplingParams::default().deadline, None);
         assert_eq!(SamplingParams::default().queue_timeout, None);
+    }
+
+    #[test]
+    fn speculative_defaults_on_and_builder_opts_out() {
+        assert!(SamplingParams::default().speculative);
+        let r = GenerateRequest::builder(vec![1]).speculative(false).build();
+        assert!(!r.params.speculative);
+        let r = GenerateRequest::builder(vec![1]).speculative(true).build();
+        assert!(r.params.speculative);
     }
 
     #[test]

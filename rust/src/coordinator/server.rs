@@ -34,6 +34,26 @@
 //! tokens rather than reproducing `generate`'s quirk of sampling from a
 //! zeroed logits row.
 //!
+//! ## Self-speculative decoding
+//!
+//! With a draft model configured ([`EngineConfig::spec_draft`] — a
+//! second `.bmx` checkpoint or the literal `"self"`) and a speculation
+//! depth ([`EngineConfig::spec_gamma`] > 0), step 3 becomes a
+//! *speculative* step: per sequence the draft proposes γ tokens ahead
+//! of the pending one (through its own private paged KV arena), then
+//! ONE batched multi-token [`TinyLM::verify_step`] scores every
+//! appended position of every live sequence, the longest draft prefix
+//! matching the target's own greedy argmax is accepted, and the
+//! rejected tail is rewound with
+//! [`KvBlockManager::rollback_append`]. Output is **bit-identical** to
+//! non-speculative decoding — the accepted tokens *are* the target's
+//! argmaxes, the bonus logits row after the last accepted position is
+//! exactly what a plain decode step would have produced, and a draft
+//! that proposes garbage costs only wasted verify rows. Requests can
+//! opt out per call with `SamplingParams::speculative = false`; such
+//! sequences ride the same verify batch with a count of one, which
+//! degenerates to the plain batched decode step row for row.
+//!
 //! ## Failure semantics
 //!
 //! **Every submitted request terminates** with exactly one of `Done` or
@@ -161,11 +181,22 @@ impl Coordinator {
         for (name, model) in models {
             let (tx, rx) = channel::<WorkItem>();
             let (vocab, max_seq) = (model.cfg.vocab, model.cfg.max_seq);
+            let draft = match load_draft(&cfg.engine, &model) {
+                Ok(d) => d,
+                Err(e) => {
+                    drop(tx);
+                    routes.clear();
+                    for w in workers {
+                        let _ = w.join();
+                    }
+                    bail!("draft model for variant `{name}`: {e}");
+                }
+            };
             let m = Arc::clone(&metrics);
             let wcfg = cfg.clone();
             let spawned = std::thread::Builder::new()
                 .name(format!("worker-{name}"))
-                .spawn(move || worker_loop(model, rx, wcfg, m));
+                .spawn(move || worker_loop(model, draft, rx, wcfg, m));
             match spawned {
                 Ok(handle) => {
                     workers.push(handle);
@@ -331,6 +362,69 @@ struct ActiveSeq {
     ttft: Option<Duration>,
     /// Client dropped its receiver: stop decoding, skip `Done`.
     cancelled: bool,
+    /// Draft-model KV state for speculative decoding. `None` until the
+    /// first speculative round (and reset to `None` by preemption and
+    /// panic recovery — the next round re-syncs from the token list).
+    draft: Option<DraftSeq>,
+}
+
+/// A sequence's private draft-model KV state: its handle into the
+/// draft arena plus how many of the sequence's tokens the draft has
+/// committed (the draft always trails the pending token).
+struct DraftSeq {
+    handle: crate::nn::kvcache::SeqHandle,
+    len: usize,
+}
+
+/// Per-worker speculative-decoding state: the draft model, its private
+/// paged KV arena (derived sizing like the target's, so a draft
+/// reservation can never starve while active sequences ≤ `max_seqs`),
+/// and the reusable per-step buffers that keep the speculative hot
+/// path allocation-free in steady state.
+struct SpecCtx {
+    model: TinyLM,
+    dmgr: KvBlockManager,
+    gamma: usize,
+    /// Flattened verify tokens: per sequence, its pending token
+    /// followed by its draft proposals.
+    verify_toks: Vec<usize>,
+    verify_counts: Vec<usize>,
+    verify_handles: Vec<crate::nn::kvcache::SeqHandle>,
+    /// Per-sequence `(first verify row, proposed, accepted)`.
+    spans: Vec<(usize, usize, usize)>,
+    /// 1×vocab scratch for the draft's one-at-a-time proposal decodes.
+    draft_logits: Matrix,
+}
+
+/// Resolve the speculative draft for a variant: `None` when speculation
+/// is off (`spec_gamma == 0` or no `spec_draft`), a clone of the target
+/// for `"self"`, otherwise a `.bmx` checkpoint — which must share the
+/// target's vocab (acceptance compares token ids) and cover its context
+/// window (the draft embeds the same positions).
+fn load_draft(engine: &EngineConfig, target: &TinyLM) -> Result<Option<TinyLM>> {
+    if engine.spec_gamma == 0 {
+        return Ok(None);
+    }
+    let draft = match engine.spec_draft.as_deref() {
+        None => return Ok(None),
+        Some("self") => target.clone(),
+        Some(path) => TinyLM::load(path)?,
+    };
+    if draft.cfg.vocab != target.cfg.vocab {
+        bail!(
+            "draft vocab {} != target vocab {} (speculative verification compares token ids)",
+            draft.cfg.vocab,
+            target.cfg.vocab
+        );
+    }
+    if draft.cfg.max_seq < target.cfg.max_seq {
+        bail!(
+            "draft context window {} is shorter than the target's {}",
+            draft.cfg.max_seq,
+            target.cfg.max_seq
+        );
+    }
+    Ok(Some(draft))
 }
 
 /// What one admission attempt did.
@@ -467,7 +561,18 @@ fn admit(
         first_token_at,
         ttft,
         cancelled: false,
+        draft: None,
     })
+}
+
+/// Free a sequence's draft-model KV state, if any. A no-op when
+/// speculation is off or the sequence never speculated. Must run before
+/// every path that retires, preempts, or quarantines a sequence — the
+/// draft arena's leak invariant mirrors the target's.
+fn release_draft(seq: &mut ActiveSeq, spec: Option<&mut SpecCtx>) {
+    if let (Some(ds), Some(sp)) = (seq.draft.take(), spec) {
+        sp.dmgr.free(ds.handle);
+    }
 }
 
 /// Preempt an active sequence for KV pressure: free its blocks, carry
@@ -558,20 +663,52 @@ fn retire(seq: ActiveSeq, mgr: &mut KvBlockManager, metrics: &Metrics) {
 /// `decode_step` per row) produces the next logits.
 fn worker_loop(
     model: TinyLM,
+    draft: Option<TinyLM>,
     rx: Receiver<WorkItem>,
     cfg: CoordinatorConfig,
     metrics: Arc<Metrics>,
 ) {
     let max_seqs = cfg.engine.max_seqs.max(1);
     let max_pending = cfg.engine.max_pending.max(1);
+    let gamma = cfg.engine.spec_gamma;
     // Warm the execution caches before taking traffic: pretune builds
     // every layer's StructPlan (cached on the layer — Monarch/BlockDiag/
     // LowRank models serve through the same plan path as Dense/BLAST),
     // then tunes decode at batch 1 and at full concurrency plus the
     // longest prefill this model accepts, so plan builds, tuning probes,
     // and factor-panel packing all run at model-load time rather than
-    // inside the first request.
-    model.pretune(&[1, max_seqs, model.cfg.max_seq - 1]);
+    // inside the first request. Speculative workers also pretune the
+    // verify width (up to γ+1 rows per sequence in one batch).
+    if draft.is_some() && gamma > 0 {
+        model.pretune(&[1, max_seqs, max_seqs * (gamma + 1), model.cfg.max_seq - 1]);
+    } else {
+        model.pretune(&[1, max_seqs, model.cfg.max_seq - 1]);
+    }
+    // Speculation state: the draft keeps its OWN paged arena (derived
+    // sizing — never starves) so target preemption/rollback arithmetic
+    // stays independent of draft bookkeeping.
+    let mut spec: Option<SpecCtx> = match draft {
+        Some(dm) if gamma > 0 => {
+            dm.pretune(&[1, dm.cfg.max_seq - 1]);
+            let dmgr = dm.new_kv_manager_with(
+                max_seqs,
+                cfg.engine.kv_block_size,
+                cfg.engine.kv_cache_blocks,
+            );
+            let draft_logits = Matrix::zeros(0, dm.cfg.vocab);
+            Some(SpecCtx {
+                model: dm,
+                dmgr,
+                gamma,
+                verify_toks: Vec::with_capacity(max_seqs * (gamma + 1)),
+                verify_counts: Vec::with_capacity(max_seqs),
+                verify_handles: Vec::with_capacity(max_seqs),
+                spans: Vec::with_capacity(max_seqs),
+                draft_logits,
+            })
+        }
+        _ => None,
+    };
     // Arena sizing: derived (worst case per sequence + cache headroom,
     // under which admission can always eventually reserve) unless
     // `kv_total_blocks` pins an explicit — possibly undersized, KV
@@ -605,11 +742,16 @@ fn worker_loop(
     let mut step_handles: Vec<crate::nn::kvcache::SeqHandle> =
         Vec::with_capacity(max_seqs);
     let mut next_active: Vec<ActiveSeq> = Vec::with_capacity(max_seqs);
-    // Logits of the previous decode step (valid when `have_logits`):
-    // row `i` belongs to `active[i]` (retired sequences were filtered
-    // out of `active` before the step ran, and admissions only append,
-    // so the prefix-index correspondence is stable across iterations).
+    // Logits of the previous decode/verify step (valid when
+    // `have_logits`): `active[i]` samples from row `step_rows[i]`
+    // (retired sequences were filtered out of `active` before the step
+    // ran, and admissions only append, so the prefix-index
+    // correspondence is stable across iterations). A plain decode step
+    // writes one row per sequence — `step_rows` is the identity — while
+    // a speculative verify step writes γᵢ+1 rows per sequence and each
+    // survivor points at the row after its last accepted position.
     let mut step_logits = Matrix::zeros(0, model.cfg.vocab);
+    let mut step_rows: Vec<usize> = Vec::with_capacity(max_seqs);
     let mut have_logits = false;
     // Consecutive iterations the queue head failed to reserve blocks
     // while sequences were active (feeds the preemption trigger).
@@ -714,11 +856,12 @@ fn worker_loop(
         }
 
         // ---- 2. Sample one token per sequence; stream + retire. ----
-        let prev_live = if have_logits { step_logits.rows } else { 0 };
+        let prev_live = if have_logits { step_rows.len() } else { 0 };
         step_toks.clear();
         step_handles.clear();
         for (idx, mut seq) in active.drain(..).enumerate() {
             if preempt_idx == Some(idx) {
+                release_draft(&mut seq, spec.as_mut());
                 preempt(seq, &mut mgr, &metrics, &mut pending);
                 continue;
             }
@@ -727,6 +870,7 @@ fn worker_loop(
             // deadline stops consuming decode capacity immediately.
             if params.deadline.is_some_and(|d| seq.item.enqueued_at.elapsed() > d) {
                 trace::serve_point("expire", seq.item.id);
+                release_draft(&mut seq, spec.as_mut());
                 mgr.free(seq.handle);
                 fail_item(&seq.item, ServeError::DeadlineExceeded);
                 metrics.record_expired_active();
@@ -736,7 +880,7 @@ fn worker_loop(
                 None // max_new_tokens exhausted (or zero).
             } else if idx < prev_live {
                 // Continuing sequence: its row of the last decode step.
-                Some(argmax(step_logits.row(idx)))
+                Some(argmax(step_logits.row(step_rows[idx])))
             } else {
                 // Freshly (re-)admitted or isolation-replayed: its
                 // private logits (None = empty prompt, nothing to
@@ -744,6 +888,7 @@ fn worker_loop(
                 seq.logits.as_ref().map(|l| argmax(l.row(0)))
             };
             let Some(next) = sampled else {
+                release_draft(&mut seq, spec.as_mut());
                 retire(seq, &mut mgr, &metrics);
                 continue;
             };
@@ -784,6 +929,7 @@ fn worker_loop(
                 || pos + 1 >= model.cfg.max_seq
                 || params.stop_token == Some(next);
             if done {
+                release_draft(&mut seq, spec.as_mut());
                 retire(seq, &mut mgr, &metrics);
             } else {
                 // The private logits (if any) are spent; from here on
@@ -796,14 +942,54 @@ fn worker_loop(
         }
         std::mem::swap(&mut active, &mut next_active); // next_active is now empty
 
-        // ---- 3. One batched decode step over every live sequence. ----
-        // Row `i` of the result is `active[i]`'s next-token logits,
-        // written into the worker's reusable logits buffer through the
-        // arena-backed zero-allocation path (KV rows land in blocks
-        // reserved at admission — never the heap). A panic anywhere in
-        // the step is caught and isolated per sequence below.
+        // ---- 3. One batched decode/verify step over every live
+        // sequence. ---- Plain workers run ONE batched decode step (one
+        // row per sequence); speculative workers run draft proposals
+        // plus ONE batched multi-token verify (γᵢ+1 rows per sequence),
+        // then stream the accepted tokens. Both paths go through the
+        // arena-backed zero-allocation machinery (KV rows land in
+        // blocks reserved at admission — never the heap). A panic
+        // anywhere in a step is caught and isolated per sequence.
         if step_toks.is_empty() {
             have_logits = false;
+        } else if let Some(sp) = spec.as_mut() {
+            metrics.record_batch(step_toks.len());
+            let step = catch_unwind(AssertUnwindSafe(|| {
+                crate::fail_point!("worker.step");
+                spec_step(
+                    &model,
+                    sp,
+                    &mut mgr,
+                    &mut active,
+                    &step_toks,
+                    &mut arena,
+                    &mut step_logits,
+                );
+            }));
+            match step {
+                Ok(()) => {
+                    // Stream accepted tokens; survivors' next-sample
+                    // rows land in `step_rows`. This runs OUTSIDE the
+                    // unwind guard: all model/manager work is done, so
+                    // nothing here can panic and partially-streamed
+                    // state never needs recovery.
+                    spec_emit(&model, sp, &mut mgr, &metrics, &mut active, &mut step_rows);
+                    have_logits = true;
+                }
+                Err(_) => {
+                    have_logits = false;
+                    recover_step_panic(
+                        &model,
+                        &mut mgr,
+                        &metrics,
+                        &mut active,
+                        &mut pending,
+                        &step_toks,
+                        &mut arena,
+                        Some(sp),
+                    );
+                }
+            }
         } else {
             metrics.record_batch(step_toks.len());
             let step = catch_unwind(AssertUnwindSafe(|| {
@@ -817,58 +1003,23 @@ fn worker_loop(
                 );
             }));
             match step {
-                Ok(()) => have_logits = true,
+                Ok(()) => {
+                    have_logits = true;
+                    step_rows.clear();
+                    step_rows.extend(0..step_toks.len());
+                }
                 Err(_) => {
-                    // The batched step aborted part-way. Replay each
-                    // sequence alone to find the poisoned one(s): the
-                    // replay is bit-identical because `prepare_append`
-                    // only tops blocks up to the same need and KV row
-                    // writes overwrite in place — nothing the aborted
-                    // batch did can double-apply. Survivors keep their
-                    // logits privately (like a fresh prefill row) and
-                    // the shared step matrix is invalidated.
                     have_logits = false;
-                    let failed: Vec<ActiveSeq> = std::mem::take(&mut active);
-                    for (i, mut seq) in failed.into_iter().enumerate() {
-                        if mgr.seq_len(seq.handle) >= seq.tokens.len() {
-                            // This sequence's append already committed
-                            // in the aborted batch (the panic hit after
-                            // its commit): a replay would append twice.
-                            // Its KV state is complete but its logits
-                            // are lost — recompute-resume it through
-                            // the preemption path, which is bit-exact.
-                            preempt(seq, &mut mgr, &metrics, &mut pending);
-                            continue;
-                        }
-                        let tok = step_toks[i];
-                        let h = seq.handle;
-                        let mut single = Matrix::zeros(0, model.cfg.vocab);
-                        let replay = catch_unwind(AssertUnwindSafe(|| {
-                            model.decode_step_batch_into(
-                                &[tok],
-                                &mut mgr,
-                                &[h],
-                                &mut arena,
-                                &mut single,
-                            );
-                        }));
-                        match replay {
-                            Ok(()) => {
-                                seq.logits = Some(single);
-                                active.push(seq);
-                            }
-                            Err(payload) => {
-                                // Reproducibly poisoned: quarantine.
-                                trace::serve_point("poisoned", seq.item.id);
-                                mgr.free(seq.handle);
-                                fail_item(
-                                    &seq.item,
-                                    ServeError::Poisoned(panic_message(&*payload)),
-                                );
-                                metrics.record_poisoned();
-                            }
-                        }
-                    }
+                    recover_step_panic(
+                        &model,
+                        &mut mgr,
+                        &metrics,
+                        &mut active,
+                        &mut pending,
+                        &step_toks,
+                        &mut arena,
+                        None,
+                    );
                 }
             }
         }
@@ -880,9 +1031,272 @@ fn worker_loop(
         fail_item(&item, ServeError::WorkerGone);
         metrics.record_enqueue_aborted(); // gauge −1, no outcome counter
     }
-    for seq in active.drain(..) {
+    for mut seq in active.drain(..) {
+        release_draft(&mut seq, spec.as_mut());
         mgr.free(seq.handle);
         fail_item(&seq.item, ServeError::WorkerGone);
+    }
+}
+
+/// Bring a sequence's draft KV up to date with everything except its
+/// pending token (`tokens[..len-1]`). Fresh sequences — and ones whose
+/// draft state was reset by preemption or panic recovery — admit into
+/// the draft arena and prefill; steady-state sequences catch up by at
+/// most one decode step (the bonus token of a fully-accepted round).
+fn ensure_draft(sp: &mut SpecCtx, seq: &mut ActiveSeq, arena: &mut ScratchArena) {
+    let want = seq.tokens.len() - 1;
+    if seq.draft.is_none() {
+        // Reserve the same worst-case budget the target reserved at
+        // admission (prompt + remaining generation, clamped to the
+        // draft's window): the draft transiently runs up to γ positions
+        // past the committed history, which that budget already covers
+        // because γ is capped at the window/remaining-token room.
+        let prompt_len = seq.tokens.len() - seq.generated;
+        let max_total =
+            (prompt_len + seq.item.req.params.max_new_tokens).min(sp.model.cfg.max_seq);
+        let adm = sp
+            .dmgr
+            .admit(&seq.tokens[..want], max_total)
+            .expect("draft arena uses derived sizing; reservation cannot starve");
+        seq.draft = Some(DraftSeq { handle: adm.handle, len: adm.cached_tokens });
+        if want > adm.cached_tokens {
+            let _ = sp.model.prefill_seq(&seq.tokens[adm.cached_tokens..want], &mut sp.dmgr, adm.handle);
+        }
+        seq.draft.as_mut().expect("just set").len = want;
+        return;
+    }
+    let ds = seq.draft.as_mut().expect("checked above");
+    while ds.len < want {
+        let tok = seq.tokens[ds.len];
+        sp.model.decode_step_batch_into(
+            &[tok],
+            &mut sp.dmgr,
+            &[ds.handle],
+            arena,
+            &mut sp.draft_logits,
+        );
+        ds.len += 1;
+    }
+}
+
+/// One speculative step: per-sequence draft proposals, ONE batched
+/// multi-token verify over every live sequence, greedy acceptance of
+/// the longest draft prefix matching the target's own argmax, and
+/// rollback of the rejected tails (target via
+/// [`KvBlockManager::rollback_append`], draft likewise in its own
+/// arena). Fills `sp.spans` with each sequence's
+/// `(first row, proposed, accepted)` into `step_logits` for
+/// [`spec_emit`]. Deliberately does NOT touch token lists or the client
+/// stream: a panic anywhere in here leaves every sequence in a state
+/// [`recover_step_panic`] can replay or recompute bit-identically.
+fn spec_step(
+    model: &TinyLM,
+    sp: &mut SpecCtx,
+    mgr: &mut KvBlockManager,
+    active: &mut [ActiveSeq],
+    step_toks: &[usize],
+    arena: &mut ScratchArena,
+    step_logits: &mut Matrix,
+) {
+    sp.verify_toks.clear();
+    sp.verify_counts.clear();
+    sp.verify_handles.clear();
+    sp.spans.clear();
+    for (i, seq) in active.iter_mut().enumerate() {
+        let t = step_toks[i];
+        let params = seq.item.req.params;
+        let len = seq.tokens.len(); // tokens[len-1] == t, not yet in KV
+        let remaining = params.max_new_tokens.saturating_sub(seq.generated);
+        // Cap γ so even full acceptance cannot overrun the request's
+        // remaining tokens (the bonus token needs one slot too) or the
+        // context window (the verify appends γ+1 positions at len-1..),
+        // keeping the transient KV length inside the admission budget.
+        let g = if params.speculative {
+            sp.gamma
+                .min(remaining.saturating_sub(1))
+                .min(model.cfg.max_seq.saturating_sub(len))
+        } else {
+            0
+        };
+        let row0 = sp.verify_toks.len();
+        sp.verify_toks.push(t);
+        if g > 0 {
+            ensure_draft(sp, seq, arena);
+            let dh = seq.draft.as_ref().expect("ensure_draft sets it").handle;
+            let mut cur = t;
+            for _ in 0..g {
+                sp.model.decode_step_batch_into(
+                    &[cur],
+                    &mut sp.dmgr,
+                    &[dh],
+                    arena,
+                    &mut sp.draft_logits,
+                );
+                seq.draft.as_mut().expect("set above").len += 1;
+                cur = argmax(sp.draft_logits.row(0));
+                sp.verify_toks.push(cur);
+            }
+            crate::obs::well_known::spec_tokens_proposed().add(g as u64);
+        }
+        sp.verify_counts.push(g + 1);
+        sp.verify_handles.push(seq.handle);
+        sp.spans.push((row0, g, 0));
+    }
+    // THE verify: one batched multi-token step — logits for every
+    // appended position of every sequence, each row bit-identical to
+    // what sequential single-token decode would produce there
+    // (`tests/spec_decode.rs` holds this to the bit).
+    model.verify_step(
+        &sp.verify_toks,
+        mgr,
+        &sp.verify_handles,
+        &sp.verify_counts,
+        arena,
+        step_logits,
+    );
+    // Greedy acceptance + rewind. The accepted tokens ARE the target's
+    // argmaxes, so emitting them is bit-identical to plain decoding.
+    for (i, seq) in active.iter_mut().enumerate() {
+        let (row0, g, _) = sp.spans[i];
+        let mut a = 0usize;
+        while a < g && argmax(step_logits.row(row0 + a)) == sp.verify_toks[row0 + a + 1] {
+            a += 1;
+        }
+        mgr.rollback_append(seq.handle, g - a);
+        if g > 0 {
+            trace::serve_point("spec_verify", seq.item.id);
+            crate::obs::well_known::spec_tokens_accepted().add(a as u64);
+            // The draft holds history + [t, d₁..d_{γ−1}]; rewind it to
+            // the target's new committed length (history + t + d₁..dₐ).
+            // On full acceptance it is one token SHORT instead — the
+            // next round's catch-up decode supplies dᵧ.
+            let keep = seq.tokens.len() + a;
+            let ds = seq.draft.as_mut().expect("speculated above");
+            if ds.len > keep {
+                sp.dmgr.rollback_append(ds.handle, ds.len - keep);
+                ds.len = keep;
+            }
+        }
+        sp.spans[i].2 = a;
+    }
+    let proposed = crate::obs::well_known::spec_tokens_proposed().get();
+    if proposed > 0 {
+        let accepted = crate::obs::well_known::spec_tokens_accepted().get();
+        crate::obs::well_known::spec_acceptance_rate().set(accepted as f64 / proposed as f64);
+    }
+}
+
+/// Stream the tokens a speculative step accepted. Every accepted draft
+/// token goes through exactly the per-token protocol of the sampling
+/// phase — stream, cancel-on-failed-send, stop-token / max-new-tokens /
+/// context-window termination — so a client cannot observe whether a
+/// token came from speculation or plain decode. Survivors record the
+/// verify row after their last accepted position in `step_rows` (the
+/// target's "bonus" distribution, exactly what a plain decode step
+/// would have produced) for the next sampling phase.
+fn spec_emit(
+    model: &TinyLM,
+    sp: &mut SpecCtx,
+    mgr: &mut KvBlockManager,
+    metrics: &Metrics,
+    active: &mut Vec<ActiveSeq>,
+    step_rows: &mut Vec<usize>,
+) {
+    step_rows.clear();
+    let drained: Vec<ActiveSeq> = std::mem::take(active);
+    for (i, mut seq) in drained.into_iter().enumerate() {
+        let (row0, _, a) = sp.spans[i];
+        let params = seq.item.req.params;
+        let mut dead = false;
+        for j in 0..a {
+            let tok = sp.verify_toks[row0 + 1 + j];
+            seq.tokens.push(tok);
+            seq.generated += 1;
+            let event = ResponseEvent::Token {
+                id: seq.item.id,
+                token: tok,
+                index: seq.generated - 1,
+            };
+            // Same chaos site as the sampling phase: a failed delivery
+            // is indistinguishable from a vanished client.
+            let delivered = !crate::util::failpoint::eval("resp.send")
+                && seq.item.respond_to.send(event).is_ok();
+            if !delivered {
+                seq.cancelled = true;
+            }
+            let pos = seq.tokens.len() - 1;
+            let done = seq.cancelled
+                || seq.generated >= params.max_new_tokens
+                || pos + 1 >= model.cfg.max_seq
+                || params.stop_token == Some(tok);
+            if done {
+                dead = true;
+                break;
+            }
+        }
+        if dead {
+            if let Some(ds) = seq.draft.take() {
+                sp.dmgr.free(ds.handle);
+            }
+            retire(seq, mgr, metrics);
+        } else {
+            step_rows.push(row0 + a);
+            active.push(seq);
+        }
+    }
+}
+
+/// The batched step aborted part-way: replay each sequence alone to
+/// find the poisoned one(s). The replay is bit-identical because
+/// `prepare_append` only tops blocks up to the same need and KV row
+/// writes overwrite in place — nothing the aborted batch did can
+/// double-apply. Survivors keep their logits privately (like a fresh
+/// prefill row); a sequence whose multi-token append already committed
+/// is recompute-resumed through the preemption path instead (its KV
+/// state is ahead of its token list and its logits are lost — the
+/// re-prefill is bit-exact). Draft state is unknown after a panic
+/// anywhere in a speculative step, so it is reset wholesale; the next
+/// speculative round re-syncs from the token list.
+#[allow(clippy::too_many_arguments)]
+fn recover_step_panic(
+    model: &TinyLM,
+    mgr: &mut KvBlockManager,
+    metrics: &Metrics,
+    active: &mut Vec<ActiveSeq>,
+    pending: &mut VecDeque<WorkItem>,
+    step_toks: &[usize],
+    arena: &mut ScratchArena,
+    mut spec: Option<&mut SpecCtx>,
+) {
+    let failed: Vec<ActiveSeq> = std::mem::take(active);
+    for (i, mut seq) in failed.into_iter().enumerate() {
+        release_draft(&mut seq, spec.as_deref_mut());
+        if mgr.seq_len(seq.handle) >= seq.tokens.len() {
+            // This sequence's append already committed in the aborted
+            // batch (single-token, or a verify that never rolled back):
+            // a replay would append twice.
+            preempt(seq, mgr, metrics, pending);
+            continue;
+        }
+        let tok = step_toks[i];
+        let h = seq.handle;
+        let mut single = Matrix::zeros(0, model.cfg.vocab);
+        let replay = catch_unwind(AssertUnwindSafe(|| {
+            model.decode_step_batch_into(&[tok], mgr, &[h], arena, &mut single);
+        }));
+        match replay {
+            Ok(()) => {
+                seq.logits = Some(single);
+                active.push(seq);
+            }
+            Err(payload) => {
+                // Reproducibly poisoned: quarantine.
+                trace::serve_point("poisoned", seq.item.id);
+                mgr.free(seq.handle);
+                fail_item(&seq.item, ServeError::Poisoned(panic_message(&*payload)));
+                metrics.record_poisoned();
+            }
+        }
     }
 }
 
@@ -1145,6 +1559,65 @@ mod tests {
         let snap = coord.metrics.snapshot();
         assert_eq!(snap.shed, 1);
         assert_eq!(snap.queue_depth, 0);
+        coord.shutdown();
+    }
+
+    /// Speculative config helper: draft with a clone of the target.
+    fn spec_cfg(max_seqs: usize, gamma: usize) -> CoordinatorConfig {
+        let mut cfg = test_cfg(max_seqs);
+        cfg.engine.spec_gamma = gamma;
+        cfg.engine.spec_draft = Some("self".into());
+        cfg
+    }
+
+    #[test]
+    fn speculative_self_draft_matches_direct_generation() {
+        let model = tiny_model(920, StructureKind::Blast { b: 2, r: 4 });
+        let direct = model.generate(&[1, 2, 3], 7);
+        let coord = Coordinator::new(vec![("m".into(), model)], spec_cfg(4, 3)).unwrap();
+        let resp = coord.generate("m", vec![1, 2, 3], 7).unwrap();
+        assert_eq!(resp.tokens, direct, "speculative output must be bit-identical");
+        assert_eq!(resp.generated, 7);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn speculative_stop_token_and_opt_out_requests_mix() {
+        let model = tiny_model(921, StructureKind::Dense);
+        let prompt = vec![2usize, 5];
+        let direct = model.generate(&prompt, 8);
+        let stop = direct[prompt.len() + 2];
+        let first_hit = direct[prompt.len()..]
+            .iter()
+            .position(|&t| t == stop)
+            .expect("stop token is generated");
+        let expected: Vec<usize> = direct[..prompt.len() + first_hit + 1].to_vec();
+        let coord = Coordinator::new(vec![("m".into(), model)], spec_cfg(4, 4)).unwrap();
+        // Stop token honored at its FIRST occurrence even when it
+        // arrives inside a burst of accepted draft tokens.
+        let req = GenerateRequest::builder(prompt.clone())
+            .max_tokens(8)
+            .stop_token(stop)
+            .build();
+        let resp = coord.generate_request("m", req).unwrap();
+        assert_eq!(resp.tokens, expected);
+        assert_eq!(resp.generated, first_hit + 1);
+        // A request that opts out of speculation on the same worker
+        // (count-1 verify rows) still matches exactly.
+        let req = GenerateRequest::builder(prompt).max_tokens(8).speculative(false).build();
+        let resp = coord.generate_request("m", req).unwrap();
+        assert_eq!(resp.tokens, direct);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn gamma_without_draft_is_plain_decoding() {
+        let model = tiny_model(922, StructureKind::Dense);
+        let direct = model.generate(&[4, 1], 5);
+        let mut cfg = test_cfg(2);
+        cfg.engine.spec_gamma = 3; // no spec_draft → speculation off
+        let coord = Coordinator::new(vec![("m".into(), model)], cfg).unwrap();
+        assert_eq!(coord.generate("m", vec![4, 1], 5).unwrap().tokens, direct);
         coord.shutdown();
     }
 

@@ -45,7 +45,8 @@ fn usage() -> &'static str {
        blast compress --ratio 0.5 --structure auto        # trains a demo model first\n\
        blast compress --in dense.bmx --out q.bmx --quantize int8   # int8 weight panels\n\
        blast serve --model blast.bmx --requests 32 --slots 8\n\
-       blast stats --model blast.bmx --requests 12        # metrics snapshot\n\
+       blast serve --model blast.bmx --spec-gamma 4 --spec-draft self   # speculative decoding\n\
+       blast stats --model blast.bmx --requests 12        # metrics snapshot (incl. spec acceptance rate)\n\
        blast generate --model blast.bmx --tokens 20\n\
        blast bench-runtime --reps 5"
 }
@@ -302,6 +303,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let vocab = models[0].1.cfg.vocab;
     let mut cfg = CoordinatorConfig::with_max_seqs(slots);
     cfg.batcher.max_batch = max_batch;
+    // Speculative decoding: `--spec-gamma N --spec-draft <path|self>`
+    // (CLI wins over the BLAST_SPEC_* env knobs baked into the config).
+    cfg.engine.spec_gamma = args.get_usize("spec-gamma", cfg.engine.spec_gamma)?;
+    if let Some(d) = args.get("spec-draft") {
+        cfg.engine.spec_draft = Some(d.to_string());
+    }
     let coord = Coordinator::new(models, cfg)?;
     let variants = coord.variants();
     println!("serving variants: {variants:?}");
@@ -362,7 +369,12 @@ fn cmd_stats(args: &Args) -> Result<()> {
         )]
     };
     let vocab = models[0].1.cfg.vocab;
-    let coord = Coordinator::new(models, CoordinatorConfig::with_max_seqs(slots))?;
+    let mut cfg = CoordinatorConfig::with_max_seqs(slots);
+    cfg.engine.spec_gamma = args.get_usize("spec-gamma", cfg.engine.spec_gamma)?;
+    if let Some(d) = args.get("spec-draft") {
+        cfg.engine.spec_draft = Some(d.to_string());
+    }
+    let coord = Coordinator::new(models, cfg)?;
     let variants = coord.variants();
     println!("self-drive: {n_requests} requests x {new_tokens} tokens...");
     let mut handles = Vec::new();

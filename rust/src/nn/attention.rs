@@ -390,6 +390,74 @@ impl Attention {
         arena.recycle_matrix(qkv);
     }
 
+    /// Multi-row batched decode for speculative verification: the first
+    /// `counts[0]` rows of `x` are consecutive new positions of
+    /// `seqs[0]`, the next `counts[1]` rows of `seqs[1]`, and so on
+    /// (`x.rows == Σ counts`). Row `j` of sequence `i` writes its K/V at
+    /// position `base_i + j` and attends over positions `0..=base_i + j`
+    /// — causal masking *within* the appended span falls out of the
+    /// attend length, exactly as in [`forward_prefill_paged`]. All
+    /// projections run as single batched products over every appended
+    /// row of every sequence, which is the whole point of verifying a
+    /// speculative burst in one step instead of γ+1 sequential ones.
+    ///
+    /// With every count equal to 1 this computes exactly
+    /// [`forward_decode_batch_into`] — and each row is bit-identical to
+    /// a lone `forward_decode` with the same history, which is what
+    /// makes accept-by-argmax-prefix speculative decoding lossless.
+    ///
+    /// Zero-alloc like the single-token path: all temporaries come from
+    /// `arena`. The caller drives the manager's append protocol
+    /// (`prepare_append(h, counts[i])` before the layer loop,
+    /// `commit_append`/`rollback_append` after).
+    ///
+    /// [`forward_prefill_paged`]: Attention::forward_prefill_paged
+    /// [`forward_decode_batch_into`]: Attention::forward_decode_batch_into
+    pub fn forward_verify_batch_into(
+        &self,
+        x: &Matrix,
+        kv: &mut KvLayerCtx<'_>,
+        seqs: &[SeqHandle],
+        counts: &[usize],
+        out: &mut Matrix,
+        arena: &mut ScratchArena,
+    ) {
+        debug_assert_eq!(seqs.len(), counts.len(), "one count per sequence");
+        assert_eq!(
+            x.rows,
+            counts.iter().sum::<usize>(),
+            "one activation row per appended position"
+        );
+        let d = self.d_model;
+        let mut qkv = arena.take_matrix(x.rows, self.wqkv.out_features);
+        self.wqkv.forward_into(x, &mut qkv); // Σcounts×3d, batched
+        let mut ctx = arena.take_matrix(x.rows, d);
+        // Budget-stable scratch sizing, as in the single-token path.
+        let max_len = seqs
+            .iter()
+            .zip(counts)
+            .map(|(&h, &n)| kv.score_capacity(h).max(kv.len(h) + n))
+            .max()
+            .unwrap_or(0);
+        let mut scores = arena.take(max_len);
+        let mut row0 = 0usize;
+        for (&h, &n) in seqs.iter().zip(counts) {
+            let base = kv.len(h);
+            for j in 0..n {
+                let row = qkv.row(row0 + j);
+                kv.write_row(h, base + j, &row[d..2 * d], &row[2 * d..3 * d]);
+                let view = kv.view(h);
+                // Causal: position base+j attends to 0..=base+j.
+                self.decode_attend(row, &view, base + j + 1, ctx.row_mut(row0 + j), &mut scores);
+            }
+            row0 += n;
+        }
+        self.wo.forward_into(&ctx, out); // Σcounts×d, batched
+        arena.recycle(scores);
+        arena.recycle_matrix(ctx);
+        arena.recycle_matrix(qkv);
+    }
+
     /// Batched prefill: ingest `x (seq×d)` in one pass, appending every
     /// position's K/V to `kv` and returning all `seq` outputs.
     ///
@@ -642,6 +710,69 @@ mod tests {
                     );
                 }
                 assert_eq!(mgr.seq_len(handles[slot]), refs[slot].len);
+            }
+        }
+    }
+
+    #[test]
+    fn verify_batch_bit_identical_to_sequential_decode_ragged_counts() {
+        // Multi-row verify over ragged (base length, row count) pairs —
+        // including a count of 1, the decode_step degenerate case —
+        // must match per-token forward_decode on private caches bit for
+        // bit, which is the foundation of lossless speculative decode.
+        use super::super::kvcache::KvBlockManager;
+        let mut rng = Rng::new(347);
+        for structure in [StructureKind::Dense, StructureKind::Blast { b: 2, r: 3 }] {
+            let attn = Attention::new(8, 2, structure, &mut rng);
+            let mut mgr = KvBlockManager::new(1, 16, 4, 8);
+            // Prefixes 3/0/1 positions; verify bursts of 2/4/1 rows —
+            // several spans straddle the 4-position block boundary.
+            let prefix_lens = [3usize, 0, 1];
+            let counts = [2usize, 4, 1];
+            let handles: Vec<_> =
+                (0..3).map(|_| mgr.admit(&[], 12).unwrap().handle).collect();
+            let mut refs: Vec<LayerKv> =
+                (0..3).map(|_| LayerKv::with_capacity(12, 8)).collect();
+            for (s, &plen) in prefix_lens.iter().enumerate() {
+                for _ in 0..plen {
+                    let xt = rng.gaussian_matrix(1, 8, 1.0);
+                    mgr.prepare_append(handles[s], 1);
+                    let mut ctx = mgr.layer_ctx(0);
+                    let _ = attn.forward_decode_batch(&xt, &mut ctx, &handles[s..s + 1]);
+                    mgr.commit_append(handles[s], 1);
+                    let _ = attn.forward_decode(&xt, &mut refs[s]);
+                }
+            }
+            let total: usize = counts.iter().sum();
+            let x = rng.gaussian_matrix(total, 8, 1.0);
+            for (s, &n) in counts.iter().enumerate() {
+                mgr.prepare_append(handles[s], n);
+            }
+            let mut arena = ScratchArena::new();
+            let mut y = Matrix::zeros(0, 0);
+            {
+                let mut ctx = mgr.layer_ctx(0);
+                attn.forward_verify_batch_into(&x, &mut ctx, &handles, &counts, &mut y, &mut arena);
+            }
+            for (s, &n) in counts.iter().enumerate() {
+                mgr.commit_append(handles[s], n);
+            }
+            // Reference: feed the same rows one by one per sequence.
+            let mut row0 = 0usize;
+            for (s, &n) in counts.iter().enumerate() {
+                for j in 0..n {
+                    let xt = x.submatrix(row0 + j, row0 + j + 1, 0, 8);
+                    let yt = attn.forward_decode(&xt, &mut refs[s]);
+                    for c in 0..8 {
+                        assert_eq!(
+                            y.at(row0 + j, c),
+                            yt.at(0, c),
+                            "{structure:?} seq {s} span row {j} col {c}"
+                        );
+                    }
+                }
+                assert_eq!(mgr.seq_len(handles[s]), refs[s].len);
+                row0 += n;
             }
         }
     }

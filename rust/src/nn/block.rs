@@ -191,6 +191,48 @@ impl Block {
         arena.recycle_matrix(x_mid);
     }
 
+    /// Multi-row verify variant of [`forward_decode_batch_into`]:
+    /// `counts[i]` consecutive rows of `x` are new positions of
+    /// `seqs[i]` (speculative-decode verification). Identical body
+    /// except attention appends/attends per appended position with
+    /// causal masking inside each span; everything else is row-wise, so
+    /// with all counts 1 this *is* the single-token batched decode.
+    ///
+    /// [`forward_decode_batch_into`]: Block::forward_decode_batch_into
+    pub fn forward_verify_batch_into(
+        &self,
+        x: &Matrix,
+        kv: &mut KvLayerCtx<'_>,
+        seqs: &[SeqHandle],
+        counts: &[usize],
+        out: &mut Matrix,
+        arena: &mut ScratchArena,
+    ) {
+        let rows = x.rows;
+        let d = self.d_model;
+        let mut ln1_out = arena.take_matrix(rows, d);
+        self.ln1.forward_into(x, &mut ln1_out);
+        let mut a = arena.take_matrix(rows, d);
+        self.attn.forward_verify_batch_into(&ln1_out, kv, seqs, counts, &mut a, arena);
+        arena.recycle_matrix(ln1_out);
+        for (av, xv) in a.data.iter_mut().zip(&x.data) {
+            *av = *xv + *av;
+        }
+        let x_mid = a;
+        let mut ln2_out = arena.take_matrix(rows, d);
+        self.ln2.forward_into(&x_mid, &mut ln2_out);
+        let mut h = arena.take_matrix(rows, self.fc1.out_features);
+        self.fc1.forward_into(&ln2_out, &mut h);
+        arena.recycle_matrix(ln2_out);
+        gelu_inplace(&mut h);
+        self.fc2.forward_into(&h, out);
+        arena.recycle_matrix(h);
+        for (ov, xv) in out.data.iter_mut().zip(&x_mid.data) {
+            *ov = *xv + *ov;
+        }
+        arena.recycle_matrix(x_mid);
+    }
+
     /// KV-cached batched prefill over `x (seq×d)`: every non-attention
     /// op is row-wise and attention uses the decode softmax, so this is
     /// bit-identical to `seq` successive `forward_decode` calls while

@@ -426,6 +426,88 @@ impl TinyLM {
         arena.recycle_matrix(x);
     }
 
+    /// One batched **multi-token verify** step for speculative decoding:
+    /// `counts[i]` consecutive entries of `toks` are appended to
+    /// sequence `handles[i]` starting at its current length, and the
+    /// returned `logits` matrix has one row per appended position (in
+    /// the same grouping/order as `toks`) — not just the last one. This
+    /// generalizes [`decode_step_batch_into`], whose single-token
+    /// restriction is the only difference: with every count 1 the two
+    /// compute bit-identical results through the same layer kernels.
+    ///
+    /// The caller typically feeds `[t, d_1, ..., d_γ]` for each
+    /// sequence (the sampled token plus γ draft proposals), accepts the
+    /// longest prefix where `argmax(row j) == d_{j+1}`, and truncates
+    /// the rejected tail with [`KvBlockManager::rollback_append`]. Row
+    /// `j`'s logits are exactly what `decode_step` would produce after
+    /// sequentially appending the first `j+1` tokens — the bit-exactness
+    /// guarantee speculative decoding rests on.
+    ///
+    /// Zero-alloc on the warm path, same contract as
+    /// [`decode_step_batch_into`].
+    ///
+    /// [`decode_step_batch_into`]: TinyLM::decode_step_batch_into
+    /// [`KvBlockManager::rollback_append`]: KvBlockManager::rollback_append
+    pub fn verify_step(
+        &self,
+        toks: &[usize],
+        mgr: &mut KvBlockManager,
+        handles: &[SeqHandle],
+        counts: &[usize],
+        arena: &mut ScratchArena,
+        logits: &mut Matrix,
+    ) {
+        assert_eq!(counts.len(), handles.len(), "one count per sequence");
+        assert_eq!(
+            toks.len(),
+            counts.iter().sum::<usize>(),
+            "one token per appended position"
+        );
+        if toks.is_empty() {
+            logits.reset(0, self.cfg.vocab);
+            return;
+        }
+        // Chaos site: a panic here unwinds mid-verify. The worker's
+        // recovery routes committed-but-unrolled sequences through the
+        // recompute-resume (preemption) path, which is bit-exact.
+        crate::fail_point!("model.verify");
+        let d = self.cfg.d_model;
+        let mut x = arena.take_matrix(toks.len(), d);
+        let mut row0 = 0usize;
+        for (&h, &n) in handles.iter().zip(counts) {
+            let base = mgr.seq_len(h);
+            for j in 0..n {
+                let tok = toks[row0 + j];
+                assert!(tok < self.cfg.vocab, "token {tok} out of vocab");
+                let e = self.tok_embed.v.row(tok);
+                let p = self.pos_embed.v.row((base + j).min(self.cfg.max_seq - 1));
+                let row = x.row_mut(row0 + j);
+                for c in 0..d {
+                    row[c] = e[c] + p[c];
+                }
+            }
+            row0 += n;
+        }
+        for (&h, &n) in handles.iter().zip(counts) {
+            mgr.prepare_append(h, n);
+        }
+        let mut y = arena.take_matrix(toks.len(), d);
+        for (l, blk) in self.blocks.iter().enumerate() {
+            let mut kv = mgr.layer_ctx(l);
+            blk.forward_verify_batch_into(&x, &mut kv, handles, counts, &mut y, arena);
+            std::mem::swap(&mut x, &mut y);
+        }
+        for (&h, &n) in handles.iter().zip(counts) {
+            mgr.commit_append(h, n);
+        }
+        let mut ln_out = arena.take_matrix(toks.len(), d);
+        self.ln_f.forward_into(&x, &mut ln_out);
+        self.head.forward_into(&ln_out, logits);
+        arena.recycle_matrix(ln_out);
+        arena.recycle_matrix(y);
+        arena.recycle_matrix(x);
+    }
+
     pub fn new_kv_cache(&self) -> KvCache {
         KvCache::new(self.cfg.n_layers, self.cfg.max_seq, self.cfg.d_model)
     }
@@ -740,6 +822,80 @@ mod tests {
                     ref_logits[i] = lm.decode_step(toks[i], pos, &mut kvs[i]);
                 }
             }
+        }
+    }
+
+    #[test]
+    fn verify_step_all_single_counts_equals_decode_step_batch() {
+        // The degenerate case (every count == 1) must be bit-identical
+        // to the single-token batched decode: verify_step is a strict
+        // generalization, not a parallel implementation.
+        let mut rng = Rng::new(412);
+        let lm = TinyLM::new(LmConfig::tiny(StructureKind::Blast { b: 2, r: 4 }), &mut rng);
+        let prompts: [&[usize]; 3] = [&[3, 9, 27], &[17], &[5, 1, 2, 8]];
+        let mut mgr_a = lm.new_kv_manager_with(3, 4, 2);
+        let mut mgr_b = lm.new_kv_manager_with(3, 4, 2);
+        let ha: Vec<SeqHandle> =
+            prompts.iter().map(|p| mgr_a.admit(p, 16).unwrap().handle).collect();
+        let hb: Vec<SeqHandle> =
+            prompts.iter().map(|p| mgr_b.admit(p, 16).unwrap().handle).collect();
+        for (p, (&a, &b)) in prompts.iter().zip(ha.iter().zip(&hb)) {
+            let _ = lm.prefill_seq(p, &mut mgr_a, a).unwrap();
+            let _ = lm.prefill_seq(p, &mut mgr_b, b).unwrap();
+        }
+        let toks = [7usize, 11, 2];
+        let batched = lm.decode_step_batch(&toks, &mut mgr_a, &ha);
+        let mut arena = ScratchArena::new();
+        let mut verified = Matrix::zeros(0, lm.cfg.vocab);
+        lm.verify_step(&toks, &mut mgr_b, &hb, &[1, 1, 1], &mut arena, &mut verified);
+        assert_eq!(batched.data, verified.data, "counts of 1 must degenerate exactly");
+        for (&a, &b) in ha.iter().zip(&hb) {
+            assert_eq!(mgr_a.seq_len(a), mgr_b.seq_len(b));
+        }
+    }
+
+    #[test]
+    fn verify_step_rows_match_sequential_decode_and_rollback_rewinds() {
+        // Every verify row must equal the logits sequential decode_step
+        // calls would produce at that position, and rollback_append must
+        // rewind the paged state so the sequence continues as if the
+        // rejected tokens were never appended.
+        let mut rng = Rng::new(413);
+        for s in [StructureKind::Dense, StructureKind::Blast { b: 2, r: 4 }] {
+            let lm = TinyLM::new(LmConfig::tiny(s), &mut rng);
+            let prompt: Vec<usize> = vec![3, 9, 27, 17];
+            let mut kv = lm.new_kv_cache();
+            let ref_logits = lm.prefill(&prompt, &mut kv).unwrap();
+            let mut mgr = lm.new_kv_manager_with(1, 4, 2);
+            let h = mgr.admit(&prompt, 16).unwrap().handle;
+            let paged_logits = lm.prefill_seq(&prompt, &mut mgr, h).unwrap();
+            assert_eq!(paged_logits.data, ref_logits.data);
+            // Speculative burst: the sampled token plus 3 "draft" tokens.
+            let burst = [7usize, 21, 4, 33];
+            let mut arena = ScratchArena::new();
+            let mut verified = Matrix::zeros(0, lm.cfg.vocab);
+            lm.verify_step(&burst, &mut mgr, &[h], &[burst.len()], &mut arena, &mut verified);
+            assert_eq!(verified.rows, burst.len(), "one logits row per appended position");
+            // Reference: feed the same tokens one by one.
+            let mut kv_seq = kv.clone();
+            for (j, &tok) in burst.iter().enumerate() {
+                let l = lm.decode_step(tok, prompt.len() + j, &mut kv_seq);
+                assert_eq!(
+                    verified.row(j),
+                    l.row(0),
+                    "{s:?} verify row {j} differs from sequential decode"
+                );
+            }
+            // Reject the last 3: rollback, then decode a different token
+            // at the rewound position — must match a cache that never
+            // saw the rejected tokens.
+            mgr.rollback_append(h, 3);
+            assert_eq!(mgr.seq_len(h), prompt.len() + 1);
+            let mut kv_accept = kv.clone();
+            let _ = lm.decode_step(burst[0], prompt.len(), &mut kv_accept);
+            let l_ref = lm.decode_step(50, prompt.len() + 1, &mut kv_accept);
+            let l_paged = lm.decode_step_batch(&[50], &mut mgr, &[h]);
+            assert_eq!(l_paged.data, l_ref.data, "{s:?} post-rollback decode must be exact");
         }
     }
 

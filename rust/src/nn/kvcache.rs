@@ -273,7 +273,8 @@ struct PrefixNode {
 ///     ctx.write_row(h, pos, k, v);   // arena writes + KvView reads
 /// }
 /// mgr.commit_append(h, n);           // publish the new length
-/// ```
+/// mgr.rollback_append(h, r);         // optional: un-publish the last r
+/// ```                                //   (speculative-verify rejection)
 #[derive(Clone, Debug)]
 pub struct KvBlockManager {
     layers: Vec<KvArena>,
@@ -579,6 +580,55 @@ impl KvBlockManager {
             self.live_tokens_hwm = self.live_tokens;
             self.update_gauges();
         }
+    }
+
+    /// Roll back the last `n` committed positions of `h` — the
+    /// speculative-decode rejection path (verify committed `γ+1`
+    /// positions, the target accepted a prefix, the rest must vanish).
+    /// The logical length shrinks by `n` and tail blocks left holding no
+    /// committed position return to the free list. Rollback can only
+    /// ever touch *private* tail blocks: a sequence appends past its
+    /// shared prefix span into freshly allocated blocks (copy-on-extend),
+    /// so everything at or beyond the new length is `refs == 1` and
+    /// outside the radix tree. Freed tail blocks go back into this
+    /// sequence's budget reservation (the exact inverse of
+    /// [`Self::prepare_append`]'s materialization), so a rolled-back
+    /// sequence can always re-extend without re-racing admission.
+    pub fn rollback_append(&mut self, h: SeqHandle, n: usize) {
+        debug_assert!(self.handle_ok(h), "rollback_append on invalid handle {h:?}");
+        if n == 0 {
+            return;
+        }
+        let idx = h.idx as usize;
+        let s = &self.seqs[idx];
+        debug_assert!(n <= s.len, "rollback_append({n}) past committed length {}", s.len);
+        debug_assert!(
+            s.len - n >= s.cached_blocks * self.block_size,
+            "rollback_append into the shared prefix-cache span"
+        );
+        let new_len = s.len - n;
+        // Keep every block still covering a committed position; the
+        // floor at `cached_blocks` is belt-and-suspenders — the length
+        // assert above already keeps shared blocks fully covered.
+        let keep = new_len.div_ceil(self.block_size).max(s.cached_blocks);
+        let budget = s.budget;
+        while self.seqs[idx].table.len() > keep {
+            let b = self.seqs[idx].table.pop().expect("table longer than keep");
+            let m = &mut self.meta[b as usize];
+            debug_assert_eq!(m.refs, 1, "rollback of shared block {b}");
+            debug_assert!(m.node.is_none(), "rollback of prefix-cached block {b}");
+            m.refs = 0;
+            self.free.push(b);
+            // Inverse of the materialization in `prepare_append`: a
+            // popped block at index `table.len()` was within-budget iff
+            // that index is below the budget.
+            if self.seqs[idx].table.len() < budget {
+                self.reserved += 1;
+            }
+        }
+        self.seqs[idx].len = new_len;
+        self.live_tokens -= n;
+        self.update_gauges();
     }
 
     /// Count `n` tokens as actually prefilled (the complement of
@@ -1190,6 +1240,122 @@ mod tests {
         mgr.free(b.handle);
         assert_eq!(mgr.active_seqs(), 0);
         assert_eq!(mgr.stats().bad_frees, 0);
+    }
+
+    // ---- multi-token append + rollback (speculative decode's
+    // verify/reject path is exactly prepare_append(h, γ+1) → write rows
+    // → commit_append(h, γ+1) → rollback_append(h, rejected)) ----
+
+    #[test]
+    fn rollback_append_truncates_and_frees_tail_blocks() {
+        let mut mgr = KvBlockManager::new(2, 8, 4, 2);
+        let a = mgr.admit(&[1, 2, 3], 16).unwrap();
+        append_rows(&mut mgr, a.handle, 3, 0.0);
+        let free_before = mgr.free_blocks();
+        let table_before = mgr.block_table(a.handle).len();
+        // Speculative burst spanning a block boundary: 3 + 6 = 9
+        // positions → table grows from 1 to 3 blocks.
+        append_rows(&mut mgr, a.handle, 6, 0.0);
+        assert_eq!(mgr.block_table(a.handle).len(), 3);
+        // Reject all 6: length back to 3, both emptied tail blocks free.
+        mgr.rollback_append(a.handle, 6);
+        assert_eq!(mgr.seq_len(a.handle), 3);
+        assert_eq!(mgr.block_table(a.handle).len(), table_before);
+        assert_eq!(mgr.free_blocks(), free_before);
+        check_rows(&mut mgr, a.handle, 3, 0.0);
+        // The sequence extends again cleanly after the rollback.
+        append_rows(&mut mgr, a.handle, 6, 0.0);
+        check_rows(&mut mgr, a.handle, 9, 0.0);
+        mgr.free(a.handle);
+        assert_eq!(mgr.free_blocks(), 8, "zero leaked blocks");
+        assert_eq!(mgr.stats().bad_frees, 0);
+    }
+
+    #[test]
+    fn partial_rollback_keeps_surviving_positions_in_tail_block() {
+        let mut mgr = KvBlockManager::new(1, 8, 4, 2);
+        let a = mgr.admit(&[1, 2], 20).unwrap();
+        append_rows(&mut mgr, a.handle, 2, 0.0);
+        // 5 speculative rows at positions 2..7: a second block appears.
+        append_rows(&mut mgr, a.handle, 5, 0.0);
+        assert_eq!(mgr.block_table(a.handle).len(), 2);
+        // Accept 2, reject 3: the new length 4 fits the first block, so
+        // the tail block empties and frees.
+        mgr.rollback_append(a.handle, 3);
+        assert_eq!(mgr.seq_len(a.handle), 4);
+        assert_eq!(mgr.block_table(a.handle).len(), 1);
+        check_rows(&mut mgr, a.handle, 4, 0.0);
+        // Re-extending overwrites the rejected positions in place.
+        append_rows(&mut mgr, a.handle, 3, 50.0);
+        assert_eq!(mgr.seq_len(a.handle), 7);
+        let ctx = mgr.layer_ctx(0);
+        let view = ctx.view(a.handle);
+        assert_eq!(view.k_row(3), &[3.0, 3.0], "accepted row survives");
+        assert_eq!(view.k_row(4), &[54.0, 54.0], "rejected row overwritten");
+        mgr.free(a.handle);
+        assert_eq!(mgr.free_blocks(), 8);
+    }
+
+    #[test]
+    fn rollback_adjacent_to_shared_prefix_leaves_refcounted_blocks_alone() {
+        let mut mgr = KvBlockManager::new(1, 10, 4, 2);
+        let prompt: Vec<usize> = (0..5).collect(); // bs 4 → 1 cacheable block
+        let a = mgr.admit(&prompt, 16).unwrap();
+        append_rows(&mut mgr, a.handle, 5, 0.0);
+        mgr.cache_prefix(a.handle, &prompt);
+        let b = mgr.admit(&prompt, 16).unwrap();
+        assert_eq!(b.cached_tokens, 4, "first block served from cache");
+        append_rows(&mut mgr, b.handle, 1, 0.0); // re-prefill pos 4
+        let shared = mgr.block_table(b.handle)[0];
+        assert_eq!(mgr.block_refs(shared), 2);
+        // Speculative burst, then a rollback that empties b's private
+        // tail block down to exactly the shared-block boundary...
+        append_rows(&mut mgr, b.handle, 4, 0.0); // positions 5..9
+        assert_eq!(mgr.block_table(b.handle).len(), 3);
+        mgr.rollback_append(b.handle, 5);
+        // ...must free both private tail blocks and stop there: the
+        // refcounted shared block is untouched.
+        assert_eq!(mgr.seq_len(b.handle), 4);
+        assert_eq!(mgr.block_table(b.handle).len(), 1);
+        assert_eq!(mgr.block_refs(shared), 2, "shared block keeps both refs");
+        check_rows(&mut mgr, b.handle, 4, 0.0);
+        // A's view of the shared span is unaffected by B's rollback.
+        check_rows(&mut mgr, a.handle, 5, 0.0);
+        mgr.free(a.handle);
+        mgr.free(b.handle);
+        assert_eq!(mgr.active_seqs(), 0);
+        assert_eq!(mgr.stats().bad_frees, 0);
+    }
+
+    #[test]
+    fn rollback_restores_budget_reservation() {
+        let mut mgr = KvBlockManager::new(1, 4, 2, 2);
+        let a = mgr.admit(&[1], 8).unwrap(); // budget = all 4 blocks
+        append_rows(&mut mgr, a.handle, 1, 0.0);
+        append_rows(&mut mgr, a.handle, 5, 0.0); // 6 positions → 3 blocks
+        mgr.rollback_append(a.handle, 5);
+        // The freed tail blocks are re-reserved for this sequence, not
+        // up for grabs by a competing admission — exactly the state
+        // before the speculative burst.
+        assert!(mgr.admit(&[2], 2).is_none(), "budget must stay reserved");
+        // And the sequence itself re-extends to its full budget.
+        append_rows(&mut mgr, a.handle, 7, 0.0);
+        assert_eq!(mgr.seq_len(a.handle), 8);
+        check_rows(&mut mgr, a.handle, 8, 0.0);
+        mgr.free(a.handle);
+        assert_eq!(mgr.free_blocks(), 4);
+    }
+
+    #[test]
+    fn rollback_zero_is_a_no_op() {
+        let mut mgr = KvBlockManager::new(1, 4, 4, 2);
+        let a = mgr.admit(&[1, 2, 3], 8).unwrap();
+        append_rows(&mut mgr, a.handle, 3, 0.0);
+        let free_before = mgr.free_blocks();
+        mgr.rollback_append(a.handle, 0);
+        assert_eq!(mgr.seq_len(a.handle), 3);
+        assert_eq!(mgr.free_blocks(), free_before);
+        mgr.free(a.handle);
     }
 
     // The armed-failpoint behaviour of the `kv.alloc` / `prefix.*`

@@ -713,6 +713,19 @@ pub mod well_known {
         failpoint_triggers,
         "failpoint_triggers"
     );
+    counter_fn!(
+        /// Draft tokens proposed by speculative decoding (γ per spec
+        /// step per sequence). Zero when speculation is off.
+        spec_tokens_proposed,
+        "spec_tokens_proposed"
+    );
+    counter_fn!(
+        /// Draft tokens accepted by target verification. The ratio
+        /// accepted/proposed is the acceptance rate (also published as
+        /// the `spec_acceptance_rate` gauge).
+        spec_tokens_accepted,
+        "spec_tokens_accepted"
+    );
     gauge_fn!(
         /// Pooled bytes high-water across all scratch arenas.
         arena_pooled_bytes_high_water,
@@ -746,6 +759,13 @@ pub mod well_known {
         /// per-token row footprint).
         kv_bytes_per_live_token,
         "kv_bytes_per_live_token"
+    );
+    gauge_f64_fn!(
+        /// Running speculative acceptance rate
+        /// (`spec_tokens_accepted / spec_tokens_proposed`), refreshed
+        /// after every verify step. `0.0` until speculation runs.
+        spec_acceptance_rate,
+        "spec_acceptance_rate"
     );
 }
 

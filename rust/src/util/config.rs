@@ -96,6 +96,16 @@ pub struct EngineConfig {
     /// blocks before the youngest active sequence is preempted to make
     /// room; `0` disables preemption (`BLAST_PREEMPT_AFTER`).
     pub preempt_after: usize,
+    /// Speculation depth: draft-proposed tokens per verify step
+    /// (`BLAST_SPEC_GAMMA`). `0` disables speculative decoding (the
+    /// default — it needs a draft model to be worthwhile).
+    pub spec_gamma: usize,
+    /// Draft model for speculative decoding (`BLAST_SPEC_DRAFT`):
+    /// a `.bmx` checkpoint path, or the literal `"self"` to draft with
+    /// a clone of the target (useful for tests/benches — acceptance is
+    /// ~100% since draft ≡ target). `None` = no draft; speculation
+    /// stays off even if `spec_gamma > 0`.
+    pub spec_draft: Option<String>,
     /// Failpoint spec, `site=action[prob][count],...`
     /// (`BLAST_FAILPOINTS`); `None` = fault injection disarmed.
     pub failpoints: Option<String>,
@@ -124,6 +134,8 @@ impl Default for EngineConfig {
             kv_total_blocks: None,
             max_pending: 256,
             preempt_after: 4,
+            spec_gamma: 0,
+            spec_draft: None,
             failpoints: None,
             failpoint_seed: 0xB1A57,
         }
@@ -189,6 +201,10 @@ impl EngineConfig {
         if let Some(n) = env_parse::<usize>("BLAST_PREEMPT_AFTER") {
             cfg.preempt_after = n;
         }
+        if let Some(n) = env_parse::<usize>("BLAST_SPEC_GAMMA") {
+            cfg.spec_gamma = n;
+        }
+        cfg.spec_draft = env_nonempty("BLAST_SPEC_DRAFT");
         cfg.failpoints = env_nonempty("BLAST_FAILPOINTS");
         if let Some(n) = env_parse::<u64>("BLAST_FAILPOINT_SEED") {
             cfg.failpoint_seed = n;
@@ -223,6 +239,8 @@ mod tests {
         assert!(cfg.kv_block_size >= 1);
         assert!(cfg.kv_total_blocks.is_none());
         assert!(cfg.max_pending >= 1);
+        assert_eq!(cfg.spec_gamma, 0, "speculation is opt-in");
+        assert!(cfg.spec_draft.is_none());
         assert!(cfg.failpoints.is_none());
     }
 

@@ -128,6 +128,87 @@ fn run_steady_state(structure: StructureKind, quant: QuantMode, seed: u64) {
     assert_eq!(arena.outstanding(), 0, "arena leak during measurement");
 }
 
+/// Steady-state **speculative** rounds share the zero-alloc contract:
+/// draft proposals (single-sequence decodes into a private manager),
+/// one batched multi-token `verify_step`, and the `rollback_append`
+/// rejected-tail truncation on both arenas must all stay off the heap.
+/// Admission reserves the block table to the full budget up front, so
+/// the transient `+γ` growth and the rollback frees only move blocks
+/// between the pre-sized free list and pre-reserved tables.
+fn run_spec_steady_state(structure: StructureKind, seed: u64) {
+    const GAMMA: usize = 3;
+    const ACCEPT: usize = 1; // simulated acceptance: reject γ−1 tails
+    let mut rng = Rng::new(seed);
+    let lm = TinyLM::new(LmConfig::tiny(structure), &mut rng);
+    let mut mgr = lm.new_kv_manager_with(2, 16, 8);
+    let mut dmgr = lm.new_kv_manager_with(2, 16, 8);
+    let mut th = Vec::with_capacity(2);
+    let mut dh = Vec::with_capacity(2);
+    for i in 0..2usize {
+        let prompt = [1 + i, 5, 9];
+        th.push(mgr.admit(&prompt, lm.cfg.max_seq).unwrap().handle);
+        dh.push(dmgr.admit(&prompt, lm.cfg.max_seq).unwrap().handle);
+        let _ = lm.prefill_seq(&prompt, &mut mgr, th[i]).unwrap();
+        let _ = lm.prefill_seq(&prompt, &mut dmgr, dh[i]).unwrap();
+    }
+    let mut arena = ScratchArena::new();
+    let mut step_logits = Matrix::zeros(0, lm.cfg.vocab);
+    let mut draft_logits = Matrix::zeros(0, lm.cfg.vocab);
+    let counts = [GAMMA + 1; 2];
+    // One speculative round: per sequence the draft decodes γ proposal
+    // tokens one at a time (the worker's proposal loop), then a single
+    // verify batch appends γ+1 rows per sequence to the target and both
+    // arenas roll back their rejected tails. Net growth: ACCEPT+1
+    // committed positions per round per sequence. Token values are
+    // deterministic pseudo-ids — acceptance is *simulated* (fixed at
+    // ACCEPT) because this test pins allocator behaviour, not the
+    // accept/reject decision (spec_decode.rs proves bit-identity).
+    let round = |mgr: &mut blast_repro::nn::kvcache::KvBlockManager,
+                     dmgr: &mut blast_repro::nn::kvcache::KvBlockManager,
+                     arena: &mut ScratchArena,
+                     step_logits: &mut Matrix,
+                     draft_logits: &mut Matrix,
+                     r: usize| {
+        let mut verify = [0usize; 2 * (GAMMA + 1)];
+        for s in 0..2usize {
+            verify[s * (GAMMA + 1)] = (r * 5 + s) % lm.cfg.vocab;
+            for k in 0..GAMMA {
+                let tok = (r * 7 + s * 3 + k + 1) % lm.cfg.vocab;
+                lm.decode_step_batch_into(&[tok], dmgr, &dh[s..=s], arena, draft_logits);
+                verify[s * (GAMMA + 1) + 1 + k] = tok;
+            }
+        }
+        lm.verify_step(&verify, mgr, &th, &counts, arena, step_logits);
+        for s in 0..2usize {
+            mgr.rollback_append(th[s], GAMMA - ACCEPT);
+            dmgr.rollback_append(dh[s], GAMMA - ACCEPT - 1);
+        }
+    };
+    // Warm plans, pack cache, arena classes, logits buffers, and the
+    // tuning probes for both the batch-1 draft shape and the 2·(γ+1)-row
+    // verify shape.
+    for r in 0..5 {
+        round(&mut mgr, &mut dmgr, &mut arena, &mut step_logits, &mut draft_logits, r);
+    }
+    assert_eq!(arena.outstanding(), 0, "arena leak during spec warmup");
+
+    let before = alloc_events();
+    for r in 5..15 {
+        round(&mut mgr, &mut dmgr, &mut arena, &mut step_logits, &mut draft_logits, r);
+    }
+    let after = alloc_events();
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state speculative round allocated {} times in 10 iterations ({structure:?})",
+        after - before
+    );
+    assert_eq!(step_logits.shape(), (2 * (GAMMA + 1), lm.cfg.vocab));
+    assert!(!step_logits.has_nonfinite());
+    assert!(!draft_logits.has_nonfinite());
+    assert_eq!(arena.outstanding(), 0, "arena leak during spec measurement");
+}
+
 #[test]
 fn steady_state_decode_is_allocation_free() {
     // Single-thread kernel configuration (see module docs); set before
@@ -166,4 +247,8 @@ fn steady_state_decode_is_allocation_free() {
     // covers the multi-stage program with the f32 coupling stage.
     run_steady_state(StructureKind::Dense, QuantMode::I8, 9105);
     run_steady_state(StructureKind::Blast { b: 2, r: 4 }, QuantMode::I8, 9106);
+    // Speculative rounds (draft proposals + batched verify + rollback)
+    // extend the contract to the self-speculative serving path.
+    run_spec_steady_state(StructureKind::Dense, 9107);
+    run_spec_steady_state(StructureKind::Blast { b: 2, r: 4 }, 9108);
 }

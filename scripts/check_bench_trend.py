@@ -21,6 +21,10 @@ METRICS = [
     # Shared-system-prompt scenario through the paged KV block manager:
     # throughput with the radix prefix cache absorbing the shared span.
     ("BENCH_serving.json", ("prefix", "tokens_per_sec"), "prefix-cache serving tokens/sec"),
+    # Self-speculative decoding scenario: draft proposals + one batched
+    # multi-token verify per step. Throughput regression here means the
+    # verify batching or the rollback path got slower.
+    ("BENCH_serving.json", ("spec", "tokens_per_sec_spec"), "speculative serving tokens/sec"),
     ("BENCH_factorize.json", ("precgd", "iters_per_sec"), "factorize PrecGD iters/sec"),
     ("BENCH_kernels.json", ("dense", "autotuned_gflops"), "dense GEMM GFLOP/s"),
     # Per-structure plan-path throughput (the structure-plan execution
@@ -56,6 +60,11 @@ OBS_RATIOS = [
     # shared-prefix scenario. A drop means requests are re-prefilling
     # spans the radix cache should absorb (eviction or keying bug).
     ("BENCH_serving.json", ("prefix", "hit_rate"), "serving prefix-cache hit rate"),
+    # Fraction of draft proposals the target's verify pass accepted. A
+    # drop means speculation is burning draft compute without committing
+    # tokens (draft/target drift, or a verify/acceptance bug) — the
+    # self-draft baseline should sit at 1.0.
+    ("BENCH_serving.json", ("spec", "acceptance_rate"), "speculative acceptance rate"),
 ]
 OBS_DROP_THRESHOLD = 0.10
 
